@@ -1,0 +1,111 @@
+//! End-to-end scaling driver: runs the REAL distributed engine at
+//! several virtual-MPI rank counts on one workload, verifies that the
+//! physics is invariant, reports measured per-rank costs and the comm
+//! protocol's message statistics, then projects the paper's cluster
+//! scaling (Fig. 5/7 style) from the measured calibration.
+//!
+//! Run: `cargo run --release --example scaling_sweep [-- --quick]`
+
+use dpsnn::bench_harness::Table;
+use dpsnn::config::{ConnRule, SimConfig};
+use dpsnn::coordinator::run_simulation;
+use dpsnn::engine::{Phase, RunOptions};
+use dpsnn::perfmodel::Calibration;
+use dpsnn::repro::{model_from, paper_rate};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (side, npc, dur) = if quick { (6u32, 310u32, 60.0) } else { (8, 620, 100.0) };
+
+    let mut cfg = SimConfig::gaussian(side);
+    cfg.grid.neurons_per_column = npc;
+    cfg.duration_ms = dur;
+    eprintln!(
+        "scaling sweep: {side}x{side} columns x {npc} neurons, {dur} ms, gaussian rule"
+    );
+
+    let mut t = Table::new(&[
+        "ranks", "spikes", "events", "rate Hz", "cpu ns/ev", "peers(max)", "cnt msgs",
+        "payload msgs", "payload MB",
+    ]);
+    let mut base_spikes = None;
+    let mut cal_1rank = None;
+    for ranks in [1u32, 2, 4] {
+        let mut c = cfg.clone();
+        c.ranks = ranks;
+        let s = run_simulation(&c, &RunOptions::default());
+        // physics must be identical at every decomposition
+        match base_spikes {
+            None => base_spikes = Some(s.spikes()),
+            Some(b) => assert_eq!(b, s.spikes(), "decomposition changed the physics!"),
+        }
+        if ranks == 1 {
+            cal_1rank = Some(Calibration::from_summary(&s));
+        }
+        let cnt_msgs: u64 = s.reports.iter().map(|r| r.spike_count_msgs).sum();
+        let pay_msgs: u64 = s.reports.iter().map(|r| r.spike_payload_msgs).sum();
+        let pay_bytes: u64 = s.reports.iter().map(|r| r.spike_payload_bytes).sum();
+        let peers = s
+            .reports
+            .iter()
+            .map(|r| r.spike_count_msgs / (dur as u64).max(1))
+            .max()
+            .unwrap_or(0);
+        t.row(&[
+            ranks.to_string(),
+            s.spikes().to_string(),
+            s.equivalent_events().to_string(),
+            format!("{:.2}", s.firing_rate_hz()),
+            format!("{:.1}", s.total_cpu_ns_per_event()),
+            peers.to_string(),
+            cnt_msgs.to_string(),
+            pay_msgs.to_string(),
+            format!("{:.2}", pay_bytes as f64 / 1e6),
+        ]);
+    }
+    println!("\nmeasured (real engine, virtual-MPI ranks as threads):");
+    println!("{}", t.render());
+    println!("spike trains identical across decompositions ✓");
+
+    // phase breakdown of the last run
+    println!("\nper-phase CPU share (4-rank run):");
+    let mut c = cfg.clone();
+    c.ranks = 4;
+    let s = run_simulation(&c, &RunOptions::default());
+    let total: u64 = [Phase::Pack, Phase::Exchange, Phase::Demux, Phase::Dynamics]
+        .iter()
+        .map(|&p| s.phase_cpu_ns(p))
+        .sum();
+    for p in [Phase::Pack, Phase::Exchange, Phase::Demux, Phase::Dynamics] {
+        println!(
+            "  {:<10} {:>6.1}%",
+            p.name(),
+            s.phase_cpu_ns(p) as f64 / total.max(1) as f64 * 100.0
+        );
+    }
+
+    // cluster projection from this measurement
+    let cal = cal_1rank.unwrap();
+    println!(
+        "\ncalibration from the 1-rank run: {:.0} ns/event (measured rate {:.1} Hz; \
+         projection anchored to the paper's {:.1} Hz)",
+        cal.ns_per_event,
+        cal.rate_hz,
+        paper_rate(ConnRule::Gaussian)
+    );
+    let model = model_from(ConnRule::Gaussian, cal);
+    let paper_cfg = SimConfig::gaussian(24);
+    let mut pt = Table::new(&["procs", "ns/event (24x24)", "speedup", "ideal"]);
+    let base = model.point(&paper_cfg, 1);
+    for p in [1u32, 4, 16, 64, 96] {
+        let m = model.point(&paper_cfg, p);
+        pt.row(&[
+            p.to_string(),
+            format!("{:.2}", m.ns_per_event),
+            format!("{:.1}", base.ns_per_event / m.ns_per_event),
+            p.to_string(),
+        ]);
+    }
+    println!("\nmodeled cluster projection (paper Fig. 5, 24x24):");
+    println!("{}", pt.render());
+}

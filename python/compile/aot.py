@@ -1,0 +1,116 @@
+"""AOT compiler: lower the L2 model (wrapping the L1 Pallas kernels) to
+HLO-text artifacts the Rust runtime loads via PJRT.
+
+Interchange is HLO *text*, NOT ``lowered.compile().serialize()``: jax
+>= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py there).
+
+Artifacts (written to --out-dir, default ../artifacts):
+  lif_step_{N}.hlo.txt        N in BATCH_SIZES — per-step neuron update
+  lif_scan_{T}x{N}.hlo.txt    multi-step scan (ablation bench)
+  conn_field_{rule}.hlo.txt   Fig. 2 probability field kernels
+
+Run once via ``make artifacts``; a stamp file short-circuits rebuilds.
+"""
+
+import argparse
+import hashlib
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Must match rust/src/runtime/batch.rs::BATCH_SIZES.
+BATCH_SIZES = [1024, 4096, 16384, 65536]
+SCAN_SHAPE = (16, 4096)  # (T, N) for the scan artifact
+CONN_BATCH = 1024
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_lif_step(n: int) -> str:
+    arr = f32(n)
+    scalar = f32()
+    lowered = jax.jit(model.lif_step).lower(
+        arr, arr, arr, arr, arr, arr, arr, arr,
+        scalar, scalar, scalar, scalar, scalar,
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_lif_scan(t: int, n: int) -> str:
+    arr = f32(n)
+    scalar = f32()
+    lowered = jax.jit(model.lif_scan).lower(
+        arr, arr, arr, f32(t, n), arr, arr, arr, arr,
+        scalar, scalar, scalar, scalar, scalar,
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_conn(rule: str, n: int) -> str:
+    arr = f32(n)
+    scalar = f32()
+    fn = (model.conn_prob_gaussian if rule == "gaussian"
+          else model.conn_prob_exponential)
+    lowered = jax.jit(fn).lower(arr, arr, scalar, scalar, scalar, scalar)
+    return to_hlo_text(lowered)
+
+
+def build_all(out_dir: pathlib.Path, verbose: bool = True) -> dict:
+    """Lower every artifact; returns {name: sha256} for the stamp."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    artifacts = {}
+
+    def emit(name: str, text: str):
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        artifacts[name] = digest
+        if verbose:
+            print(f"  {path}  ({len(text) / 1024:.0f} KiB, {digest})")
+
+    for n in BATCH_SIZES:
+        emit(f"lif_step_{n}", lower_lif_step(n))
+    t, n = SCAN_SHAPE
+    emit(f"lif_scan_{t}x{n}", lower_lif_scan(t, n))
+    for rule in ("gaussian", "exponential"):
+        emit(f"conn_field_{rule}", lower_conn(rule, CONN_BATCH))
+    return artifacts
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    print(f"lowering artifacts to {out_dir.resolve()}")
+    artifacts = build_all(out_dir)
+    stamp = out_dir / "MANIFEST.txt"
+    stamp.write_text(
+        "".join(f"{name} {digest}\n" for name, digest in sorted(artifacts.items()))
+    )
+    print(f"wrote {len(artifacts)} artifacts + MANIFEST.txt")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

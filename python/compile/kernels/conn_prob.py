@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: connection-probability stencil field (paper Fig. 2).
+
+Evaluates, for a flat batch of column offsets (dx, dy), the remote
+connection probability at the center distance, the best-case (minimum
+possible) distance used by the 1/1000 cutoff, and the cutoff mask. The
+Rust `connectivity_map` example executes the AOT artifact of this kernel
+through PJRT to regenerate the Fig. 2 stencils.
+
+Element-wise like lif_step, same BLOCK tiling; the rule (gaussian vs
+exponential) is a lowering-time constant, so two artifacts are emitted.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _conn_kernel(rule, dx_ref, dy_ref, amp_ref, scale_ref, spacing_ref,
+                 cutoff_ref, pc_out, pm_out, mask_out):
+    dx = dx_ref[...]
+    dy = dy_ref[...]
+    amp = amp_ref[0]
+    scale = scale_ref[0]
+    spacing = spacing_ref[0]
+    cutoff = cutoff_ref[0]
+
+    r_center = spacing * jnp.sqrt(dx * dx + dy * dy)
+    gx = jnp.maximum(jnp.abs(dx) - 1.0, 0.0)
+    gy = jnp.maximum(jnp.abs(dy) - 1.0, 0.0)
+    r_min = spacing * jnp.sqrt(gx * gx + gy * gy)
+
+    if rule == "gaussian":
+        p_center = amp * jnp.exp(-(r_center * r_center) / (2.0 * scale * scale))
+        p_min = amp * jnp.exp(-(r_min * r_min) / (2.0 * scale * scale))
+    else:
+        p_center = amp * jnp.exp(-r_center / scale)
+        p_min = amp * jnp.exp(-r_min / scale)
+
+    is_self = jnp.logical_and(dx == 0.0, dy == 0.0)
+    mask = jnp.logical_and(p_min > cutoff, jnp.logical_not(is_self))
+    pc_out[...] = p_center
+    pm_out[...] = p_min
+    mask_out[...] = mask.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("rule",))
+def conn_prob(dx, dy, amplitude, scale_um, spacing_um, cutoff, *, rule):
+    """Probability field for offsets (dx, dy); rule in {gaussian, exponential}.
+
+    dx, dy are f32[N] with N a multiple of BLOCK; scalars f32.
+    Returns (p_center, p_min, mask).
+    """
+    assert rule in ("gaussian", "exponential"), rule
+    n = dx.shape[0]
+    assert n % BLOCK == 0, f"batch {n} not a multiple of {BLOCK}"
+    grid = (n // BLOCK,)
+    tile = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    out_shape = [jax.ShapeDtypeStruct((n,), jnp.float32) for _ in range(3)]
+    return tuple(
+        pl.pallas_call(
+            functools.partial(_conn_kernel, rule),
+            grid=grid,
+            in_specs=[tile] * 2 + [scalar] * 4,
+            out_specs=[tile] * 3,
+            out_shape=out_shape,
+            interpret=True,
+        )(
+            dx, dy,
+            jnp.reshape(amplitude, (1,)).astype(jnp.float32),
+            jnp.reshape(scale_um, (1,)).astype(jnp.float32),
+            jnp.reshape(spacing_um, (1,)).astype(jnp.float32),
+            jnp.reshape(cutoff, (1,)).astype(jnp.float32),
+        )
+    )

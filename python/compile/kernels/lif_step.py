@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: batched LIF+SFA time-driven step.
+
+The paper's compute hot-spot is the neuron-dynamics phase (Fig. 1 steps
+2.4-2.6): every local neuron absorbs its step current and advances its
+(V, c, refractory) state with exact exponential decay. This kernel
+performs that update for a whole cluster of neurons in one shot.
+
+TPU mapping (DESIGN.md "Hardware adaptation"): the update is purely
+element-wise over five state/input arrays and three per-neuron constant
+arrays -> VPU-bound, memory-bandwidth roofline. BlockSpec tiles the
+neuron axis in BLOCK=1024-lane chunks (8 sublanes x 128 lanes), so each
+grid step streams one VMEM-resident tile of every operand, and the whole
+update fuses into a single pass (one HBM read + one write per array).
+Scalars ride along as (1,)-blocks mapped to index 0 in every grid step.
+
+Lowered with interpret=True: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode emits plain HLO with identical numerics
+(validated against kernels/ref.py by python/tests/test_kernel.py, and
+against the Rust event-driven integrator by rust/src/runtime/batch.rs
+tests).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 8 sublanes x 128 lanes: one float32 VPU tile per block row.
+BLOCK = 1024
+
+
+def _lif_kernel(v_ref, c_ref, refr_ref, j_ref, em_ref, ec_ref, kf_ref,
+                alpha_ref, e_ref, th_ref, vr_ref, ta_ref, dt_ref,
+                v_out, c_out, refr_out, spike_out):
+    """Element-wise LIF+SFA update of one BLOCK tile."""
+    v = v_ref[...]
+    c = c_ref[...]
+    refr = refr_ref[...]
+    j = j_ref[...]
+    em = em_ref[...]
+    ec = ec_ref[...]
+    kf = kf_ref[...]
+    alpha = alpha_ref[...]
+    e_rest = e_ref[0]
+    v_theta = th_ref[0]
+    v_reset = vr_ref[0]
+    tau_arp = ta_ref[0]
+    dt = dt_ref[0]
+
+    active = refr <= 0.0
+    v_in = v + jnp.where(active, j, 0.0)
+    spike = jnp.logical_and(active, v_in >= v_theta)
+    v_post = jnp.where(spike, v_reset, v_in)
+    c_post = c + jnp.where(spike, alpha, 0.0)
+    k = -kf * c_post
+    v_out[...] = e_rest + (v_post - e_rest - k) * em + k * ec
+    c_out[...] = c_post * ec
+    refr_out[...] = jnp.where(spike, tau_arp, jnp.maximum(refr - dt, 0.0))
+    spike_out[...] = spike.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def lif_step(v, c, refr, j, em, ec, kf, alpha, e_rest, v_theta, v_reset,
+             tau_arp, dt):
+    """One dt step for N neurons (N must be a multiple of BLOCK).
+
+    Array args are f32[N]; the five trailing args are f32 scalars.
+    Returns (v', c', refr', spike) -- see kernels/ref.py for semantics.
+    """
+    n = v.shape[0]
+    assert n % BLOCK == 0, f"batch {n} not a multiple of {BLOCK}"
+    grid = (n // BLOCK,)
+    tile = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    out_shape = [
+        jax.ShapeDtypeStruct((n,), jnp.float32),  # v'
+        jax.ShapeDtypeStruct((n,), jnp.float32),  # c'
+        jax.ShapeDtypeStruct((n,), jnp.float32),  # refr'
+        jax.ShapeDtypeStruct((n,), jnp.float32),  # spike
+    ]
+    return tuple(
+        pl.pallas_call(
+            _lif_kernel,
+            grid=grid,
+            in_specs=[tile] * 8 + [scalar] * 5,
+            out_specs=[tile] * 4,
+            out_shape=out_shape,
+            interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+        )(
+            v, c, refr, j, em, ec, kf, alpha,
+            jnp.reshape(e_rest, (1,)).astype(jnp.float32),
+            jnp.reshape(v_theta, (1,)).astype(jnp.float32),
+            jnp.reshape(v_reset, (1,)).astype(jnp.float32),
+            jnp.reshape(tau_arp, (1,)).astype(jnp.float32),
+            jnp.reshape(dt, (1,)).astype(jnp.float32),
+        )
+    )

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: the Pallas kernels must agree
+with them to float tolerance (same primitive ops, same order), and the
+Rust event-driven solver agrees with the same closed forms (see
+rust/src/neuron/lif.rs -- identical exponential-integrator algebra).
+"""
+
+import jax.numpy as jnp
+
+
+def lif_step_ref(v, c, refr, j, em, ec, kf, alpha, e_rest, v_theta, v_reset,
+                 tau_arp, dt):
+    """One time-driven LIF+SFA step (paper eqs. 1-2), batched.
+
+    Semantics (mirrors rust/src/runtime/batch.rs):
+      1. neurons still refractory discard this step's aggregated current,
+      2. the surviving current is applied as one jump; threshold crossing
+         emits a spike, resets V to ``v_reset`` and increments the
+         fatigue variable by ``alpha``,
+      3. (V, c) decay exactly over ``dt``:
+           c' = c * ec,   ec = exp(-dt/tau_c)
+           V' = E + (V - E - K) * em + K * ec,   K = -kf * c
+         with per-neuron constants em = exp(-dt/tau_m) and
+         kf = (g_c/C_m) / (1/tau_m - 1/tau_c),
+      4. the refractory countdown advances (spikers reload tau_arp).
+
+    All arrays are f32[N]; the five trailing parameters are f32 scalars.
+    Returns (v', c', refr', spike) with spike as f32 0/1.
+    """
+    active = refr <= 0.0
+    v_in = v + jnp.where(active, j, 0.0)
+    spike = jnp.logical_and(active, v_in >= v_theta)
+    v_post = jnp.where(spike, v_reset, v_in)
+    c_post = c + jnp.where(spike, alpha, 0.0)
+    k = -kf * c_post
+    v_new = e_rest + (v_post - e_rest - k) * em + k * ec
+    c_new = c_post * ec
+    refr_new = jnp.where(spike, tau_arp, jnp.maximum(refr - dt, 0.0))
+    return v_new, c_new, refr_new, spike.astype(jnp.float32)
+
+
+def conn_prob_ref(dx, dy, amplitude, scale_um, spacing_um, cutoff, rule):
+    """Connection-probability field over column offsets (paper Fig. 2).
+
+    For each column offset (dx, dy) returns:
+      * p_center -- probability at the center-to-center distance,
+      * p_min    -- probability at the minimum possible neuron-to-neuron
+                    distance (corner-to-corner best case used by the
+                    1/1000 cutoff, which yields the paper's 7x7 / 21x21
+                    stencils),
+      * mask     -- 1.0 where the offset survives the cutoff.
+
+    ``rule`` is "gaussian" (p = A exp(-r^2/2 sigma^2), scale_um = sigma)
+    or "exponential" (p = A exp(-r/lambda), scale_um = lambda).
+    """
+    r_center = spacing_um * jnp.sqrt(dx * dx + dy * dy)
+    gx = jnp.maximum(jnp.abs(dx) - 1.0, 0.0)
+    gy = jnp.maximum(jnp.abs(dy) - 1.0, 0.0)
+    r_min = spacing_um * jnp.sqrt(gx * gx + gy * gy)
+
+    def p_of(r):
+        if rule == "gaussian":
+            return amplitude * jnp.exp(-(r * r) / (2.0 * scale_um * scale_um))
+        if rule == "exponential":
+            return amplitude * jnp.exp(-r / scale_um)
+        raise ValueError(f"unknown rule {rule!r}")
+
+    p_center = p_of(r_center)
+    p_min = p_of(r_min)
+    is_self = jnp.logical_and(dx == 0.0, dy == 0.0)
+    mask = jnp.logical_and(p_min > cutoff, jnp.logical_not(is_self))
+    return p_center, p_min, mask.astype(jnp.float32)

@@ -1,0 +1,69 @@
+"""L2 JAX model: the neuron-dynamics compute graph built on the L1
+Pallas kernels.
+
+`lif_step` is the per-timestep entry point the Rust engine executes via
+PJRT (one artifact per batch size, see aot.py). `lif_scan` chains T
+steps with `lax.scan` — it demonstrates that the kernel composes under
+jax transformations (XLA fuses the surrounding scan plumbing around the
+pallas-emitted HLO), is used by the L2 tests, and is exported as an
+artifact for the multi-step ablation bench.
+
+Python here runs at build time only; the request path is pure Rust.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import conn_prob as _conn
+from compile.kernels import lif_step as _lif
+
+
+def lif_step(v, c, refr, j, em, ec, kf, alpha, e_rest, v_theta, v_reset,
+             tau_arp, dt):
+    """One time-driven step for a cluster of neurons (L1 kernel)."""
+    return _lif.lif_step(v, c, refr, j, em, ec, kf, alpha, e_rest, v_theta,
+                         v_reset, tau_arp, dt)
+
+
+def lif_scan(v, c, refr, j_seq, em, ec, kf, alpha, e_rest, v_theta, v_reset,
+             tau_arp, dt):
+    """T chained steps: j_seq is f32[T, N] of per-step currents.
+
+    Returns the final (v, c, refr) plus the f32[T, N] spike raster.
+    """
+
+    def body(carry, j_t):
+        v, c, refr = carry
+        v, c, refr, spike = lif_step(v, c, refr, j_t, em, ec, kf, alpha,
+                                     e_rest, v_theta, v_reset, tau_arp, dt)
+        return (v, c, refr), spike
+
+    (v, c, refr), spikes = jax.lax.scan(body, (v, c, refr), j_seq)
+    return v, c, refr, spikes
+
+
+def conn_prob_gaussian(dx, dy, amplitude, sigma_um, spacing_um, cutoff):
+    """Fig. 2 field, Gaussian rule (L1 kernel)."""
+    return _conn.conn_prob(dx, dy, amplitude, sigma_um, spacing_um, cutoff,
+                           rule="gaussian")
+
+
+def conn_prob_exponential(dx, dy, amplitude, lambda_um, spacing_um, cutoff):
+    """Fig. 2 field, exponential rule (L1 kernel)."""
+    return _conn.conn_prob(dx, dy, amplitude, lambda_um, spacing_um, cutoff,
+                           rule="exponential")
+
+
+def neuron_constants(tau_m_ms, tau_c_ms, g_tilde, dt_ms):
+    """Per-population integration constants (mirrors LifParams in Rust).
+
+    Returns (em, ec, kf) scalars: em = exp(-dt/tau_m), ec = exp(-dt/tau_c),
+    kf = g_tilde / (1/tau_m - 1/tau_c).
+    """
+    em = jnp.exp(-dt_ms / tau_m_ms)
+    ec = jnp.exp(-dt_ms / tau_c_ms)
+    denom = jnp.asarray(1.0 / tau_m_ms - 1.0 / tau_c_ms)
+    degenerate = jnp.abs(denom) < 1e-12
+    safe = jnp.where(degenerate, 1.0, denom)
+    kf = jnp.where(degenerate, 0.0, g_tilde / safe)
+    return em, ec, kf

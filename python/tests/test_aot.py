@@ -1,0 +1,78 @@
+"""AOT path: lowering to HLO text must be deterministic, structurally
+sound, and shaped exactly as the Rust runtime expects."""
+
+import pathlib
+import re
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def lif_text():
+    return aot.lower_lif_step(1024)
+
+
+class TestLowering:
+    def test_hlo_text_has_entry_and_tuple_output(self, lif_text):
+        assert "ENTRY" in lif_text
+        assert "HloModule" in lif_text
+        # 4-tuple output (v, c, refr, spike)
+        assert re.search(r"\(f32\[1024\]?.*f32\[1024\]", lif_text.replace("\n", " "))
+
+    def test_parameter_count_matches_batch_solver(self, lif_text):
+        # 8 array inputs + 5 scalars = 13 parameters (rust batch.rs order)
+        params = re.findall(r"parameter\(\d+\)", lif_text)
+        assert len(set(params)) == 13, sorted(set(params))
+
+    def test_lowering_is_deterministic(self):
+        a = aot.lower_lif_step(1024)
+        b = aot.lower_lif_step(1024)
+        assert a == b
+
+    def test_batch_sizes_produce_right_shapes(self):
+        text = aot.lower_lif_step(4096)
+        assert "f32[4096]" in text
+        assert "f32[1024]" not in text.replace("f32[1024]{0}", "")  # no stray
+
+    def test_no_custom_calls_in_interpret_mode(self, lif_text):
+        """interpret=True must lower to plain HLO (a Mosaic custom-call
+        would make the artifact unloadable on the CPU PJRT client)."""
+        assert "custom-call" not in lif_text or "mosaic" not in lif_text.lower()
+
+    def test_conn_field_lowerings_differ_by_rule(self):
+        g = aot.lower_conn("gaussian", 1024)
+        e = aot.lower_conn("exponential", 1024)
+        assert g != e
+        for text in (g, e):
+            assert "ENTRY" in text
+
+    def test_scan_artifact_has_time_major_input(self):
+        t, n = aot.SCAN_SHAPE
+        text = aot.lower_lif_scan(t, n)
+        assert f"f32[{t},{n}]" in text
+
+
+class TestBuildAll:
+    def test_build_all_writes_manifest_consistent_artifacts(self, tmp_path):
+        arts = aot.build_all(pathlib.Path(tmp_path), verbose=False)
+        # every batch size + scan + two conn fields
+        assert len(arts) == len(aot.BATCH_SIZES) + 3
+        for name in arts:
+            p = pathlib.Path(tmp_path) / f"{name}.hlo.txt"
+            assert p.exists() and p.stat().st_size > 1000, name
+
+    def test_manifest_matches_repo_artifacts_if_built(self):
+        """If `make artifacts` has run, the checked-in manifest must match
+        a fresh lowering (catches kernel/artifact drift)."""
+        repo_arts = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+        manifest = repo_arts / "MANIFEST.txt"
+        if not manifest.exists():
+            pytest.skip("artifacts not built")
+        lines = dict(l.split() for l in manifest.read_text().splitlines())
+        import hashlib
+        fresh = aot.lower_lif_step(1024)
+        digest = hashlib.sha256(fresh.encode()).hexdigest()[:16]
+        assert lines.get("lif_step_1024") == digest, \
+            "artifacts stale: run `make artifacts`"

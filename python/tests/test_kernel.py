@@ -1,0 +1,209 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+The CORE correctness signal of the compile path: hypothesis sweeps
+state/parameter space and the kernels must match ref.py everywhere.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import conn_prob as conn_mod
+from compile.kernels import lif_step as lif_mod
+from compile.kernels.ref import conn_prob_ref, lif_step_ref
+
+N = lif_mod.BLOCK  # one tile
+
+
+def _mk_state(rng, n=N):
+    return dict(
+        v=jnp.array(rng.uniform(-80, -45, n), jnp.float32),
+        c=jnp.array(rng.uniform(0, 10, n), jnp.float32),
+        refr=jnp.array(rng.choice([0.0, 0.5, 1.5, 2.0], n), jnp.float32),
+        j=jnp.array(rng.normal(0, 5, n), jnp.float32),
+    )
+
+
+def _mk_consts(tau_m=20.0, tau_c=300.0, g=0.02, dt=1.0, n=N):
+    em = float(np.exp(-dt / tau_m))
+    ec = float(np.exp(-dt / tau_c))
+    kf = g / (1.0 / tau_m - 1.0 / tau_c)
+    return dict(
+        em=jnp.full(n, em, jnp.float32),
+        ec=jnp.full(n, ec, jnp.float32),
+        kf=jnp.full(n, kf, jnp.float32),
+        alpha=jnp.full(n, 1.0, jnp.float32),
+    )
+
+
+SCALARS = dict(
+    e_rest=jnp.float32(-65.0),
+    v_theta=jnp.float32(-50.0),
+    v_reset=jnp.float32(-60.0),
+    tau_arp=jnp.float32(2.0),
+    dt=jnp.float32(1.0),
+)
+
+
+def run_both(state, consts, scalars=SCALARS):
+    args = (state["v"], state["c"], state["refr"], state["j"],
+            consts["em"], consts["ec"], consts["kf"], consts["alpha"],
+            scalars["e_rest"], scalars["v_theta"], scalars["v_reset"],
+            scalars["tau_arp"], scalars["dt"])
+    return lif_mod.lif_step(*args), lif_step_ref(*args)
+
+
+class TestLifKernelVsRef:
+    def test_random_state_matches_ref(self):
+        rng = np.random.default_rng(42)
+        kern, ref = run_both(_mk_state(rng), _mk_consts())
+        for a, b, name in zip(kern, ref, ("v", "c", "refr", "spike")):
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6,
+                                       err_msg=name)
+
+    @pytest.mark.parametrize("n", [1024, 2048, 4096, 16384])
+    def test_multiple_batch_sizes(self, n):
+        rng = np.random.default_rng(n)
+        kern, ref = run_both(_mk_state(rng, n), _mk_consts(n=n))
+        np.testing.assert_allclose(kern[0], ref[0], rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(kern[3]), np.asarray(ref[3]))
+
+    def test_non_multiple_of_block_rejected(self):
+        rng = np.random.default_rng(0)
+        with pytest.raises(AssertionError):
+            run_both(_mk_state(rng, 1000), _mk_consts(n=1000))
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        tau_m=st.floats(2.0, 100.0),
+        tau_c=st.floats(2.0, 2000.0),
+        g=st.floats(0.0, 1.0),
+        dt=st.floats(0.1, 5.0),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_sweep_params(self, tau_m, tau_c, g, dt, seed):
+        # kf = g/(1/tau_m - 1/tau_c) blows up as tau_m -> tau_c and the
+        # f32 closed form loses precision to cancellation (the engine's
+        # f64 event-driven path and the exact-degenerate branch handle
+        # it); skip the near-singular band where kf > ~1e3
+        if abs(1.0 / tau_m - 1.0 / tau_c) < 1e-3:
+            return
+        rng = np.random.default_rng(seed)
+        scal = dict(SCALARS)
+        scal["dt"] = jnp.float32(dt)
+        kern, ref = run_both(_mk_state(rng), _mk_consts(tau_m, tau_c, g, dt),
+                             scal)
+        for a, b, name in zip(kern, ref, ("v", "c", "refr", "spike")):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5,
+                                       err_msg=name)
+
+
+class TestLifPhysics:
+    """Physical invariants, independent of the oracle."""
+
+    def test_resting_neuron_stays_at_rest(self):
+        n = N
+        z = jnp.zeros(n, jnp.float32)
+        v = jnp.full(n, -65.0, jnp.float32)
+        out = lif_mod.lif_step(v, z, z, z, *(_mk_consts().values()),
+                               *SCALARS.values())
+        np.testing.assert_allclose(out[0], -65.0, atol=1e-5)
+        assert float(out[3].sum()) == 0
+
+    def test_suprathreshold_jump_spikes_and_resets(self):
+        n = N
+        z = jnp.zeros(n, jnp.float32)
+        v = jnp.full(n, -65.0, jnp.float32)
+        j = jnp.full(n, 100.0, jnp.float32)
+        c = _mk_consts()
+        out = lif_mod.lif_step(v, z, z, j, *c.values(), *SCALARS.values())
+        assert float(out[3].sum()) == n, "all neurons must spike"
+        # reset to -60 then one dt of decay toward E with fatigue pull
+        assert np.all(np.asarray(out[0]) < -59.0)
+        # fatigue incremented then decayed one step
+        np.testing.assert_allclose(out[1], float(c["ec"][0]), rtol=1e-5)
+        # refractory reloaded
+        np.testing.assert_allclose(out[2], 2.0, atol=1e-6)
+
+    def test_refractory_neurons_ignore_input(self):
+        n = N
+        z = jnp.zeros(n, jnp.float32)
+        v = jnp.full(n, -65.0, jnp.float32)
+        refr = jnp.full(n, 1.5, jnp.float32)
+        j = jnp.full(n, 100.0, jnp.float32)
+        out = lif_mod.lif_step(v, z, refr, j, *(_mk_consts().values()),
+                               *SCALARS.values())
+        assert float(out[3].sum()) == 0
+        np.testing.assert_allclose(out[2], 0.5, atol=1e-6)
+
+    def test_fatigue_pulls_potential_down(self):
+        n = N
+        z = jnp.zeros(n, jnp.float32)
+        v = jnp.full(n, -55.0, jnp.float32)
+        c_hi = jnp.full(n, 10.0, jnp.float32)
+        consts = _mk_consts()
+        out_no_c = lif_mod.lif_step(v, z, z, z, *consts.values(),
+                                    *SCALARS.values())
+        out_hi_c = lif_mod.lif_step(v, c_hi, z, z, *consts.values(),
+                                    *SCALARS.values())
+        assert np.all(np.asarray(out_hi_c[0]) < np.asarray(out_no_c[0])), \
+            "adaptation current must hyperpolarize"
+
+    def test_spike_count_monotone_in_drive(self):
+        rng = np.random.default_rng(7)
+        state = _mk_state(rng)
+        consts = _mk_consts()
+        counts = []
+        for scale in (0.0, 2.0, 8.0):
+            s = dict(state)
+            s["j"] = state["j"] * 0 + scale
+            out, _ = run_both(s, consts)
+            counts.append(float(out[0][3].sum()) if isinstance(out, tuple) and len(out) == 1 else float(out[3].sum()))
+        assert counts[0] <= counts[1] <= counts[2]
+
+
+class TestConnKernelVsRef:
+    @pytest.mark.parametrize("rule,amp,scale", [
+        ("gaussian", 0.05, 100.0),
+        ("exponential", 0.03, 290.0),
+    ])
+    def test_matches_ref(self, rule, amp, scale):
+        n = conn_mod.BLOCK
+        rng = np.random.default_rng(3)
+        dx = jnp.array(rng.integers(-12, 13, n), jnp.float32)
+        dy = jnp.array(rng.integers(-12, 13, n), jnp.float32)
+        args = (dx, dy, jnp.float32(amp), jnp.float32(scale),
+                jnp.float32(100.0), jnp.float32(1e-3))
+        kern = conn_mod.conn_prob(*args, rule=rule)
+        ref = conn_prob_ref(dx, dy, *args[2:], rule=rule)
+        for a, b, name in zip(kern, ref, ("p_center", "p_min", "mask")):
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7,
+                                       err_msg=name)
+
+    def test_stencil_sizes_match_paper(self):
+        """The cutoff mask must reproduce Fig. 2: 7x7 gaussian, 21x21 exp."""
+        n = conn_mod.BLOCK
+        coords = [(dx, dy) for dy in range(-15, 16) for dx in range(-15, 16)]
+        pad = n - len(coords)
+        dx = jnp.array([c[0] for c in coords] + [0] * pad, jnp.float32)
+        dy = jnp.array([c[1] for c in coords] + [0] * pad, jnp.float32)
+        for rule, amp, scale, expect in (
+            ("gaussian", 0.05, 100.0, 3),
+            ("exponential", 0.03, 290.0, 10),
+        ):
+            _, _, mask = conn_mod.conn_prob(
+                dx, dy, jnp.float32(amp), jnp.float32(scale),
+                jnp.float32(100.0), jnp.float32(1e-3), rule=rule)
+            m = np.asarray(mask[:len(coords)]).reshape(31, 31)
+            ys, xs = np.nonzero(m)
+            reach = max(abs(xs - 15).max(), abs(ys - 15).max())
+            assert reach == expect, f"{rule}: reach {reach} != {expect}"
+
+    def test_bad_rule_rejected(self):
+        n = conn_mod.BLOCK
+        z = jnp.zeros(n, jnp.float32)
+        with pytest.raises(AssertionError):
+            conn_mod.conn_prob(z, z, jnp.float32(1), jnp.float32(1),
+                               jnp.float32(1), jnp.float32(1), rule="nope")

@@ -1,0 +1,6 @@
+//! Bench: regenerate Fig. 2 (Gaussian vs exponential projection stencils).
+use dpsnn::repro::fig2_report;
+
+fn main() {
+    println!("{}", fig2_report());
+}

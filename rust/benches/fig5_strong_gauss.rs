@@ -1,0 +1,10 @@
+//! Bench: regenerate Fig. 5 (strong scaling, Gaussian connectivity).
+//! Calibrates the per-event cost on the real engine, then projects the
+//! paper's grid sizes onto the modeled 1024-core cluster.
+use dpsnn::config::ConnRule;
+use dpsnn::repro::{cached_calibration, fig5_report};
+
+fn main() {
+    let cal = cached_calibration(ConnRule::Gaussian);
+    println!("{}", fig5_report(cal));
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig. 6 (weak scaling, Gaussian connectivity).
+use dpsnn::config::ConnRule;
+use dpsnn::repro::{cached_calibration, fig6_report};
+
+fn main() {
+    let cal = cached_calibration(ConnRule::Gaussian);
+    println!("{}", fig6_report(cal));
+}

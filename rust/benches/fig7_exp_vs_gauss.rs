@@ -1,0 +1,9 @@
+//! Bench: regenerate Fig. 7 (exponential vs Gaussian strong scaling).
+use dpsnn::config::ConnRule;
+use dpsnn::repro::{cached_calibration, fig7_report};
+
+fn main() {
+    let g = cached_calibration(ConnRule::Gaussian);
+    let e = cached_calibration(ConnRule::Exponential);
+    println!("{}", fig7_report(g, e));
+}

@@ -1,0 +1,9 @@
+//! Bench: regenerate Fig. 8 (exponential/Gaussian cost ratio, paper 1.9-2.3x).
+use dpsnn::config::ConnRule;
+use dpsnn::repro::{cached_calibration, fig8_report};
+
+fn main() {
+    let g = cached_calibration(ConnRule::Gaussian);
+    let e = cached_calibration(ConnRule::Exponential);
+    println!("{}", fig8_report(g, e));
+}

@@ -1,0 +1,9 @@
+//! Bench: regenerate Fig. 9 (memory per synapse vs MPI processes).
+use dpsnn::config::ConnRule;
+use dpsnn::repro::{cached_calibration, fig9_report};
+
+fn main() {
+    let g = cached_calibration(ConnRule::Gaussian);
+    let e = cached_calibration(ConnRule::Exponential);
+    println!("{}", fig9_report(g, e));
+}

@@ -1,0 +1,177 @@
+//! Hot-path microbenchmarks: per-layer costs feeding the perf pass
+//! (EXPERIMENTS.md par. Perf). Measures the real building blocks of the
+//! simulation loop in isolation.
+
+use dpsnn::bench_harness::report_throughput;
+use dpsnn::config::{NeuronParams, SimConfig};
+use dpsnn::mpi::{run_cluster, CommClass};
+use dpsnn::neuron::{LifParams, LifState};
+use dpsnn::stimulus::ExternalStimulus;
+use dpsnn::synapse::storage::WireSynapse;
+use dpsnn::synapse::{DelayQueue, PendingEvent, SynapseStore};
+use dpsnn::util::prng::Pcg64;
+
+fn bench_prng() {
+    let mut rng = Pcg64::new(1, 0);
+    let mut acc = 0u64;
+    report_throughput("prng: next_u64", 1_000_000, 2, 5, || {
+        for _ in 0..1_000_000 {
+            acc = acc.wrapping_add(rng.next_u64());
+        }
+    });
+    std::hint::black_box(acc);
+    let mut s = 0.0;
+    report_throughput("prng: poisson(0.5)", 200_000, 2, 5, || {
+        for _ in 0..200_000 {
+            s += rng.poisson(0.5) as f64;
+        }
+    });
+    std::hint::black_box(s);
+}
+
+fn bench_lif() {
+    let p = LifParams::new(&NeuronParams::excitatory());
+    let mut states = vec![LifState::resting(&p); 10_000];
+    let mut t = 0.0f64;
+    report_throughput("lif: advance+inject (event-driven path)", 10_000, 2, 10, || {
+        t += 1.0;
+        for (i, s) in states.iter_mut().enumerate() {
+            s.inject(&p, t, (i % 7) as f64 * 0.1);
+        }
+    });
+}
+
+fn bench_demux() {
+    // 1000 axons x 1200 synapses, demux 100 spikes/step through the store
+    let mut syns = Vec::with_capacity(1_200_000);
+    let mut rng = Pcg64::new(7, 0);
+    for src in 0..1000u32 {
+        for _ in 0..1200 {
+            syns.push(WireSynapse {
+                src_gid: src,
+                tgt_gid: rng.next_below(100_000) as u32,
+                weight: 0.1,
+                delay_us: 1000 + rng.next_below(30_000) as u32,
+            });
+        }
+    }
+    let store = SynapseStore::build(syns, |g| g);
+    let mut queue = DelayQueue::new(64);
+    let mut step = 0u64;
+    report_throughput("demux: axon fan-out -> delay queues (120k ev)", 120_000, 2, 10, || {
+        for spike in 0..100u32 {
+            let t_emit = step as f64;
+            for k in store.axon_range(spike * 10) {
+                let (tgt, w, d) = store.synapse_at(k);
+                let t_arr = t_emit + d as f64 * 1e-3;
+                queue.push(t_arr as u64, PendingEvent {
+                    time_ms: t_arr as f32,
+                    target_local: tgt,
+                    weight: w,
+                    syn_idx: k as u32,
+                });
+            }
+        }
+        let b = queue.drain_current();
+        queue.recycle(b);
+        step += 1;
+    });
+}
+
+fn bench_stimulus() {
+    let mut cfg = SimConfig::test_small();
+    cfg.external.synapses_per_neuron = 420;
+    cfg.external.rate_hz = 3.0;
+    let stim = ExternalStimulus::new(&cfg);
+    let mut buf = Vec::new();
+    report_throughput("stimulus: per-neuron per-step poisson draw", 10_000, 2, 10, || {
+        for gid in 0..10_000u64 {
+            buf.clear();
+            stim.events_for(gid, 5, &mut buf);
+        }
+    });
+}
+
+fn bench_exchange() {
+    // 4-rank alltoallv of spike-sized payloads
+    report_throughput("mpi: 4-rank alltoallv (4x1000 u64)", 4000, 1, 5, || {
+        let sums = run_cluster(4, |mut comm| {
+            let sends: Vec<Vec<u64>> = (0..4).map(|_| vec![7u64; 1000]).collect();
+            let r = comm.alltoallv(CommClass::SpikePayload, sends);
+            r.iter().map(|v| v.len()).sum::<usize>()
+        });
+        std::hint::black_box(sums);
+    });
+}
+
+fn main() {
+    println!("dpsnn microbenchmarks (hot-path building blocks)\n");
+    bench_prng();
+    bench_lif();
+    bench_demux();
+    bench_stimulus();
+    bench_exchange();
+    bench_demux_locality();
+}
+
+/// Mechanism study for the paper's Fig. 8 (1.9-2.3x exponential
+/// slowdown): per-synaptic-event delivery cost as a function of the
+/// TARGET SPAN (how much neuron-queue memory the rule's stencil
+/// touches) for two demux designs:
+///
+/// * per-neuron insertion (2018-DPSNN-style "queued into lists"):
+///   every event is a random-access push into its target neuron's list
+///   -> one cache miss per event once the span exceeds LLC;
+/// * step-bucket append + sort (DPSNN-rs): events append sequentially
+///   into the arrival-step bucket and are sorted once per step.
+///
+/// The Gaussian stencil confines targets to ~49 columns (~7 MB of
+/// queues at 1240 n/col); the exponential one spans ~441 columns
+/// (~65 MB). The ratio wide/narrow for the per-neuron design is the
+/// paper's slowdown mechanism; the bucket design is span-insensitive.
+fn bench_demux_locality() {
+    const EVENTS: usize = 2_000_000;
+    println!("\ndemux-locality mechanism study (paper Fig. 8):");
+    for (label, span_neurons) in
+        [("narrow span (gaussian-like, 60k targets)", 60_000usize),
+         ("wide span (exponential-like, 550k targets)", 550_000)]
+    {
+        let mut rng = Pcg64::new(11, 0);
+        let targets: Vec<u32> =
+            (0..EVENTS).map(|_| rng.next_below(span_neurons as u64) as u32).collect();
+        // per-neuron insertion design
+        let mut queues: Vec<Vec<(f32, f32)>> = vec![Vec::new(); span_neurons];
+        for q in &mut queues {
+            q.reserve(8);
+        }
+        report_throughput(
+            &format!("  per-neuron insert, {label}"),
+            EVENTS as u64,
+            1,
+            3,
+            || {
+                for (i, &t) in targets.iter().enumerate() {
+                    queues[t as usize].push((i as f32, 0.1));
+                }
+                for q in &mut queues {
+                    q.clear();
+                }
+            },
+        );
+        // bucket append + sort design
+        let mut bucket: Vec<(u32, f32, f32)> = Vec::with_capacity(EVENTS);
+        report_throughput(
+            &format!("  bucket append+sort, {label}"),
+            EVENTS as u64,
+            1,
+            3,
+            || {
+                bucket.clear();
+                for (i, &t) in targets.iter().enumerate() {
+                    bucket.push((t, i as f32, 0.1));
+                }
+                bucket.sort_unstable_by_key(|e| e.0);
+            },
+        );
+    }
+}

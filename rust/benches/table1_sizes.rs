@@ -1,0 +1,25 @@
+//! Bench: regenerate Table I (problem sizes) and cross-validate the
+//! expected-count analytics against a materialized small network.
+use dpsnn::bench_harness::time_ns;
+use dpsnn::config::SimConfig;
+use dpsnn::connectivity::builder::generate_all;
+use dpsnn::repro::table1_report;
+
+fn main() {
+    println!("{}", table1_report());
+    // cross-validation: materialize a 6x6 gaussian network and time it
+    let mut cfg = SimConfig::gaussian(6);
+    cfg.grid.neurons_per_column = 124; // 1/10 columns for speed
+    let expected = dpsnn::connectivity::expected_counts(&cfg).recurrent;
+    let mut n = 0usize;
+    let (mean, sd) = time_ns(1, 3, || {
+        n = generate_all(&cfg).len();
+    });
+    let err = (n as f64 - expected).abs() / expected * 100.0;
+    println!(
+        "cross-check: materialized {n} synapses vs expected {expected:.0} ({err:.2}% off)\n\
+         generation time: {:.1} ms +- {:.1} ({:.0} ns/synapse)",
+        mean / 1e6, sd / 1e6, mean / n as f64
+    );
+    assert!(err < 3.0, "analytics disagree with the builder");
+}

@@ -1,0 +1,206 @@
+//! Radix-2 FFT and Welch power spectral density (no external DSP crate
+//! in the offline vendor set). Used to reproduce Fig. 4: the PSD of the
+//! excitatory population rate, showing slow-wave energy in the delta
+//! band (< 4 Hz).
+
+use std::f64::consts::PI;
+
+/// Complex number as (re, im) — enough structure for an FFT.
+pub type C = (f64, f64);
+
+#[inline]
+fn c_add(a: C, b: C) -> C {
+    (a.0 + b.0, a.1 + b.1)
+}
+
+#[inline]
+fn c_sub(a: C, b: C) -> C {
+    (a.0 - b.0, a.1 - b.1)
+}
+
+#[inline]
+fn c_mul(a: C, b: C) -> C {
+    (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
+}
+
+/// In-place iterative radix-2 Cooley-Tukey FFT. `x.len()` must be a
+/// power of two.
+pub fn fft(x: &mut [C]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FFT length {n} not a power of two");
+    if n <= 1 {
+        return;
+    }
+    // bit-reversal permutation
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i as u32).reverse_bits() >> (32 - bits);
+        let j = j as usize;
+        if j > i {
+            x.swap(i, j);
+        }
+    }
+    // butterflies
+    let mut len = 2;
+    while len <= n {
+        let ang = -2.0 * PI / len as f64;
+        let wlen = (ang.cos(), ang.sin());
+        for start in (0..n).step_by(len) {
+            let mut w = (1.0, 0.0);
+            for k in 0..len / 2 {
+                let a = x[start + k];
+                let b = c_mul(x[start + k + len / 2], w);
+                x[start + k] = c_add(a, b);
+                x[start + k + len / 2] = c_sub(a, b);
+                w = c_mul(w, wlen);
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// Welch PSD estimate: Hann-windowed segments of length `nperseg`
+/// (power of two), 50% overlap, one-sided. Returns (freqs_hz, psd).
+pub fn welch_psd(signal: &[f64], fs_hz: f64, nperseg: usize) -> (Vec<f64>, Vec<f64>) {
+    assert!(nperseg.is_power_of_two() && nperseg >= 4);
+    assert!(
+        signal.len() >= nperseg,
+        "signal too short: {} < {nperseg}",
+        signal.len()
+    );
+    let hop = nperseg / 2;
+    let window: Vec<f64> = (0..nperseg)
+        .map(|i| 0.5 * (1.0 - (2.0 * PI * i as f64 / nperseg as f64).cos()))
+        .collect();
+    let win_power: f64 = window.iter().map(|w| w * w).sum();
+
+    let nbins = nperseg / 2 + 1;
+    let mut acc = vec![0.0f64; nbins];
+    let mut segments = 0usize;
+    let mut buf = vec![(0.0, 0.0); nperseg];
+    let mut start = 0;
+    while start + nperseg <= signal.len() {
+        // detrend (remove segment mean) then window
+        let seg = &signal[start..start + nperseg];
+        let mean = seg.iter().sum::<f64>() / nperseg as f64;
+        for (i, b) in buf.iter_mut().enumerate() {
+            *b = ((seg[i] - mean) * window[i], 0.0);
+        }
+        fft(&mut buf);
+        for (k, a) in acc.iter_mut().enumerate() {
+            let (re, im) = buf[k];
+            let mut p = (re * re + im * im) / (win_power * fs_hz);
+            if k != 0 && k != nperseg / 2 {
+                p *= 2.0; // one-sided
+            }
+            *a += p;
+        }
+        segments += 1;
+        start += hop;
+    }
+    for a in &mut acc {
+        *a /= segments.max(1) as f64;
+    }
+    let freqs = (0..nbins).map(|k| k as f64 * fs_hz / nperseg as f64).collect();
+    (freqs, acc)
+}
+
+/// Fraction of total PSD power below `f_cut_hz` (delta-band share in
+/// Fig. 4; DC excluded).
+pub fn band_fraction(freqs: &[f64], psd: &[f64], f_cut_hz: f64) -> f64 {
+    let total: f64 = psd.iter().skip(1).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let below: f64 =
+        freqs.iter().zip(psd).skip(1).filter(|(f, _)| **f < f_cut_hz).map(|(_, p)| p).sum();
+    below / total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let mut x = vec![(0.0, 0.0); 16];
+        x[0] = (1.0, 0.0);
+        fft(&mut x);
+        for &(re, im) in &x {
+            assert!((re - 1.0).abs() < 1e-12 && im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft_peaks_at_sinusoid_frequency() {
+        let n = 256;
+        let k0 = 17;
+        let mut x: Vec<C> = (0..n)
+            .map(|i| ((2.0 * PI * k0 as f64 * i as f64 / n as f64).sin(), 0.0))
+            .collect();
+        fft(&mut x);
+        let mags: Vec<f64> = x.iter().map(|(r, i)| (r * r + i * i).sqrt()).collect();
+        let peak = mags
+            .iter()
+            .enumerate()
+            .take(n / 2)
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(peak, k0);
+    }
+
+    #[test]
+    fn fft_satisfies_parseval() {
+        let n = 128;
+        let x: Vec<C> = (0..n).map(|i| ((i as f64 * 0.37).sin(), 0.0)).collect();
+        let time_energy: f64 = x.iter().map(|(r, _)| r * r).sum();
+        let mut y = x.clone();
+        fft(&mut y);
+        let freq_energy: f64 =
+            y.iter().map(|(r, i)| (r * r + i * i)).sum::<f64>() / n as f64;
+        assert!((time_energy - freq_energy).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn fft_rejects_non_power_of_two() {
+        let mut x = vec![(0.0, 0.0); 12];
+        fft(&mut x);
+    }
+
+    #[test]
+    fn welch_finds_the_dominant_band() {
+        // 2 Hz sinusoid sampled at 1 kHz for 8 s (slow-wave-like)
+        let fs = 1000.0;
+        let signal: Vec<f64> = (0..8000)
+            .map(|i| (2.0 * PI * 2.0 * i as f64 / fs).sin() + 0.1 * (i as f64 * 1.7).sin())
+            .collect();
+        let (freqs, psd) = welch_psd(&signal, fs, 1024);
+        // peak bin near 2 Hz
+        let peak = freqs[psd
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0];
+        assert!((peak - 2.0).abs() < 1.0, "peak at {peak} Hz");
+        // delta band (< 4 Hz) dominates
+        let frac = band_fraction(&freqs, &psd, 4.0);
+        assert!(frac > 0.8, "delta fraction {frac}");
+    }
+
+    #[test]
+    fn welch_white_noise_is_not_delta_dominated() {
+        let mut state = 1u64;
+        let signal: Vec<f64> = (0..8192)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                (state >> 40) as f64 / (1u64 << 24) as f64 - 0.5
+            })
+            .collect();
+        let (freqs, psd) = welch_psd(&signal, 1000.0, 512);
+        let frac = band_fraction(&freqs, &psd, 4.0);
+        assert!(frac < 0.2, "white noise delta fraction {frac}");
+    }
+}

@@ -1,0 +1,8 @@
+//! Post-run analysis: FFT/Welch PSD (Fig. 4) and slow-wave activity
+//! rendering/tracking (Fig. 3).
+
+pub mod fft;
+pub mod waves;
+
+pub use fft::{band_fraction, fft, welch_psd};
+pub use waves::ActivityGrid;

@@ -1,0 +1,211 @@
+//! Slow-wave analysis over recorded activity (Fig. 3 snapshots, Fig. 4
+//! population signals).
+//!
+//! The coordinator can record per-step, per-column spike counts; this
+//! module turns that raster into population firing-rate signals,
+//! Up-state maps, ASCII/PGM snapshots of propagating waves and a simple
+//! wavefront-propagation detector.
+
+use std::fmt::Write as _;
+
+/// Activity raster: `steps × columns` spike counts with grid shape.
+#[derive(Clone, Debug)]
+pub struct ActivityGrid {
+    pub nx: u32,
+    pub ny: u32,
+    /// [step][column] spike counts.
+    pub counts: Vec<Vec<u32>>,
+    /// Neurons per column (to convert counts → rates).
+    pub neurons_per_column: u32,
+    /// Step length [ms].
+    pub dt_ms: f64,
+}
+
+impl ActivityGrid {
+    pub fn new(
+        nx: u32,
+        ny: u32,
+        neurons_per_column: u32,
+        dt_ms: f64,
+        counts: Vec<Vec<u32>>,
+    ) -> Self {
+        assert!(counts.iter().all(|c| c.len() == (nx * ny) as usize));
+        ActivityGrid { nx, ny, counts, neurons_per_column, dt_ms }
+    }
+
+    pub fn steps(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Whole-population firing rate per step [Hz] (Fig. 4 input signal).
+    pub fn population_rate_hz(&self) -> Vec<f64> {
+        let neurons = (self.nx * self.ny * self.neurons_per_column) as f64;
+        self.counts
+            .iter()
+            .map(|step| step.iter().map(|&c| c as f64).sum::<f64>() / neurons
+                * (1000.0 / self.dt_ms))
+            .collect()
+    }
+
+    /// Column rates [Hz] at one step, smoothed over ±`w` steps.
+    pub fn column_rates_hz(&self, step: usize, w: usize) -> Vec<f64> {
+        let lo = step.saturating_sub(w);
+        let hi = (step + w + 1).min(self.steps());
+        let span = (hi - lo) as f64;
+        let npc = self.neurons_per_column as f64;
+        let mut out = vec![0.0; (self.nx * self.ny) as usize];
+        for s in lo..hi {
+            for (o, &c) in out.iter_mut().zip(&self.counts[s]) {
+                *o += c as f64;
+            }
+        }
+        for o in &mut out {
+            *o = *o / span / npc * (1000.0 / self.dt_ms);
+        }
+        out
+    }
+
+    /// ASCII snapshot of one step (Fig. 3 style), ramp " .:-=+*#%@".
+    pub fn ascii_snapshot(&self, step: usize, smooth: usize) -> String {
+        let rates = self.column_rates_hz(step, smooth);
+        let max = rates.iter().cloned().fold(0.0, f64::max).max(1e-9);
+        let ramp: &[u8] = b" .:-=+*#%@";
+        let mut out = String::new();
+        for y in 0..self.ny {
+            for x in 0..self.nx {
+                let r = rates[(y * self.nx + x) as usize] / max;
+                let idx = ((r * (ramp.len() - 1) as f64).round() as usize).min(ramp.len() - 1);
+                out.push(ramp[idx] as char);
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Binary PGM (P2) snapshot for external viewing.
+    pub fn pgm_snapshot(&self, step: usize, smooth: usize) -> String {
+        let rates = self.column_rates_hz(step, smooth);
+        let max = rates.iter().cloned().fold(0.0, f64::max).max(1e-9);
+        let mut s = format!("P2\n{} {}\n255\n", self.nx, self.ny);
+        for y in 0..self.ny {
+            for x in 0..self.nx {
+                let v = (rates[(y * self.nx + x) as usize] / max * 255.0) as u32;
+                let _ = write!(s, "{v} ");
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Centroid of activity at a step (wavefront tracking).
+    pub fn activity_centroid(&self, step: usize) -> Option<(f64, f64)> {
+        let total: u32 = self.counts[step].iter().sum();
+        if total == 0 {
+            return None;
+        }
+        let (mut cx, mut cy) = (0.0, 0.0);
+        for y in 0..self.ny {
+            for x in 0..self.nx {
+                let c = self.counts[step][(y * self.nx + x) as usize] as f64;
+                cx += x as f64 * c;
+                cy += y as f64 * c;
+            }
+        }
+        Some((cx / total as f64, cy / total as f64))
+    }
+
+    /// Estimate wavefront speed [columns/ms] from centroid drift over a
+    /// window of active steps.
+    pub fn wave_speed(&self, from: usize, to: usize) -> Option<f64> {
+        let a = self.activity_centroid(from)?;
+        let b = self.activity_centroid(to)?;
+        let d = ((a.0 - b.0).powi(2) + (a.1 - b.1).powi(2)).sqrt();
+        let dt = (to - from) as f64 * self.dt_ms;
+        (dt > 0.0).then(|| d / dt)
+    }
+
+    /// Up-state fraction: share of columns above `thresh_hz` at a step.
+    pub fn up_fraction(&self, step: usize, smooth: usize, thresh_hz: f64) -> f64 {
+        let rates = self.column_rates_hz(step, smooth);
+        rates.iter().filter(|&&r| r > thresh_hz).count() as f64 / rates.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic wave: a hot column sweeping left→right, 1 step/column.
+    fn sweeping_wave(nx: u32, ny: u32, steps: usize) -> ActivityGrid {
+        let counts: Vec<Vec<u32>> = (0..steps)
+            .map(|s| {
+                let hot = (s as u32) % nx;
+                (0..nx * ny)
+                    .map(|c| if c % nx == hot { 50 } else { 0 })
+                    .collect()
+            })
+            .collect();
+        ActivityGrid::new(nx, ny, 100, 1.0, counts)
+    }
+
+    #[test]
+    fn population_rate_is_computed_in_hz() {
+        let g = sweeping_wave(8, 8, 10);
+        let rates = g.population_rate_hz();
+        assert_eq!(rates.len(), 10);
+        // 8 hot columns × 50 spikes / (64 col × 100 n) per 1 ms step
+        let expect = (8.0 * 50.0) / (64.0 * 100.0) * 1000.0;
+        assert!((rates[0] - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn centroid_tracks_the_wave() {
+        let g = sweeping_wave(10, 4, 10);
+        let c0 = g.activity_centroid(0).unwrap();
+        let c5 = g.activity_centroid(5).unwrap();
+        assert!((c0.0 - 0.0).abs() < 1e-9);
+        assert!((c5.0 - 5.0).abs() < 1e-9);
+        assert!((c0.1 - 1.5).abs() < 1e-9, "y centroid mid-grid");
+        let speed = g.wave_speed(0, 5).unwrap();
+        assert!((speed - 1.0).abs() < 1e-9, "1 column per ms");
+    }
+
+    #[test]
+    fn empty_step_has_no_centroid() {
+        let counts = vec![vec![0u32; 16]; 3];
+        let g = ActivityGrid::new(4, 4, 10, 1.0, counts);
+        assert!(g.activity_centroid(1).is_none());
+        assert_eq!(g.population_rate_hz()[0], 0.0);
+    }
+
+    #[test]
+    fn snapshots_render_every_row() {
+        let g = sweeping_wave(6, 3, 5);
+        let a = g.ascii_snapshot(2, 0);
+        assert_eq!(a.lines().count(), 3);
+        assert!(a.lines().all(|l| l.len() == 6));
+        assert!(a.contains('@'), "hot column must render hot");
+        let pgm = g.pgm_snapshot(2, 0);
+        assert!(pgm.starts_with("P2\n6 3\n255\n"));
+        assert!(pgm.contains("255"));
+    }
+
+    #[test]
+    fn up_fraction_counts_active_columns() {
+        let g = sweeping_wave(10, 1, 5);
+        // exactly one hot column of 10
+        let f = g.up_fraction(0, 0, 10.0);
+        assert!((f - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn column_rates_smooth_across_steps() {
+        let g = sweeping_wave(10, 1, 10);
+        let sharp = g.column_rates_hz(5, 0);
+        let smooth = g.column_rates_hz(5, 2);
+        // smoothing spreads the hot column across neighbours
+        let hot_sharp = sharp.iter().filter(|&&r| r > 0.0).count();
+        let hot_smooth = smooth.iter().filter(|&&r| r > 0.0).count();
+        assert!(hot_smooth > hot_sharp);
+    }
+}

@@ -1,0 +1,120 @@
+//! Minimal benchmark harness (no criterion in the offline vendor set):
+//! warmup + repeated timing with mean/σ, and aligned table printing for
+//! the paper-figure reports.
+
+use crate::util::stats::Running;
+use crate::util::timer::fmt_ns;
+use std::time::Instant;
+
+/// Time `f` with `warmup` + `iters` repetitions; returns (mean, σ) ns.
+pub fn time_ns(warmup: u32, iters: u32, mut f: impl FnMut()) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut r = Running::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        r.push(t0.elapsed().as_nanos() as f64);
+    }
+    (r.mean(), r.std())
+}
+
+/// Throughput helper: ns per item over `items` processed per call.
+pub fn report_throughput(name: &str, items: u64, warmup: u32, iters: u32, f: impl FnMut()) {
+    let (mean, sd) = time_ns(warmup, iters, f);
+    println!(
+        "{name:<44} {:>12}/call  ±{:>5.1}%  {:>9.2} ns/item",
+        fmt_ns(mean),
+        if mean > 0.0 { sd / mean * 100.0 } else { 0.0 },
+        mean / items as f64
+    );
+}
+
+/// Fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:>w$}", cells[i], w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// `true` when benches should run in reduced "quick" mode
+/// (DPSNN_QUICK=1 or --quick on the CLI).
+pub fn quick_mode() -> bool {
+    std::env::var("DPSNN_QUICK").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--quick")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_returns_positive_mean() {
+        let (mean, _sd) = time_ns(1, 5, || {
+            std::hint::black_box((0..1000u64).sum::<u64>());
+        });
+        assert!(mean > 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["grid", "paper", "ours"]);
+        t.row(&["24x24".into(), "0.9 G".into(), "0.885 G".into()]);
+        t.row(&["96x96".into(), "14.2 G".into(), "14.34 G".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert!(lines[0].contains("grid"));
+        assert!(lines[3].contains("14.34"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only one".into()]);
+    }
+}

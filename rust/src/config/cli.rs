@@ -1,0 +1,198 @@
+//! Hand-rolled CLI argument parser (no clap in the offline vendor set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! arguments and subcommands, with generated usage text. The `dpsnn`
+//! binary builds its subcommand table on top of this.
+
+use std::collections::BTreeMap;
+
+/// Declared option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Boolean flags take no value.
+    pub is_flag: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed argument set.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| format!("bad value for --{name}: '{s}' ({e})")),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parsed(name)?.unwrap_or(default))
+    }
+}
+
+/// Command specification: name, help, options.
+pub struct Command {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, help: &'static str) -> Self {
+        Command { name, help, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, is_flag: false, default: None });
+        self
+    }
+
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.opts.push(OptSpec { name, help, is_flag: false, default: Some(default) });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, is_flag: true, default: None });
+        self
+    }
+
+    /// Parse argv (after the subcommand name) against this spec.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        for spec in &self.opts {
+            if let Some(d) = spec.default {
+                out.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let Some(spec) = self.opts.iter().find(|s| s.name == key) else {
+                    return Err(format!(
+                        "unknown option --{key} for '{}'\n{}",
+                        self.name,
+                        self.usage()
+                    ));
+                };
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    out.flags.push(key.to_string());
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("option --{key} needs a value"))?
+                        }
+                    };
+                    out.values.insert(key.to_string(), val);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("usage: dpsnn {} [options]\n  {}\noptions:\n", self.name, self.help);
+        for o in &self.opts {
+            let kind = if o.is_flag { "" } else { " <value>" };
+            let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  --{}{kind}\n      {}{def}\n", o.name, o.help));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("run", "run a simulation")
+            .opt("side", "grid side")
+            .opt_default("ranks", "1", "number of ranks")
+            .flag("verbose", "chatty output")
+    }
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_separate_and_inline_values() {
+        let a = cmd().parse(&argv(&["--side", "24", "--ranks=8", "--verbose"])).unwrap();
+        assert_eq!(a.get("side"), Some("24"));
+        assert_eq!(a.get_or("ranks", 0u32).unwrap(), 8);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get_or("ranks", 0u32).unwrap(), 1);
+        assert_eq!(a.get("side"), None);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_errors_with_usage() {
+        let e = cmd().parse(&argv(&["--bogus", "1"])).unwrap_err();
+        assert!(e.contains("unknown option --bogus"));
+        assert!(e.contains("usage: dpsnn run"));
+    }
+
+    #[test]
+    fn missing_value_and_flag_with_value_error() {
+        assert!(cmd().parse(&argv(&["--side"])).is_err());
+        assert!(cmd().parse(&argv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn positional_and_typed_errors() {
+        let a = cmd().parse(&argv(&["input.toml", "--side", "abc"])).unwrap();
+        assert_eq!(a.positional, vec!["input.toml".to_string()]);
+        assert!(a.get_parsed::<u32>("side").unwrap_err().contains("bad value"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Configuration subsystem: a minimal TOML parser ([`toml`]), the typed
+//! simulation configuration ([`sim`]) with paper presets, and the CLI
+//! argument parser ([`cli`]).
+
+pub mod cli;
+pub mod sim;
+pub mod toml;
+
+pub use sim::{
+    ConnParams, ConnRule, DelayDist, ExternalParams, GridParams, NeuronParams, SimConfig,
+    Solver, SynParams,
+};

@@ -1,0 +1,523 @@
+//! Typed simulation configuration.
+//!
+//! Mirrors the paper's experimental setup (§III): a 2D grid of cortical
+//! modules ("columns") of 1240 LIF+SFA neurons each (80% excitatory),
+//! spaced at α = 100 µm, wired with one of two remote-connectivity rules:
+//!
+//! * Gaussian (shorter range):   p(r) = A·exp(−r²/2σ²), A=0.05, σ=100 µm
+//! * Exponential (longer range): p(r) = A·exp(−r/λ),    A=0.03, λ=290 µm
+//!
+//! plus a flat 80% same-column connection probability and a 1/1000
+//! cutoff on the remote rule, which yields the paper's 7×7 (Gaussian)
+//! and 21×21 (exponential) projection stencils (see
+//! `connectivity::rules` for how the cutoff interacts with in-column
+//! neuron positions to produce exactly those stencil sizes).
+//!
+//! Every knob is overridable from a TOML file (see `configs/*.toml`) or
+//! from CLI flags; presets reproduce the paper's configurations.
+
+use crate::config::toml::Doc;
+
+/// Remote-connectivity decay law (paper §III-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConnRule {
+    /// Shorter range: p(r) = A·exp(−r²/2σ²).
+    Gaussian,
+    /// Longer range: p(r) = A·exp(−r/λ).
+    Exponential,
+}
+
+impl ConnRule {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "gaussian" | "gauss" => Ok(ConnRule::Gaussian),
+            "exponential" | "exp" => Ok(ConnRule::Exponential),
+            other => Err(format!("unknown connectivity rule '{other}' (gaussian|exponential)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ConnRule::Gaussian => "gaussian",
+            ConnRule::Exponential => "exponential",
+        }
+    }
+}
+
+/// Synaptic-delay distribution (paper §II-B: exponential or uniform).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DelayDist {
+    /// Exponential with the given mean, clamped to [min, max].
+    Exponential { mean_ms: f64 },
+    /// Uniform over [min, max].
+    Uniform,
+}
+
+/// Parameters of the LIF+SFA neuron (paper eq. 1–2).
+#[derive(Clone, Copy, Debug)]
+pub struct NeuronParams {
+    /// Membrane time constant τm [ms].
+    pub tau_m_ms: f64,
+    /// Fatigue decay time τc [ms] (SFA / AHP current).
+    pub tau_c_ms: f64,
+    /// Resting potential E [mV].
+    pub e_rest_mv: f64,
+    /// Spike threshold Vθ [mV].
+    pub v_theta_mv: f64,
+    /// Post-spike reset Vr [mV].
+    pub v_reset_mv: f64,
+    /// Absolute refractory period τarp [ms].
+    pub tau_arp_ms: f64,
+    /// SFA coupling g_c/C_m [mV per unit c per ms] (0 for inhibitory).
+    pub g_c_over_cm: f64,
+    /// Fatigue increment per emitted spike α_c.
+    pub alpha_c: f64,
+}
+
+impl NeuronParams {
+    /// Excitatory defaults; SFA active.
+    pub fn excitatory() -> Self {
+        NeuronParams {
+            tau_m_ms: 20.0,
+            tau_c_ms: 300.0,
+            e_rest_mv: -65.0,
+            v_theta_mv: -50.0,
+            v_reset_mv: -60.0,
+            tau_arp_ms: 2.0,
+            g_c_over_cm: 0.02,
+            alpha_c: 1.0,
+        }
+    }
+
+    /// Inhibitory: SFA disabled (paper: "For inhibitory neurons, the SFA
+    /// term is set to zero"), faster membrane.
+    pub fn inhibitory() -> Self {
+        NeuronParams { g_c_over_cm: 0.0, alpha_c: 0.0, tau_m_ms: 10.0, ..Self::excitatory() }
+    }
+}
+
+/// Connectivity parameters (paper §III-B).
+#[derive(Clone, Copy, Debug)]
+pub struct ConnParams {
+    pub rule: ConnRule,
+    /// Peak remote probability A (0.05 gauss / 0.03 exp).
+    pub amplitude: f64,
+    /// σ [µm] for Gaussian.
+    pub sigma_um: f64,
+    /// λ [µm] for exponential.
+    pub lambda_um: f64,
+    /// Same-column connection probability (0.8 → ~990 local synapses).
+    pub local_prob: f64,
+    /// Remote-rule cutoff: modules whose *best-case* connection
+    /// probability is below this are never targeted (1/1000).
+    pub cutoff: f64,
+    /// Inhibitory neurons project only inside their column (Fig. 2).
+    pub inhibitory_local_only: bool,
+}
+
+impl ConnParams {
+    pub fn gaussian() -> Self {
+        ConnParams {
+            rule: ConnRule::Gaussian,
+            amplitude: 0.05,
+            sigma_um: 100.0,
+            lambda_um: 290.0,
+            local_prob: 0.8,
+            cutoff: 1e-3,
+            inhibitory_local_only: true,
+        }
+    }
+
+    pub fn exponential() -> Self {
+        ConnParams { rule: ConnRule::Exponential, amplitude: 0.03, ..Self::gaussian() }
+    }
+
+    /// Remote connection probability at distance `r_um` (no cutoff).
+    #[inline]
+    pub fn prob_at(&self, r_um: f64) -> f64 {
+        match self.rule {
+            ConnRule::Gaussian => {
+                let s2 = 2.0 * self.sigma_um * self.sigma_um;
+                self.amplitude * (-r_um * r_um / s2).exp()
+            }
+            ConnRule::Exponential => self.amplitude * (-r_um / self.lambda_um).exp(),
+        }
+    }
+}
+
+/// Synaptic efficacy/delay parameters per projection class.
+#[derive(Clone, Copy, Debug)]
+pub struct SynParams {
+    /// Excitatory efficacy mean [mV] (instantaneous ΔV on arrival).
+    pub j_exc_mv: f64,
+    /// Inhibitory efficacy mean [mV] (negative).
+    pub j_inh_mv: f64,
+    /// Relative s.d. of efficacies (gaussian draw, paper §II-B).
+    pub j_rel_sd: f64,
+    /// External (Poisson) efficacy [mV].
+    pub j_ext_mv: f64,
+    /// Delay distribution.
+    pub delay_dist: DelayDist,
+    /// Delay bounds [ms]; also the delay-queue horizon.
+    pub delay_min_ms: f64,
+    pub delay_max_ms: f64,
+}
+
+impl Default for SynParams {
+    fn default() -> Self {
+        SynParams {
+            j_exc_mv: 0.12,
+            j_inh_mv: -1.30,
+            j_rel_sd: 0.25,
+            j_ext_mv: 0.45,
+            delay_dist: DelayDist::Exponential { mean_ms: 5.0 },
+            delay_min_ms: 1.0,
+            delay_max_ms: 40.0,
+        }
+    }
+}
+
+/// External (thalamo-cortical) stimulus: per-neuron Poisson bundle.
+#[derive(Clone, Copy, Debug)]
+pub struct ExternalParams {
+    /// Number of external synapses afferent to each neuron. Table I's
+    /// "total equivalent" minus recurrent synapses ⇒ ~420 per neuron.
+    pub synapses_per_neuron: u32,
+    /// Mean firing rate of each external synapse [Hz].
+    pub rate_hz: f64,
+}
+
+impl Default for ExternalParams {
+    fn default() -> Self {
+        ExternalParams { synapses_per_neuron: 420, rate_hz: 3.0 }
+    }
+}
+
+/// Grid/network geometry (paper §III-B, Table I).
+#[derive(Clone, Copy, Debug)]
+pub struct GridParams {
+    /// Columns along x.
+    pub nx: u32,
+    /// Columns along y.
+    pub ny: u32,
+    /// Inter-column spacing α [µm].
+    pub spacing_um: f64,
+    /// Neurons per column (1240).
+    pub neurons_per_column: u32,
+    /// Excitatory fraction (0.8).
+    pub exc_fraction: f64,
+}
+
+impl GridParams {
+    pub fn square(side: u32) -> Self {
+        GridParams {
+            nx: side,
+            ny: side,
+            spacing_um: 100.0,
+            neurons_per_column: 1240,
+            exc_fraction: 0.8,
+        }
+    }
+
+    pub fn columns(&self) -> u64 {
+        self.nx as u64 * self.ny as u64
+    }
+
+    pub fn neurons(&self) -> u64 {
+        self.columns() * self.neurons_per_column as u64
+    }
+
+    pub fn exc_per_column(&self) -> u32 {
+        (self.neurons_per_column as f64 * self.exc_fraction).round() as u32
+    }
+
+    pub fn inh_per_column(&self) -> u32 {
+        self.neurons_per_column - self.exc_per_column()
+    }
+}
+
+/// Which neuron integrator the engine uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Solver {
+    /// Exact event-driven integration in Rust (paper's approach).
+    EventDriven,
+    /// Batched per-timestep update through the AOT-compiled XLA artifact
+    /// (L1 Pallas kernel lowered to HLO, executed via PJRT).
+    Xla,
+}
+
+impl Solver {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "event" | "event-driven" => Ok(Solver::EventDriven),
+            "xla" => Ok(Solver::Xla),
+            other => Err(format!("unknown solver '{other}' (event|xla)")),
+        }
+    }
+}
+
+/// Top-level simulation configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub grid: GridParams,
+    pub conn: ConnParams,
+    pub syn: SynParams,
+    pub exc: NeuronParams,
+    pub inh: NeuronParams,
+    pub external: ExternalParams,
+    /// Time-driven communication step [ms] (paper: 1 ms).
+    pub dt_ms: f64,
+    /// Simulated duration [ms].
+    pub duration_ms: f64,
+    /// Number of (virtual MPI) ranks.
+    pub ranks: u32,
+    /// Global RNG seed — network is a pure function of this (any ranks).
+    pub seed: u64,
+    /// STDP plasticity (paper: disabled for all scaling measurements).
+    pub plasticity: bool,
+    pub solver: Solver,
+}
+
+impl SimConfig {
+    /// Paper-preset: Gaussian connectivity on a `side`×`side` grid.
+    pub fn gaussian(side: u32) -> Self {
+        SimConfig {
+            grid: GridParams::square(side),
+            conn: ConnParams::gaussian(),
+            syn: SynParams::default(),
+            exc: NeuronParams::excitatory(),
+            inh: NeuronParams::inhibitory(),
+            external: ExternalParams::default(),
+            dt_ms: 1.0,
+            duration_ms: 1000.0,
+            ranks: 1,
+            seed: 42,
+            plasticity: false,
+            solver: Solver::EventDriven,
+        }
+    }
+
+    /// Paper-preset: exponential connectivity on a `side`×`side` grid.
+    pub fn exponential(side: u32) -> Self {
+        SimConfig { conn: ConnParams::exponential(), ..Self::gaussian(side) }
+    }
+
+    /// A small configuration for tests: tiny grid, reduced columns.
+    pub fn test_small() -> Self {
+        let mut c = Self::gaussian(4);
+        c.grid.neurons_per_column = 50;
+        c.external.synapses_per_neuron = 20;
+        c.duration_ms = 50.0;
+        c
+    }
+
+    /// Number of delay slots of `dt_ms` needed by the delay queues.
+    pub fn delay_slots(&self) -> usize {
+        (self.syn.delay_max_ms / self.dt_ms).ceil() as usize + 1
+    }
+
+    /// Load from a parsed TOML document; missing keys keep preset values.
+    pub fn from_doc(doc: &Doc) -> Result<Self, String> {
+        let rule = ConnRule::parse(&doc.str_or("connectivity.rule", "gaussian")?)?;
+        let mut cfg = match rule {
+            ConnRule::Gaussian => Self::gaussian(24),
+            ConnRule::Exponential => Self::exponential(24),
+        };
+        let g = &mut cfg.grid;
+        g.nx = doc.int_or("network.nx", doc.int_or("network.side", g.nx as i64)?)? as u32;
+        g.ny = doc.int_or("network.ny", doc.int_or("network.side", g.ny as i64)?)? as u32;
+        g.spacing_um = doc.float_or("network.spacing_um", g.spacing_um)?;
+        g.neurons_per_column =
+            doc.int_or("network.neurons_per_column", g.neurons_per_column as i64)? as u32;
+        g.exc_fraction = doc.float_or("network.exc_fraction", g.exc_fraction)?;
+
+        let c = &mut cfg.conn;
+        c.amplitude = doc.float_or("connectivity.amplitude", c.amplitude)?;
+        c.sigma_um = doc.float_or("connectivity.sigma_um", c.sigma_um)?;
+        c.lambda_um = doc.float_or("connectivity.lambda_um", c.lambda_um)?;
+        c.local_prob = doc.float_or("connectivity.local_prob", c.local_prob)?;
+        c.cutoff = doc.float_or("connectivity.cutoff", c.cutoff)?;
+        c.inhibitory_local_only =
+            doc.bool_or("connectivity.inhibitory_local_only", c.inhibitory_local_only)?;
+
+        let s = &mut cfg.syn;
+        s.j_exc_mv = doc.float_or("synapse.j_exc_mv", s.j_exc_mv)?;
+        s.j_inh_mv = doc.float_or("synapse.j_inh_mv", s.j_inh_mv)?;
+        s.j_rel_sd = doc.float_or("synapse.j_rel_sd", s.j_rel_sd)?;
+        s.j_ext_mv = doc.float_or("synapse.j_ext_mv", s.j_ext_mv)?;
+        s.delay_min_ms = doc.float_or("synapse.delay_min_ms", s.delay_min_ms)?;
+        s.delay_max_ms = doc.float_or("synapse.delay_max_ms", s.delay_max_ms)?;
+        match doc.str_or("synapse.delay_dist", "exponential")?.as_str() {
+            "uniform" => s.delay_dist = DelayDist::Uniform,
+            "exponential" => {
+                let mean = doc.float_or("synapse.delay_mean_ms", 5.0)?;
+                s.delay_dist = DelayDist::Exponential { mean_ms: mean };
+            }
+            other => return Err(format!("unknown delay_dist '{other}'")),
+        }
+
+        for (np, sect) in [(&mut cfg.exc, "neuron.exc"), (&mut cfg.inh, "neuron.inh")] {
+            np.tau_m_ms = doc.float_or(&format!("{sect}.tau_m_ms"), np.tau_m_ms)?;
+            np.tau_c_ms = doc.float_or(&format!("{sect}.tau_c_ms"), np.tau_c_ms)?;
+            np.e_rest_mv = doc.float_or(&format!("{sect}.e_rest_mv"), np.e_rest_mv)?;
+            np.v_theta_mv = doc.float_or(&format!("{sect}.v_theta_mv"), np.v_theta_mv)?;
+            np.v_reset_mv = doc.float_or(&format!("{sect}.v_reset_mv"), np.v_reset_mv)?;
+            np.tau_arp_ms = doc.float_or(&format!("{sect}.tau_arp_ms"), np.tau_arp_ms)?;
+            np.g_c_over_cm = doc.float_or(&format!("{sect}.g_c_over_cm"), np.g_c_over_cm)?;
+            np.alpha_c = doc.float_or(&format!("{sect}.alpha_c"), np.alpha_c)?;
+        }
+
+        cfg.external.synapses_per_neuron = doc
+            .int_or("external.synapses_per_neuron", cfg.external.synapses_per_neuron as i64)?
+            as u32;
+        cfg.external.rate_hz = doc.float_or("external.rate_hz", cfg.external.rate_hz)?;
+
+        cfg.dt_ms = doc.float_or("simulation.dt_ms", cfg.dt_ms)?;
+        cfg.duration_ms = doc.float_or("simulation.duration_ms", cfg.duration_ms)?;
+        cfg.ranks = doc.int_or("simulation.ranks", cfg.ranks as i64)? as u32;
+        cfg.seed = doc.int_or("simulation.seed", cfg.seed as i64)? as u64;
+        cfg.plasticity = doc.bool_or("simulation.plasticity", cfg.plasticity)?;
+        cfg.solver = Solver::parse(&doc.str_or("simulation.solver", "event")?)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.grid.nx == 0 || self.grid.ny == 0 {
+            return Err("grid must be non-empty".into());
+        }
+        if self.grid.neurons_per_column == 0 {
+            return Err("neurons_per_column must be > 0".into());
+        }
+        if !(0.0..=1.0).contains(&self.grid.exc_fraction) {
+            return Err("exc_fraction must be in [0,1]".into());
+        }
+        if !(0.0..=1.0).contains(&self.conn.local_prob) {
+            return Err("local_prob must be in [0,1]".into());
+        }
+        if self.conn.amplitude <= 0.0 || self.conn.amplitude > 1.0 {
+            return Err("connectivity amplitude must be in (0,1]".into());
+        }
+        if self.conn.cutoff <= 0.0 {
+            return Err("cutoff must be > 0".into());
+        }
+        if self.dt_ms <= 0.0 || self.duration_ms < 0.0 {
+            return Err("dt/duration must be positive".into());
+        }
+        if self.syn.delay_min_ms < self.dt_ms {
+            return Err(format!(
+                "delay_min_ms ({}) must be >= dt_ms ({}): a spike emitted in step t \
+                 is delivered at t+delay, and the exchange happens once per dt",
+                self.syn.delay_min_ms, self.dt_ms
+            ));
+        }
+        if self.syn.delay_max_ms < self.syn.delay_min_ms {
+            return Err("delay_max_ms < delay_min_ms".into());
+        }
+        if self.ranks == 0 {
+            return Err("ranks must be >= 1".into());
+        }
+        if self.ranks as u64 > self.grid.columns() {
+            return Err(format!(
+                "ranks ({}) exceed columns ({}): the spatial mapping assigns whole \
+                 columns to ranks",
+                self.ranks,
+                self.grid.columns()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml;
+
+    #[test]
+    fn presets_match_paper_parameters() {
+        let g = SimConfig::gaussian(24);
+        assert_eq!(g.conn.amplitude, 0.05);
+        assert_eq!(g.conn.sigma_um, 100.0);
+        assert_eq!(g.grid.neurons_per_column, 1240);
+        assert_eq!(g.grid.exc_per_column(), 992);
+        assert_eq!(g.grid.inh_per_column(), 248);
+        assert_eq!(g.grid.columns(), 576);
+        assert_eq!(g.grid.neurons(), 714_240);
+        let e = SimConfig::exponential(48);
+        assert_eq!(e.conn.amplitude, 0.03);
+        assert_eq!(e.conn.lambda_um, 290.0);
+        assert_eq!(e.grid.neurons(), 2_856_960); // 2.9 M in Table I
+    }
+
+    #[test]
+    fn probability_laws() {
+        let g = ConnParams::gaussian();
+        assert!((g.prob_at(0.0) - 0.05).abs() < 1e-12);
+        assert!((g.prob_at(100.0) - 0.05 * (-0.5f64).exp()).abs() < 1e-12);
+        let e = ConnParams::exponential();
+        assert!((e.prob_at(0.0) - 0.03).abs() < 1e-12);
+        assert!((e.prob_at(290.0) - 0.03 * (-1.0f64).exp()).abs() < 1e-12);
+        // exponential is the longer-range law
+        assert!(e.prob_at(500.0) > g.prob_at(500.0));
+    }
+
+    #[test]
+    fn from_doc_roundtrip_and_overrides() {
+        let doc = toml::parse(
+            r#"
+[network]
+side = 8
+neurons_per_column = 100
+
+[connectivity]
+rule = "exponential"
+lambda_um = 240.0
+
+[simulation]
+ranks = 4
+duration_ms = 123.0
+solver = "event"
+"#,
+        )
+        .unwrap();
+        let cfg = SimConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.grid.nx, 8);
+        assert_eq!(cfg.grid.neurons_per_column, 100);
+        assert_eq!(cfg.conn.rule, ConnRule::Exponential);
+        assert_eq!(cfg.conn.lambda_um, 240.0);
+        assert_eq!(cfg.conn.amplitude, 0.03); // preset kept
+        assert_eq!(cfg.ranks, 4);
+        assert_eq!(cfg.duration_ms, 123.0);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut c = SimConfig::test_small();
+        c.ranks = 10_000;
+        assert!(c.validate().unwrap_err().contains("ranks"));
+        let mut c = SimConfig::test_small();
+        c.syn.delay_min_ms = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::test_small();
+        c.conn.cutoff = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::test_small();
+        c.grid.nx = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn delay_slots_cover_max_delay() {
+        let c = SimConfig::test_small();
+        assert!(c.delay_slots() as f64 * c.dt_ms > c.syn.delay_max_ms);
+    }
+
+    #[test]
+    fn bad_rule_and_solver_strings() {
+        assert!(ConnRule::parse("banana").is_err());
+        assert!(Solver::parse("gpu").is_err());
+        assert_eq!(ConnRule::parse("exp").unwrap(), ConnRule::Exponential);
+        assert_eq!(Solver::parse("xla").unwrap(), Solver::Xla);
+    }
+}

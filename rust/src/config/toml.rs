@@ -1,0 +1,454 @@
+//! Minimal TOML parser — the configuration substrate.
+//!
+//! No serde/toml crates exist in the offline vendor set, so this module
+//! implements the subset of TOML the simulator's config files need:
+//! `[table]` / `[table.sub]` headers, `key = value` pairs with string,
+//! integer, float, boolean and homogeneous-array values, `#` comments,
+//! and bare or quoted keys. Values are exposed through a small dynamic
+//! [`Value`] tree with typed accessors that report precise errors
+//! (`section.key: expected float, found string "x"`).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Int(_) => "integer",
+            Value::Float(_) => "float",
+            Value::Bool(_) => "boolean",
+            Value::Array(_) => "array",
+            Value::Table(_) => "table",
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`tau = 20` is a valid float).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line information.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, TomlError> {
+    Err(TomlError { line, msg: msg.into() })
+}
+
+/// A parsed document: the root table plus typed lookup helpers.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub root: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    /// Look up a dotted path like `"network.grid_side"`.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        let mut cur: &BTreeMap<String, Value> = &self.root;
+        let parts: Vec<&str> = path.split('.').collect();
+        for (i, part) in parts.iter().enumerate() {
+            let v = cur.get(*part)?;
+            if i == parts.len() - 1 {
+                return Some(v);
+            }
+            cur = v.as_table()?;
+        }
+        None
+    }
+
+    fn typed<T>(
+        &self,
+        path: &str,
+        what: &'static str,
+        f: impl Fn(&Value) -> Option<T>,
+    ) -> Result<T, String> {
+        match self.get(path) {
+            None => Err(format!("missing config key '{path}'")),
+            Some(v) => f(v).ok_or_else(|| {
+                format!("config key '{path}': expected {what}, found {}", v.type_name())
+            }),
+        }
+    }
+
+    pub fn str(&self, path: &str) -> Result<String, String> {
+        self.typed(path, "string", |v| v.as_str().map(|s| s.to_string()))
+    }
+
+    pub fn int(&self, path: &str) -> Result<i64, String> {
+        self.typed(path, "integer", Value::as_int)
+    }
+
+    pub fn float(&self, path: &str) -> Result<f64, String> {
+        self.typed(path, "float", Value::as_float)
+    }
+
+    pub fn boolean(&self, path: &str) -> Result<bool, String> {
+        self.typed(path, "boolean", Value::as_bool)
+    }
+
+    /// Typed lookup with a default when the key is absent.
+    pub fn int_or(&self, path: &str, default: i64) -> Result<i64, String> {
+        match self.get(path) {
+            None => Ok(default),
+            Some(_) => self.int(path),
+        }
+    }
+
+    pub fn float_or(&self, path: &str, default: f64) -> Result<f64, String> {
+        match self.get(path) {
+            None => Ok(default),
+            Some(_) => self.float(path),
+        }
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> Result<bool, String> {
+        match self.get(path) {
+            None => Ok(default),
+            Some(_) => self.boolean(path),
+        }
+    }
+
+    pub fn str_or(&self, path: &str, default: &str) -> Result<String, String> {
+        match self.get(path) {
+            None => Ok(default.to_string()),
+            Some(_) => self.str(path),
+        }
+    }
+}
+
+/// Parse a TOML document.
+pub fn parse(input: &str) -> Result<Doc, TomlError> {
+    let mut doc = Doc::default();
+    // Path of the currently-open [table]
+    let mut current: Vec<String> = Vec::new();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = lineno + 1;
+        let text = strip_comment(raw).trim().to_string();
+        if text.is_empty() {
+            continue;
+        }
+        if let Some(rest) = text.strip_prefix('[') {
+            let Some(inner) = rest.strip_suffix(']') else {
+                return err(line, "unterminated table header");
+            };
+            if inner.starts_with('[') {
+                return err(line, "array-of-tables is not supported by this subset");
+            }
+            let parts: Vec<String> = inner
+                .split('.')
+                .map(|p| p.trim().trim_matches('"').to_string())
+                .collect();
+            if parts.iter().any(|p| p.is_empty()) {
+                return err(line, format!("bad table name '[{inner}]'"));
+            }
+            ensure_table(&mut doc.root, &parts, line)?;
+            current = parts;
+            continue;
+        }
+        let Some(eq) = find_unquoted(&text, '=') else {
+            return err(line, format!("expected 'key = value', got '{text}'"));
+        };
+        let key = text[..eq].trim().trim_matches('"').to_string();
+        if key.is_empty() {
+            return err(line, "empty key");
+        }
+        let (val, rest) = parse_value(text[eq + 1..].trim(), line)?;
+        if !rest.trim().is_empty() {
+            return err(line, format!("trailing characters after value: '{rest}'"));
+        }
+        let table = ensure_table(&mut doc.root, &current, line)?;
+        if table.insert(key.clone(), val).is_some() {
+            return err(line, format!("duplicate key '{key}'"));
+        }
+    }
+    Ok(doc)
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// First position of `needle` outside any quoted string.
+fn find_unquoted(s: &str, needle: char) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            c if c == needle && !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+    line: usize,
+) -> Result<&'a mut BTreeMap<String, Value>, TomlError> {
+    let mut cur = root;
+    for part in path {
+        let entry =
+            cur.entry(part.clone()).or_insert_with(|| Value::Table(BTreeMap::new()));
+        match entry {
+            Value::Table(t) => cur = t,
+            other => {
+                return err(
+                    line,
+                    format!("'{part}' is a {}, not a table", other.type_name()),
+                )
+            }
+        }
+    }
+    Ok(cur)
+}
+
+/// Parse one value; returns (value, unconsumed remainder).
+fn parse_value<'a>(s: &'a str, line: usize) -> Result<(Value, &'a str), TomlError> {
+    let s = s.trim_start();
+    if s.is_empty() {
+        return err(line, "missing value");
+    }
+    let first = s.chars().next().unwrap();
+    if first == '"' {
+        // string with escapes
+        let mut out = String::new();
+        let mut chars = s.char_indices().skip(1);
+        while let Some((i, c)) = chars.next() {
+            match c {
+                '"' => return Ok((Value::Str(out), &s[i + 1..])),
+                '\\' => match chars.next() {
+                    Some((_, 'n')) => out.push('\n'),
+                    Some((_, 't')) => out.push('\t'),
+                    Some((_, '\\')) => out.push('\\'),
+                    Some((_, '"')) => out.push('"'),
+                    Some((_, other)) => {
+                        return err(line, format!("unknown escape '\\{other}'"))
+                    }
+                    None => return err(line, "dangling escape"),
+                },
+                c => out.push(c),
+            }
+        }
+        return err(line, "unterminated string");
+    }
+    if first == '[' {
+        let mut rest = &s[1..];
+        let mut items = Vec::new();
+        loop {
+            rest = rest.trim_start();
+            if let Some(r) = rest.strip_prefix(']') {
+                return Ok((Value::Array(items), r));
+            }
+            if rest.is_empty() {
+                return err(line, "unterminated array");
+            }
+            let (v, r) = parse_value(rest, line)?;
+            items.push(v);
+            rest = r.trim_start();
+            if let Some(r) = rest.strip_prefix(',') {
+                rest = r;
+            } else if !rest.starts_with(']') {
+                return err(line, "expected ',' or ']' in array");
+            }
+        }
+    }
+    // bare token: bool / int / float
+    let end = s
+        .char_indices()
+        .find(|(_, c)| *c == ',' || *c == ']' || c.is_whitespace())
+        .map(|(i, _)| i)
+        .unwrap_or(s.len());
+    let tok = &s[..end];
+    let rest = &s[end..];
+    let v = match tok {
+        "true" => Value::Bool(true),
+        "false" => Value::Bool(false),
+        _ => {
+            let clean = tok.replace('_', "");
+            if !tok.contains('.') && !tok.contains('e') && !tok.contains('E') {
+                if let Ok(i) = clean.parse::<i64>() {
+                    return Ok((Value::Int(i), rest));
+                }
+            }
+            match clean.parse::<f64>() {
+                Ok(f) => Value::Float(f),
+                Err(_) => return err(line, format!("cannot parse value '{tok}'")),
+            }
+        }
+    };
+    Ok((v, rest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_tables() {
+        let doc = parse(
+            r#"
+# top comment
+title = "dpsnn"   # trailing comment
+steps = 1_000
+dt = 0.001
+fast = true
+
+[network]
+grid_side = 24
+rule = "gaussian"
+
+[network.neuron]
+tau_m = 20.0
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str("title").unwrap(), "dpsnn");
+        assert_eq!(doc.int("steps").unwrap(), 1000);
+        assert!((doc.float("dt").unwrap() - 0.001).abs() < 1e-12);
+        assert!(doc.boolean("fast").unwrap());
+        assert_eq!(doc.int("network.grid_side").unwrap(), 24);
+        assert_eq!(doc.str("network.rule").unwrap(), "gaussian");
+        assert!((doc.float("network.neuron.tau_m").unwrap() - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn int_literal_readable_as_float() {
+        let doc = parse("x = 3\n").unwrap();
+        assert_eq!(doc.float("x").unwrap(), 3.0);
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = parse("procs = [1, 2, 4, 8]\nnames = [\"a\", \"b\"]\nempty = []\n").unwrap();
+        let a = doc.get("procs").unwrap().as_array().unwrap();
+        assert_eq!(a.len(), 4);
+        assert_eq!(a[3].as_int(), Some(8));
+        let n = doc.get("names").unwrap().as_array().unwrap();
+        assert_eq!(n[1].as_str(), Some("b"));
+        assert!(doc.get("empty").unwrap().as_array().unwrap().is_empty());
+    }
+
+    #[test]
+    fn string_escapes_and_hash_inside_string() {
+        let doc = parse("s = \"a#b\\nc\\\"d\"\n").unwrap();
+        assert_eq!(doc.str("s").unwrap(), "a#b\nc\"d");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbroken\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("x = \n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = parse("[t\n").unwrap_err();
+        assert!(e.msg.contains("unterminated"));
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn type_errors_are_descriptive() {
+        let doc = parse("x = \"hi\"\n").unwrap();
+        let e = doc.int("x").unwrap_err();
+        assert!(e.contains("expected integer"), "{e}");
+        assert!(e.contains("string"), "{e}");
+        let e = doc.float("nope").unwrap_err();
+        assert!(e.contains("missing"), "{e}");
+    }
+
+    #[test]
+    fn defaults() {
+        let doc = parse("[a]\nx = 5\n").unwrap();
+        assert_eq!(doc.int_or("a.x", 1).unwrap(), 5);
+        assert_eq!(doc.int_or("a.y", 1).unwrap(), 1);
+        assert_eq!(doc.float_or("a.z", 2.5).unwrap(), 2.5);
+        assert!(doc.bool_or("a.w", true).unwrap());
+        assert_eq!(doc.str_or("a.s", "d").unwrap(), "d");
+        // present-but-wrong-type must still error
+        assert!(doc.int_or("a", 1).is_err());
+    }
+
+    #[test]
+    fn negative_and_scientific_numbers() {
+        let doc = parse("a = -65.0\nb = 1e-3\nc = -12\n").unwrap();
+        assert_eq!(doc.float("a").unwrap(), -65.0);
+        assert!((doc.float("b").unwrap() - 1e-3).abs() < 1e-15);
+        assert_eq!(doc.int("c").unwrap(), -12);
+    }
+}

@@ -1,0 +1,9 @@
+//! Connectivity rules, cutoff stencils, the distributed synapse builder
+//! and exact-expectation counting (Table I analytics).
+
+pub mod analytic;
+pub mod builder;
+pub mod rules;
+
+pub use analytic::{expected_counts, table1_row, ExpectedCounts};
+pub use rules::{Stencil, StencilOffset};

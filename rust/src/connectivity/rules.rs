@@ -1,0 +1,156 @@
+//! Connectivity rules and cutoff stencils (paper §III-B, Fig. 2).
+//!
+//! Remote connection probability between two neurons is a function of
+//! their actual 2D distance: Gaussian `A·exp(−r²/2σ²)` (A=0.05,
+//! σ=100 µm) or exponential `A·exp(−r/λ)` (A=0.03, λ=290 µm). A cutoff
+//! excludes target *modules* whose connection probability cannot exceed
+//! 1/1000 — evaluated at the minimum possible inter-column distance
+//! (neurons sit at uniform positions inside their α×α column square).
+//! With the paper's parameters this yields exactly the 7×7 (Gaussian)
+//! and 21×21 (exponential) projection stencils of Fig. 2.
+
+use crate::config::ConnParams;
+use crate::geometry::Grid;
+
+/// One stencil entry: a column offset plus the *maximum possible*
+/// connection probability to that column (used as the thinning envelope
+/// by the builder).
+#[derive(Clone, Copy, Debug)]
+pub struct StencilOffset {
+    pub dx: i32,
+    pub dy: i32,
+    pub p_max: f64,
+}
+
+/// The set of remote target-column offsets surviving the cutoff.
+#[derive(Clone, Debug)]
+pub struct Stencil {
+    pub offsets: Vec<StencilOffset>,
+    /// Bounding-box side (paper: 7 for Gaussian, 21 for exponential).
+    pub bbox_side: u32,
+}
+
+impl Stencil {
+    /// Compute the remote stencil for a rule on a grid spacing.
+    pub fn remote(conn: &ConnParams, grid: &Grid) -> Self {
+        // Largest axis offset m whose best case (gap (m−1)·α) passes.
+        let mut m = 0i32;
+        while conn.prob_at(grid.offset_min_dist_um(m + 1, 0)) > conn.cutoff {
+            m += 1;
+            assert!(m < 10_000, "stencil diverges: cutoff too small");
+        }
+        let mut offsets = Vec::new();
+        for dy in -m..=m {
+            for dx in -m..=m {
+                if dx == 0 && dy == 0 {
+                    continue; // local connectivity handled separately
+                }
+                let p_max = conn.prob_at(grid.offset_min_dist_um(dx, dy));
+                if p_max > conn.cutoff {
+                    offsets.push(StencilOffset { dx, dy, p_max });
+                }
+            }
+        }
+        let bbox = offsets
+            .iter()
+            .map(|o| o.dx.abs().max(o.dy.abs()))
+            .max()
+            .unwrap_or(0) as u32;
+        Stencil { offsets, bbox_side: 2 * bbox + 1 }
+    }
+
+    /// Sum of the thinning envelopes — expected *candidate* draws per
+    /// (source neuron, full stencil), npc·Σ p_max.
+    pub fn envelope_sum(&self) -> f64 {
+        self.offsets.iter().map(|o| o.p_max).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ConnParams, GridParams};
+    use crate::geometry::Grid;
+
+    fn grid() -> Grid {
+        Grid::new(GridParams::square(24))
+    }
+
+    #[test]
+    fn gaussian_stencil_is_7x7() {
+        let s = Stencil::remote(&ConnParams::gaussian(), &grid());
+        assert_eq!(s.bbox_side, 7, "paper Fig. 2: Gaussian stencil is 7×7");
+        // offsets at axis distance 3 are included (best-case 200 µm)
+        assert!(s.offsets.iter().any(|o| (o.dx, o.dy) == (3, 0)));
+        // axis distance 4 (best case 300 µm, p ≈ 5.5e-4) is cut off
+        assert!(!s.offsets.iter().any(|o| o.dx.abs() > 3 || o.dy.abs() > 3));
+    }
+
+    #[test]
+    fn exponential_stencil_is_21x21() {
+        let s = Stencil::remote(&ConnParams::exponential(), &grid());
+        assert_eq!(s.bbox_side, 21, "paper Fig. 2: exponential stencil is 21×21");
+        assert!(s.offsets.iter().any(|o| (o.dx, o.dy) == (10, 0)));
+        assert!(!s.offsets.iter().any(|o| o.dx.abs() > 10 || o.dy.abs() > 10));
+        // corners of the bounding box do NOT survive (diagonal min
+        // distance 9√2·100 ≈ 1273 µm → p ≈ 3.7e-4 < 1e-3)
+        assert!(!s.offsets.iter().any(|o| (o.dx, o.dy) == (10, 10)));
+    }
+
+    #[test]
+    fn exponential_reaches_farther_with_more_mass() {
+        let g = grid();
+        let sg = Stencil::remote(&ConnParams::gaussian(), &g);
+        let se = Stencil::remote(&ConnParams::exponential(), &g);
+        assert!(se.offsets.len() > sg.offsets.len());
+        assert!(se.envelope_sum() > sg.envelope_sum());
+    }
+
+    #[test]
+    fn stencil_is_symmetric() {
+        for conn in [ConnParams::gaussian(), ConnParams::exponential()] {
+            let s = Stencil::remote(&conn, &grid());
+            for o in &s.offsets {
+                for (rx, ry) in
+                    [(-o.dx, o.dy), (o.dx, -o.dy), (-o.dx, -o.dy), (o.dy, o.dx)]
+                {
+                    assert!(
+                        s.offsets.iter().any(|q| (q.dx, q.dy) == (rx, ry)),
+                        "missing mirror of ({}, {})",
+                        o.dx,
+                        o.dy
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn envelope_dominates_actual_probability() {
+        // p_max must be ≥ p at any realizable pair distance for thinning
+        // to be a valid envelope.
+        let g = grid();
+        for conn in [ConnParams::gaussian(), ConnParams::exponential()] {
+            let s = Stencil::remote(&conn, &g);
+            for o in &s.offsets {
+                let best = g.offset_min_dist_um(o.dx, o.dy);
+                assert!((o.p_max - conn.prob_at(best)).abs() < 1e-15);
+                // any actual distance is ≥ best ⇒ p ≤ p_max (p decreasing)
+                let worse = conn.prob_at(best + 37.0);
+                assert!(worse <= o.p_max);
+            }
+        }
+    }
+
+    #[test]
+    fn tighter_cutoff_shrinks_stencil() {
+        let g = grid();
+        let mut conn = ConnParams::exponential();
+        conn.cutoff = 1e-2;
+        let s = Stencil::remote(&conn, &g);
+        assert!(s.bbox_side < 21);
+        conn.cutoff = 1e-4;
+        let s = Stencil::remote(&conn, &g);
+        assert!(s.bbox_side > 21);
+    }
+}

@@ -1,0 +1,190 @@
+//! Cluster leader: builds the virtual cluster, runs the distributed
+//! simulation, and aggregates the measurements the paper reports.
+
+use crate::config::SimConfig;
+use crate::engine::metrics::{Phase, RankReport};
+use crate::engine::process::{RankProcess, RunOptions};
+use crate::geometry::{Decomposition, Grid};
+use crate::mpi::run_cluster;
+use crate::util::memtrack::PeakScope;
+
+/// Aggregated outcome of one simulation run.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub ranks: u32,
+    pub duration_ms: f64,
+    pub neurons: u64,
+    /// Per-rank reports, indexed by rank.
+    pub reports: Vec<RankReport>,
+    /// Peak heap during construction+run, process-wide [bytes].
+    pub peak_bytes: u64,
+    /// Per-step per-column spike counts in global column order
+    /// (empty unless `record_activity`).
+    pub activity: Vec<Vec<u32>>,
+}
+
+impl RunSummary {
+    pub fn spikes(&self) -> u64 {
+        self.reports.iter().map(|r| r.spikes).sum()
+    }
+
+    /// Mean firing rate [Hz] over the run.
+    pub fn firing_rate_hz(&self) -> f64 {
+        self.spikes() as f64 / self.neurons as f64 / (self.duration_ms / 1000.0)
+    }
+
+    /// Total equivalent synaptic events (recurrent + external, §III-D).
+    pub fn equivalent_events(&self) -> u64 {
+        self.reports.iter().map(|r| r.equivalent_events()).sum()
+    }
+
+    pub fn recurrent_events(&self) -> u64 {
+        self.reports.iter().map(|r| r.recurrent_events).sum()
+    }
+
+    /// Synapses resident across all ranks after construction.
+    pub fn synapses(&self) -> u64 {
+        self.reports.iter().map(|r| r.synapses_resident).sum()
+    }
+
+    /// The paper's normalized cost (§III-D): elapsed time per equivalent
+    /// synaptic event, compute part — max-rank CPU time over total
+    /// events (ranks run concurrently on the real machine, so the
+    /// slowest rank sets the pace; communication is added by
+    /// `perfmodel`).
+    pub fn compute_ns_per_event(&self) -> f64 {
+        self.max_rank_sim_cpu_ns() as f64 / self.equivalent_events().max(1) as f64
+    }
+
+    /// Sum of per-rank CPU over all events — the single-core-equivalent
+    /// cost per event (used to calibrate the performance model).
+    pub fn total_cpu_ns_per_event(&self) -> f64 {
+        let cpu: u64 = self.reports.iter().map(|r| r.sim_cpu_ns).sum();
+        cpu as f64 / self.equivalent_events().max(1) as f64
+    }
+
+    /// CPU nanoseconds spent in a phase, summed over ranks.
+    pub fn phase_cpu_ns(&self, phase: Phase) -> u64 {
+        self.reports.iter().map(|r| r.phase_ns[phase.index()]).sum()
+    }
+
+    /// Worst-rank CPU time for the whole simulation phase [ns].
+    pub fn max_rank_sim_cpu_ns(&self) -> u64 {
+        self.reports.iter().map(|r| r.sim_cpu_ns).max().unwrap_or(0)
+    }
+
+    /// Measured construction-peak memory per synapse [bytes].
+    pub fn peak_bytes_per_synapse(&self) -> f64 {
+        self.peak_bytes as f64 / self.synapses().max(1) as f64
+    }
+
+    /// Resident (post-construction) bytes per synapse.
+    pub fn resident_bytes_per_synapse(&self) -> f64 {
+        let resident: u64 = self.reports.iter().map(|r| r.resident_bytes).sum();
+        resident as f64 / self.synapses().max(1) as f64
+    }
+}
+
+/// Run a full simulation (construction + `cfg.duration_ms` of activity)
+/// on `cfg.ranks` virtual-MPI ranks.
+pub fn run_simulation(cfg: &SimConfig, opts: &RunOptions) -> RunSummary {
+    cfg.validate().expect("invalid configuration");
+    let scope = PeakScope::begin();
+    let steps = (cfg.duration_ms / cfg.dt_ms).round() as u64;
+    let cfg_arc = cfg.clone();
+    let opts_arc = opts.clone();
+    let results = run_cluster(cfg.ranks, move |mut comm| {
+        let grid = Grid::new(cfg_arc.grid);
+        let decomp = Decomposition::new(&grid, comm.ranks(), opts_arc.mapping);
+        let mut proc = RankProcess::construct(&cfg_arc, &decomp, &mut comm, &opts_arc);
+        for s in 0..steps {
+            proc.step(&mut comm, s);
+        }
+        let my_columns = proc.my_columns().to_vec();
+        let (metrics, activity) = proc.finish(&comm);
+        let wire = metrics.to_wire(comm.stats());
+        (RankReport::from_wire(&wire), activity, my_columns)
+    });
+    let peak_bytes = scope.peak_delta();
+
+    let grid = Grid::new(cfg.grid);
+    let ncols = grid.columns() as usize;
+    let mut activity = Vec::new();
+    if opts.record_activity {
+        activity = (0..steps as usize).map(|_| vec![0u32; ncols]).collect();
+        for (_, act, cols) in &results {
+            for (s, per_col) in act.iter().enumerate() {
+                for (i, &n) in per_col.iter().enumerate() {
+                    activity[s][cols[i] as usize] = n;
+                }
+            }
+        }
+    }
+    RunSummary {
+        ranks: cfg.ranks,
+        duration_ms: cfg.duration_ms,
+        neurons: cfg.grid.neurons(),
+        reports: results.iter().map(|(r, _, _)| r.clone()).collect(),
+        peak_bytes,
+        activity,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn cfg(ranks: u32) -> SimConfig {
+        let mut c = SimConfig::test_small();
+        c.ranks = ranks;
+        c.duration_ms = 40.0;
+        c.external.synapses_per_neuron = 100;
+        c.external.rate_hz = 30.0;
+        c
+    }
+
+    #[test]
+    fn summary_aggregates_consistently() {
+        let c = cfg(2);
+        let s = run_simulation(&c, &RunOptions::default());
+        assert_eq!(s.ranks, 2);
+        assert_eq!(s.reports.len(), 2);
+        assert_eq!(s.neurons, c.grid.neurons());
+        assert!(s.spikes() > 0);
+        assert!(s.equivalent_events() >= s.recurrent_events());
+        assert!(s.firing_rate_hz() > 0.0);
+        assert!(s.total_cpu_ns_per_event() > 0.0);
+        assert!(s.synapses() > 0);
+        assert!(s.peak_bytes > 0);
+        // 12 B/synapse stored + construction transient. On this tiny
+        // test network (50 n/col → ~45 syn/neuron) fixed per-neuron
+        // overheads (states, routing CSR, queues) weigh ~50× more per
+        // synapse than at the paper's 1240 n/col, so the bound is loose
+        // here; the Fig. 9 bench measures realistic columns.
+        let bps = s.peak_bytes_per_synapse();
+        assert!(bps > 12.0 && bps < 150.0, "peak bytes/synapse {bps}");
+        let resident = s.resident_bytes_per_synapse();
+        assert!(resident >= 12.0 && resident < 150.0, "resident {resident}");
+    }
+
+    #[test]
+    fn spike_totals_invariant_in_rank_count() {
+        let s1 = run_simulation(&cfg(1), &RunOptions::default());
+        let s4 = run_simulation(&cfg(4), &RunOptions::default());
+        assert_eq!(s1.spikes(), s4.spikes());
+        assert_eq!(s1.recurrent_events(), s4.recurrent_events());
+        assert_eq!(s1.synapses(), s4.synapses());
+    }
+
+    #[test]
+    fn activity_recording_sums_to_spikes() {
+        let c = cfg(2);
+        let opts = RunOptions { record_activity: true, ..Default::default() };
+        let s = run_simulation(&c, &opts);
+        assert_eq!(s.activity.len(), 40);
+        let total: u32 = s.activity.iter().flat_map(|v| v.iter()).sum();
+        assert_eq!(total as u64, s.spikes());
+        assert_eq!(s.activity[0].len(), c.grid.columns() as usize);
+    }
+}

@@ -1,0 +1,6 @@
+//! Cluster leader: orchestrates the virtual cluster and aggregates the
+//! paper's measurements.
+
+pub mod leader;
+
+pub use leader::{run_simulation, RunSummary};

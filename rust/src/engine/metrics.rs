@@ -1,0 +1,215 @@
+//! Per-rank measurement of the quantities the paper reports:
+//! CPU time per execution-flow phase, synaptic-event counts (recurrent +
+//! external = "equivalent", §III-D), spike counts / firing rates and
+//! memory footprints.
+
+use crate::mpi::CommStats;
+use crate::util::timer::CpuStopwatch;
+
+/// Execution-flow phases (paper Fig. 1) we time separately.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// 2.1–2.2: collect previous-step spikes, pack axonal messages.
+    Pack,
+    /// Communication calls (virtual wire: channel ops + copies).
+    Exchange,
+    /// 2.3: demultiplex received axonal spikes into delay queues.
+    Demux,
+    /// 2.4–2.6: sort input currents, event-driven neuron dynamics.
+    Dynamics,
+    /// STDP long-term integration (when plasticity is on).
+    Plasticity,
+}
+
+pub const PHASES: [Phase; 5] =
+    [Phase::Pack, Phase::Exchange, Phase::Demux, Phase::Dynamics, Phase::Plasticity];
+
+impl Phase {
+    pub fn index(self) -> usize {
+        match self {
+            Phase::Pack => 0,
+            Phase::Exchange => 1,
+            Phase::Demux => 2,
+            Phase::Dynamics => 3,
+            Phase::Plasticity => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Pack => "pack",
+            Phase::Exchange => "exchange",
+            Phase::Demux => "demux",
+            Phase::Dynamics => "dynamics",
+            Phase::Plasticity => "plasticity",
+        }
+    }
+}
+
+/// Live per-rank metrics, updated during simulation.
+#[derive(Debug, Default)]
+pub struct EngineMetrics {
+    watches: [CpuStopwatch; PHASES.len()],
+    /// Recurrent synaptic events delivered (queue pushes).
+    pub recurrent_events: u64,
+    /// External (Poisson bundle) events injected.
+    pub external_events: u64,
+    /// Spikes emitted by local neurons.
+    pub spikes: u64,
+    /// Axonal spike records received (pre-demux).
+    pub axonal_spikes_in: u64,
+    /// Events discarded because the target was refractory.
+    pub refractory_drops: u64,
+    /// Construction-phase CPU time [ns].
+    pub init_cpu_ns: u64,
+    /// Simulation-phase total CPU time [ns].
+    pub sim_cpu_ns: u64,
+    /// Synapses resident on this rank after construction.
+    pub synapses_resident: u64,
+    /// Bytes resident in the synapse store + queues after construction.
+    pub resident_bytes: u64,
+}
+
+impl EngineMetrics {
+    #[inline]
+    pub fn start(&mut self, phase: Phase) {
+        self.watches[phase.index()].start();
+    }
+
+    #[inline]
+    pub fn stop(&mut self, phase: Phase) {
+        self.watches[phase.index()].stop();
+    }
+
+    pub fn phase_ns(&self, phase: Phase) -> u64 {
+        self.watches[phase.index()].ns()
+    }
+
+    /// Total equivalent synaptic events (recurrent + external, §III-D).
+    pub fn equivalent_events(&self) -> u64 {
+        self.recurrent_events + self.external_events
+    }
+
+    /// Fixed-size wire form for the metrics gather (root collects these).
+    pub fn to_wire(&self, comm: &CommStats) -> Vec<u64> {
+        let mut v = vec![
+            self.recurrent_events,
+            self.external_events,
+            self.spikes,
+            self.axonal_spikes_in,
+            self.refractory_drops,
+            self.init_cpu_ns,
+            self.sim_cpu_ns,
+            self.synapses_resident,
+            self.resident_bytes,
+        ];
+        for p in PHASES {
+            v.push(self.phase_ns(p));
+        }
+        use crate::mpi::CommClass;
+        for c in [CommClass::SpikeCounts, CommClass::SpikePayload, CommClass::InitPayload] {
+            let s = comm.class(c);
+            v.push(s.remote_msgs);
+            v.push(s.remote_bytes);
+        }
+        v
+    }
+}
+
+/// Decoded per-rank report (root side of the gather).
+#[derive(Clone, Debug, Default)]
+pub struct RankReport {
+    pub recurrent_events: u64,
+    pub external_events: u64,
+    pub spikes: u64,
+    pub axonal_spikes_in: u64,
+    pub refractory_drops: u64,
+    pub init_cpu_ns: u64,
+    pub sim_cpu_ns: u64,
+    pub synapses_resident: u64,
+    pub resident_bytes: u64,
+    pub phase_ns: [u64; PHASES.len()],
+    pub spike_count_msgs: u64,
+    pub spike_count_bytes: u64,
+    pub spike_payload_msgs: u64,
+    pub spike_payload_bytes: u64,
+    pub init_payload_msgs: u64,
+    pub init_payload_bytes: u64,
+}
+
+impl RankReport {
+    pub fn from_wire(v: &[u64]) -> Self {
+        let mut r = RankReport {
+            recurrent_events: v[0],
+            external_events: v[1],
+            spikes: v[2],
+            axonal_spikes_in: v[3],
+            refractory_drops: v[4],
+            init_cpu_ns: v[5],
+            sim_cpu_ns: v[6],
+            synapses_resident: v[7],
+            resident_bytes: v[8],
+            ..Default::default()
+        };
+        r.phase_ns.copy_from_slice(&v[9..9 + PHASES.len()]);
+        let b = 9 + PHASES.len();
+        r.spike_count_msgs = v[b];
+        r.spike_count_bytes = v[b + 1];
+        r.spike_payload_msgs = v[b + 2];
+        r.spike_payload_bytes = v[b + 3];
+        r.init_payload_msgs = v[b + 4];
+        r.init_payload_bytes = v[b + 5];
+        r
+    }
+
+    pub fn equivalent_events(&self) -> u64 {
+        self.recurrent_events + self.external_events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::{CommClass, CommStats};
+
+    #[test]
+    fn wire_roundtrip_preserves_everything() {
+        let mut m = EngineMetrics::default();
+        m.recurrent_events = 11;
+        m.external_events = 22;
+        m.spikes = 33;
+        m.axonal_spikes_in = 44;
+        m.refractory_drops = 5;
+        m.init_cpu_ns = 66;
+        m.sim_cpu_ns = 77;
+        m.synapses_resident = 88;
+        m.resident_bytes = 99;
+        m.start(Phase::Dynamics);
+        std::hint::black_box((0..10_000u64).sum::<u64>());
+        m.stop(Phase::Dynamics);
+        let mut comm = CommStats::default();
+        comm.record_send(CommClass::SpikeCounts, false, 8);
+        comm.record_send(CommClass::SpikePayload, false, 160);
+        let wire = m.to_wire(&comm);
+        let r = RankReport::from_wire(&wire);
+        assert_eq!(r.recurrent_events, 11);
+        assert_eq!(r.external_events, 22);
+        assert_eq!(r.equivalent_events(), 33);
+        assert_eq!(r.spikes, 33);
+        assert_eq!(r.refractory_drops, 5);
+        assert_eq!(r.resident_bytes, 99);
+        assert_eq!(r.phase_ns[Phase::Dynamics.index()], m.phase_ns(Phase::Dynamics));
+        assert_eq!(r.spike_count_bytes, 8);
+        assert_eq!(r.spike_payload_bytes, 160);
+        assert_eq!(r.init_payload_bytes, 0);
+    }
+
+    #[test]
+    fn phases_have_unique_indices() {
+        let mut seen = [false; PHASES.len()];
+        for p in PHASES {
+            assert!(!seen[p.index()]);
+            seen[p.index()] = true;
+        }
+    }
+}

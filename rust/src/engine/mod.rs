@@ -1,0 +1,9 @@
+//! The DPSNN simulation engine: per-rank process state and the
+//! execution flow of paper Fig. 1, plus metrics and STDP.
+
+pub mod metrics;
+pub mod plasticity;
+pub mod process;
+
+pub use metrics::{EngineMetrics, Phase, RankReport};
+pub use process::{RankProcess, RunOptions, WireSpike};

@@ -1,0 +1,284 @@
+//! Spike-Timing Dependent Plasticity (paper §II: pair-based STDP with
+//! LTP/LTD, integrated into long-term changes "at a slower timescale,
+//! which in the current implementation is every second").
+//!
+//! The engine runs with plasticity *disabled* for every scaling
+//! measurement — exactly as the paper does (§III-A: "synaptic plasticity
+//! has been disabled, to simplify the comparison") — but the mechanism
+//! is implemented and tested, and an ablation bench quantifies its cost.
+//!
+//! Model (pair-based, nearest-neighbour):
+//! * pre-synaptic arrival at t_a after the target last fired at t_post:
+//!   LTD, Δw −= A₋·exp(−(t_a − t_post)/τ₋)
+//! * post-synaptic spike at t_p after synapse k last delivered at t_pre:
+//!   LTP, Δw += A₊·exp(−(t_p − t_pre)/τ₊)
+//!
+//! Contributions accumulate in a per-synapse buffer and are applied (with
+//! clamping to [0, w_max] for excitatory / [w_min, 0] for inhibitory
+//! sources) every `apply_interval_ms`.
+
+use crate::synapse::SynapseStore;
+
+/// STDP parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct StdpParams {
+    pub a_plus: f32,
+    pub a_minus: f32,
+    pub tau_plus_ms: f32,
+    pub tau_minus_ms: f32,
+    /// Long-term application cadence (paper: 1000 ms).
+    pub apply_interval_ms: f64,
+    /// Weight bound as a multiple of the initial |weight|.
+    pub w_bound_factor: f32,
+}
+
+impl Default for StdpParams {
+    fn default() -> Self {
+        StdpParams {
+            a_plus: 0.005,
+            a_minus: 0.006,
+            tau_plus_ms: 20.0,
+            tau_minus_ms: 20.0,
+            apply_interval_ms: 1000.0,
+            w_bound_factor: 2.0,
+        }
+    }
+}
+
+/// Per-rank STDP state.
+#[derive(Debug)]
+pub struct Plasticity {
+    pub params: StdpParams,
+    /// Last pre-synaptic arrival per synapse [ms] (NEG_INFINITY = never).
+    last_pre_ms: Vec<f64>,
+    /// Last post-synaptic spike per local neuron [ms].
+    last_post_ms: Vec<f64>,
+    /// Accumulated Δw per synapse.
+    dw: Vec<f32>,
+    /// Initial |weight| per synapse (for the clamp bounds) and its sign.
+    w0_abs: Vec<f32>,
+    w_is_exc: Vec<bool>,
+    /// Afferent index: synapse indices grouped by target neuron (CSR).
+    aff_start: Vec<u32>,
+    aff_syn: Vec<u32>,
+    next_apply_ms: f64,
+}
+
+impl Plasticity {
+    /// Build from the rank's synapse store.
+    pub fn new(params: StdpParams, store: &SynapseStore, n_local: u32) -> Self {
+        let n_syn = store.synapse_count() as usize;
+        let mut w0_abs = vec![0.0f32; n_syn];
+        let mut w_is_exc = vec![false; n_syn];
+        // afferent CSR: counting sort of synapse indices by target
+        let mut counts = vec![0u32; n_local as usize + 1];
+        for t in store.targets() {
+            counts[t as usize + 1] += 1;
+        }
+        for i in 1..counts.len() {
+            counts[i] += counts[i - 1];
+        }
+        let aff_start = counts.clone();
+        let mut cursor = counts;
+        let mut aff_syn = vec![0u32; n_syn];
+        for k in 0..n_syn {
+            let (tgt, w, _) = store.synapse_at(k);
+            w0_abs[k] = w.abs();
+            w_is_exc[k] = w >= 0.0;
+            aff_syn[cursor[tgt as usize] as usize] = k as u32;
+            cursor[tgt as usize] += 1;
+        }
+        Plasticity {
+            params,
+            last_pre_ms: vec![f64::NEG_INFINITY; n_syn],
+            last_post_ms: vec![f64::NEG_INFINITY; n_local as usize],
+            dw: vec![0.0; n_syn],
+            w0_abs,
+            w_is_exc,
+            aff_start,
+            aff_syn,
+            next_apply_ms: params.apply_interval_ms,
+        }
+    }
+
+    /// Pre-synaptic event on synapse `k` arriving at `t_ms` to `target`.
+    #[inline]
+    pub fn on_pre(&mut self, k: u32, target: u32, t_ms: f64) {
+        let k = k as usize;
+        self.last_pre_ms[k] = t_ms;
+        let t_post = self.last_post_ms[target as usize];
+        if t_post.is_finite() {
+            let dt = (t_ms - t_post) as f32;
+            self.dw[k] -= self.params.a_minus
+                * self.w0_abs[k]
+                * (-dt / self.params.tau_minus_ms).exp();
+        }
+    }
+
+    /// Post-synaptic spike of local neuron `n` at `t_ms`.
+    #[inline]
+    pub fn on_post(&mut self, n: u32, t_ms: f64) {
+        self.last_post_ms[n as usize] = t_ms;
+        let range = self.aff_start[n as usize] as usize..self.aff_start[n as usize + 1] as usize;
+        for &k in &self.aff_syn[range] {
+            let k = k as usize;
+            let t_pre = self.last_pre_ms[k];
+            if t_pre.is_finite() {
+                let dt = (t_ms - t_pre) as f32;
+                self.dw[k] +=
+                    self.params.a_plus * self.w0_abs[k] * (-dt / self.params.tau_plus_ms).exp();
+            }
+        }
+    }
+
+    /// Long-term integration: apply accumulated Δw if the cadence expired.
+    /// Returns how many synapses changed.
+    pub fn maybe_apply(&mut self, store: &mut SynapseStore, now_ms: f64) -> u64 {
+        if now_ms < self.next_apply_ms {
+            return 0;
+        }
+        self.next_apply_ms += self.params.apply_interval_ms;
+        let mut changed = 0;
+        for k in 0..self.dw.len() {
+            let dw = self.dw[k];
+            if dw != 0.0 {
+                let bound = self.w0_abs[k] * self.params.w_bound_factor;
+                let (lo, hi) = if self.w_is_exc[k] { (0.0, bound) } else { (-bound, 0.0) };
+                store.apply_dw(k, dw, lo, hi);
+                self.dw[k] = 0.0;
+                changed += 1;
+            }
+        }
+        changed
+    }
+
+    /// Extra heap owned by the plasticity machinery (memory accounting).
+    pub fn resident_bytes(&self) -> u64 {
+        (self.last_pre_ms.len() * 8
+            + self.last_post_ms.len() * 8
+            + self.dw.len() * 4
+            + self.w0_abs.len() * 4
+            + self.w_is_exc.len()
+            + self.aff_start.len() * 4
+            + self.aff_syn.len() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synapse::storage::WireSynapse;
+
+    /// Two neurons (0, 1); synapse 0→1 (exc) and 1→0 (inh).
+    fn store() -> SynapseStore {
+        SynapseStore::build(
+            vec![
+                WireSynapse { src_gid: 0, tgt_gid: 1, weight: 0.5, delay_us: 1000 },
+                WireSynapse { src_gid: 1, tgt_gid: 0, weight: -0.4, delay_us: 1000 },
+            ],
+            |g| g,
+        )
+    }
+
+    fn weight_of(store: &SynapseStore, src: u32) -> f32 {
+        store.axon_synapses(src).next().unwrap().1
+    }
+
+    #[test]
+    fn causal_pairing_potentiates() {
+        let mut s = store();
+        let mut p = Plasticity::new(StdpParams::default(), &s, 2);
+        // pre at 10 ms, post at 15 ms → LTP
+        p.on_pre(0, 1, 10.0);
+        p.on_post(1, 15.0);
+        let n = p.maybe_apply(&mut s, 1000.0);
+        assert_eq!(n, 1);
+        assert!(weight_of(&s, 0) > 0.5, "causal pre→post must potentiate");
+    }
+
+    #[test]
+    fn anticausal_pairing_depresses() {
+        let mut s = store();
+        let mut p = Plasticity::new(StdpParams::default(), &s, 2);
+        // post at 10 ms, pre arrives at 14 ms → LTD
+        p.on_post(1, 10.0);
+        p.on_pre(0, 1, 14.0);
+        p.maybe_apply(&mut s, 1000.0);
+        assert!(weight_of(&s, 0) < 0.5, "anti-causal must depress");
+    }
+
+    #[test]
+    fn applies_only_on_cadence() {
+        let mut s = store();
+        let mut p = Plasticity::new(StdpParams::default(), &s, 2);
+        p.on_pre(0, 1, 10.0);
+        p.on_post(1, 11.0);
+        assert_eq!(p.maybe_apply(&mut s, 999.0), 0, "before the 1 s cadence");
+        assert_eq!(weight_of(&s, 0), 0.5);
+        assert_eq!(p.maybe_apply(&mut s, 1000.0), 1);
+        // second call in the same window is a no-op
+        assert_eq!(p.maybe_apply(&mut s, 1001.0), 0);
+    }
+
+    #[test]
+    fn weights_clamp_at_bounds() {
+        let mut s = store();
+        let mut p = Plasticity::new(StdpParams::default(), &s, 2);
+        // hammer LTP far beyond the 2× bound
+        for i in 0..10_000 {
+            let t = i as f64;
+            p.on_pre(0, 1, t);
+            p.on_post(1, t + 0.5);
+        }
+        p.maybe_apply(&mut s, 1000.0);
+        assert!(weight_of(&s, 0) <= 1.0 + 1e-6, "clamped at 2×w0");
+        // inhibitory synapse clamps to ≤ 0
+        for i in 0..10_000 {
+            let t = 2000.0 + i as f64;
+            p.on_pre(1, 0, t);
+            p.on_post(0, t + 0.5);
+        }
+        p.maybe_apply(&mut s, 20_000.0);
+        assert!(weight_of(&s, 1) <= 0.0, "inhibitory weight stays ≤ 0");
+    }
+
+    #[test]
+    fn far_apart_spikes_barely_change_weights() {
+        let mut s = store();
+        let mut p = Plasticity::new(StdpParams::default(), &s, 2);
+        p.on_pre(0, 1, 0.0);
+        p.on_post(1, 500.0); // 25 τ₊ later
+        p.maybe_apply(&mut s, 1000.0);
+        assert!((weight_of(&s, 0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn afferent_index_covers_all_synapses() {
+        let s = SynapseStore::build(
+            (0..50)
+                .map(|i| WireSynapse {
+                    src_gid: i % 7,
+                    tgt_gid: i % 5,
+                    weight: 0.1,
+                    delay_us: 1000,
+                })
+                .collect(),
+            |g| g,
+        );
+        let p = Plasticity::new(StdpParams::default(), &s, 5);
+        assert_eq!(p.aff_syn.len(), 50);
+        // each synapse index appears exactly once
+        let mut seen = vec![false; 50];
+        for &k in &p.aff_syn {
+            assert!(!seen[k as usize]);
+            seen[k as usize] = true;
+        }
+        // and group boundaries agree with targets
+        for n in 0..5u32 {
+            let range = p.aff_start[n as usize] as usize..p.aff_start[n as usize + 1] as usize;
+            for &k in &p.aff_syn[range] {
+                assert_eq!(s.synapse_at(k as usize).0, n);
+            }
+        }
+    }
+}

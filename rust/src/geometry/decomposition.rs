@@ -1,0 +1,289 @@
+//! Mapping of the column grid onto (virtual MPI) ranks.
+//!
+//! DPSNN "places neurons and incoming synapses on MPI processes
+//! according to spatial contiguity" — long-range stencils then touch few
+//! neighbouring ranks, keeping the Alltoallv communicator subsets small.
+//! We implement that as a 2D block decomposition (ranks factorized into
+//! the most-square a×b tiling of the grid), plus a deliberately bad
+//! round-robin ("card dealer") mapping used by the mapping ablation
+//! bench to show *why* spatial contiguity matters.
+
+use crate::geometry::grid::{ColumnId, Grid};
+
+/// Mapping strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mapping {
+    /// Spatially-contiguous 2D blocks (the paper's strategy).
+    Block,
+    /// Round-robin by column index (ablation baseline).
+    RoundRobin,
+}
+
+impl Mapping {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "block" | "contiguous" => Ok(Mapping::Block),
+            "roundrobin" | "rr" => Ok(Mapping::RoundRobin),
+            other => Err(format!("unknown mapping '{other}' (block|roundrobin)")),
+        }
+    }
+}
+
+/// The computed decomposition: column → rank and rank → columns.
+#[derive(Clone, Debug)]
+pub struct Decomposition {
+    pub ranks: u32,
+    pub mapping: Mapping,
+    col_to_rank: Vec<u32>,
+    rank_cols: Vec<Vec<ColumnId>>,
+}
+
+/// Factor `r` into (a, b), a·b = r, minimizing |a−b| (most square).
+pub fn squarest_factors(r: u32) -> (u32, u32) {
+    let mut best = (1, r);
+    let mut d = 1;
+    while d * d <= r {
+        if r % d == 0 {
+            best = (d, r / d);
+        }
+        d += 1;
+    }
+    best
+}
+
+/// Split `n` cells into `parts` contiguous chunks with sizes differing by
+/// at most one; returns the start of each chunk (len = parts + 1).
+fn chunk_bounds(n: u32, parts: u32) -> Vec<u32> {
+    let base = n / parts;
+    let extra = n % parts;
+    let mut bounds = Vec::with_capacity(parts as usize + 1);
+    let mut acc = 0;
+    bounds.push(0);
+    for i in 0..parts {
+        acc += base + if i < extra { 1 } else { 0 };
+        bounds.push(acc);
+    }
+    bounds
+}
+
+impl Decomposition {
+    pub fn new(grid: &Grid, ranks: u32, mapping: Mapping) -> Self {
+        assert!(ranks >= 1 && ranks as u64 <= grid.columns() as u64);
+        let ncols = grid.columns();
+        let mut col_to_rank = vec![0u32; ncols as usize];
+        match mapping {
+            Mapping::RoundRobin => {
+                for c in 0..ncols {
+                    col_to_rank[c as usize] = c % ranks;
+                }
+            }
+            Mapping::Block => {
+                // Orient the factorization with the grid: more tiles along
+                // the longer grid side.
+                let (fa, fb) = squarest_factors(ranks);
+                let (tiles_x, tiles_y) =
+                    if grid.p.nx >= grid.p.ny { (fb.max(fa), fb.min(fa)) } else { (fb.min(fa), fb.max(fa)) };
+                // A factorization may not fit a non-square grid (e.g. 1×N
+                // grid with ranks needing 2 rows): clamp by re-splitting.
+                match fit_tiles(grid.p.nx, grid.p.ny, tiles_x, tiles_y, ranks) {
+                    Some((tiles_x, tiles_y)) => {
+                        let bx = chunk_bounds(grid.p.nx, tiles_x);
+                        let by = chunk_bounds(grid.p.ny, tiles_y);
+                        for cy in 0..grid.p.ny {
+                            let ty = by.partition_point(|&b| b <= cy) as u32 - 1;
+                            for cx in 0..grid.p.nx {
+                                let tx = bx.partition_point(|&b| b <= cx) as u32 - 1;
+                                let rank = ty * tiles_x + tx;
+                                col_to_rank[grid.column_index(cx, cy) as usize] = rank;
+                            }
+                        }
+                    }
+                    None => {
+                        // No rectangular tiling fits (e.g. 3 ranks on 2×2):
+                        // fall back to contiguous chunks along a snake
+                        // (boustrophedon) order, which stays spatially local.
+                        let bounds = chunk_bounds(ncols, ranks);
+                        for (i, &col) in snake_order(grid).iter().enumerate() {
+                            let rank = bounds.partition_point(|&b| b <= i as u32) as u32 - 1;
+                            col_to_rank[col as usize] = rank;
+                        }
+                    }
+                }
+            }
+        }
+        let mut rank_cols = vec![Vec::new(); ranks as usize];
+        for (c, &r) in col_to_rank.iter().enumerate() {
+            rank_cols[r as usize].push(c as ColumnId);
+        }
+        Decomposition { ranks, mapping, col_to_rank, rank_cols }
+    }
+
+    #[inline]
+    pub fn rank_of_column(&self, col: ColumnId) -> u32 {
+        self.col_to_rank[col as usize]
+    }
+
+    pub fn columns_of_rank(&self, rank: u32) -> &[ColumnId] {
+        &self.rank_cols[rank as usize]
+    }
+
+    /// Max / min columns per rank (load balance check).
+    pub fn balance(&self) -> (usize, usize) {
+        let max = self.rank_cols.iter().map(Vec::len).max().unwrap_or(0);
+        let min = self.rank_cols.iter().map(Vec::len).min().unwrap_or(0);
+        (max, min)
+    }
+}
+
+/// Adjust a tile factorization so tiles_x ≤ nx and tiles_y ≤ ny while
+/// keeping tiles_x·tiles_y = ranks; `None` if no factorization fits.
+fn fit_tiles(nx: u32, ny: u32, tx: u32, ty: u32, ranks: u32) -> Option<(u32, u32)> {
+    if tx <= nx && ty <= ny {
+        return Some((tx, ty));
+    }
+    // search all factorizations for one that fits, preferring squareness
+    let mut best: Option<(u32, u32)> = None;
+    let mut d = 1;
+    while d <= ranks {
+        if ranks % d == 0 {
+            let (a, b) = (d, ranks / d);
+            if a <= nx && b <= ny {
+                let score = (a as i64 - b as i64).abs();
+                if best.map_or(true, |(ba, bb)| score < (ba as i64 - bb as i64).abs()) {
+                    best = Some((a, b));
+                }
+            }
+        }
+        d += 1;
+    }
+    best
+}
+
+/// Columns in boustrophedon (snake) order: row 0 left→right, row 1
+/// right→left, ... — consecutive columns are always grid-adjacent.
+fn snake_order(grid: &Grid) -> Vec<ColumnId> {
+    let mut out = Vec::with_capacity(grid.columns() as usize);
+    for cy in 0..grid.p.ny {
+        if cy % 2 == 0 {
+            for cx in 0..grid.p.nx {
+                out.push(grid.column_index(cx, cy));
+            }
+        } else {
+            for cx in (0..grid.p.nx).rev() {
+                out.push(grid.column_index(cx, cy));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GridParams;
+    use crate::util::proptest::Cases;
+
+    fn grid(side: u32) -> Grid {
+        Grid::new(GridParams::square(side))
+    }
+
+    #[test]
+    fn squarest_factorizations() {
+        assert_eq!(squarest_factors(1), (1, 1));
+        assert_eq!(squarest_factors(16), (4, 4));
+        assert_eq!(squarest_factors(12), (3, 4));
+        assert_eq!(squarest_factors(7), (1, 7));
+        assert_eq!(squarest_factors(1024), (32, 32));
+    }
+
+    #[test]
+    fn partition_covers_every_column_exactly_once() {
+        Cases::new("decomposition is a partition", 60).run(|t| {
+            let side = 2 + t.rng.next_below(14) as u32;
+            let g = grid(side);
+            let ranks = 1 + t.rng.next_below(g.columns() as u64) as u32;
+            let mapping =
+                if t.rng.bernoulli(0.5) { Mapping::Block } else { Mapping::RoundRobin };
+            let d = Decomposition::new(&g, ranks, mapping);
+            let mut seen = vec![false; g.columns() as usize];
+            for r in 0..ranks {
+                for &c in d.columns_of_rank(r) {
+                    t.assert_true(!seen[c as usize], "column assigned twice");
+                    seen[c as usize] = true;
+                    t.assert_eq(d.rank_of_column(c), r, "inverse map consistent");
+                }
+            }
+            t.assert_true(seen.iter().all(|&s| s), "all columns covered");
+        });
+    }
+
+    #[test]
+    fn block_mapping_is_balanced() {
+        for &(side, ranks) in &[(24u32, 16u32), (24, 96 / 16), (48, 64), (96, 64), (24, 7)] {
+            let g = grid(side);
+            let d = Decomposition::new(&g, ranks, Mapping::Block);
+            let (max, min) = d.balance();
+            // each tile dimension differs by ≤1 ⇒ area ratio bounded
+            assert!(max - min <= max / 2 + 2, "side={side} ranks={ranks} max={max} min={min}");
+            assert!(min > 0);
+        }
+    }
+
+    #[test]
+    fn block_mapping_is_spatially_contiguous() {
+        // every rank's columns form one rectangle
+        let g = grid(24);
+        let d = Decomposition::new(&g, 16, Mapping::Block);
+        for r in 0..16 {
+            let cols = d.columns_of_rank(r);
+            let coords: Vec<_> = cols.iter().map(|&c| g.column_coords(c)).collect();
+            let minx = coords.iter().map(|c| c.0).min().unwrap();
+            let maxx = coords.iter().map(|c| c.0).max().unwrap();
+            let miny = coords.iter().map(|c| c.1).min().unwrap();
+            let maxy = coords.iter().map(|c| c.1).max().unwrap();
+            let area = (maxx - minx + 1) as usize * (maxy - miny + 1) as usize;
+            assert_eq!(area, cols.len(), "rank {r} columns are not a full rectangle");
+        }
+    }
+
+    #[test]
+    fn roundrobin_scatters_neighbours() {
+        let g = grid(8);
+        let d = Decomposition::new(&g, 4, Mapping::RoundRobin);
+        // adjacent columns land on different ranks
+        let a = d.rank_of_column(g.column_index(0, 0));
+        let b = d.rank_of_column(g.column_index(1, 0));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn single_rank_owns_everything() {
+        let g = grid(5);
+        let d = Decomposition::new(&g, 1, Mapping::Block);
+        assert_eq!(d.columns_of_rank(0).len(), 25);
+    }
+
+    #[test]
+    fn ranks_equal_columns() {
+        let g = grid(4);
+        let d = Decomposition::new(&g, 16, Mapping::Block);
+        let (max, min) = d.balance();
+        assert_eq!((max, min), (1, 1));
+    }
+
+    #[test]
+    fn prime_ranks_on_nonsquare_fit() {
+        // 1×N-ish grids force the fit_tiles fallback
+        let g = Grid::new(GridParams { nx: 20, ny: 2, ..GridParams::square(1) });
+        let d = Decomposition::new(&g, 5, Mapping::Block);
+        let (_, min) = d.balance();
+        assert!(min > 0);
+    }
+
+    #[test]
+    fn mapping_parse() {
+        assert_eq!(Mapping::parse("block").unwrap(), Mapping::Block);
+        assert_eq!(Mapping::parse("rr").unwrap(), Mapping::RoundRobin);
+        assert!(Mapping::parse("x").is_err());
+    }
+}

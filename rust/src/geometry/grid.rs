@@ -1,0 +1,249 @@
+//! Two-dimensional grid of cortical modules ("columns") and neuron
+//! geometry.
+//!
+//! The paper's networks are square grids of columns spaced at
+//! α ≈ 100 µm, 1240 neurons per column. We give every neuron a concrete
+//! 2D position, uniformly jittered inside its column's α×α square, drawn
+//! from the neuron's own deterministic RNG stream. Connection
+//! probabilities are evaluated on actual pairwise distances.
+//!
+//! This positional model is what makes the paper's two cutoff stencils
+//! come out exactly: with a 1/1000 cutoff applied to the *best-case*
+//! (minimum possible) inter-column distance, the Gaussian rule
+//! (A=0.05, σ=100 µm) reaches offsets of ±3 columns → a 7×7 stencil,
+//! and the exponential rule (A=0.03, λ=290 µm) reaches ±10 → 21×21,
+//! matching Fig. 2.
+
+use crate::config::GridParams;
+use crate::util::prng::Pcg64;
+
+/// RNG stream tags (one namespace per purpose, see `util::prng`).
+pub mod stream {
+    pub const POSITION: u64 = 0x01;
+    pub const SYNAPSES: u64 = 0x02;
+    pub const EXTERNAL: u64 = 0x03;
+    pub const INIT_STATE: u64 = 0x04;
+}
+
+/// Column index in row-major order.
+pub type ColumnId = u32;
+/// Global neuron id: `column * neurons_per_column + local`.
+pub type NeuronId = u64;
+
+/// Geometry helper wrapping [`GridParams`].
+#[derive(Clone, Copy, Debug)]
+pub struct Grid {
+    pub p: GridParams,
+}
+
+impl Grid {
+    pub fn new(p: GridParams) -> Self {
+        Grid { p }
+    }
+
+    #[inline]
+    pub fn columns(&self) -> u32 {
+        self.p.nx * self.p.ny
+    }
+
+    #[inline]
+    pub fn neurons(&self) -> u64 {
+        self.p.neurons()
+    }
+
+    #[inline]
+    pub fn column_index(&self, cx: u32, cy: u32) -> ColumnId {
+        debug_assert!(cx < self.p.nx && cy < self.p.ny);
+        cy * self.p.nx + cx
+    }
+
+    #[inline]
+    pub fn column_coords(&self, col: ColumnId) -> (u32, u32) {
+        debug_assert!(col < self.columns());
+        (col % self.p.nx, col / self.p.nx)
+    }
+
+    #[inline]
+    pub fn neuron_id(&self, col: ColumnId, local: u32) -> NeuronId {
+        debug_assert!(local < self.p.neurons_per_column);
+        col as u64 * self.p.neurons_per_column as u64 + local as u64
+    }
+
+    #[inline]
+    pub fn neuron_column(&self, gid: NeuronId) -> ColumnId {
+        (gid / self.p.neurons_per_column as u64) as ColumnId
+    }
+
+    #[inline]
+    pub fn neuron_local(&self, gid: NeuronId) -> u32 {
+        (gid % self.p.neurons_per_column as u64) as u32
+    }
+
+    /// Excitatory neurons occupy local indices `0..exc_per_column`.
+    #[inline]
+    pub fn is_excitatory_local(&self, local: u32) -> bool {
+        local < self.p.exc_per_column()
+    }
+
+    #[inline]
+    pub fn is_excitatory(&self, gid: NeuronId) -> bool {
+        self.is_excitatory_local(self.neuron_local(gid))
+    }
+
+    /// Deterministic neuron position [µm]: column origin + uniform jitter
+    /// inside the α×α square. Pure function of (seed, gid).
+    pub fn neuron_position(&self, seed: u64, gid: NeuronId) -> (f64, f64) {
+        let (cx, cy) = self.column_coords(self.neuron_column(gid));
+        let mut rng = Pcg64::for_entity(seed, gid, stream::POSITION);
+        let a = self.p.spacing_um;
+        (cx as f64 * a + rng.next_f64() * a, cy as f64 * a + rng.next_f64() * a)
+    }
+
+    /// Euclidean distance between two neurons [µm].
+    pub fn neuron_distance(&self, seed: u64, a: NeuronId, b: NeuronId) -> f64 {
+        let (ax, ay) = self.neuron_position(seed, a);
+        let (bx, by) = self.neuron_position(seed, b);
+        ((ax - bx).powi(2) + (ay - by).powi(2)).sqrt()
+    }
+
+    /// Center-to-center distance between columns at offset (dx, dy) [µm].
+    #[inline]
+    pub fn offset_center_dist_um(&self, dx: i32, dy: i32) -> f64 {
+        self.p.spacing_um * ((dx as f64).powi(2) + (dy as f64).powi(2)).sqrt()
+    }
+
+    /// *Minimum possible* distance between a neuron in the source column
+    /// and one in the column at offset (dx, dy) [µm] — the corner-to-
+    /// corner best case used by the cutoff-stencil computation.
+    #[inline]
+    pub fn offset_min_dist_um(&self, dx: i32, dy: i32) -> f64 {
+        let gx = (dx.abs() as f64 - 1.0).max(0.0);
+        let gy = (dy.abs() as f64 - 1.0).max(0.0);
+        self.p.spacing_um * (gx * gx + gy * gy).sqrt()
+    }
+
+    /// Iterate all valid (column, offset) targets for a source column and
+    /// a list of stencil offsets, clipping at the open grid boundary.
+    pub fn targets_of<'a>(
+        &'a self,
+        src: ColumnId,
+        offsets: &'a [(i32, i32)],
+    ) -> impl Iterator<Item = (ColumnId, (i32, i32))> + 'a {
+        let (cx, cy) = self.column_coords(src);
+        offsets.iter().filter_map(move |&(dx, dy)| {
+            let tx = cx as i64 + dx as i64;
+            let ty = cy as i64 + dy as i64;
+            if tx >= 0 && ty >= 0 && (tx as u32) < self.p.nx && (ty as u32) < self.p.ny {
+                Some((self.column_index(tx as u32, ty as u32), (dx, dy)))
+            } else {
+                None
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GridParams;
+    use crate::util::proptest::Cases;
+
+    fn grid(side: u32) -> Grid {
+        Grid::new(GridParams::square(side))
+    }
+
+    #[test]
+    fn column_index_roundtrip() {
+        let g = grid(24);
+        for cy in 0..24 {
+            for cx in 0..24 {
+                let c = g.column_index(cx, cy);
+                assert_eq!(g.column_coords(c), (cx, cy));
+            }
+        }
+        assert_eq!(g.columns(), 576);
+    }
+
+    #[test]
+    fn neuron_id_roundtrip_property() {
+        Cases::new("neuron id roundtrip", 200).run(|t| {
+            let side = 1 + t.rng.next_below(30) as u32;
+            let g = grid(side);
+            let col = t.rng.next_below(g.columns() as u64) as u32;
+            let local = t.rng.next_below(g.p.neurons_per_column as u64) as u32;
+            let gid = g.neuron_id(col, local);
+            t.assert_eq(g.neuron_column(gid), col, "column roundtrip");
+            t.assert_eq(g.neuron_local(gid), local, "local roundtrip");
+        });
+    }
+
+    #[test]
+    fn excitatory_split_matches_fraction() {
+        let g = grid(4);
+        let exc = (0..g.p.neurons_per_column).filter(|&l| g.is_excitatory_local(l)).count();
+        assert_eq!(exc, 992);
+    }
+
+    #[test]
+    fn positions_are_deterministic_and_inside_column() {
+        let g = grid(8);
+        Cases::new("positions in column square", 300).run(|t| {
+            let gid = t.rng.next_below(g.neurons());
+            let (x, y) = g.neuron_position(7, gid);
+            let (x2, y2) = g.neuron_position(7, gid);
+            t.assert_eq(x.to_bits(), x2.to_bits(), "deterministic x");
+            t.assert_eq(y.to_bits(), y2.to_bits(), "deterministic y");
+            let (cx, cy) = g.column_coords(g.neuron_column(gid));
+            let a = g.p.spacing_um;
+            t.assert_true(x >= cx as f64 * a && x < (cx + 1) as f64 * a, "x in column");
+            t.assert_true(y >= cy as f64 * a && y < (cy + 1) as f64 * a, "y in column");
+        });
+    }
+
+    #[test]
+    fn positions_change_with_seed() {
+        let g = grid(8);
+        let (x1, _) = g.neuron_position(1, 1000);
+        let (x2, _) = g.neuron_position(2, 1000);
+        assert_ne!(x1.to_bits(), x2.to_bits());
+    }
+
+    #[test]
+    fn min_dist_is_lower_bound_of_actual_distances() {
+        let g = grid(12);
+        Cases::new("min dist lower bound", 200).run(|t| {
+            let a = t.rng.next_below(g.neurons());
+            let b = t.rng.next_below(g.neurons());
+            let (ax, ay) = g.column_coords(g.neuron_column(a));
+            let (bx, by) = g.column_coords(g.neuron_column(b));
+            let dx = bx as i32 - ax as i32;
+            let dy = by as i32 - ay as i32;
+            let lo = g.offset_min_dist_um(dx, dy);
+            let d = g.neuron_distance(3, a, b);
+            t.assert_true(d >= lo - 1e-9, "actual >= min");
+        });
+    }
+
+    #[test]
+    fn offset_distances() {
+        let g = grid(4);
+        assert_eq!(g.offset_min_dist_um(0, 0), 0.0);
+        assert_eq!(g.offset_min_dist_um(1, 0), 0.0); // adjacent columns touch
+        assert_eq!(g.offset_min_dist_um(2, 0), 100.0);
+        assert_eq!(g.offset_min_dist_um(-3, 0), 200.0);
+        assert!((g.offset_center_dist_um(3, 4) - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn targets_clip_at_boundary() {
+        let g = grid(4);
+        let offsets = [(-1, 0), (1, 0), (0, -1), (0, 1), (0, 0)];
+        // corner column sees only right/down/self
+        let corner = g.column_index(0, 0);
+        let t: Vec<_> = g.targets_of(corner, &offsets).collect();
+        assert_eq!(t.len(), 3);
+        // bulk column sees all five
+        let bulk = g.column_index(2, 2);
+        assert_eq!(g.targets_of(bulk, &offsets).count(), 5);
+    }
+}

@@ -1,0 +1,7 @@
+//! Grid geometry and the column→rank spatial decomposition.
+
+pub mod decomposition;
+pub mod grid;
+
+pub use decomposition::{Decomposition, Mapping};
+pub use grid::{ColumnId, Grid, NeuronId};

@@ -1,0 +1,35 @@
+//! # DPSNN-rs
+//!
+//! A distributed spiking neural network simulation engine reproducing
+//! Pastorelli et al., *"Gaussian and exponential lateral connectivity on
+//! distributed spiking neural network simulation"* (PDP 2018).
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod config;
+pub mod geometry;
+pub mod util;
+
+use util::memtrack::CountingAlloc;
+
+/// Heap accounting for the Fig. 9 memory-per-synapse measurements.
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+pub mod mpi;
+
+pub mod connectivity;
+pub mod neuron;
+pub mod stimulus;
+pub mod synapse;
+
+pub mod coordinator;
+pub mod engine;
+pub mod runtime;
+
+pub mod analysis;
+pub mod perfmodel;
+
+pub mod bench_harness;
+pub mod repro;

@@ -1,0 +1,182 @@
+//! `dpsnn` — distributed spiking neural network simulator CLI.
+//!
+//! Subcommands cover running simulations from TOML configs/flags and
+//! regenerating every table/figure of the paper (DESIGN.md §5).
+
+use dpsnn::config::cli::{Args, Command};
+use dpsnn::config::{toml, ConnRule, SimConfig, Solver};
+use dpsnn::coordinator::run_simulation;
+use dpsnn::engine::{Phase, RunOptions};
+use dpsnn::geometry::Mapping;
+use dpsnn::repro;
+use dpsnn::util::timer::fmt_ns;
+
+fn commands() -> Vec<Command> {
+    vec![
+        Command::new("run", "run a simulation and print the summary")
+            .opt("config", "TOML config file (flags below override it)")
+            .opt("rule", "connectivity rule: gaussian|exponential")
+            .opt("side", "grid side (columns)")
+            .opt("neurons-per-column", "neurons per column (paper: 1240)")
+            .opt("ranks", "virtual MPI ranks")
+            .opt("duration-ms", "simulated time [ms]")
+            .opt("seed", "global seed")
+            .opt("solver", "neuron solver: event|xla")
+            .opt("mapping", "column mapping: block|roundrobin")
+            .flag("plasticity", "enable STDP")
+            .flag("naive-delivery", "ablation: full Alltoallv every step")
+            .flag("record-activity", "record per-column activity"),
+        Command::new("table1", "regenerate Table I (problem sizes)"),
+        Command::new("fig2", "regenerate Fig. 2 (projection stencils)"),
+        Command::new("fig5", "regenerate Fig. 5 (strong scaling, gaussian)")
+            .flag("quick", "reduced calibration"),
+        Command::new("fig6", "regenerate Fig. 6 (weak scaling, gaussian)")
+            .flag("quick", "reduced calibration"),
+        Command::new("fig7", "regenerate Fig. 7 (exp vs gauss scaling)")
+            .flag("quick", "reduced calibration"),
+        Command::new("fig8", "regenerate Fig. 8 (exp/gauss slowdown)")
+            .flag("quick", "reduced calibration"),
+        Command::new("fig9", "regenerate Fig. 9 (memory per synapse)")
+            .flag("quick", "reduced calibration"),
+        Command::new("all-figures", "regenerate every table and figure")
+            .flag("quick", "reduced calibration"),
+    ]
+}
+
+fn cfg_from_args(a: &Args) -> Result<SimConfig, String> {
+    let mut cfg = match a.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| format!("reading {path}: {e}"))?;
+            SimConfig::from_doc(&toml::parse(&text).map_err(|e| e.to_string())?)?
+        }
+        None => SimConfig::gaussian(8),
+    };
+    if let Some(rule) = a.get("rule") {
+        cfg.conn = match ConnRule::parse(rule)? {
+            ConnRule::Gaussian => dpsnn::config::ConnParams::gaussian(),
+            ConnRule::Exponential => dpsnn::config::ConnParams::exponential(),
+        };
+    }
+    if let Some(side) = a.get_parsed::<u32>("side")? {
+        cfg.grid.nx = side;
+        cfg.grid.ny = side;
+    }
+    if let Some(npc) = a.get_parsed::<u32>("neurons-per-column")? {
+        cfg.grid.neurons_per_column = npc;
+    }
+    cfg.ranks = a.get_or("ranks", cfg.ranks)?;
+    cfg.duration_ms = a.get_or("duration-ms", cfg.duration_ms)?;
+    cfg.seed = a.get_or("seed", cfg.seed)?;
+    if let Some(sv) = a.get("solver") {
+        cfg.solver = Solver::parse(sv)?;
+    }
+    cfg.plasticity = cfg.plasticity || a.has_flag("plasticity");
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(a: &Args) -> Result<(), String> {
+    let cfg = cfg_from_args(a)?;
+    let opts = RunOptions {
+        mapping: Mapping::parse(a.get("mapping").unwrap_or("block"))?,
+        record_activity: a.has_flag("record-activity"),
+        naive_delivery: a.has_flag("naive-delivery"),
+        ..Default::default()
+    };
+    eprintln!(
+        "running {}x{} {} on {} ranks, {} ms ...",
+        cfg.grid.nx,
+        cfg.grid.ny,
+        cfg.conn.rule.name(),
+        cfg.ranks,
+        cfg.duration_ms
+    );
+    let s = run_simulation(&cfg, &opts);
+    println!("neurons:            {}", s.neurons);
+    println!("synapses:           {}", s.synapses());
+    println!("spikes:             {}", s.spikes());
+    println!("firing rate:        {:.2} Hz", s.firing_rate_hz());
+    println!("equivalent events:  {}", s.equivalent_events());
+    println!("cost (1-core CPU):  {:.1} ns/event", s.total_cpu_ns_per_event());
+    println!("peak memory:        {:.1} B/synapse", s.peak_bytes_per_synapse());
+    for p in [Phase::Pack, Phase::Exchange, Phase::Demux, Phase::Dynamics] {
+        println!("phase {:<10} {:>12}", p.name(), fmt_ns(s.phase_cpu_ns(p) as f64));
+    }
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmds = commands();
+    let Some(name) = argv.first() else {
+        eprintln!("dpsnn — DPSNN-rs simulator (PDP 2018 reproduction)\n\nsubcommands:");
+        for c in &cmds {
+            eprintln!("  {:<12} {}", c.name, c.help);
+        }
+        std::process::exit(2);
+    };
+    let Some(cmd) = cmds.iter().find(|c| c.name == name) else {
+        eprintln!("unknown subcommand '{name}'");
+        std::process::exit(2);
+    };
+    let args = match cmd.parse(&argv[1..]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if args.has_flag("quick") {
+        std::env::set_var("DPSNN_QUICK", "1");
+    }
+    let result = match name.as_str() {
+        "run" => cmd_run(&args),
+        "table1" => {
+            println!("{}", repro::table1_report());
+            Ok(())
+        }
+        "fig2" => {
+            println!("{}", repro::fig2_report());
+            Ok(())
+        }
+        "fig5" => {
+            let cal = repro::cached_calibration(ConnRule::Gaussian);
+            println!("{}", repro::fig5_report(cal));
+            Ok(())
+        }
+        "fig6" => {
+            let cal = repro::cached_calibration(ConnRule::Gaussian);
+            println!("{}", repro::fig6_report(cal));
+            Ok(())
+        }
+        "fig7" | "fig8" | "fig9" => {
+            let g = repro::cached_calibration(ConnRule::Gaussian);
+            let e = repro::cached_calibration(ConnRule::Exponential);
+            let report = match name.as_str() {
+                "fig7" => repro::fig7_report(g, e),
+                "fig8" => repro::fig8_report(g, e),
+                _ => repro::fig9_report(g, e),
+            };
+            println!("{report}");
+            Ok(())
+        }
+        "all-figures" => {
+            println!("{}", repro::table1_report());
+            println!("{}", repro::fig2_report());
+            let g = repro::cached_calibration(ConnRule::Gaussian);
+            let e = repro::cached_calibration(ConnRule::Exponential);
+            println!("{}", repro::fig5_report(g));
+            println!("{}", repro::fig6_report(g));
+            println!("{}", repro::fig7_report(g, e));
+            println!("{}", repro::fig8_report(g, e));
+            println!("{}", repro::fig9_report(g, e));
+            Ok(())
+        }
+        _ => unreachable!(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,359 @@
+//! In-process message-passing substrate ("virtual MPI").
+//!
+//! The paper's DPSNN is a network of C++ processes over MPI; here each
+//! rank is an OS thread and the collectives move `Vec<T>` buffers through
+//! an R×R channel matrix. The semantics mirror the MPI calls the paper
+//! names:
+//!
+//! * [`RankComm::alltoall`]    — MPI_Alltoall, one fixed-size item/pair
+//! * [`RankComm::alltoallv`]   — MPI_Alltoallv, variable payloads
+//! * [`RankComm::alltoallv_subset`] — the paper's two-step refinement:
+//!   payloads only flow between pairs that actually communicate; each
+//!   rank knows (from step 1 counters) exactly whom to expect.
+//! * [`RankComm::barrier`], [`RankComm::gather_to_root`]
+//!
+//! Every send is recorded in [`CommStats`] (messages + bytes per protocol
+//! class) — those exact counts feed the virtual-cluster performance
+//! model. Buffers move by ownership, so the substrate itself adds no
+//! copies to the hot path.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier, Mutex};
+
+use crate::mpi::stats::{CommClass, CommStats};
+
+/// Anything that can cross the virtual wire. In-process we move typed
+/// buffers directly; `WIRE_SIZE` is the serialized size MPI would ship,
+/// used for byte accounting.
+pub trait Wire: Send + 'static {
+    const WIRE_SIZE: usize;
+}
+
+impl Wire for u8 {
+    const WIRE_SIZE: usize = 1;
+}
+impl Wire for u32 {
+    const WIRE_SIZE: usize = 4;
+}
+impl Wire for u64 {
+    const WIRE_SIZE: usize = 8;
+}
+impl Wire for f64 {
+    const WIRE_SIZE: usize = 8;
+}
+
+/// Communicator factory: builds the channel matrix for `ranks` ranks.
+///
+/// Type-erased mailboxes: each (src, dst) pair has one channel carrying
+/// boxed buffers; `RankComm` downcasts on receive. One matrix serves all
+/// message types.
+pub struct Cluster {
+    ranks: u32,
+    senders: Vec<Vec<Sender<Box<dyn std::any::Any + Send>>>>,
+    receivers: Vec<Vec<Mutex<Receiver<Box<dyn std::any::Any + Send>>>>>,
+    barrier: Arc<Barrier>,
+}
+
+impl Cluster {
+    pub fn new(ranks: u32) -> Arc<Self> {
+        assert!(ranks >= 1);
+        let r = ranks as usize;
+        let mut senders: Vec<Vec<Sender<_>>> = (0..r).map(|_| Vec::with_capacity(r)).collect();
+        let mut receivers: Vec<Vec<Mutex<Receiver<_>>>> =
+            (0..r).map(|_| Vec::with_capacity(r)).collect();
+        // channel [src][dst]
+        #[allow(clippy::needless_range_loop)]
+        for src in 0..r {
+            for dst in 0..r {
+                let (tx, rx) = channel();
+                senders[src].push(tx);
+                receivers[dst].push(Mutex::new(rx));
+            }
+        }
+        Arc::new(Cluster { ranks, senders, receivers, barrier: Arc::new(Barrier::new(r)) })
+    }
+
+    pub fn ranks(&self) -> u32 {
+        self.ranks
+    }
+
+    /// Handle for one rank. Call exactly once per rank.
+    pub fn rank_comm(self: &Arc<Self>, rank: u32) -> RankComm {
+        assert!(rank < self.ranks);
+        RankComm { cluster: Arc::clone(self), rank, stats: CommStats::default() }
+    }
+}
+
+/// Per-rank communicator handle (not Clone: owns the rank's stats).
+pub struct RankComm {
+    cluster: Arc<Cluster>,
+    rank: u32,
+    stats: CommStats,
+}
+
+impl RankComm {
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    pub fn ranks(&self) -> u32 {
+        self.cluster.ranks
+    }
+
+    pub fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+
+    pub fn take_stats(&mut self) -> CommStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    /// Synchronize all ranks.
+    pub fn barrier(&self) {
+        self.cluster.barrier.wait();
+    }
+
+    fn send_raw<T: Wire>(&mut self, class: CommClass, dst: u32, buf: Vec<T>) {
+        let bytes = (buf.len() * T::WIRE_SIZE) as u64;
+        self.stats.record_send(class, dst == self.rank, bytes);
+        self.cluster.senders[self.rank as usize][dst as usize]
+            .send(Box::new(buf))
+            .expect("receiver rank hung up");
+    }
+
+    fn recv_raw<T: Wire>(&self, src: u32) -> Vec<T> {
+        let rx = self.cluster.receivers[self.rank as usize][src as usize]
+            .lock()
+            .expect("poisoned receiver");
+        let boxed = rx.recv().expect("sender rank hung up");
+        *boxed.downcast::<Vec<T>>().expect("type confusion on virtual wire")
+    }
+
+    /// MPI_Alltoall: element `i` of `send` goes to rank `i`; returns the
+    /// elements received from every rank (index = source rank).
+    pub fn alltoall<T: Wire + Copy>(&mut self, class: CommClass, send: &[T]) -> Vec<T> {
+        assert_eq!(send.len(), self.ranks() as usize, "alltoall needs one item per rank");
+        self.stats.record_call(class);
+        for dst in 0..self.ranks() {
+            self.send_raw(class, dst, vec![send[dst as usize]]);
+        }
+        (0..self.ranks())
+            .map(|src| {
+                let v: Vec<T> = self.recv_raw(src);
+                debug_assert_eq!(v.len(), 1);
+                v[0]
+            })
+            .collect()
+    }
+
+    /// MPI_Alltoallv: buffer `i` goes to rank `i`; returns one buffer per
+    /// source rank. Buffers move by ownership (no serialization cost).
+    pub fn alltoallv<T: Wire>(
+        &mut self,
+        class: CommClass,
+        sends: Vec<Vec<T>>,
+    ) -> Vec<Vec<T>> {
+        assert_eq!(sends.len(), self.ranks() as usize);
+        self.stats.record_call(class);
+        for (dst, buf) in sends.into_iter().enumerate() {
+            self.send_raw(class, dst as u32, buf);
+        }
+        (0..self.ranks()).map(|src| self.recv_raw(src)).collect()
+    }
+
+    /// The paper's simulation-phase refinement (§II-E): payloads flow only
+    /// between actually-communicating pairs. `sends` lists (target, buf);
+    /// `expect_from` lists the sources this rank must receive from (known
+    /// from the step-1 spike counters). Returns (source, buf) pairs.
+    pub fn alltoallv_subset<T: Wire>(
+        &mut self,
+        class: CommClass,
+        sends: Vec<(u32, Vec<T>)>,
+        expect_from: &[u32],
+    ) -> Vec<(u32, Vec<T>)> {
+        self.stats.record_call(class);
+        for (dst, buf) in sends {
+            debug_assert!(dst < self.ranks());
+            self.send_raw(class, dst, buf);
+        }
+        expect_from.iter().map(|&src| (src, self.recv_raw(src))).collect()
+    }
+
+    /// Gather each rank's buffer on root (rank 0). Non-roots get `None`.
+    pub fn gather_to_root<T: Wire>(&mut self, send: Vec<T>) -> Option<Vec<Vec<T>>> {
+        self.stats.record_call(CommClass::Other);
+        self.send_raw(CommClass::Other, 0, send);
+        if self.rank == 0 {
+            Some((0..self.ranks()).map(|src| self.recv_raw(src)).collect())
+        } else {
+            None
+        }
+    }
+}
+
+/// Spawn `ranks` threads, run `body(comm)` in each, join, and return the
+/// per-rank results ordered by rank. Panics in any rank propagate.
+pub fn run_cluster<R: Send + 'static>(
+    ranks: u32,
+    body: impl Fn(RankComm) -> R + Send + Sync + 'static,
+) -> Vec<R> {
+    let cluster = Cluster::new(ranks);
+    let body = Arc::new(body);
+    let mut handles = Vec::with_capacity(ranks as usize);
+    for rank in 0..ranks {
+        let comm = cluster.rank_comm(rank);
+        let body = Arc::clone(&body);
+        let h = std::thread::Builder::new()
+            .name(format!("rank{rank}"))
+            .stack_size(8 << 20)
+            .spawn(move || body(comm))
+            .expect("spawn rank thread");
+        handles.push(h);
+    }
+    handles
+        .into_iter()
+        .enumerate()
+        .map(|(rank, h)| match h.join() {
+            Ok(r) => r,
+            Err(e) => std::panic::resume_unwind(Box::new(format!(
+                "rank {rank} panicked: {:?}",
+                e.downcast_ref::<String>()
+            ))),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alltoall_exchanges_one_word_per_pair() {
+        let results = run_cluster(4, |mut comm| {
+            let me = comm.rank() as u64;
+            let send: Vec<u64> = (0..4).map(|dst| me * 10 + dst).collect();
+            comm.alltoall(CommClass::InitCounts, &send)
+        });
+        // rank r receives src*10 + r from each src
+        for (r, recv) in results.iter().enumerate() {
+            let expect: Vec<u64> = (0..4).map(|src| src * 10 + r as u64).collect();
+            assert_eq!(recv, &expect);
+        }
+    }
+
+    #[test]
+    fn alltoallv_moves_variable_payloads() {
+        let results = run_cluster(3, |mut comm| {
+            let me = comm.rank();
+            // rank r sends r+1 copies of its id to each target
+            let sends: Vec<Vec<u32>> =
+                (0..3).map(|_| vec![me; (me + 1) as usize]).collect();
+            comm.alltoallv(CommClass::InitPayload, sends)
+        });
+        for recv in &results {
+            for (src, buf) in recv.iter().enumerate() {
+                assert_eq!(buf.len(), src + 1);
+                assert!(buf.iter().all(|&x| x == src as u32));
+            }
+        }
+    }
+
+    #[test]
+    fn subset_exchange_only_touches_listed_pairs() {
+        // ring: rank r sends only to (r+1) % R and expects only from (r-1+R) % R
+        let results = run_cluster(4, |mut comm| {
+            let me = comm.rank();
+            let next = (me + 1) % 4;
+            let prev = (me + 3) % 4;
+            let got = comm.alltoallv_subset(
+                CommClass::SpikePayload,
+                vec![(next, vec![me as u64; 5])],
+                &[prev],
+            );
+            (got, comm.take_stats())
+        });
+        for (r, (got, stats)) in results.iter().enumerate() {
+            assert_eq!(got.len(), 1);
+            let (src, buf) = &got[0];
+            assert_eq!(*src, ((r + 3) % 4) as u32);
+            assert_eq!(buf, &vec![*src as u64; 5]);
+            // exactly one remote message of 40 bytes
+            let c = stats.class(CommClass::SpikePayload);
+            assert_eq!(c.remote_msgs, 1);
+            assert_eq!(c.remote_bytes, 40);
+            assert_eq!(c.local_msgs, 0);
+        }
+    }
+
+    #[test]
+    fn byte_accounting_distinguishes_self_sends() {
+        let results = run_cluster(2, |mut comm| {
+            let sends: Vec<Vec<u32>> = vec![vec![1, 2, 3], vec![4]];
+            let _ = comm.alltoallv(CommClass::SpikePayload, sends);
+            comm.take_stats()
+        });
+        let c0 = results[0].class(CommClass::SpikePayload);
+        assert_eq!(c0.local_bytes, 12); // 3 u32 to self
+        assert_eq!(c0.remote_bytes, 4); // 1 u32 to rank 1
+        assert_eq!(c0.calls, 1);
+    }
+
+    #[test]
+    fn gather_collects_on_root_only() {
+        let results = run_cluster(3, |mut comm| {
+            let r = comm.rank() as u64;
+            comm.gather_to_root(vec![r, r * r])
+        });
+        let root = results[0].as_ref().unwrap();
+        assert_eq!(root.len(), 3);
+        assert_eq!(root[2], vec![2, 4]);
+        assert!(results[1].is_none());
+        assert!(results[2].is_none());
+    }
+
+    #[test]
+    fn barrier_and_repeated_collectives_interleave_safely() {
+        // Several rounds; ordering across rounds must hold (FIFO channels).
+        let results = run_cluster(3, |mut comm| {
+            let mut seen = Vec::new();
+            for round in 0..10u64 {
+                let send = vec![round * 100 + comm.rank() as u64; 3];
+                let got = comm.alltoall(CommClass::SpikeCounts, &send);
+                seen.push(got);
+                comm.barrier();
+            }
+            seen
+        });
+        for recvs in results {
+            for (round, got) in recvs.iter().enumerate() {
+                for (src, &v) in got.iter().enumerate() {
+                    assert_eq!(v, round as u64 * 100 + src as u64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_cluster_works() {
+        let results = run_cluster(1, |mut comm| {
+            let got = comm.alltoall(CommClass::InitCounts, &[7u64]);
+            assert_eq!(got, vec![7]);
+            let v = comm.alltoallv(CommClass::InitPayload, vec![vec![1u8, 2]]);
+            assert_eq!(v[0], vec![1, 2]);
+            true
+        });
+        assert!(results[0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rank_panic_propagates() {
+        run_cluster(2, |comm| {
+            if comm.rank() == 1 {
+                panic!("rank 1 died");
+            }
+            // rank 0 would block forever on recv if the harness didn't
+            // propagate — but it sends first then panics on hung channel.
+        });
+    }
+}

@@ -1,0 +1,8 @@
+//! Virtual-MPI substrate: ranks-as-threads with MPI-like collectives and
+//! exact message/byte accounting (consumed by `perfmodel`).
+
+pub mod comm;
+pub mod stats;
+
+pub use comm::{run_cluster, Cluster, RankComm, Wire};
+pub use stats::{CommClass, CommStats};

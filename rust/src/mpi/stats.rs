@@ -1,0 +1,147 @@
+//! Per-rank communication accounting.
+//!
+//! The virtual cluster cannot measure InfiniBand wire time (ranks are
+//! threads), so the scaling model consumes *exact message and byte
+//! counts* per collective class, recorded here by the communicator, and
+//! converts them to time through `perfmodel::ibparams`. The classes
+//! mirror the paper's protocol phases (§II-D, §II-E).
+
+/// Which protocol phase a collective call belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommClass {
+    /// Construction step 1: synapse counters (MPI_Alltoall, 1 word/pair).
+    InitCounts,
+    /// Construction step 2: synapse payload transfer (MPI_Alltoallv).
+    InitPayload,
+    /// Simulation step 1: per-iteration spike counters to the connected
+    /// subset (single word messages).
+    SpikeCounts,
+    /// Simulation step 2: axonal spike payloads (subset Alltoallv).
+    SpikePayload,
+    /// Everything else (barriers, metric gathers).
+    Other,
+}
+
+pub const COMM_CLASSES: [CommClass; 5] = [
+    CommClass::InitCounts,
+    CommClass::InitPayload,
+    CommClass::SpikeCounts,
+    CommClass::SpikePayload,
+    CommClass::Other,
+];
+
+impl CommClass {
+    pub fn index(self) -> usize {
+        match self {
+            CommClass::InitCounts => 0,
+            CommClass::InitPayload => 1,
+            CommClass::SpikeCounts => 2,
+            CommClass::SpikePayload => 3,
+            CommClass::Other => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CommClass::InitCounts => "init_counts",
+            CommClass::InitPayload => "init_payload",
+            CommClass::SpikeCounts => "spike_counts",
+            CommClass::SpikePayload => "spike_payload",
+            CommClass::Other => "other",
+        }
+    }
+}
+
+/// Counters for one class.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClassStats {
+    /// Point-to-point messages sent to *other* ranks.
+    pub remote_msgs: u64,
+    /// Bytes in those messages.
+    pub remote_bytes: u64,
+    /// Self-deliveries (no wire cost, counted for completeness).
+    pub local_msgs: u64,
+    pub local_bytes: u64,
+    /// Collective invocations of this class.
+    pub calls: u64,
+}
+
+/// Per-rank communication statistics.
+#[derive(Clone, Debug, Default)]
+pub struct CommStats {
+    classes: [ClassStats; COMM_CLASSES.len()],
+}
+
+impl CommStats {
+    pub fn record_send(&mut self, class: CommClass, to_self: bool, bytes: u64) {
+        let c = &mut self.classes[class.index()];
+        if to_self {
+            c.local_msgs += 1;
+            c.local_bytes += bytes;
+        } else {
+            c.remote_msgs += 1;
+            c.remote_bytes += bytes;
+        }
+    }
+
+    pub fn record_call(&mut self, class: CommClass) {
+        self.classes[class.index()].calls += 1;
+    }
+
+    pub fn class(&self, class: CommClass) -> &ClassStats {
+        &self.classes[class.index()]
+    }
+
+    pub fn total_remote_bytes(&self) -> u64 {
+        self.classes.iter().map(|c| c.remote_bytes).sum()
+    }
+
+    pub fn total_remote_msgs(&self) -> u64 {
+        self.classes.iter().map(|c| c.remote_msgs).sum()
+    }
+
+    /// Merge another rank's stats (for cluster-wide aggregates).
+    pub fn merge(&mut self, other: &CommStats) {
+        for (a, b) in self.classes.iter_mut().zip(&other.classes) {
+            a.remote_msgs += b.remote_msgs;
+            a.remote_bytes += b.remote_bytes;
+            a.local_msgs += b.local_msgs;
+            a.local_bytes += b.local_bytes;
+            a.calls += b.calls;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_merges() {
+        let mut a = CommStats::default();
+        a.record_send(CommClass::SpikeCounts, false, 8);
+        a.record_send(CommClass::SpikeCounts, true, 8);
+        a.record_call(CommClass::SpikeCounts);
+        let mut b = CommStats::default();
+        b.record_send(CommClass::SpikeCounts, false, 16);
+        a.merge(&b);
+        let c = a.class(CommClass::SpikeCounts);
+        assert_eq!(c.remote_msgs, 2);
+        assert_eq!(c.remote_bytes, 24);
+        assert_eq!(c.local_msgs, 1);
+        assert_eq!(c.calls, 1);
+        assert_eq!(a.total_remote_bytes(), 24);
+        assert_eq!(a.total_remote_msgs(), 2);
+        assert_eq!(a.class(CommClass::InitCounts).calls, 0);
+    }
+
+    #[test]
+    fn class_indices_are_distinct() {
+        let mut seen = [false; COMM_CLASSES.len()];
+        for c in COMM_CLASSES {
+            assert!(!seen[c.index()]);
+            seen[c.index()] = true;
+            assert!(!c.name().is_empty());
+        }
+    }
+}

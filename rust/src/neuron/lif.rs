@@ -1,0 +1,298 @@
+//! Leaky Integrate-and-Fire neuron with Spike-Frequency Adaptation
+//! (paper §III-A, eqs. 1–2; model of Gigante, Mattia & Del Giudice 2007).
+//!
+//!   dV/dt = −(V − E)/τm − (g_c/C_m)·c + Σᵢ Jᵢ·δ(t − tᵢ)
+//!   dc/dt = −c/τc
+//!
+//! Between synaptic events both equations are linear, so the engine
+//! integrates them *exactly* (event-driven, as DPSNN does):
+//!
+//!   c(t₀+Δ) = c₀·e^{−Δ/τc}
+//!   V(t₀+Δ) = E + (V₀ − E − K)·e^{−Δ/τm} + K·e^{−Δ/τc}
+//!     with K = −g̃·c₀ / (1/τm − 1/τc),  g̃ = g_c/C_m
+//!   (K degenerates for τm = τc; the limit −g̃·c₀·Δ·e^{−Δ/τm} is used.)
+//!
+//! Synaptic arrivals produce instantaneous jumps V += J. Because V decays
+//! toward E − adaptation < Vθ between events, threshold crossings can
+//! only happen *at* jump instants — the event-driven solver checks the
+//! threshold only there, which is exact for this model. On a spike:
+//! V ← Vr for τarp (absolute refractory; arrivals during it are
+//! discarded), c ← c + α_c.
+
+use crate::config::NeuronParams;
+
+/// Precomputed per-population integration constants.
+#[derive(Clone, Copy, Debug)]
+pub struct LifParams {
+    pub e_rest: f64,
+    pub v_theta: f64,
+    pub v_reset: f64,
+    pub tau_arp: f64,
+    pub inv_tau_m: f64,
+    pub inv_tau_c: f64,
+    /// g_c/C_m (0 disables SFA — inhibitory populations).
+    pub g_tilde: f64,
+    pub alpha_c: f64,
+    /// 1/(1/τm − 1/τc); f64::INFINITY when τm == τc (degenerate case).
+    k_denom_inv: f64,
+    degenerate: bool,
+}
+
+impl LifParams {
+    pub fn new(p: &NeuronParams) -> Self {
+        let inv_tau_m = 1.0 / p.tau_m_ms;
+        let inv_tau_c = 1.0 / p.tau_c_ms;
+        let degenerate = (inv_tau_m - inv_tau_c).abs() < 1e-12;
+        LifParams {
+            e_rest: p.e_rest_mv,
+            v_theta: p.v_theta_mv,
+            v_reset: p.v_reset_mv,
+            tau_arp: p.tau_arp_ms,
+            inv_tau_m,
+            inv_tau_c,
+            g_tilde: p.g_c_over_cm,
+            alpha_c: p.alpha_c,
+            k_denom_inv: if degenerate { 0.0 } else { 1.0 / (inv_tau_m - inv_tau_c) },
+            degenerate,
+        }
+    }
+}
+
+/// Dynamic state of one neuron.
+#[derive(Clone, Copy, Debug)]
+pub struct LifState {
+    /// Membrane potential [mV].
+    pub v: f64,
+    /// Fatigue (SFA) variable.
+    pub c: f64,
+    /// Time of last state update [ms].
+    pub last_t: f64,
+    /// End of the current absolute refractory period [ms].
+    pub refr_until: f64,
+}
+
+impl LifState {
+    pub fn resting(p: &LifParams) -> Self {
+        LifState { v: p.e_rest, c: 0.0, last_t: 0.0, refr_until: f64::NEG_INFINITY }
+    }
+
+    /// Exact evolution of (V, c) from `last_t` to `t` with no input.
+    #[inline]
+    pub fn advance(&mut self, p: &LifParams, t: f64) {
+        let dt = t - self.last_t;
+        debug_assert!(dt >= -1e-9, "time went backwards: {} -> {t}", self.last_t);
+        if dt <= 0.0 {
+            return;
+        }
+        let em = (-dt * p.inv_tau_m).exp();
+        if p.g_tilde == 0.0 {
+            // plain LIF (and c stays 0 for inhibitory populations)
+            self.v = p.e_rest + (self.v - p.e_rest) * em;
+            if self.c != 0.0 {
+                self.c *= (-dt * p.inv_tau_c).exp();
+            }
+        } else {
+            let ec = (-dt * p.inv_tau_c).exp();
+            if p.degenerate {
+                // lim τc→τm: V = E + (V0−E)e^{−Δ/τ} − g̃·c0·Δ·e^{−Δ/τ}
+                self.v = p.e_rest + (self.v - p.e_rest) * em - p.g_tilde * self.c * dt * em;
+            } else {
+                let k = -p.g_tilde * self.c * p.k_denom_inv;
+                self.v = p.e_rest + (self.v - p.e_rest - k) * em + k * ec;
+            }
+            self.c *= ec;
+        }
+        self.last_t = t;
+    }
+
+    /// Deliver a synaptic event of weight `j` [mV] at time `t`.
+    /// Returns `true` if the neuron spikes.
+    #[inline]
+    pub fn inject(&mut self, p: &LifParams, t: f64, j: f64) -> bool {
+        self.advance(p, t);
+        if t < self.refr_until {
+            // absolute refractory: input discarded
+            return false;
+        }
+        self.v += j;
+        if self.v >= p.v_theta {
+            self.v = p.v_reset;
+            self.c += p.alpha_c;
+            self.refr_until = t + p.tau_arp;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NeuronParams;
+    use crate::util::proptest::Cases;
+
+    fn params() -> LifParams {
+        LifParams::new(&NeuronParams::excitatory())
+    }
+
+    /// Brute-force Euler reference with tiny steps.
+    fn euler(p: &LifParams, mut v: f64, mut c: f64, dt: f64, steps: u64) -> (f64, f64) {
+        let h = dt / steps as f64;
+        for _ in 0..steps {
+            let dv = -(v - p.e_rest) * p.inv_tau_m - p.g_tilde * c;
+            let dc = -c * p.inv_tau_c;
+            v += h * dv;
+            c += h * dc;
+        }
+        (v, c)
+    }
+
+    #[test]
+    fn exact_solution_matches_euler() {
+        let p = params();
+        let mut s = LifState::resting(&p);
+        s.v = -55.0;
+        s.c = 2.0;
+        let dt = 7.3;
+        let (ve, ce) = euler(&p, s.v, s.c, dt, 2_000_000);
+        s.advance(&p, dt);
+        assert!((s.v - ve).abs() < 1e-4, "V exact {} vs euler {}", s.v, ve);
+        assert!((s.c - ce).abs() < 1e-6, "c exact {} vs euler {}", s.c, ce);
+    }
+
+    #[test]
+    fn degenerate_tau_matches_euler() {
+        let mut np = NeuronParams::excitatory();
+        np.tau_c_ms = np.tau_m_ms; // τc == τm
+        let p = LifParams::new(&np);
+        let mut s = LifState::resting(&p);
+        s.v = -58.0;
+        s.c = 3.0;
+        let dt = 5.0;
+        let (ve, _) = euler(&p, s.v, s.c, dt, 2_000_000);
+        s.advance(&p, dt);
+        assert!((s.v - ve).abs() < 1e-4, "V exact {} vs euler {}", s.v, ve);
+    }
+
+    #[test]
+    fn decays_to_rest_without_input() {
+        let p = params();
+        let mut s = LifState::resting(&p);
+        s.v = -52.0;
+        s.advance(&p, 500.0);
+        assert!((s.v - p.e_rest).abs() < 1e-6);
+        assert!(s.c.abs() < 1e-9);
+    }
+
+    #[test]
+    fn spike_on_threshold_and_reset() {
+        let p = params();
+        let mut s = LifState::resting(&p);
+        // one huge jump crosses threshold
+        let spiked = s.inject(&p, 1.0, 20.0);
+        assert!(spiked);
+        assert_eq!(s.v, p.v_reset);
+        assert_eq!(s.c, p.alpha_c);
+        assert_eq!(s.refr_until, 1.0 + p.tau_arp);
+    }
+
+    #[test]
+    fn subthreshold_jump_accumulates() {
+        let p = params();
+        let mut s = LifState::resting(&p);
+        assert!(!s.inject(&p, 0.0, 5.0));
+        assert!((s.v - (p.e_rest + 5.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn refractory_discards_input() {
+        let p = params();
+        let mut s = LifState::resting(&p);
+        assert!(s.inject(&p, 1.0, 100.0)); // spike
+        // within τarp = 2 ms
+        assert!(!s.inject(&p, 2.0, 100.0));
+        // V unchanged by the discarded event apart from decay
+        assert!(s.v < p.v_theta);
+        // after refractory, input works again
+        assert!(s.inject(&p, 3.5, 100.0));
+    }
+
+    #[test]
+    fn adaptation_slows_firing() {
+        // constant drive: with SFA the inter-spike interval grows
+        // (strong g_c so the effect beats the 0.5 ms event quantization)
+        let mut np = NeuronParams::excitatory();
+        np.g_c_over_cm = 0.5;
+        let p = LifParams::new(&np);
+        let mut s = LifState::resting(&p);
+        let mut spike_times = Vec::new();
+        let mut t = 0.0;
+        while spike_times.len() < 8 {
+            t += 0.5;
+            if s.inject(&p, t, 2.0) {
+                spike_times.push(t);
+            }
+        }
+        let first_isi = spike_times[1] - spike_times[0];
+        let last_isi = spike_times[7] - spike_times[6];
+        assert!(
+            last_isi > first_isi,
+            "SFA must lengthen ISIs: first {first_isi} last {last_isi}"
+        );
+    }
+
+    #[test]
+    fn inhibitory_has_no_adaptation() {
+        let p = LifParams::new(&NeuronParams::inhibitory());
+        let mut s = LifState::resting(&p);
+        assert!(s.inject(&p, 1.0, 100.0));
+        assert_eq!(s.c, 0.0, "inhibitory α_c must be 0");
+        // ISIs stay constant under constant drive
+        let mut spike_times = vec![1.0];
+        let mut t = 1.0;
+        while spike_times.len() < 5 {
+            t += 0.5;
+            if s.inject(&p, t, 2.5) {
+                spike_times.push(t);
+            }
+        }
+        let isi1 = spike_times[2] - spike_times[1];
+        let isi2 = spike_times[4] - spike_times[3];
+        assert!((isi1 - isi2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn advance_is_composable() {
+        // advancing in two hops equals one hop (semigroup property)
+        let p = params();
+        Cases::new("advance composes", 100).run(|g| {
+            let mut a = LifState::resting(&p);
+            a.v = p.e_rest + g.rng.next_f64() * 10.0;
+            a.c = g.rng.next_f64() * 5.0;
+            let mut b = a;
+            let t1 = g.rng.next_f64() * 10.0;
+            let t2 = t1 + g.rng.next_f64() * 10.0;
+            a.advance(&p, t2);
+            b.advance(&p, t1);
+            b.advance(&p, t2);
+            g.assert_close(a.v, b.v, 1e-9, "V composes");
+            g.assert_close(a.c, b.c, 1e-12, "c composes");
+        });
+    }
+
+    #[test]
+    fn membrane_never_exceeds_threshold_after_inject() {
+        let p = params();
+        Cases::new("V stays below θ", 200).run(|g| {
+            let mut s = LifState::resting(&p);
+            let mut t = 0.0;
+            for _ in 0..50 {
+                t += g.rng.next_f64() * 2.0;
+                let j = (g.rng.next_f64() - 0.2) * 8.0;
+                s.inject(&p, t, j);
+                g.assert_true(s.v < p.v_theta, "V must be < θ after event handling");
+            }
+        });
+    }
+}

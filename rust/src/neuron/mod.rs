@@ -1,0 +1,5 @@
+//! Neuron models: LIF with spike-frequency adaptation (paper eqs. 1–2).
+
+pub mod lif;
+
+pub use lif::{LifParams, LifState};

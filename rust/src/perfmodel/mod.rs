@@ -1,0 +1,11 @@
+//! The virtual-cluster performance model: measured compute costs + exact
+//! communication topology + modeled InfiniBand/MPI constants → the
+//! paper's scaling and memory curves at up to 1024 ranks.
+
+pub mod ibparams;
+pub mod scaling;
+pub mod topology;
+
+pub use ibparams::ClusterParams;
+pub use scaling::{weak_scaling_series, Calibration, ModelPoint, ScalingModel};
+pub use topology::{comm_topology, CommTopology};

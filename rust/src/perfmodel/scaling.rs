@@ -1,0 +1,290 @@
+//! The virtual-cluster scaling model (DESIGN.md §7).
+//!
+//! Combines
+//!  * **measured** per-event compute cost — calibrated by running the
+//!    real engine (identical hot path) on this host,
+//!  * **exact** communication topology (peers, crossing traffic) from
+//!    `topology.rs`,
+//!  * **modeled** InfiniBand/MPI wire constants from `ibparams.rs`,
+//!
+//! into the paper's headline observable: elapsed time per equivalent
+//! synaptic event as a function of rank count (Figs. 5–8), plus the
+//! memory-per-synapse curve (Fig. 9).
+
+use crate::config::{ConnRule, SimConfig};
+use crate::connectivity::analytic::expected_counts;
+use crate::coordinator::{run_simulation, RunSummary};
+use crate::engine::RunOptions;
+use crate::geometry::Mapping;
+use crate::perfmodel::ibparams::ClusterParams;
+use crate::perfmodel::topology::comm_topology;
+
+/// Measured quantities feeding the model.
+#[derive(Clone, Copy, Debug)]
+pub struct Calibration {
+    /// CPU nanoseconds per equivalent synaptic event (the real engine's
+    /// pack+demux+dynamics path, single-core equivalent).
+    pub ns_per_event: f64,
+    /// Firing rate the calibrated network expressed [Hz].
+    pub rate_hz: f64,
+    /// Construction-peak bytes per synapse (measured).
+    pub peak_bytes_per_synapse: f64,
+}
+
+impl Calibration {
+    /// Run the real engine on a reduced grid and extract the costs.
+    /// `side` columns at full 1240 neurons/column keep per-synapse cache
+    /// behaviour realistic while fitting this host.
+    pub fn measure(rule: ConnRule, side: u32, duration_ms: f64) -> Calibration {
+        let mut cfg = match rule {
+            ConnRule::Gaussian => SimConfig::gaussian(side),
+            ConnRule::Exponential => SimConfig::exponential(side),
+        };
+        cfg.duration_ms = duration_ms;
+        cfg.ranks = 1;
+        let s = run_simulation(&cfg, &RunOptions::default());
+        Calibration::from_summary(&s)
+    }
+
+    pub fn from_summary(s: &RunSummary) -> Calibration {
+        Calibration {
+            ns_per_event: s.total_cpu_ns_per_event(),
+            rate_hz: s.firing_rate_hz(),
+            peak_bytes_per_synapse: s.peak_bytes_per_synapse(),
+        }
+    }
+}
+
+/// One modeled point of a scaling curve.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelPoint {
+    pub ranks: u32,
+    /// Elapsed ns per equivalent synaptic event (the paper's metric).
+    pub ns_per_event: f64,
+    /// Compute component (incl. straggler jitter) [ns/event].
+    pub compute_ns: f64,
+    /// Communication component [ns/event].
+    pub comm_ns: f64,
+    /// Equivalent synaptic events per simulated second (whole network).
+    pub events_per_s: f64,
+}
+
+/// The assembled model for one connectivity rule.
+#[derive(Clone, Debug)]
+pub struct ScalingModel {
+    pub cluster: ClusterParams,
+    pub cal: Calibration,
+}
+
+impl ScalingModel {
+    pub fn new(cluster: ClusterParams, cal: Calibration) -> Self {
+        ScalingModel { cluster, cal }
+    }
+
+    /// Equivalent synaptic events per simulated second for a config at
+    /// the calibrated firing rate.
+    pub fn events_per_s(&self, cfg: &SimConfig) -> f64 {
+        let counts = expected_counts(cfg);
+        counts.recurrent * self.cal.rate_hz
+            + counts.neurons as f64
+                * cfg.external.synapses_per_neuron as f64
+                * cfg.external.rate_hz
+    }
+
+    /// Model the paper's cost-per-event metric at `ranks`.
+    pub fn point(&self, cfg: &SimConfig, ranks: u32) -> ModelPoint {
+        let topo = comm_topology(cfg, ranks, Mapping::Block, self.cal.rate_hz);
+        let events_per_s = self.events_per_s(cfg);
+        let steps_per_s = 1000.0 / cfg.dt_ms;
+
+        // --- compute: busiest rank share × measured per-event cost,
+        // inflated by node-occupancy memory contention and the straggler
+        // (jitter) factor of barrier-synchronized steps ---
+        let imbalance = topo.max_columns as f64 / topo.mean_columns.max(1e-9);
+        // demux surcharge: per-axon-visit overhead. The single-rank
+        // calibration already contains one visit per spike with the
+        // whole fat synapse list behind it; distribution multiplies
+        // visits (one per rank the spike reaches) while thinning each
+        // visit's list, so the extra visits are charged here.
+        let baseline_visits = self.cal.rate_hz * cfg.grid.neurons() as f64 / ranks as f64;
+        let extra_visits = (topo.max_axon_visits_per_s - baseline_visits).max(0.0);
+        let demux_per_s = extra_visits * self.cluster.axon_visit_ns;
+        let compute_per_s = (events_per_s / ranks as f64 * imbalance * self.cal.ns_per_event
+            + demux_per_s)
+            * self.cluster.contention_factor(ranks)
+            * self.cluster.jitter_factor(ranks);
+
+        // --- communication, per simulated second, busiest rank ---
+        let peers = topo.max_peers as f64;
+        let f_inter = self.cluster.inter_node_fraction(ranks, peers.max(1.0));
+        let (n_intra, n_inter) = (peers * (1.0 - f_inter), peers * f_inter);
+        // step 1: one 8-byte counter to every connected peer, every step
+        let counters_per_s = steps_per_s * self.cluster.p2p_ns(n_intra, n_inter, 8.0);
+        // step 2: axonal payloads — messages only to peers with spikes
+        let sends_per_step = topo.max_axonal_sends_per_s / steps_per_s;
+        let msgs_per_step = peers.min(sends_per_step);
+        let bytes_per_msg = if msgs_per_step > 0.0 {
+            (sends_per_step * 8.0) / msgs_per_step
+        } else {
+            0.0
+        };
+        let payload_per_s = steps_per_s
+            * self.cluster.p2p_ns(
+                msgs_per_step * (1.0 - f_inter),
+                msgs_per_step * f_inter,
+                bytes_per_msg,
+            );
+        // O(P) collective software cost: two Alltoallv-class calls per
+        // time-driven step (counters + payloads)
+        let coll_per_s = steps_per_s * 2.0 * self.cluster.collective_ns(ranks);
+        let comm_per_s = counters_per_s + payload_per_s + coll_per_s;
+
+        ModelPoint {
+            ranks,
+            ns_per_event: (compute_per_s + comm_per_s) / events_per_s,
+            compute_ns: compute_per_s / events_per_s,
+            comm_ns: comm_per_s / events_per_s,
+            events_per_s,
+        }
+    }
+
+    /// Strong-scaling curve (Fig. 5 / Fig. 7).
+    pub fn strong_scaling(&self, cfg: &SimConfig, ranks: &[u32]) -> Vec<ModelPoint> {
+        ranks.iter().map(|&p| self.point(cfg, p)).collect()
+    }
+
+    /// Speed-up at `p` relative to the `p0` point (paper quotes vs 1 core
+    /// for 24²/48², vs 64 for 96²).
+    pub fn speedup(&self, cfg: &SimConfig, p0: u32, p: u32) -> f64 {
+        self.point(cfg, p0).ns_per_event / self.point(cfg, p).ns_per_event
+    }
+
+    /// Modeled memory per synapse at `ranks` (Fig. 9): measured
+    /// construction peak + MPI library allocation.
+    pub fn bytes_per_synapse(&self, cfg: &SimConfig, ranks: u32) -> f64 {
+        let topo = comm_topology(cfg, ranks, Mapping::Block, self.cal.rate_hz);
+        let synapses = expected_counts(cfg).recurrent;
+        let mpi_total = ranks as f64 * self.cluster.mpi_bytes_per_rank(topo.mean_peers);
+        self.cal.peak_bytes_per_synapse + mpi_total / synapses
+    }
+}
+
+/// Weak-scaling view: for a per-core workload W (synapses/core), the
+/// rank count each grid needs and the modeled time per event there.
+pub fn weak_scaling_series(
+    model: &ScalingModel,
+    cfgs: &[SimConfig],
+    syn_per_core: f64,
+) -> Vec<(u32, f64)> {
+    let mut out = Vec::new();
+    for cfg in cfgs {
+        let rec = expected_counts(cfg).recurrent;
+        let p = (rec / syn_per_core).round().max(1.0) as u32;
+        if p as u64 > cfg.grid.columns() {
+            continue; // cannot split finer than one column per rank
+        }
+        out.push((p, model.point(cfg, p).ns_per_event));
+    }
+    out.sort_unstable_by_key(|&(p, _)| p);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic_cal() -> Calibration {
+        Calibration { ns_per_event: 60.0, rate_hz: 7.5, peak_bytes_per_synapse: 28.0 }
+    }
+
+    fn model() -> ScalingModel {
+        ScalingModel::new(ClusterParams::default(), synthetic_cal())
+    }
+
+    #[test]
+    fn strong_scaling_is_monotone_and_subideal() {
+        let m = model();
+        let cfg = SimConfig::gaussian(24);
+        let pts = m.strong_scaling(&cfg, &[1, 2, 4, 8, 16, 32, 64, 96]);
+        for w in pts.windows(2) {
+            assert!(
+                w[1].ns_per_event < w[0].ns_per_event,
+                "more ranks must be faster: {:?} -> {:?}",
+                w[0],
+                w[1]
+            );
+        }
+        // sub-ideal: speedup at 96 below 96×, above 50% efficiency×96
+        let s = m.speedup(&cfg, 1, 96);
+        assert!(s < 96.0, "speedup {s} cannot beat ideal");
+        assert!(s > 48.0, "speedup {s} collapsed");
+    }
+
+    #[test]
+    fn paper_anchor_single_core_cost_matches_calibration() {
+        let m = model();
+        let cfg = SimConfig::gaussian(24);
+        let p1 = m.point(&cfg, 1);
+        // single rank: no peers and no jitter — the calibrated cost plus
+        // only the tiny single-slot collective overhead and the ~1/16
+        // node-occupancy contention
+        assert!((p1.ns_per_event - 60.0).abs() < 1.5, "{p1:?}");
+        assert!(p1.comm_ns < 0.01, "{p1:?}");
+    }
+
+    #[test]
+    fn exponential_costs_more_per_event_at_scale() {
+        // even with the SAME calibrated per-event compute cost, the
+        // longer-range rule pays more communication per event at high
+        // rank counts; the measured compute-cost difference (higher
+        // demux/queue pressure) comes on top in the real benches.
+        let m_g = model();
+        let mut cal_e = synthetic_cal();
+        cal_e.rate_hz = 35.0;
+        let m_e = ScalingModel::new(ClusterParams::default(), cal_e);
+        let g = m_g.point(&SimConfig::gaussian(24), 64);
+        let e = m_e.point(&SimConfig::exponential(24), 64);
+        // absolute comm time per simulated second (the O(P) collective
+        // part is identical, but the wider stencil adds peers + payload)
+        let g_abs = g.comm_ns * g.events_per_s;
+        let e_abs = e.comm_ns * e.events_per_s;
+        assert!(
+            e_abs > g_abs,
+            "exp comm {:.2e} ns/s must exceed gauss {:.2e} ns/s",
+            e_abs,
+            g_abs
+        );
+    }
+
+    #[test]
+    fn memory_grows_with_ranks_in_paper_band() {
+        let m = model();
+        let cfg = SimConfig::gaussian(24);
+        let b1 = m.bytes_per_synapse(&cfg, 1);
+        let b64 = m.bytes_per_synapse(&cfg, 64);
+        assert!(b64 > b1, "MPI buffers must grow the footprint: {b1} -> {b64}");
+        assert!(b1 > 26.0 && b1 < 32.0, "b1={b1}");
+        assert!(b64 < 40.0, "b64={b64}");
+    }
+
+    #[test]
+    fn weak_scaling_series_are_computed_per_workload() {
+        let m = model();
+        let cfgs = [SimConfig::gaussian(24), SimConfig::gaussian(48), SimConfig::gaussian(96)];
+        let series = weak_scaling_series(&m, &cfgs, 55.3e6);
+        assert_eq!(series.len(), 3);
+        // P grows with grid size at fixed workload/core
+        assert!(series[0].0 < series[1].0 && series[1].0 < series[2].0);
+        // 24² at 55.3M/core ⇒ ~16 ranks
+        assert!((series[0].0 as i64 - 16).unsigned_abs() <= 2, "{:?}", series);
+    }
+
+    #[test]
+    fn events_account_for_external_synapses() {
+        let m = model();
+        let cfg = SimConfig::gaussian(24);
+        let ev = m.events_per_s(&cfg);
+        let rec_only = expected_counts(&cfg).recurrent * 7.5;
+        assert!(ev > rec_only, "external events must contribute");
+    }
+}

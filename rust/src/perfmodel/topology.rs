@@ -1,0 +1,195 @@
+//! Exact communication-topology accounting for any rank count.
+//!
+//! Everything here is pure geometry — no network materialization — so it
+//! works at the paper's full scales (96×96 on 1024 ranks). For a given
+//! (grid, stencil, decomposition) it computes, per rank:
+//!
+//! * the connected-peer subset size (the §II-D "subset of processes to
+//!   be listened to"), which prices the per-step counter exchange and
+//!   the MPI buffer footprint (Fig. 9), and
+//! * the expected axonal-spike traffic crossing rank boundaries, which
+//!   prices the payload exchange.
+
+use crate::config::SimConfig;
+use crate::connectivity::analytic::mean_offset_prob;
+use crate::connectivity::rules::Stencil;
+use crate::geometry::{Decomposition, Grid, Mapping};
+
+/// Communication topology summary for one (config, ranks) point.
+#[derive(Clone, Debug)]
+pub struct CommTopology {
+    pub ranks: u32,
+    /// Max over ranks of the distinct peer count (excluding self).
+    pub max_peers: usize,
+    /// Mean peers per rank.
+    pub mean_peers: f64,
+    /// Expected axonal-spike *messages* leaving the busiest rank per
+    /// simulated second: Σ over its exc neurons of (firing rate ×
+    /// distinct remote ranks their stencil reaches).
+    pub max_axonal_sends_per_s: f64,
+    /// Expected remote synaptic events received by the busiest rank per
+    /// second (payload demux volume).
+    pub max_remote_events_per_s: f64,
+    /// Expected axon *visits* at the busiest rank per second: every
+    /// axonal spike received is one visit to that axon's local synapse
+    /// list (binary search + list-head cache miss). Longer-range rules
+    /// multiply visits: each spike is delivered to every rank its
+    /// stencil touches. Includes the rank's own spikes (self-delivery).
+    pub max_axon_visits_per_s: f64,
+    /// Max columns on a rank (load imbalance enters compute time).
+    pub max_columns: usize,
+    pub mean_columns: f64,
+}
+
+/// Compute the topology for `ranks` ranks (block mapping unless told
+/// otherwise). `rate_hz` is the expected network firing rate.
+pub fn comm_topology(
+    cfg: &SimConfig,
+    ranks: u32,
+    mapping: Mapping,
+    rate_hz: f64,
+) -> CommTopology {
+    let grid = Grid::new(cfg.grid);
+    let stencil = Stencil::remote(&cfg.conn, &grid);
+    let decomp = Decomposition::new(&grid, ranks, mapping);
+    let exc_pc = cfg.grid.exc_per_column() as f64;
+    let npc = cfg.grid.neurons_per_column as f64;
+
+    // per-offset expected pair probability (cached once)
+    let eps: Vec<f64> = stencil
+        .offsets
+        .iter()
+        .map(|o| mean_offset_prob(&cfg.conn, &grid, o.dx, o.dy))
+        .collect();
+
+    let r = ranks as usize;
+    let mut peer_sets: Vec<Vec<bool>> = vec![vec![false; r]; r];
+    let mut axonal_sends = vec![0.0f64; r];
+    let mut remote_events_in = vec![0.0f64; r];
+    let mut axon_visits_in = vec![0.0f64; r];
+
+    let mut remote_ranks_scratch: Vec<u32> = Vec::new();
+    for col in 0..grid.columns() {
+        let src_rank = decomp.rank_of_column(col) as usize;
+        remote_ranks_scratch.clear();
+        for (i, (tgt_col, _off)) in grid
+            .targets_of(col, &stencil.offsets.iter().map(|o| (o.dx, o.dy)).collect::<Vec<_>>())
+            .enumerate()
+        {
+            let _ = i;
+            let tgt_rank = decomp.rank_of_column(tgt_col) as usize;
+            if tgt_rank != src_rank {
+                peer_sets[src_rank][tgt_rank] = true;
+                if !remote_ranks_scratch.contains(&(tgt_rank as u32)) {
+                    remote_ranks_scratch.push(tgt_rank as u32);
+                }
+            }
+        }
+        // expected remote events: for each stencil offset landing on a
+        // different rank, events/s = exc_pc·rate · npc·E[p(offset)]
+        for (o, &ep) in stencil.offsets.iter().zip(&eps) {
+            let (cx, cy) = grid.column_coords(col);
+            let tx = cx as i64 + o.dx as i64;
+            let ty = cy as i64 + o.dy as i64;
+            if tx < 0 || ty < 0 || tx >= grid.p.nx as i64 || ty >= grid.p.ny as i64 {
+                continue;
+            }
+            let tgt_col = grid.column_index(tx as u32, ty as u32);
+            let tgt_rank = decomp.rank_of_column(tgt_col) as usize;
+            if tgt_rank != src_rank {
+                remote_events_in[tgt_rank] += exc_pc * rate_hz * npc * ep;
+            }
+        }
+        // axonal messages: every exc spike is sent once to each distinct
+        // remote rank the column's stencil reaches
+        axonal_sends[src_rank] += exc_pc * rate_hz * remote_ranks_scratch.len() as f64;
+        // axon visits: each delivery is one visit at the receiving rank,
+        // plus the self-delivery of every local spike (exc and inh)
+        for &tr in &remote_ranks_scratch {
+            axon_visits_in[tr as usize] += exc_pc * rate_hz;
+        }
+        axon_visits_in[src_rank] += npc * rate_hz;
+    }
+
+    let peers: Vec<usize> =
+        peer_sets.iter().map(|s| s.iter().filter(|&&b| b).count()).collect();
+    let cols: Vec<usize> = (0..ranks).map(|k| decomp.columns_of_rank(k).len()).collect();
+    CommTopology {
+        ranks,
+        max_peers: peers.iter().copied().max().unwrap_or(0),
+        mean_peers: peers.iter().sum::<usize>() as f64 / r as f64,
+        max_axonal_sends_per_s: axonal_sends.iter().cloned().fold(0.0, f64::max),
+        max_remote_events_per_s: remote_events_in.iter().cloned().fold(0.0, f64::max),
+        max_axon_visits_per_s: axon_visits_in.iter().cloned().fold(0.0, f64::max),
+        max_columns: cols.iter().copied().max().unwrap_or(0),
+        mean_columns: cols.iter().sum::<usize>() as f64 / r as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    #[test]
+    fn single_rank_has_no_peers() {
+        let cfg = SimConfig::gaussian(8);
+        let t = comm_topology(&cfg, 1, Mapping::Block, 7.5);
+        assert_eq!(t.max_peers, 0);
+        assert_eq!(t.max_axonal_sends_per_s, 0.0);
+        assert_eq!(t.max_remote_events_per_s, 0.0);
+        assert_eq!(t.max_columns, 64);
+    }
+
+    #[test]
+    fn peers_bounded_by_stencil_reach() {
+        // 24×24 on 16 ranks (6×6-column tiles): a 7×7 stencil (±3)
+        // reaches only adjacent tiles → ≤8 peers; a 21×21 (±10) reaches
+        // further → more peers.
+        let g = comm_topology(&SimConfig::gaussian(24), 16, Mapping::Block, 7.5);
+        assert!(g.max_peers <= 8, "gaussian peers {}", g.max_peers);
+        let e = comm_topology(&SimConfig::exponential(24), 16, Mapping::Block, 35.0);
+        assert!(e.max_peers > g.max_peers, "exp {} vs gauss {}", e.max_peers, g.max_peers);
+    }
+
+    #[test]
+    fn roundrobin_explodes_the_peer_count() {
+        let block = comm_topology(&SimConfig::gaussian(24), 64, Mapping::Block, 7.5);
+        let rr = comm_topology(&SimConfig::gaussian(24), 64, Mapping::RoundRobin, 7.5);
+        assert!(
+            rr.max_peers > block.max_peers * 2,
+            "round-robin {} should dwarf block {}",
+            rr.max_peers,
+            block.max_peers
+        );
+    }
+
+    #[test]
+    fn remote_traffic_grows_with_rank_count() {
+        let cfg = SimConfig::gaussian(24);
+        let t4 = comm_topology(&cfg, 4, Mapping::Block, 7.5);
+        let t64 = comm_topology(&cfg, 64, Mapping::Block, 7.5);
+        // more ranks ⇒ larger fraction of synapses cross boundaries, but
+        // each rank hosts fewer neurons; the *total* crossing events grow
+        let tot4 = t4.max_remote_events_per_s * 4.0;
+        let tot64 = t64.max_remote_events_per_s * 64.0;
+        assert!(tot64 > tot4, "crossing events: {tot4} vs {tot64}");
+    }
+
+    #[test]
+    fn exponential_crosses_more_than_gaussian() {
+        let g = comm_topology(&SimConfig::gaussian(24), 16, Mapping::Block, 7.5);
+        let e = comm_topology(&SimConfig::exponential(24), 16, Mapping::Block, 7.5);
+        assert!(e.max_remote_events_per_s > g.max_remote_events_per_s * 2.0);
+    }
+
+    #[test]
+    fn works_at_paper_scale_cheaply() {
+        // 96×96 on 1024 ranks — must run in well under a second
+        let cfg = SimConfig::exponential(96);
+        let t = comm_topology(&cfg, 1024, Mapping::Block, 35.0);
+        assert!(t.max_peers >= 8);
+        assert!(t.max_columns >= 9);
+        assert!((t.mean_columns - 9.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,78 @@
+//! Shared calibration cache: the scaling benches all need the measured
+//! per-event cost of each connectivity rule; measuring takes tens of
+//! seconds, so the first bench persists the numbers under `target/` and
+//! later benches (or CLI invocations) reuse them.
+//!
+//! Calibration size: `DPSNN_QUICK=1` (or --quick) uses a 6×6 grid and
+//! 60 ms — adequate for smoke runs; the default 8×8 grid / 100 ms keeps
+//! per-synapse cache behaviour representative (full 1240-neuron columns,
+//! ~1.2k synapses/neuron resident).
+
+use std::path::PathBuf;
+
+use crate::bench_harness::quick_mode;
+use crate::config::ConnRule;
+use crate::perfmodel::Calibration;
+
+fn cache_path(rule: ConnRule, quick: bool) -> PathBuf {
+    let tag = if quick { "quick" } else { "full" };
+    PathBuf::from(format!("target/dpsnn_calibration_{}_{tag}.txt", rule.name()))
+}
+
+fn parse(text: &str) -> Option<Calibration> {
+    let mut vals = text.split_whitespace().map(|t| t.parse::<f64>());
+    Some(Calibration {
+        ns_per_event: vals.next()?.ok()?,
+        rate_hz: vals.next()?.ok()?,
+        peak_bytes_per_synapse: vals.next()?.ok()?,
+    })
+}
+
+/// Measured calibration for a rule, cached across processes.
+pub fn cached_calibration(rule: ConnRule) -> Calibration {
+    let quick = quick_mode();
+    let path = cache_path(rule, quick);
+    if let Ok(text) = std::fs::read_to_string(&path) {
+        if let Some(cal) = parse(&text) {
+            eprintln!(
+                "[calibration] {} (cached): {:.0} ns/event, {:.1} Hz, {:.1} B/syn",
+                rule.name(),
+                cal.ns_per_event,
+                cal.rate_hz,
+                cal.peak_bytes_per_synapse
+            );
+            return cal;
+        }
+    }
+    let (side, ms) = if quick { (6, 60.0) } else { (8, 100.0) };
+    eprintln!("[calibration] measuring {} on {side}×{side}, {ms} ms ...", rule.name());
+    let cal = Calibration::measure(rule, side, ms);
+    eprintln!(
+        "[calibration] {}: {:.0} ns/event, {:.1} Hz, {:.1} B/syn",
+        rule.name(),
+        cal.ns_per_event,
+        cal.rate_hz,
+        cal.peak_bytes_per_synapse
+    );
+    let _ = std::fs::create_dir_all("target");
+    let _ = std::fs::write(
+        &path,
+        format!("{} {} {}", cal.ns_per_event, cal.rate_hz, cal.peak_bytes_per_synapse),
+    );
+    cal
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let c = parse("62.5 7.5 28.1").unwrap();
+        assert_eq!(c.ns_per_event, 62.5);
+        assert_eq!(c.rate_hz, 7.5);
+        assert_eq!(c.peak_bytes_per_synapse, 28.1);
+        assert!(parse("garbage").is_none());
+        assert!(parse("1.0 2.0").is_none());
+    }
+}

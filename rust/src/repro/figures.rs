@@ -1,0 +1,429 @@
+//! Table/figure regeneration functions (one per paper exhibit).
+//!
+//! Each returns the rendered report string. Scaling figures combine the
+//! measured per-event calibration (real engine, this host) with the
+//! virtual-cluster model (DESIGN.md §7). Event accounting uses the
+//! *paper's* firing rates (7.5 Hz Gaussian, ~35 Hz exponential, §IV-B):
+//! our affordable grids clip the 21×21 exponential stencil, so the
+//! emergent rate-regime shift cannot fully express on them; the paper's
+//! rates are the honest anchor for its own workloads (the measured rates
+//! are printed alongside). Absolute ns/event reflects this host's core,
+//! not 2015 Haswell — shapes and ratios are the reproduction target.
+
+use crate::config::{ConnRule, SimConfig};
+use crate::connectivity::analytic::{mean_offset_prob, table1_row};
+use crate::connectivity::rules::Stencil;
+use crate::geometry::Grid;
+use crate::perfmodel::{weak_scaling_series, Calibration, ClusterParams, ScalingModel};
+use crate::bench_harness::Table;
+
+/// Paper §IV-B firing rates used for event accounting.
+pub const PAPER_RATE_GAUSS_HZ: f64 = 7.5;
+pub const PAPER_RATE_EXP_HZ: f64 = 35.0;
+
+pub fn paper_rate(rule: ConnRule) -> f64 {
+    match rule {
+        ConnRule::Gaussian => PAPER_RATE_GAUSS_HZ,
+        ConnRule::Exponential => PAPER_RATE_EXP_HZ,
+    }
+}
+
+fn cfg_for(side: u32, rule: ConnRule) -> SimConfig {
+    match rule {
+        ConnRule::Gaussian => SimConfig::gaussian(side),
+        ConnRule::Exponential => SimConfig::exponential(side),
+    }
+}
+
+/// Build the scaling model for a rule from a (measured) calibration,
+/// anchoring the rate to the paper's regime.
+pub fn model_from(rule: ConnRule, measured: Calibration) -> ScalingModel {
+    let anchored = Calibration { rate_hz: paper_rate(rule), ..measured };
+    ScalingModel::new(ClusterParams::default(), anchored)
+}
+
+fn fmt_g(x: f64) -> String {
+    format!("{:.2} G", x / 1e9)
+}
+
+// ---------------------------------------------------------------- Table I
+
+/// Table I: problem sizes — analytic expectation vs the paper's numbers.
+pub fn table1_report() -> String {
+    let paper: [(u32, ConnRule, f64, f64, f64); 6] = [
+        (24, ConnRule::Gaussian, 0.7e6, 0.9e9, 1.2e9),
+        (48, ConnRule::Gaussian, 2.9e6, 3.5e9, 5.0e9),
+        (96, ConnRule::Gaussian, 11.4e6, 14.2e9, 20.4e9),
+        (24, ConnRule::Exponential, 0.7e6, 1.5e9, 1.8e9),
+        (48, ConnRule::Exponential, 2.9e6, 5.9e9, 7.4e9),
+        (96, ConnRule::Exponential, 11.4e6, 23.4e9, 29.6e9),
+    ];
+    let mut t = Table::new(&[
+        "grid", "rule", "columns", "neurons", "recurrent(paper)", "recurrent(ours)",
+        "total(paper)", "total(ours)", "err%",
+    ]);
+    for (side, rule, _n, rec_p, tot_p) in paper {
+        let row = table1_row(side, rule);
+        let err = (row.total - tot_p).abs() / tot_p * 100.0;
+        t.row(&[
+            format!("{side}x{side}"),
+            rule.name().into(),
+            format!("{}", side as u64 * side as u64),
+            format!("{:.1} M", row.neurons as f64 / 1e6),
+            fmt_g(rec_p),
+            fmt_g(row.recurrent),
+            fmt_g(tot_p),
+            fmt_g(row.total),
+            format!("{err:.1}"),
+        ]);
+    }
+    let mut out = String::from("Table I - problem sizes (expected counts vs paper)\n");
+    out.push_str(&t.render());
+    let g = table1_row(24, ConnRule::Gaussian);
+    let e = table1_row(24, ConnRule::Exponential);
+    out.push_str(&format!(
+        "\nper-neuron (bulk): gaussian {:.0} local + {:.0} remote ({:.0}% remote; paper ~990 + ~250, ~20%)\n",
+        g.local_per_neuron, g.remote_per_neuron_bulk, g.remote_fraction_bulk * 100.0
+    ));
+    out.push_str(&format!(
+        "                   exponential {:.0} local + {:.0} remote ({:.0}% remote; paper ~990 + ~1400, ~59%)\n",
+        e.local_per_neuron, e.remote_per_neuron_bulk, e.remote_fraction_bulk * 100.0
+    ));
+    out
+}
+
+// ----------------------------------------------------------------- Fig. 2
+
+/// Fig. 2: synapses (thousands) projected by the excitatory population
+/// of one column into each column of its stencil.
+pub fn fig2_report() -> String {
+    let mut out = String::from(
+        "Fig. 2 - lateral projection stencils (synapses in thousands from one column's\n\
+         excitatory population; paper: 7x7 Gaussian ~250/neuron, 21x21 exponential ~1400/neuron)\n\n",
+    );
+    for rule in [ConnRule::Gaussian, ConnRule::Exponential] {
+        let cfg = cfg_for(24, rule);
+        let grid = Grid::new(cfg.grid);
+        let stencil = Stencil::remote(&cfg.conn, &grid);
+        let m = (stencil.bbox_side as i32 - 1) / 2;
+        let exc = cfg.grid.exc_per_column() as f64;
+        let npc = cfg.grid.neurons_per_column as f64;
+        out.push_str(&format!(
+            "{} (A={}, {}={} um): {}x{} stencil\n",
+            rule.name(),
+            cfg.conn.amplitude,
+            if rule == ConnRule::Gaussian { "sigma" } else { "lambda" },
+            if rule == ConnRule::Gaussian { cfg.conn.sigma_um } else { cfg.conn.lambda_um },
+            stencil.bbox_side,
+            stencil.bbox_side
+        ));
+        let mut total = 0.0;
+        for dy in -m..=m {
+            for dx in -m..=m {
+                let k = if dx == 0 && dy == 0 {
+                    // local: all 1240 neurons at p_local (for the map we
+                    // show the column's own projections)
+                    npc * (npc - 1.0) * cfg.conn.local_prob / 1000.0
+                } else if stencil.offsets.iter().any(|o| (o.dx, o.dy) == (dx, dy)) {
+                    let ep = mean_offset_prob(&cfg.conn, &grid, dx, dy);
+                    exc * npc * ep / 1000.0
+                } else {
+                    0.0
+                };
+                if !(dx == 0 && dy == 0) {
+                    total += k;
+                }
+                out.push_str(&(if k == 0.0 {
+                    "    .".to_string()
+                } else if k >= 100.0 {
+                    format!("{k:5.0}")
+                } else {
+                    format!("{k:5.1}")
+                }));
+            }
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "remote synapses from the column: {:.0} k  (= {:.0}/neuron avg; paper ~{})\n\n",
+            total,
+            total * 1000.0 / npc,
+            if rule == ConnRule::Gaussian { 250 } else { 1400 }
+        ));
+    }
+    out
+}
+
+// ----------------------------------------------------------------- Fig. 5
+
+fn ranks_for(side: u32) -> Vec<u32> {
+    match side {
+        24 => vec![1, 2, 4, 8, 16, 32, 64, 96],
+        48 => vec![4, 8, 16, 32, 64, 96, 128, 256],
+        96 => vec![64, 128, 256, 512, 1024],
+        _ => vec![1, 2, 4, 8],
+    }
+}
+
+/// Fig. 5: strong scaling, Gaussian connectivity (three grids).
+pub fn fig5_report(cal: Calibration) -> String {
+    let model = model_from(ConnRule::Gaussian, cal);
+    let mut out = String::from(
+        "Fig. 5 - strong scaling, Gaussian connectivity (modeled cluster; measured\n\
+         per-event compute cost, see DESIGN.md par.7)\n\n",
+    );
+    let mut t = Table::new(&["grid", "procs", "ns/event", "compute", "comm", "speedup", "ideal"]);
+    for side in [24u32, 48, 96] {
+        let cfg = cfg_for(side, ConnRule::Gaussian);
+        let ranks = ranks_for(side);
+        let base = model.point(&cfg, ranks[0]);
+        for &p in &ranks {
+            let pt = model.point(&cfg, p);
+            t.row(&[
+                format!("{side}x{side}"),
+                p.to_string(),
+                format!("{:.2}", pt.ns_per_event),
+                format!("{:.2}", pt.compute_ns),
+                format!("{:.2}", pt.comm_ns),
+                format!("{:.1}", base.ns_per_event / pt.ns_per_event),
+                format!("{:.0}", p as f64 / ranks[0] as f64),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    // paper anchors
+    let m24 = model.speedup(&cfg_for(24, ConnRule::Gaussian), 1, 96);
+    let m48 = model.speedup(&cfg_for(48, ConnRule::Gaussian), 4, 256);
+    let m96 = model.speedup(&cfg_for(96, ConnRule::Gaussian), 64, 1024);
+    out.push_str(&format!(
+        "\nspeedup anchors vs paper:\n\
+         \x20 24x24 1->96 cores:   {m24:.1}x of ideal 96   (paper 67.3)\n\
+         \x20 48x48 4->256 cores:  {m48:.1}x of ideal 64   (paper 54.2 'vs ideal 96')\n\
+         \x20 96x96 64->1024:      {m96:.1}x of ideal 16   (paper 10.8)\n",
+    ));
+    out
+}
+
+// ----------------------------------------------------------------- Fig. 6
+
+/// Fig. 6: weak scaling, Gaussian (six workloads per core).
+pub fn fig6_report(cal: Calibration) -> String {
+    let model = model_from(ConnRule::Gaussian, cal);
+    let cfgs =
+        [cfg_for(24, ConnRule::Gaussian), cfg_for(48, ConnRule::Gaussian), cfg_for(96, ConnRule::Gaussian)];
+    let workloads = [13.8e6, 27.7e6, 36.9e6, 55.3e6, 73.8e6, 110.7e6];
+    let mut out = String::from(
+        "Fig. 6 - weak scaling, Gaussian (constant synapses/core; ideal = flat lines;\n\
+         paper efficiency 72% at 110.7M/core down to 54% at 13.8M/core)\n\n",
+    );
+    let mut t = Table::new(&["syn/core", "procs", "ns/event", "wall s/sim-s", "efficiency%"]);
+    for &w in &workloads {
+        let series = weak_scaling_series(&model, &cfgs, w);
+        if series.is_empty() {
+            continue;
+        }
+        // weak scaling: total wall time per simulated second is
+        // T(P) = ns/event x total events/s, and total events grow with P
+        // at fixed synapses/core - ideal weak scaling keeps T flat, so
+        // efficiency = T(P0)/T(P) = (ns0 x P0)/(ns x P).
+        let (p0, ns0) = series[0];
+        for &(p, ns) in &series {
+            let wall = ns * (w * PAPER_RATE_GAUSS_HZ) * p as f64 / 1e9;
+            let eff = (ns0 * p0 as f64) / (ns * p as f64) * 100.0;
+            t.row(&[
+                format!("{:.1} M", w / 1e6),
+                p.to_string(),
+                format!("{ns:.2}"),
+                format!("{wall:.2}"),
+                format!("{eff:.0}"),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    out
+}
+
+// ----------------------------------------------------------------- Fig. 7
+
+/// Fig. 7: strong-scaling overlay, exponential vs Gaussian (24², 48²).
+pub fn fig7_report(cal_g: Calibration, cal_e: Calibration) -> String {
+    let mg = model_from(ConnRule::Gaussian, cal_g);
+    let me = model_from(ConnRule::Exponential, cal_e);
+    let mut out = String::from(
+        "Fig. 7 - impact of lateral connectivity: time per synaptic event,\n\
+         Gaussian (circles in the paper) vs exponential (diamonds)\n\n",
+    );
+    let mut t = Table::new(&["grid", "procs", "gauss ns/ev", "exp ns/ev", "ratio"]);
+    for side in [24u32, 48] {
+        let cg = cfg_for(side, ConnRule::Gaussian);
+        let ce = cfg_for(side, ConnRule::Exponential);
+        for &p in &ranks_for(side) {
+            let g = mg.point(&cg, p);
+            let e = me.point(&ce, p);
+            t.row(&[
+                format!("{side}x{side}"),
+                p.to_string(),
+                format!("{:.2}", g.ns_per_event),
+                format!("{:.2}", e.ns_per_event),
+                format!("{:.2}", e.ns_per_event / g.ns_per_event),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    let e24 = me.speedup(&cfg_for(24, ConnRule::Exponential), 1, 96) / 96.0;
+    let e48 = me.speedup(&cfg_for(48, ConnRule::Exponential), 4, 96) / 24.0;
+    out.push_str(&format!(
+        "\nexponential scaling efficiency @96 cores: 24x24 {:.0}% (paper 79%), 48x48 {:.0}% (paper 83%)\n",
+        e24 * 100.0,
+        e48 * 100.0
+    ));
+    out
+}
+
+// ----------------------------------------------------------------- Fig. 8
+
+/// Fig. 8: slowdown of the exponential rule per synaptic event
+/// (paper: 1.9–2.3× over the Gaussian rule).
+pub fn fig8_report(cal_g: Calibration, cal_e: Calibration) -> String {
+    let mg = model_from(ConnRule::Gaussian, cal_g);
+    let me = model_from(ConnRule::Exponential, cal_e);
+    let mut out = String::from(
+        "Fig. 8 - normalized cost ratio exponential/Gaussian per synaptic event\n\
+         (paper: 1.9-2.3x; raw compute-cost ratio measured on this host shown too)\n\n",
+    );
+    let mut t = Table::new(&["grid", "procs", "ratio"]);
+    let mut ratios = Vec::new();
+    for side in [24u32, 48] {
+        let cg = cfg_for(side, ConnRule::Gaussian);
+        let ce = cfg_for(side, ConnRule::Exponential);
+        for &p in &ranks_for(side) {
+            let r = me.point(&ce, p).ns_per_event / mg.point(&cg, p).ns_per_event;
+            ratios.push(r);
+            t.row(&[format!("{side}x{side}"), p.to_string(), format!("{r:.2}")]);
+        }
+    }
+    out.push_str(&t.render());
+    let min = ratios.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = ratios.iter().cloned().fold(0.0, f64::max);
+    out.push_str(&format!(
+        "\nratio range: {min:.2} - {max:.2}  (paper: 1.9 - 2.3)\n\
+         measured compute-only ratio: {:.2} (cal: exp {:.0} ns/ev / gauss {:.0} ns/ev)\n",
+        cal_e.ns_per_event / cal_g.ns_per_event,
+        cal_e.ns_per_event,
+        cal_g.ns_per_event
+    ));
+    out
+}
+
+// ----------------------------------------------------------------- Fig. 9
+
+/// Fig. 9: memory per synapse vs MPI processes.
+pub fn fig9_report(cal_g: Calibration, cal_e: Calibration) -> String {
+    let mut out = String::from(
+        "Fig. 9 - memory occupation [bytes/synapse] (paper band: 26-34 B/synapse,\n\
+         growing with processes due to MPI library buffers)\n\n",
+    );
+    let mut t = Table::new(&["grid", "rule", "procs", "B/synapse"]);
+    for (rule, cal) in [(ConnRule::Gaussian, cal_g), (ConnRule::Exponential, cal_e)] {
+        let model = model_from(rule, cal);
+        for side in [24u32, 48, 96] {
+            if rule == ConnRule::Exponential && side == 96 {
+                continue; // paper measured exponential on 24² and 48² only
+            }
+            let cfg = cfg_for(side, rule);
+            for &p in &ranks_for(side) {
+                t.row(&[
+                    format!("{side}x{side}"),
+                    rule.name().into(),
+                    p.to_string(),
+                    format!("{:.1}", model.bytes_per_synapse(&cfg, p)),
+                ]);
+            }
+        }
+    }
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "\nmeasured construction peak on this host: gaussian {:.1}, exponential {:.1} B/synapse\n\
+         (resident store is 12 B/synapse as in the paper; peak adds the construction\n\
+         transient and delay-queue population, model adds MPI allocation vs procs)\n",
+        cal_g.peak_bytes_per_synapse, cal_e.peak_bytes_per_synapse
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cal(rule: ConnRule) -> Calibration {
+        match rule {
+            ConnRule::Gaussian => Calibration {
+                ns_per_event: 130.0,
+                rate_hz: 11.0,
+                peak_bytes_per_synapse: 30.0,
+            },
+            ConnRule::Exponential => Calibration {
+                ns_per_event: 200.0,
+                rate_hz: 12.0,
+                peak_bytes_per_synapse: 32.0,
+            },
+        }
+    }
+
+    #[test]
+    fn table1_within_paper_rounding() {
+        let r = table1_report();
+        assert!(r.contains("24x24"));
+        assert!(r.contains("96x96"));
+        // every error column < 15% (skip title, header, separator lines)
+        for line in r.lines().skip(3).take(6) {
+            let err: f64 = line.split_whitespace().last().unwrap().parse().unwrap();
+            assert!(err < 15.0, "row error {err}%: {line}");
+        }
+    }
+
+    #[test]
+    fn fig2_shows_both_stencils() {
+        let r = fig2_report();
+        assert!(r.contains("7x7 stencil"));
+        assert!(r.contains("21x21 stencil"));
+    }
+
+    #[test]
+    fn fig5_has_all_grid_series() {
+        let r = fig5_report(cal(ConnRule::Gaussian));
+        assert!(r.contains("24x24") && r.contains("48x48") && r.contains("96x96"));
+        assert!(r.contains("1024"));
+    }
+
+    #[test]
+    fn fig8_ratio_lands_in_paper_band() {
+        let r = fig8_report(cal(ConnRule::Gaussian), cal(ConnRule::Exponential));
+        // extract the ratio range line
+        let line = r.lines().find(|l| l.starts_with("ratio range")).unwrap();
+        let nums: Vec<f64> = line
+            .split(|c: char| !c.is_ascii_digit() && c != '.')
+            .filter(|s| !s.is_empty())
+            .filter_map(|s| s.parse().ok())
+            .collect();
+        let (min, max) = (nums[0], nums[1]);
+        assert!(min > 1.2 && max < 3.5, "ratio band {min}-{max} vs paper 1.9-2.3");
+    }
+
+    #[test]
+    fn fig9_values_in_plausible_band() {
+        let r = fig9_report(cal(ConnRule::Gaussian), cal(ConnRule::Exponential));
+        for line in r.lines().filter(|l| l.contains("gaussian") || l.contains("exponential")) {
+            if let Some(v) = line.split_whitespace().last().and_then(|s| s.parse::<f64>().ok())
+            {
+                assert!(v > 20.0 && v < 60.0, "B/synapse {v} out of band: {line}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig6_efficiencies_degrade_with_smaller_workload() {
+        let r = fig6_report(cal(ConnRule::Gaussian));
+        assert!(r.contains("13.8 M"));
+        assert!(r.contains("110.7 M"));
+    }
+}

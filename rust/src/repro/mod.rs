@@ -1,0 +1,10 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (the experiment index of DESIGN.md §5). The `cargo bench` targets and
+//! the `dpsnn` CLI subcommands are thin wrappers over these functions,
+//! each of which returns the printed report so tests can assert on it.
+
+pub mod calibration_cache;
+pub mod figures;
+
+pub use calibration_cache::cached_calibration;
+pub use figures::*;

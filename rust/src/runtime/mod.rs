@@ -1,0 +1,10 @@
+//! PJRT runtime: loads AOT-compiled HLO artifacts (L2 JAX model wrapping
+//! the L1 Pallas kernel) and exposes the batched neuron solver used by
+//! the engine's `--solver xla` path. Python never runs at simulation
+//! time.
+
+pub mod batch;
+pub mod pjrt;
+
+pub use batch::BatchSolver;
+pub use pjrt::{Executable, Runtime};

@@ -1,0 +1,149 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Interchange is HLO *text* — jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that the crate's xla_extension 0.5.1 rejects,
+//! while the text parser reassigns ids (see /opt/xla-example/README.md).
+//! Python runs only at build time (`make artifacts`); this module is the
+//! only bridge the simulation hot path uses.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Directory holding `*.hlo.txt` artifacts (overridable for tests).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("DPSNN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Lazily-created process-wide PJRT CPU client.
+///
+/// PJRT clients are heavyweight; all executables share one.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+
+    /// Load `artifacts/<name>.hlo.txt`.
+    pub fn load_artifact(&self, name: &str) -> Result<Executable> {
+        let path = artifacts_dir().join(format!("{name}.hlo.txt"));
+        anyhow::ensure!(
+            path.exists(),
+            "artifact {} not found — run `make artifacts` first",
+            path.display()
+        );
+        self.load_hlo_text(&path)
+    }
+}
+
+/// A compiled computation ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with literal inputs; returns the tuple of output literals
+    /// (artifacts are lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching output of {}", self.name))?;
+        out.to_tuple().context("untupling output")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Artifacts exist only after `make artifacts`; most runtime tests
+    /// skip gracefully so `cargo test` works standalone, while `make
+    /// test` (which builds artifacts first) exercises them for real.
+    pub fn artifacts_available() -> bool {
+        artifacts_dir().join("lif_step_1024.hlo.txt").exists()
+    }
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        assert!(rt.platform().to_lowercase().contains("cpu"), "platform {}", rt.platform());
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let rt = Runtime::cpu().unwrap();
+        let err = match rt.load_artifact("definitely_not_there") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn loads_and_runs_lif_artifact() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_artifact("lif_step_1024").unwrap();
+        let n = 1024usize;
+        let zeros = vec![0.0f32; n];
+        let v = xla::Literal::vec1(&vec![-65.0f32; n]);
+        let c = xla::Literal::vec1(&zeros);
+        let refr = xla::Literal::vec1(&zeros);
+        let j = xla::Literal::vec1(&zeros);
+        let em = xla::Literal::vec1(&vec![0.951229f32; n]); // exp(-1/20)
+        let ec = xla::Literal::vec1(&vec![0.996672f32; n]);
+        let kf = xla::Literal::vec1(&vec![0.0f32; n]);
+        let alpha = xla::Literal::vec1(&vec![1.0f32; n]);
+        let scalars = [
+            xla::Literal::scalar(-65.0f32), // e_rest
+            xla::Literal::scalar(-50.0f32), // v_theta
+            xla::Literal::scalar(-60.0f32), // v_reset
+            xla::Literal::scalar(2.0f32),   // tau_arp
+            xla::Literal::scalar(1.0f32),   // dt
+        ];
+        let mut inputs = vec![v, c, refr, j, em, ec, kf, alpha];
+        inputs.extend(scalars);
+        let out = exe.run(&inputs).unwrap();
+        assert_eq!(out.len(), 4, "v', c', refr', spikes");
+        let v1 = out[0].to_vec::<f32>().unwrap();
+        // resting neuron with no input stays at rest
+        assert!((v1[0] + 65.0).abs() < 1e-4, "v'={}", v1[0]);
+    }
+}

@@ -1,0 +1,5 @@
+//! External (thalamo-cortical) Poisson stimulus.
+
+pub mod poisson;
+
+pub use poisson::{ExternalEvent, ExternalStimulus};

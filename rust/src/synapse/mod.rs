@@ -1,0 +1,8 @@
+//! Synapse storage (12 B/synapse SoA database keyed by incoming axon)
+//! and the per-timestep delay queues.
+
+pub mod delay_queue;
+pub mod storage;
+
+pub use delay_queue::{DelayQueue, PendingEvent};
+pub use storage::{SynapseStore, WireSynapse};

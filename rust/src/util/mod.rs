@@ -1,0 +1,9 @@
+//! Foundation substrates: PRNG, statistics, timers, heap accounting and a
+//! tiny property-testing harness. Everything here is dependency-free (the
+//! offline image vendors no rand/criterion/proptest crates).
+
+pub mod memtrack;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod timer;

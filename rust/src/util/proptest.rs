@@ -1,0 +1,119 @@
+//! Minimal property-based testing helper (no external proptest crate is
+//! available offline). Provides seeded case generation with automatic
+//! failure reporting of the seed, so failures are reproducible.
+//!
+//! Usage (no_run in doctests: the PJRT runtime rpath is not applied
+//! to rustdoc binaries):
+//! ```no_run
+//! use dpsnn::util::proptest::Cases;
+//! Cases::new("addition commutes", 200).run(|g| {
+//!     let a = g.rng.next_below(1000) as i64;
+//!     let b = g.rng.next_below(1000) as i64;
+//!     g.assert_eq(a + b, b + a, "a+b == b+a");
+//! });
+//! ```
+
+use crate::util::prng::Pcg64;
+
+/// One generated test case: RNG plus assertion context.
+pub struct CaseCtx {
+    pub rng: Pcg64,
+    pub case_index: u64,
+    name: &'static str,
+    seed: u64,
+}
+
+impl CaseCtx {
+    fn fail(&self, msg: &str) -> ! {
+        panic!(
+            "property '{}' failed on case {} (seed {}): {}",
+            self.name, self.case_index, self.seed, msg
+        );
+    }
+
+    pub fn assert_true(&self, cond: bool, what: &str) {
+        if !cond {
+            self.fail(what);
+        }
+    }
+
+    pub fn assert_eq<T: PartialEq + std::fmt::Debug>(&self, a: T, b: T, what: &str) {
+        if a != b {
+            self.fail(&format!("{what}: {a:?} != {b:?}"));
+        }
+    }
+
+    pub fn assert_close(&self, a: f64, b: f64, tol: f64, what: &str) {
+        if !((a - b).abs() <= tol || (a.is_nan() && b.is_nan())) {
+            self.fail(&format!("{what}: |{a} - {b}| > {tol}"));
+        }
+    }
+}
+
+/// A named property checked over many seeded cases.
+pub struct Cases {
+    name: &'static str,
+    count: u64,
+    seed: u64,
+}
+
+impl Cases {
+    pub fn new(name: &'static str, count: u64) -> Self {
+        // Honor DPSNN_PROPTEST_SEED for reproduction of reported failures.
+        let seed = std::env::var("DPSNN_PROPTEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xD5EE_D000);
+        Cases { name, count, seed }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn run(&self, mut prop: impl FnMut(&mut CaseCtx)) {
+        for i in 0..self.count {
+            let mut ctx = CaseCtx {
+                rng: Pcg64::for_entity(self.seed, i, 0xCA5E),
+                case_index: i,
+                name: self.name,
+                seed: self.seed,
+            };
+            prop(&mut ctx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        Cases::new("trivial", 50).run(|g| {
+            let x = g.rng.next_f64();
+            g.assert_true((0.0..1.0).contains(&x), "uniform in range");
+            ran += 1;
+        });
+        assert_eq!(ran, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn failing_property_reports_seed() {
+        Cases::new("must fail", 10).run(|g| {
+            g.assert_true(g.case_index < 3, "only three cases allowed");
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic_for_fixed_seed() {
+        let mut first = Vec::new();
+        Cases::new("det", 5).with_seed(7).run(|g| first.push(g.rng.next_u64()));
+        let mut second = Vec::new();
+        Cases::new("det", 5).with_seed(7).run(|g| second.push(g.rng.next_u64()));
+        assert_eq!(first, second);
+    }
+}

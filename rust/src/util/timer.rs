@@ -1,0 +1,170 @@
+//! Wall-clock and per-thread CPU-time measurement.
+//!
+//! The scaling methodology (DESIGN.md §7) measures *per-rank CPU time* —
+//! ranks are threads multiplexed on however many host cores exist, so
+//! wall-clock time of a rank says nothing; `CLOCK_THREAD_CPUTIME_ID`
+//! gives the compute time that rank would have spent on a dedicated core,
+//! which is what the virtual-cluster performance model consumes.
+
+use std::time::Instant;
+
+/// Nanoseconds of CPU time consumed by the *calling thread* so far.
+pub fn thread_cputime_ns() -> u64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: clock_gettime with a valid clock id and out-pointer.
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    debug_assert_eq!(rc, 0);
+    ts.tv_sec as u64 * 1_000_000_000 + ts.tv_nsec as u64
+}
+
+/// Nanoseconds of CPU time consumed by the whole process so far.
+pub fn process_cputime_ns() -> u64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: as above.
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_PROCESS_CPUTIME_ID, &mut ts) };
+    debug_assert_eq!(rc, 0);
+    ts.tv_sec as u64 * 1_000_000_000 + ts.tv_nsec as u64
+}
+
+/// A stopwatch that accumulates thread-CPU nanoseconds across start/stop
+/// intervals. Used per simulation phase (dynamics, packing, exchange...).
+#[derive(Clone, Debug, Default)]
+pub struct CpuStopwatch {
+    accum_ns: u64,
+    started_at: Option<u64>,
+}
+
+impl CpuStopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn start(&mut self) {
+        debug_assert!(self.started_at.is_none(), "stopwatch already running");
+        self.started_at = Some(thread_cputime_ns());
+    }
+
+    #[inline]
+    pub fn stop(&mut self) {
+        let t0 = self.started_at.take().expect("stopwatch not running");
+        self.accum_ns += thread_cputime_ns().saturating_sub(t0);
+    }
+
+    pub fn ns(&self) -> u64 {
+        self.accum_ns
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.accum_ns as f64 * 1e-9
+    }
+
+    pub fn reset(&mut self) {
+        self.accum_ns = 0;
+        self.started_at = None;
+    }
+}
+
+/// Wall-clock stopwatch with the same interface.
+#[derive(Clone, Debug)]
+pub struct WallStopwatch {
+    accum_ns: u64,
+    started_at: Option<Instant>,
+}
+
+impl Default for WallStopwatch {
+    fn default() -> Self {
+        WallStopwatch { accum_ns: 0, started_at: None }
+    }
+}
+
+impl WallStopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn start(&mut self) {
+        self.started_at = Some(Instant::now());
+    }
+
+    #[inline]
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started_at.take() {
+            self.accum_ns += t0.elapsed().as_nanos() as u64;
+        }
+    }
+
+    pub fn ns(&self) -> u64 {
+        self.accum_ns
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.accum_ns as f64 * 1e-9
+    }
+}
+
+/// Format a nanosecond quantity with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.2} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_cputime_advances_with_work() {
+        let t0 = thread_cputime_ns();
+        let mut acc = 0u64;
+        for i in 0..2_000_000u64 {
+            acc = acc.wrapping_add(i.wrapping_mul(i));
+        }
+        std::hint::black_box(acc);
+        let t1 = thread_cputime_ns();
+        assert!(t1 > t0, "cpu time must advance: {t0} -> {t1}");
+    }
+
+    #[test]
+    fn thread_cputime_ignores_sleep() {
+        let t0 = thread_cputime_ns();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let t1 = thread_cputime_ns();
+        // sleeping burns (almost) no CPU
+        assert!(t1 - t0 < 20_000_000, "sleep burned {} ns of cpu", t1 - t0);
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = CpuStopwatch::new();
+        sw.start();
+        let mut acc = 0u64;
+        for i in 0..500_000u64 {
+            acc = acc.wrapping_add(i);
+        }
+        std::hint::black_box(acc);
+        sw.stop();
+        let first = sw.ns();
+        sw.start();
+        sw.stop();
+        assert!(sw.ns() >= first);
+        sw.reset();
+        assert_eq!(sw.ns(), 0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,66 @@
+//! Integration: the distributed network (synapses, stimulus, spike
+//! trains, metrics) is a pure function of the global seed — independent
+//! of rank count, mapping strategy and delivery protocol.
+
+use dpsnn::config::SimConfig;
+use dpsnn::coordinator::run_simulation;
+use dpsnn::engine::RunOptions;
+use dpsnn::geometry::Mapping;
+
+fn cfg(ranks: u32) -> SimConfig {
+    let mut c = SimConfig::test_small();
+    c.duration_ms = 50.0;
+    c.external.synapses_per_neuron = 100;
+    c.external.rate_hz = 30.0;
+    c.ranks = ranks;
+    c
+}
+
+#[test]
+fn activity_identical_across_rank_counts_and_mappings() {
+    let mut reference: Option<Vec<Vec<u32>>> = None;
+    for (ranks, mapping) in
+        [(1, Mapping::Block), (2, Mapping::Block), (4, Mapping::Block), (4, Mapping::RoundRobin)]
+    {
+        let opts = RunOptions { mapping, record_activity: true, ..Default::default() };
+        let s = run_simulation(&cfg(ranks), &opts);
+        assert!(s.spikes() > 0);
+        match &reference {
+            None => reference = Some(s.activity),
+            Some(r) => assert_eq!(
+                r, &s.activity,
+                "activity differs at ranks={ranks} mapping={mapping:?}"
+            ),
+        }
+    }
+}
+
+#[test]
+fn naive_delivery_matches_two_step_protocol() {
+    let two_step = run_simulation(
+        &cfg(3),
+        &RunOptions { record_activity: true, ..Default::default() },
+    );
+    let naive = run_simulation(
+        &cfg(3),
+        &RunOptions { record_activity: true, naive_delivery: true, ..Default::default() },
+    );
+    assert_eq!(two_step.activity, naive.activity);
+    // but the naive protocol moves messages between every pair each step
+    let naive_msgs: u64 = naive.reports.iter().map(|r| r.spike_payload_msgs).sum();
+    let two_msgs: u64 = two_step.reports.iter().map(|r| r.spike_payload_msgs).sum();
+    assert!(
+        naive_msgs >= two_msgs,
+        "two-step should not send more payload messages: {two_msgs} vs {naive_msgs}"
+    );
+}
+
+#[test]
+fn different_seeds_give_different_networks() {
+    let a = run_simulation(&cfg(2), &RunOptions::default());
+    let mut c2 = cfg(2);
+    c2.seed = 777;
+    let b = run_simulation(&c2, &RunOptions::default());
+    assert_ne!(a.spikes(), b.spikes());
+    assert_ne!(a.synapses(), b.synapses());
+}

@@ -1,0 +1,73 @@
+//! Integration: the XLA batched solver (L1 Pallas kernel → HLO artifact
+//! → PJRT) drives the full distributed engine end-to-end, and its
+//! network statistics agree with the exact event-driven solver.
+//!
+//! The batched path aggregates each step's events into one jump, so the
+//! two solvers produce *statistically* equivalent — not identical —
+//! spike trains; we compare population firing rates.
+
+use dpsnn::config::{SimConfig, Solver};
+use dpsnn::coordinator::{run_simulation, RunSummary};
+use dpsnn::engine::RunOptions;
+
+fn cfg(solver: Solver) -> SimConfig {
+    let mut c = SimConfig::test_small();
+    c.grid.neurons_per_column = 128; // 4×4 grid → 2048 neurons → batch 4096
+    c.duration_ms = 60.0;
+    c.external.synapses_per_neuron = 100;
+    c.external.rate_hz = 30.0;
+    c.ranks = 2;
+    c.solver = solver;
+    c
+}
+
+fn artifacts_available() -> bool {
+    dpsnn::runtime::pjrt::artifacts_dir().join("lif_step_1024.hlo.txt").exists()
+}
+
+fn run(solver: Solver) -> RunSummary {
+    run_simulation(&cfg(solver), &RunOptions::default())
+}
+
+#[test]
+fn xla_solver_runs_the_full_engine() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let s = run(Solver::Xla);
+    assert!(s.spikes() > 0, "XLA-solved network must be active");
+    assert!(s.recurrent_events() > 0, "spikes must propagate through synapses");
+}
+
+#[test]
+fn xla_and_event_driven_rates_agree() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let ev = run(Solver::EventDriven);
+    let xla = run(Solver::Xla);
+    let (r_ev, r_xla) = (ev.firing_rate_hz(), xla.firing_rate_hz());
+    assert!(r_ev > 0.0 && r_xla > 0.0);
+    let ratio = r_xla / r_ev;
+    assert!(
+        (0.5..2.0).contains(&ratio),
+        "rates diverge: event {r_ev:.2} Hz vs xla {r_xla:.2} Hz"
+    );
+    // external drive is identical by construction (same seeded streams)
+    assert_eq!(ev.reports.iter().map(|r| r.external_events).sum::<u64>(),
+               xla.reports.iter().map(|r| r.external_events).sum::<u64>());
+}
+
+#[test]
+fn xla_solver_is_deterministic() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let a = run(Solver::Xla);
+    let b = run(Solver::Xla);
+    assert_eq!(a.spikes(), b.spikes());
+    assert_eq!(a.recurrent_events(), b.recurrent_events());
+}
