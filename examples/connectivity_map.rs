@@ -1,91 +1,85 @@
-//! Fig. 2 through all three layers: the L1 Pallas `conn_prob` kernel was
-//! AOT-lowered to `artifacts/conn_field_*.hlo.txt`; this example loads
-//! those artifacts through the PJRT runtime, evaluates the probability
-//! field for both rules, and renders the projection stencils — then
-//! cross-checks them against the pure-Rust stencil computation.
+//! Fig. 2 through the open kernel system: render the projection
+//! stencil of every *registered* connectivity kernel (the paper's
+//! Gaussian 7x7 and exponential 21x21, plus the doubly-exponential and
+//! flat-disc profiles) and cross-check the paper presets against the
+//! legacy-enum stencil computation.
 //!
-//! Run: `make artifacts && cargo run --release --example connectivity_map`
+//! The former version of this example demonstrated the same field via
+//! the AOT-compiled `conn_prob` XLA artifact; that path now lives
+//! behind `--features xla` (see `rust/src/runtime/pjrt.rs`), while the
+//! kernel trait is the portable way to evaluate profiles.
+//!
+//! Run: `cargo run --release --example connectivity_map`
 
 use dpsnn::config::{ConnParams, GridParams};
-use dpsnn::connectivity::rules::Stencil;
+use dpsnn::connectivity::{builtin_kernel, Stencil, KERNEL_NAMES};
 use dpsnn::geometry::Grid;
-use dpsnn::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
-    let rt = Runtime::cpu()?;
-    let m = 15i32; // evaluate a 31x31 window, stencils must fit inside
-    let coords: Vec<(i32, i32)> =
-        (-m..=m).flat_map(|dy| (-m..=m).map(move |dx| (dx, dy))).collect();
-    let n = 1024usize;
-    let mut dx = vec![0f32; n];
-    let mut dy = vec![0f32; n];
-    for (i, &(x, y)) in coords.iter().enumerate() {
-        dx[i] = x as f32;
-        dy[i] = y as f32;
-    }
+fn main() {
+    let grid = Grid::new(GridParams::square(31));
 
-    for (rule, amp, scale, expect_side) in [
-        ("gaussian", 0.05f32, 100.0f32, 7u32),
-        ("exponential", 0.03, 290.0, 21),
-    ] {
-        let exe = rt.load_artifact(&format!("conn_field_{rule}"))?;
-        let out = exe.run(&[
-            xla::Literal::vec1(&dx),
-            xla::Literal::vec1(&dy),
-            xla::Literal::scalar(amp),
-            xla::Literal::scalar(scale),
-            xla::Literal::scalar(100.0f32), // column spacing [um]
-            xla::Literal::scalar(1e-3f32),  // 1/1000 cutoff
-        ])?;
-        let mask = out[2].to_vec::<f32>()?;
-        let p_center = out[0].to_vec::<f32>()?;
-
-        // render the stencil (paper Fig. 2: green 7x7 / orange 21x21)
-        println!("\n{rule}: projection stencil from the PJRT-executed kernel");
-        let side = 2 * m + 1;
-        let mut reach = 0i32;
-        for row in 0..side {
-            let mut line = String::new();
-            for col in 0..side {
-                let i = (row * side + col) as usize;
-                if coords[i] == (0, 0) {
+    for name in KERNEL_NAMES {
+        // matching paper preset per kernel family (A=0.03/λ=290 for the
+        // exponential-range kernels, A=0.05/σ=100 for the rest) — this
+        // is what yields the paper's 7x7 and 21x21 stencils
+        let conn = match name {
+            "exponential" | "doubly-exponential" => ConnParams::exponential(),
+            _ => ConnParams::gaussian(),
+        };
+        let kernel = builtin_kernel(name, &conn).expect("registered kernel");
+        let stencil = Stencil::for_kernel(&*kernel, conn.cutoff, &grid);
+        let m = (stencil.bbox_side as i32 - 1) / 2;
+        println!(
+            "\n{name}: {}x{} stencil from the ConnectivityKernel trait",
+            stencil.bbox_side, stencil.bbox_side
+        );
+        for dy in -m..=m {
+            let mut line = String::from("  ");
+            for dx in -m..=m {
+                if (dx, dy) == (0, 0) {
                     line.push('C');
-                } else if mask[i] > 0.5 {
-                    let p = p_center[i];
-                    line.push(if p > 0.01 {
+                } else if let Some(o) =
+                    stencil.offsets.iter().find(|o| (o.dx, o.dy) == (dx, dy))
+                {
+                    line.push(if o.p_max > 0.01 {
                         '#'
-                    } else if p > 0.003 {
+                    } else if o.p_max > 0.003 {
                         '+'
                     } else {
                         '.'
                     });
-                    reach = reach.max(coords[i].0.abs()).max(coords[i].1.abs());
                 } else {
                     line.push(' ');
                 }
             }
-            println!("  {line}");
+            println!("{line}");
         }
-        let bbox = 2 * reach as u32 + 1;
-        println!("  stencil bounding box: {bbox}x{bbox} (paper: {expect_side}x{expect_side})");
-        assert_eq!(bbox, expect_side, "{rule} stencil mismatch");
-
-        // cross-check against the pure-Rust stencil
-        let conn = if rule == "gaussian" {
-            ConnParams::gaussian()
-        } else {
-            ConnParams::exponential()
-        };
-        let grid = Grid::new(GridParams::square(31));
-        let stencil = Stencil::remote(&conn, &grid);
-        assert_eq!(stencil.bbox_side, expect_side);
-        let kernel_count = mask.iter().filter(|&&v| v > 0.5).count();
-        assert_eq!(
-            kernel_count,
-            stencil.offsets.len(),
-            "{rule}: kernel mask disagrees with Rust stencil"
+        println!(
+            "  envelope sum {:.3} (expected candidate draws per neuron / npc)",
+            stencil.envelope_sum()
         );
-        println!("  cross-check vs Rust stencil: {} offsets ✓", kernel_count);
     }
-    Ok(())
+
+    // cross-check: the trait-built paper kernels reproduce the
+    // legacy-enum stencils exactly (paper Fig. 2: 7x7 and 21x21)
+    for (preset, expect_side) in [(ConnParams::gaussian(), 7u32), (ConnParams::exponential(), 21)]
+    {
+        let legacy = Stencil::remote(&preset, &grid);
+        let kernel = builtin_kernel(preset.rule.name(), &preset).unwrap();
+        let traited = Stencil::for_kernel(&*kernel, preset.cutoff, &grid);
+        assert_eq!(legacy.bbox_side, expect_side);
+        assert_eq!(traited.bbox_side, legacy.bbox_side);
+        assert_eq!(traited.offsets.len(), legacy.offsets.len());
+        for (a, b) in traited.offsets.iter().zip(&legacy.offsets) {
+            assert_eq!((a.dx, a.dy), (b.dx, b.dy));
+            assert_eq!(a.p_max.to_bits(), b.p_max.to_bits());
+        }
+        println!(
+            "\ncross-check {}: trait stencil == legacy stencil ({} offsets, {}x{}) ✓",
+            preset.rule.name(),
+            traited.offsets.len(),
+            expect_side,
+            expect_side
+        );
+    }
 }

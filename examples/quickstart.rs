@@ -1,44 +1,66 @@
 //! Quickstart: build a small cortical-patch network with the paper's
-//! Gaussian connectivity, simulate 100 ms on 2 virtual-MPI ranks, and
-//! print the paper's headline metrics.
+//! Gaussian connectivity through the staged API, simulate 100 ms on 2
+//! virtual-MPI ranks, and print the paper's headline metrics.
+//!
+//! The pipeline is `SimulationBuilder` (typed, chainable configuration)
+//! → `Network` (constructed once: synapse stores, routing CSRs,
+//! send/recv subsets) → `Session` (resumable stepping + streaming
+//! probes).
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use dpsnn::config::SimConfig;
-use dpsnn::coordinator::run_simulation;
-use dpsnn::engine::{Phase, RunOptions};
+use dpsnn::engine::Phase;
+use dpsnn::{FiringRateProbe, PhaseMetricsProbe, SimulationBuilder};
 
 fn main() {
     // 6x6 grid of cortical columns, 1240 LIF+SFA neurons each,
     // Gaussian lateral connectivity (A=0.05, sigma=100um) -> 7x7 stencil
-    let mut cfg = SimConfig::gaussian(6);
-    cfg.ranks = 2;
-    cfg.duration_ms = 100.0;
-
+    let builder = SimulationBuilder::gaussian(6).ranks(2);
     println!(
         "quickstart: {}x{} columns, {} neurons, rule={}",
-        cfg.grid.nx,
-        cfg.grid.ny,
-        cfg.grid.neurons(),
-        cfg.conn.rule.name()
+        builder.config().grid.nx,
+        builder.config().grid.ny,
+        builder.config().grid.neurons(),
+        builder.config().kernel_name()
     );
-    let s = run_simulation(&cfg, &RunOptions::default());
 
-    println!("synapses:          {:>12}", s.synapses());
+    // construction (§II-D): the expensive stage, paid exactly once
+    let mut net = builder.build().expect("network construction");
+    println!("synapses:          {:>12}", net.synapses());
+
+    // simulation (§II-E): stream observations instead of buffering them
+    let mut rate = FiringRateProbe::new(20.0);
+    let mut phases = PhaseMetricsProbe::new();
+    {
+        let mut session = net.session();
+        session.attach(&mut rate).attach(&mut phases);
+        session.advance(100.0);
+    }
+
+    let s = net.summary();
     println!("spikes:            {:>12}", s.spikes());
     println!("firing rate:       {:>12.2} Hz", s.firing_rate_hz());
     println!("equivalent events: {:>12}", s.equivalent_events());
     println!("cost:              {:>12.1} ns/synaptic event", s.total_cpu_ns_per_event());
     println!("memory peak:       {:>12.1} B/synapse", s.peak_bytes_per_synapse());
     println!();
+    println!("windowed rate (20 ms): {:?}", rate.rates_hz().iter().map(|r| (r * 10.0).round() / 10.0).collect::<Vec<_>>());
     println!("per-phase CPU (all ranks):");
     for p in [Phase::Pack, Phase::Exchange, Phase::Demux, Phase::Dynamics] {
-        println!("  {:<10} {:>10.1} ms", p.name(), s.phase_cpu_ns(p) as f64 / 1e6);
+        println!("  {:<10} {:>10.1} ms", p.name(), phases.phase_ns(p) as f64 / 1e6);
     }
+
+    // the run is resumable: 100 more ms continue seamlessly
+    net.session().advance(100.0);
+    println!("\nafter 100 more ms: {} spikes total", net.summary().spikes());
+
     // the distributed run is bit-identical to a single-rank run
-    let mut cfg1 = cfg.clone();
-    cfg1.ranks = 1;
-    let s1 = run_simulation(&cfg1, &RunOptions::default());
-    assert_eq!(s1.spikes(), s.spikes(), "decomposition must not change the physics");
-    println!("\ndecomposition check: 1-rank run produced identical spike count ✓");
+    let mut net1 = SimulationBuilder::gaussian(6).ranks(1).build().unwrap();
+    net1.session().advance(200.0);
+    assert_eq!(
+        net1.summary().spikes(),
+        net.summary().spikes(),
+        "decomposition must not change the physics"
+    );
+    println!("decomposition check: 1-rank run produced identical spike count ✓");
 }

@@ -4,22 +4,24 @@
 //! protocol's message statistics, then projects the paper's cluster
 //! scaling (Fig. 5/7 style) from the measured calibration.
 //!
+//! Staged-API notes: each rank count is its own decomposition and so
+//! its own `Network` construction, but within a rank count everything
+//! (phase breakdown included) reads off the one constructed network —
+//! no re-runs.
+//!
 //! Run: `cargo run --release --example scaling_sweep [-- --quick]`
 
 use dpsnn::bench_harness::Table;
 use dpsnn::config::{ConnRule, SimConfig};
-use dpsnn::coordinator::run_simulation;
-use dpsnn::engine::{Phase, RunOptions};
+use dpsnn::engine::Phase;
 use dpsnn::perfmodel::Calibration;
 use dpsnn::repro::{model_from, paper_rate};
+use dpsnn::{RunSummary, SimulationBuilder};
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let (side, npc, dur) = if quick { (6u32, 310u32, 60.0) } else { (8, 620, 100.0) };
 
-    let mut cfg = SimConfig::gaussian(side);
-    cfg.grid.neurons_per_column = npc;
-    cfg.duration_ms = dur;
     eprintln!(
         "scaling sweep: {side}x{side} columns x {npc} neurons, {dur} ms, gaussian rule"
     );
@@ -30,10 +32,15 @@ fn main() {
     ]);
     let mut base_spikes = None;
     let mut cal_1rank = None;
+    let mut last_summary: Option<RunSummary> = None;
     for ranks in [1u32, 2, 4] {
-        let mut c = cfg.clone();
-        c.ranks = ranks;
-        let s = run_simulation(&c, &RunOptions::default());
+        let mut net = SimulationBuilder::gaussian(side)
+            .neurons_per_column(npc)
+            .ranks(ranks)
+            .build()
+            .expect("network construction");
+        net.session().advance(dur);
+        let s = net.summary();
         // physics must be identical at every decomposition
         match base_spikes {
             None => base_spikes = Some(s.spikes()),
@@ -62,16 +69,16 @@ fn main() {
             pay_msgs.to_string(),
             format!("{:.2}", pay_bytes as f64 / 1e6),
         ]);
+        last_summary = Some(s);
     }
     println!("\nmeasured (real engine, virtual-MPI ranks as threads):");
     println!("{}", t.render());
     println!("spike trains identical across decompositions ✓");
 
-    // phase breakdown of the last run
+    // phase breakdown straight off the 4-rank run above — the staged
+    // API means no re-construction, no re-run
+    let s = last_summary.expect("4-rank summary");
     println!("\nper-phase CPU share (4-rank run):");
-    let mut c = cfg.clone();
-    c.ranks = 4;
-    let s = run_simulation(&c, &RunOptions::default());
     let total: u64 = [Phase::Pack, Phase::Exchange, Phase::Demux, Phase::Dynamics]
         .iter()
         .map(|&p| s.phase_cpu_ns(p))

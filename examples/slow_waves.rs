@@ -12,8 +12,7 @@
 
 use dpsnn::analysis::{band_fraction, welch_psd, ActivityGrid};
 use dpsnn::config::SimConfig;
-use dpsnn::coordinator::run_simulation;
-use dpsnn::engine::RunOptions;
+use dpsnn::{ActivityProbe, SimulationBuilder};
 
 fn sw_config(quick: bool) -> SimConfig {
     let side = if quick { 12 } else { 24 };
@@ -48,8 +47,20 @@ fn main() {
         cfg.grid.neurons(),
         cfg.duration_ms
     );
-    let opts = RunOptions { record_activity: true, ..Default::default() };
-    let s = run_simulation(&cfg, &opts);
+    // staged API: the wave analysis opts into the full activity matrix
+    // through an ActivityProbe (the one probe that materializes
+    // steps × columns); everything else streams.
+    let duration_ms = cfg.duration_ms;
+    let mut net = SimulationBuilder::from_config(cfg.clone())
+        .build()
+        .expect("network construction");
+    let mut activity = ActivityProbe::new();
+    {
+        let mut session = net.session();
+        session.attach(&mut activity);
+        session.advance(duration_ms);
+    }
+    let s = net.summary();
     println!("firing rate: {:.2} Hz  spikes: {}", s.firing_rate_hz(), s.spikes());
 
     let act = ActivityGrid::new(
@@ -57,7 +68,7 @@ fn main() {
         cfg.grid.ny,
         cfg.grid.neurons_per_column,
         cfg.dt_ms,
-        s.activity,
+        activity.into_rows(),
     );
 
     // --- Fig. 3: four snapshots of a propagating wave ---

@@ -1,7 +1,9 @@
 //! Minimal benchmark harness (no criterion in the offline vendor set):
-//! warmup + repeated timing with mean/σ, and aligned table printing for
-//! the paper-figure reports.
+//! warmup + repeated timing with mean/σ, aligned table printing for the
+//! paper-figure reports, and staged-API measurement segments (one
+//! constructed [`Network`] shared across measurement points).
 
+use crate::coordinator::Network;
 use crate::util::stats::Running;
 use crate::util::timer::fmt_ns;
 use std::time::Instant;
@@ -79,6 +81,51 @@ impl Table {
     }
 }
 
+/// One measurement point from a staged run: per-segment deltas between
+/// consecutive cumulative summaries of the same [`Network`].
+#[derive(Clone, Copy, Debug)]
+pub struct SegmentCost {
+    /// CPU nanoseconds per equivalent synaptic event in this segment.
+    pub ns_per_event: f64,
+    /// Equivalent synaptic events delivered in this segment.
+    pub events: u64,
+    /// Spikes emitted in this segment.
+    pub spikes: u64,
+    /// Simulated time covered by this segment [ms].
+    pub duration_ms: f64,
+}
+
+/// Drive `segments` × `segment_ms` of simulation against an
+/// already-constructed network and return one cost point per segment.
+/// This is the build-once/run-many measurement primitive: construction
+/// (the §II-D Alltoall exchange) is *not* re-run between points, so
+/// multi-point calibrations pay it exactly once.
+pub fn measure_segments(net: &mut Network, segments: u32, segment_ms: f64) -> Vec<SegmentCost> {
+    let mut out = Vec::with_capacity(segments as usize);
+    // baseline on the network's cumulative counters so measuring an
+    // already-driven network attributes only *new* work to segment 1
+    let base = net.summary();
+    let mut prev_cpu: u64 = base.reports.iter().map(|r| r.sim_cpu_ns).sum();
+    let (mut prev_events, mut prev_spikes) = (base.equivalent_events(), base.spikes());
+    for _ in 0..segments {
+        net.session().advance(segment_ms);
+        let s = net.summary();
+        let cpu: u64 = s.reports.iter().map(|r| r.sim_cpu_ns).sum();
+        let (events, spikes) = (s.equivalent_events(), s.spikes());
+        out.push(SegmentCost {
+            // saturating: a caller-side Network::reset() between calls
+            // rewinds the cumulative counters below the baseline
+            ns_per_event: cpu.saturating_sub(prev_cpu) as f64
+                / events.saturating_sub(prev_events).max(1) as f64,
+            events: events.saturating_sub(prev_events),
+            spikes: spikes.saturating_sub(prev_spikes),
+            duration_ms: segment_ms,
+        });
+        (prev_cpu, prev_events, prev_spikes) = (cpu, events, spikes);
+    }
+    out
+}
+
 /// `true` when benches should run in reduced "quick" mode
 /// (DPSNN_QUICK=1 or --quick on the CLI).
 pub fn quick_mode() -> bool {
@@ -116,5 +163,28 @@ mod tests {
     fn table_rejects_ragged_rows() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["only one".into()]);
+    }
+
+    #[test]
+    fn segments_share_one_network_and_sum_to_the_whole() {
+        use crate::coordinator::SimulationBuilder;
+        let mut net = SimulationBuilder::from_config(crate::config::SimConfig::test_small())
+            .external(100, 30.0)
+            .build()
+            .unwrap();
+        let synapses = net.synapses();
+        let segs = measure_segments(&mut net, 3, 10.0);
+        assert_eq!(segs.len(), 3);
+        assert!(segs.iter().all(|c| c.events > 0 && c.ns_per_event > 0.0));
+        // the same construction served every point
+        assert_eq!(net.synapses(), synapses);
+        assert_eq!(net.steps_run(), 30);
+        let total: u64 = segs.iter().map(|c| c.spikes).sum();
+        assert_eq!(total, net.summary().spikes());
+        // measuring an already-driven network counts only new work:
+        // the prior 30 ms must not leak into the next first segment
+        let more = measure_segments(&mut net, 2, 10.0);
+        let new_spikes: u64 = more.iter().map(|c| c.spikes).sum();
+        assert_eq!(total + new_spikes, net.summary().spikes());
     }
 }

@@ -16,9 +16,17 @@
 //! Every knob is overridable from a TOML file (see `configs/*.toml`) or
 //! from CLI flags; presets reproduce the paper's configurations.
 
+use std::sync::Arc;
+
 use crate::config::toml::Doc;
+use crate::connectivity::kernel::{self, ConnectivityKernel};
 
 /// Remote-connectivity decay law (paper §III-B).
+///
+/// The two paper presets. The open extension point is the
+/// [`ConnectivityKernel`] trait (`connectivity::kernel`): additional
+/// profiles — registered by name or fully custom — ride in
+/// [`SimConfig::kernel`] and take precedence over this enum.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ConnRule {
     /// Shorter range: p(r) = A·exp(−r²/2σ²).
@@ -133,14 +141,24 @@ impl ConnParams {
     }
 
     /// Remote connection probability at distance `r_um` (no cutoff).
+    ///
+    /// Evaluates the `rule` preset's kernel (stack-built, no dispatch
+    /// cost). A custom [`SimConfig::kernel`] overrides this for the
+    /// whole pipeline — query `SimConfig::kernel_dyn` when the config
+    /// is in scope.
     #[inline]
     pub fn prob_at(&self, r_um: f64) -> f64 {
         match self.rule {
-            ConnRule::Gaussian => {
-                let s2 = 2.0 * self.sigma_um * self.sigma_um;
-                self.amplitude * (-r_um * r_um / s2).exp()
+            ConnRule::Gaussian => kernel::Gaussian {
+                amplitude: self.amplitude,
+                sigma_um: self.sigma_um,
             }
-            ConnRule::Exponential => self.amplitude * (-r_um / self.lambda_um).exp(),
+            .prob_at(r_um),
+            ConnRule::Exponential => kernel::Exponential {
+                amplitude: self.amplitude,
+                lambda_um: self.lambda_um,
+            }
+            .prob_at(r_um),
         }
     }
 }
@@ -276,6 +294,10 @@ pub struct SimConfig {
     /// STDP plasticity (paper: disabled for all scaling measurements).
     pub plasticity: bool,
     pub solver: Solver,
+    /// Custom connectivity kernel; overrides `conn.rule` everywhere
+    /// (stencil, synapse generation, analytics) when set. `None` means
+    /// "use the preset named by `conn.rule`".
+    pub kernel: Option<Arc<dyn ConnectivityKernel>>,
 }
 
 impl SimConfig {
@@ -294,6 +316,7 @@ impl SimConfig {
             seed: 42,
             plasticity: false,
             solver: Solver::EventDriven,
+            kernel: None,
         }
     }
 
@@ -316,12 +339,32 @@ impl SimConfig {
         (self.syn.delay_max_ms / self.dt_ms).ceil() as usize + 1
     }
 
+    /// The connectivity kernel driving construction: the custom kernel
+    /// when set, else the preset named by `conn.rule`.
+    pub fn kernel_dyn(&self) -> Arc<dyn ConnectivityKernel> {
+        match &self.kernel {
+            Some(k) => Arc::clone(k),
+            None => kernel::from_rule(&self.conn),
+        }
+    }
+
+    /// Name of the effective connectivity kernel.
+    pub fn kernel_name(&self) -> String {
+        match &self.kernel {
+            Some(k) => k.name().to_string(),
+            None => self.conn.rule.name().to_string(),
+        }
+    }
+
     /// Load from a parsed TOML document; missing keys keep preset values.
     pub fn from_doc(doc: &Doc) -> Result<Self, String> {
-        let rule = ConnRule::parse(&doc.str_or("connectivity.rule", "gaussian")?)?;
-        let mut cfg = match rule {
-            ConnRule::Gaussian => Self::gaussian(24),
-            ConnRule::Exponential => Self::exponential(24),
+        let rule_name = doc.str_or("connectivity.rule", "gaussian")?;
+        let mut cfg = match ConnRule::parse(&rule_name) {
+            Ok(ConnRule::Gaussian) => Self::gaussian(24),
+            Ok(ConnRule::Exponential) => Self::exponential(24),
+            // registered non-enum kernel: resolved below, once the
+            // numeric connectivity overrides have been applied
+            Err(_) => Self::gaussian(24),
         };
         let g = &mut cfg.grid;
         g.nx = doc.int_or("network.nx", doc.int_or("network.side", g.nx as i64)?)? as u32;
@@ -339,6 +382,10 @@ impl SimConfig {
         c.cutoff = doc.float_or("connectivity.cutoff", c.cutoff)?;
         c.inhibitory_local_only =
             doc.bool_or("connectivity.inhibitory_local_only", c.inhibitory_local_only)?;
+
+        if ConnRule::parse(&rule_name).is_err() {
+            cfg.kernel = Some(kernel::from_doc(&rule_name, doc, &cfg.conn)?);
+        }
 
         let s = &mut cfg.syn;
         s.j_exc_mv = doc.float_or("synapse.j_exc_mv", s.j_exc_mv)?;
@@ -489,6 +536,42 @@ solver = "event"
         assert_eq!(cfg.conn.amplitude, 0.03); // preset kept
         assert_eq!(cfg.ranks, 4);
         assert_eq!(cfg.duration_ms, 123.0);
+    }
+
+    #[test]
+    fn from_doc_resolves_registered_kernels() {
+        let doc = toml::parse(
+            r#"
+[connectivity]
+rule = "doubly-exponential"
+lambda_near_um = 120.0
+lambda_far_um = 600.0
+mix = 0.6
+"#,
+        )
+        .unwrap();
+        let cfg = SimConfig::from_doc(&doc).unwrap();
+        let k = cfg.kernel_dyn();
+        assert_eq!(k.name(), "doubly-exponential");
+        assert_eq!(cfg.kernel_name(), "doubly-exponential");
+        // p(0) = A (mix + 1 − mix) = amplitude
+        assert!((k.prob_at(0.0) - cfg.conn.amplitude).abs() < 1e-12);
+
+        let doc = toml::parse("[connectivity]\nrule = \"flat-disc\"\ndisc_radius_um = 150.0\n")
+            .unwrap();
+        let cfg = SimConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.kernel_dyn().name(), "flat-disc");
+        assert_eq!(cfg.kernel_dyn().prob_at(150.0), cfg.conn.amplitude);
+        assert_eq!(cfg.kernel_dyn().prob_at(151.0), 0.0);
+
+        let doc = toml::parse("[connectivity]\nrule = \"banana\"\n").unwrap();
+        let err = SimConfig::from_doc(&doc).unwrap_err();
+        assert!(err.contains("banana") && err.contains("flat-disc"), "{err}");
+
+        // enum presets keep kernel = None (legacy path untouched)
+        let cfg = SimConfig::gaussian(8);
+        assert!(cfg.kernel.is_none());
+        assert_eq!(cfg.kernel_dyn().name(), "gaussian");
     }
 
     #[test]

@@ -278,10 +278,12 @@ fn ensure_table<'a>(
 /// Parse one value; returns (value, unconsumed remainder).
 fn parse_value<'a>(s: &'a str, line: usize) -> Result<(Value, &'a str), TomlError> {
     let s = s.trim_start();
-    if s.is_empty() {
+    // no `.unwrap()` on the first char: an empty value token (e.g.
+    // `key =`, `a = [1,`, or a bare trailing comma) must surface as a
+    // parse error, never a panic
+    let Some(first) = s.chars().next() else {
         return err(line, "missing value");
-    }
-    let first = s.chars().next().unwrap();
+    };
     if first == '"' {
         // string with escapes
         let mut out = String::new();
@@ -420,6 +422,28 @@ tau_m = 20.0
     #[test]
     fn duplicate_keys_rejected() {
         assert!(parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn empty_value_tokens_error_instead_of_panicking() {
+        // regression: parse_value used `.chars().next().unwrap()` on the
+        // value token; every empty-token shape must be a clean error
+        for (input, line) in [
+            ("x =", 1),
+            ("x = ", 1),
+            ("x =\t", 1),
+            ("ok = 1\ny =   # only a comment\n", 2),
+            ("a = [1,", 1),
+            ("a = [", 1),
+        ] {
+            let e = parse(input).unwrap_err();
+            assert_eq!(e.line, line, "input {input:?}");
+            assert!(
+                e.msg.contains("missing value") || e.msg.contains("unterminated"),
+                "input {input:?} gave: {}",
+                e.msg
+            );
+        }
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! enough samples for ≈0.1% accuracy — deterministic and fast.
 
 use crate::config::{ConnParams, GridParams, SimConfig};
+use crate::connectivity::kernel::ConnectivityKernel;
 use crate::connectivity::rules::Stencil;
 use crate::geometry::Grid;
 use crate::util::prng::Pcg64;
@@ -25,6 +26,16 @@ const QUAD_SAMPLES: u32 = 20_000;
 /// Mean connection probability between a uniform point in the unit
 /// column and a uniform point in the column at offset (dx, dy).
 pub fn mean_offset_prob(conn: &ConnParams, grid: &Grid, dx: i32, dy: i32) -> f64 {
+    mean_offset_prob_kernel(&*crate::connectivity::kernel::from_rule(conn), grid, dx, dy)
+}
+
+/// [`mean_offset_prob`] for an arbitrary connectivity kernel.
+pub fn mean_offset_prob_kernel(
+    kernel: &dyn ConnectivityKernel,
+    grid: &Grid,
+    dx: i32,
+    dy: i32,
+) -> f64 {
     let a = grid.p.spacing_um;
     let mut rng = Pcg64::for_entity(0xA11A, ((dx as u64) << 32) ^ (dy as u64 & 0xFFFF_FFFF), 0xE5);
     let mut sum = 0.0;
@@ -34,7 +45,7 @@ pub fn mean_offset_prob(conn: &ConnParams, grid: &Grid, dx: i32, dy: i32) -> f64
         let tx = dx as f64 * a + rng.next_f64() * a;
         let ty = dy as f64 * a + rng.next_f64() * a;
         let r = ((sx - tx).powi(2) + (sy - ty).powi(2)).sqrt();
-        sum += conn.prob_at(r);
+        sum += kernel.prob_at(r);
     }
     sum / QUAD_SAMPLES as f64
 }
@@ -63,7 +74,8 @@ pub struct ExpectedCounts {
 /// Compute expected counts for a configuration without materializing it.
 pub fn expected_counts(cfg: &SimConfig) -> ExpectedCounts {
     let grid = Grid::new(cfg.grid);
-    let stencil = Stencil::remote(&cfg.conn, &grid);
+    let kernel = cfg.kernel_dyn();
+    let stencil = Stencil::for_kernel(&*kernel, cfg.conn.cutoff, &grid);
     let g = &cfg.grid;
     let npc = g.neurons_per_column as f64;
     let exc_pc = g.exc_per_column() as f64;
@@ -76,7 +88,7 @@ pub fn expected_counts(cfg: &SimConfig) -> ExpectedCounts {
     let mut per_exc_bulk = 0.0; // expected remote out-degree of one bulk exc neuron
     let mut grid_pairs = 0.0; // Σ over valid (src col, offset) of E[p]·npc
     for o in &stencil.offsets {
-        let ep = mean_offset_prob(&cfg.conn, &grid, o.dx, o.dy);
+        let ep = mean_offset_prob_kernel(&*kernel, &grid, o.dx, o.dy);
         per_exc_bulk += npc * ep;
         // count source columns for which the offset stays in-grid
         let nx_valid = (g.nx as i64 - o.dx.abs() as i64).max(0) as f64;

@@ -18,6 +18,7 @@
 //! within one column.
 
 use crate::config::{DelayDist, SimConfig};
+use crate::connectivity::kernel::ConnectivityKernel;
 use crate::connectivity::rules::Stencil;
 use crate::geometry::grid::{stream, ColumnId};
 use crate::geometry::{Decomposition, Grid};
@@ -71,6 +72,9 @@ pub fn generate_outgoing(
     my_columns: &[ColumnId],
 ) -> Vec<Vec<WireSynapse>> {
     let ctx = DrawCtx { cfg };
+    // the kernel behind the thinning acceptance: custom when configured,
+    // else the `conn.rule` preset (identical formulas)
+    let kernel: std::sync::Arc<dyn ConnectivityKernel> = cfg.kernel_dyn();
     let npc = grid.p.neurons_per_column;
     let mut out: Vec<Vec<WireSynapse>> = (0..decomp.ranks).map(|_| Vec::new()).collect();
     // Pre-size the dominant (own-rank) buckets: local synapses are ~80%
@@ -128,7 +132,7 @@ pub fn generate_outgoing(
                     let tgt_gid = grid.neuron_id(tgt_col, tgt_local);
                     let (txp, typ) = grid.neuron_position(cfg.seed, tgt_gid);
                     let r = ((sx - txp).powi(2) + (sy - typ).powi(2)).sqrt();
-                    let accept = cfg.conn.prob_at(r) / o.p_max;
+                    let accept = kernel.prob_at(r) / o.p_max;
                     if rng.next_f64() < accept {
                         let w = ctx.weight(&mut rng, src_is_exc);
                         let d = ctx.delay_us(&mut rng);
@@ -150,7 +154,7 @@ pub fn generate_outgoing(
 pub fn generate_all(cfg: &SimConfig) -> Vec<WireSynapse> {
     let grid = Grid::new(cfg.grid);
     let decomp = Decomposition::new(&grid, 1, crate::geometry::Mapping::Block);
-    let stencil = Stencil::remote(&cfg.conn, &grid);
+    let stencil = Stencil::for_kernel(&*cfg.kernel_dyn(), cfg.conn.cutoff, &grid);
     let cols: Vec<ColumnId> = (0..grid.columns()).collect();
     generate_outgoing(cfg, &grid, &decomp, &stencil, &cols).pop().unwrap()
 }

@@ -1,9 +1,15 @@
-//! Connectivity rules, cutoff stencils, the distributed synapse builder
-//! and exact-expectation counting (Table I analytics).
+//! Connectivity kernels (open trait + registry), cutoff stencils, the
+//! distributed synapse builder and exact-expectation counting (Table I
+//! analytics).
 
 pub mod analytic;
 pub mod builder;
+pub mod kernel;
 pub mod rules;
 
 pub use analytic::{expected_counts, table1_row, ExpectedCounts};
+pub use kernel::{
+    builtin as builtin_kernel, resolve as resolve_kernel, ConnectivityKernel, DoublyExponential,
+    Exponential, FlatDisc, Gaussian, KERNEL_NAMES,
+};
 pub use rules::{Stencil, StencilOffset};

@@ -10,6 +10,7 @@
 //! and 21×21 (exponential) projection stencils of Fig. 2.
 
 use crate::config::ConnParams;
+use crate::connectivity::kernel::ConnectivityKernel;
 use crate::geometry::Grid;
 
 /// One stencil entry: a column offset plus the *maximum possible*
@@ -31,22 +32,26 @@ pub struct Stencil {
 }
 
 impl Stencil {
-    /// Compute the remote stencil for a rule on a grid spacing.
+    /// Compute the remote stencil for a rule on a grid spacing
+    /// (compatibility entry: uses the rule's legacy-enum kernel).
     pub fn remote(conn: &ConnParams, grid: &Grid) -> Self {
+        Self::for_kernel(&*crate::connectivity::kernel::from_rule(conn), conn.cutoff, grid)
+    }
+
+    /// Compute the remote stencil for an arbitrary connectivity kernel:
+    /// every column offset whose *best-case* (minimum-distance)
+    /// connection probability exceeds `cutoff` survives.
+    pub fn for_kernel(kernel: &dyn ConnectivityKernel, cutoff: f64, grid: &Grid) -> Self {
         // Largest axis offset m whose best case (gap (m−1)·α) passes.
-        let mut m = 0i32;
-        while conn.prob_at(grid.offset_min_dist_um(m + 1, 0)) > conn.cutoff {
-            m += 1;
-            assert!(m < 10_000, "stencil diverges: cutoff too small");
-        }
+        let m = kernel.stencil_radius(grid, cutoff);
         let mut offsets = Vec::new();
         for dy in -m..=m {
             for dx in -m..=m {
                 if dx == 0 && dy == 0 {
                     continue; // local connectivity handled separately
                 }
-                let p_max = conn.prob_at(grid.offset_min_dist_um(dx, dy));
-                if p_max > conn.cutoff {
+                let p_max = kernel.prob_at(grid.offset_min_dist_um(dx, dy));
+                if p_max > cutoff {
                     offsets.push(StencilOffset { dx, dy, p_max });
                 }
             }
@@ -140,6 +145,21 @@ mod tests {
                 assert!(worse <= o.p_max);
             }
         }
+    }
+
+    #[test]
+    fn custom_kernel_drives_the_stencil() {
+        use crate::connectivity::kernel::FlatDisc;
+        let g = grid();
+        // 250 µm disc: min distances 0/100/200 pass, 300 µm does not
+        let s = Stencil::for_kernel(&FlatDisc { amplitude: 0.05, radius_um: 250.0 }, 1e-3, &g);
+        assert_eq!(s.bbox_side, 7);
+        // within the disc every surviving offset carries the flat p_max
+        for o in &s.offsets {
+            assert_eq!(o.p_max, 0.05);
+        }
+        // the 3,3 corner (min distance 200√2 ≈ 283 µm) is outside
+        assert!(!s.offsets.iter().any(|o| (o.dx, o.dy) == (3, 3)));
     }
 
     #[test]

@@ -1,12 +1,17 @@
-//! Cluster leader: builds the virtual cluster, runs the distributed
-//! simulation, and aggregates the measurements the paper reports.
+//! Aggregated run summaries and the legacy one-shot entry point.
+//!
+//! [`run_simulation`] predates the staged API and fuses construction
+//! with simulation; it survives as a thin compatibility wrapper over
+//! `SimulationBuilder → Network → Session` (see `coordinator::session`).
+//! New code should use the staged pipeline directly — it exposes the
+//! construction/simulation seam the paper measures separately, and
+//! streams observations through probes instead of buffering them.
 
 use crate::config::SimConfig;
+use crate::coordinator::session::SimulationBuilder;
 use crate::engine::metrics::{Phase, RankReport};
-use crate::engine::process::{RankProcess, RunOptions};
-use crate::geometry::{Decomposition, Grid};
-use crate::mpi::run_cluster;
-use crate::util::memtrack::PeakScope;
+use crate::engine::probe::ActivityProbe;
+use crate::engine::process::RunOptions;
 
 /// Aggregated outcome of one simulation run.
 #[derive(Clone, Debug)]
@@ -87,50 +92,46 @@ impl RunSummary {
 
 /// Run a full simulation (construction + `cfg.duration_ms` of activity)
 /// on `cfg.ranks` virtual-MPI ranks.
+///
+/// **Deprecated in favor of the staged API** — this wrapper rebuilds
+/// the network on every call, which is exactly the cost
+/// `SimulationBuilder::build` lets callers pay once:
+///
+/// ```text
+/// let mut net = SimulationBuilder::from_parts(cfg, opts).build()?;
+/// net.session().advance(cfg.duration_ms);
+/// let summary = net.summary();
+/// ```
+#[deprecated(
+    since = "0.2.0",
+    note = "use SimulationBuilder → Network → Session; this wrapper reconstructs \
+            the network on every call"
+)]
 pub fn run_simulation(cfg: &SimConfig, opts: &RunOptions) -> RunSummary {
-    cfg.validate().expect("invalid configuration");
-    let scope = PeakScope::begin();
-    let steps = (cfg.duration_ms / cfg.dt_ms).round() as u64;
-    let cfg_arc = cfg.clone();
-    let opts_arc = opts.clone();
-    let results = run_cluster(cfg.ranks, move |mut comm| {
-        let grid = Grid::new(cfg_arc.grid);
-        let decomp = Decomposition::new(&grid, comm.ranks(), opts_arc.mapping);
-        let mut proc = RankProcess::construct(&cfg_arc, &decomp, &mut comm, &opts_arc);
-        for s in 0..steps {
-            proc.step(&mut comm, s);
+    let mut net = SimulationBuilder::from_parts(cfg.clone(), opts.clone())
+        .build()
+        .expect("invalid configuration");
+    let mut activity = ActivityProbe::new();
+    {
+        let mut session = net.session();
+        if opts.record_activity {
+            session.attach(&mut activity);
         }
-        let my_columns = proc.my_columns().to_vec();
-        let (metrics, activity) = proc.finish(&comm);
-        let wire = metrics.to_wire(comm.stats());
-        (RankReport::from_wire(&wire), activity, my_columns)
-    });
-    let peak_bytes = scope.peak_delta();
-
-    let grid = Grid::new(cfg.grid);
-    let ncols = grid.columns() as usize;
-    let mut activity = Vec::new();
+        session.advance(cfg.duration_ms);
+    }
+    let mut summary = net.summary();
+    // exact compatibility: the one-shot API always reported the
+    // *requested* duration, even when it was not a whole number of
+    // steps (the staged summary reports steps × dt)
+    summary.duration_ms = cfg.duration_ms;
     if opts.record_activity {
-        activity = (0..steps as usize).map(|_| vec![0u32; ncols]).collect();
-        for (_, act, cols) in &results {
-            for (s, per_col) in act.iter().enumerate() {
-                for (i, &n) in per_col.iter().enumerate() {
-                    activity[s][cols[i] as usize] = n;
-                }
-            }
-        }
+        summary.activity = activity.into_rows();
     }
-    RunSummary {
-        ranks: cfg.ranks,
-        duration_ms: cfg.duration_ms,
-        neurons: cfg.grid.neurons(),
-        reports: results.iter().map(|(r, _, _)| r.clone()).collect(),
-        peak_bytes,
-        activity,
-    }
+    summary
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the wrapper's own regression tests
 mod tests {
     use super::*;
     use crate::config::SimConfig;

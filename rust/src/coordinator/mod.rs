@@ -1,6 +1,11 @@
-//! Cluster leader: orchestrates the virtual cluster and aggregates the
-//! paper's measurements.
+//! Simulation orchestration: the staged build-once/run-many pipeline
+//! ([`SimulationBuilder`] → [`Network`] → [`Session`]), run summaries,
+//! and the legacy one-shot [`run_simulation`] compatibility wrapper.
 
 pub mod leader;
+pub mod session;
 
-pub use leader::{run_simulation, RunSummary};
+pub use leader::RunSummary;
+#[allow(deprecated)]
+pub use leader::run_simulation;
+pub use session::{Network, Session, SimulationBuilder};

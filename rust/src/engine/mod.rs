@@ -1,9 +1,14 @@
 //! The DPSNN simulation engine: per-rank process state and the
-//! execution flow of paper Fig. 1, plus metrics and STDP.
+//! execution flow of paper Fig. 1, plus metrics, streaming probes and
+//! STDP.
 
 pub mod metrics;
 pub mod plasticity;
+pub mod probe;
 pub mod process;
 
 pub use metrics::{EngineMetrics, Phase, RankReport};
+pub use probe::{
+    ActivityProbe, FiringRateProbe, PhaseMetricsProbe, Probe, SpikeCountProbe, StepSample,
+};
 pub use process::{RankProcess, RunOptions, WireSpike};

@@ -1,0 +1,316 @@
+//! Streaming observation probes.
+//!
+//! The legacy `record_activity: bool` buffered a full `steps × columns`
+//! matrix inside every run — O(duration × grid) memory that capped long
+//! simulations. Probes invert that: after every time-driven step the
+//! session hands each attached probe one [`StepSample`] (per-column
+//! spike counts for *that step only*, plus per-phase CPU deltas), and
+//! the probe keeps whatever running reduction it wants. Memory is
+//! bounded by the probe, not by the run length.
+//!
+//! Built-ins:
+//!
+//! * [`SpikeCountProbe`] — total + per-step population spike counts;
+//! * [`FiringRateProbe`] — windowed population firing rate [Hz];
+//! * [`PhaseMetricsProbe`] — cumulative per-phase CPU split;
+//! * [`ActivityProbe`] — the full per-column matrix (explicitly opt-in;
+//!   this is the one probe that intentionally materializes
+//!   O(steps × columns), for Fig. 3/4-style wave analysis).
+//!
+//! Custom probes implement [`Probe`]; sessions borrow them mutably, so
+//! after the session ends the caller reads results straight off their
+//! own value — no downcasting.
+
+use crate::engine::metrics::{Phase, PHASES};
+
+/// One step's observations, streamed to every attached probe.
+#[derive(Clone, Copy, Debug)]
+pub struct StepSample<'a> {
+    /// Global step index (network lifetime, not session-relative).
+    pub step: u64,
+    /// Simulated time at the *end* of this step [ms].
+    pub t_ms: f64,
+    /// Step width [ms].
+    pub dt_ms: f64,
+    /// Neurons in the network (for rate normalization).
+    pub neurons: u64,
+    /// Spikes emitted this step, whole network.
+    pub spikes: u64,
+    /// Spikes emitted this step per global column.
+    pub col_spikes: &'a [u32],
+    /// CPU nanoseconds spent in each phase this step, summed over ranks
+    /// (indexed by `Phase::index()`).
+    pub phase_ns: &'a [u64; PHASES.len()],
+}
+
+/// A streaming observer of simulation steps.
+pub trait Probe {
+    /// Short name (reports, diagnostics).
+    fn name(&self) -> &'static str;
+
+    /// Observe one completed step.
+    fn on_step(&mut self, sample: &StepSample<'_>);
+
+    /// Human-readable summary of what was observed so far.
+    fn report(&self) -> String {
+        String::new()
+    }
+}
+
+/// Total and per-step population spike counts (O(steps) memory).
+#[derive(Clone, Debug, Default)]
+pub struct SpikeCountProbe {
+    total: u64,
+    per_step: Vec<u32>,
+}
+
+impl SpikeCountProbe {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn per_step(&self) -> &[u32] {
+        &self.per_step
+    }
+}
+
+impl Probe for SpikeCountProbe {
+    fn name(&self) -> &'static str {
+        "spike-count"
+    }
+
+    fn on_step(&mut self, s: &StepSample<'_>) {
+        self.total += s.spikes;
+        self.per_step.push(s.spikes as u32);
+    }
+
+    fn report(&self) -> String {
+        format!("spike-count: {} spikes over {} steps", self.total, self.per_step.len())
+    }
+}
+
+/// Windowed population firing rate [Hz] (O(steps / window) memory).
+#[derive(Clone, Debug)]
+pub struct FiringRateProbe {
+    window_ms: f64,
+    acc_spikes: u64,
+    acc_ms: f64,
+    rates: Vec<f64>,
+}
+
+impl FiringRateProbe {
+    pub fn new(window_ms: f64) -> Self {
+        assert!(window_ms > 0.0, "window must be positive");
+        FiringRateProbe { window_ms, acc_spikes: 0, acc_ms: 0.0, rates: Vec::new() }
+    }
+
+    /// One rate per completed window [Hz].
+    pub fn rates_hz(&self) -> &[f64] {
+        &self.rates
+    }
+
+    /// Mean rate over all completed windows [Hz].
+    pub fn mean_hz(&self) -> f64 {
+        if self.rates.is_empty() {
+            0.0
+        } else {
+            self.rates.iter().sum::<f64>() / self.rates.len() as f64
+        }
+    }
+}
+
+impl Probe for FiringRateProbe {
+    fn name(&self) -> &'static str {
+        "firing-rate"
+    }
+
+    fn on_step(&mut self, s: &StepSample<'_>) {
+        self.acc_spikes += s.spikes;
+        self.acc_ms += s.dt_ms;
+        if self.acc_ms + 1e-9 >= self.window_ms {
+            let rate = self.acc_spikes as f64 / s.neurons.max(1) as f64 / (self.acc_ms / 1000.0);
+            self.rates.push(rate);
+            self.acc_spikes = 0;
+            self.acc_ms = 0.0;
+        }
+    }
+
+    fn report(&self) -> String {
+        format!(
+            "firing-rate: {:.2} Hz mean over {} windows of {} ms",
+            self.mean_hz(),
+            self.rates.len(),
+            self.window_ms
+        )
+    }
+}
+
+/// Cumulative per-phase CPU breakdown (O(1) memory).
+#[derive(Clone, Debug, Default)]
+pub struct PhaseMetricsProbe {
+    totals: [u64; PHASES.len()],
+    steps: u64,
+}
+
+impl PhaseMetricsProbe {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn phase_ns(&self, phase: Phase) -> u64 {
+        self.totals[phase.index()]
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+}
+
+impl Probe for PhaseMetricsProbe {
+    fn name(&self) -> &'static str {
+        "phase-metrics"
+    }
+
+    fn on_step(&mut self, s: &StepSample<'_>) {
+        for (t, d) in self.totals.iter_mut().zip(s.phase_ns) {
+            *t += d;
+        }
+        self.steps += 1;
+    }
+
+    fn report(&self) -> String {
+        let total: u64 = self.totals.iter().sum();
+        let mut out = String::from("phase-metrics:");
+        for p in PHASES {
+            out.push_str(&format!(
+                " {} {:.1}%",
+                p.name(),
+                self.totals[p.index()] as f64 / total.max(1) as f64 * 100.0
+            ));
+        }
+        out
+    }
+}
+
+/// Full per-step per-column spike matrix — the legacy `record_activity`
+/// observable. **O(steps × columns) memory by design**; prefer the
+/// streaming probes for long runs.
+#[derive(Clone, Debug, Default)]
+pub struct ActivityProbe {
+    rows: Vec<Vec<u32>>,
+}
+
+impl ActivityProbe {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Per-step, per-global-column spike counts.
+    pub fn rows(&self) -> &[Vec<u32>] {
+        &self.rows
+    }
+
+    /// Consume the probe, yielding the matrix.
+    pub fn into_rows(self) -> Vec<Vec<u32>> {
+        self.rows
+    }
+
+    /// Move the matrix out, leaving the probe empty.
+    pub fn take_rows(&mut self) -> Vec<Vec<u32>> {
+        std::mem::take(&mut self.rows)
+    }
+}
+
+impl Probe for ActivityProbe {
+    fn name(&self) -> &'static str {
+        "activity"
+    }
+
+    fn on_step(&mut self, s: &StepSample<'_>) {
+        self.rows.push(s.col_spikes.to_vec());
+    }
+
+    fn report(&self) -> String {
+        format!(
+            "activity: {} steps x {} columns recorded",
+            self.rows.len(),
+            self.rows.first().map_or(0, Vec::len)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample<'a>(
+        step: u64,
+        spikes: u64,
+        cols: &'a [u32],
+        phase: &'a [u64; PHASES.len()],
+    ) -> StepSample<'a> {
+        StepSample {
+            step,
+            t_ms: (step + 1) as f64,
+            dt_ms: 1.0,
+            neurons: 100,
+            spikes,
+            col_spikes: cols,
+            phase_ns: phase,
+        }
+    }
+
+    #[test]
+    fn spike_count_probe_accumulates() {
+        let mut p = SpikeCountProbe::new();
+        let phase = [0u64; PHASES.len()];
+        p.on_step(&sample(0, 3, &[1, 2], &phase));
+        p.on_step(&sample(1, 5, &[5, 0], &phase));
+        assert_eq!(p.total(), 8);
+        assert_eq!(p.per_step(), &[3, 5]);
+        assert!(p.report().contains("8 spikes"));
+    }
+
+    #[test]
+    fn firing_rate_probe_windows_correctly() {
+        let mut p = FiringRateProbe::new(10.0);
+        let phase = [0u64; PHASES.len()];
+        for step in 0..20u64 {
+            p.on_step(&sample(step, 50, &[], &phase));
+        }
+        // 50 spikes/step × 10 steps = 500 per window; 100 neurons over
+        // 10 ms → 500 Hz
+        assert_eq!(p.rates_hz().len(), 2);
+        assert!((p.rates_hz()[0] - 500.0).abs() < 1e-9);
+        assert!((p.mean_hz() - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phase_probe_sums_deltas() {
+        let mut p = PhaseMetricsProbe::new();
+        let mut phase = [0u64; PHASES.len()];
+        phase[Phase::Dynamics.index()] = 70;
+        phase[Phase::Exchange.index()] = 30;
+        p.on_step(&sample(0, 0, &[], &phase));
+        p.on_step(&sample(1, 0, &[], &phase));
+        assert_eq!(p.phase_ns(Phase::Dynamics), 140);
+        assert_eq!(p.phase_ns(Phase::Exchange), 60);
+        assert_eq!(p.steps(), 2);
+        assert!(p.report().contains("dynamics"));
+    }
+
+    #[test]
+    fn activity_probe_materializes_rows() {
+        let mut p = ActivityProbe::new();
+        let phase = [0u64; PHASES.len()];
+        p.on_step(&sample(0, 3, &[1, 2, 0], &phase));
+        p.on_step(&sample(1, 1, &[0, 0, 1], &phase));
+        assert_eq!(p.rows(), &[vec![1, 2, 0], vec![0, 0, 1]]);
+        assert_eq!(p.take_rows().len(), 2);
+        assert!(p.rows().is_empty());
+    }
+}

@@ -25,7 +25,7 @@
 use crate::config::{SimConfig, Solver};
 use crate::connectivity::builder::generate_outgoing;
 use crate::connectivity::rules::Stencil;
-use crate::engine::metrics::{EngineMetrics, Phase};
+use crate::engine::metrics::{EngineMetrics, Phase, RankReport};
 use crate::engine::plasticity::{Plasticity, StdpParams};
 use crate::geometry::grid::NeuronId;
 use crate::geometry::{ColumnId, Decomposition, Grid};
@@ -52,7 +52,10 @@ impl Wire for WireSpike {
 #[derive(Clone, Debug)]
 pub struct RunOptions {
     pub mapping: crate::geometry::Mapping,
-    /// Record per-step, per-column spike counts (Fig. 3/4 analysis).
+    /// Legacy switch: materialize the full per-step per-column spike
+    /// matrix in `RunSummary::activity`. The staged API replaces this
+    /// with streaming probes (`engine::probe`); the `run_simulation`
+    /// wrapper maps it onto an `ActivityProbe` for compatibility.
     pub record_activity: bool,
     /// Use the naive full-Alltoallv delivery instead of the paper's
     /// two-step subset protocol (ablation).
@@ -69,6 +72,49 @@ impl Default for RunOptions {
             naive_delivery: false,
             stdp: StdpParams::default(),
         }
+    }
+}
+
+impl RunOptions {
+    /// Load run options from a parsed TOML document (`[run]` and
+    /// `[stdp]` tables); missing keys keep defaults. Together with
+    /// `SimConfig::from_doc` this makes a run fully reproducible from
+    /// one file:
+    ///
+    /// ```toml
+    /// [run]
+    /// mapping         = "block"      # or "roundrobin"
+    /// naive_delivery  = false        # ablation: full Alltoallv per step
+    /// record_activity = false        # legacy activity matrix
+    ///
+    /// [stdp]
+    /// a_plus            = 0.005
+    /// a_minus           = 0.006
+    /// tau_plus_ms       = 20.0
+    /// tau_minus_ms      = 20.0
+    /// apply_interval_ms = 1000.0
+    /// w_bound_factor    = 2.0
+    /// ```
+    pub fn from_doc(doc: &crate::config::toml::Doc) -> Result<Self, String> {
+        let d = RunOptions::default();
+        let mapping =
+            crate::geometry::Mapping::parse(&doc.str_or("run.mapping", "block")?)?;
+        let s = d.stdp;
+        let stdp = StdpParams {
+            a_plus: doc.float_or("stdp.a_plus", s.a_plus as f64)? as f32,
+            a_minus: doc.float_or("stdp.a_minus", s.a_minus as f64)? as f32,
+            tau_plus_ms: doc.float_or("stdp.tau_plus_ms", s.tau_plus_ms as f64)? as f32,
+            tau_minus_ms: doc.float_or("stdp.tau_minus_ms", s.tau_minus_ms as f64)? as f32,
+            apply_interval_ms: doc.float_or("stdp.apply_interval_ms", s.apply_interval_ms)?,
+            w_bound_factor: doc.float_or("stdp.w_bound_factor", s.w_bound_factor as f64)?
+                as f32,
+        };
+        Ok(RunOptions {
+            mapping,
+            record_activity: doc.bool_or("run.record_activity", d.record_activity)?,
+            naive_delivery: doc.bool_or("run.naive_delivery", d.naive_delivery)?,
+            stdp,
+        })
     }
 }
 
@@ -103,8 +149,14 @@ pub struct RankProcess {
     /// order -> decomposition-invariant, see stimulus::poisson).
     stim_streams: Vec<crate::util::prng::Pcg64>,
     pub metrics: EngineMetrics,
-    /// Optional per-step per-local-column spike counts.
-    pub activity: Vec<Vec<u32>>,
+    /// When set, refresh `step_col_spikes` after every step (probe
+    /// observation). Streaming replacement for the removed
+    /// `activity: Vec<Vec<u32>>` buffer: memory is O(local columns),
+    /// not O(steps × columns).
+    observe: bool,
+    /// Spikes emitted in the *latest* step, per local column (valid
+    /// only while `observe` is on).
+    step_col_spikes: Vec<u32>,
     plasticity: Option<Plasticity>,
     batch: Option<BatchSolver>,
     opts: RunOptions,
@@ -152,7 +204,8 @@ impl RankProcess {
         let n_local = my_columns.len() as u32 * grid.p.neurons_per_column;
 
         // --- generate outgoing synapses, bucketed by target rank ---
-        let stencil = Stencil::remote(&cfg.conn, &grid);
+        // (kernel-aware: a custom ConnectivityKernel drives the stencil)
+        let stencil = Stencil::for_kernel(&*cfg.kernel_dyn(), cfg.conn.cutoff, &grid);
         let buckets = generate_outgoing(cfg, &grid, decomp, &stencil, &my_columns);
 
         // --- per-neuron spike routing (which ranks host my synapses) ---
@@ -257,11 +310,80 @@ impl RankProcess {
             ext_buf: Vec::new(),
             stim_streams,
             metrics,
-            activity: Vec::new(),
+            observe: false,
+            step_col_spikes: Vec::new(),
             plasticity,
             batch,
             opts: opts.clone(),
         }
+    }
+
+    /// Toggle per-step column-spike observation (drives probes).
+    pub fn set_observe(&mut self, on: bool) {
+        self.observe = on;
+        if on && self.step_col_spikes.len() != self.my_columns.len() {
+            self.step_col_spikes = vec![0; self.my_columns.len()];
+        }
+    }
+
+    /// Spikes emitted in the latest step per local column (only
+    /// meaningful while observation is on).
+    pub fn step_col_spikes(&self) -> &[u32] {
+        &self.step_col_spikes
+    }
+
+    /// Rewind the dynamic state to t = 0 while keeping the constructed
+    /// network (synapses, routing CSRs, send/recv subsets) intact —
+    /// the cheap part of "build once, run many". Counters and stimulus
+    /// streams restart so a reset run replays exactly like a fresh one.
+    /// (With plasticity on, STDP traces restart but weights already
+    /// consolidated into the store are kept.)
+    pub fn reset(&mut self) {
+        for s in &mut self.states {
+            *s = LifState::resting(&self.exc_params);
+        }
+        self.queue = DelayQueue::new(self.cfg.delay_slots() + 1);
+        self.fired.clear();
+        for b in &mut self.pack_bufs {
+            b.clear();
+        }
+        self.ext_buf.clear();
+        let npc = self.grid.p.neurons_per_column;
+        self.stim_streams = (0..self.n_local)
+            .map(|local| {
+                let col = self.my_columns[(local / npc) as usize];
+                self.stim.neuron_stream(self.grid.neuron_id(col, local % npc))
+            })
+            .collect();
+        if let Some(p) = &mut self.plasticity {
+            *p = Plasticity::new(self.opts.stdp, &self.store, self.n_local);
+        }
+        // the batched solver holds (v, c, refr) host-side between steps;
+        // rebuild it so the replay starts from resting state too
+        if self.batch.is_some() {
+            self.batch = Some(
+                BatchSolver::new(&self.cfg, self.n_local)
+                    .expect("XLA solver rebuild on reset"),
+            );
+        }
+        // keep construction-time figures, restart the run counters
+        let keep = (
+            self.metrics.init_cpu_ns,
+            self.metrics.synapses_resident,
+            self.metrics.resident_bytes,
+        );
+        self.metrics = EngineMetrics::default();
+        (self.metrics.init_cpu_ns, self.metrics.synapses_resident, self.metrics.resident_bytes) =
+            keep;
+    }
+
+    /// Swap the external-stimulus parameters (rate sweeps / mid-run
+    /// stimulus switching). Streams keep their per-neuron state, so the
+    /// change is seamless mid-run; combine with [`reset`](Self::reset)
+    /// for an independent replay under the new drive.
+    pub fn set_external(&mut self, external: crate::config::ExternalParams) {
+        self.cfg.external = external;
+        self.stim = ExternalStimulus::new(&self.cfg);
     }
 
     pub fn n_local(&self) -> u32 {
@@ -404,14 +526,14 @@ impl RankProcess {
             self.metrics.stop(Phase::Plasticity);
         }
 
-        if self.opts.record_activity {
+        if self.observe {
             let npc = self.grid.p.neurons_per_column;
-            let mut per_col = vec![0u32; self.my_columns.len()];
+            self.step_col_spikes.clear();
+            self.step_col_spikes.resize(self.my_columns.len(), 0);
             for sp in &self.fired {
                 let local = self.to_local(sp.gid as u64);
-                per_col[(local / npc) as usize] += 1;
+                self.step_col_spikes[(local / npc) as usize] += 1;
             }
-            self.activity.push(per_col);
         }
 
         self.metrics.sim_cpu_ns += thread_cputime_ns() - t_sim0;
@@ -518,13 +640,22 @@ impl RankProcess {
         }
     }
 
+    /// Snapshot this rank's report (non-consuming: sessions call this
+    /// after any number of steps and keep stepping afterwards).
+    pub fn report(&mut self, stats: &crate::mpi::CommStats) -> RankReport {
+        self.metrics.resident_bytes = self.store.resident_bytes()
+            + self.queue.resident_bytes()
+            + self.plasticity.as_ref().map_or(0, |p| p.resident_bytes());
+        RankReport::from_wire(&self.metrics.to_wire(stats))
+    }
+
     /// Wrap up: final metrics with comm stats folded in.
-    pub fn finish(mut self, comm: &RankComm) -> (EngineMetrics, Vec<Vec<u32>>) {
+    pub fn finish(mut self, comm: &RankComm) -> EngineMetrics {
         self.metrics.resident_bytes = self.store.resident_bytes()
             + self.queue.resident_bytes()
             + self.plasticity.as_ref().map_or(0, |p| p.resident_bytes());
         let _ = comm;
-        (self.metrics, std::mem::take(&mut self.activity))
+        self.metrics
     }
 }
 
@@ -557,7 +688,7 @@ mod tests {
                 proc.step(&mut comm, s);
                 all_spikes.extend(proc.fired.iter().copied());
             }
-            let (m, _) = proc.finish(&comm);
+            let m = proc.finish(&comm);
             (m, all_spikes)
         })
     }
@@ -650,24 +781,62 @@ mod tests {
     }
 
     #[test]
-    fn activity_recording_matches_spike_counts() {
+    fn observed_column_spikes_match_spike_counts() {
+        // streaming observation: per-step column counts summed over the
+        // run must equal the metrics' spike total
         let cfg = tiny_cfg();
         let results = run_cluster(1, move |mut comm| {
             let grid = Grid::new(cfg.grid);
             let decomp = Decomposition::new(&grid, 1, Mapping::Block);
-            let opts = RunOptions { record_activity: true, ..Default::default() };
+            let opts = RunOptions::default();
             let mut proc = RankProcess::construct(&cfg, &decomp, &mut comm, &opts);
+            proc.set_observe(true);
+            let mut recorded = 0u64;
+            let mut steps_seen = 0u32;
             for s in 0..30 {
                 proc.step(&mut comm, s);
+                recorded += proc.step_col_spikes().iter().map(|&n| n as u64).sum::<u64>();
+                steps_seen += 1;
             }
-            let spikes = proc.metrics.spikes;
-            let (_, activity) = proc.finish(&comm);
-            (spikes, activity)
+            (proc.metrics.spikes, recorded, steps_seen)
         });
-        let (spikes, activity) = &results[0];
-        assert_eq!(activity.len(), 30);
-        let recorded: u32 = activity.iter().flat_map(|v| v.iter()).sum();
-        assert_eq!(recorded as u64, *spikes);
+        let (spikes, recorded, steps) = results[0];
+        assert_eq!(steps, 30);
+        assert_eq!(recorded, spikes);
+        assert!(spikes > 0);
+    }
+
+    #[test]
+    fn reset_replays_identically_and_external_swap_changes_drive() {
+        let cfg = tiny_cfg();
+        let results = run_cluster(1, move |mut comm| {
+            let grid = Grid::new(cfg.grid);
+            let decomp = Decomposition::new(&grid, 1, Mapping::Block);
+            let opts = RunOptions::default();
+            let mut proc = RankProcess::construct(&cfg, &decomp, &mut comm, &opts);
+            let run = |proc: &mut RankProcess, comm: &mut crate::mpi::RankComm| {
+                let mut spikes = Vec::new();
+                for s in 0..20 {
+                    proc.step(comm, s);
+                    spikes.extend(proc.fired.iter().copied());
+                }
+                spikes
+            };
+            let first = run(&mut proc, &mut comm);
+            proc.reset();
+            let replay = run(&mut proc, &mut comm);
+            proc.reset();
+            proc.set_external(crate::config::ExternalParams {
+                synapses_per_neuron: cfg.external.synapses_per_neuron,
+                rate_hz: cfg.external.rate_hz * 3.0,
+            });
+            let hotter = run(&mut proc, &mut comm);
+            (first, replay, hotter)
+        });
+        let (first, replay, hotter) = &results[0];
+        assert!(!first.is_empty());
+        assert_eq!(first, replay, "reset must replay bit-identically");
+        assert!(hotter.len() > first.len(), "3x external rate must raise activity");
     }
 
     #[test]

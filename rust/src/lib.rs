@@ -4,8 +4,60 @@
 //! Pastorelli et al., *"Gaussian and exponential lateral connectivity on
 //! distributed spiking neural network simulation"* (PDP 2018).
 //!
-//! See `DESIGN.md` for the system inventory and the experiment index, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! ## Staged simulation API (v0.2)
+//!
+//! The paper's costs split into *construction* (§II-D, the memory-
+//! dominating two-step Alltoall synapse exchange) and *per-iteration
+//! simulation* (§II-E). The public API exposes that seam — build once,
+//! run many:
+//!
+//! ```no_run
+//! use dpsnn::{FiringRateProbe, SimulationBuilder};
+//!
+//! let mut net = SimulationBuilder::gaussian(8) // 8×8 columns, paper preset
+//!     .ranks(4)
+//!     .external(420, 3.0)
+//!     .build()
+//!     .expect("construction");
+//!
+//! // Sweep stimulus rates against ONE constructed network.
+//! for rate_hz in [2.0, 4.0, 8.0] {
+//!     net.reset(); // rewind dynamics; connectivity untouched
+//!     net.set_external(420, rate_hz);
+//!     let mut rate = FiringRateProbe::new(100.0);
+//!     let mut session = net.session();
+//!     session.attach(&mut rate);
+//!     session.advance(500.0); // ms, resumable in arbitrary chunks
+//!     println!("{rate_hz} Hz in -> {:.2} Hz out", rate.mean_hz());
+//! }
+//! let summary = net.summary();
+//! ```
+//!
+//! * [`SimulationBuilder`] — typed, chainable configuration (presets,
+//!   TOML, custom connectivity kernels);
+//! * [`Network`] — the constructed cluster: synapse stores, routing
+//!   CSRs, send/recv subsets. Built exactly once; reusable across
+//!   sessions, resettable, stimulus-reseedable;
+//! * [`Session`] — `step()` / `advance(ms)` / `summary()`, with
+//!   streaming [`Probe`]s replacing the old buffer-everything
+//!   `record_activity` flag;
+//! * [`ConnectivityKernel`] — open trait behind the connectivity rules:
+//!   the paper's Gaussian/exponential plus doubly-exponential and
+//!   flat-disc profiles ship built-in, custom kernels plug in through
+//!   the same machinery (cutoff stencils, envelope thinning, Table I
+//!   analytics).
+//!
+//! ### Migration from v0.1
+//!
+//! `run_simulation(&SimConfig, &RunOptions)` still compiles and returns
+//! the same `RunSummary`, but is **deprecated**: it is now a thin
+//! wrapper that rebuilds the network on every call. Port callers to the
+//! staged pipeline to pay construction once; port
+//! `record_activity: true` to an [`ActivityProbe`] (or a streaming
+//! probe — the matrix is O(steps × columns) and caps long runs).
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod config;
 pub mod geometry;
@@ -33,3 +85,12 @@ pub mod perfmodel;
 
 pub mod bench_harness;
 pub mod repro;
+
+pub use config::SimConfig;
+pub use connectivity::ConnectivityKernel;
+#[allow(deprecated)]
+pub use coordinator::run_simulation;
+pub use coordinator::{Network, RunSummary, Session, SimulationBuilder};
+pub use engine::{
+    ActivityProbe, FiringRateProbe, PhaseMetricsProbe, Probe, SpikeCountProbe, StepSample,
+};

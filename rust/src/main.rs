@@ -5,9 +5,10 @@
 
 use dpsnn::config::cli::{Args, Command};
 use dpsnn::config::{toml, ConnRule, SimConfig, Solver};
-use dpsnn::coordinator::run_simulation;
-use dpsnn::engine::{Phase, RunOptions};
-use dpsnn::geometry::Mapping;
+use dpsnn::connectivity::{builtin_kernel, resolve_kernel, Stencil, KERNEL_NAMES};
+use dpsnn::coordinator::SimulationBuilder;
+use dpsnn::engine::{ActivityProbe, Phase, RunOptions};
+use dpsnn::geometry::{Grid, Mapping};
 use dpsnn::repro;
 use dpsnn::util::timer::fmt_ns;
 
@@ -15,7 +16,7 @@ fn commands() -> Vec<Command> {
     vec![
         Command::new("run", "run a simulation and print the summary")
             .opt("config", "TOML config file (flags below override it)")
-            .opt("rule", "connectivity rule: gaussian|exponential")
+            .opt("rule", "connectivity kernel: gaussian|exponential|doubly-exponential|flat-disc")
             .opt("side", "grid side (columns)")
             .opt("neurons-per-column", "neurons per column (paper: 1240)")
             .opt("ranks", "virtual MPI ranks")
@@ -26,6 +27,7 @@ fn commands() -> Vec<Command> {
             .flag("plasticity", "enable STDP")
             .flag("naive-delivery", "ablation: full Alltoallv every step")
             .flag("record-activity", "record per-column activity"),
+        Command::new("kernels", "list registered connectivity kernels and their stencils"),
         Command::new("table1", "regenerate Table I (problem sizes)"),
         Command::new("fig2", "regenerate Fig. 2 (projection stencils)"),
         Command::new("fig5", "regenerate Fig. 5 (strong scaling, gaussian)")
@@ -43,20 +45,38 @@ fn commands() -> Vec<Command> {
     ]
 }
 
-fn cfg_from_args(a: &Args) -> Result<SimConfig, String> {
-    let mut cfg = match a.get("config") {
+/// Build (config, options) from an optional TOML file plus CLI
+/// overrides. The `[run]`/`[stdp]` tables make a run fully reproducible
+/// from one file; flags override individual keys.
+fn parts_from_args(a: &Args) -> Result<(SimConfig, RunOptions), String> {
+    let (mut cfg, mut opts, doc) = match a.get("config") {
         Some(path) => {
             let text = std::fs::read_to_string(path)
                 .map_err(|e| format!("reading {path}: {e}"))?;
-            SimConfig::from_doc(&toml::parse(&text).map_err(|e| e.to_string())?)?
+            let doc = toml::parse(&text).map_err(|e| e.to_string())?;
+            (SimConfig::from_doc(&doc)?, RunOptions::from_doc(&doc)?, Some(doc))
         }
-        None => SimConfig::gaussian(8),
+        None => (SimConfig::gaussian(8), RunOptions::default(), None),
     };
     if let Some(rule) = a.get("rule") {
-        cfg.conn = match ConnRule::parse(rule)? {
-            ConnRule::Gaussian => dpsnn::config::ConnParams::gaussian(),
-            ConnRule::Exponential => dpsnn::config::ConnParams::exponential(),
-        };
+        match ConnRule::parse(rule) {
+            Ok(ConnRule::Gaussian) => {
+                cfg.conn = dpsnn::config::ConnParams::gaussian();
+                cfg.kernel = None;
+            }
+            Ok(ConnRule::Exponential) => {
+                cfg.conn = dpsnn::config::ConnParams::exponential();
+                cfg.kernel = None;
+            }
+            Err(_) => {
+                // keep kernel parameters from the loaded TOML (if any)
+                // when the flag merely selects which kernel to use
+                cfg.kernel = Some(match &doc {
+                    Some(d) => dpsnn::connectivity::kernel::from_doc(rule, d, &cfg.conn)?,
+                    None => resolve_kernel(rule, &cfg.conn)?,
+                });
+            }
+        }
     }
     if let Some(side) = a.get_parsed::<u32>("side")? {
         cfg.grid.nx = side;
@@ -73,26 +93,37 @@ fn cfg_from_args(a: &Args) -> Result<SimConfig, String> {
     }
     cfg.plasticity = cfg.plasticity || a.has_flag("plasticity");
     cfg.validate()?;
-    Ok(cfg)
+    if let Some(m) = a.get("mapping") {
+        opts.mapping = Mapping::parse(m)?;
+    }
+    opts.record_activity = opts.record_activity || a.has_flag("record-activity");
+    opts.naive_delivery = opts.naive_delivery || a.has_flag("naive-delivery");
+    Ok((cfg, opts))
 }
 
 fn cmd_run(a: &Args) -> Result<(), String> {
-    let cfg = cfg_from_args(a)?;
-    let opts = RunOptions {
-        mapping: Mapping::parse(a.get("mapping").unwrap_or("block"))?,
-        record_activity: a.has_flag("record-activity"),
-        naive_delivery: a.has_flag("naive-delivery"),
-        ..Default::default()
-    };
+    let (cfg, opts) = parts_from_args(a)?;
     eprintln!(
         "running {}x{} {} on {} ranks, {} ms ...",
         cfg.grid.nx,
         cfg.grid.ny,
-        cfg.conn.rule.name(),
+        cfg.kernel_name(),
         cfg.ranks,
         cfg.duration_ms
     );
-    let s = run_simulation(&cfg, &opts);
+    let duration_ms = cfg.duration_ms;
+    let record_activity = opts.record_activity;
+    // staged pipeline: construct once, then drive one session
+    let mut net = SimulationBuilder::from_parts(cfg, opts).build()?;
+    let mut activity = ActivityProbe::new();
+    {
+        let mut session = net.session();
+        if record_activity {
+            session.attach(&mut activity);
+        }
+        session.advance(duration_ms);
+    }
+    let s = net.summary();
     println!("neurons:            {}", s.neurons);
     println!("synapses:           {}", s.synapses());
     println!("spikes:             {}", s.spikes());
@@ -103,7 +134,40 @@ fn cmd_run(a: &Args) -> Result<(), String> {
     for p in [Phase::Pack, Phase::Exchange, Phase::Demux, Phase::Dynamics] {
         println!("phase {:<10} {:>12}", p.name(), fmt_ns(s.phase_cpu_ns(p) as f64));
     }
+    if record_activity {
+        let rows = activity.rows();
+        let peak = rows.iter().map(|r| r.iter().sum::<u32>()).max().unwrap_or(0);
+        println!(
+            "activity:           {} steps x {} columns recorded (peak {} spikes/step)",
+            rows.len(),
+            rows.first().map_or(0, Vec::len),
+            peak
+        );
+    }
     Ok(())
+}
+
+fn cmd_kernels() {
+    let grid = Grid::new(SimConfig::gaussian(24).grid);
+    println!("registered connectivity kernels (paper defaults, 1/1000 cutoff):");
+    for name in KERNEL_NAMES {
+        // each kernel gets its matching paper preset: exponential-family
+        // kernels use A=0.03/λ=290, gaussian-family A=0.05/σ=100 —
+        // that is what makes the paper's 7x7 / 21x21 stencils appear
+        let conn = match name {
+            "exponential" | "doubly-exponential" => dpsnn::config::ConnParams::exponential(),
+            _ => dpsnn::config::ConnParams::gaussian(),
+        };
+        let k = builtin_kernel(name, &conn).expect("registered kernel");
+        let s = Stencil::for_kernel(&*k, conn.cutoff, &grid);
+        println!(
+            "  {name:<20} p(0)={:.3}  stencil {}x{} ({} offsets)",
+            k.prob_at(0.0),
+            s.bbox_side,
+            s.bbox_side,
+            s.offsets.len()
+        );
+    }
 }
 
 fn main() {
@@ -132,6 +196,10 @@ fn main() {
     }
     let result = match name.as_str() {
         "run" => cmd_run(&args),
+        "kernels" => {
+            cmd_kernels();
+            Ok(())
+        }
         "table1" => {
             println!("{}", repro::table1_report());
             Ok(())

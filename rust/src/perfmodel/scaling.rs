@@ -13,8 +13,7 @@
 
 use crate::config::{ConnRule, SimConfig};
 use crate::connectivity::analytic::expected_counts;
-use crate::coordinator::{run_simulation, RunSummary};
-use crate::engine::RunOptions;
+use crate::coordinator::RunSummary;
 use crate::geometry::Mapping;
 use crate::perfmodel::ibparams::ClusterParams;
 use crate::perfmodel::topology::comm_topology;
@@ -35,6 +34,13 @@ impl Calibration {
     /// Run the real engine on a reduced grid and extract the costs.
     /// `side` columns at full 1240 neurons/column keep per-synapse cache
     /// behaviour realistic while fitting this host.
+    ///
+    /// Staged measurement: the network is constructed **once** and then
+    /// driven through two measurement segments (`duration_ms / 2` each)
+    /// of the same [`Network`](crate::coordinator::Network); the
+    /// per-event cost is the mean over the segment points. Before the
+    /// staged API every additional point would have re-paid the §II-D
+    /// construction exchange.
     pub fn measure(rule: ConnRule, side: u32, duration_ms: f64) -> Calibration {
         let mut cfg = match rule {
             ConnRule::Gaussian => SimConfig::gaussian(side),
@@ -42,8 +48,18 @@ impl Calibration {
         };
         cfg.duration_ms = duration_ms;
         cfg.ranks = 1;
-        let s = run_simulation(&cfg, &RunOptions::default());
-        Calibration::from_summary(&s)
+        let mut net = crate::coordinator::SimulationBuilder::from_config(cfg)
+            .build()
+            .expect("calibration network construction");
+        let segments = crate::bench_harness::measure_segments(&mut net, 2, duration_ms / 2.0);
+        let s = net.summary();
+        let ns_per_event =
+            segments.iter().map(|c| c.ns_per_event).sum::<f64>() / segments.len() as f64;
+        Calibration {
+            ns_per_event,
+            rate_hz: s.firing_rate_hz(),
+            peak_bytes_per_synapse: s.peak_bytes_per_synapse(),
+        }
     }
 
     pub fn from_summary(s: &RunSummary) -> Calibration {

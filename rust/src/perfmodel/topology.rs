@@ -11,7 +11,7 @@
 //!   prices the payload exchange.
 
 use crate::config::SimConfig;
-use crate::connectivity::analytic::mean_offset_prob;
+use crate::connectivity::analytic::mean_offset_prob_kernel;
 use crate::connectivity::rules::Stencil;
 use crate::geometry::{Decomposition, Grid, Mapping};
 
@@ -50,7 +50,8 @@ pub fn comm_topology(
     rate_hz: f64,
 ) -> CommTopology {
     let grid = Grid::new(cfg.grid);
-    let stencil = Stencil::remote(&cfg.conn, &grid);
+    let kernel = cfg.kernel_dyn();
+    let stencil = Stencil::for_kernel(&*kernel, cfg.conn.cutoff, &grid);
     let decomp = Decomposition::new(&grid, ranks, mapping);
     let exc_pc = cfg.grid.exc_per_column() as f64;
     let npc = cfg.grid.neurons_per_column as f64;
@@ -59,7 +60,7 @@ pub fn comm_topology(
     let eps: Vec<f64> = stencil
         .offsets
         .iter()
-        .map(|o| mean_offset_prob(&cfg.conn, &grid, o.dx, o.dy))
+        .map(|o| mean_offset_prob_kernel(&*kernel, &grid, o.dx, o.dy))
         .collect();
 
     let r = ranks as usize;

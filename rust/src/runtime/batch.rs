@@ -17,10 +17,11 @@
 //! (one jump per step instead of per event) — the solver-ablation bench
 //! quantifies the statistical difference.
 
-use anyhow::{Context, Result};
-
 use crate::config::SimConfig;
+
+#[cfg(feature = "xla")]
 use crate::neuron::LifParams;
+#[cfg(feature = "xla")]
 use crate::runtime::pjrt::{Executable, Runtime};
 
 /// Artifact batch sizes emitted by `python/compile/aot.py`.
@@ -37,6 +38,7 @@ pub fn batch_size_for(n: usize) -> usize {
 }
 
 /// Per-rank batched solver state.
+#[cfg(feature = "xla")]
 pub struct BatchSolver {
     exe: Executable,
     n_local: usize,
@@ -61,10 +63,11 @@ pub struct BatchSolver {
     spiked_buf: Vec<u32>,
 }
 
+#[cfg(feature = "xla")]
 impl BatchSolver {
     /// Build for a rank with `n_local` neurons; `is_exc(local)` selects
     /// the parameter set. Requires `make artifacts` to have run.
-    pub fn new(cfg: &SimConfig, n_local: u32) -> Result<Self> {
+    pub fn new(cfg: &SimConfig, n_local: u32) -> Result<Self, String> {
         Self::with_populations(cfg, n_local, |local| {
             crate::geometry::Grid::new(cfg.grid)
                 .is_excitatory_local(local % cfg.grid.neurons_per_column)
@@ -75,29 +78,31 @@ impl BatchSolver {
         cfg: &SimConfig,
         n_local: u32,
         is_exc: impl Fn(u32) -> bool,
-    ) -> Result<Self> {
+    ) -> Result<Self, String> {
         let n = n_local as usize;
         let batch = batch_size_for(n);
-        anyhow::ensure!(
-            n <= batch,
-            "rank has {n} neurons > largest artifact batch {batch}; \
-             split ranks or add a larger batch size in aot.py"
-        );
+        if n > batch {
+            return Err(format!(
+                "rank has {n} neurons > largest artifact batch {batch}; \
+                 split ranks or add a larger batch size in aot.py"
+            ));
+        }
         let rt = Runtime::cpu()?;
         let exe = rt
             .load_artifact(&format!("lif_step_{batch}"))
-            .context("loading LIF step artifact")?;
+            .map_err(|e| format!("loading LIF step artifact: {e}"))?;
 
         let exc = LifParams::new(&cfg.exc);
         let inh = LifParams::new(&cfg.inh);
-        anyhow::ensure!(
-            (cfg.exc.e_rest_mv - cfg.inh.e_rest_mv).abs() < 1e-9
-                && (cfg.exc.v_theta_mv - cfg.inh.v_theta_mv).abs() < 1e-9
-                && (cfg.exc.v_reset_mv - cfg.inh.v_reset_mv).abs() < 1e-9
-                && (cfg.exc.tau_arp_ms - cfg.inh.tau_arp_ms).abs() < 1e-9,
-            "batched solver assumes shared E/θ/Vr/τarp across populations \
-             (per-population arrays for these are a straightforward extension)"
-        );
+        if !((cfg.exc.e_rest_mv - cfg.inh.e_rest_mv).abs() < 1e-9
+            && (cfg.exc.v_theta_mv - cfg.inh.v_theta_mv).abs() < 1e-9
+            && (cfg.exc.v_reset_mv - cfg.inh.v_reset_mv).abs() < 1e-9
+            && (cfg.exc.tau_arp_ms - cfg.inh.tau_arp_ms).abs() < 1e-9)
+        {
+            return Err("batched solver assumes shared E/θ/Vr/τarp across populations \
+                 (per-population arrays for these are a straightforward extension)"
+                .to_string());
+        }
         let dt = cfg.dt_ms;
         let mut em = vec![1.0f32; batch];
         let mut ec = vec![1.0f32; batch];
@@ -148,7 +153,7 @@ impl BatchSolver {
     }
 
     /// Execute one dt step; returns the locals that spiked.
-    pub fn execute(&mut self, dt_ms: f64) -> Result<&[u32]> {
+    pub fn execute(&mut self, dt_ms: f64) -> Result<&[u32], String> {
         let inputs = vec![
             xla::Literal::vec1(&self.v),
             xla::Literal::vec1(&self.c),
@@ -165,11 +170,16 @@ impl BatchSolver {
             xla::Literal::scalar(dt_ms as f32),
         ];
         let out = self.exe.run(&inputs)?;
-        anyhow::ensure!(out.len() == 4, "LIF artifact must return (v, c, refr, spike)");
-        self.v = out[0].to_vec::<f32>()?;
-        self.c = out[1].to_vec::<f32>()?;
-        self.refr = out[2].to_vec::<f32>()?;
-        let spikes = out[3].to_vec::<f32>()?;
+        if out.len() != 4 {
+            return Err("LIF artifact must return (v, c, refr, spike)".to_string());
+        }
+        let fetch = |lit: &xla::Literal| {
+            lit.to_vec::<f32>().map_err(|e| format!("fetching solver output: {e:?}"))
+        };
+        self.v = fetch(&out[0])?;
+        self.c = fetch(&out[1])?;
+        self.refr = fetch(&out[2])?;
+        let spikes = fetch(&out[3])?;
         self.spiked_buf.clear();
         for (i, &s) in spikes[..self.n_local].iter().enumerate() {
             if s > 0.5 {
@@ -189,13 +199,58 @@ impl BatchSolver {
     }
 }
 
+/// Stub standing in for the batched solver when the `xla` feature is
+/// off: construction reports a clean error, the engine's event-driven
+/// path (the paper's own solver) is unaffected.
+#[cfg(not(feature = "xla"))]
+pub struct BatchSolver {
+    _private: (),
+}
+
+#[cfg(not(feature = "xla"))]
+impl BatchSolver {
+    pub fn new(_cfg: &SimConfig, _n_local: u32) -> Result<Self, String> {
+        Err("XLA batched solver not compiled in: build with `--features xla` \
+             (requires the vendored `xla` crate) or use `--solver event`"
+            .to_string())
+    }
+
+    pub fn batch(&self) -> usize {
+        unreachable!("stub BatchSolver cannot be constructed")
+    }
+
+    pub fn clear_currents(&mut self) {
+        unreachable!("stub BatchSolver cannot be constructed")
+    }
+
+    pub fn add_current(&mut self, _local: u32, _weight: f32) {
+        unreachable!("stub BatchSolver cannot be constructed")
+    }
+
+    pub fn execute(&mut self, _dt_ms: f64) -> Result<&[u32], String> {
+        unreachable!("stub BatchSolver cannot be constructed")
+    }
+
+    pub fn v_of(&self, _local: u32) -> f32 {
+        unreachable!("stub BatchSolver cannot be constructed")
+    }
+
+    pub fn c_of(&self, _local: u32) -> f32 {
+        unreachable!("stub BatchSolver cannot be constructed")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    #[cfg(feature = "xla")]
     use crate::config::SimConfig;
+    #[cfg(feature = "xla")]
     use crate::neuron::{LifParams, LifState};
+    #[cfg(feature = "xla")]
     use crate::runtime::pjrt::artifacts_dir;
 
+    #[cfg(feature = "xla")]
     fn artifacts_available() -> bool {
         artifacts_dir().join("lif_step_1024.hlo.txt").exists()
     }
@@ -208,6 +263,17 @@ mod tests {
         assert_eq!(batch_size_for(50_000), 65536);
     }
 
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_solver_reports_clean_error() {
+        let err = match BatchSolver::new(&crate::config::SimConfig::test_small(), 10) {
+            Err(e) => e,
+            Ok(_) => panic!("stub must not construct"),
+        };
+        assert!(err.contains("--features xla"), "{err}");
+    }
+
+    #[cfg(feature = "xla")]
     #[test]
     fn batch_decay_matches_event_driven_exactly_without_spikes() {
         if !artifacts_available() {
@@ -237,6 +303,7 @@ mod tests {
         );
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn batch_spikes_and_adapts() {
         if !artifacts_available() {

@@ -3,13 +3,17 @@
 //!
 //! Interchange is HLO *text* — jax ≥ 0.5 serializes HloModuleProto with
 //! 64-bit instruction ids that the crate's xla_extension 0.5.1 rejects,
-//! while the text parser reassigns ids (see /opt/xla-example/README.md).
-//! Python runs only at build time (`make artifacts`); this module is the
-//! only bridge the simulation hot path uses.
+//! while the text parser reassigns ids. Python runs only at build time
+//! (`make artifacts`); this module is the only bridge the simulation
+//! hot path uses.
+//!
+//! The `xla` crate is not part of the offline dependency set, so the
+//! real client is compiled only with `--features xla` (vendor the crate
+//! first). Without the feature this module exposes the same API with a
+//! stub that reports a clean error — everything else in the simulator
+//! (the event-driven solver, i.e. the paper's own path) is unaffected.
 
-use std::path::{Path, PathBuf};
-
-use anyhow::{Context, Result};
+use std::path::PathBuf;
 
 /// Directory holding `*.hlo.txt` artifacts (overridable for tests).
 pub fn artifacts_dir() -> PathBuf {
@@ -18,73 +22,126 @@ pub fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-/// Lazily-created process-wide PJRT CPU client.
-///
-/// PJRT clients are heavyweight; all executables share one.
-pub struct Runtime {
-    client: xla::PjRtClient,
+#[cfg(feature = "xla")]
+mod real {
+    use super::artifacts_dir;
+    use std::path::Path;
+
+    /// Lazily-created process-wide PJRT CPU client.
+    ///
+    /// PJRT clients are heavyweight; all executables share one.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Self, String> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| format!("creating PJRT CPU client: {e:?}"))?;
+            Ok(Runtime { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load an HLO-text artifact and compile it for this client.
+        pub fn load_hlo_text(&self, path: &Path) -> Result<Executable, String> {
+            let text_path = path.to_str().ok_or("artifact path not utf-8")?;
+            let proto = xla::HloModuleProto::from_text_file(text_path)
+                .map_err(|e| format!("parsing HLO text {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| format!("compiling {}: {e:?}", path.display()))?;
+            Ok(Executable { exe, name: path.display().to_string() })
+        }
+
+        /// Load `artifacts/<name>.hlo.txt`.
+        pub fn load_artifact(&self, name: &str) -> Result<Executable, String> {
+            let path = artifacts_dir().join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                return Err(format!(
+                    "artifact {} not found — run `make artifacts` first",
+                    path.display()
+                ));
+            }
+            self.load_hlo_text(&path)
+        }
+    }
+
+    /// A compiled computation ready to execute.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        name: String,
+    }
+
+    impl Executable {
+        pub fn name(&self) -> &str {
+            &self.name
+        }
+
+        /// Execute with literal inputs; returns the tuple of output
+        /// literals (artifacts are lowered with `return_tuple=True`).
+        pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>, String> {
+            let result = self
+                .exe
+                .execute::<xla::Literal>(inputs)
+                .map_err(|e| format!("executing {}: {e:?}", self.name))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| format!("fetching output of {}: {e:?}", self.name))?;
+            out.to_tuple().map_err(|e| format!("untupling output: {e:?}"))
+        }
+    }
 }
 
-impl Runtime {
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client })
+#[cfg(not(feature = "xla"))]
+mod real {
+    use std::path::Path;
+
+    const UNAVAILABLE: &str = "XLA/PJRT runtime not compiled in: build with \
+         `--features xla` (requires the vendored `xla` crate); the \
+         event-driven solver needs no artifacts";
+
+    /// Stub standing in for the PJRT client when the `xla` feature is
+    /// off: construction reports a clean, actionable error.
+    pub struct Runtime {
+        _private: (),
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    impl Runtime {
+        pub fn cpu() -> Result<Self, String> {
+            Err(UNAVAILABLE.to_string())
+        }
+
+        pub fn platform(&self) -> String {
+            unreachable!("stub Runtime cannot be constructed")
+        }
+
+        pub fn load_hlo_text(&self, _path: &Path) -> Result<Executable, String> {
+            unreachable!("stub Runtime cannot be constructed")
+        }
+
+        pub fn load_artifact(&self, _name: &str) -> Result<Executable, String> {
+            unreachable!("stub Runtime cannot be constructed")
+        }
     }
 
-    /// Load an HLO-text artifact and compile it for this client.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable { exe, name: path.display().to_string() })
+    /// Stub executable (never constructed without the `xla` feature).
+    pub struct Executable {
+        _private: (),
     }
 
-    /// Load `artifacts/<name>.hlo.txt`.
-    pub fn load_artifact(&self, name: &str) -> Result<Executable> {
-        let path = artifacts_dir().join(format!("{name}.hlo.txt"));
-        anyhow::ensure!(
-            path.exists(),
-            "artifact {} not found — run `make artifacts` first",
-            path.display()
-        );
-        self.load_hlo_text(&path)
-    }
-}
-
-/// A compiled computation ready to execute.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    name: String,
-}
-
-impl Executable {
-    pub fn name(&self) -> &str {
-        &self.name
-    }
-
-    /// Execute with literal inputs; returns the tuple of output literals
-    /// (artifacts are lowered with `return_tuple=True`).
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing {}", self.name))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching output of {}", self.name))?;
-        out.to_tuple().context("untupling output")
+    impl Executable {
+        pub fn name(&self) -> &str {
+            unreachable!("stub Executable cannot be constructed")
+        }
     }
 }
+
+pub use real::{Executable, Runtime};
 
 #[cfg(test)]
 mod tests {
@@ -93,16 +150,36 @@ mod tests {
     /// Artifacts exist only after `make artifacts`; most runtime tests
     /// skip gracefully so `cargo test` works standalone, while `make
     /// test` (which builds artifacts first) exercises them for real.
+    #[allow(dead_code)]
     pub fn artifacts_available() -> bool {
         artifacts_dir().join("lif_step_1024.hlo.txt").exists()
     }
 
+    #[test]
+    fn artifacts_dir_is_overridable() {
+        // default (no env override in the test harness unless set)
+        let d = artifacts_dir();
+        assert!(d.as_os_str().to_string_lossy().contains("artifacts"));
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_runtime_reports_clean_error() {
+        let err = match Runtime::cpu() {
+            Err(e) => e,
+            Ok(_) => panic!("stub must not construct"),
+        };
+        assert!(err.contains("--features xla"), "{err}");
+    }
+
+    #[cfg(feature = "xla")]
     #[test]
     fn cpu_client_comes_up() {
         let rt = Runtime::cpu().expect("PJRT CPU client");
         assert!(rt.platform().to_lowercase().contains("cpu"), "platform {}", rt.platform());
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn missing_artifact_is_a_clean_error() {
         let rt = Runtime::cpu().unwrap();
@@ -110,9 +187,10 @@ mod tests {
             Err(e) => e,
             Ok(_) => panic!("expected error"),
         };
-        assert!(err.to_string().contains("make artifacts"), "{err}");
+        assert!(err.contains("make artifacts"), "{err}");
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn loads_and_runs_lif_artifact() {
         if !artifacts_available() {

@@ -2,6 +2,10 @@
 //! trains, metrics) is a pure function of the global seed — independent
 //! of rank count, mapping strategy and delivery protocol.
 
+// the deprecated one-shot wrapper is exercised deliberately: it must
+// keep matching the staged pipeline
+#![allow(deprecated)]
+
 use dpsnn::config::SimConfig;
 use dpsnn::coordinator::run_simulation;
 use dpsnn::engine::RunOptions;
@@ -30,6 +34,35 @@ fn activity_identical_across_rank_counts_and_mappings() {
             Some(r) => assert_eq!(
                 r, &s.activity,
                 "activity differs at ranks={ranks} mapping={mapping:?}"
+            ),
+        }
+    }
+}
+
+#[test]
+fn staged_pipeline_is_decomposition_invariant_too() {
+    // the builder path must carry the same strongest property: one
+    // network per rank count, identical probed activity
+    use dpsnn::{ActivityProbe, SimulationBuilder};
+    let mut reference: Option<Vec<Vec<u32>>> = None;
+    for (ranks, mapping) in [(1, Mapping::Block), (3, Mapping::Block), (4, Mapping::RoundRobin)] {
+        let mut net = SimulationBuilder::from_config(cfg(ranks))
+            .mapping(mapping)
+            .build()
+            .expect("construction");
+        let mut activity = ActivityProbe::new();
+        {
+            let mut session = net.session();
+            session.attach(&mut activity);
+            session.advance(50.0);
+        }
+        let rows = activity.into_rows();
+        assert_eq!(rows.len(), 50);
+        match &reference {
+            None => reference = Some(rows),
+            Some(r) => assert_eq!(
+                r, &rows,
+                "staged activity differs at ranks={ranks} mapping={mapping:?}"
             ),
         }
     }

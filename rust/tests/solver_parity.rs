@@ -7,8 +7,7 @@
 //! spike trains; we compare population firing rates.
 
 use dpsnn::config::{SimConfig, Solver};
-use dpsnn::coordinator::{run_simulation, RunSummary};
-use dpsnn::engine::RunOptions;
+use dpsnn::coordinator::{RunSummary, SimulationBuilder};
 
 fn cfg(solver: Solver) -> SimConfig {
     let mut c = SimConfig::test_small();
@@ -22,11 +21,18 @@ fn cfg(solver: Solver) -> SimConfig {
 }
 
 fn artifacts_available() -> bool {
-    dpsnn::runtime::pjrt::artifacts_dir().join("lif_step_1024.hlo.txt").exists()
+    // the batched solver needs both the compiled-in PJRT client
+    // (`--features xla`) and the AOT artifacts (`make artifacts`)
+    cfg!(feature = "xla")
+        && dpsnn::runtime::pjrt::artifacts_dir().join("lif_step_1024.hlo.txt").exists()
 }
 
 fn run(solver: Solver) -> RunSummary {
-    run_simulation(&cfg(solver), &RunOptions::default())
+    // staged pipeline: both solvers drive the same constructed network
+    // machinery (construct once, one 60 ms session)
+    let mut net = SimulationBuilder::from_config(cfg(solver)).build().expect("construction");
+    net.session().advance(60.0);
+    net.summary()
 }
 
 #[test]
