@@ -2,13 +2,12 @@
 //! (EXPERIMENTS.md par. Perf). Measures the real building blocks of the
 //! simulation loop in isolation.
 
-use dpsnn::bench_harness::report_throughput;
+use dpsnn::bench_harness::{demux_bench_store, legacy_demux_spike_into, report_throughput};
 use dpsnn::config::{NeuronParams, SimConfig};
 use dpsnn::mpi::{run_cluster, CommClass};
 use dpsnn::neuron::{LifParams, LifState};
 use dpsnn::stimulus::ExternalStimulus;
-use dpsnn::synapse::storage::WireSynapse;
-use dpsnn::synapse::{DelayQueue, PendingEvent, SynapseStore};
+use dpsnn::synapse::DelayQueue;
 use dpsnn::util::prng::Pcg64;
 
 fn bench_prng() {
@@ -42,35 +41,29 @@ fn bench_lif() {
 }
 
 fn bench_demux() {
-    // 1000 axons x 1200 synapses, demux 100 spikes/step through the store
-    let mut syns = Vec::with_capacity(1_200_000);
-    let mut rng = Pcg64::new(7, 0);
-    for src in 0..1000u32 {
-        for _ in 0..1200 {
-            syns.push(WireSynapse {
-                src_gid: src,
-                tgt_gid: rng.next_below(100_000) as u32,
-                weight: 0.1,
-                delay_us: 1000 + rng.next_below(30_000) as u32,
-            });
-        }
-    }
-    let store = SynapseStore::build(syns, |g| g);
+    // 1000 axons x 1200 synapses, demux 100 spikes/step through the store;
+    // legacy per-event f64 delivery vs the engine's slot-run delivery
+    // (same shared store builder as `dpsnn bench`)
+    let store = demux_bench_store(1000, 1200);
+
     let mut queue = DelayQueue::new(64);
     let mut step = 0u64;
-    report_throughput("demux: axon fan-out -> delay queues (120k ev)", 120_000, 2, 10, || {
+    report_throughput("demux: legacy per-event f64 push (120k ev)", 120_000, 2, 10, || {
         for spike in 0..100u32 {
-            let t_emit = step as f64;
-            for k in store.axon_range(spike * 10) {
-                let (tgt, w, d) = store.synapse_at(k);
-                let t_arr = t_emit + d as f64 * 1e-3;
-                queue.push(t_arr as u64, PendingEvent {
-                    time_ms: t_arr as f32,
-                    target_local: tgt,
-                    weight: w,
-                    syn_idx: k as u32,
-                });
-            }
+            // the one shared baseline copy (also used by `dpsnn bench`)
+            legacy_demux_spike_into(&store, spike * 10, step as f64, step, &mut queue);
+        }
+        let b = queue.drain_current();
+        queue.recycle(b);
+        step += 1;
+    });
+
+    let mut queue = DelayQueue::new(64);
+    let mut step = 0u64;
+    report_throughput("demux: slot-run fan-out (engine path, 120k ev)", 120_000, 2, 10, || {
+        for spike in 0..100u32 {
+            // the exact function the engine's demux phase calls
+            store.demux_spike_into(spike * 10, step as f64, step, step, 1.0, &mut queue);
         }
         let b = queue.drain_current();
         queue.recycle(b);
@@ -84,12 +77,22 @@ fn bench_stimulus() {
     cfg.external.rate_hz = 3.0;
     let stim = ExternalStimulus::new(&cfg);
     let mut buf = Vec::new();
-    report_throughput("stimulus: per-neuron per-step poisson draw", 10_000, 2, 10, || {
+    report_throughput("stimulus: legacy per-neuron per-step poisson draw", 10_000, 2, 10, || {
         for gid in 0..10_000u64 {
             buf.clear();
             stim.events_for(gid, 5, &mut buf);
         }
     });
+    // gap sampler: cost per *event*, independent of neuron count — the
+    // engine pays this only for neurons with an event due this step
+    let mut rng = stim.neuron_stream(3);
+    let mut t = stim.first_gap_ms(&mut rng).unwrap();
+    report_throughput("stimulus: next-event gap draw (per event)", 200_000, 2, 10, || {
+        for _ in 0..200_000 {
+            t = stim.next_event_ms(&mut rng, t);
+        }
+    });
+    std::hint::black_box(t);
 }
 
 fn bench_exchange() {

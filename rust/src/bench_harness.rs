@@ -1,9 +1,13 @@
 //! Minimal benchmark harness (no criterion in the offline vendor set):
 //! warmup + repeated timing with mean/σ, aligned table printing for the
-//! paper-figure reports, and staged-API measurement segments (one
-//! constructed [`Network`] shared across measurement points).
+//! paper-figure reports, staged-API measurement segments (one
+//! constructed [`Network`] shared across measurement points), and the
+//! `dpsnn bench` standard matrix that records the repo's perf
+//! trajectory into `BENCH.json` (see docs/PERF.md).
 
-use crate::coordinator::Network;
+use crate::coordinator::{Network, SimulationBuilder};
+use crate::engine::Phase;
+use crate::synapse::{DelayQueue, PendingEvent, SynapseStore};
 use crate::util::stats::Running;
 use crate::util::timer::fmt_ns;
 use std::time::Instant;
@@ -133,6 +137,431 @@ pub fn quick_mode() -> bool {
         || std::env::args().any(|a| a == "--quick")
 }
 
+// ---------------------------------------------------------------------
+// `dpsnn bench`: the standard matrix + hot-path microchecks, recorded
+// as machine-readable JSON so every PR leaves a perf data point.
+// ---------------------------------------------------------------------
+
+/// Sizing knobs of one bench run (exposed so tests can shrink it).
+#[derive(Clone, Copy, Debug)]
+pub struct BenchParams {
+    /// Grid side for the matrix cells.
+    pub side: u32,
+    /// Neurons per column for the matrix cells.
+    pub npc: u32,
+    /// Simulated span per matrix cell [ms].
+    pub duration_ms: f64,
+    /// External drive (synapses, Hz) — the test-calibrated regime that
+    /// keeps small grids robustly active.
+    pub ext_syn: u32,
+    pub ext_hz: f64,
+    /// Virtual rank counts of the matrix.
+    pub ranks: [u32; 3],
+    /// Silent-dynamics probe: small/large neurons-per-column and span.
+    pub silent_npc: (u32, u32),
+    pub silent_ms: f64,
+    /// Demux microbench: axons × synapses/axon, spikes per step, and
+    /// timing repetitions.
+    pub demux_axons: u32,
+    pub demux_syn_per_axon: u32,
+    pub demux_spikes_per_step: u32,
+    pub demux_warmup: u32,
+    pub demux_iters: u32,
+}
+
+impl BenchParams {
+    /// Standard matrix (default `dpsnn bench`).
+    pub fn standard() -> Self {
+        BenchParams {
+            side: 8,
+            npc: 310,
+            duration_ms: 150.0,
+            ext_syn: 100,
+            ext_hz: 30.0,
+            ranks: [1, 2, 4],
+            silent_npc: (100, 400),
+            silent_ms: 200.0,
+            demux_axons: 300,
+            demux_syn_per_axon: 400,
+            demux_spikes_per_step: 60,
+            demux_warmup: 3,
+            demux_iters: 15,
+        }
+    }
+
+    /// Reduced matrix for CI smoke runs (`dpsnn bench --quick`).
+    pub fn quick() -> Self {
+        BenchParams {
+            side: 4,
+            npc: 60,
+            duration_ms: 40.0,
+            silent_npc: (60, 240),
+            silent_ms: 80.0,
+            demux_axons: 120,
+            demux_syn_per_axon: 200,
+            demux_spikes_per_step: 40,
+            demux_warmup: 2,
+            demux_iters: 6,
+            ..Self::standard()
+        }
+    }
+}
+
+/// One (kernel × ranks) cell of the matrix.
+#[derive(Clone, Debug)]
+pub struct BenchCell {
+    pub kernel: &'static str,
+    pub ranks: u32,
+    pub neurons: u64,
+    pub synapses: u64,
+    pub steps: u64,
+    pub spikes: u64,
+    pub firing_hz: f64,
+    /// Equivalent synaptic events (recurrent + external, §III-D).
+    pub events: u64,
+    /// Throughput against wall time of the whole run segment.
+    pub events_per_wall_s: f64,
+    /// Single-core-equivalent CPU cost per event.
+    pub cpu_ns_per_event: f64,
+    pub wall_s: f64,
+    /// Per-phase CPU ns per step, summed over ranks
+    /// (pack, exchange, demux, dynamics — the paper's breakdown).
+    pub phase_ns_per_step: [f64; 4],
+}
+
+/// Does the Dynamics phase still scale with n_local when (nearly)
+/// silent? The calendar-driven engine should hold ns/step roughly flat
+/// as neurons quadruple.
+#[derive(Clone, Copy, Debug)]
+pub struct SilentScaling {
+    pub n_small: u64,
+    pub small_dyn_ns_per_step: f64,
+    pub n_large: u64,
+    pub large_dyn_ns_per_step: f64,
+}
+
+impl SilentScaling {
+    /// Dynamics cost growth from small to large (1.0 = flat, i.e. the
+    /// phase is event-bound, not O(n_local)).
+    pub fn scaling_ratio(&self) -> f64 {
+        self.large_dyn_ns_per_step / self.small_dyn_ns_per_step.max(1e-9)
+    }
+
+    pub fn neuron_ratio(&self) -> f64 {
+        self.n_large as f64 / self.n_small as f64
+    }
+}
+
+/// Demux microbench: the legacy per-event f64 delivery loop vs the
+/// slot-run delivery the engine now uses, over the same synapse store.
+#[derive(Clone, Copy, Debug)]
+pub struct DemuxMicro {
+    pub events_per_call: u64,
+    pub legacy_ns_per_event: f64,
+    pub slot_ns_per_event: f64,
+}
+
+impl DemuxMicro {
+    pub fn speedup(&self) -> f64 {
+        self.legacy_ns_per_event / self.slot_ns_per_event.max(1e-9)
+    }
+}
+
+/// Everything `dpsnn bench` measures.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub quick: bool,
+    pub cells: Vec<BenchCell>,
+    pub silent: SilentScaling,
+    pub demux: DemuxMicro,
+}
+
+fn phases4() -> [Phase; 4] {
+    [Phase::Pack, Phase::Exchange, Phase::Demux, Phase::Dynamics]
+}
+
+fn bench_cell(kernel: &'static str, ranks: u32, p: &BenchParams) -> BenchCell {
+    let builder = match kernel {
+        "exponential" => SimulationBuilder::exponential(p.side),
+        _ => SimulationBuilder::gaussian(p.side),
+    };
+    let mut net = builder
+        .neurons_per_column(p.npc)
+        .ranks(ranks)
+        .external(p.ext_syn, p.ext_hz)
+        .build()
+        .expect("bench network construction");
+    let t0 = Instant::now();
+    net.session().advance(p.duration_ms);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let steps = net.steps_run().max(1);
+    let s = net.summary();
+    let mut phase_ns_per_step = [0.0; 4];
+    for (slot, phase) in phase_ns_per_step.iter_mut().zip(phases4()) {
+        *slot = s.phase_cpu_ns(phase) as f64 / steps as f64;
+    }
+    BenchCell {
+        kernel,
+        ranks,
+        neurons: s.neurons,
+        synapses: s.synapses(),
+        steps,
+        spikes: s.spikes(),
+        firing_hz: s.firing_rate_hz(),
+        events: s.equivalent_events(),
+        events_per_wall_s: s.equivalent_events() as f64 / wall_s.max(1e-9),
+        cpu_ns_per_event: s.total_cpu_ns_per_event(),
+        wall_s,
+        phase_ns_per_step,
+    }
+}
+
+fn bench_silent(p: &BenchParams) -> SilentScaling {
+    // a nearly-silent drive (sparse sub-Hz Poisson bundle): the legacy
+    // engine still scanned every neuron every step here; the calendar
+    // engine only touches the handful with due events
+    let dyn_ns_per_step = |npc: u32| -> (u64, f64) {
+        let mut net = SimulationBuilder::gaussian(4)
+            .neurons_per_column(npc)
+            .external(10, 0.5)
+            .build()
+            .expect("silent bench construction");
+        net.session().advance(p.silent_ms);
+        let steps = net.steps_run().max(1);
+        let s = net.summary();
+        (s.neurons, s.phase_cpu_ns(Phase::Dynamics) as f64 / steps as f64)
+    };
+    let (n_small, small) = dyn_ns_per_step(p.silent_npc.0);
+    let (n_large, large) = dyn_ns_per_step(p.silent_npc.1);
+    SilentScaling {
+        n_small,
+        small_dyn_ns_per_step: small,
+        n_large,
+        large_dyn_ns_per_step: large,
+    }
+}
+
+/// The PRE-slot-precompute demux delivery loop, kept verbatim as the
+/// baseline [`SynapseStore::demux_spike_into`] is measured against.
+/// Both `dpsnn bench` and `cargo bench --bench microbench` call this
+/// one copy, so the two reported speedups share one baseline. Assumes
+/// the benchmark's dt = 1 ms (arrival step = whole ms of arrival
+/// time), like the original engine loop it preserves. Returns the
+/// number of events delivered.
+pub fn legacy_demux_spike_into(
+    store: &SynapseStore,
+    src_gid: u32,
+    t_emit_ms: f64,
+    now_step: u64,
+    queue: &mut DelayQueue,
+) -> usize {
+    let range = store.axon_range(src_gid);
+    let base = range.start as u32;
+    let n = range.len();
+    for (off, k) in range.enumerate() {
+        let (tgt, w, d) = store.synapse_at(k);
+        let t_arr = t_emit_ms + d as f64 * 1e-3;
+        queue.push(
+            (t_arr as u64).max(now_step),
+            PendingEvent {
+                time_ms: t_arr as f32,
+                target_local: tgt,
+                weight: w,
+                syn_idx: base + off as u32,
+            },
+        );
+    }
+    n
+}
+
+/// The demux benchmarks' synapse store: `axons` × `syn_per_axon`
+/// random synapses (100k-neuron target span, 1–31 ms delays, dt = 1 ms
+/// slots). One definition shared by `dpsnn bench` and the cargo-bench
+/// microbench, so their legacy-vs-slot comparisons run over identical
+/// stores.
+pub fn demux_bench_store(axons: u32, syn_per_axon: u32) -> SynapseStore {
+    use crate::synapse::storage::WireSynapse;
+    use crate::util::prng::Pcg64;
+    let mut syns = Vec::with_capacity((axons * syn_per_axon) as usize);
+    let mut rng = Pcg64::new(7, 0);
+    for src in 0..axons {
+        for _ in 0..syn_per_axon {
+            syns.push(WireSynapse {
+                src_gid: src,
+                tgt_gid: rng.next_below(100_000) as u32,
+                weight: 0.1,
+                delay_us: 1000 + rng.next_below(30_000) as u32,
+            });
+        }
+    }
+    SynapseStore::build(syns, 1.0, |g| g)
+}
+
+fn bench_demux(p: &BenchParams) -> DemuxMicro {
+    let store = demux_bench_store(p.demux_axons, p.demux_syn_per_axon);
+    let events_per_call =
+        p.demux_spikes_per_step as u64 * p.demux_syn_per_axon as u64;
+    let spike_axon = |i: u32| i % p.demux_axons;
+
+    // legacy: per-event f64 delay arithmetic + per-event checked push
+    let mut queue = DelayQueue::new(64);
+    let mut step = 0u64;
+    let (legacy_mean, _) = time_ns(p.demux_warmup, p.demux_iters, || {
+        for i in 0..p.demux_spikes_per_step {
+            legacy_demux_spike_into(&store, spike_axon(i), step as f64, step, &mut queue);
+        }
+        let b = queue.drain_current();
+        queue.recycle(b);
+        step += 1;
+    });
+
+    // slot runs: the engine's actual demux inner loop — the SAME
+    // function RankProcess::step calls, so the record can't drift from
+    // the code it claims to measure
+    let mut queue = DelayQueue::new(64);
+    let mut step = 0u64;
+    let (slot_mean, _) = time_ns(p.demux_warmup, p.demux_iters, || {
+        for i in 0..p.demux_spikes_per_step {
+            store.demux_spike_into(spike_axon(i), step as f64, step, step, 1.0, &mut queue);
+        }
+        let b = queue.drain_current();
+        queue.recycle(b);
+        step += 1;
+    });
+
+    DemuxMicro {
+        events_per_call,
+        legacy_ns_per_event: legacy_mean / events_per_call as f64,
+        slot_ns_per_event: slot_mean / events_per_call as f64,
+    }
+}
+
+/// Run the full bench suite: (gaussian, exponential) × rank counts,
+/// plus the silent-dynamics scaling probe and the demux microbench.
+pub fn run_bench(quick: bool) -> BenchReport {
+    let p = if quick { BenchParams::quick() } else { BenchParams::standard() };
+    run_bench_with(quick, &p)
+}
+
+/// [`run_bench`] with explicit sizing (tests shrink it).
+pub fn run_bench_with(quick: bool, p: &BenchParams) -> BenchReport {
+    let mut cells = Vec::new();
+    for kernel in ["gaussian", "exponential"] {
+        for &ranks in &p.ranks {
+            cells.push(bench_cell(kernel, ranks, p));
+        }
+    }
+    BenchReport { quick, cells, silent: bench_silent(p), demux: bench_demux(p) }
+}
+
+impl BenchReport {
+    /// Human summary (the JSON is the machine record).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "kernel", "ranks", "neurons", "steps", "spikes", "pack", "exchange", "demux",
+            "dynamics", "ev/s (wall)", "ns/ev",
+        ]);
+        for c in &self.cells {
+            t.row(&[
+                c.kernel.to_string(),
+                c.ranks.to_string(),
+                c.neurons.to_string(),
+                c.steps.to_string(),
+                c.spikes.to_string(),
+                fmt_ns(c.phase_ns_per_step[0]),
+                fmt_ns(c.phase_ns_per_step[1]),
+                fmt_ns(c.phase_ns_per_step[2]),
+                fmt_ns(c.phase_ns_per_step[3]),
+                format!("{:.2e}", c.events_per_wall_s),
+                format!("{:.1}", c.cpu_ns_per_event),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "\nsilent dynamics: {} -> {} neurons, {} -> {} per step ({:.2}x for {:.0}x neurons)\n",
+            self.silent.n_small,
+            self.silent.n_large,
+            fmt_ns(self.silent.small_dyn_ns_per_step),
+            fmt_ns(self.silent.large_dyn_ns_per_step),
+            self.silent.scaling_ratio(),
+            self.silent.neuron_ratio(),
+        ));
+        out.push_str(&format!(
+            "demux microbench: legacy {:.2} ns/ev -> slot runs {:.2} ns/ev ({:.2}x)\n",
+            self.demux.legacy_ns_per_event,
+            self.demux.slot_ns_per_event,
+            self.demux.speedup(),
+        ));
+        out
+    }
+
+    /// Machine record (`BENCH.json`): schema 1. Hand-rolled writer —
+    /// the offline image has no serde.
+    pub fn to_json(&self) -> String {
+        let unix_s = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": 1,\n");
+        s.push_str(&format!("  \"created_unix_s\": {unix_s},\n"));
+        s.push_str(&format!("  \"quick\": {},\n", self.quick));
+        s.push_str("  \"matrix\": [\n");
+        for (i, c) in self.cells.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"kernel\": \"{}\", \"ranks\": {}, \"neurons\": {}, \
+                 \"synapses\": {}, \"steps\": {}, \"spikes\": {}, \
+                 \"firing_hz\": {:.3}, \"events\": {}, \
+                 \"events_per_wall_s\": {:.1}, \"cpu_ns_per_event\": {:.3}, \
+                 \"wall_s\": {:.4}, \"phase_ns_per_step\": {{\
+                 \"pack\": {:.1}, \"exchange\": {:.1}, \"demux\": {:.1}, \
+                 \"dynamics\": {:.1}}}}}{}\n",
+                c.kernel,
+                c.ranks,
+                c.neurons,
+                c.synapses,
+                c.steps,
+                c.spikes,
+                c.firing_hz,
+                c.events,
+                c.events_per_wall_s,
+                c.cpu_ns_per_event,
+                c.wall_s,
+                c.phase_ns_per_step[0],
+                c.phase_ns_per_step[1],
+                c.phase_ns_per_step[2],
+                c.phase_ns_per_step[3],
+                if i + 1 < self.cells.len() { "," } else { "" },
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str(&format!(
+            "  \"silent_dynamics\": {{\"n_small\": {}, \"small_ns_per_step\": {:.1}, \
+             \"n_large\": {}, \"large_ns_per_step\": {:.1}, \
+             \"scaling_ratio\": {:.3}, \"neuron_ratio\": {:.1}}},\n",
+            self.silent.n_small,
+            self.silent.small_dyn_ns_per_step,
+            self.silent.n_large,
+            self.silent.large_dyn_ns_per_step,
+            self.silent.scaling_ratio(),
+            self.silent.neuron_ratio(),
+        ));
+        s.push_str(&format!(
+            "  \"demux_microbench\": {{\"events_per_call\": {}, \
+             \"legacy_ns_per_event\": {:.3}, \"slot_ns_per_event\": {:.3}, \
+             \"speedup\": {:.3}}}\n",
+            self.demux.events_per_call,
+            self.demux.legacy_ns_per_event,
+            self.demux.slot_ns_per_event,
+            self.demux.speedup(),
+        ));
+        s.push('}');
+        s.push('\n');
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,6 +592,62 @@ mod tests {
     fn table_rejects_ragged_rows() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["only one".into()]);
+    }
+
+    #[test]
+    fn micro_bench_run_covers_the_matrix_and_serializes() {
+        // a deliberately tiny instance of the standard matrix: shape and
+        // JSON schema are what's under test, not the numbers
+        let p = BenchParams {
+            side: 4,
+            npc: 30,
+            duration_ms: 10.0,
+            silent_npc: (20, 80),
+            silent_ms: 10.0,
+            demux_axons: 20,
+            demux_syn_per_axon: 50,
+            demux_spikes_per_step: 10,
+            demux_warmup: 1,
+            demux_iters: 2,
+            ..BenchParams::standard()
+        };
+        let report = run_bench_with(true, &p);
+        assert_eq!(report.cells.len(), 6, "2 kernels x 3 rank counts");
+        for c in &report.cells {
+            assert_eq!(c.steps, 10);
+            assert!(c.synapses > 0);
+            assert!(c.events > 0, "{} x{} produced no events", c.kernel, c.ranks);
+            assert!(c.phase_ns_per_step[3] > 0.0, "dynamics must cost something");
+        }
+        // identical construction across rank counts: same synapse totals
+        let gauss: Vec<_> = report.cells.iter().filter(|c| c.kernel == "gaussian").collect();
+        assert!(gauss.windows(2).all(|w| w[0].synapses == w[1].synapses));
+        assert!(report.demux.events_per_call == 500);
+        assert!(report.demux.legacy_ns_per_event > 0.0);
+        assert!(report.demux.slot_ns_per_event > 0.0);
+        assert!(report.silent.n_large == 4 * report.silent.n_small);
+
+        let json = report.to_json();
+        for key in [
+            "\"schema\": 1",
+            "\"matrix\"",
+            "\"kernel\": \"gaussian\"",
+            "\"kernel\": \"exponential\"",
+            "\"phase_ns_per_step\"",
+            "\"silent_dynamics\"",
+            "\"demux_microbench\"",
+            "\"speedup\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in:\n{json}");
+        }
+        // crude structural sanity: balanced braces/brackets
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        // the human rendering mentions every phase of the breakdown
+        let table = report.render();
+        for col in ["pack", "exchange", "demux", "dynamics", "silent dynamics"] {
+            assert!(table.contains(col), "missing {col}");
+        }
     }
 
     #[test]

@@ -461,6 +461,15 @@ impl SimConfig {
         if self.syn.delay_max_ms < self.syn.delay_min_ms {
             return Err("delay_max_ms < delay_min_ms".into());
         }
+        if self.syn.delay_max_ms / self.dt_ms > u16::MAX as f64 {
+            return Err(format!(
+                "delay_max_ms / dt_ms = {:.0} exceeds the {}-step delay-slot range \
+                 (delays are precomputed in whole dt-steps as u16): raise dt_ms or \
+                 lower delay_max_ms",
+                self.syn.delay_max_ms / self.dt_ms,
+                u16::MAX
+            ));
+        }
         if self.ranks == 0 {
             return Err("ranks must be >= 1".into());
         }
@@ -585,6 +594,13 @@ mix = 0.6
         let mut c = SimConfig::test_small();
         c.conn.cutoff = 0.0;
         assert!(c.validate().is_err());
+        // delay slots are u16: a delay/dt ratio past 65535 must be
+        // rejected up front, not silently clamped (shortened) at build
+        let mut c = SimConfig::test_small();
+        c.dt_ms = 0.0005;
+        c.syn.delay_min_ms = 0.0005;
+        c.syn.delay_max_ms = 40.0;
+        assert!(c.validate().unwrap_err().contains("delay-slot"));
         let mut c = SimConfig::test_small();
         c.grid.nx = 0;
         assert!(c.validate().is_err());

@@ -32,7 +32,7 @@ use crate::coordinator::leader::RunSummary;
 use crate::engine::metrics::PHASES;
 use crate::engine::plasticity::StdpParams;
 use crate::engine::probe::{Probe, StepSample};
-use crate::engine::process::{RankProcess, RunOptions};
+use crate::engine::process::{RankProcess, RunOptions, WIRE_TIME_HORIZON_MS};
 use crate::geometry::{Decomposition, Grid, Mapping};
 use crate::mpi::{Cluster, RankComm};
 use crate::util::memtrack::PeakScope;
@@ -427,7 +427,16 @@ impl<'n, 'p> Session<'n, 'p> {
     }
 
     /// Run one time-driven step and feed the attached probes.
+    ///
+    /// Panics at the spike-timestamp horizon (µs in `u32`, ~71.6 min of
+    /// simulated time) — same guarantee as [`advance`](Self::advance);
+    /// the engine never runs far enough for wire timestamps to wrap.
     pub fn step(&mut self) {
+        assert!(
+            self.net.time_target_ms + self.net.cfg.dt_ms <= WIRE_TIME_HORIZON_MS,
+            "stepping past the spike-timestamp horizon (µs in u32, ~71.6 min of \
+             simulated time); split the run across Network::reset() replays"
+        );
         let observe = !self.probes.is_empty();
         for proc in &mut self.net.procs {
             proc.set_observe(observe);
@@ -446,12 +455,42 @@ impl<'n, 'p> Session<'n, 'p> {
     /// target, so chunked advances cover exactly the same steps as one
     /// whole-span advance even when `dt` does not divide `ms`.
     ///
+    /// Panics when the cumulative simulated time would cross the
+    /// spike-timestamp horizon (µs in `u32` ⇒ ~71.6 min, see
+    /// [`WIRE_TIME_HORIZON_MS`]); use [`try_advance`](Self::try_advance)
+    /// to handle that case gracefully.
+    ///
     /// Without probes the whole span runs on one set of rank threads
     /// (no per-step spawn/join); with probes attached each step is
     /// observed individually — a deliberate trade-off (per-step scoped
     /// threads) that a persistent worker pool could remove without any
     /// API change if probed long runs become a bottleneck.
     pub fn advance(&mut self, ms: f64) -> &mut Self {
+        match self.try_advance(ms) {
+            Ok(s) => s,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// [`advance`](Self::advance) with the spike-timestamp horizon
+    /// reported as an `Err` instead of a panic. On `Err` the network
+    /// state is untouched and the session remains usable.
+    ///
+    /// The horizon exists because AER spikes carry their emission time
+    /// as whole microseconds in a `u32` (8-byte wire records, the
+    /// paper's format): past `u32::MAX` µs the counter would silently
+    /// wrap and spike ordering — and with it every dynamics result —
+    /// would be corrupted. The engine therefore refuses to run past it.
+    pub fn try_advance(&mut self, ms: f64) -> Result<&mut Self, String> {
+        let target_ms = self.net.time_target_ms + ms;
+        if target_ms > WIRE_TIME_HORIZON_MS {
+            return Err(format!(
+                "advance({ms} ms) would reach {target_ms:.3} ms of simulated time, \
+                 past the spike-timestamp horizon of {WIRE_TIME_HORIZON_MS:.3} ms \
+                 (~71.6 min: AER wire spikes carry µs in u32). Split the run across \
+                 Network::reset() replays instead."
+            ));
+        }
         self.net.time_target_ms += ms;
         let target = (self.net.time_target_ms / self.net.cfg.dt_ms).round() as u64;
         let steps = target.saturating_sub(self.net.step_cursor);
@@ -469,7 +508,7 @@ impl<'n, 'p> Session<'n, 'p> {
                 self.step();
             }
         }
-        self
+        Ok(self)
     }
 
     /// Aggregate the network-lifetime run into a [`RunSummary`].
@@ -634,6 +673,26 @@ mod tests {
         assert_eq!(split.steps_run(), whole.steps_run());
         assert_eq!(split.steps_run(), (100.0f64 / 0.3).round() as u64);
         assert_eq!(split.summary().spikes(), whole.summary().spikes());
+    }
+
+    #[test]
+    fn advance_rejects_the_spike_timestamp_horizon() {
+        // µs-in-u32 wire timestamps cap a run at ~71.6 simulated minutes;
+        // crossing the cap must be a clear error, not a silent wraparound
+        let mut net = builder().build().unwrap();
+        let mut session = net.session();
+        session.advance(2.0);
+        let err = session.try_advance(WIRE_TIME_HORIZON_MS).unwrap_err();
+        assert!(err.contains("horizon"), "{err}");
+        // the rejected call left the session untouched and usable
+        assert_eq!(session.steps(), 2);
+        session.advance(1.0);
+        assert_eq!(session.steps(), 3);
+        drop(session);
+        assert_eq!(net.steps_run(), 3);
+        // a fresh session after reset gets the full horizon back
+        net.reset();
+        assert!(net.session().try_advance(10.0).is_ok());
     }
 
     #[test]

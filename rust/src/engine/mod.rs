@@ -11,4 +11,4 @@ pub use metrics::{EngineMetrics, Phase, RankReport};
 pub use probe::{
     ActivityProbe, FiringRateProbe, PhaseMetricsProbe, Probe, SpikeCountProbe, StepSample,
 };
-pub use process::{RankProcess, RunOptions, WireSpike};
+pub use process::{LocalSpike, RankProcess, RunOptions, WireSpike, WIRE_TIME_HORIZON_MS};

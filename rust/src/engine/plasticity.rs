@@ -176,6 +176,7 @@ mod tests {
                 WireSynapse { src_gid: 0, tgt_gid: 1, weight: 0.5, delay_us: 1000 },
                 WireSynapse { src_gid: 1, tgt_gid: 0, weight: -0.4, delay_us: 1000 },
             ],
+            1.0,
             |g| g,
         )
     }
@@ -263,6 +264,7 @@ mod tests {
                     delay_us: 1000,
                 })
                 .collect(),
+            1.0,
             |g| g,
         );
         let p = Plasticity::new(StdpParams::default(), &s, 5);

@@ -127,6 +127,29 @@ impl Decomposition {
         &self.rank_cols[rank as usize]
     }
 
+    /// Rank-local neuron index → global neuron id lookup table for one
+    /// rank (local index = position of the neuron's column in the
+    /// rank's sorted column list × neurons/column + in-column index).
+    ///
+    /// The table is the engine's wire-boundary converter: spikes stay
+    /// rank-local indices through the whole step and only become global
+    /// ids here, in O(1) per spike, instead of a per-spike binary
+    /// search over the rank's columns. Global ids fit `u32` (the AER
+    /// wire format) for every paper-scale grid; asserted here.
+    pub fn local_gid_table(&self, grid: &Grid, rank: u32) -> Vec<u32> {
+        let npc = grid.p.neurons_per_column;
+        let cols = self.columns_of_rank(rank);
+        let mut out = Vec::with_capacity(cols.len() * npc as usize);
+        for &col in cols {
+            let base = grid.neuron_id(col, 0);
+            debug_assert!(base + npc as u64 - 1 <= u32::MAX as u64, "gid exceeds AER u32");
+            for l in 0..npc as u64 {
+                out.push((base + l) as u32);
+            }
+        }
+        out
+    }
+
     /// Max / min columns per rank (load balance check).
     pub fn balance(&self) -> (usize, usize) {
         let max = self.rank_cols.iter().map(Vec::len).max().unwrap_or(0);
@@ -278,6 +301,29 @@ mod tests {
         let d = Decomposition::new(&g, 5, Mapping::Block);
         let (_, min) = d.balance();
         assert!(min > 0);
+    }
+
+    #[test]
+    fn local_gid_table_inverts_the_local_index() {
+        for mapping in [Mapping::Block, Mapping::RoundRobin] {
+            let g = grid(6);
+            let d = Decomposition::new(&g, 4, mapping);
+            let npc = g.p.neurons_per_column;
+            let mut seen = 0u64;
+            for rank in 0..4 {
+                let table = d.local_gid_table(&g, rank);
+                let cols = d.columns_of_rank(rank);
+                assert_eq!(table.len(), cols.len() * npc as usize);
+                for (local, &gid) in table.iter().enumerate() {
+                    // the table must agree with the grid's gid layout
+                    let col = cols[local / npc as usize];
+                    let in_col = (local % npc as usize) as u32;
+                    assert_eq!(gid as u64, g.neuron_id(col, in_col));
+                }
+                seen += table.len() as u64;
+            }
+            assert_eq!(seen, g.neurons());
+        }
     }
 
     #[test]

@@ -28,6 +28,9 @@ fn commands() -> Vec<Command> {
             .flag("naive-delivery", "ablation: full Alltoallv every step")
             .flag("record-activity", "record per-column activity"),
         Command::new("kernels", "list registered connectivity kernels and their stencils"),
+        Command::new("bench", "run the standard per-phase benchmark matrix, write BENCH.json")
+            .opt_default("out", "BENCH.json", "output path for the JSON record")
+            .flag("quick", "reduced matrix (CI smoke / trajectory capture)"),
         Command::new("table1", "regenerate Table I (problem sizes)"),
         Command::new("fig2", "regenerate Fig. 2 (projection stencils)"),
         Command::new("fig5", "regenerate Fig. 5 (strong scaling, gaussian)")
@@ -147,6 +150,31 @@ fn cmd_run(a: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `dpsnn bench`: the paper's per-phase breakdown (Pack / Exchange /
+/// Demux / Dynamics) over the standard matrix — gaussian + exponential
+/// kernels × 1/2/4 virtual ranks — plus the demux microbench and the
+/// silent-dynamics scaling probe. Prints a human table and writes the
+/// machine-readable `BENCH.json` so the repo's perf trajectory is
+/// recorded PR over PR (see docs/PERF.md for how to read it).
+fn cmd_bench(a: &Args) -> Result<(), String> {
+    // the parsed flag, not quick_mode(): the latter rescans raw argv
+    // for the literal "--quick" and would misfire on e.g. an --out
+    // value of that name (it exists for the parserless `cargo bench`
+    // targets; DPSNN_QUICK stays honored for env-driven CI)
+    let quick =
+        a.has_flag("quick") || std::env::var("DPSNN_QUICK").map(|v| v == "1").unwrap_or(false);
+    eprintln!(
+        "running {} bench matrix (gaussian+exponential x 1/2/4 ranks)...",
+        if quick { "quick" } else { "standard" }
+    );
+    let report = dpsnn::bench_harness::run_bench(quick);
+    println!("{}", report.render());
+    let path = a.get("out").unwrap_or("BENCH.json");
+    std::fs::write(path, report.to_json()).map_err(|e| format!("writing {path}: {e}"))?;
+    eprintln!("wrote {path}");
+    Ok(())
+}
+
 fn cmd_kernels() {
     let grid = Grid::new(SimConfig::gaussian(24).grid);
     println!("registered connectivity kernels (paper defaults, 1/1000 cutoff):");
@@ -196,6 +224,7 @@ fn main() {
     }
     let result = match name.as_str() {
         "run" => cmd_run(&args),
+        "bench" => cmd_bench(&args),
         "kernels" => {
             cmd_kernels();
             Ok(())

@@ -215,10 +215,16 @@ pub fn run_cluster<R: Send + 'static>(
         .enumerate()
         .map(|(rank, h)| match h.join() {
             Ok(r) => r,
-            Err(e) => std::panic::resume_unwind(Box::new(format!(
-                "rank {rank} panicked: {:?}",
-                e.downcast_ref::<String>()
-            ))),
+            Err(e) => {
+                // `panic!("{}", ..)` carries a String, `panic!("literal")`
+                // a &'static str — surface both instead of `None`
+                let msg = e
+                    .downcast_ref::<String>()
+                    .map(String::as_str)
+                    .or_else(|| e.downcast_ref::<&'static str>().copied())
+                    .unwrap_or("<non-string panic payload>");
+                std::panic::resume_unwind(Box::new(format!("rank {rank} panicked: {msg}")))
+            }
         })
         .collect()
 }
@@ -355,5 +361,22 @@ mod tests {
             // rank 0 would block forever on recv if the harness didn't
             // propagate — but it sends first then panics on hung channel.
         });
+    }
+
+    #[test]
+    fn static_str_panic_payloads_surface_in_the_message() {
+        // panic!("literal") carries &'static str, not String; the
+        // propagated message must include it rather than report None
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_cluster(2, |comm| {
+                if comm.rank() == 1 {
+                    panic!("literal-payload-sentinel");
+                }
+            })
+        }));
+        let payload = result.expect_err("rank panic must propagate");
+        let msg = payload.downcast_ref::<String>().expect("string payload");
+        assert!(msg.contains("rank 1 panicked"), "{msg}");
+        assert!(msg.contains("literal-payload-sentinel"), "{msg}");
     }
 }

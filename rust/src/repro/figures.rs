@@ -343,8 +343,9 @@ pub fn fig9_report(cal_g: Calibration, cal_e: Calibration) -> String {
     out.push_str(&t.render());
     out.push_str(&format!(
         "\nmeasured construction peak on this host: gaussian {:.1}, exponential {:.1} B/synapse\n\
-         (resident store is 12 B/synapse as in the paper; peak adds the construction\n\
-         transient and delay-queue population, model adds MPI allocation vs procs)\n",
+         (resident store is 12 B/synapse as in the paper + 2 B precomputed delay slot;\n\
+         peak adds the construction transient and delay-queue population, model adds\n\
+         MPI allocation vs procs)\n",
         cal_g.peak_bytes_per_synapse, cal_e.peak_bytes_per_synapse
     ));
     out

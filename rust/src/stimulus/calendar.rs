@@ -1,0 +1,221 @@
+//! Per-neuron next-event calendar for the external Poisson drive.
+//!
+//! Holds, for every locally-driven neuron, the absolute time of its
+//! *next* external event, bucketed by time-driven step. The dynamics
+//! phase drains exactly the entries due this step — neurons without
+//! recurrent or external events this step are never visited, so a
+//! (nearly) silent network costs O(events), not O(n_local), per step.
+//!
+//! Layout: a small power-of-two ring of per-step buckets covers the
+//! near future (one mask, no division); events scheduled beyond the
+//! ring land in a min-heap keyed by step and are popped when their step
+//! arrives. The heap makes pathologically sparse drives (sub-Hz rates
+//! ⇒ gaps of thousands of steps) cost O(log n) per *event* instead of
+//! a per-step scan of any kind. Every neuron has at most one entry in
+//! the calendar at any time (its next event); the entry carries the
+//! event time, and the per-neuron RNG stream is only consumed when that
+//! event is materialized — which keeps the schedule a pure function of
+//! (seed, gid) for any rank decomposition.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// A due next-event entry: the neuron and its event's absolute time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DueEvent {
+    /// Rank-local neuron index.
+    pub local: u32,
+    /// Absolute event time [ms].
+    pub time_ms: f64,
+}
+
+/// Far-future entry (beyond the ring), ordered by (step, time, neuron).
+/// Time is stored as IEEE bits: times are non-negative, so bit order
+/// equals numeric order and the derived `Ord` stays total.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct FarEntry {
+    step: u64,
+    time_bits: u64,
+    local: u32,
+}
+
+/// The calendar: near-future ring + far-future min-heap.
+#[derive(Debug)]
+pub struct StimCalendar {
+    ring: Vec<Vec<DueEvent>>,
+    mask: usize,
+    /// Step the head ring bucket corresponds to.
+    base_step: u64,
+    far: BinaryHeap<Reverse<FarEntry>>,
+}
+
+impl StimCalendar {
+    /// Calendar with `horizon_slots` near-future buckets (rounded up to
+    /// a power of two), starting at step 0.
+    pub fn new(horizon_slots: usize) -> Self {
+        Self::with_base(horizon_slots, 0)
+    }
+
+    /// Calendar starting at `base_step` (mid-run stimulus swaps).
+    pub fn with_base(horizon_slots: usize, base_step: u64) -> Self {
+        let n = horizon_slots.max(1).next_power_of_two();
+        StimCalendar {
+            ring: (0..n).map(|_| Vec::new()).collect(),
+            mask: n - 1,
+            base_step,
+            far: BinaryHeap::new(),
+        }
+    }
+
+    pub fn base_step(&self) -> u64 {
+        self.base_step
+    }
+
+    /// Entries currently scheduled (= neurons with a pending event).
+    pub fn pending(&self) -> usize {
+        self.ring.iter().map(Vec::len).sum::<usize>() + self.far.len()
+    }
+
+    /// Schedule `local`'s next event at `time_ms`. Events whose step
+    /// already passed (float-edge schedules at a step boundary) are
+    /// clamped forward to the current base step — never dropped.
+    #[inline]
+    pub fn schedule(&mut self, local: u32, time_ms: f64, inv_dt_ms: f64) {
+        debug_assert!(time_ms >= 0.0 && time_ms.is_finite());
+        let step = ((time_ms * inv_dt_ms) as u64).max(self.base_step);
+        if ((step - self.base_step) as usize) <= self.mask {
+            self.ring[(step as usize) & self.mask].push(DueEvent { local, time_ms });
+        } else {
+            self.far.push(Reverse(FarEntry {
+                step,
+                time_bits: time_ms.to_bits(),
+                local,
+            }));
+        }
+    }
+
+    /// Drain the entries due at `step` (must be the current base step)
+    /// into `out`, sorted by neuron index, and advance the calendar.
+    /// `out` is a caller-owned scratch buffer, so the steady state
+    /// allocates nothing.
+    pub fn take_step(&mut self, step: u64, out: &mut Vec<DueEvent>) {
+        debug_assert_eq!(step, self.base_step, "calendar out of sync with the engine");
+        let idx = (self.base_step as usize) & self.mask;
+        out.append(&mut self.ring[idx]);
+        self.base_step += 1;
+        while self.far.peek().is_some_and(|r| r.0.step <= step) {
+            let Reverse(e) = self.far.pop().expect("peeked entry");
+            out.push(DueEvent { local: e.local, time_ms: f64::from_bits(e.time_bits) });
+        }
+        out.sort_unstable_by_key(|e| e.local);
+    }
+
+    /// Heap bytes held by the calendar (memory accounting).
+    pub fn resident_bytes(&self) -> u64 {
+        let per = std::mem::size_of::<DueEvent>();
+        self.ring.iter().map(|b| (b.capacity() * per) as u64).sum::<u64>()
+            + (self.far.capacity() * std::mem::size_of::<Reverse<FarEntry>>()) as u64
+            + (self.ring.len() * std::mem::size_of::<Vec<DueEvent>>()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(cal: &mut StimCalendar, step: u64) -> Vec<DueEvent> {
+        let mut out = Vec::new();
+        cal.take_step(step, &mut out);
+        out
+    }
+
+    #[test]
+    fn entries_come_out_at_their_step_sorted_by_neuron() {
+        let mut cal = StimCalendar::new(8);
+        cal.schedule(9, 2.7, 1.0);
+        cal.schedule(3, 2.1, 1.0);
+        cal.schedule(5, 0.4, 1.0);
+        assert_eq!(cal.pending(), 3);
+        let d0 = drain(&mut cal, 0);
+        assert_eq!(d0, vec![DueEvent { local: 5, time_ms: 0.4 }]);
+        assert!(drain(&mut cal, 1).is_empty());
+        let d2 = drain(&mut cal, 2);
+        assert_eq!(d2.iter().map(|e| e.local).collect::<Vec<_>>(), vec![3, 9]);
+        assert_eq!(cal.pending(), 0);
+    }
+
+    #[test]
+    fn far_future_entries_surface_exactly_on_time() {
+        // ring of 4 → steps ≥ base+4 go to the heap
+        let mut cal = StimCalendar::new(4);
+        cal.schedule(1, 100.5, 1.0); // far
+        cal.schedule(2, 2.5, 1.0); // near
+        assert_eq!(cal.pending(), 2);
+        for step in 0..101u64 {
+            let due = drain(&mut cal, step);
+            match step {
+                2 => assert_eq!(due, vec![DueEvent { local: 2, time_ms: 2.5 }]),
+                100 => assert_eq!(due, vec![DueEvent { local: 1, time_ms: 100.5 }]),
+                _ => assert!(due.is_empty(), "step {step}"),
+            }
+        }
+    }
+
+    #[test]
+    fn past_schedules_clamp_forward_instead_of_vanishing() {
+        let mut cal = StimCalendar::new(4);
+        let _ = drain(&mut cal, 0);
+        let _ = drain(&mut cal, 1); // base now 2
+        assert_eq!(cal.base_step(), 2);
+        // an event whose computed step (0) already passed is delivered
+        // at the earliest possible step instead of being lost
+        cal.schedule(7, 0.1, 1.0);
+        let due = drain(&mut cal, 2);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].local, 7);
+    }
+
+    #[test]
+    fn with_base_starts_mid_run() {
+        let mut cal = StimCalendar::with_base(8, 50);
+        cal.schedule(4, 50.9, 1.0);
+        cal.schedule(6, 58.0, 1.0); // beyond an 8-ring from base 50 → heap or ring edge
+        let due = drain(&mut cal, 50);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].local, 4);
+        for step in 51..58 {
+            assert!(drain(&mut cal, step).is_empty());
+        }
+        assert_eq!(drain(&mut cal, 58).len(), 1);
+    }
+
+    #[test]
+    fn non_unit_dt_buckets_by_step() {
+        let mut cal = StimCalendar::new(8);
+        let inv_dt = 1.0 / 0.5; // dt = 0.5 ms
+        cal.schedule(0, 1.2, inv_dt); // step 2
+        cal.schedule(1, 0.4, inv_dt); // step 0
+        assert_eq!(drain(&mut cal, 0).len(), 1);
+        assert!(drain(&mut cal, 1).is_empty());
+        assert_eq!(drain(&mut cal, 2).len(), 1);
+    }
+
+    #[test]
+    fn steady_state_reuses_buffers() {
+        let mut cal = StimCalendar::new(8);
+        let mut out = Vec::new();
+        for step in 0..32u64 {
+            cal.schedule((step % 5) as u32, step as f64 + 1.5, 1.0);
+            out.clear();
+            cal.take_step(step, &mut out);
+        }
+        let bytes = cal.resident_bytes();
+        for step in 32..256u64 {
+            cal.schedule((step % 5) as u32, step as f64 + 1.5, 1.0);
+            out.clear();
+            cal.take_step(step, &mut out);
+            assert_eq!(out.len(), 1);
+        }
+        assert_eq!(cal.resident_bytes(), bytes, "steady state must not allocate");
+    }
+}

@@ -1,5 +1,8 @@
-//! External (thalamo-cortical) Poisson stimulus.
+//! External (thalamo-cortical) Poisson stimulus: the rate model plus
+//! the per-neuron next-event calendar the engine drains each step.
 
+pub mod calendar;
 pub mod poisson;
 
+pub use calendar::{DueEvent, StimCalendar};
 pub use poisson::{ExternalEvent, ExternalStimulus};

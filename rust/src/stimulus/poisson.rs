@@ -2,11 +2,25 @@
 //! receives a bundle of external synapses "collectively modeled as a
 //! Poisson process with a given average spike frequency".
 //!
-//! Per neuron and per time-driven step the engine asks for that step's
-//! external events; the count is Poisson(n_ext·ν·dt), arrival times are
-//! uniform within the step, efficacies are the external weight. Streams
-//! are keyed by (seed, neuron, step) so the stimulus — like the
-//! connectivity — is decomposition-invariant and replayable.
+//! The engine samples the process *event-driven*: each neuron holds the
+//! absolute time of its next external event, advanced by exponential
+//! inter-arrival gaps with mean 1/(n_ext·ν) — the textbook Poisson-
+//! process construction. A per-neuron calendar (`stimulus::calendar`)
+//! keeps those next-event times bucketed by time-driven step, so the
+//! dynamics phase visits only neurons that actually receive events this
+//! step instead of scanning every local neuron. Streams are keyed by
+//! (seed, neuron) and consumed in per-neuron event order, so the
+//! stimulus — like the connectivity — is decomposition-invariant and
+//! replayable.
+//!
+//! The legacy per-step samplers ([`ExternalStimulus::events_for`],
+//! [`ExternalStimulus::events_for_with`]) draw Poisson(n_ext·ν·dt)
+//! counts with uniform arrival times; they remain for tools and tests
+//! that need random access in step, and they are statistically
+//! equivalent to the gap sampler (both realize the same Poisson
+//! process, with different draw orders — spike trains therefore differ
+//! from pre-calendar versions, but stay decomposition-invariant and
+//! replay-identical within a version).
 
 use crate::config::SimConfig;
 use crate::geometry::grid::{stream, NeuronId};
@@ -53,15 +67,53 @@ impl ExternalStimulus {
         self.lambda_per_step * 1000.0 / self.dt_ms
     }
 
-    /// Fresh per-neuron stream for [`events_for_with`]. Streams are
-    /// keyed by neuron only and consumed in step order, so the stimulus
-    /// stays a pure function of (seed, gid) for any decomposition.
+    /// External synaptic efficacy [mV].
+    #[inline]
+    pub fn weight(&self) -> f32 {
+        self.j_ext
+    }
+
+    /// Fresh per-neuron stream for the gap sampler (and the legacy
+    /// [`events_for_with`]). Streams are keyed by neuron only and
+    /// consumed in event order, so the stimulus stays a pure function
+    /// of (seed, gid) for any decomposition.
     pub fn neuron_stream(&self, gid: NeuronId) -> Pcg64 {
         Pcg64::for_entity(self.seed, gid, stream::EXTERNAL)
     }
 
-    /// Hot-path variant: draw this step's events from a persistent
-    /// per-neuron stream (no re-seeding cost; ~3x faster per call).
+    /// Mean inter-arrival gap of the per-neuron Poisson bundle [ms];
+    /// `None` when the configured rate is zero (no events, ever).
+    #[inline]
+    pub fn mean_gap_ms(&self) -> Option<f64> {
+        if self.lambda_per_step > 0.0 {
+            Some(self.dt_ms / self.lambda_per_step)
+        } else {
+            None
+        }
+    }
+
+    /// Draw the gap from "now" to this neuron's next external event
+    /// [ms]. `None` when the rate is zero. Clamped away from 0 so a
+    /// (measure-zero) degenerate uniform draw cannot stall the event
+    /// loop.
+    #[inline]
+    pub fn first_gap_ms(&self, rng: &mut Pcg64) -> Option<f64> {
+        self.mean_gap_ms().map(|g| rng.exponential(g).max(1e-9))
+    }
+
+    /// Absolute time of the event after one at `t_ms` (gap sampler hot
+    /// path). Must only be called when the rate is non-zero — i.e. for
+    /// neurons that got a `first_gap_ms` in the first place.
+    #[inline]
+    pub fn next_event_ms(&self, rng: &mut Pcg64, t_ms: f64) -> f64 {
+        debug_assert!(self.lambda_per_step > 0.0);
+        t_ms + rng.exponential(self.dt_ms / self.lambda_per_step).max(1e-9)
+    }
+
+    /// Legacy per-step sampler: draw this step's Poisson count from a
+    /// persistent per-neuron stream. Superseded in the engine by the
+    /// gap sampler + calendar (which never visits event-less neurons);
+    /// kept for tools and the microbench baseline.
     pub fn events_for_with(
         &self,
         rng: &mut Pcg64,
@@ -85,7 +137,9 @@ impl ExternalStimulus {
 
     /// Append this step's events for `gid` to `out` (sorted by time).
     /// Deterministic in (seed, gid, step); used by tests and tools that
-    /// need random access in step. The engine uses [`events_for_with`].
+    /// need random access in step. The engine uses the gap sampler
+    /// ([`first_gap_ms`](Self::first_gap_ms) /
+    /// [`next_event_ms`](Self::next_event_ms)) through the calendar.
     pub fn events_for(&self, gid: NeuronId, step: u64, out: &mut Vec<ExternalEvent>) {
         if self.lambda_per_step <= 0.0 {
             return;
@@ -180,5 +234,48 @@ mod tests {
             s.events_for(0, step, &mut buf);
         }
         assert!(buf.is_empty());
+        // the gap sampler agrees: no first event, ever
+        assert_eq!(s.mean_gap_ms(), None);
+        let mut rng = s.neuron_stream(0);
+        assert_eq!(s.first_gap_ms(&mut rng), None);
+    }
+
+    #[test]
+    fn gap_sampler_matches_configured_rate() {
+        // 100 syn × 5 Hz = 500 events/s = 0.5 events/ms; run the
+        // next-event chain over 40 s of simulated time
+        let s = stim();
+        assert!((s.mean_gap_ms().unwrap() - 2.0).abs() < 1e-12);
+        let mut rng = s.neuron_stream(17);
+        let horizon_ms = 40_000.0;
+        let mut t = s.first_gap_ms(&mut rng).unwrap();
+        let mut n = 0u64;
+        let mut prev = 0.0;
+        while t < horizon_ms {
+            assert!(t > prev, "event times must strictly increase");
+            prev = t;
+            n += 1;
+            t = s.next_event_ms(&mut rng, t);
+        }
+        let rate_per_ms = n as f64 / horizon_ms;
+        // expectation 0.5/ms over ~20k events → ~0.7% σ; allow 5σ
+        assert!((rate_per_ms - 0.5).abs() < 0.02, "empirical {rate_per_ms} vs 0.5");
+    }
+
+    #[test]
+    fn gap_sampler_is_replayable_and_neuron_specific() {
+        let s = stim();
+        let seq = |gid: u64| -> Vec<u64> {
+            let mut rng = s.neuron_stream(gid);
+            let mut t = s.first_gap_ms(&mut rng).unwrap();
+            let mut out = Vec::new();
+            for _ in 0..64 {
+                out.push(t.to_bits());
+                t = s.next_event_ms(&mut rng, t);
+            }
+            out
+        };
+        assert_eq!(seq(11), seq(11), "re-seeded stream must replay bit-identically");
+        assert_ne!(seq(11), seq(12), "different neurons get independent streams");
     }
 }

@@ -12,8 +12,14 @@
 /// A synaptic event scheduled for delivery.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PendingEvent {
-    /// Exact arrival time [ms] (f32: 0.24 us resolution at 2000 ms —
-    /// far below dt; keeps the event record at 16 bytes).
+    /// Arrival time [ms] as f32 — keeps the event record at 16 bytes.
+    /// Resolution is the f32 ulp at the current simulated time: 0.24 µs
+    /// at 2000 ms (far below dt), degrading to ~0.25–0.5 ms near the
+    /// ~71.6 min wire-time horizon, where sub-step timing coarsens and
+    /// equal-time ties become common (the dynamics sort carries a
+    /// deterministic tiebreak for exactly that reason). Runs that need
+    /// sub-dt timing fidelity should stay well below the horizon or be
+    /// split across `Network::reset()` replays.
     pub time_ms: f32,
     /// Target neuron (rank-local index).
     pub target_local: u32,
@@ -55,9 +61,19 @@ impl DelayQueue {
     /// Schedule an event for `step` (≥ the current base step).
     #[inline]
     pub fn push(&mut self, step: u64, ev: PendingEvent) {
+        self.bucket_mut(step).push(ev);
+    }
+
+    /// Direct access to the bucket of `step` (≥ the current base step).
+    /// The demux hot path resolves the bucket once per *run* of
+    /// equal-delay-slot synapses and appends the whole run, instead of
+    /// paying the slot computation and horizon check per event (see
+    /// `RankProcess::step`).
+    #[inline]
+    pub fn bucket_mut(&mut self, step: u64) -> &mut Vec<PendingEvent> {
         debug_assert!(
             step >= self.base_step,
-            "event scheduled into the past: step {step} < base {}",
+            "bucket in the past: step {step} < base {}",
             self.base_step
         );
         let ahead = (step - self.base_step) as usize;
@@ -67,7 +83,7 @@ impl DelayQueue {
             self.slots.len()
         );
         let idx = (step as usize) & (self.slots.len() - 1);
-        self.slots[idx].push(ev);
+        &mut self.slots[idx]
     }
 
     /// Take the bucket for the current base step and advance the queue.
@@ -189,6 +205,34 @@ mod tests {
     fn over_horizon_push_panics() {
         let mut q = DelayQueue::new(4);
         q.push(4, ev(0.0, 0));
+    }
+
+    #[test]
+    fn bucket_mut_appends_runs_in_place() {
+        let mut q = DelayQueue::new(8);
+        // a run of 3 events into step 2, one into step 5 — same events
+        // push() would deliver, but resolved once per run
+        q.bucket_mut(2).extend([ev(2.1, 1), ev(2.1, 2), ev(2.1, 3)]);
+        q.bucket_mut(5).push(ev(5.0, 9));
+        for step in 0..6u64 {
+            let d = q.drain_current();
+            match step {
+                2 => assert_eq!(
+                    d.iter().map(|e| e.target_local).collect::<Vec<_>>(),
+                    vec![1, 2, 3]
+                ),
+                5 => assert_eq!(d.len(), 1),
+                _ => assert!(d.is_empty(), "step {step}"),
+            }
+            q.recycle(d);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond delay horizon")]
+    fn bucket_mut_checks_horizon() {
+        let mut q = DelayQueue::new(4);
+        let _ = q.bucket_mut(4);
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! Synapse storage (12 B/synapse SoA database keyed by incoming axon)
-//! and the per-timestep delay queues.
+//! Synapse storage (12 B/synapse records + 2 B precomputed delay slots,
+//! keyed by incoming axon) and the per-timestep delay queues.
 
 pub mod delay_queue;
 pub mod storage;

@@ -5,14 +5,28 @@
 //! synapses"; the source-side copy is dropped, which is what produces the
 //! paper's initialization memory peak, Fig. 9). Layout is an array of
 //! 12-byte records — the figure the paper quotes for static
-//! (plasticity-off) synapses. Incoming axons are indexed by source
-//! neuron id: demultiplexing an arriving axonal spike is a binary search
-//! to the axon's contiguous synapse range.
+//! (plasticity-off) synapses — plus a 2-byte-per-synapse precomputed
+//! delay-slot array that the demux hot path consumes. Incoming axons are
+//! indexed by source neuron id: demultiplexing an arriving axonal spike
+//! is a binary search to the axon's contiguous synapse range.
 //!
 //! Fields per synapse:
 //! * target: local neuron index on this rank (u32)
 //! * weight: efficacy J [mV] (f32)
 //! * delay:  transmission delay in µs (u32; delays ≤ ~4000 s)
+//! * slot:   delay in whole dt-steps (u16, parallel array; precomputed
+//!   at build so the demux phase does integer slot adds instead of
+//!   per-event f64 delay arithmetic)
+//!
+//! Within each axon, synapses are sorted by delay slot: an arriving
+//! axonal spike fans out as contiguous *runs* of equal-slot synapses,
+//! each run landing in one delay-queue bucket (see
+//! `RankProcess::step`, Demux). The sort key is fully
+//! decomposition-invariant (source gid, slot, target gid, delay,
+//! weight bits), so the stored order — and therefore delivery — is a
+//! pure function of the global seed.
+
+use crate::synapse::delay_queue::{DelayQueue, PendingEvent};
 
 /// One synapse delivered to the builder (wire form).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -36,7 +50,9 @@ impl crate::mpi::Wire for WireSynapse {
 /// paper's static-synapse footprint. AoS beats SoA here: the demux hot
 /// path always reads all three fields of consecutive synapses of one
 /// axon, so one 12-byte record per synapse touches 3x fewer cache lines
-/// than three parallel arrays (measured in the Perf pass).
+/// than three parallel arrays (measured in the Perf pass). The delay
+/// slot lives in a parallel u16 array instead of the record: padding
+/// would otherwise round the record up to 16 bytes.
 #[repr(C)]
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct StoredSynapse {
@@ -48,25 +64,53 @@ pub struct StoredSynapse {
     pub delay_us: u32,
 }
 
-/// Immutable per-rank synapse database (12 B/synapse).
+/// Immutable per-rank synapse database (12 B/synapse + 2 B slot).
 #[derive(Debug, Default)]
 pub struct SynapseStore {
     // Axon index: parallel arrays sorted by src_gid.
     axon_src: Vec<u32>,
     axon_start: Vec<u32>, // start into the synapse array; len = next start
-    // Synapses, grouped by axon.
+    // Synapses, grouped by axon, sorted by delay slot within each axon.
     syn: Vec<StoredSynapse>,
+    // Per-synapse delay in whole dt-steps (parallel to `syn`).
+    slot: Vec<u16>,
 }
 
 impl SynapseStore {
-    /// Build from wire synapses. `to_local` maps a target gid to the
-    /// rank-local neuron index (panics if a synapse targets a foreign
-    /// neuron — construction routed it wrongly).
-    pub fn build(mut syns: Vec<WireSynapse>, to_local: impl Fn(u32) -> u32) -> Self {
-        // group by source axon
-        syns.sort_unstable_by_key(|s| s.src_gid);
+    /// Delay in whole dt-steps for one delay value: nearest step on the
+    /// dt grid, at least one step (a spike emitted in step t is
+    /// exchanged in step t+1 — enforced by `SimConfig::validate`'s
+    /// `delay_min_ms >= dt_ms`).
+    #[inline]
+    pub fn delay_slot_of(delay_us: u32, dt_ms: f64) -> u16 {
+        let s = (delay_us as f64 * 1e-3 / dt_ms).round() as u64;
+        s.clamp(1, u16::MAX as u64) as u16
+    }
+
+    /// Build from wire synapses. `dt_ms` is the time-driven step used to
+    /// precompute each synapse's delay slot; `to_local` maps a target
+    /// gid to the rank-local neuron index (panics if a synapse targets a
+    /// foreign neuron — construction routed it wrongly).
+    pub fn build(
+        mut syns: Vec<WireSynapse>,
+        dt_ms: f64,
+        to_local: impl Fn(u32) -> u32,
+    ) -> Self {
+        // group by source axon, then by delay slot within the axon; the
+        // remaining key components make the order a decomposition-
+        // invariant pure function of the synapse set
+        syns.sort_unstable_by_key(|s| {
+            (
+                s.src_gid,
+                Self::delay_slot_of(s.delay_us, dt_ms),
+                s.tgt_gid,
+                s.delay_us,
+                s.weight.to_bits(),
+            )
+        });
         let mut store = SynapseStore::default();
         store.syn.reserve_exact(syns.len());
+        store.slot.reserve_exact(syns.len());
         let mut cur_src: Option<u32> = None;
         for s in &syns {
             if cur_src != Some(s.src_gid) {
@@ -79,6 +123,7 @@ impl SynapseStore {
                 weight: s.weight,
                 delay_us: s.delay_us,
             });
+            store.slot.push(Self::delay_slot_of(s.delay_us, dt_ms));
         }
         store.axon_start.push(store.syn.len() as u32);
         store
@@ -92,6 +137,12 @@ impl SynapseStore {
         self.axon_src.len()
     }
 
+    /// Largest precomputed delay slot (0 for an empty store); the delay
+    /// queue horizon must exceed it.
+    pub fn max_slot(&self) -> u16 {
+        self.slot.iter().copied().max().unwrap_or(0)
+    }
+
     /// Does this rank have synapses from the given source neuron?
     #[inline]
     pub fn has_axon(&self, src_gid: u32) -> bool {
@@ -99,7 +150,6 @@ impl SynapseStore {
     }
 
     /// Iterate (target_local, weight, delay_us) of one incoming axon.
-    /// This is the demultiplexing hot path.
     #[inline]
     pub fn axon_synapses(
         &self,
@@ -115,10 +165,68 @@ impl SynapseStore {
         })
     }
 
-    /// Contiguous synapse records of one incoming axon (demux hot path).
+    /// Contiguous synapse records of one incoming axon.
     #[inline]
     pub fn axon_slice(&self, src_gid: u32) -> &[StoredSynapse] {
         &self.syn[self.axon_range(src_gid)]
+    }
+
+    /// Demux view of one incoming axon: (base flat index, synapse
+    /// records, per-synapse delay slots). This is the demultiplexing hot
+    /// path: records are sorted by delay slot, so equal slots form
+    /// contiguous runs that land in one delay-queue bucket each.
+    #[inline]
+    pub fn axon_demux(&self, src_gid: u32) -> (u32, &[StoredSynapse], &[u16]) {
+        let r = self.axon_range(src_gid);
+        (r.start as u32, &self.syn[r.clone()], &self.slot[r])
+    }
+
+    /// Deliver one arriving axonal spike into the delay queue — THE
+    /// demux inner loop (`RankProcess::step`, Fig. 1 step 2.3), shared
+    /// with the benchmarks so BENCH.json always measures the code the
+    /// engine actually runs. Synapses are walked as contiguous
+    /// equal-slot runs: the arrival bucket (and its horizon check) is
+    /// resolved once per run via [`DelayQueue::bucket_mut`], the run's
+    /// arrival time is formed once in f64 and rounded to f32 once
+    /// (monotone — per-neuron injection order is preserved across
+    /// steps), and the per-event work is a single struct write.
+    ///
+    /// `emit_step` is the step the spike was emitted in, `now_step` the
+    /// current step (arrival floor: nothing lands in the past). Returns
+    /// the number of events delivered.
+    #[inline]
+    pub fn demux_spike_into(
+        &self,
+        src_gid: u32,
+        t_emit_ms: f64,
+        emit_step: u64,
+        now_step: u64,
+        dt_ms: f64,
+        queue: &mut DelayQueue,
+    ) -> usize {
+        let (base, syns, slots) = self.axon_demux(src_gid);
+        let mut k = 0usize;
+        while k < syns.len() {
+            let slot = slots[k];
+            let mut end = k + 1;
+            while end < syns.len() && slots[end] == slot {
+                end += 1;
+            }
+            // all events of the run share arrival step and time
+            let arrival = (emit_step + slot as u64).max(now_step);
+            let t_run = (t_emit_ms + slot as f64 * dt_ms) as f32;
+            let bucket = queue.bucket_mut(arrival);
+            for (off, syn) in syns[k..end].iter().enumerate() {
+                bucket.push(PendingEvent {
+                    time_ms: t_run,
+                    target_local: syn.tgt_local,
+                    weight: syn.weight,
+                    syn_idx: base + (k + off) as u32,
+                });
+            }
+            k = end;
+        }
+        syns.len()
     }
 
     /// All source neuron gids with at least one synapse here.
@@ -143,6 +251,12 @@ impl SynapseStore {
         (s.tgt_local, s.weight, s.delay_us)
     }
 
+    /// Precomputed delay slot of synapse `k`.
+    #[inline]
+    pub fn slot_at(&self, k: usize) -> u16 {
+        self.slot[k]
+    }
+
     /// Targets of all synapses in flat index order (used to build the
     /// afferent index for STDP).
     pub fn targets(&self) -> Vec<u32> {
@@ -156,10 +270,11 @@ impl SynapseStore {
         *w = (*w + dw).clamp(lo, hi);
     }
 
-    /// Resident bytes of the store (the Fig. 9 "12 B/synapse" payload
-    /// plus the axon index).
+    /// Resident bytes of the store: the Fig. 9 "12 B/synapse" payload
+    /// plus the 2 B/synapse precomputed delay slot and the axon index.
     pub fn resident_bytes(&self) -> u64 {
         (self.syn.len() * std::mem::size_of::<StoredSynapse>()
+            + self.slot.len() * 2
             + self.axon_src.len() * 4
             + self.axon_start.len() * 4) as u64
     }
@@ -194,14 +309,15 @@ mod tests {
             wire(3, 100, 0.1, 3000),
             wire(9, 100, 0.9, 1000),
         ];
-        let store = SynapseStore::build(syns, |gid| gid - 100);
+        let store = SynapseStore::build(syns, 1.0, |gid| gid - 100);
         assert_eq!(store.synapse_count(), 5);
         assert_eq!(store.axon_count(), 3);
         assert_eq!(store.axon_sources(), &[3, 5, 9]);
+        // within an axon, synapses come out sorted by delay slot
         let from5: Vec<_> = store.axon_synapses(5).collect();
         assert_eq!(from5, vec![(0, 0.5, 1000), (2, 0.7, 1500)]);
         let from3: Vec<_> = store.axon_synapses(3).collect();
-        assert_eq!(from3.len(), 2);
+        assert_eq!(from3, vec![(1, -0.2, 2000), (0, 0.1, 3000)]);
         assert!(store.has_axon(9));
         assert!(!store.has_axon(4));
         assert_eq!(store.axon_synapses(4).count(), 0);
@@ -209,31 +325,131 @@ mod tests {
 
     #[test]
     fn empty_store() {
-        let store = SynapseStore::build(vec![], |g| g);
+        let store = SynapseStore::build(vec![], 1.0, |g| g);
         assert_eq!(store.synapse_count(), 0);
         assert_eq!(store.axon_count(), 0);
+        assert_eq!(store.max_slot(), 0);
         assert!(!store.has_axon(0));
+        let (base, syns, slots) = store.axon_demux(7);
+        assert_eq!(base, 0);
+        assert!(syns.is_empty() && slots.is_empty());
     }
 
     #[test]
-    fn resident_bytes_close_to_12_per_synapse() {
-        // many synapses per axon → index overhead amortizes to ~12 B/syn
+    fn delay_slots_are_nearest_step_and_at_least_one() {
+        assert_eq!(SynapseStore::delay_slot_of(1000, 1.0), 1);
+        assert_eq!(SynapseStore::delay_slot_of(1400, 1.0), 1);
+        assert_eq!(SynapseStore::delay_slot_of(1500, 1.0), 2);
+        assert_eq!(SynapseStore::delay_slot_of(40_000, 1.0), 40);
+        // clamps: never less than one step, never beyond u16
+        assert_eq!(SynapseStore::delay_slot_of(100, 1.0), 1);
+        assert_eq!(SynapseStore::delay_slot_of(u32::MAX, 0.001), u16::MAX);
+        // non-unit dt
+        assert_eq!(SynapseStore::delay_slot_of(1000, 0.5), 2);
+        assert_eq!(SynapseStore::delay_slot_of(900, 0.3), 3);
+    }
+
+    #[test]
+    fn demux_view_is_slot_sorted_and_indexed() {
+        let mut syns = Vec::new();
+        let mut rng = Pcg64::new(3, 0);
+        for _ in 0..500 {
+            syns.push(wire(
+                rng.next_below(10) as u32,
+                rng.next_below(40) as u32,
+                rng.next_f32(),
+                1000 + rng.next_below(39_000) as u32,
+            ));
+        }
+        let store = SynapseStore::build(syns, 1.0, |g| g);
+        for &src in store.axon_sources() {
+            let (base, recs, slots) = store.axon_demux(src);
+            assert_eq!(recs.len(), slots.len());
+            assert!(slots.windows(2).all(|w| w[0] <= w[1]), "axon {src} not slot-sorted");
+            for (off, (rec, &slot)) in recs.iter().zip(slots).enumerate() {
+                let k = base as usize + off;
+                assert_eq!(store.synapse_at(k), (rec.tgt_local, rec.weight, rec.delay_us));
+                assert_eq!(store.slot_at(k), slot);
+                assert_eq!(slot, SynapseStore::delay_slot_of(rec.delay_us, 1.0));
+            }
+        }
+        assert!(store.max_slot() >= 1 && store.max_slot() <= 40);
+    }
+
+    #[test]
+    fn demux_spike_into_delivers_runs_at_their_slots() {
+        // axon 1: delays 1.2 ms, 1.4 ms (slot 1) and 2.6 ms (slot 3)
+        let syns = vec![
+            wire(1, 10, 0.5, 1200),
+            wire(1, 11, 0.6, 1400),
+            wire(1, 12, 0.7, 2600),
+            wire(2, 13, 0.9, 1000), // different axon: must not deliver
+        ];
+        let store = SynapseStore::build(syns, 1.0, |g| g);
+        let mut q = DelayQueue::new(8);
+        // spike emitted in step 4 at t = 4.25 ms, processed at step 5
+        let delivered = store.demux_spike_into(1, 4.25, 4, 5, 1.0, &mut q);
+        assert_eq!(delivered, 3);
+        assert_eq!(q.pending(), 3);
+        // drain from the current base (0) up to the arrival steps
+        for step in 0..8u64 {
+            let out = q.drain_current();
+            match step {
+                5 => {
+                    // slot-1 run arrives at step 4+1, both events at
+                    // the same quantized time 4.25 + 1.0
+                    assert_eq!(out.len(), 2);
+                    for ev in &out {
+                        assert_eq!(ev.time_ms, 5.25);
+                    }
+                    let mut tg: Vec<u32> = out.iter().map(|e| e.target_local).collect();
+                    tg.sort_unstable();
+                    assert_eq!(tg, vec![10, 11]);
+                }
+                7 => {
+                    // slot-3 run arrives at step 4+3
+                    assert_eq!(out.len(), 1);
+                    assert_eq!(out[0].target_local, 12);
+                    assert_eq!(out[0].time_ms, 7.25);
+                }
+                _ => assert!(out.is_empty(), "unexpected events at step {step}"),
+            }
+            q.recycle(out);
+        }
+        // arrival never lands before `now_step`, even for stale input
+        let mut q = DelayQueue::new(8);
+        store.demux_spike_into(2, 0.0, 0, 3, 1.0, &mut q);
+        for step in 0..4u64 {
+            let out = q.drain_current();
+            assert_eq!(out.len(), usize::from(step == 3), "step {step}");
+            q.recycle(out);
+        }
+        // unknown axon: nothing delivered
+        let mut q = DelayQueue::new(8);
+        assert_eq!(store.demux_spike_into(99, 0.0, 0, 0, 1.0, &mut q), 0);
+        assert_eq!(q.pending(), 0);
+    }
+
+    #[test]
+    fn resident_bytes_close_to_14_per_synapse() {
+        // many synapses per axon → index overhead amortizes to the
+        // 12 B record + 2 B precomputed delay slot
         let mut syns = Vec::new();
         for src in 0..100u32 {
             for t in 0..1000u32 {
                 syns.push(wire(src, t, 0.1, 1000));
             }
         }
-        let store = SynapseStore::build(syns, |g| g);
+        let store = SynapseStore::build(syns, 1.0, |g| g);
         let per_syn = store.resident_bytes() as f64 / store.synapse_count() as f64;
-        assert!(per_syn < 12.1, "bytes/synapse = {per_syn}");
-        assert!(per_syn >= 12.0);
+        assert!(per_syn < 14.1, "bytes/synapse = {per_syn}");
+        assert!(per_syn >= 14.0);
     }
 
     #[test]
     fn scale_axon_weights_touches_only_that_axon() {
         let syns = vec![wire(1, 0, 1.0, 0), wire(2, 0, 1.0, 0), wire(1, 1, 2.0, 0)];
-        let mut store = SynapseStore::build(syns, |g| g);
+        let mut store = SynapseStore::build(syns, 1.0, |g| g);
         store.scale_axon_weights(1, 0.5);
         let from1: Vec<_> = store.axon_synapses(1).collect();
         assert_eq!(from1, vec![(0, 0.5, 0), (1, 1.0, 0)]);
@@ -255,7 +471,7 @@ mod tests {
                     rng.next_below(40_000) as u32,
                 ));
             }
-            let store = SynapseStore::build(syns.clone(), |g| g);
+            let store = SynapseStore::build(syns.clone(), 1.0, |g| g);
             t.assert_eq(store.synapse_count(), syns.len() as u64, "count preserved");
             // every input synapse appears under its axon
             for s in &syns {

@@ -8,6 +8,31 @@
 
 use std::time::Instant;
 
+/// Minimal in-tree binding for `clock_gettime` — the image vendors no
+/// `libc` crate, and these two clocks are the only C-library surface
+/// the whole engine needs. Layout matches 64-bit Linux/macOS.
+#[allow(non_camel_case_types)]
+mod libc {
+    #[repr(C)]
+    pub struct timespec {
+        pub tv_sec: i64,
+        pub tv_nsec: i64,
+    }
+
+    #[cfg(target_os = "macos")]
+    pub const CLOCK_PROCESS_CPUTIME_ID: i32 = 12;
+    #[cfg(target_os = "macos")]
+    pub const CLOCK_THREAD_CPUTIME_ID: i32 = 16;
+    #[cfg(not(target_os = "macos"))]
+    pub const CLOCK_PROCESS_CPUTIME_ID: i32 = 2;
+    #[cfg(not(target_os = "macos"))]
+    pub const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+
+    extern "C" {
+        pub fn clock_gettime(clockid: i32, tp: *mut timespec) -> i32;
+    }
+}
+
 /// Nanoseconds of CPU time consumed by the *calling thread* so far.
 pub fn thread_cputime_ns() -> u64 {
     let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
