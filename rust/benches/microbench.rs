@@ -2,12 +2,12 @@
 //! (EXPERIMENTS.md par. Perf). Measures the real building blocks of the
 //! simulation loop in isolation.
 
-use dpsnn::bench_harness::{demux_bench_store, legacy_demux_spike_into, report_throughput};
+use dpsnn::bench_harness::{demux_bench_store, grouping_bench_bucket, report_throughput};
 use dpsnn::config::{NeuronParams, SimConfig};
 use dpsnn::mpi::{run_cluster, CommClass};
 use dpsnn::neuron::{LifParams, LifState};
 use dpsnn::stimulus::ExternalStimulus;
-use dpsnn::synapse::DelayQueue;
+use dpsnn::synapse::{DelayQueue, PendingEvent, TargetGrouper};
 use dpsnn::util::prng::Pcg64;
 
 fn bench_prng() {
@@ -41,23 +41,11 @@ fn bench_lif() {
 }
 
 fn bench_demux() {
-    // 1000 axons x 1200 synapses, demux 100 spikes/step through the store;
-    // legacy per-event f64 delivery vs the engine's slot-run delivery
-    // (same shared store builder as `dpsnn bench`)
+    // 1000 axons x 1200 synapses, demux 100 spikes/step through the
+    // store (same shared store builder as `dpsnn bench`). The legacy
+    // per-event f64 baseline is retired — its numbers live on in the
+    // schema-1 BENCH.json history.
     let store = demux_bench_store(1000, 1200);
-
-    let mut queue = DelayQueue::new(64);
-    let mut step = 0u64;
-    report_throughput("demux: legacy per-event f64 push (120k ev)", 120_000, 2, 10, || {
-        for spike in 0..100u32 {
-            // the one shared baseline copy (also used by `dpsnn bench`)
-            legacy_demux_spike_into(&store, spike * 10, step as f64, step, &mut queue);
-        }
-        let b = queue.drain_current();
-        queue.recycle(b);
-        step += 1;
-    });
-
     let mut queue = DelayQueue::new(64);
     let mut step = 0u64;
     report_throughput("demux: slot-run fan-out (engine path, 120k ev)", 120_000, 2, 10, || {
@@ -71,20 +59,33 @@ fn bench_demux() {
     });
 }
 
+fn bench_grouping() {
+    // order one realistic drained bucket by (target, time, syn_idx):
+    // comparison sort vs the engine's bucketed grouper, over the SAME
+    // shared bucket builder `dpsnn bench` uses
+    let store = demux_bench_store(1000, 1200);
+    let template = grouping_bench_bucket(&store, 100, 1000);
+    let n = template.len() as u64;
+    let mut work = template.clone();
+    report_throughput("dynamics: comparison sort (target,time,syn)", n, 2, 10, || {
+        work.copy_from_slice(&template);
+        work.sort_unstable_by_key(PendingEvent::order_key);
+    });
+    let mut grouper = TargetGrouper::new(100_000);
+    report_throughput("dynamics: bucketed grouper (engine path)", n, 2, 10, || {
+        work.copy_from_slice(&template);
+        grouper.sort_events(&mut work);
+    });
+}
+
 fn bench_stimulus() {
     let mut cfg = SimConfig::test_small();
     cfg.external.synapses_per_neuron = 420;
     cfg.external.rate_hz = 3.0;
     let stim = ExternalStimulus::new(&cfg);
-    let mut buf = Vec::new();
-    report_throughput("stimulus: legacy per-neuron per-step poisson draw", 10_000, 2, 10, || {
-        for gid in 0..10_000u64 {
-            buf.clear();
-            stim.events_for(gid, 5, &mut buf);
-        }
-    });
     // gap sampler: cost per *event*, independent of neuron count — the
     // engine pays this only for neurons with an event due this step
+    // (the retired per-step Poisson-draw entry is frozen history)
     let mut rng = stim.neuron_stream(3);
     let mut t = stim.first_gap_ms(&mut rng).unwrap();
     report_throughput("stimulus: next-event gap draw (per event)", 200_000, 2, 10, || {
@@ -112,6 +113,7 @@ fn main() {
     bench_prng();
     bench_lif();
     bench_demux();
+    bench_grouping();
     bench_stimulus();
     bench_exchange();
     bench_demux_locality();

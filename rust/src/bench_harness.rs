@@ -5,9 +5,12 @@
 //! `dpsnn bench` standard matrix that records the repo's perf
 //! trajectory into `BENCH.json` (see docs/PERF.md).
 
+use crate::coordinator::session::construct_pairs;
 use crate::coordinator::{Network, SimulationBuilder};
+use crate::engine::probe::SpikeCountProbe;
 use crate::engine::Phase;
-use crate::synapse::{DelayQueue, PendingEvent, SynapseStore};
+use crate::synapse::{DelayQueue, PendingEvent, SynapseStore, TargetGrouper};
+use crate::util::json::Json;
 use crate::util::stats::Running;
 use crate::util::timer::fmt_ns;
 use std::time::Instant;
@@ -161,12 +164,16 @@ pub struct BenchParams {
     pub silent_npc: (u32, u32),
     pub silent_ms: f64,
     /// Demux microbench: axons × synapses/axon, spikes per step, and
-    /// timing repetitions.
+    /// timing repetitions (shared by the dynamics-grouping microbench,
+    /// which consumes the same demuxed buckets).
     pub demux_axons: u32,
     pub demux_syn_per_axon: u32,
     pub demux_spikes_per_step: u32,
     pub demux_warmup: u32,
     pub demux_iters: u32,
+    /// Executor bench: ranks and time-driven steps per measured span.
+    pub exec_ranks: u32,
+    pub exec_steps: u64,
 }
 
 impl BenchParams {
@@ -186,6 +193,8 @@ impl BenchParams {
             demux_spikes_per_step: 60,
             demux_warmup: 3,
             demux_iters: 15,
+            exec_ranks: 2,
+            exec_steps: 150,
         }
     }
 
@@ -202,6 +211,7 @@ impl BenchParams {
             demux_spikes_per_step: 40,
             demux_warmup: 2,
             demux_iters: 6,
+            exec_steps: 60,
             ..Self::standard()
         }
     }
@@ -252,18 +262,65 @@ impl SilentScaling {
     }
 }
 
-/// Demux microbench: the legacy per-event f64 delivery loop vs the
-/// slot-run delivery the engine now uses, over the same synapse store.
+/// Demux microbench: ns/event of the engine's slot-run delivery loop
+/// (the exact `SynapseStore::demux_spike_into` the engine calls).
+///
+/// Schema-1 records also carried `legacy_ns_per_event`/`speedup`
+/// against the retired pre-slot delivery loop; that baseline is gone
+/// and those fields are frozen history (see docs/PERF.md).
 #[derive(Clone, Copy, Debug)]
 pub struct DemuxMicro {
     pub events_per_call: u64,
-    pub legacy_ns_per_event: f64,
     pub slot_ns_per_event: f64,
 }
 
-impl DemuxMicro {
+/// Dynamics-grouping microbench: ordering one realistic drained event
+/// bucket into `(target, time, syn_idx)` order via the general
+/// comparison sort vs the engine's bucketed [`TargetGrouper`], over
+/// identical buckets (both orderings are verified equal first).
+#[derive(Clone, Copy, Debug)]
+pub struct GroupingMicro {
+    pub events_per_call: u64,
+    /// pdqsort over the full `order_key` (the retired engine path).
+    pub sort_ns_per_event: f64,
+    /// The engine's counting/bucket grouping.
+    pub group_ns_per_event: f64,
+}
+
+impl GroupingMicro {
     pub fn speedup(&self) -> f64 {
-        self.legacy_ns_per_event / self.slot_ns_per_event.max(1e-9)
+        self.sort_ns_per_event / self.group_ns_per_event.max(1e-9)
+    }
+}
+
+/// Executor bench: ns/step of driving the same network through the
+/// spawn-per-step thread-team model (the retired engine path, kept here
+/// as the measured baseline) vs the persistent rank pool, unprobed and
+/// probed.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecutorBench {
+    pub ranks: u32,
+    pub steps: u64,
+    /// Scoped thread team spawned per step (what probed advance — and
+    /// every `step()` — used to cost).
+    pub spawn_ns_per_step: f64,
+    /// Persistent pool, one `Run` command for the whole span.
+    pub pool_ns_per_step: f64,
+    /// Persistent pool, one command per step + probe observation (the
+    /// probed-advance path).
+    pub pool_probed_ns_per_step: f64,
+}
+
+impl ExecutorBench {
+    /// How much the pool beats spawn-per-step (higher is better).
+    pub fn spawn_over_pool(&self) -> f64 {
+        self.spawn_ns_per_step / self.pool_ns_per_step.max(1e-9)
+    }
+
+    /// Probed vs unprobed advance on the pool (target: < 1.10 — probed
+    /// runs pay only command dispatch + observation, not thread churn).
+    pub fn probed_over_unprobed(&self) -> f64 {
+        self.pool_probed_ns_per_step / self.pool_ns_per_step.max(1e-9)
     }
 }
 
@@ -274,6 +331,8 @@ pub struct BenchReport {
     pub cells: Vec<BenchCell>,
     pub silent: SilentScaling,
     pub demux: DemuxMicro,
+    pub grouping: GroupingMicro,
+    pub executor: ExecutorBench,
 }
 
 fn phases4() -> [Phase; 4] {
@@ -341,39 +400,6 @@ fn bench_silent(p: &BenchParams) -> SilentScaling {
     }
 }
 
-/// The PRE-slot-precompute demux delivery loop, kept verbatim as the
-/// baseline [`SynapseStore::demux_spike_into`] is measured against.
-/// Both `dpsnn bench` and `cargo bench --bench microbench` call this
-/// one copy, so the two reported speedups share one baseline. Assumes
-/// the benchmark's dt = 1 ms (arrival step = whole ms of arrival
-/// time), like the original engine loop it preserves. Returns the
-/// number of events delivered.
-pub fn legacy_demux_spike_into(
-    store: &SynapseStore,
-    src_gid: u32,
-    t_emit_ms: f64,
-    now_step: u64,
-    queue: &mut DelayQueue,
-) -> usize {
-    let range = store.axon_range(src_gid);
-    let base = range.start as u32;
-    let n = range.len();
-    for (off, k) in range.enumerate() {
-        let (tgt, w, d) = store.synapse_at(k);
-        let t_arr = t_emit_ms + d as f64 * 1e-3;
-        queue.push(
-            (t_arr as u64).max(now_step),
-            PendingEvent {
-                time_ms: t_arr as f32,
-                target_local: tgt,
-                weight: w,
-                syn_idx: base + off as u32,
-            },
-        );
-    }
-    n
-}
-
 /// The demux benchmarks' synapse store: `axons` × `syn_per_axon`
 /// random synapses (100k-neuron target span, 1–31 ms delays, dt = 1 ms
 /// slots). One definition shared by `dpsnn bench` and the cargo-bench
@@ -403,18 +429,6 @@ fn bench_demux(p: &BenchParams) -> DemuxMicro {
         p.demux_spikes_per_step as u64 * p.demux_syn_per_axon as u64;
     let spike_axon = |i: u32| i % p.demux_axons;
 
-    // legacy: per-event f64 delay arithmetic + per-event checked push
-    let mut queue = DelayQueue::new(64);
-    let mut step = 0u64;
-    let (legacy_mean, _) = time_ns(p.demux_warmup, p.demux_iters, || {
-        for i in 0..p.demux_spikes_per_step {
-            legacy_demux_spike_into(&store, spike_axon(i), step as f64, step, &mut queue);
-        }
-        let b = queue.drain_current();
-        queue.recycle(b);
-        step += 1;
-    });
-
     // slot runs: the engine's actual demux inner loop — the SAME
     // function RankProcess::step calls, so the record can't drift from
     // the code it claims to measure
@@ -429,15 +443,134 @@ fn bench_demux(p: &BenchParams) -> DemuxMicro {
         step += 1;
     });
 
-    DemuxMicro {
-        events_per_call,
-        legacy_ns_per_event: legacy_mean / events_per_call as f64,
-        slot_ns_per_event: slot_mean / events_per_call as f64,
+    DemuxMicro { events_per_call, slot_ns_per_event: slot_mean / events_per_call as f64 }
+}
+
+/// One realistic drained Dynamics bucket: everything `spikes` spikes
+/// (cycling over `axons` source axons, emission offsets spread across
+/// the step) demux through `store`, concatenated across arrival slots —
+/// the same run structure (slot-sorted, nearly target-grouped) the
+/// engine's grouper sees. One definition shared by `dpsnn bench` and
+/// `cargo bench --bench microbench`, so the two `dynamics grouping`
+/// numbers measure identically-shaped buckets.
+pub fn grouping_bench_bucket(store: &SynapseStore, spikes: u32, axons: u32) -> Vec<PendingEvent> {
+    let mut queue = DelayQueue::new(64);
+    for i in 0..spikes {
+        // spread emission offsets across the step like real spikes do
+        let t_emit = (i % 40) as f64 * 0.02;
+        store.demux_spike_into(i % axons, t_emit, 0, 0, 1.0, &mut queue);
+    }
+    let mut bucket = Vec::new();
+    for _ in 0..64 {
+        let b = queue.drain_current();
+        bucket.extend_from_slice(&b);
+        queue.recycle(b);
+    }
+    bucket
+}
+
+fn bench_grouping(p: &BenchParams) -> GroupingMicro {
+    let store = demux_bench_store(p.demux_axons, p.demux_syn_per_axon);
+    let template = grouping_bench_bucket(&store, p.demux_spikes_per_step, p.demux_axons);
+    let events = template.len().max(1) as u64;
+    // the bench store targets span 0..100_000 local neurons
+    let mut grouper = TargetGrouper::new(100_000);
+
+    // correctness first: both orderings must agree exactly
+    let mut expect = template.clone();
+    expect.sort_unstable_by_key(PendingEvent::order_key);
+    let mut got = template.clone();
+    grouper.sort_events(&mut got);
+    assert_eq!(got, expect, "grouper diverged from the comparison sort");
+
+    let mut work = template.clone();
+    let (sort_mean, _) = time_ns(p.demux_warmup, p.demux_iters, || {
+        work.copy_from_slice(&template);
+        work.sort_unstable_by_key(PendingEvent::order_key);
+    });
+    let (group_mean, _) = time_ns(p.demux_warmup, p.demux_iters, || {
+        work.copy_from_slice(&template);
+        grouper.sort_events(&mut work);
+    });
+    GroupingMicro {
+        events_per_call: events,
+        sort_ns_per_event: sort_mean / events as f64,
+        group_ns_per_event: group_mean / events as f64,
+    }
+}
+
+/// `executor_spawn_vs_pool`: same configuration, same seed, same spike
+/// work — driven (a) by a scoped thread team spawned per step (the
+/// retired execution model, reconstructed here as the measured
+/// baseline), (b) by the persistent pool in one `Run` command, (c) by
+/// the persistent pool one command per step with a probe attached.
+fn bench_executor(p: &BenchParams) -> ExecutorBench {
+    let builder = || {
+        SimulationBuilder::gaussian(p.side)
+            .neurons_per_column(p.npc)
+            .ranks(p.exec_ranks)
+            .external(p.ext_syn, p.ext_hz)
+    };
+    let steps = p.exec_steps;
+    let span_ms = steps as f64; // dt = 1 ms in the bench presets
+
+    // (a) spawn-per-step baseline on raw rank pairs
+    let b = builder();
+    let (cfg, opts) = (b.config().clone(), b.options().clone());
+    let mut pairs = construct_pairs(&cfg, &opts);
+    let run_span = |pairs: &mut Vec<(crate::engine::RankProcess, crate::mpi::RankComm)>,
+                    step0: u64| {
+        for k in 0..steps {
+            std::thread::scope(|s| {
+                for (rank, (proc, comm)) in pairs.iter_mut().enumerate() {
+                    std::thread::Builder::new()
+                        .name(format!("rank{rank}-spawn"))
+                        .stack_size(8 << 20)
+                        .spawn_scoped(s, move || proc.step(comm, step0 + k))
+                        .expect("spawn rank step thread");
+                }
+            });
+        }
+    };
+    run_span(&mut pairs, 0); // warmup span
+    let t0 = Instant::now();
+    run_span(&mut pairs, steps);
+    let spawn_ns_per_step = t0.elapsed().as_nanos() as f64 / steps as f64;
+    drop(pairs);
+
+    // (b) persistent pool, unprobed: one command for the whole span
+    let mut net = builder().build().expect("executor bench construction");
+    net.session().advance(span_ms); // warmup span
+    net.reset();
+    net.session().advance(span_ms); // rewarm after reset
+    let t0 = Instant::now();
+    net.session().advance(span_ms);
+    let pool_ns_per_step = t0.elapsed().as_nanos() as f64 / steps as f64;
+
+    // (c) persistent pool, probed: one command per observed step
+    net.reset();
+    net.session().advance(span_ms); // same state trajectory as (b)
+    let mut counts = SpikeCountProbe::new();
+    let t0 = Instant::now();
+    {
+        let mut session = net.session();
+        session.attach(&mut counts);
+        session.advance(span_ms);
+    }
+    let pool_probed_ns_per_step = t0.elapsed().as_nanos() as f64 / steps as f64;
+
+    ExecutorBench {
+        ranks: p.exec_ranks,
+        steps,
+        spawn_ns_per_step,
+        pool_ns_per_step,
+        pool_probed_ns_per_step,
     }
 }
 
 /// Run the full bench suite: (gaussian, exponential) × rank counts,
-/// plus the silent-dynamics scaling probe and the demux microbench.
+/// plus the silent-dynamics scaling probe and the demux / grouping /
+/// executor microbenches.
 pub fn run_bench(quick: bool) -> BenchReport {
     let p = if quick { BenchParams::quick() } else { BenchParams::standard() };
     run_bench_with(quick, &p)
@@ -451,7 +584,14 @@ pub fn run_bench_with(quick: bool, p: &BenchParams) -> BenchReport {
             cells.push(bench_cell(kernel, ranks, p));
         }
     }
-    BenchReport { quick, cells, silent: bench_silent(p), demux: bench_demux(p) }
+    BenchReport {
+        quick,
+        cells,
+        silent: bench_silent(p),
+        demux: bench_demux(p),
+        grouping: bench_grouping(p),
+        executor: bench_executor(p),
+    }
 }
 
 impl BenchReport {
@@ -487,16 +627,37 @@ impl BenchReport {
             self.silent.neuron_ratio(),
         ));
         out.push_str(&format!(
-            "demux microbench: legacy {:.2} ns/ev -> slot runs {:.2} ns/ev ({:.2}x)\n",
-            self.demux.legacy_ns_per_event,
+            "demux microbench: slot runs {:.2} ns/ev (legacy baseline retired; \
+             schema-1 records are the history)\n",
             self.demux.slot_ns_per_event,
-            self.demux.speedup(),
+        ));
+        out.push_str(&format!(
+            "dynamics grouping: comparison sort {:.2} ns/ev -> bucketed {:.2} ns/ev \
+             ({:.2}x, {} events/bucket)\n",
+            self.grouping.sort_ns_per_event,
+            self.grouping.group_ns_per_event,
+            self.grouping.speedup(),
+            self.grouping.events_per_call,
+        ));
+        out.push_str(&format!(
+            "executor: spawn-per-step {} -> pool {} per step ({:.2}x, {} ranks x {} \
+             steps); probed pool {} per step ({:.3}x of unprobed)\n",
+            fmt_ns(self.executor.spawn_ns_per_step),
+            fmt_ns(self.executor.pool_ns_per_step),
+            self.executor.spawn_over_pool(),
+            self.executor.ranks,
+            self.executor.steps,
+            fmt_ns(self.executor.pool_probed_ns_per_step),
+            self.executor.probed_over_unprobed(),
         ));
         out
     }
 
-    /// Machine record (`BENCH.json`): schema 1. Hand-rolled writer —
-    /// the offline image has no serde.
+    /// Machine record (`BENCH.json`): schema 2. Hand-rolled writer —
+    /// the offline image has no serde. Schema 2 drops the
+    /// `demux_microbench` legacy fields (baseline retired) and adds the
+    /// `dynamics_grouping` and `executor_spawn_vs_pool` records; see
+    /// docs/PERF.md for how to read both schemas.
     pub fn to_json(&self) -> String {
         let unix_s = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
@@ -504,7 +665,7 @@ impl BenchReport {
             .unwrap_or(0);
         let mut s = String::new();
         s.push_str("{\n");
-        s.push_str("  \"schema\": 1,\n");
+        s.push_str("  \"schema\": 2,\n");
         s.push_str(&format!("  \"created_unix_s\": {unix_s},\n"));
         s.push_str(&format!("  \"quick\": {},\n", self.quick));
         s.push_str("  \"matrix\": [\n");
@@ -549,16 +710,102 @@ impl BenchReport {
         ));
         s.push_str(&format!(
             "  \"demux_microbench\": {{\"events_per_call\": {}, \
-             \"legacy_ns_per_event\": {:.3}, \"slot_ns_per_event\": {:.3}, \
-             \"speedup\": {:.3}}}\n",
-            self.demux.events_per_call,
-            self.demux.legacy_ns_per_event,
-            self.demux.slot_ns_per_event,
-            self.demux.speedup(),
+             \"slot_ns_per_event\": {:.3}}},\n",
+            self.demux.events_per_call, self.demux.slot_ns_per_event,
+        ));
+        s.push_str(&format!(
+            "  \"dynamics_grouping\": {{\"events_per_call\": {}, \
+             \"sort_ns_per_event\": {:.3}, \"group_ns_per_event\": {:.3}, \
+             \"speedup\": {:.3}}},\n",
+            self.grouping.events_per_call,
+            self.grouping.sort_ns_per_event,
+            self.grouping.group_ns_per_event,
+            self.grouping.speedup(),
+        ));
+        s.push_str(&format!(
+            "  \"executor_spawn_vs_pool\": {{\"ranks\": {}, \"steps\": {}, \
+             \"spawn_ns_per_step\": {:.1}, \"pool_ns_per_step\": {:.1}, \
+             \"pool_probed_ns_per_step\": {:.1}, \"spawn_over_pool\": {:.3}, \
+             \"probed_over_unprobed\": {:.3}}}\n",
+            self.executor.ranks,
+            self.executor.steps,
+            self.executor.spawn_ns_per_step,
+            self.executor.pool_ns_per_step,
+            self.executor.pool_probed_ns_per_step,
+            self.executor.spawn_over_pool(),
+            self.executor.probed_over_unprobed(),
         ));
         s.push('}');
         s.push('\n');
         s
+    }
+
+    /// Diff this report against a committed baseline `BENCH.json`
+    /// (schema 1 or 2; records present in both are compared). Returns
+    /// one line per record whose cost regressed by more than
+    /// `threshold` (0.25 = +25%). A parse failure is an `Err` — a
+    /// corrupt baseline should fail the CI job loudly, not silently
+    /// pass.
+    pub fn compare_against(
+        &self,
+        baseline_json: &str,
+        threshold: f64,
+    ) -> Result<Vec<String>, String> {
+        let doc = crate::util::json::parse(baseline_json)
+            .map_err(|e| format!("baseline parse error: {e}"))?;
+        let worse = |cur: f64, base: f64| base > 0.0 && cur > base * (1.0 + threshold);
+        let mut regressions = Vec::new();
+        let mut checked = 0u32;
+        if let Some(matrix) = doc.get("matrix").and_then(Json::arr) {
+            for cell in &self.cells {
+                let base_cell = matrix.iter().find(|c| {
+                    c.get("kernel").and_then(Json::as_str) == Some(cell.kernel)
+                        && c.get("ranks").and_then(Json::num) == Some(cell.ranks as f64)
+                });
+                let Some(phases) = base_cell.and_then(|c| c.get("phase_ns_per_step")) else {
+                    continue;
+                };
+                for (i, name) in ["pack", "exchange", "demux", "dynamics"].iter().enumerate()
+                {
+                    if let Some(base) = phases.get(name).and_then(Json::num) {
+                        checked += 1;
+                        let cur = cell.phase_ns_per_step[i];
+                        if worse(cur, base) {
+                            regressions.push(format!(
+                                "{} x{} {}: {:.1} -> {:.1} ns/step (+{:.0}%)",
+                                cell.kernel,
+                                cell.ranks,
+                                name,
+                                base,
+                                cur,
+                                (cur / base - 1.0) * 100.0
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        let micro: [(&str, &str, f64); 3] = [
+            ("demux_microbench", "slot_ns_per_event", self.demux.slot_ns_per_event),
+            ("dynamics_grouping", "group_ns_per_event", self.grouping.group_ns_per_event),
+            ("executor_spawn_vs_pool", "pool_ns_per_step", self.executor.pool_ns_per_step),
+        ];
+        for (record, field, cur) in micro {
+            if let Some(base) = doc.get(record).and_then(|r| r.get(field)).and_then(Json::num)
+            {
+                checked += 1;
+                if worse(cur, base) {
+                    regressions.push(format!(
+                        "{record}.{field}: {base:.2} -> {cur:.2} (+{:.0}%)",
+                        (cur / base - 1.0) * 100.0
+                    ));
+                }
+            }
+        }
+        if checked == 0 {
+            return Err("baseline has no comparable records (wrong file?)".to_string());
+        }
+        Ok(regressions)
     }
 }
 
@@ -594,11 +841,8 @@ mod tests {
         t.row(&["only one".into()]);
     }
 
-    #[test]
-    fn micro_bench_run_covers_the_matrix_and_serializes() {
-        // a deliberately tiny instance of the standard matrix: shape and
-        // JSON schema are what's under test, not the numbers
-        let p = BenchParams {
+    fn tiny_params() -> BenchParams {
+        BenchParams {
             side: 4,
             npc: 30,
             duration_ms: 10.0,
@@ -609,8 +853,16 @@ mod tests {
             demux_spikes_per_step: 10,
             demux_warmup: 1,
             demux_iters: 2,
+            exec_steps: 8,
             ..BenchParams::standard()
-        };
+        }
+    }
+
+    #[test]
+    fn micro_bench_run_covers_the_matrix_and_serializes() {
+        // a deliberately tiny instance of the standard matrix: shape and
+        // JSON schema are what's under test, not the numbers
+        let p = tiny_params();
         let report = run_bench_with(true, &p);
         assert_eq!(report.cells.len(), 6, "2 kernels x 3 rank counts");
         for c in &report.cells {
@@ -623,31 +875,79 @@ mod tests {
         let gauss: Vec<_> = report.cells.iter().filter(|c| c.kernel == "gaussian").collect();
         assert!(gauss.windows(2).all(|w| w[0].synapses == w[1].synapses));
         assert!(report.demux.events_per_call == 500);
-        assert!(report.demux.legacy_ns_per_event > 0.0);
         assert!(report.demux.slot_ns_per_event > 0.0);
+        assert!(report.grouping.events_per_call > 0);
+        assert!(report.grouping.sort_ns_per_event > 0.0);
+        assert!(report.grouping.group_ns_per_event > 0.0);
+        assert_eq!(report.executor.ranks, 2);
+        assert_eq!(report.executor.steps, 8);
+        assert!(report.executor.spawn_ns_per_step > 0.0);
+        assert!(report.executor.pool_ns_per_step > 0.0);
+        assert!(report.executor.pool_probed_ns_per_step > 0.0);
         assert!(report.silent.n_large == 4 * report.silent.n_small);
 
         let json = report.to_json();
         for key in [
-            "\"schema\": 1",
+            "\"schema\": 2",
             "\"matrix\"",
             "\"kernel\": \"gaussian\"",
             "\"kernel\": \"exponential\"",
             "\"phase_ns_per_step\"",
             "\"silent_dynamics\"",
             "\"demux_microbench\"",
-            "\"speedup\"",
+            "\"dynamics_grouping\"",
+            "\"executor_spawn_vs_pool\"",
+            "\"spawn_over_pool\"",
+            "\"probed_over_unprobed\"",
         ] {
             assert!(json.contains(key), "missing {key} in:\n{json}");
         }
-        // crude structural sanity: balanced braces/brackets
+        // crude structural sanity: balanced braces/brackets, and the
+        // record parses with the in-tree JSON reader
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());
+        let doc = crate::util::json::parse(&json).expect("BENCH.json must parse");
+        assert_eq!(doc.get("schema").and_then(crate::util::json::Json::num), Some(2.0));
         // the human rendering mentions every phase of the breakdown
         let table = report.render();
-        for col in ["pack", "exchange", "demux", "dynamics", "silent dynamics"] {
+        for col in
+            ["pack", "exchange", "demux", "dynamics", "silent dynamics", "executor"]
+        {
             assert!(table.contains(col), "missing {col}");
         }
+
+        // self-comparison: a report can never regress against itself,
+        // and every record class must be found in the baseline
+        let regs = report.compare_against(&json, 0.25).expect("own record compares");
+        assert!(regs.is_empty(), "self-compare regressed: {regs:?}");
+    }
+
+    #[test]
+    fn compare_flags_regressions_and_rejects_garbage() {
+        let p = tiny_params();
+        let report = run_bench_with(true, &p);
+        // a baseline claiming everything used to cost ~nothing ⇒ every
+        // compared record regresses
+        let baseline = r#"{
+  "schema": 2,
+  "matrix": [
+    {"kernel": "gaussian", "ranks": 1,
+     "phase_ns_per_step": {"pack": 0.001, "exchange": 0.001, "demux": 0.001, "dynamics": 0.001}}
+  ],
+  "demux_microbench": {"events_per_call": 1, "slot_ns_per_event": 0.0001},
+  "dynamics_grouping": {"group_ns_per_event": 0.0001},
+  "executor_spawn_vs_pool": {"pool_ns_per_step": 0.0001}
+}"#;
+        let regs = report.compare_against(baseline, 0.25).unwrap();
+        assert!(regs.len() >= 5, "expected widespread regressions, got {regs:?}");
+        assert!(regs.iter().any(|r| r.contains("gaussian x1 dynamics")), "{regs:?}");
+        assert!(regs.iter().any(|r| r.contains("executor_spawn_vs_pool")), "{regs:?}");
+        // regenerated numbers within the threshold pass
+        let regs = report.compare_against(&report.to_json(), 0.25).unwrap();
+        assert!(regs.is_empty());
+        // corrupt or unrelated baselines are loud errors
+        assert!(report.compare_against("not json", 0.25).is_err());
+        assert!(report.compare_against("{\"schema\": 2}", 0.25).is_err());
     }
 
     #[test]

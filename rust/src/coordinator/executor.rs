@@ -1,0 +1,333 @@
+//! Persistent rank executor: one long-lived OS thread per rank.
+//!
+//! The paper's DPSNN is a set of *long-lived* MPI processes that pace
+//! each other once per time-driven step (§II-E). Earlier versions of
+//! this engine approximated that with a thread team spawned per
+//! `advance()` call — and per *step* when probes were attached — which
+//! polluted exactly the per-phase timings the bench harness records.
+//! The executor removes the churn: `Network::build` constructs the
+//! per-rank state once, hands each `(RankProcess, RankComm)` pair to a
+//! worker thread, and every subsequent `step()`/`advance()`/`reset()`
+//! is a typed command on a per-rank channel:
+//!
+//! ```text
+//!             ┌────────────────────────────────────────────┐
+//!             │ Network (coordinator thread)               │
+//!             │   cmd_tx[r]: Run{step0,steps,observe}      │
+//!             │              Probe | Reset | Shutdown      │
+//!             └──────┬──────────────┬──────────────┬───────┘
+//!                    ▼              ▼              ▼
+//!              worker rank0   worker rank1   worker rankR-1   (threads
+//!              loop{recv cmd; lock slot; dispatch; reply}     live until
+//!                    │              │              │           Shutdown
+//!                    └── virtual-MPI collectives ──┘           or Drop)
+//!                                   │
+//!                    reply_rx: Done{frame} | Panicked{msg}
+//! ```
+//!
+//! Shared state: each rank's `(RankProcess, RankComm)` lives in an
+//! `Arc<Mutex<RankSlot>>`. A worker locks its slot only while executing
+//! a command; the coordinator locks slots only *between* commands
+//! (every dispatch waits for all replies before returning), so the
+//! locks never contend — they exist to let `summary()`/`synapses()`/
+//! `set_external()` read rank state without a serialization protocol.
+//!
+//! ## Panic propagation
+//!
+//! A panic inside a rank (construction bugs, injected faults) unwinds
+//! into the worker's `catch_unwind`, which [`RankComm::hang_up`]s the
+//! rank's outgoing channels before reporting `Panicked`. Peers blocked
+//! mid-collective on the dead rank wake with "sender rank hung up",
+//! panic in turn, and cascade — every worker reports exactly once, so
+//! the coordinator never deadlocks collecting replies. The executor
+//! then refuses all further commands with the *root* panic payload
+//! (cascade panics are recognized and not allowed to mask it): the
+//! session is poisoned, not wedged.
+//!
+//! ## Phase timings
+//!
+//! Workers time nothing themselves: `RankProcess::step` starts/stops
+//! the per-phase CPU stopwatches exactly as before, on the worker
+//! thread, so command dispatch and idle blocking never pollute the
+//! recorded Pack/Exchange/Demux/Dynamics costs (`CLOCK_THREAD_CPUTIME`
+//! does not advance while a worker waits on its command channel).
+//! `BENCH.json`'s `executor_spawn_vs_pool` record quantifies the
+//! spawn-churn win itself.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::engine::metrics::PHASES;
+use crate::engine::process::RankProcess;
+use crate::engine::RankReport;
+use crate::mpi::{panic_message, RankComm};
+
+/// One rank's persistent state: the simulation process plus its
+/// communicator, created at build time and reused for every command.
+pub(crate) struct RankSlot {
+    pub proc: RankProcess,
+    pub comm: RankComm,
+}
+
+/// Commands the coordinator sends to a rank worker.
+#[derive(Clone, Copy, Debug)]
+enum Command {
+    /// Drive `steps` time-driven steps starting at `step0`, with
+    /// per-step column-spike observation on or off. The reply carries
+    /// an [`ObserveFrame`] when `observe` is set.
+    Run { step0: u64, steps: u64, observe: bool },
+    /// Report the current observation frame without stepping (probe
+    /// baselines).
+    Probe,
+    /// Rewind dynamics to t = 0 and restart the comm statistics.
+    Reset,
+    /// Exit the worker thread.
+    Shutdown,
+}
+
+/// Per-rank observation snapshot riding back on a reply: the latest
+/// step's per-column spike counts and the cumulative per-phase CPU
+/// totals (the session layer turns consecutive totals into per-step
+/// deltas for `PhaseMetricsProbe`).
+#[derive(Clone, Debug, Default)]
+pub(crate) struct ObserveFrame {
+    pub col_spikes: Vec<u32>,
+    pub phase_ns: [u64; PHASES.len()],
+}
+
+enum Reply {
+    Done { rank: u32, frame: Option<ObserveFrame> },
+    Panicked { rank: u32, msg: String },
+}
+
+/// The worker pool. Owned by `Network`; dropped ⇒ workers shut down.
+pub(crate) struct Executor {
+    slots: Vec<Arc<Mutex<RankSlot>>>,
+    cmd_tx: Vec<Sender<Command>>,
+    reply_rx: Receiver<Reply>,
+    handles: Vec<JoinHandle<()>>,
+    /// Root panic message once any rank died; all further commands are
+    /// refused with it.
+    poisoned: Option<String>,
+}
+
+impl Executor {
+    /// Spawn one persistent worker per rank, seeded with the
+    /// already-constructed rank state.
+    pub fn launch(pairs: Vec<(RankProcess, RankComm)>) -> Executor {
+        let slots: Vec<Arc<Mutex<RankSlot>>> = pairs
+            .into_iter()
+            .map(|(proc, comm)| Arc::new(Mutex::new(RankSlot { proc, comm })))
+            .collect();
+        let (reply_tx, reply_rx) = channel();
+        let mut cmd_tx = Vec::with_capacity(slots.len());
+        let mut handles = Vec::with_capacity(slots.len());
+        for (rank, slot) in slots.iter().enumerate() {
+            let (tx, rx) = channel();
+            cmd_tx.push(tx);
+            let slot = Arc::clone(slot);
+            let reply_tx = reply_tx.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("rank{rank}"))
+                .stack_size(8 << 20)
+                .spawn(move || worker(rank as u32, &slot, &rx, &reply_tx))
+                .expect("spawn rank worker thread");
+            handles.push(h);
+        }
+        // workers hold the only reply senders: reply_rx disconnects iff
+        // every worker exited, which collect() treats as poisoning
+        drop(reply_tx);
+        Executor { slots, cmd_tx, reply_rx, handles, poisoned: None }
+    }
+
+    /// The root panic message, if any rank has died.
+    pub fn poison_message(&self) -> Option<&str> {
+        self.poisoned.as_deref()
+    }
+
+    /// Drive every rank through `steps` steps starting at `step0`. When
+    /// `observe` is set, returns one frame per rank reflecting the last
+    /// step (the probed path runs one step per command).
+    pub fn run(
+        &mut self,
+        step0: u64,
+        steps: u64,
+        observe: bool,
+    ) -> Result<Vec<ObserveFrame>, String> {
+        self.dispatch(Command::Run { step0, steps, observe })
+    }
+
+    /// Snapshot every rank's observation frame without stepping.
+    pub fn probe(&mut self) -> Result<Vec<ObserveFrame>, String> {
+        self.dispatch(Command::Probe)
+    }
+
+    /// Rewind every rank's dynamics to t = 0 (in parallel) and restart
+    /// the per-rank comm statistics.
+    pub fn reset(&mut self) -> Result<(), String> {
+        self.dispatch(Command::Reset).map(|_| ())
+    }
+
+    /// Run `f` over every rank slot (coordinator-side access between
+    /// commands: summaries, stimulus swaps, static topology reads).
+    /// Recovers poisoned slot locks — after a rank panic the state is
+    /// still readable for reporting.
+    pub fn with_slots<R>(&self, mut f: impl FnMut(&mut RankSlot) -> R) -> Vec<R> {
+        self.slots
+            .iter()
+            .map(|slot| {
+                let mut guard = slot.lock().unwrap_or_else(|p| p.into_inner());
+                f(&mut guard)
+            })
+            .collect()
+    }
+
+    /// Per-rank reports with comm statistics folded in.
+    pub fn reports(&self) -> Vec<RankReport> {
+        self.with_slots(|slot| {
+            let RankSlot { proc, comm } = slot;
+            proc.report(comm.stats())
+        })
+    }
+
+    fn dispatch(&mut self, cmd: Command) -> Result<Vec<ObserveFrame>, String> {
+        if let Some(msg) = &self.poisoned {
+            return Err(format!("virtual cluster poisoned: {msg}"));
+        }
+        for tx in &self.cmd_tx {
+            if tx.send(cmd).is_err() {
+                // only reachable if a worker died outside a command —
+                // poison defensively rather than hang on collect
+                self.poisoned = Some("rank worker exited unexpectedly".to_string());
+                return Err("virtual cluster poisoned: rank worker exited unexpectedly"
+                    .to_string());
+            }
+        }
+        self.collect()
+    }
+
+    /// Wait for exactly one reply per rank. Every worker replies once
+    /// per command — panicking workers hang up their channels first, so
+    /// peers blocked on them cascade-panic and still reply (see the
+    /// module docs) — hence this never deadlocks.
+    fn collect(&mut self) -> Result<Vec<ObserveFrame>, String> {
+        let n = self.slots.len();
+        let mut frames = vec![ObserveFrame::default(); n];
+        let mut root_panic: Option<String> = None;
+        for _ in 0..n {
+            match self.reply_rx.recv() {
+                Ok(Reply::Done { rank, frame }) => {
+                    if let Some(f) = frame {
+                        frames[rank as usize] = f;
+                    }
+                }
+                Ok(Reply::Panicked { rank, msg }) => {
+                    let cascade = msg.contains("hung up");
+                    let full = format!("rank {rank} panicked: {msg}");
+                    match &mut root_panic {
+                        None => root_panic = Some(full),
+                        // a cascade panic must not mask the root cause
+                        Some(cur) if cur.contains("hung up") && !cascade => *cur = full,
+                        Some(_) => {}
+                    }
+                }
+                Err(_) => {
+                    root_panic
+                        .get_or_insert_with(|| "rank workers terminated unexpectedly".into());
+                    break;
+                }
+            }
+        }
+        match root_panic {
+            None => Ok(frames),
+            Some(msg) => {
+                self.poisoned = Some(msg.clone());
+                Err(format!("virtual cluster poisoned: {msg}"))
+            }
+        }
+    }
+}
+
+impl Drop for Executor {
+    /// Dropping the executor (Network drop, with or without an explicit
+    /// shutdown) terminates the pool cleanly: idle workers get
+    /// `Shutdown`, dead workers' channels error harmlessly, and every
+    /// thread is joined.
+    fn drop(&mut self) {
+        for tx in &self.cmd_tx {
+            let _ = tx.send(Command::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The rank worker main loop: the paper's "simulation phase" process,
+/// idling between commands. Every command executes under
+/// `catch_unwind`; success replies `Done`, a panic hangs up the rank's
+/// channels (unblocking peers) and replies `Panicked` with the payload.
+fn worker(
+    rank: u32,
+    slot: &Arc<Mutex<RankSlot>>,
+    cmd_rx: &Receiver<Command>,
+    reply_tx: &Sender<Reply>,
+) {
+    loop {
+        let cmd = match cmd_rx.recv() {
+            Ok(cmd) => cmd,
+            // coordinator gone (executor dropped mid-teardown)
+            Err(_) => return,
+        };
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut guard = slot.lock().expect("rank slot poisoned");
+            let RankSlot { proc, comm } = &mut *guard;
+            match cmd {
+                Command::Shutdown => None,
+                Command::Run { step0, steps, observe } => {
+                    proc.set_observe(observe);
+                    for k in 0..steps {
+                        proc.step(comm, step0 + k);
+                    }
+                    observe.then(|| frame_of(proc))
+                }
+                Command::Probe => Some(frame_of(proc)),
+                Command::Reset => {
+                    proc.reset();
+                    let _ = comm.take_stats();
+                    None
+                }
+            }
+        }));
+        match result {
+            Ok(frame) => {
+                if matches!(cmd, Command::Shutdown) {
+                    return;
+                }
+                if reply_tx.send(Reply::Done { rank, frame }).is_err() {
+                    return;
+                }
+            }
+            Err(payload) => {
+                let msg = panic_message(&*payload);
+                // disconnect our outgoing channels FIRST so any peer
+                // blocked on this rank fails over instead of deadlocking
+                let mut guard = slot.lock().unwrap_or_else(|p| p.into_inner());
+                guard.comm.hang_up();
+                drop(guard);
+                let _ = reply_tx.send(Reply::Panicked { rank, msg });
+                return;
+            }
+        }
+    }
+}
+
+fn frame_of(proc: &RankProcess) -> ObserveFrame {
+    let mut phase_ns = [0u64; PHASES.len()];
+    for p in PHASES {
+        phase_ns[p.index()] = proc.metrics.phase_ns(p);
+    }
+    ObserveFrame { col_spikes: proc.step_col_spikes().to_vec(), phase_ns }
+}

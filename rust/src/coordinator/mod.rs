@@ -1,7 +1,9 @@
 //! Simulation orchestration: the staged build-once/run-many pipeline
-//! ([`SimulationBuilder`] → [`Network`] → [`Session`]), run summaries,
-//! and the legacy one-shot [`run_simulation`] compatibility wrapper.
+//! ([`SimulationBuilder`] → [`Network`] → [`Session`]), the persistent
+//! rank executor driving it, run summaries, and the legacy one-shot
+//! [`run_simulation`] compatibility wrapper.
 
+pub(crate) mod executor;
 pub mod leader;
 pub mod session;
 

@@ -28,12 +28,13 @@ use std::sync::Arc;
 
 use crate::config::{ExternalParams, SimConfig, Solver};
 use crate::connectivity::kernel::ConnectivityKernel;
+use crate::coordinator::executor::{Executor, ObserveFrame};
 use crate::coordinator::leader::RunSummary;
 use crate::engine::metrics::PHASES;
 use crate::engine::plasticity::StdpParams;
 use crate::engine::probe::{Probe, StepSample};
 use crate::engine::process::{RankProcess, RunOptions, WIRE_TIME_HORIZON_MS};
-use crate::geometry::{Decomposition, Grid, Mapping};
+use crate::geometry::{ColumnId, Decomposition, Grid, Mapping};
 use crate::mpi::{Cluster, RankComm};
 use crate::util::memtrack::PeakScope;
 
@@ -198,11 +199,19 @@ impl SimulationBuilder {
 /// A constructed virtual cluster: per-rank synapse stores, routing CSRs
 /// and send/recv subsets, plus the live per-rank dynamic state. Built
 /// once by [`SimulationBuilder::build`], driven by [`Session`]s.
+///
+/// The per-rank state lives on a **persistent worker pool**
+/// (`coordinator::executor`): one long-lived OS thread per rank, spawned
+/// here and reused by every `step()`/`advance()`/`reset()` for the
+/// lifetime of the network — no thread is ever spawned per run or per
+/// step. Dropping the network shuts the pool down cleanly.
 pub struct Network {
     cfg: SimConfig,
     opts: RunOptions,
-    procs: Vec<RankProcess>,
-    comms: Vec<RankComm>,
+    exec: Executor,
+    /// Sorted columns owned by each rank (static topology, cached so
+    /// probe observation needs no rank round-trip).
+    rank_columns: Vec<Vec<ColumnId>>,
     /// Global step cursor (network lifetime; sessions continue it).
     step_cursor: u64,
     /// Total simulated time *requested* so far [ms]. Step counts derive
@@ -221,8 +230,48 @@ pub struct Network {
     ncols: usize,
 }
 
+/// Construct the per-rank state for `cfg.ranks` virtual-MPI ranks (the
+/// §II-D two-step Alltoall exchange), one scoped thread per rank, and
+/// return the `(process, communicator)` pairs ordered by rank. The
+/// communicators are created here ONCE and live for the cluster's whole
+/// lifetime — `Network::build` moves the pairs onto the persistent
+/// worker pool; `bench_harness` also drives them directly as the
+/// spawn-per-step baseline of the `executor_spawn_vs_pool` record.
+pub(crate) fn construct_pairs(
+    cfg: &SimConfig,
+    opts: &RunOptions,
+) -> Vec<(RankProcess, RankComm)> {
+    let cluster = Cluster::new(cfg.ranks);
+    let grid = Grid::new(cfg.grid);
+    let decomp = Decomposition::new(&grid, cfg.ranks, opts.mapping);
+    let decomp_ref = &decomp;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.ranks)
+            .map(|rank| {
+                let mut comm = cluster.rank_comm(rank);
+                std::thread::Builder::new()
+                    .name(format!("rank{rank}-init"))
+                    .stack_size(8 << 20)
+                    .spawn_scoped(s, move || {
+                        let proc = RankProcess::construct(cfg, decomp_ref, &mut comm, opts);
+                        (proc, comm)
+                    })
+                    .expect("spawn rank construction thread")
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(pair) => pair,
+                Err(e) => std::panic::resume_unwind(e),
+            })
+            .collect()
+    })
+}
+
 impl Network {
-    /// Construct the cluster on `cfg.ranks` virtual-MPI ranks.
+    /// Construct the cluster on `cfg.ranks` virtual-MPI ranks and spawn
+    /// its persistent rank executor.
     pub fn build(cfg: &SimConfig, opts: &RunOptions) -> Result<Network, String> {
         cfg.validate()?;
         if cfg!(not(feature = "xla")) && cfg.solver == Solver::Xla {
@@ -232,40 +281,16 @@ impl Network {
                 .to_string());
         }
         let scope = PeakScope::begin();
-        let cluster = Cluster::new(cfg.ranks);
-        let grid = Grid::new(cfg.grid);
-        let decomp = Decomposition::new(&grid, cfg.ranks, opts.mapping);
-        let ncols = grid.columns() as usize;
-        let decomp_ref = &decomp;
-        let pairs: Vec<(RankProcess, RankComm)> = std::thread::scope(|s| {
-            let handles: Vec<_> = (0..cfg.ranks)
-                .map(|rank| {
-                    let mut comm = cluster.rank_comm(rank);
-                    std::thread::Builder::new()
-                        .name(format!("rank{rank}-init"))
-                        .stack_size(8 << 20)
-                        .spawn_scoped(s, move || {
-                            let proc = RankProcess::construct(cfg, decomp_ref, &mut comm, opts);
-                            (proc, comm)
-                        })
-                        .expect("spawn rank construction thread")
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| match h.join() {
-                    Ok(pair) => pair,
-                    Err(e) => std::panic::resume_unwind(e),
-                })
-                .collect()
-        });
-        let (procs, comms) = pairs.into_iter().unzip();
+        let ncols = Grid::new(cfg.grid).columns() as usize;
+        let pairs = construct_pairs(cfg, opts);
+        let rank_columns = pairs.iter().map(|(p, _)| p.my_columns().to_vec()).collect();
+        let exec = Executor::launch(pairs);
         let construction_peak = scope.peak_delta();
         Ok(Network {
             cfg: cfg.clone(),
             opts: opts.clone(),
-            procs,
-            comms,
+            exec,
+            rank_columns,
             step_cursor: 0,
             time_target_ms: 0.0,
             scope,
@@ -298,7 +323,13 @@ impl Network {
 
     /// Synapses resident across all ranks after construction.
     pub fn synapses(&self) -> u64 {
-        self.procs.iter().map(|p| p.store().synapse_count()).sum()
+        self.exec.with_slots(|slot| slot.proc.store().synapse_count()).iter().sum()
+    }
+
+    /// When a rank has panicked, the root panic message; the network
+    /// refuses further stepping (see [`Session::try_advance`]).
+    pub fn poison_message(&self) -> Option<&str> {
+        self.exec.poison_message()
     }
 
     /// Peak heap since construction began [bytes]: the frozen
@@ -322,12 +353,13 @@ impl Network {
     }
 
     /// Rewind the dynamics to t = 0 for an independent replay against
-    /// the same constructed connectivity. Comm statistics and run
-    /// counters restart; construction-time figures are kept.
+    /// the same constructed connectivity — a `Reset` command through the
+    /// *reused* worker pool (ranks rewind in parallel; no threads are
+    /// torn down or spawned). Comm statistics and run counters restart;
+    /// construction-time figures are kept.
     pub fn reset(&mut self) {
-        for (proc, comm) in self.procs.iter_mut().zip(&mut self.comms) {
-            proc.reset();
-            let _ = comm.take_stats();
+        if let Err(e) = self.exec.reset() {
+            panic!("{e}");
         }
         self.step_cursor = 0;
         self.time_target_ms = 0.0;
@@ -339,57 +371,43 @@ impl Network {
     /// drive.
     pub fn set_external(&mut self, synapses_per_neuron: u32, rate_hz: f64) {
         let external = ExternalParams { synapses_per_neuron, rate_hz };
-        for proc in &mut self.procs {
-            proc.set_external(external);
-        }
+        self.exec.with_slots(|slot| slot.proc.set_external(external));
         self.cfg.external = external;
     }
 
     /// Aggregate the run so far into the same [`RunSummary`] the
     /// one-shot API returns (duration = simulated time so far).
     pub fn summary(&mut self) -> RunSummary {
-        let reports = self
-            .procs
-            .iter_mut()
-            .zip(&self.comms)
-            .map(|(p, c)| p.report(c.stats()))
-            .collect();
         RunSummary {
             ranks: self.cfg.ranks,
             duration_ms: self.step_cursor as f64 * self.cfg.dt_ms,
             neurons: self.cfg.grid.neurons(),
-            reports,
+            reports: self.exec.reports(),
             peak_bytes: self.construction_peak.max(self.scope.peak_delta()),
             activity: Vec::new(),
         }
     }
 
-    /// Drive every rank through `n` time-driven steps on one set of
-    /// scoped threads (the collectives inside `RankProcess::step`
-    /// require all ranks to progress together; within the scope they
-    /// pace each other exactly as the old one-thread-per-rank-per-run
-    /// model did, so batching steps avoids per-step spawn/join cost).
-    fn run_steps(&mut self, n: u64) {
+    /// Drive every rank through `n` time-driven steps: one `Run`
+    /// command to the persistent pool (the collectives inside
+    /// `RankProcess::step` pace the rank workers against each other
+    /// exactly as dedicated MPI processes would). Returns one
+    /// observation frame per rank when `observe` is set.
+    ///
+    /// Panics if a rank panics — the pool surfaces the rank's payload
+    /// and the network is poisoned (no further stepping) instead of
+    /// deadlocking the step collectives.
+    fn run_steps(&mut self, n: u64, observe: bool) -> Vec<ObserveFrame> {
         if n == 0 {
-            return;
+            return Vec::new();
         }
-        let step0 = self.step_cursor;
-        std::thread::scope(|s| {
-            for (rank, (proc, comm)) in
-                self.procs.iter_mut().zip(self.comms.iter_mut()).enumerate()
-            {
-                std::thread::Builder::new()
-                    .name(format!("rank{rank}"))
-                    .stack_size(8 << 20)
-                    .spawn_scoped(s, move || {
-                        for k in 0..n {
-                            proc.step(comm, step0 + k);
-                        }
-                    })
-                    .expect("spawn rank step thread");
+        match self.exec.run(self.step_cursor, n, observe) {
+            Ok(frames) => {
+                self.step_cursor += n;
+                frames
             }
-        });
-        self.step_cursor += n;
+            Err(e) => panic!("{e}"),
+        }
     }
 }
 
@@ -414,8 +432,12 @@ impl<'n, 'p> Session<'n, 'p> {
     /// the session ends.
     pub fn attach(&mut self, probe: &'p mut dyn Probe) -> &mut Self {
         if self.probes.is_empty() {
-            // baseline for per-step phase deltas
-            self.phase_prev = self.phase_totals();
+            // baseline for per-step phase deltas (a Probe command to the
+            // pool; zeros if the pool is already poisoned — the session
+            // cannot step anyway)
+            if let Ok(frames) = self.net.exec.probe() {
+                self.phase_prev = sum_phase_totals(&frames);
+            }
         }
         self.probes.push(probe);
         self
@@ -438,14 +460,11 @@ impl<'n, 'p> Session<'n, 'p> {
              simulated time); split the run across Network::reset() replays"
         );
         let observe = !self.probes.is_empty();
-        for proc in &mut self.net.procs {
-            proc.set_observe(observe);
-        }
         self.net.time_target_ms += self.net.cfg.dt_ms;
-        self.net.run_steps(1);
+        let frames = self.net.run_steps(1, observe);
         self.steps_run += 1;
         if observe {
-            self.feed_probes();
+            self.feed_probes(&frames);
         }
     }
 
@@ -460,11 +479,13 @@ impl<'n, 'p> Session<'n, 'p> {
     /// [`WIRE_TIME_HORIZON_MS`]); use [`try_advance`](Self::try_advance)
     /// to handle that case gracefully.
     ///
-    /// Without probes the whole span runs on one set of rank threads
-    /// (no per-step spawn/join); with probes attached each step is
-    /// observed individually — a deliberate trade-off (per-step scoped
-    /// threads) that a persistent worker pool could remove without any
-    /// API change if probed long runs become a bottleneck.
+    /// Either way the span runs on the network's persistent rank pool:
+    /// without probes as a single `Run` command covering all steps, with
+    /// probes as one command per observed step — both are channel
+    /// round-trips on live threads, so probed and unprobed advances cost
+    /// within a few percent of each other per step (the
+    /// `executor_spawn_vs_pool` bench record tracks the ratio; the old
+    /// engine spawned a thread team per probed step here).
     pub fn advance(&mut self, ms: f64) -> &mut Self {
         match self.try_advance(ms) {
             Ok(s) => s,
@@ -472,16 +493,23 @@ impl<'n, 'p> Session<'n, 'p> {
         }
     }
 
-    /// [`advance`](Self::advance) with the spike-timestamp horizon
-    /// reported as an `Err` instead of a panic. On `Err` the network
-    /// state is untouched and the session remains usable.
+    /// [`advance`](Self::advance) with the spike-timestamp horizon — and
+    /// a poisoned pool — reported as an `Err` instead of a panic. On
+    /// `Err` the network state is untouched.
     ///
     /// The horizon exists because AER spikes carry their emission time
     /// as whole microseconds in a `u32` (8-byte wire records, the
     /// paper's format): past `u32::MAX` µs the counter would silently
     /// wrap and spike ordering — and with it every dynamics result —
     /// would be corrupted. The engine therefore refuses to run past it.
+    ///
+    /// A poisoned pool means a rank panicked during an earlier run: the
+    /// executor keeps the root payload and refuses further stepping
+    /// (rebuild the network to recover).
     pub fn try_advance(&mut self, ms: f64) -> Result<&mut Self, String> {
+        if let Some(msg) = self.net.exec.poison_message() {
+            return Err(format!("session poisoned: {msg}"));
+        }
         let target_ms = self.net.time_target_ms + ms;
         if target_ms > WIRE_TIME_HORIZON_MS {
             return Err(format!(
@@ -495,10 +523,7 @@ impl<'n, 'p> Session<'n, 'p> {
         let target = (self.net.time_target_ms / self.net.cfg.dt_ms).round() as u64;
         let steps = target.saturating_sub(self.net.step_cursor);
         if self.probes.is_empty() {
-            for proc in &mut self.net.procs {
-                proc.set_observe(false);
-            }
-            self.net.run_steps(steps);
+            self.net.run_steps(steps, false);
             self.steps_run += steps;
         } else {
             for _ in 0..steps {
@@ -526,27 +551,18 @@ impl<'n, 'p> Session<'n, 'p> {
         self.probes.iter().map(|p| p.report() + "\n").collect()
     }
 
-    fn phase_totals(&self) -> [u64; PHASES.len()] {
-        let mut totals = [0u64; PHASES.len()];
-        for proc in &self.net.procs {
-            for p in PHASES {
-                totals[p.index()] += proc.metrics.phase_ns(p);
-            }
-        }
-        totals
-    }
-
-    fn feed_probes(&mut self) {
-        // assemble the global per-column counts for this step
+    fn feed_probes(&mut self, frames: &[ObserveFrame]) {
+        // assemble the global per-column counts for this step from the
+        // per-rank frames (rank→columns topology is cached at build)
         self.col_buf.clear();
         self.col_buf.resize(self.net.ncols, 0);
-        for proc in &self.net.procs {
-            for (i, &col) in proc.my_columns().iter().enumerate() {
-                self.col_buf[col as usize] = proc.step_col_spikes()[i];
+        for (cols, frame) in self.net.rank_columns.iter().zip(frames) {
+            for (i, &col) in cols.iter().enumerate() {
+                self.col_buf[col as usize] = frame.col_spikes[i];
             }
         }
         let spikes: u64 = self.col_buf.iter().map(|&n| n as u64).sum();
-        let totals = self.phase_totals();
+        let totals = sum_phase_totals(frames);
         for (d, (t, prev)) in
             self.phase_delta.iter_mut().zip(totals.iter().zip(self.phase_prev.iter()))
         {
@@ -568,6 +584,17 @@ impl<'n, 'p> Session<'n, 'p> {
             probe.on_step(&sample);
         }
     }
+}
+
+/// Sum per-rank cumulative phase totals into one cluster-wide array.
+fn sum_phase_totals(frames: &[ObserveFrame]) -> [u64; PHASES.len()] {
+    let mut totals = [0u64; PHASES.len()];
+    for frame in frames {
+        for (total, ns) in totals.iter_mut().zip(frame.phase_ns.iter()) {
+            *total += ns;
+        }
+    }
+    totals
 }
 
 #[cfg(test)]

@@ -21,6 +21,14 @@
 //! Construction (§II-D) is the two-step Alltoall/Alltoallv protocol:
 //! synapse counters first, then synapse payloads, from which the rank
 //! learns its send/recv process subsets, reused every iteration.
+//!
+//! Like the paper's long-lived MPI processes, a [`RankProcess`] persists
+//! for the lifetime of its network: the coordinator's persistent
+//! executor (`coordinator::executor`) owns one OS thread per rank that
+//! holds the process state across commands — [`step`](RankProcess::step)
+//! is the body of the `Run` command's dispatch loop, and
+//! [`reset`](RankProcess::reset) / [`set_external`](RankProcess::set_external)
+//! service the remaining commands without tearing the state down.
 
 use crate::config::{SimConfig, Solver};
 use crate::connectivity::builder::generate_outgoing;
@@ -32,7 +40,7 @@ use crate::mpi::{CommClass, RankComm, Wire};
 use crate::neuron::{LifParams, LifState};
 use crate::runtime::batch::BatchSolver;
 use crate::stimulus::{ExternalEvent, ExternalStimulus, StimCalendar};
-use crate::synapse::{DelayQueue, PendingEvent, SynapseStore};
+use crate::synapse::{DelayQueue, PendingEvent, SynapseStore, TargetGrouper};
 use crate::util::timer::thread_cputime_ns;
 
 /// Spike timestamps travel as whole microseconds in a `u32` (the AER
@@ -89,6 +97,10 @@ pub struct RunOptions {
     pub naive_delivery: bool,
     /// STDP parameters when `cfg.plasticity` is on.
     pub stdp: StdpParams,
+    /// Fault injection for executor-lifecycle tests: panic at the start
+    /// of `(rank, step)`. Exercises the pool's panic propagation and
+    /// session poisoning; never set outside tests.
+    pub fault_at: Option<(u32, u64)>,
 }
 
 impl Default for RunOptions {
@@ -98,6 +110,7 @@ impl Default for RunOptions {
             record_activity: false,
             naive_delivery: false,
             stdp: StdpParams::default(),
+            fault_at: None,
         }
     }
 }
@@ -141,6 +154,7 @@ impl RunOptions {
             record_activity: doc.bool_or("run.record_activity", d.record_activity)?,
             naive_delivery: doc.bool_or("run.naive_delivery", d.naive_delivery)?,
             stdp,
+            fault_at: None,
         })
     }
 }
@@ -184,6 +198,9 @@ pub struct RankProcess {
     stim_cal: StimCalendar,
     /// Reusable calendar-drain scratch.
     cal_buf: Vec<crate::stimulus::DueEvent>,
+    /// Bucketed per-target grouping of the drained event bucket
+    /// (replaces the per-step comparison sort, see `synapse::grouping`).
+    grouper: TargetGrouper,
     pub metrics: EngineMetrics,
     /// When set, refresh `step_col_spikes` after every step (probe
     /// observation). Streaming replacement for the removed
@@ -327,6 +344,7 @@ impl RankProcess {
             stim_streams,
             stim_cal: StimCalendar::new(STIM_CAL_HORIZON),
             cal_buf: Vec::new(),
+            grouper: TargetGrouper::new(n_local),
             metrics: EngineMetrics::default(),
             observe: false,
             step_col_spikes: Vec::new(),
@@ -342,13 +360,14 @@ impl RankProcess {
     }
 
     /// Sum of the heap-resident engine structures (synapse store, delay
-    /// queues, stimulus calendar, plasticity traces) — the single
-    /// definition used by construction, [`report`](Self::report) and
-    /// [`finish`](Self::finish).
+    /// queues, stimulus calendar, event grouper, plasticity traces) —
+    /// the single definition used by construction,
+    /// [`report`](Self::report) and [`finish`](Self::finish).
     fn resident_bytes_now(&self) -> u64 {
         self.store.resident_bytes()
             + self.queue.resident_bytes()
             + self.stim_cal.resident_bytes()
+            + self.grouper.resident_bytes()
             + self.plasticity.as_ref().map_or(0, |p| p.resident_bytes())
     }
 
@@ -465,6 +484,11 @@ impl RankProcess {
 
     /// One time-driven simulation step (paper Fig. 1, steps 2.1–2.6).
     pub fn step(&mut self, comm: &mut RankComm, step: u64) {
+        if let Some((rank, at)) = self.opts.fault_at {
+            if rank == self.rank && at == step {
+                panic!("injected fault: rank {rank} at step {at}");
+            }
+        }
         let t_sim0 = thread_cputime_ns();
 
         // ---- Pack (2.1, 2.2): route previous-step spikes per rank ----
@@ -562,26 +586,25 @@ impl RankProcess {
         debug_assert_eq!(self.queue.base_step(), step + 1);
         // group by target, then arrival order (2.5: "neurons sort input
         // currents coming from recurrent and external synapses").
-        // sort key: (target, time, syn_idx). Arrival times are
-        // non-negative, so the IEEE bit pattern of the f32 preserves
-        // their order; syn_idx is a TOTAL, decomposition-invariant
-        // tiebreak — slot-quantized arrivals make exact (target, time)
+        // Order: (target, time-in-step, syn_idx) — PendingEvent::
+        // order_key. syn_idx is a TOTAL, decomposition-invariant
+        // tiebreak: slot-quantized arrivals make exact (target, time)
         // ties routine, and without it their order would depend on
-        // rank-dependent bucket insertion order through sort_unstable.
-        // All synapses afferent to one target live on that target's
-        // rank, and the store sorts them by (src_gid, slot, tgt_gid,
-        // delay, weight), so relative syn_idx order of tying events is
-        // a pure function of the synapse set — deterministic for every
-        // decomposition, including STDP's per-synapse on_pre order.
-        // (A counting sort by target was tried and measured 20% SLOWER
-        // end-to-end: its two random-access scatter passes lose to
-        // pdqsort's sequential partitioning at realistic bucket sizes;
-        // see EXPERIMENTS.md par.Perf.)
-        events.sort_unstable_by_key(|e| {
-            ((e.target_local as u128) << 64)
-                | ((e.time_ms.to_bits() as u128) << 32)
-                | e.syn_idx as u128
-        });
+        // rank-dependent bucket insertion order. All synapses afferent
+        // to one target live on that target's rank, and the store sorts
+        // them by (src_gid, slot, tgt_gid, delay, weight), so relative
+        // syn_idx order of tying events is a pure function of the
+        // synapse set — deterministic for every decomposition, including
+        // STDP's per-synapse on_pre order. The grouper produces exactly
+        // the order sort_unstable_by_key(order_key) would, but via a
+        // counting/bucket pass that exploits the slot-sorted demux runs
+        // (events arrive nearly target-grouped); an earlier FULL
+        // counting sort lost to pdqsort (EXPERIMENTS.md par.Perf) — the
+        // grouper differs by touching only the targets actually hit and
+        // by doing tiny per-segment sorts instead of a global keyed
+        // pass. `dpsnn bench` records both costs (dynamics_grouping) so
+        // the trade stays measured.
+        self.grouper.sort_events(&mut events);
         if self.batch.is_some() {
             self.step_dynamics_batch(step, &events);
         } else {
@@ -618,6 +641,10 @@ impl RankProcess {
     /// external next-event samples due now). A silent network therefore
     /// costs O(events), not O(n_local), per step.
     fn step_dynamics_event(&mut self, step: u64, events: &[PendingEvent]) {
+        // recurrent events carry offsets within this step; reconstruct
+        // absolute times against the step base (the offsets keep µs
+        // resolution at any absolute time, see PendingEvent::offset_ms)
+        let t0 = step as f64 * self.cfg.dt_ms;
         let t1 = (step + 1) as f64 * self.cfg.dt_ms;
         let inv_dt = 1.0 / self.cfg.dt_ms;
         let stim = self.stim;
@@ -664,9 +691,9 @@ impl RankProcess {
             loop {
                 let (t, w, syn) = match (rec.get(i), self.ext_buf.get(j)) {
                     (Some(r), Some(e)) => {
-                        if r.time_ms as f64 <= e.time_ms {
+                        if t0 + r.offset_ms as f64 <= e.time_ms {
                             i += 1;
-                            (r.time_ms as f64, r.weight, Some(r.syn_idx))
+                            (t0 + r.offset_ms as f64, r.weight, Some(r.syn_idx))
                         } else {
                             j += 1;
                             (e.time_ms, e.weight, None)
@@ -674,7 +701,7 @@ impl RankProcess {
                     }
                     (Some(r), None) => {
                         i += 1;
-                        (r.time_ms as f64, r.weight, Some(r.syn_idx))
+                        (t0 + r.offset_ms as f64, r.weight, Some(r.syn_idx))
                     }
                     (None, Some(e)) => {
                         j += 1;

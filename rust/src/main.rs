@@ -30,6 +30,8 @@ fn commands() -> Vec<Command> {
         Command::new("kernels", "list registered connectivity kernels and their stencils"),
         Command::new("bench", "run the standard per-phase benchmark matrix, write BENCH.json")
             .opt_default("out", "BENCH.json", "output path for the JSON record")
+            .opt("compare", "baseline BENCH.json: fail on >25% per-phase regression \
+                 (a missing baseline file is seeded from this run)")
             .flag("quick", "reduced matrix (CI smoke / trajectory capture)"),
         Command::new("table1", "regenerate Table I (problem sizes)"),
         Command::new("fig2", "regenerate Fig. 2 (projection stencils)"),
@@ -169,9 +171,48 @@ fn cmd_bench(a: &Args) -> Result<(), String> {
     );
     let report = dpsnn::bench_harness::run_bench(quick);
     println!("{}", report.render());
+    if report.executor.probed_over_unprobed() > 1.10 {
+        eprintln!(
+            "WARN: probed advance is {:.2}x unprobed ns/step (target < 1.10) — \
+             command dispatch or observation is costing more than it should",
+            report.executor.probed_over_unprobed()
+        );
+    }
     let path = a.get("out").unwrap_or("BENCH.json");
     std::fs::write(path, report.to_json()).map_err(|e| format!("writing {path}: {e}"))?;
     eprintln!("wrote {path}");
+    if let Some(base_path) = a.get("compare") {
+        match std::fs::read_to_string(base_path) {
+            // ONLY a missing file self-seeds (the first CI run after
+            // this mode ships writes the baseline; commit it to start
+            // enforcing the 25% budget). Any other read error must fail
+            // loudly — overwriting a committed-but-unreadable baseline
+            // would silently disarm the gate.
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                std::fs::write(base_path, report.to_json())
+                    .map_err(|e| format!("seeding baseline {base_path}: {e}"))?;
+                eprintln!(
+                    "no baseline at {base_path}; seeded it from this run — \
+                     commit it to enforce the regression budget"
+                );
+            }
+            Err(e) => return Err(format!("reading baseline {base_path}: {e}")),
+            Ok(text) => {
+                let regressions = report.compare_against(&text, 0.25)?;
+                if regressions.is_empty() {
+                    eprintln!("bench compare vs {base_path}: within the 25% budget");
+                } else {
+                    for r in &regressions {
+                        eprintln!("REGRESSION: {r}");
+                    }
+                    return Err(format!(
+                        "{} record(s) regressed >25% vs {base_path}",
+                        regressions.len()
+                    ));
+                }
+            }
+        }
+    }
     Ok(())
 }
 

@@ -16,11 +16,28 @@
 //! class) — those exact counts feed the virtual-cluster performance
 //! model. Buffers move by ownership, so the substrate itself adds no
 //! copies to the hot path.
+//!
+//! ## Lifecycle (persistent executor)
+//!
+//! A [`RankComm`] is created once per rank (at `Network` build time) and
+//! lives for the whole cluster lifetime — it is *not* tied to any thread:
+//! the coordinator's persistent executor moves it into a long-lived
+//! worker thread and reuses it across every `Run`/`Reset` command. Each
+//! communicator *owns* the sender endpoints of its outgoing channels, so
+//! dropping it (or calling [`RankComm::hang_up`]) disconnects every
+//! channel it feeds: peers blocked in `recv` on a dead rank wake with a
+//! "sender rank hung up" panic instead of deadlocking the per-step
+//! collectives. The executor relies on exactly that cascade to drain a
+//! cluster where one rank panicked mid-step (see
+//! `coordinator::executor`).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier, Mutex};
 
 use crate::mpi::stats::{CommClass, CommStats};
+
+/// Type-erased buffer moving through a virtual-wire channel.
+type Mailbox = Box<dyn std::any::Any + Send>;
 
 /// Anything that can cross the virtual wire. In-process we move typed
 /// buffers directly; `WIRE_SIZE` is the serialized size MPI would ship,
@@ -46,11 +63,15 @@ impl Wire for f64 {
 ///
 /// Type-erased mailboxes: each (src, dst) pair has one channel carrying
 /// boxed buffers; `RankComm` downcasts on receive. One matrix serves all
-/// message types.
+/// message types. The cluster holds the *receiver* side of every
+/// channel; the sender side of row `r` is handed to rank `r`'s
+/// communicator exactly once, so the channels from a rank disconnect
+/// when its communicator dies (the executor's panic-cascade mechanism).
 pub struct Cluster {
     ranks: u32,
-    senders: Vec<Vec<Sender<Box<dyn std::any::Any + Send>>>>,
-    receivers: Vec<Vec<Mutex<Receiver<Box<dyn std::any::Any + Send>>>>>,
+    /// Sender rows, taken (once each) by [`Cluster::rank_comm`].
+    senders: Vec<Mutex<Option<Vec<Sender<Mailbox>>>>>,
+    receivers: Vec<Vec<Mutex<Receiver<Mailbox>>>>,
     barrier: Arc<Barrier>,
 }
 
@@ -70,6 +91,7 @@ impl Cluster {
                 receivers[dst].push(Mutex::new(rx));
             }
         }
+        let senders = senders.into_iter().map(|row| Mutex::new(Some(row))).collect();
         Arc::new(Cluster { ranks, senders, receivers, barrier: Arc::new(Barrier::new(r)) })
     }
 
@@ -77,17 +99,26 @@ impl Cluster {
         self.ranks
     }
 
-    /// Handle for one rank. Call exactly once per rank.
+    /// Handle for one rank. Call exactly once per rank: the handle takes
+    /// ownership of the rank's sender endpoints.
     pub fn rank_comm(self: &Arc<Self>, rank: u32) -> RankComm {
         assert!(rank < self.ranks);
-        RankComm { cluster: Arc::clone(self), rank, stats: CommStats::default() }
+        let senders = self.senders[rank as usize]
+            .lock()
+            .expect("sender-row lock")
+            .take()
+            .expect("rank_comm called twice for the same rank");
+        RankComm { cluster: Arc::clone(self), rank, senders, stats: CommStats::default() }
     }
 }
 
-/// Per-rank communicator handle (not Clone: owns the rank's stats).
+/// Per-rank communicator handle (not Clone: owns the rank's stats and
+/// the sender endpoints of all its outgoing channels).
 pub struct RankComm {
     cluster: Arc<Cluster>,
     rank: u32,
+    /// Outgoing channel per destination; emptied by [`hang_up`](Self::hang_up).
+    senders: Vec<Sender<Mailbox>>,
     stats: CommStats,
 }
 
@@ -113,12 +144,23 @@ impl RankComm {
         self.cluster.barrier.wait();
     }
 
+    /// Drop this rank's sender endpoints, disconnecting every channel it
+    /// feeds. Peers blocked in `recv` on this rank wake with a "sender
+    /// rank hung up" panic instead of waiting forever — the executor
+    /// calls this from a panicking worker so the failure cascades
+    /// through the step collectives rather than deadlocking them.
+    pub fn hang_up(&mut self) {
+        self.senders.clear();
+    }
+
     fn send_raw<T: Wire>(&mut self, class: CommClass, dst: u32, buf: Vec<T>) {
         let bytes = (buf.len() * T::WIRE_SIZE) as u64;
         self.stats.record_send(class, dst == self.rank, bytes);
-        self.cluster.senders[self.rank as usize][dst as usize]
-            .send(Box::new(buf))
-            .expect("receiver rank hung up");
+        let tx = self
+            .senders
+            .get(dst as usize)
+            .expect("send after hang_up: this rank's communicator is closed");
+        tx.send(Box::new(buf)).expect("receiver rank hung up");
     }
 
     fn recv_raw<T: Wire>(&self, src: u32) -> Vec<T> {
@@ -191,8 +233,24 @@ impl RankComm {
     }
 }
 
+/// Extract a human-readable message from a caught panic payload.
+/// `panic!("{}", ..)` carries a `String`, `panic!("literal")` a
+/// `&'static str` — surface both instead of `<non-string>`.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<String>()
+        .map(String::as_str)
+        .or_else(|| payload.downcast_ref::<&'static str>().copied())
+        .unwrap_or("<non-string panic payload>")
+        .to_string()
+}
+
 /// Spawn `ranks` threads, run `body(comm)` in each, join, and return the
 /// per-rank results ordered by rank. Panics in any rank propagate.
+///
+/// This is the one-shot harness (tests, microbenches). The engine's
+/// sessions instead keep rank threads alive across runs through the
+/// persistent executor (`coordinator::executor`).
 pub fn run_cluster<R: Send + 'static>(
     ranks: u32,
     body: impl Fn(RankComm) -> R + Send + Sync + 'static,
@@ -216,13 +274,7 @@ pub fn run_cluster<R: Send + 'static>(
         .map(|(rank, h)| match h.join() {
             Ok(r) => r,
             Err(e) => {
-                // `panic!("{}", ..)` carries a String, `panic!("literal")`
-                // a &'static str — surface both instead of `None`
-                let msg = e
-                    .downcast_ref::<String>()
-                    .map(String::as_str)
-                    .or_else(|| e.downcast_ref::<&'static str>().copied())
-                    .unwrap_or("<non-string panic payload>");
+                let msg = panic_message(&*e);
                 std::panic::resume_unwind(Box::new(format!("rank {rank} panicked: {msg}")))
             }
         })
@@ -349,6 +401,24 @@ mod tests {
             true
         });
         assert!(results[0]);
+    }
+
+    #[test]
+    fn hang_up_disconnects_channels_and_unblocks_peers() {
+        // rank 1 hangs up (or dies) without sending; rank 0's recv must
+        // fail fast instead of blocking forever on the dead channel
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_cluster(2, |mut comm| {
+                if comm.rank() == 1 {
+                    comm.hang_up();
+                } else {
+                    let _: Vec<u64> = comm.alltoall(CommClass::InitCounts, &[1, 2]);
+                }
+            })
+        }));
+        let payload = result.expect_err("rank 0 must fail, not deadlock");
+        let msg = payload.downcast_ref::<String>().expect("string payload");
+        assert!(msg.contains("hung up"), "{msg}");
     }
 
     #[test]

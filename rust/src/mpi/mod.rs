@@ -4,5 +4,5 @@
 pub mod comm;
 pub mod stats;
 
-pub use comm::{run_cluster, Cluster, RankComm, Wire};
+pub use comm::{panic_message, run_cluster, Cluster, RankComm, Wire};
 pub use stats::{CommClass, CommStats};

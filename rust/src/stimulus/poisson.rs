@@ -13,14 +13,16 @@
 //! stimulus — like the connectivity — is decomposition-invariant and
 //! replayable.
 //!
-//! The legacy per-step samplers ([`ExternalStimulus::events_for`],
-//! [`ExternalStimulus::events_for_with`]) draw Poisson(n_ext·ν·dt)
-//! counts with uniform arrival times; they remain for tools and tests
-//! that need random access in step, and they are statistically
-//! equivalent to the gap sampler (both realize the same Poisson
-//! process, with different draw orders — spike trains therefore differ
-//! from pre-calendar versions, but stay decomposition-invariant and
-//! replay-identical within a version).
+//! The legacy per-step sampler ([`ExternalStimulus::events_for`]) draws
+//! Poisson(n_ext·ν·dt) counts with uniform arrival times; it remains
+//! for tools and tests that need random access in step, and it is
+//! statistically equivalent to the gap sampler (both realize the same
+//! Poisson process, with different draw orders — spike trains therefore
+//! differ from pre-calendar versions, but stay decomposition-invariant
+//! and replay-identical within a version). Its stream-based sibling
+//! `events_for_with` — the engine's pre-calendar delivery path — is
+//! gone; the recorded perf trajectory (`BENCH.json` history) is its
+//! epitaph.
 
 use crate::config::SimConfig;
 use crate::geometry::grid::{stream, NeuronId};
@@ -73,10 +75,9 @@ impl ExternalStimulus {
         self.j_ext
     }
 
-    /// Fresh per-neuron stream for the gap sampler (and the legacy
-    /// [`events_for_with`]). Streams are keyed by neuron only and
-    /// consumed in event order, so the stimulus stays a pure function
-    /// of (seed, gid) for any decomposition.
+    /// Fresh per-neuron stream for the gap sampler. Streams are keyed
+    /// by neuron only and consumed in event order, so the stimulus
+    /// stays a pure function of (seed, gid) for any decomposition.
     pub fn neuron_stream(&self, gid: NeuronId) -> Pcg64 {
         Pcg64::for_entity(self.seed, gid, stream::EXTERNAL)
     }
@@ -108,31 +109,6 @@ impl ExternalStimulus {
     pub fn next_event_ms(&self, rng: &mut Pcg64, t_ms: f64) -> f64 {
         debug_assert!(self.lambda_per_step > 0.0);
         t_ms + rng.exponential(self.dt_ms / self.lambda_per_step).max(1e-9)
-    }
-
-    /// Legacy per-step sampler: draw this step's Poisson count from a
-    /// persistent per-neuron stream. Superseded in the engine by the
-    /// gap sampler + calendar (which never visits event-less neurons);
-    /// kept for tools and the microbench baseline.
-    pub fn events_for_with(
-        &self,
-        rng: &mut Pcg64,
-        step: u64,
-        out: &mut Vec<ExternalEvent>,
-    ) {
-        if self.lambda_per_step <= 0.0 {
-            return;
-        }
-        let n = rng.poisson(self.lambda_per_step);
-        let t0 = step as f64 * self.dt_ms;
-        let start = out.len();
-        for _ in 0..n {
-            out.push(ExternalEvent {
-                time_ms: t0 + rng.next_f64() * self.dt_ms,
-                weight: self.j_ext,
-            });
-        }
-        out[start..].sort_unstable_by(|a, b| a.time_ms.total_cmp(&b.time_ms));
     }
 
     /// Append this step's events for `gid` to `out` (sorted by time).

@@ -10,23 +10,39 @@
 //! simulation does not allocate here.
 
 /// A synaptic event scheduled for delivery.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct PendingEvent {
-    /// Arrival time [ms] as f32 — keeps the event record at 16 bytes.
-    /// Resolution is the f32 ulp at the current simulated time: 0.24 µs
-    /// at 2000 ms (far below dt), degrading to ~0.25–0.5 ms near the
-    /// ~71.6 min wire-time horizon, where sub-step timing coarsens and
-    /// equal-time ties become common (the dynamics sort carries a
-    /// deterministic tiebreak for exactly that reason). Runs that need
-    /// sub-dt timing fidelity should stay well below the horizon or be
-    /// split across `Network::reset()` replays.
-    pub time_ms: f32,
+    /// Arrival time *within the arrival step* [ms]: the offset from the
+    /// start of the time-driven step whose bucket holds the event
+    /// (absolute time = arrival_step·dt + offset). Storing the offset —
+    /// a value in [0, dt) — instead of the absolute time keeps the
+    /// record at 16 bytes while making the f32 resolution independent
+    /// of how far the run has progressed: ~6·10⁻⁸ ms at dt = 1 ms,
+    /// whether the event arrives at t = 0 or at the ~71.6 min wire-time
+    /// horizon. (The previous absolute-time encoding coarsened to
+    /// ~dt/2 near the horizon.) The consumer knows the arrival step —
+    /// it drained the bucket.
+    pub offset_ms: f32,
     /// Target neuron (rank-local index).
     pub target_local: u32,
     /// Efficacy [mV].
     pub weight: f32,
     /// Index of the synapse in the rank's store (STDP bookkeeping).
     pub syn_idx: u32,
+}
+
+impl PendingEvent {
+    /// Total dynamics-delivery order: (target, time-in-step, syn_idx).
+    /// Offsets are non-negative in the engine, so the IEEE bit pattern
+    /// preserves their numeric order; `syn_idx` is a decomposition-
+    /// invariant tiebreak for slot-quantized equal-time arrivals (see
+    /// `RankProcess::step`).
+    #[inline]
+    pub fn order_key(&self) -> u128 {
+        ((self.target_local as u128) << 64)
+            | ((self.offset_ms.to_bits() as u128) << 32)
+            | self.syn_idx as u128
+    }
 }
 
 /// Circular buffer of event buckets, one per dt-step of delay horizon.
@@ -45,11 +61,18 @@ impl DelayQueue {
     /// a mask instead of an integer division (the demux hot path pushes
     /// one event per synapse per spike).
     pub fn new(horizon_slots: usize) -> Self {
+        Self::with_base(horizon_slots, 0)
+    }
+
+    /// [`new`](Self::new), but starting at `base_step` instead of step 0
+    /// (tools and tests that probe delivery deep into a run without
+    /// draining their way there).
+    pub fn with_base(horizon_slots: usize, base_step: u64) -> Self {
         assert!(horizon_slots >= 1);
         let n = horizon_slots.next_power_of_two();
         DelayQueue {
             slots: (0..n).map(|_| Vec::new()).collect(),
-            base_step: 0,
+            base_step,
             spare: Vec::new(),
         }
     }
@@ -128,12 +151,44 @@ mod tests {
     use super::*;
 
     fn ev(t: f64, tgt: u32) -> PendingEvent {
-        PendingEvent { time_ms: t as f32, target_local: tgt, weight: 0.1, syn_idx: 0 }
+        PendingEvent { offset_ms: t as f32, target_local: tgt, weight: 0.1, syn_idx: 0 }
     }
 
     #[test]
     fn pending_event_is_16_bytes() {
         assert_eq!(std::mem::size_of::<PendingEvent>(), 16);
+    }
+
+    #[test]
+    fn order_key_sorts_by_target_then_time_then_synapse() {
+        let e = |tgt: u32, off: f32, syn: u32| PendingEvent {
+            offset_ms: off,
+            target_local: tgt,
+            weight: 0.1,
+            syn_idx: syn,
+        };
+        let mut events =
+            vec![e(2, 0.1, 0), e(1, 0.9, 5), e(1, 0.2, 9), e(1, 0.2, 3), e(0, 0.5, 1)];
+        events.sort_unstable_by_key(PendingEvent::order_key);
+        let order: Vec<(u32, f32, u32)> =
+            events.iter().map(|e| (e.target_local, e.offset_ms, e.syn_idx)).collect();
+        assert_eq!(
+            order,
+            vec![(0, 0.5, 1), (1, 0.2, 3), (1, 0.2, 9), (1, 0.9, 5), (2, 0.1, 0)]
+        );
+    }
+
+    #[test]
+    fn with_base_starts_deep_into_a_run() {
+        let base = 3_600_000u64; // one simulated hour at dt = 1 ms
+        let mut q = DelayQueue::with_base(4, base);
+        assert_eq!(q.base_step(), base);
+        q.push(base + 2, ev(0.25, 7));
+        for step in 0..3u64 {
+            let d = q.drain_current();
+            assert_eq!(d.len(), usize::from(step == 2), "step {step}");
+            q.recycle(d);
+        }
     }
 
     #[test]

@@ -1,0 +1,215 @@
+//! Bucketed per-target grouping of the per-step event bucket.
+//!
+//! The Dynamics phase consumes the drained delay-queue bucket in
+//! (target, time-in-step, syn_idx) order — [`PendingEvent::order_key`],
+//! the decomposition-invariant total order. The bucket arrives as a
+//! concatenation of demux *runs* (one per spike × delay slot), each
+//! already sorted by target with ascending `syn_idx` and a single shared
+//! arrival offset — i.e. the input is nearly target-grouped. A general
+//! comparison sort re-discovers that structure from scratch every step;
+//! the [`TargetGrouper`] instead exploits it:
+//!
+//! 1. one counting pass over `target_local` (tracking *touched* targets
+//!    so the pass stays O(events), never O(n_local) — the silent-
+//!    network scaling property of the calendar engine is preserved);
+//! 2. a sort of the (small) touched-target list;
+//! 3. one scatter pass into per-target segments;
+//! 4. a tiny (time, syn_idx) sort per segment — segments are the events
+//!    of one neuron in one step, typically a handful, and within each
+//!    demux run they are already ordered, so these sorts sit in the
+//!    insertion-sort regime.
+//!
+//! The result is byte-identical to `sort_unstable_by_key(order_key)` —
+//! enforced by tests and re-checked by the `dynamics_grouping` record of
+//! `dpsnn bench`, which times both over the same realistic buckets.
+//! Small buckets fall back to the comparison sort, where pdqsort's
+//! sequential partitioning beats the scatter's random stores.
+
+use crate::synapse::delay_queue::PendingEvent;
+
+/// Below this bucket size the grouper delegates to `sort_unstable` —
+/// at tiny sizes pdqsort's cache-friendly partitioning wins over the
+/// counting/scatter passes.
+const SMALL_BUCKET: usize = 64;
+
+/// Reusable grouping state for one rank: a per-target counter/cursor
+/// table (4 B per local neuron), the touched-target list, and the
+/// scatter scratch buffer. All allocations are steady-state after the
+/// first busy step.
+#[derive(Debug, Default)]
+pub struct TargetGrouper {
+    /// Per-target event count, then scatter cursor; zeroed again (via
+    /// `touched`) after every call, so the zero state is an invariant.
+    counts: Vec<u32>,
+    /// Targets with at least one event this step, in first-seen order.
+    touched: Vec<u32>,
+    /// Scatter destination, swapped with the caller's buffer.
+    scratch: Vec<PendingEvent>,
+}
+
+impl TargetGrouper {
+    /// Grouper for targets in `0..n_targets` (the rank's local neurons).
+    pub fn new(n_targets: u32) -> Self {
+        TargetGrouper {
+            counts: vec![0; n_targets as usize],
+            touched: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Heap bytes held (for resident-memory accounting).
+    pub fn resident_bytes(&self) -> u64 {
+        (self.counts.capacity() * 4
+            + self.touched.capacity() * 4
+            + self.scratch.capacity() * std::mem::size_of::<PendingEvent>()) as u64
+    }
+
+    /// Reorder `events` into [`PendingEvent::order_key`] order — the
+    /// exact order `sort_unstable_by_key(order_key)` would produce, via
+    /// the bucket passes described in the module docs. The buffer's
+    /// allocation is swapped with the internal scratch (both recycle).
+    pub fn sort_events(&mut self, events: &mut Vec<PendingEvent>) {
+        let n = events.len();
+        if n < SMALL_BUCKET {
+            events.sort_unstable_by_key(PendingEvent::order_key);
+            return;
+        }
+        // 1. count events per target, remembering which were touched
+        for e in events.iter() {
+            let c = &mut self.counts[e.target_local as usize];
+            if *c == 0 {
+                self.touched.push(e.target_local);
+            }
+            *c += 1;
+        }
+        // 2. segment order = ascending target
+        self.touched.sort_unstable();
+        // 3. exclusive prefix sum over touched targets only; counts[t]
+        //    becomes target t's scatter cursor
+        let mut acc = 0u32;
+        for &t in &self.touched {
+            let c = self.counts[t as usize];
+            self.counts[t as usize] = acc;
+            acc += c;
+        }
+        debug_assert_eq!(acc as usize, n);
+        // 4. scatter into per-target segments
+        if self.scratch.len() < n {
+            self.scratch.resize(n, PendingEvent::default());
+        } else {
+            self.scratch.truncate(n);
+        }
+        for e in events.iter() {
+            let cur = &mut self.counts[e.target_local as usize];
+            self.scratch[*cur as usize] = *e;
+            *cur += 1;
+        }
+        // 5. order within each segment by (time-in-step, syn_idx); the
+        //    cursors now mark segment ends
+        let mut start = 0usize;
+        for &t in &self.touched {
+            let end = self.counts[t as usize] as usize;
+            self.scratch[start..end].sort_unstable_by_key(|e| {
+                ((e.offset_ms.to_bits() as u64) << 32) | e.syn_idx as u64
+            });
+            start = end;
+            // 6. restore the all-zero counter invariant as we go
+            self.counts[t as usize] = 0;
+        }
+        self.touched.clear();
+        std::mem::swap(events, &mut self.scratch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+    use crate::util::proptest::Cases;
+
+    fn ev(tgt: u32, off: f32, syn: u32) -> PendingEvent {
+        PendingEvent { offset_ms: off, target_local: tgt, weight: 0.1, syn_idx: syn }
+    }
+
+    fn reference_sort(mut events: Vec<PendingEvent>) -> Vec<PendingEvent> {
+        events.sort_unstable_by_key(PendingEvent::order_key);
+        events
+    }
+
+    #[test]
+    fn empty_and_tiny_buckets_work() {
+        let mut g = TargetGrouper::new(16);
+        let mut events: Vec<PendingEvent> = Vec::new();
+        g.sort_events(&mut events);
+        assert!(events.is_empty());
+        let mut events = vec![ev(3, 0.5, 2), ev(1, 0.1, 0), ev(3, 0.5, 1)];
+        let expect = reference_sort(events.clone());
+        g.sort_events(&mut events);
+        assert_eq!(events, expect);
+    }
+
+    #[test]
+    fn large_bucket_matches_the_comparison_sort_exactly() {
+        // well past SMALL_BUCKET so the counting/scatter path runs
+        let mut rng = Pcg64::new(99, 0);
+        let mut events = Vec::new();
+        // realistic shape: concatenated runs, each ascending in target
+        // with a shared offset, plus some single stragglers
+        for run in 0..40u32 {
+            let off = (run % 7) as f32 * 0.13;
+            let mut tgt = rng.next_below(50) as u32;
+            for k in 0..25u32 {
+                events.push(ev(tgt, off, run * 100 + k));
+                tgt += 1 + rng.next_below(40) as u32;
+            }
+        }
+        assert!(events.len() >= SMALL_BUCKET);
+        let expect = reference_sort(events.clone());
+        let mut g = TargetGrouper::new(2048);
+        g.sort_events(&mut events);
+        assert_eq!(events, expect);
+        // the counter invariant must hold afterwards: a second pass over
+        // a different bucket stays correct
+        let mut events2: Vec<PendingEvent> =
+            (0..200).map(|i| ev((i * 7 % 90) as u32, (i % 11) as f32 * 0.09, i)).collect();
+        let expect2 = reference_sort(events2.clone());
+        g.sort_events(&mut events2);
+        assert_eq!(events2, expect2);
+    }
+
+    #[test]
+    fn randomized_buckets_always_match_the_reference() {
+        Cases::new("grouper vs comparison sort", 40).run(|t| {
+            let n_targets = 1 + t.rng.next_below(300) as u32;
+            let n_events = t.rng.next_below(600) as usize;
+            let mut rng = Pcg64::for_entity(13, t.case_index, 0xBEEF);
+            let events: Vec<PendingEvent> = (0..n_events)
+                .map(|i| {
+                    ev(
+                        rng.next_below(n_targets as u64) as u32,
+                        rng.next_f32(),
+                        // duplicate syn indices allowed: ties must still
+                        // produce a deterministic, reference-equal order
+                        rng.next_below(64) as u32 + i as u32 % 2,
+                    )
+                })
+                .collect();
+            let expect = reference_sort(events.clone());
+            let mut g = TargetGrouper::new(n_targets);
+            let mut got = events;
+            g.sort_events(&mut got);
+            t.assert_eq(got.len(), expect.len(), "length preserved");
+            t.assert_true(got == expect, "order matches comparison sort");
+        });
+    }
+
+    #[test]
+    fn all_events_on_one_target_is_one_big_segment() {
+        let mut events: Vec<PendingEvent> =
+            (0..200u32).map(|i| ev(5, ((199 - i) % 10) as f32 * 0.1, i)).collect();
+        let expect = reference_sort(events.clone());
+        let mut g = TargetGrouper::new(8);
+        g.sort_events(&mut events);
+        assert_eq!(events, expect);
+    }
+}

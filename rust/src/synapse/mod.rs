@@ -1,8 +1,11 @@
 //! Synapse storage (12 B/synapse records + 2 B precomputed delay slots,
-//! keyed by incoming axon) and the per-timestep delay queues.
+//! keyed by incoming axon), the per-timestep delay queues, and the
+//! bucketed per-target event grouping the Dynamics phase consumes.
 
 pub mod delay_queue;
+pub mod grouping;
 pub mod storage;
 
 pub use delay_queue::{DelayQueue, PendingEvent};
+pub use grouping::TargetGrouper;
 pub use storage::{SynapseStore, WireSynapse};

@@ -186,14 +186,26 @@ impl SynapseStore {
     /// with the benchmarks so BENCH.json always measures the code the
     /// engine actually runs. Synapses are walked as contiguous
     /// equal-slot runs: the arrival bucket (and its horizon check) is
-    /// resolved once per run via [`DelayQueue::bucket_mut`], the run's
-    /// arrival time is formed once in f64 and rounded to f32 once
-    /// (monotone — per-neuron injection order is preserved across
-    /// steps), and the per-event work is a single struct write.
+    /// resolved once per run via [`DelayQueue::bucket_mut`], and the
+    /// per-event work is a single struct write.
+    ///
+    /// Events carry their arrival time as an *offset within the arrival
+    /// step* ([`PendingEvent::offset_ms`]). Since delays act on the dt
+    /// grid, that offset equals the spike's own emission offset within
+    /// its emission step — formed once per spike in f64 and rounded to
+    /// f32 once, so timing resolution is independent of absolute
+    /// simulated time (µs-scale fidelity holds all the way to the wire-
+    /// time horizon, where the old absolute-f32 encoding coarsened to
+    /// ~dt/2).
     ///
     /// `emit_step` is the step the spike was emitted in, `now_step` the
-    /// current step (arrival floor: nothing lands in the past). Returns
-    /// the number of events delivered.
+    /// current step (arrival floor: nothing lands in the past; floored
+    /// events deliver at the *start* of the current step, offset 0 —
+    /// offsets stay non-negative, which the [`PendingEvent::order_key`]
+    /// bit ordering requires). The engine itself never floors: slots
+    /// are ≥ 1 and spikes are exchanged one step after emission, so
+    /// `emit_step + slot ≥ now_step` always. Returns the number of
+    /// events delivered.
     #[inline]
     pub fn demux_spike_into(
         &self,
@@ -205,6 +217,9 @@ impl SynapseStore {
         queue: &mut DelayQueue,
     ) -> usize {
         let (base, syns, slots) = self.axon_demux(src_gid);
+        // emission offset within the emission step; delays are whole
+        // steps, so unfloored arrivals reuse it verbatim
+        let emit_off = t_emit_ms - emit_step as f64 * dt_ms;
         let mut k = 0usize;
         while k < syns.len() {
             let slot = slots[k];
@@ -212,13 +227,16 @@ impl SynapseStore {
             while end < syns.len() && slots[end] == slot {
                 end += 1;
             }
-            // all events of the run share arrival step and time
-            let arrival = (emit_step + slot as u64).max(now_step);
-            let t_run = (t_emit_ms + slot as f64 * dt_ms) as f32;
+            // all events of the run share arrival step and offset;
+            // floored (stale) arrivals clamp to the step start so the
+            // offset — and order_key — stays non-negative
+            let due = emit_step + slot as u64;
+            let arrival = due.max(now_step);
+            let off_run = if arrival == due { emit_off as f32 } else { 0.0 };
             let bucket = queue.bucket_mut(arrival);
             for (off, syn) in syns[k..end].iter().enumerate() {
                 bucket.push(PendingEvent {
-                    time_ms: t_run,
+                    offset_ms: off_run,
                     target_local: syn.tgt_local,
                     weight: syn.weight,
                     syn_idx: base + (k + off) as u32,
@@ -396,21 +414,21 @@ mod tests {
             let out = q.drain_current();
             match step {
                 5 => {
-                    // slot-1 run arrives at step 4+1, both events at
-                    // the same quantized time 4.25 + 1.0
+                    // slot-1 run arrives at step 4+1; the in-step offset
+                    // equals the spike's emission offset (0.25 ms)
                     assert_eq!(out.len(), 2);
                     for ev in &out {
-                        assert_eq!(ev.time_ms, 5.25);
+                        assert_eq!(ev.offset_ms, 0.25);
                     }
                     let mut tg: Vec<u32> = out.iter().map(|e| e.target_local).collect();
                     tg.sort_unstable();
                     assert_eq!(tg, vec![10, 11]);
                 }
                 7 => {
-                    // slot-3 run arrives at step 4+3
+                    // slot-3 run arrives at step 4+3, same in-step offset
                     assert_eq!(out.len(), 1);
                     assert_eq!(out[0].target_local, 12);
-                    assert_eq!(out[0].time_ms, 7.25);
+                    assert_eq!(out[0].offset_ms, 0.25);
                 }
                 _ => assert!(out.is_empty(), "unexpected events at step {step}"),
             }
@@ -428,6 +446,39 @@ mod tests {
         let mut q = DelayQueue::new(8);
         assert_eq!(store.demux_spike_into(99, 0.0, 0, 0, 1.0, &mut q), 0);
         assert_eq!(q.pending(), 0);
+    }
+
+    #[test]
+    fn event_timing_keeps_us_resolution_at_the_hour_scale() {
+        // Step-relative offsets make event timing resolution independent
+        // of absolute simulated time: a spike emitted 0.3 ms into its
+        // step must deliver with the same sub-step timing at t ≈ 60 min
+        // as at t ≈ 0 s (the absolute-f32 encoding this replaces had an
+        // ulp of ~0.25 ms up there — worse than µs by orders of
+        // magnitude).
+        let syns = vec![wire(1, 10, 0.5, 2000)]; // slot 2 at dt = 1 ms
+        let store = SynapseStore::build(syns, 1.0, |g| g);
+        let offset_at = |emit_step: u64| -> f32 {
+            let t_emit = emit_step as f64 + 0.3; // 0.3 ms into the step
+            let mut q = DelayQueue::with_base(8, emit_step);
+            assert_eq!(store.demux_spike_into(1, t_emit, emit_step, emit_step, 1.0, &mut q), 1);
+            let mut off = None;
+            for _ in 0..4 {
+                let out = q.drain_current();
+                if let Some(ev) = out.first() {
+                    off = Some(ev.offset_ms);
+                }
+                q.recycle(out);
+            }
+            off.expect("event delivered")
+        };
+        let near_zero = offset_at(0);
+        let near_hour = offset_at(3_600_000); // 60 min at dt = 1 ms
+        assert!((near_zero - 0.3).abs() < 1e-6, "offset at t=0: {near_zero}");
+        assert!(
+            (near_hour - near_zero).abs() < 1e-3,
+            "hour-scale timing coarsened: {near_hour} vs {near_zero} (µs budget)"
+        );
     }
 
     #[test]

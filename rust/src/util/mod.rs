@@ -2,6 +2,7 @@
 //! tiny property-testing harness. Everything here is dependency-free (the
 //! offline image vendors no rand/criterion/proptest crates).
 
+pub mod json;
 pub mod memtrack;
 pub mod prng;
 pub mod proptest;

@@ -1,0 +1,176 @@
+//! Integration: the persistent rank executor's lifecycle.
+//!
+//! * Spike trains through the pool are bit-identical to driving
+//!   `RankProcess::step` directly (no pool), across 1/2/4 ranks.
+//! * `reset()` replays bit-identically through a *reused* pool.
+//! * A panic inside a rank surfaces its payload, poisons the session
+//!   (no further stepping, clear error) and never deadlocks the step
+//!   collectives.
+//! * Dropping a `Network` without any explicit shutdown terminates the
+//!   worker threads cleanly.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use dpsnn::config::SimConfig;
+use dpsnn::engine::{RankProcess, RunOptions};
+use dpsnn::geometry::{Decomposition, Grid, Mapping};
+use dpsnn::mpi::run_cluster;
+use dpsnn::{ActivityProbe, SimulationBuilder, SpikeCountProbe};
+
+fn cfg(ranks: u32) -> SimConfig {
+    let mut c = SimConfig::test_small();
+    c.external.synapses_per_neuron = 100;
+    c.external.rate_hz = 30.0;
+    c.ranks = ranks;
+    c
+}
+
+/// Reference: per-step global column spike counts from driving the rank
+/// processes directly on one-shot cluster threads — the engine without
+/// any executor in front of it.
+fn reference_activity(ranks: u32, steps: u64) -> Vec<Vec<u32>> {
+    let c = cfg(ranks);
+    let ncols = c.grid.columns() as usize;
+    let results = run_cluster(ranks, move |mut comm| {
+        let grid = Grid::new(c.grid);
+        let decomp = Decomposition::new(&grid, comm.ranks(), Mapping::Block);
+        let opts = RunOptions::default();
+        let mut proc = RankProcess::construct(&c, &decomp, &mut comm, &opts);
+        proc.set_observe(true);
+        let cols = proc.my_columns().to_vec();
+        let mut rows: Vec<Vec<u32>> = Vec::with_capacity(steps as usize);
+        for s in 0..steps {
+            proc.step(&mut comm, s);
+            rows.push(proc.step_col_spikes().to_vec());
+        }
+        (cols, rows)
+    });
+    let mut global = vec![vec![0u32; ncols]; steps as usize];
+    for (cols, rows) in results {
+        for (row, grow) in rows.iter().zip(global.iter_mut()) {
+            for (i, &col) in cols.iter().enumerate() {
+                grow[col as usize] = row[i];
+            }
+        }
+    }
+    global
+}
+
+/// The same activity through the persistent pool (`Network` + probe).
+fn pool_activity(ranks: u32, steps: u64) -> Vec<Vec<u32>> {
+    let mut net = SimulationBuilder::from_config(cfg(ranks)).build().expect("construction");
+    let mut activity = ActivityProbe::new();
+    {
+        let mut session = net.session();
+        session.attach(&mut activity);
+        session.advance(steps as f64);
+    }
+    activity.into_rows()
+}
+
+#[test]
+fn pool_matches_direct_stepping_across_rank_counts() {
+    let steps = 30u64;
+    let reference = reference_activity(1, steps);
+    assert!(reference.iter().flatten().any(|&n| n > 0), "reference must be active");
+    for ranks in [1u32, 2, 4] {
+        assert_eq!(
+            reference_activity(ranks, steps),
+            reference,
+            "direct stepping not decomposition-invariant at {ranks} ranks"
+        );
+        assert_eq!(
+            pool_activity(ranks, steps),
+            reference,
+            "pool diverges from direct stepping at {ranks} ranks"
+        );
+    }
+}
+
+#[test]
+fn reset_replays_bit_identically_through_a_reused_pool() {
+    let mut net = SimulationBuilder::from_config(cfg(2)).build().expect("construction");
+    let run = |net: &mut dpsnn::Network| {
+        let mut activity = ActivityProbe::new();
+        {
+            let mut session = net.session();
+            session.attach(&mut activity);
+            session.advance(25.0);
+        }
+        activity.into_rows()
+    };
+    let first = run(&mut net);
+    assert!(first.iter().flatten().any(|&n| n > 0));
+    // Reset is a command through the SAME worker pool — no thread
+    // teardown; the replay must be bit-identical
+    net.reset();
+    let replay = run(&mut net);
+    assert_eq!(first, replay, "reset replay diverged through the reused pool");
+    assert_eq!(net.steps_run(), 25);
+}
+
+#[test]
+fn probed_and_unprobed_advance_agree_on_the_pool() {
+    let mut plain = SimulationBuilder::from_config(cfg(2)).build().expect("construction");
+    plain.session().advance(30.0);
+    let expected = plain.summary().spikes();
+    assert!(expected > 0);
+
+    // probed: one command per step instead of one per span — same work
+    let mut probed = SimulationBuilder::from_config(cfg(2)).build().expect("construction");
+    let mut counts = SpikeCountProbe::new();
+    {
+        let mut session = probed.session();
+        session.attach(&mut counts);
+        session.advance(30.0);
+    }
+    assert_eq!(counts.total(), expected);
+    assert_eq!(probed.summary().spikes(), expected);
+}
+
+#[test]
+fn rank_panic_surfaces_payload_and_poisons_the_session() {
+    // fault injection: rank 1 panics at step 5, mid-collectives — the
+    // executor must propagate the payload (not deadlock) and refuse
+    // further stepping
+    let opts = RunOptions { fault_at: Some((1, 5)), ..Default::default() };
+    let mut net =
+        SimulationBuilder::from_parts(cfg(2), opts).build().expect("construction");
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        net.session().advance(20.0);
+    }));
+    let payload = result.expect_err("rank panic must propagate to the caller");
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .expect("panic payload should be the executor's message");
+    assert!(msg.contains("injected fault"), "payload lost: {msg}");
+    assert!(msg.contains("rank 1"), "rank attribution lost: {msg}");
+
+    // poisoned: try_advance reports the root cause instead of running
+    let err = net.session().try_advance(1.0).unwrap_err();
+    assert!(err.contains("poisoned"), "{err}");
+    assert!(err.contains("injected fault"), "root cause lost: {err}");
+    assert_eq!(net.poison_message().map(|m| m.contains("injected fault")), Some(true));
+
+    // reporting still works on the poisoned wreck, and drop is clean
+    let summary = net.summary();
+    assert_eq!(summary.ranks, 2);
+    drop(net);
+}
+
+#[test]
+fn drop_without_shutdown_terminates_cleanly() {
+    // no explicit shutdown call anywhere: Drop must stop the workers
+    // (a leak or deadlock here would hang the test binary)
+    for _ in 0..3 {
+        let mut net =
+            SimulationBuilder::from_config(cfg(2)).build().expect("construction");
+        net.session().advance(5.0);
+        assert!(net.summary().spikes() > 0);
+        drop(net);
+    }
+    // an abandoned-but-never-stepped pool must also shut down
+    let net = SimulationBuilder::from_config(cfg(4)).build().expect("construction");
+    drop(net);
+}
