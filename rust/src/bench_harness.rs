@@ -5,6 +5,7 @@
 //! `dpsnn bench` standard matrix that records the repo's perf
 //! trajectory into `BENCH.json` (see docs/PERF.md).
 
+use crate::config::{GridParams, ProjectionParams};
 use crate::coordinator::session::construct_pairs;
 use crate::coordinator::{Network, SimulationBuilder};
 use crate::engine::probe::SpikeCountProbe;
@@ -306,8 +307,10 @@ pub struct ExecutorBench {
     pub spawn_ns_per_step: f64,
     /// Persistent pool, one `Run` command for the whole span.
     pub pool_ns_per_step: f64,
-    /// Persistent pool, one command per step + probe observation (the
-    /// probed-advance path).
+    /// Persistent pool with a probe attached: one `Run` command per
+    /// 32-step batch, per-step observation frames riding back as a
+    /// `Vec` (schema 3; schema-2 records measured one command per
+    /// step here).
     pub pool_probed_ns_per_step: f64,
 }
 
@@ -342,6 +345,20 @@ fn phases4() -> [Phase; 4] {
 fn bench_cell(kernel: &'static str, ranks: u32, p: &BenchParams) -> BenchCell {
     let builder = match kernel {
         "exponential" => SimulationBuilder::exponential(p.side),
+        // two gaussian areas wired by a feedforward + feedback loop —
+        // the multi-area workload (projection construction + cross-area
+        // spike traffic) as one matrix entry
+        "two-area" => {
+            let g = GridParams {
+                neurons_per_column: p.npc,
+                ..GridParams::square(p.side)
+            };
+            SimulationBuilder::gaussian(p.side)
+                .area("v1", g)
+                .area("v2", g)
+                .project(ProjectionParams::new("v1", "v2"))
+                .project(ProjectionParams::new("v2", "v1"))
+        }
         _ => SimulationBuilder::gaussian(p.side),
     };
     let mut net = builder
@@ -503,7 +520,8 @@ fn bench_grouping(p: &BenchParams) -> GroupingMicro {
 /// work — driven (a) by a scoped thread team spawned per step (the
 /// retired execution model, reconstructed here as the measured
 /// baseline), (b) by the persistent pool in one `Run` command, (c) by
-/// the persistent pool one command per step with a probe attached.
+/// the persistent pool with a probe attached (batched observation: one
+/// command per 32-step batch, frames riding back as a `Vec`).
 fn bench_executor(p: &BenchParams) -> ExecutorBench {
     let builder = || {
         SimulationBuilder::gaussian(p.side)
@@ -584,6 +602,9 @@ pub fn run_bench_with(quick: bool, p: &BenchParams) -> BenchReport {
             cells.push(bench_cell(kernel, ranks, p));
         }
     }
+    // one multi-area entry (schema 3): atlas construction + inter-areal
+    // spike traffic on the middle rank count
+    cells.push(bench_cell("two-area", p.ranks[1], p));
     BenchReport {
         quick,
         cells,
@@ -653,11 +674,13 @@ impl BenchReport {
         out
     }
 
-    /// Machine record (`BENCH.json`): schema 2. Hand-rolled writer —
-    /// the offline image has no serde. Schema 2 drops the
-    /// `demux_microbench` legacy fields (baseline retired) and adds the
-    /// `dynamics_grouping` and `executor_spawn_vs_pool` records; see
-    /// docs/PERF.md for how to read both schemas.
+    /// Machine record (`BENCH.json`): schema 3. Hand-rolled writer —
+    /// the offline image has no serde. Schema 3 adds the `two-area`
+    /// matrix entry and records the *batched* probed-advance path in
+    /// `executor_spawn_vs_pool` (one Run command per K-step batch);
+    /// schema 2 dropped the retired `demux_microbench` legacy fields
+    /// and added `dynamics_grouping`/`executor_spawn_vs_pool`. See
+    /// docs/PERF.md for how to read every schema.
     pub fn to_json(&self) -> String {
         let unix_s = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
@@ -665,7 +688,7 @@ impl BenchReport {
             .unwrap_or(0);
         let mut s = String::new();
         s.push_str("{\n");
-        s.push_str("  \"schema\": 2,\n");
+        s.push_str("  \"schema\": 3,\n");
         s.push_str(&format!("  \"created_unix_s\": {unix_s},\n"));
         s.push_str(&format!("  \"quick\": {},\n", self.quick));
         s.push_str("  \"matrix\": [\n");
@@ -741,7 +764,8 @@ impl BenchReport {
     }
 
     /// Diff this report against a committed baseline `BENCH.json`
-    /// (schema 1 or 2; records present in both are compared). Returns
+    /// (any schema; records present in both are compared, so schema-2
+    /// baselines simply skip the two-area cell). Returns
     /// one line per record whose cost regressed by more than
     /// `threshold` (0.25 = +25%). A parse failure is an `Err` — a
     /// corrupt baseline should fail the CI job loudly, not silently
@@ -864,7 +888,7 @@ mod tests {
         // JSON schema are what's under test, not the numbers
         let p = tiny_params();
         let report = run_bench_with(true, &p);
-        assert_eq!(report.cells.len(), 6, "2 kernels x 3 rank counts");
+        assert_eq!(report.cells.len(), 7, "2 kernels x 3 rank counts + two-area");
         for c in &report.cells {
             assert_eq!(c.steps, 10);
             assert!(c.synapses > 0);
@@ -874,6 +898,11 @@ mod tests {
         // identical construction across rank counts: same synapse totals
         let gauss: Vec<_> = report.cells.iter().filter(|c| c.kernel == "gaussian").collect();
         assert!(gauss.windows(2).all(|w| w[0].synapses == w[1].synapses));
+        // the two-area entry simulates both areas plus the projections:
+        // more neurons and synapses than one gaussian area
+        let two = report.cells.iter().find(|c| c.kernel == "two-area").expect("two-area cell");
+        assert_eq!(two.neurons, 2 * gauss[0].neurons);
+        assert!(two.synapses > 2 * gauss[0].synapses, "projection synapses missing");
         assert!(report.demux.events_per_call == 500);
         assert!(report.demux.slot_ns_per_event > 0.0);
         assert!(report.grouping.events_per_call > 0);
@@ -888,10 +917,11 @@ mod tests {
 
         let json = report.to_json();
         for key in [
-            "\"schema\": 2",
+            "\"schema\": 3",
             "\"matrix\"",
             "\"kernel\": \"gaussian\"",
             "\"kernel\": \"exponential\"",
+            "\"kernel\": \"two-area\"",
             "\"phase_ns_per_step\"",
             "\"silent_dynamics\"",
             "\"demux_microbench\"",
@@ -907,7 +937,7 @@ mod tests {
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());
         let doc = crate::util::json::parse(&json).expect("BENCH.json must parse");
-        assert_eq!(doc.get("schema").and_then(crate::util::json::Json::num), Some(2.0));
+        assert_eq!(doc.get("schema").and_then(crate::util::json::Json::num), Some(3.0));
         // the human rendering mentions every phase of the breakdown
         let table = report.render();
         for col in

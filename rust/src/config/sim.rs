@@ -254,6 +254,130 @@ impl GridParams {
     }
 }
 
+/// One named area of a multi-area atlas configuration: its own grid
+/// and intra-areal connectivity, plus an optional external-drive
+/// override (None → the global [`SimConfig::external`] drive).
+///
+/// Synaptic efficacies/delays ([`SynParams`]) and neuron parameters are
+/// global: the atlas composes areas of the same cortical model, wired
+/// differently.
+#[derive(Clone, Debug)]
+pub struct AreaParams {
+    pub name: String,
+    pub grid: GridParams,
+    /// Intra-areal connectivity (local probability + remote kernel).
+    pub conn: ConnParams,
+    /// Custom intra-areal kernel; overrides `conn.rule` (same contract
+    /// as [`SimConfig::kernel`]).
+    pub kernel: Option<Arc<dyn ConnectivityKernel>>,
+    /// Per-area external Poisson drive; `None` uses the global drive.
+    pub external: Option<ExternalParams>,
+}
+
+/// A typed inter-areal projection: source area → target area.
+///
+/// Source columns map **topographically** into the target area's column
+/// grid — `mapped = offset + source_coords / stride` per axis — and the
+/// projection then spreads **laterally** around the mapped column with
+/// a [`ConnectivityKernel`] evaluated in the target area's own frame
+/// (the source neuron's in-column jitter rides along, scaled to the
+/// target spacing). Transmission delays follow a constant-plus-distance
+/// model: `delay = delay_base_ms + r / velocity_um_per_ms`, clamped to
+/// the global `[delay_min_ms, delay_max_ms]` window.
+#[derive(Clone, Debug)]
+pub struct ProjectionParams {
+    /// Source area name.
+    pub source: String,
+    /// Target area name.
+    pub target: String,
+    /// Lateral-spread kernel parameters (amplitude/σ/λ/cutoff; the
+    /// `local_prob` and `inhibitory_local_only` fields are unused here).
+    pub conn: ConnParams,
+    /// Custom lateral-spread kernel; overrides `conn.rule`.
+    pub kernel: Option<Arc<dyn ConnectivityKernel>>,
+    /// Topographic column-mapping offset (target columns).
+    pub offset: (i32, i32),
+    /// Topographic down-sampling stride (≥ 1 per axis): source column
+    /// (cx, cy) maps to target column (offset + (cx/sx, cy/sy)).
+    pub stride: (u32, u32),
+    /// Only excitatory source neurons project (the long-range cortical
+    /// default; Fig. 2's inhibitory-local rule extended across areas).
+    pub excitatory_only: bool,
+    /// Constant part of the inter-areal delay [ms] (the long-range
+    /// tract); clamped into the global delay window.
+    pub delay_base_ms: f64,
+    /// Conduction velocity of the lateral-spread distance term
+    /// [µm/ms]; 1000 µm/ms = 1 m/s.
+    pub velocity_um_per_ms: f64,
+    /// Multiplier on the drawn synaptic efficacies (> 0): inter-areal
+    /// synapses are routinely modeled stronger (or weaker) than the
+    /// local plexus without touching the global `SynParams`.
+    pub weight_scale: f64,
+}
+
+impl ProjectionParams {
+    /// A projection with the paper-Gaussian lateral spread, identity
+    /// topography, excitatory-only sources and a 2 ms tract delay.
+    pub fn new(source: &str, target: &str) -> Self {
+        ProjectionParams {
+            source: source.to_string(),
+            target: target.to_string(),
+            conn: ConnParams::gaussian(),
+            kernel: None,
+            offset: (0, 0),
+            stride: (1, 1),
+            excitatory_only: true,
+            delay_base_ms: 2.0,
+            velocity_um_per_ms: 1000.0,
+            weight_scale: 1.0,
+        }
+    }
+
+    pub fn weight_scale(mut self, scale: f64) -> Self {
+        self.weight_scale = scale;
+        self
+    }
+
+    pub fn offset(mut self, dx: i32, dy: i32) -> Self {
+        self.offset = (dx, dy);
+        self
+    }
+
+    pub fn stride(mut self, sx: u32, sy: u32) -> Self {
+        self.stride = (sx, sy);
+        self
+    }
+
+    pub fn conn(mut self, conn: ConnParams) -> Self {
+        self.conn = conn;
+        self
+    }
+
+    pub fn kernel(mut self, kernel: Arc<dyn ConnectivityKernel>) -> Self {
+        self.kernel = Some(kernel);
+        self
+    }
+
+    pub fn excitatory_only(mut self, on: bool) -> Self {
+        self.excitatory_only = on;
+        self
+    }
+
+    pub fn delay(mut self, base_ms: f64, velocity_um_per_ms: f64) -> Self {
+        self.delay_base_ms = base_ms;
+        self.velocity_um_per_ms = velocity_um_per_ms;
+        self
+    }
+
+    /// The lateral-spread kernel: custom when set, else `conn.rule`.
+    pub fn kernel_dyn(&self) -> Arc<dyn ConnectivityKernel> {
+        match &self.kernel {
+            Some(k) => Arc::clone(k),
+            None => kernel::from_rule(&self.conn),
+        }
+    }
+}
+
 /// Which neuron integrator the engine uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Solver {
@@ -298,6 +422,16 @@ pub struct SimConfig {
     /// (stencil, synapse generation, analytics) when set. `None` means
     /// "use the preset named by `conn.rule`".
     pub kernel: Option<Arc<dyn ConnectivityKernel>>,
+    /// Multi-area atlas: the named areas, in order. **Empty means the
+    /// legacy single-grid world** described by `grid`/`conn`/`kernel`
+    /// (normalized to a one-area atlas by [`area_list`](Self::area_list)
+    /// — the single-grid path and the one-area atlas are the same code
+    /// path, bit for bit). When non-empty, `grid`/`conn`/`kernel` serve
+    /// only as the defaults areas inherit.
+    pub areas: Vec<AreaParams>,
+    /// Inter-areal projections (require ≥ 1 named area… or 1: an area
+    /// may project onto itself as a second long-range system).
+    pub projections: Vec<ProjectionParams>,
 }
 
 impl SimConfig {
@@ -317,6 +451,8 @@ impl SimConfig {
             plasticity: false,
             solver: Solver::EventDriven,
             kernel: None,
+            areas: Vec::new(),
+            projections: Vec::new(),
         }
     }
 
@@ -353,6 +489,43 @@ impl SimConfig {
         match &self.kernel {
             Some(k) => k.name().to_string(),
             None => self.conn.rule.name().to_string(),
+        }
+    }
+
+    /// The normalized area list: `areas` when configured, else the
+    /// legacy single grid as a one-area atlas ("area0" with this
+    /// config's `grid`/`conn`/`kernel` and the global external drive).
+    /// Everything downstream of configuration — geometry, synapse
+    /// generation, the engine — consumes this view, so the single-grid
+    /// path *is* the one-area atlas path.
+    pub fn area_list(&self) -> Vec<AreaParams> {
+        if self.areas.is_empty() {
+            vec![AreaParams {
+                name: "area0".to_string(),
+                grid: self.grid,
+                conn: self.conn,
+                kernel: self.kernel.clone(),
+                external: None,
+            }]
+        } else {
+            self.areas.clone()
+        }
+    }
+
+    /// The atlas geometry of [`area_list`](Self::area_list).
+    pub fn atlas(&self) -> crate::geometry::Atlas {
+        crate::geometry::Atlas::new(
+            self.area_list().into_iter().map(|a| (a.name, a.grid)).collect(),
+        )
+    }
+
+    /// Total neurons across the atlas (equals `grid.neurons()` for the
+    /// legacy single-grid configuration).
+    pub fn total_neurons(&self) -> u64 {
+        if self.areas.is_empty() {
+            self.grid.neurons()
+        } else {
+            self.areas.iter().map(|a| a.grid.neurons()).sum()
         }
     }
 
@@ -425,28 +598,156 @@ impl SimConfig {
         cfg.seed = doc.int_or("simulation.seed", cfg.seed as i64)? as u64;
         cfg.plasticity = doc.bool_or("simulation.plasticity", cfg.plasticity)?;
         cfg.solver = Solver::parse(&doc.str_or("simulation.solver", "event")?)?;
+
+        // -- multi-area atlas: [[area]] / [[projection]] blocks --------
+        // Areas inherit the already-resolved global [network] and
+        // [connectivity] values as their defaults; every key may be
+        // overridden per block. A config without [[area]] stays the
+        // legacy single grid (areas empty ⇒ one-area atlas).
+        for (i, area) in doc.tables("area")?.iter().enumerate() {
+            let name = area
+                .str_or("name", "")?
+                .trim()
+                .to_string();
+            if name.is_empty() {
+                return Err(format!("[[area]] #{}: missing 'name'", i + 1));
+            }
+            let mut g = cfg.grid;
+            g.nx = area.int_or("nx", area.int_or("side", g.nx as i64)?)? as u32;
+            g.ny = area.int_or("ny", area.int_or("side", g.ny as i64)?)? as u32;
+            g.spacing_um = area.float_or("spacing_um", g.spacing_um)?;
+            g.neurons_per_column =
+                area.int_or("neurons_per_column", g.neurons_per_column as i64)? as u32;
+            g.exc_fraction = area.float_or("exc_fraction", g.exc_fraction)?;
+            let (conn, kern) = conn_from_sub(area, &cfg.conn, cfg.kernel.clone())?;
+            let external = match (
+                area.get("external_synapses_per_neuron").is_some(),
+                area.get("external_rate_hz").is_some(),
+            ) {
+                (false, false) => None,
+                _ => Some(ExternalParams {
+                    synapses_per_neuron: area.int_or(
+                        "external_synapses_per_neuron",
+                        cfg.external.synapses_per_neuron as i64,
+                    )? as u32,
+                    rate_hz: area.float_or("external_rate_hz", cfg.external.rate_hz)?,
+                }),
+            };
+            cfg.areas.push(AreaParams { name, grid: g, conn, kernel: kern, external });
+        }
+        for (i, proj) in doc.tables("projection")?.iter().enumerate() {
+            let source = proj.str_or("source", "")?;
+            let target = proj.str_or("target", "")?;
+            if source.is_empty() || target.is_empty() {
+                return Err(format!("[[projection]] #{}: missing 'source'/'target'", i + 1));
+            }
+            let d = ProjectionParams::new(&source, &target);
+            let (conn, kern) = conn_from_sub(proj, &d.conn, None)?;
+            cfg.projections.push(ProjectionParams {
+                source,
+                target,
+                conn,
+                kernel: kern,
+                offset: (
+                    proj.int_or("offset_x", d.offset.0 as i64)? as i32,
+                    proj.int_or("offset_y", d.offset.1 as i64)? as i32,
+                ),
+                stride: (
+                    proj.int_or("stride_x", d.stride.0 as i64)? as u32,
+                    proj.int_or("stride_y", d.stride.1 as i64)? as u32,
+                ),
+                excitatory_only: proj.bool_or("excitatory_only", d.excitatory_only)?,
+                delay_base_ms: proj.float_or("delay_base_ms", d.delay_base_ms)?,
+                velocity_um_per_ms: proj
+                    .float_or("velocity_um_per_ms", d.velocity_um_per_ms)?,
+                weight_scale: proj.float_or("weight_scale", d.weight_scale)?,
+            });
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
 
+    fn validate_grid(g: &GridParams, what: &str) -> Result<(), String> {
+        if g.nx == 0 || g.ny == 0 {
+            return Err(format!("{what}: grid must be non-empty"));
+        }
+        if g.neurons_per_column == 0 {
+            return Err(format!("{what}: neurons_per_column must be > 0"));
+        }
+        if !(0.0..=1.0).contains(&g.exc_fraction) {
+            return Err(format!("{what}: exc_fraction must be in [0,1]"));
+        }
+        Ok(())
+    }
+
+    fn validate_conn(c: &ConnParams, what: &str) -> Result<(), String> {
+        if !(0.0..=1.0).contains(&c.local_prob) {
+            return Err(format!("{what}: local_prob must be in [0,1]"));
+        }
+        if c.amplitude <= 0.0 || c.amplitude > 1.0 {
+            return Err(format!("{what}: connectivity amplitude must be in (0,1]"));
+        }
+        if c.cutoff <= 0.0 {
+            return Err(format!("{what}: cutoff must be > 0"));
+        }
+        Ok(())
+    }
+
     pub fn validate(&self) -> Result<(), String> {
-        if self.grid.nx == 0 || self.grid.ny == 0 {
-            return Err("grid must be non-empty".into());
+        Self::validate_grid(&self.grid, "network")?;
+        Self::validate_conn(&self.conn, "connectivity")?;
+        // -- atlas-specific checks ------------------------------------
+        for (i, a) in self.areas.iter().enumerate() {
+            let what = format!("area '{}'", a.name);
+            if a.name.is_empty() {
+                return Err(format!("area #{}: empty name", i + 1));
+            }
+            if self.areas[..i].iter().any(|b| b.name == a.name) {
+                return Err(format!("duplicate area name '{}'", a.name));
+            }
+            Self::validate_grid(&a.grid, &what)?;
+            Self::validate_conn(&a.conn, &what)?;
+            if self.ranks as u64 > a.grid.columns() {
+                return Err(format!(
+                    "ranks ({}) exceed columns ({}) of area '{}': every area is \
+                     decomposed over all ranks",
+                    self.ranks,
+                    a.grid.columns(),
+                    a.name
+                ));
+            }
         }
-        if self.grid.neurons_per_column == 0 {
-            return Err("neurons_per_column must be > 0".into());
+        if !self.projections.is_empty() && self.areas.is_empty() {
+            return Err("projections require named [[area]] blocks".into());
         }
-        if !(0.0..=1.0).contains(&self.grid.exc_fraction) {
-            return Err("exc_fraction must be in [0,1]".into());
+        for p in &self.projections {
+            let what = format!("projection '{}'->'{}'", p.source, p.target);
+            for name in [&p.source, &p.target] {
+                if !self.areas.iter().any(|a| &a.name == name) {
+                    return Err(format!("{what}: unknown area '{name}'"));
+                }
+            }
+            Self::validate_conn(&p.conn, &what)?;
+            if p.stride.0 == 0 || p.stride.1 == 0 {
+                return Err(format!("{what}: stride must be >= 1"));
+            }
+            if !p.delay_base_ms.is_finite() || p.delay_base_ms < 0.0 {
+                return Err(format!("{what}: delay_base_ms must be finite and >= 0"));
+            }
+            if p.velocity_um_per_ms.is_nan() || p.velocity_um_per_ms <= 0.0 {
+                return Err(format!("{what}: velocity_um_per_ms must be > 0"));
+            }
+            if !p.weight_scale.is_finite() || p.weight_scale <= 0.0 {
+                return Err(format!("{what}: weight_scale must be finite and > 0"));
+            }
         }
-        if !(0.0..=1.0).contains(&self.conn.local_prob) {
-            return Err("local_prob must be in [0,1]".into());
-        }
-        if self.conn.amplitude <= 0.0 || self.conn.amplitude > 1.0 {
-            return Err("connectivity amplitude must be in (0,1]".into());
-        }
-        if self.conn.cutoff <= 0.0 {
-            return Err("cutoff must be > 0".into());
+        // AER wire spikes and synapse endpoints carry gids as u32
+        if self.total_neurons() > u32::MAX as u64 + 1 {
+            return Err(format!(
+                "total neurons ({}) exceed the u32 gid space of the AER wire format",
+                self.total_neurons()
+            ));
         }
         if self.dt_ms <= 0.0 || self.duration_ms < 0.0 {
             return Err("dt/duration must be positive".into());
@@ -473,7 +774,9 @@ impl SimConfig {
         if self.ranks == 0 {
             return Err("ranks must be >= 1".into());
         }
-        if self.ranks as u64 > self.grid.columns() {
+        // per-area rank bounds are checked above; the legacy grid bound
+        // applies only when the legacy grid is the world
+        if self.areas.is_empty() && self.ranks as u64 > self.grid.columns() {
             return Err(format!(
                 "ranks ({}) exceed columns ({}): the spatial mapping assigns whole \
                  columns to ranks",
@@ -482,6 +785,60 @@ impl SimConfig {
             ));
         }
         Ok(())
+    }
+}
+
+/// Resolve connectivity parameters from one `[[area]]`/`[[projection]]`
+/// block: numeric keys override `base`, and `rule` selects either a
+/// preset (enum) or a registered kernel name resolved against the
+/// overridden numbers. `base_kernel` is the inherited custom kernel
+/// (kept when the block names no rule of its own).
+fn conn_from_sub(
+    sub: &Doc,
+    base: &ConnParams,
+    base_kernel: Option<Arc<dyn ConnectivityKernel>>,
+) -> Result<(ConnParams, Option<Arc<dyn ConnectivityKernel>>), String> {
+    let mut conn = *base;
+    conn.amplitude = sub.float_or("amplitude", conn.amplitude)?;
+    conn.sigma_um = sub.float_or("sigma_um", conn.sigma_um)?;
+    conn.lambda_um = sub.float_or("lambda_um", conn.lambda_um)?;
+    conn.local_prob = sub.float_or("local_prob", conn.local_prob)?;
+    conn.cutoff = sub.float_or("cutoff", conn.cutoff)?;
+    conn.inhibitory_local_only =
+        sub.bool_or("inhibitory_local_only", conn.inhibitory_local_only)?;
+    match sub.get("rule") {
+        None => {
+            // Inherited registered kernel + per-block numeric overrides:
+            // re-resolve the kernel by name against the overridden
+            // numbers, otherwise the block's sigma/lambda/amplitude edits
+            // would silently apply only to validation, not to the wiring.
+            // (Kernel-specific extras like lambda_near_um are registry
+            // defaults after re-resolution; set `rule` in the block to
+            // control them per area.)
+            let numeric_override = ["amplitude", "sigma_um", "lambda_um"]
+                .iter()
+                .any(|k| sub.get(k).is_some());
+            let kernel = match base_kernel {
+                Some(k) if numeric_override => {
+                    Some(kernel::builtin(k.name(), &conn).unwrap_or(k))
+                }
+                other => other,
+            };
+            Ok((conn, kernel))
+        }
+        Some(_) => {
+            let rule_name = sub.str("rule")?;
+            match ConnRule::parse(&rule_name) {
+                Ok(rule) => {
+                    conn.rule = rule;
+                    Ok((conn, None))
+                }
+                Err(_) => {
+                    let k = kernel::resolve(&rule_name, &conn)?;
+                    Ok((conn, Some(k)))
+                }
+            }
+        }
     }
 }
 
@@ -581,6 +938,178 @@ mix = 0.6
         let cfg = SimConfig::gaussian(8);
         assert!(cfg.kernel.is_none());
         assert_eq!(cfg.kernel_dyn().name(), "gaussian");
+    }
+
+    #[test]
+    fn area_and_projection_blocks_parse_with_inheritance() {
+        let doc = toml::parse(
+            r#"
+[network]
+side = 6
+neurons_per_column = 50
+
+[connectivity]
+rule = "gaussian"
+amplitude = 0.04
+
+[external]
+synapses_per_neuron = 80
+rate_hz = 10.0
+
+[[area]]
+name = "v1"
+
+[[area]]
+name = "v2"
+side = 4
+rule = "exponential"
+external_rate_hz = 0.0
+
+[[projection]]
+source = "v1"
+target = "v2"
+rule = "exponential"
+lambda_um = 200.0
+offset_x = -1
+stride_x = 2
+excitatory_only = false
+delay_base_ms = 3.0
+velocity_um_per_ms = 500.0
+
+[simulation]
+ranks = 2
+"#,
+        )
+        .unwrap();
+        let cfg = SimConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.areas.len(), 2);
+        // v1 inherits the global grid + connectivity
+        assert_eq!(cfg.areas[0].name, "v1");
+        assert_eq!(cfg.areas[0].grid.nx, 6);
+        assert_eq!(cfg.areas[0].grid.neurons_per_column, 50);
+        assert_eq!(cfg.areas[0].conn.rule, ConnRule::Gaussian);
+        assert_eq!(cfg.areas[0].conn.amplitude, 0.04);
+        assert!(cfg.areas[0].external.is_none());
+        // v2 overrides grid side, rule and the external drive
+        assert_eq!(cfg.areas[1].grid.nx, 4);
+        assert_eq!(cfg.areas[1].conn.rule, ConnRule::Exponential);
+        let ext = cfg.areas[1].external.unwrap();
+        assert_eq!(ext.rate_hz, 0.0);
+        assert_eq!(ext.synapses_per_neuron, 80); // inherited half
+        // projection
+        assert_eq!(cfg.projections.len(), 1);
+        let p = &cfg.projections[0];
+        assert_eq!((p.source.as_str(), p.target.as_str()), ("v1", "v2"));
+        assert_eq!(p.conn.rule, ConnRule::Exponential);
+        assert_eq!(p.conn.lambda_um, 200.0);
+        assert_eq!(p.offset, (-1, 0));
+        assert_eq!(p.stride, (2, 1));
+        assert!(!p.excitatory_only);
+        assert_eq!(p.delay_base_ms, 3.0);
+        assert_eq!(p.velocity_um_per_ms, 500.0);
+        // atlas view
+        let atlas = cfg.atlas();
+        assert_eq!(atlas.len(), 2);
+        assert_eq!(atlas.columns(), 36 + 16);
+        assert_eq!(cfg.total_neurons(), (36 + 16) * 50);
+        // legacy configs normalize to a one-area atlas
+        let legacy = SimConfig::test_small();
+        let one = legacy.area_list();
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].grid.nx, legacy.grid.nx);
+        assert_eq!(legacy.atlas().neurons(), legacy.grid.neurons());
+    }
+
+    #[test]
+    fn area_blocks_resolve_registered_kernels() {
+        let doc = toml::parse(
+            "[[area]]\nname = \"a\"\nside = 4\nrule = \"flat-disc\"\nsigma_um = 50.0\n",
+        )
+        .unwrap();
+        let cfg = SimConfig::from_doc(&doc).unwrap();
+        let k = cfg.areas[0].kernel.as_ref().expect("kernel resolved");
+        assert_eq!(k.name(), "flat-disc");
+        // 3σ disc radius derives from the overridden σ
+        assert_eq!(k.prob_at(150.0), cfg.areas[0].conn.amplitude);
+        assert_eq!(k.prob_at(151.0), 0.0);
+    }
+
+    #[test]
+    fn area_numeric_overrides_rebind_an_inherited_registered_kernel() {
+        // global rule is a registered (non-preset) kernel; an [[area]]
+        // block overriding sigma_um without naming a rule must get a
+        // kernel resolved against ITS numbers, not the stale global one
+        let doc = toml::parse(
+            "[connectivity]\nrule = \"flat-disc\"\nsigma_um = 100.0\n\n\
+             [[area]]\nname = \"a\"\nside = 4\nsigma_um = 50.0\n",
+        )
+        .unwrap();
+        let cfg = SimConfig::from_doc(&doc).unwrap();
+        let k = cfg.areas[0].kernel.as_ref().expect("kernel inherited");
+        assert_eq!(k.name(), "flat-disc");
+        // 3σ disc from the AREA's σ = 50 → radius 150, not 300
+        assert_eq!(k.prob_at(150.0), cfg.areas[0].conn.amplitude);
+        assert_eq!(k.prob_at(151.0), 0.0);
+        // without numeric overrides the inherited kernel is kept as-is
+        let doc = toml::parse(
+            "[connectivity]\nrule = \"flat-disc\"\nsigma_um = 100.0\n\n\
+             [[area]]\nname = \"a\"\nside = 4\n",
+        )
+        .unwrap();
+        let cfg = SimConfig::from_doc(&doc).unwrap();
+        let k = cfg.areas[0].kernel.as_ref().unwrap();
+        assert_eq!(k.prob_at(300.0), cfg.areas[0].conn.amplitude);
+    }
+
+    #[test]
+    fn atlas_validation_rejects_bad_shapes() {
+        let base = || {
+            let mut c = SimConfig::test_small();
+            c.areas = vec![
+                AreaParams {
+                    name: "a".into(),
+                    grid: GridParams { neurons_per_column: 20, ..GridParams::square(4) },
+                    conn: ConnParams::gaussian(),
+                    kernel: None,
+                    external: None,
+                },
+                AreaParams {
+                    name: "b".into(),
+                    grid: GridParams { neurons_per_column: 20, ..GridParams::square(4) },
+                    conn: ConnParams::gaussian(),
+                    kernel: None,
+                    external: None,
+                },
+            ];
+            c.projections = vec![ProjectionParams::new("a", "b")];
+            c
+        };
+        assert!(base().validate().is_ok());
+        let mut c = base();
+        c.areas[1].name = "a".into();
+        assert!(c.validate().unwrap_err().contains("duplicate"));
+        let mut c = base();
+        c.projections[0].target = "nope".into();
+        assert!(c.validate().unwrap_err().contains("unknown area"));
+        let mut c = base();
+        c.projections[0].stride = (0, 1);
+        assert!(c.validate().unwrap_err().contains("stride"));
+        let mut c = base();
+        c.projections[0].velocity_um_per_ms = 0.0;
+        assert!(c.validate().unwrap_err().contains("velocity"));
+        // NaN must not slip through (NaN delays would saturate to 0 µs)
+        let mut c = base();
+        c.projections[0].delay_base_ms = f64::NAN;
+        assert!(c.validate().unwrap_err().contains("delay_base_ms"));
+        let mut c = base();
+        c.projections[0].weight_scale = f64::NAN;
+        assert!(c.validate().unwrap_err().contains("weight_scale"));
+        let mut c = base();
+        c.ranks = 17; // > 16 columns of area a
+        assert!(c.validate().unwrap_err().contains("area"));
+        let mut c = base();
+        c.areas.clear();
+        assert!(c.validate().unwrap_err().contains("projections require"));
     }
 
     #[test]

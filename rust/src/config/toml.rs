@@ -2,10 +2,12 @@
 //!
 //! No serde/toml crates exist in the offline vendor set, so this module
 //! implements the subset of TOML the simulator's config files need:
-//! `[table]` / `[table.sub]` headers, `key = value` pairs with string,
-//! integer, float, boolean and homogeneous-array values, `#` comments,
-//! and bare or quoted keys. Values are exposed through a small dynamic
-//! [`Value`] tree with typed accessors that report precise errors
+//! `[table]` / `[table.sub]` headers, top-level `[[name]]`
+//! array-of-tables (the multi-area `[[area]]`/`[[projection]]` blocks),
+//! `key = value` pairs with string, integer, float, boolean and
+//! homogeneous-array values, `#` comments, and bare or quoted keys.
+//! Values are exposed through a small dynamic [`Value`] tree with typed
+//! accessors that report precise errors
 //! (`section.key: expected float, found string "x"`).
 
 use std::collections::BTreeMap;
@@ -177,13 +179,43 @@ impl Doc {
             Some(_) => self.str(path),
         }
     }
+
+    /// The items of a top-level `[[name]]` array-of-tables, each wrapped
+    /// in its own `Doc` so the typed accessors work on its keys. Empty
+    /// when the key is absent; `Err` when it exists but is not an array
+    /// of tables.
+    pub fn tables(&self, name: &str) -> Result<Vec<Doc>, String> {
+        let Some(v) = self.root.get(name) else {
+            return Ok(Vec::new());
+        };
+        let items = v.as_array().ok_or_else(|| {
+            format!("config key '{name}': expected array of tables, found {}", v.type_name())
+        })?;
+        items
+            .iter()
+            .map(|item| {
+                item.as_table().map(|t| Doc { root: t.clone() }).ok_or_else(|| {
+                    format!(
+                        "config key '{name}': expected array of tables, found array of {}",
+                        item.type_name()
+                    )
+                })
+            })
+            .collect()
+    }
+}
+
+/// Where the parser currently writes `key = value` pairs: a `[table]`
+/// path, or the last item of a top-level `[[name]]` array-of-tables.
+enum Ctx {
+    Table(Vec<String>),
+    ArrayItem(String),
 }
 
 /// Parse a TOML document.
 pub fn parse(input: &str) -> Result<Doc, TomlError> {
     let mut doc = Doc::default();
-    // Path of the currently-open [table]
-    let mut current: Vec<String> = Vec::new();
+    let mut current = Ctx::Table(Vec::new());
     for (lineno, raw) in input.lines().enumerate() {
         let line = lineno + 1;
         let text = strip_comment(raw).trim().to_string();
@@ -194,8 +226,33 @@ pub fn parse(input: &str) -> Result<Doc, TomlError> {
             let Some(inner) = rest.strip_suffix(']') else {
                 return err(line, "unterminated table header");
             };
-            if inner.starts_with('[') {
-                return err(line, "array-of-tables is not supported by this subset");
+            if let Some(arr) = inner.strip_prefix('[') {
+                // [[name]]: top-level array of tables (multi-area blocks)
+                let Some(name) = arr.strip_suffix(']') else {
+                    return err(line, "unterminated array-of-tables header");
+                };
+                let name = name.trim().trim_matches('"').to_string();
+                if name.is_empty() || name.contains('.') {
+                    return err(
+                        line,
+                        format!("bad array-of-tables name '[[{arr}]]' (top-level, undotted)"),
+                    );
+                }
+                let entry = doc
+                    .root
+                    .entry(name.clone())
+                    .or_insert_with(|| Value::Array(Vec::new()));
+                match entry {
+                    Value::Array(items) => items.push(Value::Table(BTreeMap::new())),
+                    other => {
+                        return err(
+                            line,
+                            format!("'{name}' is a {}, not an array of tables", other.type_name()),
+                        )
+                    }
+                }
+                current = Ctx::ArrayItem(name);
+                continue;
             }
             let parts: Vec<String> = inner
                 .split('.')
@@ -205,7 +262,7 @@ pub fn parse(input: &str) -> Result<Doc, TomlError> {
                 return err(line, format!("bad table name '[{inner}]'"));
             }
             ensure_table(&mut doc.root, &parts, line)?;
-            current = parts;
+            current = Ctx::Table(parts);
             continue;
         }
         let Some(eq) = find_unquoted(&text, '=') else {
@@ -219,7 +276,16 @@ pub fn parse(input: &str) -> Result<Doc, TomlError> {
         if !rest.trim().is_empty() {
             return err(line, format!("trailing characters after value: '{rest}'"));
         }
-        let table = ensure_table(&mut doc.root, &current, line)?;
+        let table = match &current {
+            Ctx::Table(path) => ensure_table(&mut doc.root, path, line)?,
+            Ctx::ArrayItem(name) => match doc.root.get_mut(name) {
+                Some(Value::Array(items)) => match items.last_mut() {
+                    Some(Value::Table(t)) => t,
+                    _ => return err(line, format!("'{name}' array holds no open table")),
+                },
+                _ => return err(line, format!("array-of-tables '{name}' vanished")),
+            },
+        };
         if table.insert(key.clone(), val).is_some() {
             return err(line, format!("duplicate key '{key}'"));
         }
@@ -466,6 +532,64 @@ tau_m = 20.0
         assert_eq!(doc.str_or("a.s", "d").unwrap(), "d");
         // present-but-wrong-type must still error
         assert!(doc.int_or("a", 1).is_err());
+    }
+
+    #[test]
+    fn array_of_tables_parses_and_reads_back() {
+        let doc = parse(
+            r#"
+[simulation]
+seed = 7
+
+[[area]]
+name = "v1"
+side = 4
+
+[[area]]
+name = "v2"
+side = 6
+rate = 0.5
+
+[[projection]]
+source = "v1"
+target = "v2"
+
+[run]
+mapping = "block"
+"#,
+        )
+        .unwrap();
+        // surrounding tables are untouched by the array items
+        assert_eq!(doc.int("simulation.seed").unwrap(), 7);
+        assert_eq!(doc.str("run.mapping").unwrap(), "block");
+        let areas = doc.tables("area").unwrap();
+        assert_eq!(areas.len(), 2);
+        assert_eq!(areas[0].str("name").unwrap(), "v1");
+        assert_eq!(areas[0].int("side").unwrap(), 4);
+        assert_eq!(areas[1].str("name").unwrap(), "v2");
+        assert!((areas[1].float("rate").unwrap() - 0.5).abs() < 1e-12);
+        // typed defaults work inside an item
+        assert_eq!(areas[1].int_or("side", 1).unwrap(), 6);
+        assert_eq!(areas[0].float_or("rate", 2.0).unwrap(), 2.0);
+        let projs = doc.tables("projection").unwrap();
+        assert_eq!(projs.len(), 1);
+        assert_eq!(projs[0].str("source").unwrap(), "v1");
+        // absent name → empty, scalar under the name → error
+        assert!(doc.tables("nothing").unwrap().is_empty());
+        assert!(parse("x = 1\n").unwrap().tables("x").is_err());
+    }
+
+    #[test]
+    fn array_of_tables_rejects_bad_shapes() {
+        // reopening the name as a scalar or table conflicts
+        assert!(parse("[[a]]\nx = 1\n[a]\n").is_err());
+        assert!(parse("a = 1\n[[a]]\n").is_err());
+        // dotted / unterminated headers
+        assert!(parse("[[a.b]]\n").is_err());
+        assert!(parse("[[a]\n").is_err());
+        // duplicate key inside one item errors; across items it is fine
+        assert!(parse("[[a]]\nx = 1\nx = 2\n").is_err());
+        assert!(parse("[[a]]\nx = 1\n[[a]]\nx = 2\n").is_ok());
     }
 
     #[test]

@@ -17,11 +17,11 @@
 //! (vanishingly rare, p ≲ 5e-2) chance of drawing the same target twice
 //! within one column.
 
-use crate::config::{DelayDist, SimConfig};
+use crate::config::{DelayDist, ProjectionParams, SimConfig, SynParams};
 use crate::connectivity::kernel::ConnectivityKernel;
-use crate::connectivity::rules::Stencil;
+use crate::connectivity::rules::{Stencil, StencilOffset};
 use crate::geometry::grid::{stream, ColumnId};
-use crate::geometry::{Decomposition, Grid};
+use crate::geometry::{Atlas, Decomposition, Grid};
 use crate::synapse::storage::WireSynapse;
 use crate::util::prng::Pcg64;
 
@@ -58,45 +58,156 @@ impl<'a> DrawCtx<'a> {
                 s.delay_min_ms + rng.next_f64() * (s.delay_max_ms - s.delay_min_ms)
             }
         };
-        (d_ms * 1000.0) as u32
+        delay_ms_to_us(d_ms)
     }
 }
 
-/// Generate all synapses projected by the neurons of `my_columns`,
-/// bucketed by target rank. Deterministic in `cfg.seed`.
-pub fn generate_outgoing(
+/// Quantize a delay to whole µs, **to nearest**. The previous
+/// `(d_ms * 1000.0) as u32` truncated, biasing every generated delay
+/// down by up to 1 µs. Rounding stays inside the clamp window: the
+/// callers clamp `d_ms` into `[delay_min_ms, delay_max_ms]` first, and
+/// f64 multiplication by 1000 is monotonic, so
+/// `round(d·1000) ∈ [min·1000, max·1000]`.
+#[inline]
+pub fn delay_ms_to_us(d_ms: f64) -> u32 {
+    (d_ms * 1000.0).round() as u32
+}
+
+/// Deterministic inter-areal delay [µs]: constant tract delay plus the
+/// lateral displacement over the conduction velocity, clamped into the
+/// global delay window (which also bounds the delay-queue horizon).
+#[inline]
+fn projection_delay_us(p: &ProjectionParams, r_um: f64, syn: &SynParams) -> u32 {
+    let d_ms = (p.delay_base_ms + r_um / p.velocity_um_per_ms)
+        .clamp(syn.delay_min_ms, syn.delay_max_ms);
+    delay_ms_to_us(d_ms)
+}
+
+/// Resolved wiring of one area: its intra-areal kernel + cutoff stencil
+/// and the connectivity parameters driving the local/remote draws.
+#[derive(Clone, Debug)]
+pub struct AreaWiring {
+    pub conn: crate::config::ConnParams,
+    pub kernel: std::sync::Arc<dyn ConnectivityKernel>,
+    pub stencil: Stencil,
+}
+
+/// Resolved wiring of one inter-areal projection: area indices, the
+/// lateral-spread kernel and its stencil **including the mapped column
+/// itself** (offset (0,0) with envelope p(0) — intra-areal stencils
+/// exclude the center because same-column wiring is handled by
+/// `local_prob`, but a projection's mapped column is an ordinary
+/// target).
+#[derive(Clone, Debug)]
+pub struct ProjectionWiring {
+    pub params: ProjectionParams,
+    pub src_area: usize,
+    pub tgt_area: usize,
+    pub kernel: std::sync::Arc<dyn ConnectivityKernel>,
+    pub stencil: Stencil,
+}
+
+/// Everything synapse generation needs about an atlas configuration,
+/// resolved once per construction.
+#[derive(Clone, Debug)]
+pub struct AtlasWiring {
+    pub areas: Vec<AreaWiring>,
+    pub projections: Vec<ProjectionWiring>,
+}
+
+impl AtlasWiring {
+    /// Resolve kernels and stencils for every area and projection of
+    /// `cfg` (assumes `cfg.validate()` passed — unknown projection area
+    /// names panic here).
+    pub fn build(cfg: &SimConfig, atlas: &Atlas) -> Self {
+        let area_params = cfg.area_list();
+        debug_assert_eq!(area_params.len(), atlas.len());
+        let areas: Vec<AreaWiring> = area_params
+            .iter()
+            .zip(atlas.areas())
+            .map(|(a, geo)| {
+                let kernel = match &a.kernel {
+                    Some(k) => std::sync::Arc::clone(k),
+                    None => crate::connectivity::kernel::from_rule(&a.conn),
+                };
+                let stencil = Stencil::for_kernel(&*kernel, a.conn.cutoff, &geo.grid);
+                AreaWiring { conn: a.conn, kernel, stencil }
+            })
+            .collect();
+        let projections = cfg
+            .projections
+            .iter()
+            .map(|p| {
+                let src_area = atlas
+                    .index_of(&p.source)
+                    .unwrap_or_else(|| panic!("projection source '{}' unknown", p.source));
+                let tgt_area = atlas
+                    .index_of(&p.target)
+                    .unwrap_or_else(|| panic!("projection target '{}' unknown", p.target));
+                let kernel = p.kernel_dyn();
+                let tgrid = &atlas.area(tgt_area).grid;
+                let mut stencil = Stencil::for_kernel(&*kernel, p.conn.cutoff, tgrid);
+                stencil.offsets.insert(
+                    0,
+                    StencilOffset { dx: 0, dy: 0, p_max: kernel.prob_at(0.0) },
+                );
+                ProjectionWiring { params: p.clone(), src_area, tgt_area, kernel, stencil }
+            })
+            .collect();
+        AtlasWiring { areas, projections }
+    }
+}
+
+/// Generate all synapses projected by the neurons of `my_columns`
+/// (global column ids of the atlas), bucketed by target rank:
+/// intra-areal wiring exactly as the single-grid builder, plus one
+/// **projection pass** per projection sourced in the column's area.
+/// Deterministic in `cfg.seed`: intra-areal draws come from each
+/// neuron's `stream::SYNAPSES` stream (untouched by projections — a
+/// one-area atlas reproduces the single-grid network bit for bit), and
+/// each projection draws from its own per-source-neuron
+/// `stream::projection(i)` stream, so construction stays distributed
+/// and decomposition-invariant.
+pub fn generate_outgoing_atlas(
     cfg: &SimConfig,
-    grid: &Grid,
+    atlas: &Atlas,
     decomp: &Decomposition,
-    stencil: &Stencil,
+    wiring: &AtlasWiring,
     my_columns: &[ColumnId],
 ) -> Vec<Vec<WireSynapse>> {
     let ctx = DrawCtx { cfg };
-    // the kernel behind the thinning acceptance: custom when configured,
-    // else the `conn.rule` preset (identical formulas)
-    let kernel: std::sync::Arc<dyn ConnectivityKernel> = cfg.kernel_dyn();
-    let npc = grid.p.neurons_per_column;
     let mut out: Vec<Vec<WireSynapse>> = (0..decomp.ranks).map(|_| Vec::new()).collect();
     // Pre-size the dominant (own-rank) buckets: local synapses are ~80%
     // of the gaussian rule's output and land on the generating rank, and
     // Vec doubling on multi-GB buckets would otherwise overshoot the
     // construction peak by up to 2x (Fig. 9).
-    let my_neurons = my_columns.len() as u64 * npc as u64;
-    let local_expect =
-        (my_neurons as f64 * (npc as f64 - 1.0) * cfg.conn.local_prob * 1.03) as usize;
+    let local_expect: usize = my_columns
+        .iter()
+        .map(|&col| {
+            let (ai, _) = atlas.col_area_local(col);
+            let npc = atlas.area(ai).grid.p.neurons_per_column as f64;
+            (npc * (npc - 1.0) * wiring.areas[ai].conn.local_prob * 1.03) as usize
+        })
+        .sum();
     if let Some(&first) = my_columns.first() {
         out[decomp.rank_of_column(first) as usize].reserve(local_expect);
     }
 
     for &col in my_columns {
+        let (ai, acol) = atlas.col_area_local(col);
+        let aw = &wiring.areas[ai];
+        let area = atlas.area(ai);
+        let grid = &area.grid;
+        let npc = grid.p.neurons_per_column;
+        let (cx, cy) = grid.column_coords(acol);
         let col_rank = decomp.rank_of_column(col) as usize;
         for local in 0..npc {
-            let src_gid = grid.neuron_id(col, local);
+            let src_gid = atlas.neuron_id(col, local);
             let src_is_exc = grid.is_excitatory_local(local);
             let mut rng = Pcg64::for_entity(cfg.seed, src_gid, stream::SYNAPSES);
 
             // --- local (same-column) connectivity: p = local_prob ---
-            let k = rng.binomial(npc as u64 - 1, cfg.conn.local_prob);
+            let k = rng.binomial(npc as u64 - 1, aw.conn.local_prob);
             let targets = rng.sample_distinct(npc as u64 - 1, k);
             for t in targets {
                 // skip self by remapping indices ≥ local upward
@@ -105,49 +216,138 @@ pub fn generate_outgoing(
                 let d = ctx.delay_us(&mut rng);
                 out[col_rank].push(WireSynapse {
                     src_gid: src_gid as u32,
-                    tgt_gid: grid.neuron_id(col, tgt_local) as u32,
+                    tgt_gid: atlas.neuron_id(col, tgt_local) as u32,
                     weight: w,
                     delay_us: d,
                 });
             }
 
-            // --- remote connectivity: excitatory only (Fig. 2) ---
-            if !src_is_exc && cfg.conn.inhibitory_local_only {
-                continue;
-            }
-            let (sx, sy) = grid.neuron_position(cfg.seed, src_gid);
-            for o in &stencil.offsets {
-                let (cx, cy) = grid.column_coords(col);
-                let tx = cx as i64 + o.dx as i64;
-                let ty = cy as i64 + o.dy as i64;
-                if tx < 0 || ty < 0 || tx >= grid.p.nx as i64 || ty >= grid.p.ny as i64 {
-                    continue; // open boundary
+            // --- intra-areal remote: excitatory only (Fig. 2) ---
+            if src_is_exc || !aw.conn.inhibitory_local_only {
+                let (sx, sy) = atlas.neuron_position(cfg.seed, src_gid);
+                for o in &aw.stencil.offsets {
+                    let tx = cx as i64 + o.dx as i64;
+                    let ty = cy as i64 + o.dy as i64;
+                    if tx < 0 || ty < 0 || tx >= grid.p.nx as i64 || ty >= grid.p.ny as i64 {
+                        continue; // open boundary
+                    }
+                    let tgt_col = atlas.global_column(ai, grid.column_index(tx as u32, ty as u32));
+                    let tgt_rank = decomp.rank_of_column(tgt_col) as usize;
+                    // envelope thinning
+                    let candidates = rng.binomial(npc as u64, o.p_max);
+                    for _ in 0..candidates {
+                        let tgt_local = rng.next_below(npc as u64) as u32;
+                        let tgt_gid = atlas.neuron_id(tgt_col, tgt_local);
+                        let (txp, typ) = atlas.neuron_position(cfg.seed, tgt_gid);
+                        let r = ((sx - txp).powi(2) + (sy - typ).powi(2)).sqrt();
+                        let accept = aw.kernel.prob_at(r) / o.p_max;
+                        if rng.next_f64() < accept {
+                            let w = ctx.weight(&mut rng, src_is_exc);
+                            let d = ctx.delay_us(&mut rng);
+                            out[tgt_rank].push(WireSynapse {
+                                src_gid: src_gid as u32,
+                                tgt_gid: tgt_gid as u32,
+                                weight: w,
+                                delay_us: d,
+                            });
+                        }
+                    }
                 }
-                let tgt_col = grid.column_index(tx as u32, ty as u32);
-                let tgt_rank = decomp.rank_of_column(tgt_col) as usize;
-                // envelope thinning
-                let candidates = rng.binomial(npc as u64, o.p_max);
-                for _ in 0..candidates {
-                    let tgt_local = rng.next_below(npc as u64) as u32;
-                    let tgt_gid = grid.neuron_id(tgt_col, tgt_local);
-                    let (txp, typ) = grid.neuron_position(cfg.seed, tgt_gid);
-                    let r = ((sx - txp).powi(2) + (sy - typ).powi(2)).sqrt();
-                    let accept = kernel.prob_at(r) / o.p_max;
-                    if rng.next_f64() < accept {
-                        let w = ctx.weight(&mut rng, src_is_exc);
-                        let d = ctx.delay_us(&mut rng);
-                        out[tgt_rank].push(WireSynapse {
-                            src_gid: src_gid as u32,
-                            tgt_gid: tgt_gid as u32,
-                            weight: w,
-                            delay_us: d,
-                        });
+            }
+
+            // --- projection pass: this neuron's inter-areal axons ---
+            // Iterated in atlas projection order; every projection has
+            // its own counter stream, so the set of synapses one source
+            // neuron projects is a pure function of (seed, gid) for any
+            // decomposition.
+            for (pi, pw) in wiring.projections.iter().enumerate() {
+                if pw.src_area != ai {
+                    continue;
+                }
+                let p = &pw.params;
+                if p.excitatory_only && !src_is_exc {
+                    continue;
+                }
+                let tgrid = &atlas.area(pw.tgt_area).grid;
+                // topographic column mapping: offset + coords / stride
+                let mx = p.offset.0 as i64 + (cx / p.stride.0) as i64;
+                let my = p.offset.1 as i64 + (cy / p.stride.1) as i64;
+                if mx < 0 || my < 0 || mx >= tgrid.p.nx as i64 || my >= tgrid.p.ny as i64 {
+                    continue; // maps outside the target area
+                }
+                // the source's in-column jitter rides along, scaled to
+                // the target spacing: the projection's virtual origin in
+                // the target frame stays inside the mapped column square
+                // (which is what makes the stencil's min-distance
+                // envelopes valid)
+                let (sx, sy) = atlas.neuron_position(cfg.seed, src_gid);
+                let fx = sx / grid.p.spacing_um - cx as f64;
+                let fy = sy / grid.p.spacing_um - cy as f64;
+                let vx = (mx as f64 + fx) * tgrid.p.spacing_um;
+                let vy = (my as f64 + fy) * tgrid.p.spacing_um;
+                let npc_t = tgrid.p.neurons_per_column;
+                let mut prng =
+                    Pcg64::for_entity(cfg.seed, src_gid, stream::projection(pi));
+                for o in &pw.stencil.offsets {
+                    let tx = mx + o.dx as i64;
+                    let ty = my + o.dy as i64;
+                    if tx < 0 || ty < 0 || tx >= tgrid.p.nx as i64 || ty >= tgrid.p.ny as i64 {
+                        continue; // open boundary of the target area
+                    }
+                    let tgt_col = atlas
+                        .global_column(pw.tgt_area, tgrid.column_index(tx as u32, ty as u32));
+                    let tgt_rank = decomp.rank_of_column(tgt_col) as usize;
+                    // envelope thinning around the mapped column
+                    let candidates = prng.binomial(npc_t as u64, o.p_max);
+                    for _ in 0..candidates {
+                        let tgt_local = prng.next_below(npc_t as u64) as u32;
+                        let tgt_gid = atlas.neuron_id(tgt_col, tgt_local);
+                        if tgt_gid == src_gid {
+                            continue; // self-projection of an area onto itself
+                        }
+                        let (txp, typ) = atlas.neuron_position(cfg.seed, tgt_gid);
+                        let r = ((vx - txp).powi(2) + (vy - typ).powi(2)).sqrt();
+                        let accept = pw.kernel.prob_at(r) / o.p_max;
+                        if prng.next_f64() < accept {
+                            let w = ctx.weight(&mut prng, src_is_exc)
+                                * p.weight_scale as f32;
+                            let d = projection_delay_us(p, r, &cfg.syn);
+                            out[tgt_rank].push(WireSynapse {
+                                src_gid: src_gid as u32,
+                                tgt_gid: tgt_gid as u32,
+                                weight: w,
+                                delay_us: d,
+                            });
+                        }
                     }
                 }
             }
         }
     }
     out
+}
+
+/// Single-grid compatibility wrapper over
+/// [`generate_outgoing_atlas`]: `grid` as a one-area atlas with the
+/// given stencil and `cfg`'s kernel, no projections. (`cfg.areas` is
+/// ignored — this is the legacy single-grid view.)
+pub fn generate_outgoing(
+    cfg: &SimConfig,
+    grid: &Grid,
+    decomp: &Decomposition,
+    stencil: &Stencil,
+    my_columns: &[ColumnId],
+) -> Vec<Vec<WireSynapse>> {
+    let atlas = Atlas::single(grid.p);
+    let wiring = AtlasWiring {
+        areas: vec![AreaWiring {
+            conn: cfg.conn,
+            kernel: cfg.kernel_dyn(),
+            stencil: stencil.clone(),
+        }],
+        projections: Vec::new(),
+    };
+    generate_outgoing_atlas(cfg, &atlas, decomp, &wiring, my_columns)
 }
 
 /// Flat generation on one rank (testing/analysis convenience).
@@ -307,6 +507,232 @@ mod tests {
             let dy = (ty as i32 - sy as i32).abs();
             assert!(dx <= max_off && dy <= max_off, "synapse beyond stencil: {dx},{dy}");
         }
+    }
+
+    #[test]
+    fn delay_quantization_rounds_to_nearest_us() {
+        // regression: `(d_ms * 1000.0) as u32` truncated — 1.9999 ms
+        // became 1999 µs, biasing every delay down by up to 1 µs
+        assert_eq!(delay_ms_to_us(1.0), 1000);
+        assert_eq!(delay_ms_to_us(1.0004), 1000);
+        assert_eq!(delay_ms_to_us(1.0006), 1001);
+        assert_eq!(delay_ms_to_us(1.0005), 1001); // half rounds away from zero
+        assert_eq!(delay_ms_to_us(1.9999), 2000); // truncation gave 1999
+        assert_eq!(delay_ms_to_us(39.9996), 40000);
+        assert_eq!(delay_ms_to_us(40.0), 40000);
+        assert_eq!(delay_ms_to_us(5.4321), 5432);
+        assert_eq!(delay_ms_to_us(0.0), 0);
+        // a clamped d_ms can never round past the window edge: f64
+        // multiplication is monotonic, so d <= max ⇒ d·1000 <= max·1000
+        for max_ms in [7.3f64, 40.0, 11.111] {
+            let edge = delay_ms_to_us(max_ms);
+            assert!(delay_ms_to_us(max_ms * (1.0 - 1e-12)) <= edge);
+        }
+    }
+
+    /// Two areas (4×4×40 and 3×3×30), feedforward v1→v2 (excitatory
+    /// only) and feedback v2→v1 (all sources).
+    fn two_area_cfg() -> SimConfig {
+        let mut cfg = SimConfig::gaussian(4);
+        let g1 = crate::config::GridParams { neurons_per_column: 40, ..cfg.grid };
+        let g2 = crate::config::GridParams {
+            neurons_per_column: 30,
+            ..crate::config::GridParams::square(3)
+        };
+        cfg.areas = vec![
+            crate::config::AreaParams {
+                name: "v1".into(),
+                grid: g1,
+                conn: crate::config::ConnParams::gaussian(),
+                kernel: None,
+                external: None,
+            },
+            crate::config::AreaParams {
+                name: "v2".into(),
+                grid: g2,
+                conn: crate::config::ConnParams::gaussian(),
+                kernel: None,
+                external: None,
+            },
+        ];
+        cfg.projections = vec![
+            crate::config::ProjectionParams::new("v1", "v2"),
+            crate::config::ProjectionParams::new("v2", "v1").excitatory_only(false),
+        ];
+        cfg.validate().expect("two-area test config");
+        cfg
+    }
+
+    fn generate_atlas_all(cfg: &SimConfig, ranks: u32, mapping: Mapping) -> Vec<WireSynapse> {
+        let atlas = cfg.atlas();
+        let wiring = AtlasWiring::build(cfg, &atlas);
+        let decomp = Decomposition::for_atlas(&atlas, ranks, mapping);
+        let mut all = Vec::new();
+        for r in 0..ranks {
+            for b in
+                generate_outgoing_atlas(cfg, &atlas, &decomp, &wiring, decomp.columns_of_rank(r))
+            {
+                all.extend(b);
+            }
+        }
+        all.sort_unstable_by_key(|s| (s.src_gid, s.tgt_gid, s.delay_us, s.weight.to_bits()));
+        all
+    }
+
+    #[test]
+    fn atlas_generation_is_decomposition_invariant() {
+        let cfg = two_area_cfg();
+        let reference = generate_atlas_all(&cfg, 1, Mapping::Block);
+        assert!(!reference.is_empty());
+        for (ranks, mapping) in
+            [(2u32, Mapping::Block), (4, Mapping::Block), (4, Mapping::RoundRobin)]
+        {
+            let got = generate_atlas_all(&cfg, ranks, mapping);
+            assert_eq!(
+                reference, got,
+                "atlas network differs at ranks={ranks} mapping={mapping:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn projection_synapses_respect_direction_polarity_and_delays() {
+        let cfg = two_area_cfg();
+        let atlas = cfg.atlas();
+        let syns = generate_atlas_all(&cfg, 1, Mapping::Block);
+        let v1 = atlas.area(0).gid_range();
+        let v2 = atlas.area(1).gid_range();
+        let (mut ff, mut fb, mut fb_inh) = (0u64, 0u64, 0u64);
+        for s in &syns {
+            let (sg, tg) = (s.src_gid as u64, s.tgt_gid as u64);
+            assert_ne!(s.src_gid, s.tgt_gid, "self-synapse generated");
+            let cross = atlas.area_of_gid(sg) != atlas.area_of_gid(tg);
+            if !cross {
+                continue;
+            }
+            let d_ms = s.delay_us as f64 / 1000.0;
+            assert!(
+                d_ms >= cfg.syn.delay_min_ms && d_ms <= cfg.syn.delay_max_ms,
+                "projection delay {d_ms} out of the global window"
+            );
+            if v1.contains(&sg) && v2.contains(&tg) {
+                ff += 1;
+                // v1→v2 is excitatory-only: weights non-negative, source
+                // in the excitatory sub-population
+                assert!(atlas.is_excitatory(sg), "inhibitory source crossed v1→v2");
+                assert!(s.weight >= 0.0);
+                // constant-plus-distance: never below the 2 ms tract floor
+                assert!(d_ms >= 2.0 - 1e-9, "feedforward delay {d_ms} below tract base");
+            } else if v2.contains(&sg) && v1.contains(&tg) {
+                fb += 1;
+                if !atlas.is_excitatory(sg) {
+                    fb_inh += 1;
+                    assert!(s.weight <= 0.0);
+                }
+            } else {
+                panic!("cross-area synapse outside the declared projections");
+            }
+        }
+        assert!(ff > 0, "feedforward projection produced no synapses");
+        assert!(fb > 0, "feedback projection produced no synapses");
+        assert!(fb_inh > 0, "excitatory_only=false must let inhibitory sources project");
+    }
+
+    #[test]
+    fn projection_counts_match_the_analytic_expectation() {
+        // One feedforward projection; compare the generated inter-areal
+        // synapse count with npc_t · Σ_offsets E[p(r)] summed over valid
+        // (source column, offset) pairs — E[p(r)] estimated by MC over
+        // the uniform in-column positions the builder itself assumes.
+        let mut cfg = two_area_cfg();
+        cfg.projections.truncate(1); // v1→v2 only
+        let atlas = cfg.atlas();
+        let wiring = AtlasWiring::build(&cfg, &atlas);
+        let pw = &wiring.projections[0];
+        let (g1, g2) = (&atlas.area(0).grid, &atlas.area(1).grid);
+
+        // MC estimate of E[p(r)] per stencil offset (independent RNG)
+        let mut rng = crate::util::prng::Pcg64::new(0xE57, 0);
+        let mut e_p = Vec::with_capacity(pw.stencil.offsets.len());
+        for o in &pw.stencil.offsets {
+            let mut acc = 0.0;
+            let n = 20_000;
+            for _ in 0..n {
+                let dx = o.dx as f64 + rng.next_f64() - rng.next_f64();
+                let dy = o.dy as f64 + rng.next_f64() - rng.next_f64();
+                let r = g2.p.spacing_um * (dx * dx + dy * dy).sqrt();
+                acc += pw.kernel.prob_at(r);
+            }
+            e_p.push(acc / n as f64);
+        }
+
+        // expected total over all valid (source column, offset) pairs
+        let exc_per_col = g1.p.exc_per_column() as f64;
+        let npc_t = g2.p.neurons_per_column as f64;
+        let mut expect = 0.0;
+        for cy in 0..g1.p.ny {
+            for cx in 0..g1.p.nx {
+                let mx = pw.params.offset.0 as i64 + (cx / pw.params.stride.0) as i64;
+                let my = pw.params.offset.1 as i64 + (cy / pw.params.stride.1) as i64;
+                if mx < 0 || my < 0 || mx >= g2.p.nx as i64 || my >= g2.p.ny as i64 {
+                    continue;
+                }
+                for (o, ep) in pw.stencil.offsets.iter().zip(&e_p) {
+                    let tx = mx + o.dx as i64;
+                    let ty = my + o.dy as i64;
+                    if tx >= 0 && ty >= 0 && tx < g2.p.nx as i64 && ty < g2.p.ny as i64 {
+                        expect += exc_per_col * npc_t * ep;
+                    }
+                }
+            }
+        }
+
+        let syns = generate_atlas_all(&cfg, 1, Mapping::Block);
+        let crossing = syns
+            .iter()
+            .filter(|s| atlas.area_of_gid(s.src_gid as u64) != atlas.area_of_gid(s.tgt_gid as u64))
+            .count() as f64;
+        assert!(expect > 100.0, "expectation too small to test ({expect})");
+        let rel = (crossing - expect) / expect;
+        assert!(
+            rel.abs() < 0.10,
+            "projection synapses {crossing} vs analytic expectation {expect:.1} \
+             ({:+.1}%)",
+            rel * 100.0
+        );
+    }
+
+    #[test]
+    fn topographic_mapping_honors_offset_and_stride() {
+        // stride 2 halves the source grid onto the target; offset shifts
+        // it. Every crossing synapse must land within the projection
+        // stencil's reach of its mapped column.
+        let mut cfg = two_area_cfg();
+        cfg.projections =
+            vec![crate::config::ProjectionParams::new("v1", "v2").offset(1, 0).stride(2, 2)];
+        let atlas = cfg.atlas();
+        let wiring = AtlasWiring::build(&cfg, &atlas);
+        let reach = (wiring.projections[0].stencil.bbox_side as i64 - 1) / 2;
+        let g2 = &atlas.area(1).grid;
+        let syns = generate_atlas_all(&cfg, 1, Mapping::Block);
+        let mut crossing = 0u64;
+        for s in &syns {
+            if atlas.area_of_gid(s.src_gid as u64) == atlas.area_of_gid(s.tgt_gid as u64) {
+                continue;
+            }
+            crossing += 1;
+            let (_, src_col) = atlas.col_area_local(atlas.neuron_column(s.src_gid as u64));
+            let (_, tgt_col) = atlas.col_area_local(atlas.neuron_column(s.tgt_gid as u64));
+            let (scx, scy) = atlas.area(0).grid.column_coords(src_col);
+            let (tcx, tcy) = g2.column_coords(tgt_col);
+            let mx = 1 + (scx / 2) as i64;
+            let my = (scy / 2) as i64;
+            assert!(
+                (tcx as i64 - mx).abs() <= reach && (tcy as i64 - my).abs() <= reach,
+                "target column ({tcx},{tcy}) beyond the stencil around mapped ({mx},{my})"
+            );
+        }
+        assert!(crossing > 0);
     }
 
     #[test]

@@ -22,7 +22,7 @@
 //!                    │              │              │           Shutdown
 //!                    └── virtual-MPI collectives ──┘           or Drop)
 //!                                   │
-//!                    reply_rx: Done{frame} | Panicked{msg}
+//!                    reply_rx: Done{frames} | Panicked{msg}
 //! ```
 //!
 //! Shared state: each rank's `(RankProcess, RankComm)` lives in an
@@ -76,7 +76,10 @@ pub(crate) struct RankSlot {
 enum Command {
     /// Drive `steps` time-driven steps starting at `step0`, with
     /// per-step column-spike observation on or off. The reply carries
-    /// an [`ObserveFrame`] when `observe` is set.
+    /// **one [`ObserveFrame`] per step** when `observe` is set: probed
+    /// advances batch K steps per command and the frames ride back as a
+    /// `Vec`, so observation costs one dispatch per batch instead of
+    /// one per step.
     Run { step0: u64, steps: u64, observe: bool },
     /// Report the current observation frame without stepping (probe
     /// baselines).
@@ -87,10 +90,10 @@ enum Command {
     Shutdown,
 }
 
-/// Per-rank observation snapshot riding back on a reply: the latest
-/// step's per-column spike counts and the cumulative per-phase CPU
-/// totals (the session layer turns consecutive totals into per-step
-/// deltas for `PhaseMetricsProbe`).
+/// Per-rank observation snapshot riding back on a reply: one step's
+/// per-column spike counts and the cumulative per-phase CPU totals at
+/// the end of that step (the session layer turns consecutive totals
+/// into per-step deltas for `PhaseMetricsProbe`).
 #[derive(Clone, Debug, Default)]
 pub(crate) struct ObserveFrame {
     pub col_spikes: Vec<u32>,
@@ -98,7 +101,7 @@ pub(crate) struct ObserveFrame {
 }
 
 enum Reply {
-    Done { rank: u32, frame: Option<ObserveFrame> },
+    Done { rank: u32, frames: Vec<ObserveFrame> },
     Panicked { rank: u32, msg: String },
 }
 
@@ -147,21 +150,30 @@ impl Executor {
         self.poisoned.as_deref()
     }
 
-    /// Drive every rank through `steps` steps starting at `step0`. When
-    /// `observe` is set, returns one frame per rank reflecting the last
-    /// step (the probed path runs one step per command).
+    /// Drive every rank through `steps` steps starting at `step0`.
+    /// When `observe` is set, returns one frame **per rank per step**
+    /// (`result[rank][k]` observes step `step0 + k`): one command
+    /// covers a whole probed batch, with the frames riding back as a
+    /// `Vec`. Unobserved runs return empty per-rank vectors.
     pub fn run(
         &mut self,
         step0: u64,
         steps: u64,
         observe: bool,
-    ) -> Result<Vec<ObserveFrame>, String> {
+    ) -> Result<Vec<Vec<ObserveFrame>>, String> {
         self.dispatch(Command::Run { step0, steps, observe })
     }
 
     /// Snapshot every rank's observation frame without stepping.
     pub fn probe(&mut self) -> Result<Vec<ObserveFrame>, String> {
-        self.dispatch(Command::Probe)
+        let per_rank = self.dispatch(Command::Probe)?;
+        Ok(per_rank
+            .into_iter()
+            .map(|mut frames| {
+                debug_assert_eq!(frames.len(), 1);
+                frames.pop().unwrap_or_default()
+            })
+            .collect())
     }
 
     /// Rewind every rank's dynamics to t = 0 (in parallel) and restart
@@ -192,7 +204,7 @@ impl Executor {
         })
     }
 
-    fn dispatch(&mut self, cmd: Command) -> Result<Vec<ObserveFrame>, String> {
+    fn dispatch(&mut self, cmd: Command) -> Result<Vec<Vec<ObserveFrame>>, String> {
         if let Some(msg) = &self.poisoned {
             return Err(format!("virtual cluster poisoned: {msg}"));
         }
@@ -212,16 +224,14 @@ impl Executor {
     /// per command — panicking workers hang up their channels first, so
     /// peers blocked on them cascade-panic and still reply (see the
     /// module docs) — hence this never deadlocks.
-    fn collect(&mut self) -> Result<Vec<ObserveFrame>, String> {
+    fn collect(&mut self) -> Result<Vec<Vec<ObserveFrame>>, String> {
         let n = self.slots.len();
-        let mut frames = vec![ObserveFrame::default(); n];
+        let mut frames = vec![Vec::new(); n];
         let mut root_panic: Option<String> = None;
         for _ in 0..n {
             match self.reply_rx.recv() {
-                Ok(Reply::Done { rank, frame }) => {
-                    if let Some(f) = frame {
-                        frames[rank as usize] = f;
-                    }
+                Ok(Reply::Done { rank, frames: f }) => {
+                    frames[rank as usize] = f;
                 }
                 Ok(Reply::Panicked { rank, msg }) => {
                     let cascade = msg.contains("hung up");
@@ -285,28 +295,33 @@ fn worker(
             let mut guard = slot.lock().expect("rank slot poisoned");
             let RankSlot { proc, comm } = &mut *guard;
             match cmd {
-                Command::Shutdown => None,
+                Command::Shutdown => Vec::new(),
                 Command::Run { step0, steps, observe } => {
                     proc.set_observe(observe);
+                    let mut frames =
+                        Vec::with_capacity(if observe { steps as usize } else { 0 });
                     for k in 0..steps {
                         proc.step(comm, step0 + k);
+                        if observe {
+                            frames.push(frame_of(proc));
+                        }
                     }
-                    observe.then(|| frame_of(proc))
+                    frames
                 }
-                Command::Probe => Some(frame_of(proc)),
+                Command::Probe => vec![frame_of(proc)],
                 Command::Reset => {
                     proc.reset();
                     let _ = comm.take_stats();
-                    None
+                    Vec::new()
                 }
             }
         }));
         match result {
-            Ok(frame) => {
+            Ok(frames) => {
                 if matches!(cmd, Command::Shutdown) {
                     return;
                 }
-                if reply_tx.send(Reply::Done { rank, frame }).is_err() {
+                if reply_tx.send(Reply::Done { rank, frames }).is_err() {
                     return;
                 }
             }

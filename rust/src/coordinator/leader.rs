@@ -13,6 +13,26 @@ use crate::engine::metrics::{Phase, RankReport};
 use crate::engine::probe::ActivityProbe;
 use crate::engine::process::RunOptions;
 
+/// Per-area totals of one run (one entry per atlas area, in atlas
+/// order; a legacy single-grid run has exactly one).
+#[derive(Clone, Debug)]
+pub struct AreaTotals {
+    pub name: String,
+    pub neurons: u64,
+    pub spikes: u64,
+}
+
+impl AreaTotals {
+    /// Mean firing rate of this area over `duration_ms` [Hz].
+    pub fn firing_rate_hz(&self, duration_ms: f64) -> f64 {
+        if duration_ms <= 0.0 {
+            0.0
+        } else {
+            self.spikes as f64 / self.neurons.max(1) as f64 / (duration_ms / 1000.0)
+        }
+    }
+}
+
 /// Aggregated outcome of one simulation run.
 #[derive(Clone, Debug)]
 pub struct RunSummary {
@@ -26,6 +46,8 @@ pub struct RunSummary {
     /// Per-step per-column spike counts in global column order
     /// (empty unless `record_activity`).
     pub activity: Vec<Vec<u32>>,
+    /// Per-area spike/neuron totals (atlas order).
+    pub area_totals: Vec<AreaTotals>,
 }
 
 impl RunSummary {

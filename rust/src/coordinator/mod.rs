@@ -7,7 +7,7 @@ pub(crate) mod executor;
 pub mod leader;
 pub mod session;
 
-pub use leader::RunSummary;
+pub use leader::{AreaTotals, RunSummary};
 #[allow(deprecated)]
 pub use leader::run_simulation;
 pub use session::{Network, Session, SimulationBuilder};

@@ -26,15 +26,17 @@
 
 use std::sync::Arc;
 
-use crate::config::{ExternalParams, SimConfig, Solver};
+use crate::config::{
+    AreaParams, ExternalParams, GridParams, ProjectionParams, SimConfig, Solver,
+};
 use crate::connectivity::kernel::ConnectivityKernel;
 use crate::coordinator::executor::{Executor, ObserveFrame};
-use crate::coordinator::leader::RunSummary;
+use crate::coordinator::leader::{AreaTotals, RunSummary};
 use crate::engine::metrics::PHASES;
 use crate::engine::plasticity::StdpParams;
-use crate::engine::probe::{Probe, StepSample};
+use crate::engine::probe::{AreaSpan, Probe, StepSample};
 use crate::engine::process::{RankProcess, RunOptions, WIRE_TIME_HORIZON_MS};
-use crate::geometry::{ColumnId, Decomposition, Grid, Mapping};
+use crate::geometry::{Atlas, ColumnId, Decomposition, Mapping};
 use crate::mpi::{Cluster, RankComm};
 use crate::util::memtrack::PeakScope;
 
@@ -110,6 +112,39 @@ impl SimulationBuilder {
 
     pub fn mapping(mut self, mapping: Mapping) -> Self {
         self.opts.mapping = mapping;
+        self
+    }
+
+    // ---- multi-area atlas -----------------------------------------
+
+    /// Append a named area with the given grid; intra-areal
+    /// connectivity (and any custom kernel) is inherited from the
+    /// builder's current configuration. The first `area()` call turns
+    /// the configuration into an atlas — the legacy single-grid fields
+    /// then only serve as defaults.
+    pub fn area(mut self, name: &str, grid: GridParams) -> Self {
+        self.cfg.areas.push(AreaParams {
+            name: name.to_string(),
+            grid,
+            conn: self.cfg.conn,
+            kernel: self.cfg.kernel.clone(),
+            external: None,
+        });
+        self
+    }
+
+    /// Append a fully-specified area (own connectivity, kernel and
+    /// optional external-drive override).
+    pub fn area_with(mut self, area: AreaParams) -> Self {
+        self.cfg.areas.push(area);
+        self
+    }
+
+    /// Append an inter-areal projection (source/target are area names;
+    /// see [`ProjectionParams`] for the topographic mapping, lateral
+    /// spread and delay model).
+    pub fn project(mut self, projection: ProjectionParams) -> Self {
+        self.cfg.projections.push(projection);
         self
     }
 
@@ -209,6 +244,8 @@ pub struct Network {
     cfg: SimConfig,
     opts: RunOptions,
     exec: Executor,
+    /// The atlas geometry (one area for legacy single-grid configs).
+    atlas: Atlas,
     /// Sorted columns owned by each rank (static topology, cached so
     /// probe observation needs no rank round-trip).
     rank_columns: Vec<Vec<ColumnId>>,
@@ -242,8 +279,7 @@ pub(crate) fn construct_pairs(
     opts: &RunOptions,
 ) -> Vec<(RankProcess, RankComm)> {
     let cluster = Cluster::new(cfg.ranks);
-    let grid = Grid::new(cfg.grid);
-    let decomp = Decomposition::new(&grid, cfg.ranks, opts.mapping);
+    let decomp = Decomposition::for_atlas(&cfg.atlas(), cfg.ranks, opts.mapping);
     let decomp_ref = &decomp;
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..cfg.ranks)
@@ -281,7 +317,8 @@ impl Network {
                 .to_string());
         }
         let scope = PeakScope::begin();
-        let ncols = Grid::new(cfg.grid).columns() as usize;
+        let atlas = cfg.atlas();
+        let ncols = atlas.columns() as usize;
         let pairs = construct_pairs(cfg, opts);
         let rank_columns = pairs.iter().map(|(p, _)| p.my_columns().to_vec()).collect();
         let exec = Executor::launch(pairs);
@@ -290,6 +327,7 @@ impl Network {
             cfg: cfg.clone(),
             opts: opts.clone(),
             exec,
+            atlas,
             rank_columns,
             step_cursor: 0,
             time_target_ms: 0.0,
@@ -309,6 +347,30 @@ impl Network {
 
     pub fn ranks(&self) -> u32 {
         self.cfg.ranks
+    }
+
+    /// The atlas geometry this network simulates (one area for legacy
+    /// single-grid configurations).
+    pub fn atlas(&self) -> &Atlas {
+        &self.atlas
+    }
+
+    /// One [`AreaSpan`] per atlas area — the global column slices and
+    /// neuron counts the per-area probes ([`AreaSpikeCountProbe`],
+    /// [`AreaRateProbe`]) consume.
+    ///
+    /// [`AreaSpikeCountProbe`]: crate::engine::probe::AreaSpikeCountProbe
+    /// [`AreaRateProbe`]: crate::engine::probe::AreaRateProbe
+    pub fn area_spans(&self) -> Vec<AreaSpan> {
+        self.atlas
+            .areas()
+            .iter()
+            .map(|a| AreaSpan {
+                name: a.name.clone(),
+                cols: a.col_base as usize..(a.col_base + a.grid.columns()) as usize,
+                neurons: a.grid.neurons(),
+            })
+            .collect()
     }
 
     /// Steps driven so far (network lifetime, across sessions).
@@ -376,15 +438,32 @@ impl Network {
     }
 
     /// Aggregate the run so far into the same [`RunSummary`] the
-    /// one-shot API returns (duration = simulated time so far).
+    /// one-shot API returns (duration = simulated time so far), with
+    /// per-area totals from the atlas.
     pub fn summary(&mut self) -> RunSummary {
+        let reports = self.exec.reports();
+        let area_totals = self
+            .atlas
+            .areas()
+            .iter()
+            .enumerate()
+            .map(|(i, a)| AreaTotals {
+                name: a.name.clone(),
+                neurons: a.grid.neurons(),
+                spikes: reports
+                    .iter()
+                    .map(|r| r.area_spikes.get(i).copied().unwrap_or(0))
+                    .sum(),
+            })
+            .collect();
         RunSummary {
             ranks: self.cfg.ranks,
             duration_ms: self.step_cursor as f64 * self.cfg.dt_ms,
-            neurons: self.cfg.grid.neurons(),
-            reports: self.exec.reports(),
+            neurons: self.atlas.neurons(),
+            reports,
             peak_bytes: self.construction_peak.max(self.scope.peak_delta()),
             activity: Vec::new(),
+            area_totals,
         }
     }
 
@@ -392,12 +471,13 @@ impl Network {
     /// command to the persistent pool (the collectives inside
     /// `RankProcess::step` pace the rank workers against each other
     /// exactly as dedicated MPI processes would). Returns one
-    /// observation frame per rank when `observe` is set.
+    /// observation frame per rank *per step* when `observe` is set
+    /// (`frames[rank][k]` observes the k-th step of this span).
     ///
     /// Panics if a rank panics — the pool surfaces the rank's payload
     /// and the network is poisoned (no further stepping) instead of
     /// deadlocking the step collectives.
-    fn run_steps(&mut self, n: u64, observe: bool) -> Vec<ObserveFrame> {
+    fn run_steps(&mut self, n: u64, observe: bool) -> Vec<Vec<ObserveFrame>> {
         if n == 0 {
             return Vec::new();
         }
@@ -410,6 +490,12 @@ impl Network {
         }
     }
 }
+
+/// Steps per probed `Run` command: observation frames for a whole batch
+/// ride back as one `Vec` per rank, so probed advances pay one command
+/// dispatch per K steps instead of one per step, while the frame memory
+/// stays bounded at O(K × local columns) per rank.
+const PROBE_BATCH_STEPS: u64 = 32;
 
 /// A run segment against a constructed [`Network`]: resumable stepping
 /// plus streaming probes. Sessions borrow the network mutably, so state
@@ -436,7 +522,7 @@ impl<'n, 'p> Session<'n, 'p> {
             // pool; zeros if the pool is already poisoned — the session
             // cannot step anyway)
             if let Ok(frames) = self.net.exec.probe() {
-                self.phase_prev = sum_phase_totals(&frames);
+                self.phase_prev = sum_phase_frames(frames.iter());
             }
         }
         self.probes.push(probe);
@@ -464,7 +550,7 @@ impl<'n, 'p> Session<'n, 'p> {
         let frames = self.net.run_steps(1, observe);
         self.steps_run += 1;
         if observe {
-            self.feed_probes(&frames);
+            self.feed_step(&frames, 0, self.net.step_cursor - 1);
         }
     }
 
@@ -481,11 +567,12 @@ impl<'n, 'p> Session<'n, 'p> {
     ///
     /// Either way the span runs on the network's persistent rank pool:
     /// without probes as a single `Run` command covering all steps, with
-    /// probes as one command per observed step — both are channel
-    /// round-trips on live threads, so probed and unprobed advances cost
-    /// within a few percent of each other per step (the
-    /// `executor_spawn_vs_pool` bench record tracks the ratio; the old
-    /// engine spawned a thread team per probed step here).
+    /// probes as one command per [`PROBE_BATCH_STEPS`]-step batch whose
+    /// per-step observation frames ride back as a `Vec` — so probed
+    /// advances pay one dispatch per batch, not per step (the
+    /// `executor_spawn_vs_pool` bench record tracks the probed/unprobed
+    /// ratio; the old engine spawned a thread team per probed step
+    /// here, then one command per step).
     pub fn advance(&mut self, ms: f64) -> &mut Self {
         match self.try_advance(ms) {
             Ok(s) => s,
@@ -521,16 +608,22 @@ impl<'n, 'p> Session<'n, 'p> {
         }
         self.net.time_target_ms += ms;
         let target = (self.net.time_target_ms / self.net.cfg.dt_ms).round() as u64;
-        let steps = target.saturating_sub(self.net.step_cursor);
+        let mut steps = target.saturating_sub(self.net.step_cursor);
         if self.probes.is_empty() {
             self.net.run_steps(steps, false);
             self.steps_run += steps;
         } else {
-            for _ in 0..steps {
-                // step() re-adds dt to the target; compensate so the
-                // cumulative target reflects only the requested span
-                self.net.time_target_ms -= self.net.cfg.dt_ms;
-                self.step();
+            // batched observation: K steps per Run command, one frame
+            // per step riding back, fed to the probes in step order
+            while steps > 0 {
+                let k = steps.min(PROBE_BATCH_STEPS);
+                let first_step = self.net.step_cursor;
+                let frames = self.net.run_steps(k, true);
+                self.steps_run += k;
+                for j in 0..k as usize {
+                    self.feed_step(&frames, j, first_step + j as u64);
+                }
+                steps -= k;
             }
         }
         Ok(self)
@@ -551,18 +644,20 @@ impl<'n, 'p> Session<'n, 'p> {
         self.probes.iter().map(|p| p.report() + "\n").collect()
     }
 
-    fn feed_probes(&mut self, frames: &[ObserveFrame]) {
+    /// Feed the probes one observed step: `frames[rank][j]` is the
+    /// per-rank frame of global step `step` within the current batch.
+    fn feed_step(&mut self, frames: &[Vec<ObserveFrame>], j: usize, step: u64) {
         // assemble the global per-column counts for this step from the
         // per-rank frames (rank→columns topology is cached at build)
         self.col_buf.clear();
         self.col_buf.resize(self.net.ncols, 0);
-        for (cols, frame) in self.net.rank_columns.iter().zip(frames) {
+        for (cols, rank_frames) in self.net.rank_columns.iter().zip(frames) {
             for (i, &col) in cols.iter().enumerate() {
-                self.col_buf[col as usize] = frame.col_spikes[i];
+                self.col_buf[col as usize] = rank_frames[j].col_spikes[i];
             }
         }
         let spikes: u64 = self.col_buf.iter().map(|&n| n as u64).sum();
-        let totals = sum_phase_totals(frames);
+        let totals = sum_phase_totals(frames, j);
         for (d, (t, prev)) in
             self.phase_delta.iter_mut().zip(totals.iter().zip(self.phase_prev.iter()))
         {
@@ -572,10 +667,10 @@ impl<'n, 'p> Session<'n, 'p> {
         }
         self.phase_prev = totals;
         let sample = StepSample {
-            step: self.net.step_cursor - 1,
-            t_ms: self.net.step_cursor as f64 * self.net.cfg.dt_ms,
+            step,
+            t_ms: (step + 1) as f64 * self.net.cfg.dt_ms,
             dt_ms: self.net.cfg.dt_ms,
-            neurons: self.net.cfg.grid.neurons(),
+            neurons: self.net.atlas.neurons(),
             spikes,
             col_spikes: &self.col_buf,
             phase_ns: &self.phase_delta,
@@ -587,7 +682,9 @@ impl<'n, 'p> Session<'n, 'p> {
 }
 
 /// Sum per-rank cumulative phase totals into one cluster-wide array.
-fn sum_phase_totals(frames: &[ObserveFrame]) -> [u64; PHASES.len()] {
+fn sum_phase_frames<'a>(
+    frames: impl Iterator<Item = &'a ObserveFrame>,
+) -> [u64; PHASES.len()] {
     let mut totals = [0u64; PHASES.len()];
     for frame in frames {
         for (total, ns) in totals.iter_mut().zip(frame.phase_ns.iter()) {
@@ -595,6 +692,12 @@ fn sum_phase_totals(frames: &[ObserveFrame]) -> [u64; PHASES.len()] {
         }
     }
     totals
+}
+
+/// [`sum_phase_frames`] over one batch step of the per-rank frame
+/// matrix (`frames[rank][j]`).
+fn sum_phase_totals(frames: &[Vec<ObserveFrame>], j: usize) -> [u64; PHASES.len()] {
+    sum_phase_frames(frames.iter().map(|rank_frames| &rank_frames[j]))
 }
 
 #[cfg(test)]
@@ -700,6 +803,86 @@ mod tests {
         assert_eq!(split.steps_run(), whole.steps_run());
         assert_eq!(split.steps_run(), (100.0f64 / 0.3).round() as u64);
         assert_eq!(split.summary().spikes(), whole.summary().spikes());
+    }
+
+    #[test]
+    fn two_area_network_runs_and_reports_per_area() {
+        use crate::engine::probe::{AreaRateProbe, AreaSpikeCountProbe};
+        let g = crate::config::GridParams { neurons_per_column: 40, ..GridParams::square(4) };
+        // strong feedforward spread (A = 0.3, 3× efficacies) so the
+        // undriven area fires robustly from the projection alone
+        let ff_conn =
+            crate::config::ConnParams { amplitude: 0.3, ..crate::config::ConnParams::gaussian() };
+        let mut net = SimulationBuilder::gaussian(4)
+            .external(100, 100.0)
+            .area("v1", g)
+            .area_with(AreaParams {
+                name: "v2".into(),
+                grid: g,
+                conn: crate::config::ConnParams::gaussian(),
+                kernel: None,
+                // silent area: only the feedforward projection drives it
+                external: Some(ExternalParams { synapses_per_neuron: 0, rate_hz: 0.0 }),
+            })
+            .project(ProjectionParams::new("v1", "v2").conn(ff_conn).weight_scale(3.0))
+            .project(ProjectionParams::new("v2", "v1"))
+            .ranks(2)
+            .build()
+            .unwrap();
+        assert_eq!(net.atlas().len(), 2);
+        let spans = net.area_spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].cols, 0..16);
+        assert_eq!(spans[1].cols, 16..32);
+        let mut counts = AreaSpikeCountProbe::new(net.area_spans());
+        let mut rates = AreaRateProbe::new(net.area_spans(), 20.0);
+        {
+            let mut session = net.session();
+            session.attach(&mut counts).attach(&mut rates);
+            session.advance(60.0);
+        }
+        let s = net.summary();
+        assert_eq!(s.area_totals.len(), 2);
+        assert_eq!(s.area_totals[0].name, "v1");
+        // per-area totals from the engine agree with the probe's view
+        assert_eq!(s.area_totals[0].spikes, counts.totals()[0]);
+        assert_eq!(s.area_totals[1].spikes, counts.totals()[1]);
+        assert_eq!(s.area_totals[0].spikes + s.area_totals[1].spikes, s.spikes());
+        // v1 is driven; v2 fires only through the projection loop
+        assert!(s.area_totals[0].spikes > 0, "driven area silent");
+        assert!(
+            s.area_totals[1].spikes > 0,
+            "projection failed to propagate activity into the undriven area"
+        );
+        assert!(rates.mean_hz(0) > rates.mean_hz(1), "driven area must lead");
+    }
+
+    #[test]
+    fn probed_batched_advance_matches_per_step_commands() {
+        // satellite parity check: a 40-step advance (crossing the
+        // 32-step batch boundary) must feed probes the exact same
+        // frames as 40 step() calls (one Run command each)
+        use crate::engine::probe::ActivityProbe;
+        let mk = || builder().build().unwrap();
+        let mut batched_net = mk();
+        let mut batched = ActivityProbe::new();
+        {
+            let mut session = batched_net.session();
+            session.attach(&mut batched);
+            session.advance(40.0);
+        }
+        let mut stepped_net = mk();
+        let mut stepped = ActivityProbe::new();
+        {
+            let mut session = stepped_net.session();
+            session.attach(&mut stepped);
+            for _ in 0..40 {
+                session.step();
+            }
+        }
+        assert_eq!(batched.rows().len(), 40);
+        assert_eq!(batched.rows(), stepped.rows(), "batched frames diverge from per-step");
+        assert_eq!(batched_net.summary().spikes(), stepped_net.summary().spikes());
     }
 
     #[test]

@@ -68,6 +68,9 @@ pub struct EngineMetrics {
     pub synapses_resident: u64,
     /// Bytes resident in the synapse store + queues after construction.
     pub resident_bytes: u64,
+    /// Spikes emitted by local neurons, per atlas area (one entry per
+    /// area; a single-grid run has exactly one, equal to `spikes`).
+    pub area_spikes: Vec<u64>,
 }
 
 impl EngineMetrics {
@@ -112,6 +115,10 @@ impl EngineMetrics {
             v.push(s.remote_msgs);
             v.push(s.remote_bytes);
         }
+        // variable-length tail: per-area spike totals (count-prefixed so
+        // the fixed-index decoding above stays valid)
+        v.push(self.area_spikes.len() as u64);
+        v.extend_from_slice(&self.area_spikes);
         v
     }
 }
@@ -135,6 +142,8 @@ pub struct RankReport {
     pub spike_payload_bytes: u64,
     pub init_payload_msgs: u64,
     pub init_payload_bytes: u64,
+    /// Per-area spike totals (indexed by atlas area).
+    pub area_spikes: Vec<u64>,
 }
 
 impl RankReport {
@@ -159,6 +168,8 @@ impl RankReport {
         r.spike_payload_bytes = v[b + 3];
         r.init_payload_msgs = v[b + 4];
         r.init_payload_bytes = v[b + 5];
+        let n_areas = v[b + 6] as usize;
+        r.area_spikes = v[b + 7..b + 7 + n_areas].to_vec();
         r
     }
 
@@ -184,6 +195,7 @@ mod tests {
         m.sim_cpu_ns = 77;
         m.synapses_resident = 88;
         m.resident_bytes = 99;
+        m.area_spikes = vec![21, 12];
         m.start(Phase::Dynamics);
         std::hint::black_box((0..10_000u64).sum::<u64>());
         m.stop(Phase::Dynamics);
@@ -202,6 +214,11 @@ mod tests {
         assert_eq!(r.spike_count_bytes, 8);
         assert_eq!(r.spike_payload_bytes, 160);
         assert_eq!(r.init_payload_bytes, 0);
+        assert_eq!(r.area_spikes, vec![21, 12]);
+
+        // an empty per-area tail (default metrics) decodes to empty
+        let empty = RankReport::from_wire(&EngineMetrics::default().to_wire(&comm));
+        assert!(empty.area_spikes.is_empty());
     }
 
     #[test]

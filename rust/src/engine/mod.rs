@@ -9,6 +9,7 @@ pub mod process;
 
 pub use metrics::{EngineMetrics, Phase, RankReport};
 pub use probe::{
-    ActivityProbe, FiringRateProbe, PhaseMetricsProbe, Probe, SpikeCountProbe, StepSample,
+    ActivityProbe, AreaRateProbe, AreaSpan, AreaSpikeCountProbe, FiringRateProbe,
+    PhaseMetricsProbe, Probe, SpikeCountProbe, StepSample,
 };
 pub use process::{LocalSpike, RankProcess, RunOptions, WireSpike, WIRE_TIME_HORIZON_MS};

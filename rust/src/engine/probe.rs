@@ -13,6 +13,9 @@
 //! * [`SpikeCountProbe`] — total + per-step population spike counts;
 //! * [`FiringRateProbe`] — windowed population firing rate [Hz];
 //! * [`PhaseMetricsProbe`] — cumulative per-phase CPU split;
+//! * [`AreaSpikeCountProbe`] / [`AreaRateProbe`] — the same
+//!   observables split per atlas area (spans from
+//!   `Network::area_spans`);
 //! * [`ActivityProbe`] — the full per-column matrix (explicitly opt-in;
 //!   this is the one probe that intentionally materializes
 //!   O(steps × columns), for Fig. 3/4-style wave analysis).
@@ -196,6 +199,140 @@ impl Probe for PhaseMetricsProbe {
     }
 }
 
+/// One atlas area's slice of the global column space, for the per-area
+/// probes (obtain via `Network::area_spans`).
+#[derive(Clone, Debug)]
+pub struct AreaSpan {
+    pub name: String,
+    /// Range of global column indices into `StepSample::col_spikes`.
+    pub cols: std::ops::Range<usize>,
+    /// Neurons in the area (rate normalization).
+    pub neurons: u64,
+}
+
+/// Per-area total + per-step spike counts (O(steps × areas) memory).
+#[derive(Clone, Debug)]
+pub struct AreaSpikeCountProbe {
+    spans: Vec<AreaSpan>,
+    totals: Vec<u64>,
+    /// One per-step series per area.
+    per_step: Vec<Vec<u32>>,
+}
+
+impl AreaSpikeCountProbe {
+    pub fn new(spans: Vec<AreaSpan>) -> Self {
+        let n = spans.len();
+        AreaSpikeCountProbe { spans, totals: vec![0; n], per_step: vec![Vec::new(); n] }
+    }
+
+    pub fn spans(&self) -> &[AreaSpan] {
+        &self.spans
+    }
+
+    /// Total spikes per area over the observed steps.
+    pub fn totals(&self) -> &[u64] {
+        &self.totals
+    }
+
+    /// Per-step spike counts of one area.
+    pub fn per_step(&self, area: usize) -> &[u32] {
+        &self.per_step[area]
+    }
+}
+
+impl Probe for AreaSpikeCountProbe {
+    fn name(&self) -> &'static str {
+        "area-spike-count"
+    }
+
+    fn on_step(&mut self, s: &StepSample<'_>) {
+        for (i, span) in self.spans.iter().enumerate() {
+            let n: u64 = s.col_spikes[span.cols.clone()].iter().map(|&c| c as u64).sum();
+            self.totals[i] += n;
+            self.per_step[i].push(n as u32);
+        }
+    }
+
+    fn report(&self) -> String {
+        let mut out = String::from("area-spike-count:");
+        for (span, t) in self.spans.iter().zip(&self.totals) {
+            out.push_str(&format!(" {}={t}", span.name));
+        }
+        out
+    }
+}
+
+/// Windowed per-area firing rates [Hz] (O(areas × steps / window)).
+#[derive(Clone, Debug)]
+pub struct AreaRateProbe {
+    spans: Vec<AreaSpan>,
+    window_ms: f64,
+    acc_spikes: Vec<u64>,
+    acc_ms: f64,
+    rates: Vec<Vec<f64>>,
+}
+
+impl AreaRateProbe {
+    pub fn new(spans: Vec<AreaSpan>, window_ms: f64) -> Self {
+        assert!(window_ms > 0.0, "window must be positive");
+        let n = spans.len();
+        AreaRateProbe {
+            spans,
+            window_ms,
+            acc_spikes: vec![0; n],
+            acc_ms: 0.0,
+            rates: vec![Vec::new(); n],
+        }
+    }
+
+    /// One rate per completed window of one area [Hz].
+    pub fn rates_hz(&self, area: usize) -> &[f64] {
+        &self.rates[area]
+    }
+
+    /// Mean rate of one area over all completed windows [Hz].
+    pub fn mean_hz(&self, area: usize) -> f64 {
+        let r = &self.rates[area];
+        if r.is_empty() {
+            0.0
+        } else {
+            r.iter().sum::<f64>() / r.len() as f64
+        }
+    }
+}
+
+impl Probe for AreaRateProbe {
+    fn name(&self) -> &'static str {
+        "area-rate"
+    }
+
+    fn on_step(&mut self, s: &StepSample<'_>) {
+        for (i, span) in self.spans.iter().enumerate() {
+            self.acc_spikes[i] +=
+                s.col_spikes[span.cols.clone()].iter().map(|&c| c as u64).sum::<u64>();
+        }
+        self.acc_ms += s.dt_ms;
+        if self.acc_ms + 1e-9 >= self.window_ms {
+            for (i, span) in self.spans.iter().enumerate() {
+                let rate = self.acc_spikes[i] as f64
+                    / span.neurons.max(1) as f64
+                    / (self.acc_ms / 1000.0);
+                self.rates[i].push(rate);
+                self.acc_spikes[i] = 0;
+            }
+            self.acc_ms = 0.0;
+        }
+    }
+
+    fn report(&self) -> String {
+        let mut out = format!("area-rate ({} ms windows):", self.window_ms);
+        for (i, span) in self.spans.iter().enumerate() {
+            out.push_str(&format!(" {}={:.2}Hz", span.name, self.mean_hz(i)));
+        }
+        out
+    }
+}
+
 /// Full per-step per-column spike matrix — the legacy `record_activity`
 /// observable. **O(steps × columns) memory by design**; prefer the
 /// streaming probes for long runs.
@@ -301,6 +438,32 @@ mod tests {
         assert_eq!(p.phase_ns(Phase::Exchange), 60);
         assert_eq!(p.steps(), 2);
         assert!(p.report().contains("dynamics"));
+    }
+
+    #[test]
+    fn area_probes_split_columns_by_span() {
+        let spans = vec![
+            AreaSpan { name: "v1".into(), cols: 0..2, neurons: 100 },
+            AreaSpan { name: "v2".into(), cols: 2..5, neurons: 50 },
+        ];
+        let mut counts = AreaSpikeCountProbe::new(spans.clone());
+        let mut rates = AreaRateProbe::new(spans, 2.0);
+        let phase = [0u64; PHASES.len()];
+        // two steps of per-column activity over 5 global columns
+        counts.on_step(&sample(0, 9, &[1, 2, 3, 0, 3], &phase));
+        rates.on_step(&sample(0, 9, &[1, 2, 3, 0, 3], &phase));
+        counts.on_step(&sample(1, 4, &[0, 1, 0, 3, 0], &phase));
+        rates.on_step(&sample(1, 4, &[0, 1, 0, 3, 0], &phase));
+        assert_eq!(counts.totals(), &[4, 9]);
+        assert_eq!(counts.per_step(0), &[3, 1]);
+        assert_eq!(counts.per_step(1), &[6, 3]);
+        assert!(counts.report().contains("v1=4") && counts.report().contains("v2=9"));
+        // one 2 ms window completed: v1 = 4 spikes/100 neurons/2 ms
+        // → 20 Hz; v2 = 9/50/2ms → 90 Hz
+        assert_eq!(rates.rates_hz(0).len(), 1);
+        assert!((rates.rates_hz(0)[0] - 20.0).abs() < 1e-9);
+        assert!((rates.rates_hz(1)[0] - 90.0).abs() < 1e-9);
+        assert!((rates.mean_hz(1) - 90.0).abs() < 1e-9);
     }
 
     #[test]

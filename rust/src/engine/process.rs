@@ -30,12 +30,11 @@
 //! [`reset`](RankProcess::reset) / [`set_external`](RankProcess::set_external)
 //! service the remaining commands without tearing the state down.
 
-use crate::config::{SimConfig, Solver};
-use crate::connectivity::builder::generate_outgoing;
-use crate::connectivity::rules::Stencil;
+use crate::config::{ExternalParams, SimConfig, Solver};
+use crate::connectivity::builder::{generate_outgoing_atlas, AtlasWiring};
 use crate::engine::metrics::{EngineMetrics, Phase, RankReport};
 use crate::engine::plasticity::{Plasticity, StdpParams};
-use crate::geometry::{ColumnId, Decomposition, Grid};
+use crate::geometry::{ColumnId, Decomposition};
 use crate::mpi::{CommClass, RankComm, Wire};
 use crate::neuron::{LifParams, LifState};
 use crate::runtime::batch::BatchSolver;
@@ -162,10 +161,19 @@ impl RunOptions {
 /// The per-rank simulation state.
 pub struct RankProcess {
     cfg: SimConfig,
-    grid: Grid,
     rank: u32,
-    /// Sorted columns owned by this rank.
+    /// Sorted columns owned by this rank (global atlas column ids).
     my_columns: Vec<ColumnId>,
+    /// First local neuron index of each owned column (CSR over
+    /// `my_columns`, len + 1): areas may differ in neurons/column, so
+    /// local indices cannot assume a uniform stride.
+    col_start: Vec<u32>,
+    /// Atlas area index of each owned column.
+    col_area: Vec<u16>,
+    /// Local neuron index → position of its column in `my_columns`.
+    local_col_pos: Vec<u32>,
+    /// Local neuron index → excitatory? (per-area `exc_fraction`).
+    local_is_exc: Vec<bool>,
     n_local: u32,
     /// Local neuron index → global id (wire-boundary conversion table).
     local_gid: Vec<u32>,
@@ -174,7 +182,12 @@ pub struct RankProcess {
     inh_params: LifParams,
     store: SynapseStore,
     queue: DelayQueue,
-    stim: ExternalStimulus,
+    /// Per-area external stimulus (index = atlas area; a one-area atlas
+    /// has exactly the legacy single stimulus).
+    stims: Vec<ExternalStimulus>,
+    /// Per-area external override (None → the global drive), kept so
+    /// [`set_external`](Self::set_external) can rebuild `stims`.
+    area_external: Vec<Option<ExternalParams>>,
     /// CSR of target ranks per local neuron (spike routing).
     route_start: Vec<u32>,
     route_rank: Vec<u32>,
@@ -218,11 +231,21 @@ pub struct RankProcess {
 impl RankProcess {
     #[inline]
     fn is_exc_local(&self, local: u32) -> bool {
-        self.grid.is_excitatory_local(local % self.grid.p.neurons_per_column)
+        self.local_is_exc[local as usize]
+    }
+
+    /// The external stimulus driving one local neuron (its area's).
+    #[inline]
+    fn stim_of(&self, local: u32) -> ExternalStimulus {
+        self.stims[self.col_area[self.local_col_pos[local as usize] as usize] as usize]
     }
 
     /// Network construction: distributed synapse generation + the
     /// two-step connectivity-infrastructure exchange (§II-D).
+    ///
+    /// `decomp` must be the atlas decomposition of `cfg`
+    /// ([`Decomposition::for_atlas`] over `cfg.atlas()`; for legacy
+    /// single-grid configs the grid decomposition is the same thing).
     pub fn construct(
         cfg: &SimConfig,
         decomp: &Decomposition,
@@ -230,27 +253,51 @@ impl RankProcess {
         opts: &RunOptions,
     ) -> Self {
         let t0 = thread_cputime_ns();
-        let grid = Grid::new(cfg.grid);
+        let atlas = cfg.atlas();
+        let area_params = cfg.area_list();
         let rank = comm.rank();
         let ranks = comm.ranks();
         let my_columns: Vec<ColumnId> = decomp.columns_of_rank(rank).to_vec();
         debug_assert!(my_columns.windows(2).all(|w| w[0] < w[1]));
-        let n_local = my_columns.len() as u32 * grid.p.neurons_per_column;
+
+        // --- local index layout: CSR over the owned columns ---
+        // (areas may differ in neurons/column, so local indices follow
+        // per-column starts instead of a uniform stride)
+        let mut col_start: Vec<u32> = Vec::with_capacity(my_columns.len() + 1);
+        let mut col_area: Vec<u16> = Vec::with_capacity(my_columns.len());
+        let mut acc = 0u32;
+        for &col in &my_columns {
+            let (ai, _) = atlas.col_area_local(col);
+            col_start.push(acc);
+            col_area.push(ai as u16);
+            acc += atlas.area(ai).grid.p.neurons_per_column;
+        }
+        col_start.push(acc);
+        let n_local = acc;
+        let mut local_is_exc = Vec::with_capacity(n_local as usize);
+        let mut local_col_pos = Vec::with_capacity(n_local as usize);
+        for (pos, &ai) in col_area.iter().enumerate() {
+            let g = &atlas.area(ai as usize).grid;
+            for l in 0..g.p.neurons_per_column {
+                local_is_exc.push(g.is_excitatory_local(l));
+                local_col_pos.push(pos as u32);
+            }
+        }
 
         // --- generate outgoing synapses, bucketed by target rank ---
-        // (kernel-aware: a custom ConnectivityKernel drives the stencil)
-        let stencil = Stencil::for_kernel(&*cfg.kernel_dyn(), cfg.conn.cutoff, &grid);
-        let buckets = generate_outgoing(cfg, &grid, decomp, &stencil, &my_columns);
+        // (kernel-aware per area, plus the inter-areal projection pass)
+        let wiring = AtlasWiring::build(cfg, &atlas);
+        let buckets = generate_outgoing_atlas(cfg, &atlas, decomp, &wiring, &my_columns);
 
         // --- per-neuron spike routing (which ranks host my synapses) ---
-        let npc = grid.p.neurons_per_column as u64;
-        let col_pos = |col: ColumnId| my_columns.binary_search(&col).unwrap() as u64;
+        let col_pos = |col: ColumnId| my_columns.binary_search(&col).unwrap();
+        let to_local = |gid: u64| -> u32 {
+            col_start[col_pos(atlas.neuron_column(gid))] + atlas.neuron_local(gid)
+        };
         let mut route_sets: Vec<Vec<u32>> = vec![Vec::new(); n_local as usize];
         for (tgt_rank, bucket) in buckets.iter().enumerate() {
             for s in bucket {
-                let local = (col_pos(grid.neuron_column(s.src_gid as u64)) * npc
-                    + grid.neuron_local(s.src_gid as u64) as u64)
-                    as usize;
+                let local = to_local(s.src_gid as u64) as usize;
                 let set = &mut route_sets[local];
                 if set.last() != Some(&(tgt_rank as u32)) {
                     // buckets are visited in rank order ⇒ sorted inserts
@@ -283,14 +330,12 @@ impl RankProcess {
             all_in.extend(r);
         }
 
-        let my_columns_ref = &my_columns;
-        let grid_ref = &grid;
         let store = SynapseStore::build(all_in, cfg.dt_ms, |gid| {
-            let col = grid_ref.neuron_column(gid as u64);
-            let pos = my_columns_ref
+            let col = atlas.neuron_column(gid as u64);
+            let pos = my_columns
                 .binary_search(&col)
                 .unwrap_or_else(|_| panic!("synapse for foreign column {col}"));
-            pos as u32 * grid_ref.p.neurons_per_column + grid_ref.neuron_local(gid as u64)
+            col_start[pos] + atlas.neuron_local(gid as u64)
         });
         // after this point the source-side representation (buckets) is
         // gone — the transient double representation is the paper's
@@ -304,28 +349,40 @@ impl RankProcess {
             (store.max_slot() as usize) < queue.horizon(),
             "precomputed delay slot beyond the delay-queue horizon"
         );
-        let stim = ExternalStimulus::new(cfg);
-        let local_gid = decomp.local_gid_table(&grid, rank);
+        let stims: Vec<ExternalStimulus> = area_params
+            .iter()
+            .map(|a| ExternalStimulus::with_rate(cfg, a.external.as_ref().unwrap_or(&cfg.external)))
+            .collect();
+        let area_external: Vec<Option<ExternalParams>> =
+            area_params.iter().map(|a| a.external).collect();
+        let local_gid = decomp.local_gid_table_atlas(&atlas, rank);
         debug_assert_eq!(local_gid.len(), n_local as usize);
         let stim_streams: Vec<crate::util::prng::Pcg64> = local_gid
             .iter()
-            .map(|&gid| stim.neuron_stream(gid as u64))
+            .enumerate()
+            .map(|(l, &gid)| {
+                stims[col_area[local_col_pos[l] as usize] as usize].neuron_stream(gid as u64)
+            })
             .collect();
         let plasticity =
             cfg.plasticity.then(|| Plasticity::new(opts.stdp, &store, n_local));
         let batch = match cfg.solver {
             Solver::Xla => Some(
-                BatchSolver::new(cfg, n_local)
+                BatchSolver::with_populations(cfg, n_local, |l| local_is_exc[l as usize])
                     .expect("XLA solver requested but artifact unavailable"),
             ),
             Solver::EventDriven => None,
         };
 
+        let n_areas = atlas.len();
         let mut proc = RankProcess {
             cfg: cfg.clone(),
-            grid,
             rank,
             my_columns,
+            col_start,
+            col_area,
+            local_col_pos,
+            local_is_exc,
             n_local,
             local_gid,
             states,
@@ -333,7 +390,8 @@ impl RankProcess {
             inh_params,
             store,
             queue,
-            stim,
+            stims,
+            area_external,
             route_start,
             route_rank,
             send_to,
@@ -352,6 +410,7 @@ impl RankProcess {
             batch,
             opts: opts.clone(),
         };
+        proc.metrics.area_spikes = vec![0; n_areas];
         proc.reseed_calendar(0);
         proc.metrics.init_cpu_ns = thread_cputime_ns() - t0;
         proc.metrics.synapses_resident = proc.store.synapse_count();
@@ -372,15 +431,17 @@ impl RankProcess {
     }
 
     /// Rebuild the next-event calendar starting at `from_step`, drawing
-    /// each neuron's next gap from its (persistent) stimulus stream.
+    /// each neuron's next gap from its (persistent) stimulus stream
+    /// under its area's drive.
     fn reseed_calendar(&mut self, from_step: u64) {
         self.stim_cal = StimCalendar::with_base(STIM_CAL_HORIZON, from_step);
         self.cal_buf.clear();
         let inv_dt = 1.0 / self.cfg.dt_ms;
         let t0 = from_step as f64 * self.cfg.dt_ms;
         for local in 0..self.n_local {
+            let stim = self.stim_of(local);
             let rng = &mut self.stim_streams[local as usize];
-            if let Some(gap) = self.stim.first_gap_ms(rng) {
+            if let Some(gap) = stim.first_gap_ms(rng) {
                 self.stim_cal.schedule(local, t0 + gap, inv_dt);
             }
         }
@@ -419,7 +480,8 @@ impl RankProcess {
         self.stim_streams = self
             .local_gid
             .iter()
-            .map(|&gid| self.stim.neuron_stream(gid as u64))
+            .enumerate()
+            .map(|(l, &gid)| self.stim_of(l as u32).neuron_stream(gid as u64))
             .collect();
         // fresh streams + fresh calendar ⇒ the replay draws the exact
         // same per-neuron event sequence as the original run
@@ -430,9 +492,12 @@ impl RankProcess {
         // the batched solver holds (v, c, refr) host-side between steps;
         // rebuild it so the replay starts from resting state too
         if self.batch.is_some() {
+            let is_exc = &self.local_is_exc;
             self.batch = Some(
-                BatchSolver::new(&self.cfg, self.n_local)
-                    .expect("XLA solver rebuild on reset"),
+                BatchSolver::with_populations(&self.cfg, self.n_local, |l| {
+                    is_exc[l as usize]
+                })
+                .expect("XLA solver rebuild on reset"),
             );
         }
         // keep construction-time figures, restart the run counters
@@ -444,17 +509,23 @@ impl RankProcess {
         self.metrics = EngineMetrics::default();
         (self.metrics.init_cpu_ns, self.metrics.synapses_resident, self.metrics.resident_bytes) =
             keep;
+        self.metrics.area_spikes = vec![0; self.stims.len()];
     }
 
-    /// Swap the external-stimulus parameters (rate sweeps / mid-run
-    /// stimulus switching). Streams keep their per-neuron state, so the
-    /// change is seamless mid-run: each neuron's next event is redrawn
-    /// under the new rate from the next step boundary. Combine with
-    /// [`reset`](Self::reset) for an independent replay under the new
-    /// drive.
+    /// Swap the *global* external-stimulus parameters (rate sweeps /
+    /// mid-run stimulus switching). Areas with their own external
+    /// override keep it; areas on the global drive follow the new one.
+    /// Streams keep their per-neuron state, so the change is seamless
+    /// mid-run: each neuron's next event is redrawn under the new rate
+    /// from the next step boundary. Combine with [`reset`](Self::reset)
+    /// for an independent replay under the new drive.
     pub fn set_external(&mut self, external: crate::config::ExternalParams) {
         self.cfg.external = external;
-        self.stim = ExternalStimulus::new(&self.cfg);
+        self.stims = self
+            .area_external
+            .iter()
+            .map(|o| ExternalStimulus::with_rate(&self.cfg, o.as_ref().unwrap_or(&self.cfg.external)))
+            .collect();
         self.reseed_calendar(self.queue.base_step());
     }
 
@@ -620,14 +691,20 @@ impl RankProcess {
             self.metrics.stop(Phase::Plasticity);
         }
 
+        // per-area spike totals (RunSummary's per-area breakdown)
+        for sp in &self.fired {
+            let area = self.col_area[self.local_col_pos[sp.local as usize] as usize];
+            self.metrics.area_spikes[area as usize] += 1;
+        }
+
         if self.observe {
-            let npc = self.grid.p.neurons_per_column;
             self.step_col_spikes.clear();
             self.step_col_spikes.resize(self.my_columns.len(), 0);
             for sp in &self.fired {
-                // local indices divide straight into column position —
-                // no gid→local search on the observe path either
-                self.step_col_spikes[(sp.local / npc) as usize] += 1;
+                // local indices map to column position through the
+                // precomputed table — no gid→local search on the
+                // observe path either
+                self.step_col_spikes[self.local_col_pos[sp.local as usize] as usize] += 1;
             }
         }
 
@@ -647,7 +724,6 @@ impl RankProcess {
         let t0 = step as f64 * self.cfg.dt_ms;
         let t1 = (step + 1) as f64 * self.cfg.dt_ms;
         let inv_dt = 1.0 / self.cfg.dt_ms;
-        let stim = self.stim;
         self.cal_buf.clear();
         self.stim_cal.take_step(step, &mut self.cal_buf);
         let mut cursor = 0usize; // recurrent events, sorted by target
@@ -672,6 +748,9 @@ impl RankProcess {
             // then put the first event beyond it back on the calendar
             self.ext_buf.clear();
             if ext_target == Some(local) {
+                // the neuron's own area drives it (per-area externals)
+                let stim =
+                    self.stims[self.col_area[self.local_col_pos[local as usize] as usize] as usize];
                 let mut t = self.cal_buf[ci].time_ms;
                 ci += 1;
                 let rng = &mut self.stim_streams[local as usize];
@@ -736,7 +815,6 @@ impl RankProcess {
         let t0 = step as f64 * self.cfg.dt_ms;
         let t1 = t0 + self.cfg.dt_ms;
         let inv_dt = 1.0 / self.cfg.dt_ms;
-        let stim = self.stim;
         let mut batch = self.batch.take().expect("batch solver present");
         // aggregate currents per neuron for this step
         batch.clear_currents();
@@ -748,6 +826,8 @@ impl RankProcess {
         self.cal_buf.clear();
         self.stim_cal.take_step(step, &mut self.cal_buf);
         for entry in &self.cal_buf {
+            let stim = self.stims
+                [self.col_area[self.local_col_pos[entry.local as usize] as usize] as usize];
             let mut t = entry.time_ms;
             let rng = &mut self.stim_streams[entry.local as usize];
             let mut n = 0u64;
@@ -794,7 +874,7 @@ impl RankProcess {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::geometry::Mapping;
+    use crate::geometry::{Grid, Mapping};
     use crate::mpi::run_cluster;
 
     fn tiny_cfg() -> SimConfig {

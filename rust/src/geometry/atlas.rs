@@ -1,0 +1,285 @@
+//! Atlas: an ordered set of named cortical areas.
+//!
+//! The paper simulates one grid of columns; multi-areal studies
+//! (Pastorelli et al. 2019, arXiv:1902.08410) compose several such
+//! grids and wire them with long-range projections. The [`Atlas`] is
+//! the geometry of that composition: each area keeps its own
+//! [`Grid`] and its own 2D coordinate frame, while the *global* column
+//! and neuron id spaces are the concatenation of the per-area ranges:
+//!
+//! ```text
+//! columns: [ area0: 0..c0 | area1: c0..c0+c1 | ... ]
+//! gids:    [ area0: 0..n0 | area1: n0..n0+n1 | ... ]
+//! ```
+//!
+//! A one-area atlas is therefore *bit-identical* to the legacy single
+//! grid: `col_base = 0`, `gid_base = 0`, and every per-neuron RNG
+//! stream (positions, synapses, stimulus) is keyed by the same global
+//! gid as before. Inter-areal distances are never evaluated — each
+//! projection maps source columns *topographically* into the target
+//! area's frame and spreads laterally there (see
+//! `connectivity::builder`).
+
+use crate::config::GridParams;
+use crate::geometry::grid::{stream, ColumnId, Grid, NeuronId};
+use crate::util::prng::Pcg64;
+
+/// One named area of the atlas: its grid plus the bases of its column
+/// and neuron-id ranges in the concatenated global spaces.
+#[derive(Clone, Debug)]
+pub struct Area {
+    pub name: String,
+    pub grid: Grid,
+    /// First global column id of this area.
+    pub col_base: ColumnId,
+    /// First global neuron id of this area.
+    pub gid_base: NeuronId,
+}
+
+impl Area {
+    /// Global column ids of this area (contiguous range).
+    pub fn col_range(&self) -> std::ops::Range<ColumnId> {
+        self.col_base..self.col_base + self.grid.columns()
+    }
+
+    /// Global neuron ids of this area (contiguous range).
+    pub fn gid_range(&self) -> std::ops::Range<NeuronId> {
+        self.gid_base..self.gid_base + self.grid.neurons()
+    }
+}
+
+/// Ordered set of areas with concatenated global id spaces.
+#[derive(Clone, Debug)]
+pub struct Atlas {
+    areas: Vec<Area>,
+    total_cols: u32,
+    total_neurons: u64,
+}
+
+impl Atlas {
+    /// Compose an atlas from named grids, in order.
+    pub fn new(areas: Vec<(String, GridParams)>) -> Self {
+        assert!(!areas.is_empty(), "atlas needs at least one area");
+        let mut out = Vec::with_capacity(areas.len());
+        let mut col_base: u64 = 0;
+        let mut gid_base: u64 = 0;
+        for (name, p) in areas {
+            let grid = Grid::new(p);
+            assert!(
+                col_base + grid.columns() as u64 <= u32::MAX as u64,
+                "atlas column space exceeds u32"
+            );
+            out.push(Area { name, grid, col_base: col_base as u32, gid_base });
+            col_base += grid.columns() as u64;
+            gid_base += grid.neurons();
+        }
+        Atlas { areas: out, total_cols: col_base as u32, total_neurons: gid_base }
+    }
+
+    /// The legacy single-grid world as a one-area atlas.
+    pub fn single(p: GridParams) -> Self {
+        Atlas::new(vec![("area0".to_string(), p)])
+    }
+
+    pub fn len(&self) -> usize {
+        self.areas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // Atlas::new asserts at least one area
+    }
+
+    pub fn areas(&self) -> &[Area] {
+        &self.areas
+    }
+
+    pub fn area(&self, i: usize) -> &Area {
+        &self.areas[i]
+    }
+
+    /// Index of the area with the given name.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.areas.iter().position(|a| a.name == name)
+    }
+
+    /// Total columns across all areas.
+    pub fn columns(&self) -> u32 {
+        self.total_cols
+    }
+
+    /// Total neurons across all areas.
+    pub fn neurons(&self) -> u64 {
+        self.total_neurons
+    }
+
+    /// Area owning a global column id.
+    #[inline]
+    pub fn area_of_column(&self, col: ColumnId) -> usize {
+        debug_assert!(col < self.total_cols);
+        // partition_point over the sorted col_base array
+        self.areas.partition_point(|a| a.col_base <= col) - 1
+    }
+
+    /// (area index, in-area column id) of a global column id.
+    #[inline]
+    pub fn col_area_local(&self, col: ColumnId) -> (usize, ColumnId) {
+        let i = self.area_of_column(col);
+        (i, col - self.areas[i].col_base)
+    }
+
+    /// Global column id of an in-area column.
+    #[inline]
+    pub fn global_column(&self, area: usize, local_col: ColumnId) -> ColumnId {
+        debug_assert!(local_col < self.areas[area].grid.columns());
+        self.areas[area].col_base + local_col
+    }
+
+    /// Area owning a global neuron id.
+    #[inline]
+    pub fn area_of_gid(&self, gid: NeuronId) -> usize {
+        debug_assert!(gid < self.total_neurons);
+        self.areas.partition_point(|a| a.gid_base <= gid) - 1
+    }
+
+    /// Global neuron id from (global column, in-column index).
+    #[inline]
+    pub fn neuron_id(&self, col: ColumnId, local: u32) -> NeuronId {
+        let (i, acol) = self.col_area_local(col);
+        let a = &self.areas[i];
+        a.gid_base + a.grid.neuron_id(acol, local)
+    }
+
+    /// Global column of a global neuron id.
+    #[inline]
+    pub fn neuron_column(&self, gid: NeuronId) -> ColumnId {
+        let i = self.area_of_gid(gid);
+        let a = &self.areas[i];
+        a.col_base + a.grid.neuron_column(gid - a.gid_base)
+    }
+
+    /// In-column index of a global neuron id.
+    #[inline]
+    pub fn neuron_local(&self, gid: NeuronId) -> u32 {
+        let i = self.area_of_gid(gid);
+        let a = &self.areas[i];
+        a.grid.neuron_local(gid - a.gid_base)
+    }
+
+    /// Excitatory split by the owning area's `exc_fraction`.
+    #[inline]
+    pub fn is_excitatory(&self, gid: NeuronId) -> bool {
+        let i = self.area_of_gid(gid);
+        let a = &self.areas[i];
+        a.grid.is_excitatory(gid - a.gid_base)
+    }
+
+    /// Deterministic neuron position **in its area's own frame** [µm]:
+    /// column origin + uniform jitter inside the α×α square. The jitter
+    /// stream is keyed by the *global* gid, so every neuron of the
+    /// atlas gets an independent draw — and a one-area atlas reproduces
+    /// `Grid::neuron_position` bit-for-bit (gid_base = 0).
+    pub fn neuron_position(&self, seed: u64, gid: NeuronId) -> (f64, f64) {
+        let i = self.area_of_gid(gid);
+        let a = &self.areas[i];
+        let local_gid = gid - a.gid_base;
+        let (cx, cy) = a.grid.column_coords(a.grid.neuron_column(local_gid));
+        let mut rng = Pcg64::for_entity(seed, gid, stream::POSITION);
+        let alpha = a.grid.p.spacing_um;
+        (cx as f64 * alpha + rng.next_f64() * alpha, cy as f64 * alpha + rng.next_f64() * alpha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GridParams;
+
+    fn p(side: u32, npc: u32) -> GridParams {
+        GridParams { neurons_per_column: npc, ..GridParams::square(side) }
+    }
+
+    fn two_area() -> Atlas {
+        Atlas::new(vec![("v1".into(), p(4, 50)), ("v2".into(), p(3, 20))])
+    }
+
+    #[test]
+    fn concatenated_ranges_partition_the_id_spaces() {
+        let a = two_area();
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.columns(), 16 + 9);
+        assert_eq!(a.neurons(), 16 * 50 + 9 * 20);
+        assert_eq!(a.area(0).col_range(), 0..16);
+        assert_eq!(a.area(1).col_range(), 16..25);
+        assert_eq!(a.area(0).gid_range(), 0..800);
+        assert_eq!(a.area(1).gid_range(), 800..980);
+        assert_eq!(a.index_of("v2"), Some(1));
+        assert_eq!(a.index_of("nope"), None);
+    }
+
+    #[test]
+    fn column_and_gid_lookups_roundtrip() {
+        let a = two_area();
+        for col in 0..a.columns() {
+            let (i, acol) = a.col_area_local(col);
+            assert_eq!(a.global_column(i, acol), col);
+            assert_eq!(a.area_of_column(col), i);
+            let npc = a.area(i).grid.p.neurons_per_column;
+            for local in [0, npc - 1] {
+                let gid = a.neuron_id(col, local);
+                assert_eq!(a.area_of_gid(gid), i);
+                assert_eq!(a.neuron_column(gid), col);
+                assert_eq!(a.neuron_local(gid), local);
+            }
+        }
+        // gids are dense: every id below neurons() maps back consistently
+        for gid in 0..a.neurons() {
+            let col = a.neuron_column(gid);
+            let local = a.neuron_local(gid);
+            assert_eq!(a.neuron_id(col, local), gid);
+        }
+    }
+
+    #[test]
+    fn one_area_atlas_matches_the_legacy_grid() {
+        let gp = p(5, 40);
+        let atlas = Atlas::single(gp);
+        let grid = Grid::new(gp);
+        assert_eq!(atlas.columns(), grid.columns());
+        assert_eq!(atlas.neurons(), grid.neurons());
+        for gid in 0..grid.neurons() {
+            assert_eq!(atlas.neuron_column(gid), grid.neuron_column(gid));
+            assert_eq!(atlas.neuron_local(gid), grid.neuron_local(gid));
+            assert_eq!(atlas.is_excitatory(gid), grid.is_excitatory(gid));
+            let (ax, ay) = atlas.neuron_position(42, gid);
+            let (gx, gy) = grid.neuron_position(42, gid);
+            assert_eq!(ax.to_bits(), gx.to_bits(), "position x differs at gid {gid}");
+            assert_eq!(ay.to_bits(), gy.to_bits(), "position y differs at gid {gid}");
+        }
+    }
+
+    #[test]
+    fn positions_stay_in_each_areas_own_frame() {
+        let a = two_area();
+        // an area-1 neuron's position lies inside area 1's own grid
+        // extent, not offset by area 0's frame
+        let gid = a.area(1).gid_base; // first neuron of v2, column (0,0)
+        let (x, y) = a.neuron_position(7, gid);
+        let alpha = a.area(1).grid.p.spacing_um;
+        assert!(x >= 0.0 && x < alpha, "x {x} outside column 0");
+        assert!(y >= 0.0 && y < alpha, "y {y} outside column 0");
+    }
+
+    #[test]
+    fn excitatory_split_follows_each_area() {
+        let mut gp2 = p(2, 10);
+        gp2.exc_fraction = 0.5;
+        let a = Atlas::new(vec![("a".into(), p(2, 10)), ("b".into(), gp2)]);
+        // area a: 8 exc of 10; area b: 5 exc of 10
+        let exc0 = (0..10).filter(|&l| a.is_excitatory(a.neuron_id(0, l))).count();
+        let first_b_col = a.area(1).col_base;
+        let exc1 =
+            (0..10).filter(|&l| a.is_excitatory(a.neuron_id(first_b_col, l))).count();
+        assert_eq!(exc0, 8);
+        assert_eq!(exc1, 5);
+    }
+}

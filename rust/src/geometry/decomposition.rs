@@ -8,6 +8,7 @@
 //! round-robin ("card dealer") mapping used by the mapping ablation
 //! bench to show *why* spatial contiguity matters.
 
+use crate::geometry::atlas::Atlas;
 use crate::geometry::grid::{ColumnId, Grid};
 
 /// Mapping strategy.
@@ -66,51 +67,86 @@ fn chunk_bounds(n: u32, parts: u32) -> Vec<u32> {
     bounds
 }
 
-impl Decomposition {
-    pub fn new(grid: &Grid, ranks: u32, mapping: Mapping) -> Self {
-        assert!(ranks >= 1 && ranks as u64 <= grid.columns() as u64);
-        let ncols = grid.columns();
-        let mut col_to_rank = vec![0u32; ncols as usize];
-        match mapping {
-            Mapping::RoundRobin => {
-                for c in 0..ncols {
-                    col_to_rank[c as usize] = c % ranks;
-                }
+/// Fill `col_to_rank[base..base + grid.columns()]` with one grid's
+/// column→rank assignment (indices within the slice are in-grid column
+/// ids). This is the legacy single-grid logic, reused per area by
+/// [`Decomposition::for_atlas`].
+fn fill_grid(grid: &Grid, ranks: u32, mapping: Mapping, col_to_rank: &mut [u32], base: usize) {
+    let ncols = grid.columns();
+    match mapping {
+        Mapping::RoundRobin => {
+            for c in 0..ncols {
+                col_to_rank[base + c as usize] = c % ranks;
             }
-            Mapping::Block => {
-                // Orient the factorization with the grid: more tiles along
-                // the longer grid side.
-                let (fa, fb) = squarest_factors(ranks);
-                let (tiles_x, tiles_y) =
-                    if grid.p.nx >= grid.p.ny { (fb.max(fa), fb.min(fa)) } else { (fb.min(fa), fb.max(fa)) };
-                // A factorization may not fit a non-square grid (e.g. 1×N
-                // grid with ranks needing 2 rows): clamp by re-splitting.
-                match fit_tiles(grid.p.nx, grid.p.ny, tiles_x, tiles_y, ranks) {
-                    Some((tiles_x, tiles_y)) => {
-                        let bx = chunk_bounds(grid.p.nx, tiles_x);
-                        let by = chunk_bounds(grid.p.ny, tiles_y);
-                        for cy in 0..grid.p.ny {
-                            let ty = by.partition_point(|&b| b <= cy) as u32 - 1;
-                            for cx in 0..grid.p.nx {
-                                let tx = bx.partition_point(|&b| b <= cx) as u32 - 1;
-                                let rank = ty * tiles_x + tx;
-                                col_to_rank[grid.column_index(cx, cy) as usize] = rank;
-                            }
+        }
+        Mapping::Block => {
+            // Orient the factorization with the grid: more tiles along
+            // the longer grid side.
+            let (fa, fb) = squarest_factors(ranks);
+            let (tiles_x, tiles_y) =
+                if grid.p.nx >= grid.p.ny { (fb.max(fa), fb.min(fa)) } else { (fb.min(fa), fb.max(fa)) };
+            // A factorization may not fit a non-square grid (e.g. 1×N
+            // grid with ranks needing 2 rows): clamp by re-splitting.
+            match fit_tiles(grid.p.nx, grid.p.ny, tiles_x, tiles_y, ranks) {
+                Some((tiles_x, tiles_y)) => {
+                    let bx = chunk_bounds(grid.p.nx, tiles_x);
+                    let by = chunk_bounds(grid.p.ny, tiles_y);
+                    for cy in 0..grid.p.ny {
+                        let ty = by.partition_point(|&b| b <= cy) as u32 - 1;
+                        for cx in 0..grid.p.nx {
+                            let tx = bx.partition_point(|&b| b <= cx) as u32 - 1;
+                            let rank = ty * tiles_x + tx;
+                            col_to_rank[base + grid.column_index(cx, cy) as usize] = rank;
                         }
                     }
-                    None => {
-                        // No rectangular tiling fits (e.g. 3 ranks on 2×2):
-                        // fall back to contiguous chunks along a snake
-                        // (boustrophedon) order, which stays spatially local.
-                        let bounds = chunk_bounds(ncols, ranks);
-                        for (i, &col) in snake_order(grid).iter().enumerate() {
-                            let rank = bounds.partition_point(|&b| b <= i as u32) as u32 - 1;
-                            col_to_rank[col as usize] = rank;
-                        }
+                }
+                None => {
+                    // No rectangular tiling fits (e.g. 3 ranks on 2×2):
+                    // fall back to contiguous chunks along a snake
+                    // (boustrophedon) order, which stays spatially local.
+                    let bounds = chunk_bounds(ncols, ranks);
+                    for (i, &col) in snake_order(grid).iter().enumerate() {
+                        let rank = bounds.partition_point(|&b| b <= i as u32) as u32 - 1;
+                        col_to_rank[base + col as usize] = rank;
                     }
                 }
             }
         }
+    }
+}
+
+impl Decomposition {
+    pub fn new(grid: &Grid, ranks: u32, mapping: Mapping) -> Self {
+        assert!(ranks >= 1 && ranks as u64 <= grid.columns() as u64);
+        let mut col_to_rank = vec![0u32; grid.columns() as usize];
+        fill_grid(grid, ranks, mapping, &mut col_to_rank, 0);
+        Self::from_col_to_rank(ranks, mapping, col_to_rank)
+    }
+
+    /// Decompose an [`Atlas`]: every area is split over *all* ranks with
+    /// the legacy per-grid mapping, applied in that area's own frame.
+    /// Each rank therefore holds spatially-contiguous columns of one or
+    /// more areas — intra-areal stencils stay rank-local-heavy exactly
+    /// as in the single-grid case, and a one-area atlas reproduces the
+    /// legacy decomposition bit-for-bit.
+    pub fn for_atlas(atlas: &Atlas, ranks: u32, mapping: Mapping) -> Self {
+        assert!(ranks >= 1, "need at least one rank");
+        for a in atlas.areas() {
+            assert!(
+                ranks as u64 <= a.grid.columns() as u64,
+                "ranks ({ranks}) exceed columns ({}) of area '{}'",
+                a.grid.columns(),
+                a.name
+            );
+        }
+        let mut col_to_rank = vec![0u32; atlas.columns() as usize];
+        for a in atlas.areas() {
+            fill_grid(&a.grid, ranks, mapping, &mut col_to_rank, a.col_base as usize);
+        }
+        Self::from_col_to_rank(ranks, mapping, col_to_rank)
+    }
+
+    fn from_col_to_rank(ranks: u32, mapping: Mapping, col_to_rank: Vec<u32>) -> Self {
         let mut rank_cols = vec![Vec::new(); ranks as usize];
         for (c, &r) in col_to_rank.iter().enumerate() {
             rank_cols[r as usize].push(c as ColumnId);
@@ -142,6 +178,28 @@ impl Decomposition {
         let mut out = Vec::with_capacity(cols.len() * npc as usize);
         for &col in cols {
             let base = grid.neuron_id(col, 0);
+            debug_assert!(base + npc as u64 - 1 <= u32::MAX as u64, "gid exceeds AER u32");
+            for l in 0..npc as u64 {
+                out.push((base + l) as u32);
+            }
+        }
+        out
+    }
+
+    /// Atlas-aware sibling of [`local_gid_table`](Self::local_gid_table):
+    /// the rank-local neuron index → global gid table over the
+    /// concatenated per-area gid ranges. Column sizes may differ per
+    /// area, so local indices follow a per-column CSR rather than a
+    /// uniform `columns × npc` stride. For a one-area atlas the table is
+    /// identical to the legacy one.
+    pub fn local_gid_table_atlas(&self, atlas: &Atlas, rank: u32) -> Vec<u32> {
+        let cols = self.columns_of_rank(rank);
+        let mut out = Vec::new();
+        for &col in cols {
+            let (ai, acol) = atlas.col_area_local(col);
+            let a = atlas.area(ai);
+            let npc = a.grid.p.neurons_per_column;
+            let base = a.gid_base + a.grid.neuron_id(acol, 0);
             debug_assert!(base + npc as u64 - 1 <= u32::MAX as u64, "gid exceeds AER u32");
             for l in 0..npc as u64 {
                 out.push((base + l) as u32);
@@ -324,6 +382,84 @@ mod tests {
             }
             assert_eq!(seen, g.neurons());
         }
+    }
+
+    #[test]
+    fn atlas_decomposition_partitions_each_area_over_all_ranks() {
+        use crate::geometry::atlas::Atlas;
+        let p = |side: u32, npc: u32| GridParams {
+            neurons_per_column: npc,
+            ..GridParams::square(side)
+        };
+        let atlas = Atlas::new(vec![("a".into(), p(6, 30)), ("b".into(), p(4, 10))]);
+        for mapping in [Mapping::Block, Mapping::RoundRobin] {
+            let d = Decomposition::for_atlas(&atlas, 4, mapping);
+            // partition over the whole concatenated column space
+            let mut seen = vec![false; atlas.columns() as usize];
+            for r in 0..4 {
+                for &c in d.columns_of_rank(r) {
+                    assert!(!seen[c as usize]);
+                    seen[c as usize] = true;
+                    assert_eq!(d.rank_of_column(c), r);
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+            // every rank holds columns of BOTH areas
+            for r in 0..4 {
+                let cols = d.columns_of_rank(r);
+                assert!(cols.iter().any(|&c| c < 36), "rank {r} missing area a");
+                assert!(cols.iter().any(|&c| c >= 36), "rank {r} missing area b");
+            }
+        }
+    }
+
+    #[test]
+    fn one_area_atlas_decomposition_matches_legacy() {
+        use crate::geometry::atlas::Atlas;
+        let g = grid(6);
+        let atlas = Atlas::single(g.p);
+        for mapping in [Mapping::Block, Mapping::RoundRobin] {
+            for ranks in [1u32, 2, 4] {
+                let legacy = Decomposition::new(&g, ranks, mapping);
+                let via_atlas = Decomposition::for_atlas(&atlas, ranks, mapping);
+                for c in 0..g.columns() {
+                    assert_eq!(legacy.rank_of_column(c), via_atlas.rank_of_column(c));
+                }
+                for r in 0..ranks {
+                    assert_eq!(
+                        legacy.local_gid_table(&g, r),
+                        via_atlas.local_gid_table_atlas(&atlas, r)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn atlas_gid_table_follows_the_per_column_csr() {
+        use crate::geometry::atlas::Atlas;
+        let p = |side: u32, npc: u32| GridParams {
+            neurons_per_column: npc,
+            ..GridParams::square(side)
+        };
+        let atlas = Atlas::new(vec![("a".into(), p(4, 12)), ("b".into(), p(4, 5))]);
+        let d = Decomposition::for_atlas(&atlas, 2, Mapping::Block);
+        let mut seen = 0u64;
+        for rank in 0..2 {
+            let table = d.local_gid_table_atlas(&atlas, rank);
+            let mut k = 0usize;
+            for &col in d.columns_of_rank(rank) {
+                let (ai, _) = atlas.col_area_local(col);
+                let npc = atlas.area(ai).grid.p.neurons_per_column;
+                for l in 0..npc {
+                    assert_eq!(table[k] as u64, atlas.neuron_id(col, l));
+                    k += 1;
+                }
+            }
+            assert_eq!(k, table.len());
+            seen += table.len() as u64;
+        }
+        assert_eq!(seen, atlas.neurons());
     }
 
     #[test]

@@ -23,6 +23,19 @@ pub mod stream {
     pub const SYNAPSES: u64 = 0x02;
     pub const EXTERNAL: u64 = 0x03;
     pub const INIT_STATE: u64 = 0x04;
+    /// Inter-areal projection synapses. Each projection of the atlas
+    /// gets its own per-source-neuron stream via
+    /// [`projection`](projection); intra-areal [`SYNAPSES`] streams are
+    /// untouched, which is what keeps a one-area atlas bit-identical to
+    /// the single-grid path.
+    pub const PROJECTION: u64 = 0x05;
+
+    /// Stream tag of projection `index` (tags below 0x100 are reserved
+    /// for the base namespaces above).
+    #[inline]
+    pub fn projection(index: usize) -> u64 {
+        PROJECTION | ((index as u64 + 1) << 8)
+    }
 }
 
 /// Column index in row-major order.

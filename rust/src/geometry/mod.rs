@@ -1,7 +1,10 @@
-//! Grid geometry and the column→rank spatial decomposition.
+//! Grid geometry, the multi-area atlas, and the column→rank spatial
+//! decomposition.
 
+pub mod atlas;
 pub mod decomposition;
 pub mod grid;
 
+pub use atlas::{Area, Atlas};
 pub use decomposition::{Decomposition, Mapping};
 pub use grid::{ColumnId, Grid, NeuronId};

@@ -45,7 +45,13 @@
 //!   the paper's Gaussian/exponential plus doubly-exponential and
 //!   flat-disc profiles ship built-in, custom kernels plug in through
 //!   the same machinery (cutoff stencils, envelope thinning, Table I
-//!   analytics).
+//!   analytics);
+//! * [`Atlas`] — multi-area composition: named areas (each its own
+//!   grid + intra-areal kernel) wired by typed inter-areal projections
+//!   (`SimulationBuilder::area`/`project`, `[[area]]`/`[[projection]]`
+//!   in TOML, per-area probes and `RunSummary` totals; see
+//!   `examples/two_areas.rs`). A one-area atlas **is** the legacy
+//!   single-grid world, bit for bit.
 //!
 //! ### Migration from v0.1
 //!
@@ -86,11 +92,13 @@ pub mod perfmodel;
 pub mod bench_harness;
 pub mod repro;
 
-pub use config::SimConfig;
+pub use config::{AreaParams, ProjectionParams, SimConfig};
 pub use connectivity::ConnectivityKernel;
 #[allow(deprecated)]
 pub use coordinator::run_simulation;
-pub use coordinator::{Network, RunSummary, Session, SimulationBuilder};
+pub use coordinator::{AreaTotals, Network, RunSummary, Session, SimulationBuilder};
 pub use engine::{
-    ActivityProbe, FiringRateProbe, PhaseMetricsProbe, Probe, SpikeCountProbe, StepSample,
+    ActivityProbe, AreaRateProbe, AreaSpan, AreaSpikeCountProbe, FiringRateProbe,
+    PhaseMetricsProbe, Probe, SpikeCountProbe, StepSample,
 };
+pub use geometry::Atlas;

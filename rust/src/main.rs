@@ -108,14 +108,24 @@ fn parts_from_args(a: &Args) -> Result<(SimConfig, RunOptions), String> {
 
 fn cmd_run(a: &Args) -> Result<(), String> {
     let (cfg, opts) = parts_from_args(a)?;
-    eprintln!(
-        "running {}x{} {} on {} ranks, {} ms ...",
-        cfg.grid.nx,
-        cfg.grid.ny,
-        cfg.kernel_name(),
-        cfg.ranks,
-        cfg.duration_ms
-    );
+    if cfg.areas.is_empty() {
+        eprintln!(
+            "running {}x{} {} on {} ranks, {} ms ...",
+            cfg.grid.nx,
+            cfg.grid.ny,
+            cfg.kernel_name(),
+            cfg.ranks,
+            cfg.duration_ms
+        );
+    } else {
+        eprintln!(
+            "running {}-area atlas ({} projections) on {} ranks, {} ms ...",
+            cfg.areas.len(),
+            cfg.projections.len(),
+            cfg.ranks,
+            cfg.duration_ms
+        );
+    }
     let duration_ms = cfg.duration_ms;
     let record_activity = opts.record_activity;
     // staged pipeline: construct once, then drive one session
@@ -133,6 +143,17 @@ fn cmd_run(a: &Args) -> Result<(), String> {
     println!("synapses:           {}", s.synapses());
     println!("spikes:             {}", s.spikes());
     println!("firing rate:        {:.2} Hz", s.firing_rate_hz());
+    if s.area_totals.len() > 1 {
+        for a in &s.area_totals {
+            println!(
+                "  area {:<12} {:>10} neurons  {:>10} spikes  {:.2} Hz",
+                a.name,
+                a.neurons,
+                a.spikes,
+                a.firing_rate_hz(s.duration_ms)
+            );
+        }
+    }
     println!("equivalent events:  {}", s.equivalent_events());
     println!("cost (1-core CPU):  {:.1} ns/event", s.total_cpu_ns_per_event());
     println!("peak memory:        {:.1} B/synapse", s.peak_bytes_per_synapse());

@@ -215,6 +215,14 @@ impl BatchSolver {
             .to_string())
     }
 
+    pub fn with_populations(
+        cfg: &SimConfig,
+        n_local: u32,
+        _is_exc: impl Fn(u32) -> bool,
+    ) -> Result<Self, String> {
+        Self::new(cfg, n_local)
+    }
+
     pub fn batch(&self) -> usize {
         unreachable!("stub BatchSolver cannot be constructed")
     }

@@ -49,11 +49,15 @@ pub struct ExternalStimulus {
 
 impl ExternalStimulus {
     pub fn new(cfg: &SimConfig) -> Self {
+        Self::with_rate(cfg, &cfg.external)
+    }
+
+    /// Stimulus with an explicit rate bundle (per-area external
+    /// overrides); efficacy, dt and seed still come from `cfg`, so the
+    /// per-neuron streams are shared across all of a run's stimuli.
+    pub fn with_rate(cfg: &SimConfig, ext: &crate::config::ExternalParams) -> Self {
         ExternalStimulus {
-            lambda_per_step: cfg.external.synapses_per_neuron as f64
-                * cfg.external.rate_hz
-                * cfg.dt_ms
-                / 1000.0,
+            lambda_per_step: ext.synapses_per_neuron as f64 * ext.rate_hz * cfg.dt_ms / 1000.0,
             j_ext: cfg.syn.j_ext_mv as f32,
             dt_ms: cfg.dt_ms,
             seed: cfg.seed,
