@@ -1,0 +1,108 @@
+//! Two-area slow-wave study (arXiv:1902.08410-style): a strongly
+//! adapting "sws" area beside an awake-like "wake" area, each with its
+//! own neuron model and external drive, swept mid-run.
+//!
+//! The composition exercises every heterogeneity axis of PR 5:
+//!
+//! * **per-area neuron models** — `sws` quadruples the SFA coupling
+//!   (`g_c_over_cm`) and slows the fatigue decay (`tau_c_ms`), the
+//!   adaptation regime that produces cortical slow oscillations; `wake`
+//!   keeps the paper's awake-like parameters;
+//! * **per-area drives** — `sws` runs on its own Poisson bundle while
+//!   `wake` follows the global drive;
+//! * **mid-run per-area sweep** — `Network::set_area_external` drops
+//!   the `sws` drive only (wake is untouched, bit for bit), modeling a
+//!   falling-asleep transition of one area;
+//! * **upsampling topography** — `sws` (6×6) feeds back into the
+//!   *larger* `wake` (12×12) through a 1:2 upsampling stride, so the
+//!   feedback lands topographically instead of leaning on kernel
+//!   spread; the feedforward runs 2:1 the other way.
+//!
+//! Run: `cargo run --release --example slow_wave_two_areas`
+
+use dpsnn::config::{AreaParams, GridParams, NeuronParams};
+use dpsnn::{AreaRateProbe, Probe, ProjectionParams, SimulationBuilder};
+
+fn main() {
+    let wake_grid = GridParams { neurons_per_column: 120, ..GridParams::square(12) };
+    let sws_grid = GridParams { neurons_per_column: 120, ..GridParams::square(6) };
+
+    // slow-wave regime: strong, slowly-decaying spike-frequency
+    // adaptation on the excitatory population
+    let mut sws_exc = NeuronParams::excitatory();
+    sws_exc.g_c_over_cm = 0.08; // 4x the awake adaptation strength
+    sws_exc.tau_c_ms = 500.0;
+
+    let builder = SimulationBuilder::gaussian(12)
+        .external(100, 40.0) // the wake drive (global)
+        .area("wake", wake_grid)
+        .area_with(
+            AreaParams::new("sws", sws_grid)
+                .exc_model(sws_exc)
+                .external(100, 70.0), // its own, hotter drive
+        )
+        // feedforward wake -> sws: 2:1 topographic downsampling
+        .project(ProjectionParams::new("wake", "sws").stride(2, 2).delay(3.0, 1000.0))
+        // feedback sws -> wake: 1:2 UPSAMPLING into the larger area
+        .project(
+            ProjectionParams::new("sws", "wake")
+                .upsample(2, 2)
+                .weight_scale(2.0)
+                .delay(5.0, 1000.0),
+        )
+        .ranks(2);
+
+    println!(
+        "slow-wave atlas: {} areas, {} projections, {} neurons total",
+        builder.config().areas.len(),
+        builder.config().projections.len(),
+        builder.config().total_neurons(),
+    );
+
+    let mut net = builder.build().expect("atlas construction");
+    println!("synapses:          {:>12}", net.synapses());
+
+    let mut rates = AreaRateProbe::new(net.area_spans(), 50.0);
+
+    // phase 1: both areas driven (sws hotter + strongly adapting)
+    {
+        let mut session = net.session();
+        session.attach(&mut rates);
+        session.advance(200.0);
+    }
+    let spikes_at_sweep = net.summary().area_totals[0].spikes;
+
+    // phase 2: drop ONLY the sws drive mid-run (the falling-asleep
+    // sweep) — wake's stimulus streams and calendar are untouched
+    net.set_area_external("sws", 100, 15.0).expect("sws sweep");
+    {
+        let mut session = net.session();
+        session.attach(&mut rates);
+        session.advance(200.0);
+    }
+
+    let s = net.summary();
+    println!("spikes:            {:>12}", s.spikes());
+    println!("per-area totals:");
+    for a in &s.area_totals {
+        println!(
+            "  {:<4} {:>9} neurons  {:>9} spikes  {:>7.2} Hz",
+            a.name,
+            a.neurons,
+            a.spikes,
+            a.firing_rate_hz(s.duration_ms)
+        );
+    }
+    println!();
+    println!("{}", rates.report());
+    println!();
+    println!("windowed rates (50 ms), sweep after window 4:");
+    for (i, span) in net.area_spans().iter().enumerate() {
+        let r: Vec<f64> =
+            rates.rates_hz(i).iter().map(|v| (v * 10.0).round() / 10.0).collect();
+        println!("  {:<4} {:?}", span.name, r);
+    }
+
+    assert!(s.area_totals[0].spikes > spikes_at_sweep, "wake must keep firing after the sweep");
+    assert!(s.area_totals[1].spikes > 0, "sws must fire under its own drive");
+}

@@ -14,7 +14,7 @@
 //!
 //! Run: `cargo run --release --example two_areas`
 
-use dpsnn::config::{AreaParams, ConnParams, ExternalParams, GridParams};
+use dpsnn::config::{AreaParams, ConnParams, GridParams};
 use dpsnn::{AreaRateProbe, AreaSpikeCountProbe, Probe, ProjectionParams, SimulationBuilder};
 
 fn main() {
@@ -26,13 +26,8 @@ fn main() {
     let builder = SimulationBuilder::gaussian(8)
         .external(100, 60.0) // the v1 drive (v2 overrides it to zero)
         .area("v1", grid)
-        .area_with(AreaParams {
-            name: "v2".into(),
-            grid,
-            conn: ConnParams::gaussian(),
-            kernel: None,
-            external: Some(ExternalParams { synapses_per_neuron: 0, rate_hz: 0.0 }),
-        })
+        // silent area: only the feedforward projection drives it
+        .area_with(AreaParams::new("v2", grid).external(0, 0.0))
         .project(
             ProjectionParams::new("v1", "v2")
                 .conn(ff_conn)

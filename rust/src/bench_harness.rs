@@ -5,7 +5,7 @@
 //! `dpsnn bench` standard matrix that records the repo's perf
 //! trajectory into `BENCH.json` (see docs/PERF.md).
 
-use crate::config::{GridParams, ProjectionParams};
+use crate::config::{AreaParams, GridParams, NeuronParams, ProjectionParams};
 use crate::coordinator::session::construct_pairs;
 use crate::coordinator::{Network, SimulationBuilder};
 use crate::engine::probe::SpikeCountProbe;
@@ -359,6 +359,33 @@ fn bench_cell(kernel: &'static str, ranks: u32, p: &BenchParams) -> BenchCell {
                 .project(ProjectionParams::new("v1", "v2"))
                 .project(ProjectionParams::new("v2", "v1"))
         }
+        // heterogeneous atlas (schema 4): a strongly-adapting area with
+        // its own drive beside the default model, wired by a 2:1
+        // downsampling feedforward and a 1:2 upsampling feedback — the
+        // per-area-model resolution and rational-stride construction as
+        // one matrix entry
+        "two-area-het" => {
+            let g = GridParams {
+                neurons_per_column: p.npc,
+                ..GridParams::square(p.side)
+            };
+            let half = GridParams {
+                neurons_per_column: p.npc,
+                ..GridParams::square((p.side / 2).max(2))
+            };
+            let mut slow_exc = NeuronParams::excitatory();
+            slow_exc.g_c_over_cm = 0.08; // 4× adaptation strength
+            slow_exc.tau_c_ms = 500.0;
+            SimulationBuilder::gaussian(p.side)
+                .area("wake", g)
+                .area_with(
+                    AreaParams::new("sws", half)
+                        .exc_model(slow_exc)
+                        .external(p.ext_syn, p.ext_hz * 1.5),
+                )
+                .project(ProjectionParams::new("wake", "sws").stride(2, 2))
+                .project(ProjectionParams::new("sws", "wake").upsample(2, 2))
+        }
         _ => SimulationBuilder::gaussian(p.side),
     };
     let mut net = builder
@@ -605,6 +632,9 @@ pub fn run_bench_with(quick: bool, p: &BenchParams) -> BenchReport {
     // one multi-area entry (schema 3): atlas construction + inter-areal
     // spike traffic on the middle rank count
     cells.push(bench_cell("two-area", p.ranks[1], p));
+    // one heterogeneous entry (schema 4): per-area neuron models +
+    // per-area drive + rational-stride topography on the same rank count
+    cells.push(bench_cell("two-area-het", p.ranks[1], p));
     BenchReport {
         quick,
         cells,
@@ -674,13 +704,15 @@ impl BenchReport {
         out
     }
 
-    /// Machine record (`BENCH.json`): schema 3. Hand-rolled writer —
-    /// the offline image has no serde. Schema 3 adds the `two-area`
-    /// matrix entry and records the *batched* probed-advance path in
-    /// `executor_spawn_vs_pool` (one Run command per K-step batch);
-    /// schema 2 dropped the retired `demux_microbench` legacy fields
-    /// and added `dynamics_grouping`/`executor_spawn_vs_pool`. See
-    /// docs/PERF.md for how to read every schema.
+    /// Machine record (`BENCH.json`): schema 4. Hand-rolled writer —
+    /// the offline image has no serde. Schema 4 adds the heterogeneous
+    /// `two-area-het` matrix entry (per-area neuron models + drives,
+    /// rational-stride topography); schema 3 added the `two-area` entry
+    /// and batched probed advances; schema 2 dropped the retired
+    /// `demux_microbench` legacy fields and added `dynamics_grouping`/
+    /// `executor_spawn_vs_pool`. `--compare` matches records by name,
+    /// so older baselines stay comparable. See docs/PERF.md for how to
+    /// read every schema.
     pub fn to_json(&self) -> String {
         let unix_s = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
@@ -688,7 +720,7 @@ impl BenchReport {
             .unwrap_or(0);
         let mut s = String::new();
         s.push_str("{\n");
-        s.push_str("  \"schema\": 3,\n");
+        s.push_str("  \"schema\": 4,\n");
         s.push_str(&format!("  \"created_unix_s\": {unix_s},\n"));
         s.push_str(&format!("  \"quick\": {},\n", self.quick));
         s.push_str("  \"matrix\": [\n");
@@ -888,7 +920,11 @@ mod tests {
         // JSON schema are what's under test, not the numbers
         let p = tiny_params();
         let report = run_bench_with(true, &p);
-        assert_eq!(report.cells.len(), 7, "2 kernels x 3 rank counts + two-area");
+        assert_eq!(
+            report.cells.len(),
+            8,
+            "2 kernels x 3 rank counts + two-area + two-area-het"
+        );
         for c in &report.cells {
             assert_eq!(c.steps, 10);
             assert!(c.synapses > 0);
@@ -903,6 +939,14 @@ mod tests {
         let two = report.cells.iter().find(|c| c.kernel == "two-area").expect("two-area cell");
         assert_eq!(two.neurons, 2 * gauss[0].neurons);
         assert!(two.synapses > 2 * gauss[0].synapses, "projection synapses missing");
+        // the heterogeneous entry carries a half-sized second area
+        let het = report
+            .cells
+            .iter()
+            .find(|c| c.kernel == "two-area-het")
+            .expect("two-area-het cell");
+        assert!(het.neurons > gauss[0].neurons && het.neurons < two.neurons);
+        assert!(het.synapses > gauss[0].synapses);
         assert!(report.demux.events_per_call == 500);
         assert!(report.demux.slot_ns_per_event > 0.0);
         assert!(report.grouping.events_per_call > 0);
@@ -917,11 +961,12 @@ mod tests {
 
         let json = report.to_json();
         for key in [
-            "\"schema\": 3",
+            "\"schema\": 4",
             "\"matrix\"",
             "\"kernel\": \"gaussian\"",
             "\"kernel\": \"exponential\"",
             "\"kernel\": \"two-area\"",
+            "\"kernel\": \"two-area-het\"",
             "\"phase_ns_per_step\"",
             "\"silent_dynamics\"",
             "\"demux_microbench\"",
@@ -937,7 +982,7 @@ mod tests {
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());
         let doc = crate::util::json::parse(&json).expect("BENCH.json must parse");
-        assert_eq!(doc.get("schema").and_then(crate::util::json::Json::num), Some(3.0));
+        assert_eq!(doc.get("schema").and_then(crate::util::json::Json::num), Some(4.0));
         // the human rendering mentions every phase of the breakdown
         let table = report.render();
         for col in

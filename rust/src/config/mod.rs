@@ -7,6 +7,6 @@ pub mod sim;
 pub mod toml;
 
 pub use sim::{
-    AreaParams, ConnParams, ConnRule, DelayDist, ExternalParams, GridParams, NeuronParams,
-    ProjectionParams, SimConfig, Solver, SynParams,
+    AreaParams, ConnParams, ConnRule, DelayDist, ExternalOverride, ExternalParams,
+    GridParams, NeuronParams, ProjectionParams, SimConfig, Solver, Stride, SynParams,
 };

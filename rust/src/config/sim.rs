@@ -211,6 +211,54 @@ impl Default for ExternalParams {
     }
 }
 
+/// Per-area override of the external drive. Each field overrides the
+/// global [`ExternalParams`] only when set: unspecified fields resolve
+/// against the **live** global drive every time stimuli are (re)built,
+/// so a half-specified area keeps following `Network::set_external`
+/// sweeps for its unspecified half. (The PR-4 representation snapshotted
+/// the global value at load time, which silently detached such areas
+/// from every later sweep.)
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ExternalOverride {
+    pub synapses_per_neuron: Option<u32>,
+    pub rate_hz: Option<f64>,
+}
+
+impl ExternalOverride {
+    /// No override: the area follows the global drive entirely.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Fully specified: the area is detached from global sweeps (this
+    /// is what a `Network::set_area_external` sweep installs).
+    pub fn full(ext: ExternalParams) -> Self {
+        ExternalOverride {
+            synapses_per_neuron: Some(ext.synapses_per_neuron),
+            rate_hz: Some(ext.rate_hz),
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.synapses_per_neuron.is_none() && self.rate_hz.is_none()
+    }
+
+    /// Both fields overridden ⇒ global sweeps cannot affect this area.
+    pub fn is_full(&self) -> bool {
+        self.synapses_per_neuron.is_some() && self.rate_hz.is_some()
+    }
+
+    /// The effective drive against the (current) global default.
+    pub fn resolve(&self, global: &ExternalParams) -> ExternalParams {
+        ExternalParams {
+            synapses_per_neuron: self
+                .synapses_per_neuron
+                .unwrap_or(global.synapses_per_neuron),
+            rate_hz: self.rate_hz.unwrap_or(global.rate_hz),
+        }
+    }
+}
+
 /// Grid/network geometry (paper §III-B, Table I).
 #[derive(Clone, Copy, Debug)]
 pub struct GridParams {
@@ -254,13 +302,15 @@ impl GridParams {
     }
 }
 
-/// One named area of a multi-area atlas configuration: its own grid
-/// and intra-areal connectivity, plus an optional external-drive
-/// override (None → the global [`SimConfig::external`] drive).
+/// One named area of a multi-area atlas configuration: its own grid,
+/// intra-areal connectivity, optional external-drive override and
+/// optional neuron-model overrides.
 ///
-/// Synaptic efficacies/delays ([`SynParams`]) and neuron parameters are
-/// global: the atlas composes areas of the same cortical model, wired
-/// differently.
+/// Synaptic efficacies/delays ([`SynParams`]) stay global; the neuron
+/// model ([`NeuronParams`]) is per-area since PR 5 — heterogeneous
+/// compositions (e.g. a strongly-adapting slow-wave area against an
+/// awake-like area, arXiv:1902.08410) override `exc`/`inh` per area and
+/// inherit everything they leave `None`.
 #[derive(Clone, Debug)]
 pub struct AreaParams {
     pub name: String,
@@ -270,14 +320,113 @@ pub struct AreaParams {
     /// Custom intra-areal kernel; overrides `conn.rule` (same contract
     /// as [`SimConfig::kernel`]).
     pub kernel: Option<Arc<dyn ConnectivityKernel>>,
-    /// Per-area external Poisson drive; `None` uses the global drive.
-    pub external: Option<ExternalParams>,
+    /// Per-area external-drive override, resolved field-by-field
+    /// against the **live** global [`SimConfig::external`] whenever
+    /// stimuli are (re)built — see [`ExternalOverride`].
+    pub external: ExternalOverride,
+    /// Per-area excitatory neuron model (`None` → [`SimConfig::exc`]).
+    pub exc: Option<NeuronParams>,
+    /// Per-area inhibitory neuron model (`None` → [`SimConfig::inh`]).
+    pub inh: Option<NeuronParams>,
+}
+
+impl AreaParams {
+    /// An area with the given grid, paper-Gaussian intra-areal
+    /// connectivity and everything else inherited from the globals.
+    pub fn new(name: &str, grid: GridParams) -> Self {
+        AreaParams {
+            name: name.to_string(),
+            grid,
+            conn: ConnParams::gaussian(),
+            kernel: None,
+            external: ExternalOverride::none(),
+            exc: None,
+            inh: None,
+        }
+    }
+
+    pub fn conn(mut self, conn: ConnParams) -> Self {
+        self.conn = conn;
+        self
+    }
+
+    pub fn kernel(mut self, kernel: Arc<dyn ConnectivityKernel>) -> Self {
+        self.kernel = Some(kernel);
+        self
+    }
+
+    /// Fully-specified external drive (detached from global sweeps).
+    pub fn external(mut self, synapses_per_neuron: u32, rate_hz: f64) -> Self {
+        self.external = ExternalOverride::full(ExternalParams { synapses_per_neuron, rate_hz });
+        self
+    }
+
+    /// Rate-only override: the synapse count keeps following the global
+    /// drive (including later `set_external` sweeps).
+    pub fn external_rate(mut self, rate_hz: f64) -> Self {
+        self.external.rate_hz = Some(rate_hz);
+        self
+    }
+
+    /// Synapse-count-only override: the rate keeps following the global
+    /// drive (including later `set_external` sweeps).
+    pub fn external_synapses(mut self, synapses_per_neuron: u32) -> Self {
+        self.external.synapses_per_neuron = Some(synapses_per_neuron);
+        self
+    }
+
+    /// Override the excitatory neuron model of this area.
+    pub fn exc_model(mut self, np: NeuronParams) -> Self {
+        self.exc = Some(np);
+        self
+    }
+
+    /// Override the inhibitory neuron model of this area.
+    pub fn inh_model(mut self, np: NeuronParams) -> Self {
+        self.inh = Some(np);
+        self
+    }
+}
+
+/// Rational per-axis topographic stride of a projection: source column
+/// coordinate `c` maps to `c · up / down` (integer division last).
+/// `down > 1` downsamples onto a smaller target grid (the PR-4 integer
+/// stride); `up > 1` upsamples into a **larger** one, so feedback into
+/// a bigger area lands topographically instead of leaning on kernel
+/// spread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Stride {
+    pub up: u32,
+    pub down: u32,
+}
+
+impl Stride {
+    /// Identity mapping (1:1).
+    pub const ONE: Stride = Stride { up: 1, down: 1 };
+
+    /// Downsampling stride `1:down` (PR-4 semantics).
+    pub fn downsample(down: u32) -> Self {
+        Stride { up: 1, down }
+    }
+
+    /// Upsampling stride `up:1`.
+    pub fn upsample(up: u32) -> Self {
+        Stride { up, down: 1 }
+    }
+
+    /// Map a source coordinate into the target frame (offset excluded).
+    #[inline]
+    pub fn map(&self, c: u32) -> i64 {
+        (c as i64 * self.up as i64) / self.down as i64
+    }
 }
 
 /// A typed inter-areal projection: source area → target area.
 ///
 /// Source columns map **topographically** into the target area's column
-/// grid — `mapped = offset + source_coords / stride` per axis — and the
+/// grid — `mapped = offset + source_coords · up / down` per axis (see
+/// [`Stride`]; integer `1:down` strides downsample, `up:1` strides
+/// upsample into a larger area) — and the
 /// projection then spreads **laterally** around the mapped column with
 /// a [`ConnectivityKernel`] evaluated in the target area's own frame
 /// (the source neuron's in-column jitter rides along, scaled to the
@@ -297,9 +446,9 @@ pub struct ProjectionParams {
     pub kernel: Option<Arc<dyn ConnectivityKernel>>,
     /// Topographic column-mapping offset (target columns).
     pub offset: (i32, i32),
-    /// Topographic down-sampling stride (≥ 1 per axis): source column
-    /// (cx, cy) maps to target column (offset + (cx/sx, cy/sy)).
-    pub stride: (u32, u32),
+    /// Rational topographic stride per axis: source column (cx, cy)
+    /// maps to target column (offset + (cx·up/down, cy·up/down)).
+    pub stride: (Stride, Stride),
     /// Only excitatory source neurons project (the long-range cortical
     /// default; Fig. 2's inhibitory-local rule extended across areas).
     pub excitatory_only: bool,
@@ -325,7 +474,7 @@ impl ProjectionParams {
             conn: ConnParams::gaussian(),
             kernel: None,
             offset: (0, 0),
-            stride: (1, 1),
+            stride: (Stride::ONE, Stride::ONE),
             excitatory_only: true,
             delay_base_ms: 2.0,
             velocity_um_per_ms: 1000.0,
@@ -343,8 +492,22 @@ impl ProjectionParams {
         self
     }
 
+    /// Downsampling stride (`1:s` per axis — PR-4 semantics kept).
     pub fn stride(mut self, sx: u32, sy: u32) -> Self {
-        self.stride = (sx, sy);
+        self.stride = (Stride::downsample(sx), Stride::downsample(sy));
+        self
+    }
+
+    /// Upsampling stride (`u:1` per axis): feedback into a larger area
+    /// lands topographically at `offset + coords · u`.
+    pub fn upsample(mut self, ux: u32, uy: u32) -> Self {
+        self.stride = (Stride::upsample(ux), Stride::upsample(uy));
+        self
+    }
+
+    /// Fully rational per-axis stride (`mapped = offset + c·up/down`).
+    pub fn stride_rational(mut self, x: Stride, y: Stride) -> Self {
+        self.stride = (x, y);
         self
     }
 
@@ -505,7 +668,9 @@ impl SimConfig {
                 grid: self.grid,
                 conn: self.conn,
                 kernel: self.kernel.clone(),
-                external: None,
+                external: ExternalOverride::none(),
+                exc: None,
+                inh: None,
             }]
         } else {
             self.areas.clone()
@@ -540,11 +705,13 @@ impl SimConfig {
             Err(_) => Self::gaussian(24),
         };
         let g = &mut cfg.grid;
-        g.nx = doc.int_or("network.nx", doc.int_or("network.side", g.nx as i64)?)? as u32;
-        g.ny = doc.int_or("network.ny", doc.int_or("network.side", g.ny as i64)?)? as u32;
+        let side_x = u32_key(doc, "network.side", "", g.nx)?;
+        let side_y = u32_key(doc, "network.side", "", g.ny)?;
+        g.nx = u32_key(doc, "network.nx", "", side_x)?;
+        g.ny = u32_key(doc, "network.ny", "", side_y)?;
         g.spacing_um = doc.float_or("network.spacing_um", g.spacing_um)?;
         g.neurons_per_column =
-            doc.int_or("network.neurons_per_column", g.neurons_per_column as i64)? as u32;
+            u32_key(doc, "network.neurons_per_column", "", g.neurons_per_column)?;
         g.exc_fraction = doc.float_or("network.exc_fraction", g.exc_fraction)?;
 
         let c = &mut cfg.conn;
@@ -587,15 +754,21 @@ impl SimConfig {
             np.alpha_c = doc.float_or(&format!("{sect}.alpha_c"), np.alpha_c)?;
         }
 
-        cfg.external.synapses_per_neuron = doc
-            .int_or("external.synapses_per_neuron", cfg.external.synapses_per_neuron as i64)?
-            as u32;
+        cfg.external.synapses_per_neuron = u32_key(
+            doc,
+            "external.synapses_per_neuron",
+            "",
+            cfg.external.synapses_per_neuron,
+        )?;
         cfg.external.rate_hz = doc.float_or("external.rate_hz", cfg.external.rate_hz)?;
 
         cfg.dt_ms = doc.float_or("simulation.dt_ms", cfg.dt_ms)?;
         cfg.duration_ms = doc.float_or("simulation.duration_ms", cfg.duration_ms)?;
-        cfg.ranks = doc.int_or("simulation.ranks", cfg.ranks as i64)? as u32;
-        cfg.seed = doc.int_or("simulation.seed", cfg.seed as i64)? as u64;
+        cfg.ranks = u32_key(doc, "simulation.ranks", "", cfg.ranks)?;
+        let seed = doc.int_or("simulation.seed", cfg.seed as i64)?;
+        cfg.seed = u64::try_from(seed).map_err(|_| {
+            format!("config key 'simulation.seed' must be a non-negative integer, got {seed}")
+        })?;
         cfg.plasticity = doc.bool_or("simulation.plasticity", cfg.plasticity)?;
         cfg.solver = Solver::parse(&doc.str_or("simulation.solver", "event")?)?;
 
@@ -612,28 +785,35 @@ impl SimConfig {
             if name.is_empty() {
                 return Err(format!("[[area]] #{}: missing 'name'", i + 1));
             }
+            let ctx = format!("[[area]] '{name}' ");
             let mut g = cfg.grid;
-            g.nx = area.int_or("nx", area.int_or("side", g.nx as i64)?)? as u32;
-            g.ny = area.int_or("ny", area.int_or("side", g.ny as i64)?)? as u32;
+            let side_x = u32_key(area, "side", &ctx, g.nx)?;
+            let side_y = u32_key(area, "side", &ctx, g.ny)?;
+            g.nx = u32_key(area, "nx", &ctx, side_x)?;
+            g.ny = u32_key(area, "ny", &ctx, side_y)?;
             g.spacing_um = area.float_or("spacing_um", g.spacing_um)?;
             g.neurons_per_column =
-                area.int_or("neurons_per_column", g.neurons_per_column as i64)? as u32;
+                u32_key(area, "neurons_per_column", &ctx, g.neurons_per_column)?;
             g.exc_fraction = area.float_or("exc_fraction", g.exc_fraction)?;
             let (conn, kern) = conn_from_sub(area, &cfg.conn, cfg.kernel.clone())?;
-            let external = match (
-                area.get("external_synapses_per_neuron").is_some(),
-                area.get("external_rate_hz").is_some(),
-            ) {
-                (false, false) => None,
-                _ => Some(ExternalParams {
-                    synapses_per_neuron: area.int_or(
-                        "external_synapses_per_neuron",
-                        cfg.external.synapses_per_neuron as i64,
-                    )? as u32,
-                    rate_hz: area.float_or("external_rate_hz", cfg.external.rate_hz)?,
-                }),
+            // an override field exists only for the keys the block names
+            // — the unspecified half keeps following the live global
+            // drive through every later sweep (see ExternalOverride)
+            let external = ExternalOverride {
+                synapses_per_neuron: if area.get("external_synapses_per_neuron").is_some() {
+                    Some(u32_key(area, "external_synapses_per_neuron", &ctx, 0)?)
+                } else {
+                    None
+                },
+                rate_hz: if area.get("external_rate_hz").is_some() {
+                    Some(area.float("external_rate_hz")?)
+                } else {
+                    None
+                },
             };
-            cfg.areas.push(AreaParams { name, grid: g, conn, kernel: kern, external });
+            let exc = neuron_from_sub(area, "exc", &cfg.exc)?;
+            let inh = neuron_from_sub(area, "inh", &cfg.inh)?;
+            cfg.areas.push(AreaParams { name, grid: g, conn, kernel: kern, external, exc, inh });
         }
         for (i, proj) in doc.tables("projection")?.iter().enumerate() {
             let source = proj.str_or("source", "")?;
@@ -641,6 +821,7 @@ impl SimConfig {
             if source.is_empty() || target.is_empty() {
                 return Err(format!("[[projection]] #{}: missing 'source'/'target'", i + 1));
             }
+            let ctx = format!("[[projection]] '{source}'->'{target}' ");
             let d = ProjectionParams::new(&source, &target);
             let (conn, kern) = conn_from_sub(proj, &d.conn, None)?;
             cfg.projections.push(ProjectionParams {
@@ -649,12 +830,18 @@ impl SimConfig {
                 conn,
                 kernel: kern,
                 offset: (
-                    proj.int_or("offset_x", d.offset.0 as i64)? as i32,
-                    proj.int_or("offset_y", d.offset.1 as i64)? as i32,
+                    i32_key(proj, "offset_x", &ctx, d.offset.0)?,
+                    i32_key(proj, "offset_y", &ctx, d.offset.1)?,
                 ),
                 stride: (
-                    proj.int_or("stride_x", d.stride.0 as i64)? as u32,
-                    proj.int_or("stride_y", d.stride.1 as i64)? as u32,
+                    Stride {
+                        up: u32_key(proj, "stride_up_x", &ctx, d.stride.0.up)?,
+                        down: u32_key(proj, "stride_x", &ctx, d.stride.0.down)?,
+                    },
+                    Stride {
+                        up: u32_key(proj, "stride_up_y", &ctx, d.stride.1.up)?,
+                        down: u32_key(proj, "stride_y", &ctx, d.stride.1.down)?,
+                    },
                 ),
                 excitatory_only: proj.bool_or("excitatory_only", d.excitatory_only)?,
                 delay_base_ms: proj.float_or("delay_base_ms", d.delay_base_ms)?,
@@ -681,6 +868,26 @@ impl SimConfig {
         Ok(())
     }
 
+    fn validate_neuron(np: &NeuronParams, what: &str) -> Result<(), String> {
+        let tau_ok = |t: f64| t.is_finite() && t > 0.0;
+        if !tau_ok(np.tau_m_ms) || !tau_ok(np.tau_c_ms) {
+            return Err(format!("{what}: tau_m_ms/tau_c_ms must be finite and > 0"));
+        }
+        if !np.tau_arp_ms.is_finite() || np.tau_arp_ms < 0.0 {
+            return Err(format!("{what}: tau_arp_ms must be finite and >= 0"));
+        }
+        if !np.v_theta_mv.is_finite()
+            || !np.v_reset_mv.is_finite()
+            || np.v_theta_mv <= np.v_reset_mv
+        {
+            return Err(format!(
+                "{what}: v_theta_mv must be finite and exceed v_reset_mv (a reset at \
+                 or above threshold would re-fire on every event)"
+            ));
+        }
+        Ok(())
+    }
+
     fn validate_conn(c: &ConnParams, what: &str) -> Result<(), String> {
         if !(0.0..=1.0).contains(&c.local_prob) {
             return Err(format!("{what}: local_prob must be in [0,1]"));
@@ -697,6 +904,11 @@ impl SimConfig {
     pub fn validate(&self) -> Result<(), String> {
         Self::validate_grid(&self.grid, "network")?;
         Self::validate_conn(&self.conn, "connectivity")?;
+        Self::validate_neuron(&self.exc, "neuron.exc")?;
+        Self::validate_neuron(&self.inh, "neuron.inh")?;
+        if !self.external.rate_hz.is_finite() || self.external.rate_hz < 0.0 {
+            return Err("external.rate_hz must be finite and >= 0".into());
+        }
         // -- atlas-specific checks ------------------------------------
         for (i, a) in self.areas.iter().enumerate() {
             let what = format!("area '{}'", a.name);
@@ -708,6 +920,25 @@ impl SimConfig {
             }
             Self::validate_grid(&a.grid, &what)?;
             Self::validate_conn(&a.conn, &what)?;
+            if let Some(np) = &a.exc {
+                Self::validate_neuron(np, &format!("{what} exc model"))?;
+            }
+            if let Some(np) = &a.inh {
+                Self::validate_neuron(np, &format!("{what} inh model"))?;
+            }
+            if (a.exc.is_some() || a.inh.is_some()) && self.solver == Solver::Xla {
+                return Err(format!(
+                    "{what}: per-area neuron models require the event-driven solver \
+                     (the XLA batch path compiles one global exc/inh model)"
+                ));
+            }
+            if let Some(r) = a.external.rate_hz {
+                if !r.is_finite() || r < 0.0 {
+                    return Err(format!(
+                        "{what}: external_rate_hz must be finite and >= 0"
+                    ));
+                }
+            }
             if self.ranks as u64 > a.grid.columns() {
                 return Err(format!(
                     "ranks ({}) exceed columns ({}) of area '{}': every area is \
@@ -729,8 +960,10 @@ impl SimConfig {
                 }
             }
             Self::validate_conn(&p.conn, &what)?;
-            if p.stride.0 == 0 || p.stride.1 == 0 {
-                return Err(format!("{what}: stride must be >= 1"));
+            for s in [p.stride.0, p.stride.1] {
+                if s.up == 0 || s.down == 0 {
+                    return Err(format!("{what}: stride up/down must be >= 1"));
+                }
             }
             if !p.delay_base_ms.is_finite() || p.delay_base_ms < 0.0 {
                 return Err(format!("{what}: delay_base_ms must be finite and >= 0"));
@@ -786,6 +1019,68 @@ impl SimConfig {
         }
         Ok(())
     }
+}
+
+/// Sign- and range-checked integer lookup. TOML integers flow through
+/// `i64`, and the old bare `as u32` casts silently wrapped negatives —
+/// `nx = -1` became 4294967295 and sailed straight past `validate_grid`'s
+/// `== 0` checks. `ctx` names the enclosing block (empty for global
+/// tables) so the error points at the offending key.
+fn u32_key(doc: &Doc, key: &str, ctx: &str, default: u32) -> Result<u32, String> {
+    let v = doc.int_or(key, i64::from(default))?;
+    u32::try_from(v).map_err(|_| {
+        format!(
+            "{ctx}config key '{key}' must be a non-negative integer \
+             (at most {}), got {v}",
+            u32::MAX
+        )
+    })
+}
+
+/// [`u32_key`], but for signed 32-bit keys (topographic offsets): the
+/// sign is legal, silent `as i32` truncation of out-of-range values is
+/// not.
+fn i32_key(doc: &Doc, key: &str, ctx: &str, default: i32) -> Result<i32, String> {
+    let v = doc.int_or(key, i64::from(default))?;
+    i32::try_from(v).map_err(|_| {
+        format!("{ctx}config key '{key}' must fit a signed 32-bit integer, got {v}")
+    })
+}
+
+/// Per-area neuron-model override from the `{prefix}_*` keys of one
+/// `[[area]]` block (e.g. `exc_g_c_over_cm = 0.08`); `None` when the
+/// block names no key of that population. Unset fields inherit `base`
+/// (the already-resolved global model) at load time — neuron models,
+/// unlike the external drive, have no mid-run sweep, so load-time
+/// resolution is exact.
+fn neuron_from_sub(
+    sub: &Doc,
+    prefix: &str,
+    base: &NeuronParams,
+) -> Result<Option<NeuronParams>, String> {
+    const KEYS: [&str; 8] = [
+        "tau_m_ms",
+        "tau_c_ms",
+        "e_rest_mv",
+        "v_theta_mv",
+        "v_reset_mv",
+        "tau_arp_ms",
+        "g_c_over_cm",
+        "alpha_c",
+    ];
+    if !KEYS.iter().any(|k| sub.get(&format!("{prefix}_{k}")).is_some()) {
+        return Ok(None);
+    }
+    let mut np = *base;
+    np.tau_m_ms = sub.float_or(&format!("{prefix}_tau_m_ms"), np.tau_m_ms)?;
+    np.tau_c_ms = sub.float_or(&format!("{prefix}_tau_c_ms"), np.tau_c_ms)?;
+    np.e_rest_mv = sub.float_or(&format!("{prefix}_e_rest_mv"), np.e_rest_mv)?;
+    np.v_theta_mv = sub.float_or(&format!("{prefix}_v_theta_mv"), np.v_theta_mv)?;
+    np.v_reset_mv = sub.float_or(&format!("{prefix}_v_reset_mv"), np.v_reset_mv)?;
+    np.tau_arp_ms = sub.float_or(&format!("{prefix}_tau_arp_ms"), np.tau_arp_ms)?;
+    np.g_c_over_cm = sub.float_or(&format!("{prefix}_g_c_over_cm"), np.g_c_over_cm)?;
+    np.alpha_c = sub.float_or(&format!("{prefix}_alpha_c"), np.alpha_c)?;
+    Ok(Some(np))
 }
 
 /// Resolve connectivity parameters from one `[[area]]`/`[[projection]]`
@@ -990,12 +1285,20 @@ ranks = 2
         assert_eq!(cfg.areas[0].conn.rule, ConnRule::Gaussian);
         assert_eq!(cfg.areas[0].conn.amplitude, 0.04);
         assert!(cfg.areas[0].external.is_none());
-        // v2 overrides grid side, rule and the external drive
+        // v2 overrides grid side, rule and (half of) the external drive
         assert_eq!(cfg.areas[1].grid.nx, 4);
         assert_eq!(cfg.areas[1].conn.rule, ConnRule::Exponential);
-        let ext = cfg.areas[1].external.unwrap();
-        assert_eq!(ext.rate_hz, 0.0);
-        assert_eq!(ext.synapses_per_neuron, 80); // inherited half
+        let ext = cfg.areas[1].external;
+        assert_eq!(ext.rate_hz, Some(0.0));
+        // the unspecified half is NOT snapshotted at load time: it
+        // resolves against the live global drive at stimulus build
+        assert_eq!(ext.synapses_per_neuron, None);
+        assert!(!ext.is_full());
+        assert_eq!(ext.resolve(&cfg.external).synapses_per_neuron, 80);
+        assert_eq!(ext.resolve(&cfg.external).rate_hz, 0.0);
+        let swept = ExternalParams { synapses_per_neuron: 33, rate_hz: 9.0 };
+        assert_eq!(ext.resolve(&swept).synapses_per_neuron, 33, "must follow sweeps");
+        assert_eq!(ext.resolve(&swept).rate_hz, 0.0, "explicit half must stick");
         // projection
         assert_eq!(cfg.projections.len(), 1);
         let p = &cfg.projections[0];
@@ -1003,7 +1306,7 @@ ranks = 2
         assert_eq!(p.conn.rule, ConnRule::Exponential);
         assert_eq!(p.conn.lambda_um, 200.0);
         assert_eq!(p.offset, (-1, 0));
-        assert_eq!(p.stride, (2, 1));
+        assert_eq!(p.stride, (Stride::downsample(2), Stride::ONE));
         assert!(!p.excitatory_only);
         assert_eq!(p.delay_base_ms, 3.0);
         assert_eq!(p.velocity_um_per_ms, 500.0);
@@ -1066,20 +1369,14 @@ ranks = 2
         let base = || {
             let mut c = SimConfig::test_small();
             c.areas = vec![
-                AreaParams {
-                    name: "a".into(),
-                    grid: GridParams { neurons_per_column: 20, ..GridParams::square(4) },
-                    conn: ConnParams::gaussian(),
-                    kernel: None,
-                    external: None,
-                },
-                AreaParams {
-                    name: "b".into(),
-                    grid: GridParams { neurons_per_column: 20, ..GridParams::square(4) },
-                    conn: ConnParams::gaussian(),
-                    kernel: None,
-                    external: None,
-                },
+                AreaParams::new(
+                    "a",
+                    GridParams { neurons_per_column: 20, ..GridParams::square(4) },
+                ),
+                AreaParams::new(
+                    "b",
+                    GridParams { neurons_per_column: 20, ..GridParams::square(4) },
+                ),
             ];
             c.projections = vec![ProjectionParams::new("a", "b")];
             c
@@ -1092,7 +1389,10 @@ ranks = 2
         c.projections[0].target = "nope".into();
         assert!(c.validate().unwrap_err().contains("unknown area"));
         let mut c = base();
-        c.projections[0].stride = (0, 1);
+        c.projections[0].stride = (Stride { up: 1, down: 0 }, Stride::ONE);
+        assert!(c.validate().unwrap_err().contains("stride"));
+        let mut c = base();
+        c.projections[0].stride = (Stride::ONE, Stride { up: 0, down: 2 });
         assert!(c.validate().unwrap_err().contains("stride"));
         let mut c = base();
         c.projections[0].velocity_um_per_ms = 0.0;
@@ -1133,6 +1433,127 @@ ranks = 2
         let mut c = SimConfig::test_small();
         c.grid.nx = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn negative_integers_error_instead_of_wrapping() {
+        // regression: `as u32` casts wrapped negatives — `nx = -1` became
+        // 4294967295 and passed every `== 0` validation
+        let cases: [(&str, &str); 8] = [
+            ("[network]\nnx = -1\n", "network.nx"),
+            ("[network]\nneurons_per_column = -5\n", "network.neurons_per_column"),
+            ("[external]\nsynapses_per_neuron = -1\n", "external.synapses_per_neuron"),
+            ("[simulation]\nranks = -2\n", "simulation.ranks"),
+            ("[simulation]\nseed = -3\n", "simulation.seed"),
+            ("[[area]]\nname = \"a\"\nnx = -1\n", "'nx'"),
+            ("[[area]]\nname = \"a\"\nneurons_per_column = -7\n", "'neurons_per_column'"),
+            (
+                "[[area]]\nname = \"a\"\n[[area]]\nname = \"b\"\n\
+                 [[projection]]\nsource = \"a\"\ntarget = \"b\"\nstride_x = -2\n",
+                "'stride_x'",
+            ),
+        ];
+        for (toml_text, needle) in cases {
+            let doc = toml::parse(toml_text).unwrap();
+            let err = SimConfig::from_doc(&doc).unwrap_err();
+            assert!(
+                err.contains(needle) && err.contains('-'),
+                "{toml_text:?} must name the offending key: {err}"
+            );
+        }
+        // beyond-u32 values are rejected too, not truncated
+        let doc = toml::parse("[network]\nside = 4294967296\n").unwrap();
+        let err = SimConfig::from_doc(&doc).unwrap_err();
+        assert!(err.contains("network.side"), "{err}");
+        // area block errors carry the area name for multi-area configs
+        let doc = toml::parse("[[area]]\nname = \"v1\"\nside = -4\n").unwrap();
+        let err = SimConfig::from_doc(&doc).unwrap_err();
+        assert!(err.contains("v1"), "{err}");
+    }
+
+    #[test]
+    fn area_blocks_parse_per_area_neuron_models() {
+        let doc = toml::parse(
+            r#"
+[neuron.exc]
+g_c_over_cm = 0.03
+
+[[area]]
+name = "wake"
+side = 4
+
+[[area]]
+name = "sws"
+side = 4
+exc_g_c_over_cm = 0.08
+exc_tau_c_ms = 500.0
+inh_tau_m_ms = 8.0
+"#,
+        )
+        .unwrap();
+        let cfg = SimConfig::from_doc(&doc).unwrap();
+        // wake inherits: no override stored
+        assert!(cfg.areas[0].exc.is_none() && cfg.areas[0].inh.is_none());
+        // sws: named keys override, unnamed keys inherit the resolved
+        // global (which itself took the [neuron.exc] file override)
+        let exc = cfg.areas[1].exc.expect("exc override");
+        assert_eq!(exc.g_c_over_cm, 0.08);
+        assert_eq!(exc.tau_c_ms, 500.0);
+        assert_eq!(exc.tau_m_ms, cfg.exc.tau_m_ms);
+        assert_eq!(cfg.exc.g_c_over_cm, 0.03);
+        let inh = cfg.areas[1].inh.expect("inh override");
+        assert_eq!(inh.tau_m_ms, 8.0);
+        assert_eq!(inh.g_c_over_cm, 0.0);
+    }
+
+    #[test]
+    fn per_area_neuron_models_are_validated() {
+        let mk = |edit: fn(&mut NeuronParams)| {
+            let mut c = SimConfig::test_small();
+            let mut np = NeuronParams::excitatory();
+            edit(&mut np);
+            c.areas =
+                vec![AreaParams::new("a", GridParams { neurons_per_column: 20, ..c.grid })
+                    .exc_model(np)];
+            c
+        };
+        assert!(mk(|_| {}).validate().is_ok());
+        let err = mk(|np| np.tau_m_ms = 0.0).validate().unwrap_err();
+        assert!(err.contains("tau_m_ms"), "{err}");
+        let err = mk(|np| np.v_reset_mv = np.v_theta_mv).validate().unwrap_err();
+        assert!(err.contains("v_theta_mv"), "{err}");
+        // the XLA batch path compiles one global model: per-area
+        // overrides must be a clean build error, not silent misbehavior
+        let mut c = mk(|np| np.g_c_over_cm = 0.08);
+        c.solver = Solver::Xla;
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("event-driven"), "{err}");
+    }
+
+    #[test]
+    fn rational_strides_parse_and_map() {
+        let doc = toml::parse(
+            "[[area]]\nname = \"a\"\nside = 4\nneurons_per_column = 20\n\
+             [[area]]\nname = \"b\"\nside = 8\nneurons_per_column = 20\n\
+             [[projection]]\nsource = \"a\"\ntarget = \"b\"\nstride_up_x = 2\n\
+             stride_up_y = 2\n",
+        )
+        .unwrap();
+        let cfg = SimConfig::from_doc(&doc).unwrap();
+        let p = &cfg.projections[0];
+        assert_eq!(p.stride, (Stride::upsample(2), Stride::upsample(2)));
+        assert_eq!(p.stride.0.map(3), 6);
+        // builder routes: downsample keeps PR-4 semantics, upsample and
+        // fully-rational strides are new
+        let p = ProjectionParams::new("a", "b").stride(2, 2);
+        assert_eq!(p.stride.0.map(5), 2);
+        let p = ProjectionParams::new("a", "b").upsample(3, 3);
+        assert_eq!(p.stride.1.map(5), 15);
+        let p = ProjectionParams::new("a", "b")
+            .stride_rational(Stride { up: 3, down: 2 }, Stride::ONE);
+        assert_eq!(p.stride.0.map(0), 0);
+        assert_eq!(p.stride.0.map(1), 1); // 3/2 floors to 1
+        assert_eq!(p.stride.0.map(2), 3);
     }
 
     #[test]

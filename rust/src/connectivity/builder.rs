@@ -269,9 +269,11 @@ pub fn generate_outgoing_atlas(
                     continue;
                 }
                 let tgrid = &atlas.area(pw.tgt_area).grid;
-                // topographic column mapping: offset + coords / stride
-                let mx = p.offset.0 as i64 + (cx / p.stride.0) as i64;
-                let my = p.offset.1 as i64 + (cy / p.stride.1) as i64;
+                // topographic column mapping: offset + coords·up/down
+                // (rational stride — 1:d downsamples, u:1 upsamples
+                // into a larger target area)
+                let mx = p.offset.0 as i64 + p.stride.0.map(cx);
+                let my = p.offset.1 as i64 + p.stride.1.map(cy);
                 if mx < 0 || my < 0 || mx >= tgrid.p.nx as i64 || my >= tgrid.p.ny as i64 {
                     continue; // maps outside the target area
                 }
@@ -540,20 +542,8 @@ mod tests {
             ..crate::config::GridParams::square(3)
         };
         cfg.areas = vec![
-            crate::config::AreaParams {
-                name: "v1".into(),
-                grid: g1,
-                conn: crate::config::ConnParams::gaussian(),
-                kernel: None,
-                external: None,
-            },
-            crate::config::AreaParams {
-                name: "v2".into(),
-                grid: g2,
-                conn: crate::config::ConnParams::gaussian(),
-                kernel: None,
-                external: None,
-            },
+            crate::config::AreaParams::new("v1", g1),
+            crate::config::AreaParams::new("v2", g2),
         ];
         cfg.projections = vec![
             crate::config::ProjectionParams::new("v1", "v2"),
@@ -672,8 +662,8 @@ mod tests {
         let mut expect = 0.0;
         for cy in 0..g1.p.ny {
             for cx in 0..g1.p.nx {
-                let mx = pw.params.offset.0 as i64 + (cx / pw.params.stride.0) as i64;
-                let my = pw.params.offset.1 as i64 + (cy / pw.params.stride.1) as i64;
+                let mx = pw.params.offset.0 as i64 + pw.params.stride.0.map(cx);
+                let my = pw.params.offset.1 as i64 + pw.params.stride.1.map(cy);
                 if mx < 0 || my < 0 || mx >= g2.p.nx as i64 || my >= g2.p.ny as i64 {
                     continue;
                 }
@@ -733,6 +723,71 @@ mod tests {
             );
         }
         assert!(crossing > 0);
+    }
+
+    #[test]
+    fn upsampling_mapping_honors_offset_and_rational_stride() {
+        // the mirror of topographic_mapping_honors_offset_and_stride
+        // for the rational (up, down) stride: v2 (3×3) feeds back into
+        // the LARGER v1 (4×4) with a 2:1 upsampling stride — source
+        // column (cx,cy) lands around target (2cx, 2cy) instead of
+        // collapsing onto the low corner
+        let mut cfg = two_area_cfg();
+        cfg.projections =
+            vec![crate::config::ProjectionParams::new("v2", "v1").upsample(2, 2)];
+        let atlas = cfg.atlas();
+        let wiring = AtlasWiring::build(&cfg, &atlas);
+        let reach = (wiring.projections[0].stencil.bbox_side as i64 - 1) / 2;
+        let g1 = &atlas.area(0).grid;
+        let syns = generate_atlas_all(&cfg, 1, Mapping::Block);
+        let mut crossing = 0u64;
+        let mut mapped_cols = std::collections::BTreeSet::new();
+        for s in &syns {
+            if atlas.area_of_gid(s.src_gid as u64) == atlas.area_of_gid(s.tgt_gid as u64) {
+                continue;
+            }
+            crossing += 1;
+            let (_, src_col) = atlas.col_area_local(atlas.neuron_column(s.src_gid as u64));
+            let (_, tgt_col) = atlas.col_area_local(atlas.neuron_column(s.tgt_gid as u64));
+            let (scx, scy) = atlas.area(1).grid.column_coords(src_col);
+            let (tcx, tcy) = g1.column_coords(tgt_col);
+            let (mx, my) = (2 * scx as i64, 2 * scy as i64);
+            mapped_cols.insert((mx, my));
+            assert!(
+                (tcx as i64 - mx).abs() <= reach && (tcy as i64 - my).abs() <= reach,
+                "target column ({tcx},{tcy}) beyond the stencil around mapped ({mx},{my})"
+            );
+        }
+        assert!(crossing > 0, "upsampling projection produced no synapses");
+        assert!(
+            mapped_cols.len() > 1,
+            "distinct source columns must map to distinct (spread) targets"
+        );
+        // sources whose upsampled image falls outside the target grid
+        // are clipped, not wrapped: every mapped origin is in-bounds
+        for &(mx, my) in &mapped_cols {
+            assert!(mx < g1.p.nx as i64 && my < g1.p.ny as i64);
+        }
+    }
+
+    #[test]
+    fn upsampled_generation_is_decomposition_invariant() {
+        // the heterogeneous-topography pass stays a pure function of the
+        // seed for any rank decomposition
+        let mut cfg = two_area_cfg();
+        cfg.projections = vec![
+            crate::config::ProjectionParams::new("v1", "v2").stride(2, 2),
+            crate::config::ProjectionParams::new("v2", "v1").upsample(2, 2),
+        ];
+        let reference = generate_atlas_all(&cfg, 1, Mapping::Block);
+        assert!(!reference.is_empty());
+        for (ranks, mapping) in [(2u32, Mapping::Block), (4, Mapping::RoundRobin)] {
+            let got = generate_atlas_all(&cfg, ranks, mapping);
+            assert_eq!(
+                reference, got,
+                "upsampled atlas differs at ranks={ranks} mapping={mapping:?}"
+            );
+        }
     }
 
     #[test]

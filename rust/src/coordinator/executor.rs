@@ -59,6 +59,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::config::ExternalParams;
 use crate::engine::metrics::PHASES;
 use crate::engine::process::RankProcess;
 use crate::engine::RankReport;
@@ -86,6 +87,12 @@ enum Command {
     Probe,
     /// Rewind dynamics to t = 0 and restart the comm statistics.
     Reset,
+    /// Swap the external Poisson drive from the next step boundary:
+    /// the global drive (`area: None`, re-resolving every per-area
+    /// override against it) or one area's drive (`area: Some(i)`,
+    /// reseeding only that area's stimulus calendar). Typed like
+    /// `Run`/`Reset` so sweeps ride the same dispatch/reply protocol.
+    SetExternal { area: Option<u32>, external: ExternalParams },
     /// Exit the worker thread.
     Shutdown,
 }
@@ -180,6 +187,18 @@ impl Executor {
     /// the per-rank comm statistics.
     pub fn reset(&mut self) -> Result<(), String> {
         self.dispatch(Command::Reset).map(|_| ())
+    }
+
+    /// Swap the external drive on every rank: the global drive
+    /// (`area: None`) or one atlas area's (`area: Some(i)`, a mid-run
+    /// per-area sweep). The caller guarantees `i` is a valid atlas
+    /// area index.
+    pub fn set_external(
+        &mut self,
+        area: Option<u32>,
+        external: ExternalParams,
+    ) -> Result<(), String> {
+        self.dispatch(Command::SetExternal { area, external }).map(|_| ())
     }
 
     /// Run `f` over every rank slot (coordinator-side access between
@@ -312,6 +331,13 @@ fn worker(
                 Command::Reset => {
                     proc.reset();
                     let _ = comm.take_stats();
+                    Vec::new()
+                }
+                Command::SetExternal { area, external } => {
+                    match area {
+                        None => proc.set_external(external),
+                        Some(i) => proc.set_area_external(i as usize, external),
+                    }
                     Vec::new()
                 }
             }

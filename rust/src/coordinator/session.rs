@@ -128,13 +128,17 @@ impl SimulationBuilder {
             grid,
             conn: self.cfg.conn,
             kernel: self.cfg.kernel.clone(),
-            external: None,
+            external: crate::config::ExternalOverride::none(),
+            exc: None,
+            inh: None,
         });
         self
     }
 
-    /// Append a fully-specified area (own connectivity, kernel and
-    /// optional external-drive override).
+    /// Append a fully-specified area: own connectivity, kernel,
+    /// external-drive override and — heterogeneous compositions —
+    /// per-area neuron models ([`AreaParams::exc_model`]/
+    /// [`AreaParams::inh_model`]).
     pub fn area_with(mut self, area: AreaParams) -> Self {
         self.cfg.areas.push(area);
         self
@@ -427,14 +431,54 @@ impl Network {
         self.time_target_ms = 0.0;
     }
 
-    /// Reseed the external Poisson drive (stimulus sweeps / mid-run
-    /// switching). Takes effect from the next step; combine with
+    /// Reseed the **global** external Poisson drive (stimulus sweeps /
+    /// mid-run switching) — a typed `SetExternal` command through the
+    /// persistent pool, like `Run`/`Reset`. Takes effect from the next
+    /// step. Per-area overrides re-resolve against the new drive:
+    /// fully-overridden areas are untouched, half-specified areas
+    /// follow the sweep for their unspecified field. Combine with
     /// [`reset`](Self::reset) for an independent run under the new
     /// drive.
+    ///
+    /// Panics if the pool is poisoned (a rank panicked earlier).
     pub fn set_external(&mut self, synapses_per_neuron: u32, rate_hz: f64) {
         let external = ExternalParams { synapses_per_neuron, rate_hz };
-        self.exec.with_slots(|slot| slot.proc.set_external(external));
+        if let Err(e) = self.exec.set_external(None, external) {
+            panic!("{e}");
+        }
         self.cfg.external = external;
+    }
+
+    /// Reseed **one area's** external drive mid-run — the per-area
+    /// sweep of heterogeneous studies (drive one area hotter or
+    /// silence it while the rest of the atlas runs on, e.g. the
+    /// slow-wave/awake two-area protocol). Routed as a typed executor
+    /// command; only the named area's stimulus calendar is reseeded, so
+    /// the other areas' event sequences are bit-identical to an
+    /// unswept run. The area becomes fully overridden — detached from
+    /// later [`set_external`](Self::set_external) sweeps until
+    /// reconfigured by another per-area sweep.
+    ///
+    /// Errors on an unknown area name or a poisoned pool.
+    pub fn set_area_external(
+        &mut self,
+        name: &str,
+        synapses_per_neuron: u32,
+        rate_hz: f64,
+    ) -> Result<(), String> {
+        let Some(idx) = self.atlas.index_of(name) else {
+            let known: Vec<&str> =
+                self.atlas.areas().iter().map(|a| a.name.as_str()).collect();
+            return Err(format!("unknown area '{name}' (areas: {known:?})"));
+        };
+        let external = ExternalParams { synapses_per_neuron, rate_hz };
+        self.exec.set_external(Some(idx as u32), external)?;
+        // keep the configuration view in sync for atlas configs (the
+        // normalized one-area view of legacy configs has no entry)
+        if let Some(a) = self.cfg.areas.get_mut(idx) {
+            a.external = crate::config::ExternalOverride::full(external);
+        }
+        Ok(())
     }
 
     /// Aggregate the run so far into the same [`RunSummary`] the
@@ -816,14 +860,8 @@ mod tests {
         let mut net = SimulationBuilder::gaussian(4)
             .external(100, 100.0)
             .area("v1", g)
-            .area_with(AreaParams {
-                name: "v2".into(),
-                grid: g,
-                conn: crate::config::ConnParams::gaussian(),
-                kernel: None,
-                // silent area: only the feedforward projection drives it
-                external: Some(ExternalParams { synapses_per_neuron: 0, rate_hz: 0.0 }),
-            })
+            // silent area: only the feedforward projection drives it
+            .area_with(AreaParams::new("v2", g).external(0, 0.0))
             .project(ProjectionParams::new("v1", "v2").conn(ff_conn).weight_scale(3.0))
             .project(ProjectionParams::new("v2", "v1"))
             .ranks(2)
@@ -855,6 +893,63 @@ mod tests {
             "projection failed to propagate activity into the undriven area"
         );
         assert!(rates.mean_hz(0) > rates.mean_hz(1), "driven area must lead");
+    }
+
+    #[test]
+    fn per_area_sweep_is_a_typed_command_and_scopes_to_its_area() {
+        // two unconnected, equally-driven areas; sweeping v1's drive to
+        // zero mid-run must quiet v1 while v2's per-step activity stays
+        // bit-identical to the unswept run
+        use crate::engine::probe::ActivityProbe;
+        let g = GridParams { neurons_per_column: 40, ..GridParams::square(4) };
+        let mk = || {
+            SimulationBuilder::gaussian(4)
+                .external(100, 60.0)
+                .area("v1", g)
+                .area("v2", g)
+                .ranks(2)
+                .build()
+                .unwrap()
+        };
+        let run_half = |net: &mut Network| {
+            let mut probe = ActivityProbe::new();
+            {
+                let mut session = net.session();
+                session.attach(&mut probe);
+                session.advance(20.0);
+            }
+            probe.into_rows()
+        };
+        let mut plain = mk();
+        let p1 = run_half(&mut plain);
+        let p2 = run_half(&mut plain);
+        let mut swept = mk();
+        let s1 = run_half(&mut swept);
+        swept.set_area_external("v1", 100, 0.0).expect("sweep v1");
+        let s2 = run_half(&mut swept);
+        assert_eq!(p1, s1, "identical until the sweep");
+        let v1_spikes = |rows: &[Vec<u32>]| -> u64 {
+            rows.iter().flat_map(|r| r[..16].iter()).map(|&n| n as u64).sum()
+        };
+        let v2_cols = |rows: &[Vec<u32>]| -> Vec<Vec<u32>> {
+            rows.iter().map(|r| r[16..32].to_vec()).collect()
+        };
+        assert!(
+            v1_spikes(&s2) < v1_spikes(&p2) / 2,
+            "swept v1 must go quiet: {} vs {}",
+            v1_spikes(&s2),
+            v1_spikes(&p2)
+        );
+        assert_eq!(
+            v2_cols(&p2),
+            v2_cols(&s2),
+            "v2 must be bit-identical through v1's sweep"
+        );
+        // unknown areas are a clean error, not a panic
+        let err = swept.set_area_external("nope", 10, 1.0).unwrap_err();
+        assert!(err.contains("nope") && err.contains("v1"), "{err}");
+        // the sweep survives in the config view (full override)
+        assert!(swept.config().areas[0].external.is_full());
     }
 
     #[test]

@@ -30,7 +30,7 @@
 //! [`reset`](RankProcess::reset) / [`set_external`](RankProcess::set_external)
 //! service the remaining commands without tearing the state down.
 
-use crate::config::{ExternalParams, SimConfig, Solver};
+use crate::config::{ExternalOverride, ExternalParams, SimConfig, Solver};
 use crate::connectivity::builder::{generate_outgoing_atlas, AtlasWiring};
 use crate::engine::metrics::{EngineMetrics, Phase, RankReport};
 use crate::engine::plasticity::{Plasticity, StdpParams};
@@ -178,16 +178,24 @@ pub struct RankProcess {
     /// Local neuron index → global id (wire-boundary conversion table).
     local_gid: Vec<u32>,
     states: Vec<LifState>,
-    exc_params: LifParams,
-    inh_params: LifParams,
+    /// Per-area excitatory/inhibitory integrator constants (index =
+    /// atlas area): heterogeneous compositions give each area its own
+    /// neuron model, resolved per local neuron through `col_area`/
+    /// `local_col_pos`/`local_is_exc`. A homogeneous atlas holds the
+    /// same constants in every slot.
+    area_exc: Vec<LifParams>,
+    area_inh: Vec<LifParams>,
     store: SynapseStore,
     queue: DelayQueue,
     /// Per-area external stimulus (index = atlas area; a one-area atlas
     /// has exactly the legacy single stimulus).
     stims: Vec<ExternalStimulus>,
-    /// Per-area external override (None → the global drive), kept so
-    /// [`set_external`](Self::set_external) can rebuild `stims`.
-    area_external: Vec<Option<ExternalParams>>,
+    /// Per-area external override, resolved against the live global
+    /// drive whenever `stims` is rebuilt — kept so
+    /// [`set_external`](Self::set_external) and
+    /// [`set_area_external`](Self::set_area_external) can re-resolve
+    /// inheritance at sweep time.
+    area_external: Vec<ExternalOverride>,
     /// CSR of target ranks per local neuron (spike routing).
     route_start: Vec<u32>,
     route_rank: Vec<u32>,
@@ -234,10 +242,28 @@ impl RankProcess {
         self.local_is_exc[local as usize]
     }
 
+    /// Atlas area index of one local neuron (through the CSR tables).
+    #[inline]
+    fn area_of_local(&self, local: u32) -> usize {
+        self.col_area[self.local_col_pos[local as usize] as usize] as usize
+    }
+
+    /// The LIF integrator constants of one local neuron: its area's
+    /// excitatory or inhibitory model (per-area heterogeneity).
+    #[inline]
+    fn lif_params(&self, local: u32) -> &LifParams {
+        let ai = self.area_of_local(local);
+        if self.is_exc_local(local) {
+            &self.area_exc[ai]
+        } else {
+            &self.area_inh[ai]
+        }
+    }
+
     /// The external stimulus driving one local neuron (its area's).
     #[inline]
     fn stim_of(&self, local: u32) -> ExternalStimulus {
-        self.stims[self.col_area[self.local_col_pos[local as usize] as usize] as usize]
+        self.stims[self.area_of_local(local)]
     }
 
     /// Network construction: distributed synapse generation + the
@@ -341,9 +367,22 @@ impl RankProcess {
         // gone — the transient double representation is the paper's
         // construction memory peak (Fig. 9)
 
-        let exc_params = LifParams::new(&cfg.exc);
-        let inh_params = LifParams::new(&cfg.inh);
-        let states = vec![LifState::resting(&exc_params); n_local as usize];
+        // per-area neuron models: unset overrides inherit the globals,
+        // so a homogeneous atlas carries identical constants per slot
+        let area_exc: Vec<LifParams> = area_params
+            .iter()
+            .map(|a| LifParams::new(a.exc.as_ref().unwrap_or(&cfg.exc)))
+            .collect();
+        let area_inh: Vec<LifParams> = area_params
+            .iter()
+            .map(|a| LifParams::new(a.inh.as_ref().unwrap_or(&cfg.inh)))
+            .collect();
+        let mut states = Vec::with_capacity(n_local as usize);
+        for l in 0..n_local as usize {
+            let ai = col_area[local_col_pos[l] as usize] as usize;
+            let p = if local_is_exc[l] { &area_exc[ai] } else { &area_inh[ai] };
+            states.push(LifState::resting(p));
+        }
         let queue = DelayQueue::new(cfg.delay_slots() + 1);
         debug_assert!(
             (store.max_slot() as usize) < queue.horizon(),
@@ -351,9 +390,9 @@ impl RankProcess {
         );
         let stims: Vec<ExternalStimulus> = area_params
             .iter()
-            .map(|a| ExternalStimulus::with_rate(cfg, a.external.as_ref().unwrap_or(&cfg.external)))
+            .map(|a| ExternalStimulus::with_rate(cfg, &a.external.resolve(&cfg.external)))
             .collect();
-        let area_external: Vec<Option<ExternalParams>> =
+        let area_external: Vec<ExternalOverride> =
             area_params.iter().map(|a| a.external).collect();
         let local_gid = decomp.local_gid_table_atlas(&atlas, rank);
         debug_assert_eq!(local_gid.len(), n_local as usize);
@@ -386,8 +425,8 @@ impl RankProcess {
             n_local,
             local_gid,
             states,
-            exc_params,
-            inh_params,
+            area_exc,
+            area_inh,
             store,
             queue,
             stims,
@@ -434,12 +473,35 @@ impl RankProcess {
     /// each neuron's next gap from its (persistent) stimulus stream
     /// under its area's drive.
     fn reseed_calendar(&mut self, from_step: u64) {
+        let all = vec![true; self.stims.len()];
+        self.reseed_calendar_where(from_step, &all);
+    }
+
+    /// Rebuild the next-event calendar at `from_step`, redrawing
+    /// next-gap samples **only** for neurons whose area is flagged in
+    /// `affected` (their pending entries are discarded). Every other
+    /// neuron's pending entry is carried over untouched and its RNG
+    /// stream is not consumed — a per-area sweep therefore leaves the
+    /// other areas' event sequences bit-identical on every rank
+    /// decomposition.
+    fn reseed_calendar_where(&mut self, from_step: u64, affected: &[bool]) {
+        debug_assert_eq!(affected.len(), self.stims.len());
+        let mut pending = Vec::new();
+        self.stim_cal.drain_pending(&mut pending);
         self.stim_cal = StimCalendar::with_base(STIM_CAL_HORIZON, from_step);
-        self.cal_buf.clear();
         let inv_dt = 1.0 / self.cfg.dt_ms;
+        for e in &pending {
+            if !affected[self.area_of_local(e.local)] {
+                self.stim_cal.schedule(e.local, e.time_ms, inv_dt);
+            }
+        }
         let t0 = from_step as f64 * self.cfg.dt_ms;
         for local in 0..self.n_local {
-            let stim = self.stim_of(local);
+            let ai = self.area_of_local(local);
+            if !affected[ai] {
+                continue;
+            }
+            let stim = self.stims[ai];
             let rng = &mut self.stim_streams[local as usize];
             if let Some(gap) = stim.first_gap_ms(rng) {
                 self.stim_cal.schedule(local, t0 + gap, inv_dt);
@@ -468,8 +530,9 @@ impl RankProcess {
     /// (With plasticity on, STDP traces restart but weights already
     /// consolidated into the store are kept.)
     pub fn reset(&mut self) {
-        for s in &mut self.states {
-            *s = LifState::resting(&self.exc_params);
+        for local in 0..self.n_local {
+            let resting = LifState::resting(self.lif_params(local));
+            self.states[local as usize] = resting;
         }
         self.queue = DelayQueue::new(self.cfg.delay_slots() + 1);
         self.fired.clear();
@@ -513,20 +576,42 @@ impl RankProcess {
     }
 
     /// Swap the *global* external-stimulus parameters (rate sweeps /
-    /// mid-run stimulus switching). Areas with their own external
-    /// override keep it; areas on the global drive follow the new one.
-    /// Streams keep their per-neuron state, so the change is seamless
-    /// mid-run: each neuron's next event is redrawn under the new rate
-    /// from the next step boundary. Combine with [`reset`](Self::reset)
-    /// for an independent replay under the new drive.
-    pub fn set_external(&mut self, external: crate::config::ExternalParams) {
+    /// mid-run stimulus switching). Per-area overrides are re-resolved
+    /// field-by-field against the new global drive: a fully-overridden
+    /// area is untouched (its calendar and streams keep running
+    /// bit-identically), while a half-specified area follows the sweep
+    /// for its unspecified half. Streams keep their per-neuron state,
+    /// so the change is seamless mid-run: each affected neuron's next
+    /// event is redrawn under the new rate from the next step boundary.
+    /// Combine with [`reset`](Self::reset) for an independent replay
+    /// under the new drive.
+    pub fn set_external(&mut self, external: ExternalParams) {
         self.cfg.external = external;
         self.stims = self
             .area_external
             .iter()
-            .map(|o| ExternalStimulus::with_rate(&self.cfg, o.as_ref().unwrap_or(&self.cfg.external)))
+            .map(|o| ExternalStimulus::with_rate(&self.cfg, &o.resolve(&self.cfg.external)))
             .collect();
-        self.reseed_calendar(self.queue.base_step());
+        // only areas actually coupled to the global drive are reseeded;
+        // fully-overridden areas keep their schedules and stream state
+        let affected: Vec<bool> = self.area_external.iter().map(|o| !o.is_full()).collect();
+        self.reseed_calendar_where(self.queue.base_step(), &affected);
+    }
+
+    /// Swap **one** area's external drive mid-run — the typed
+    /// `set_area_external` sweep (`coordinator::executor` routes it as a
+    /// command, like `Run`/`Reset`). The area becomes fully overridden
+    /// (detached from later global sweeps until reconfigured), and only
+    /// its own calendar entries are reseeded: every other area's event
+    /// schedule and RNG stream positions are untouched, so a per-area
+    /// sweep neither clobbers nor skips the rest of the atlas.
+    pub fn set_area_external(&mut self, area: usize, external: ExternalParams) {
+        assert!(area < self.stims.len(), "area index {area} out of range");
+        self.area_external[area] = ExternalOverride::full(external);
+        self.stims[area] = ExternalStimulus::with_rate(&self.cfg, &external);
+        let mut affected = vec![false; self.stims.len()];
+        affected[area] = true;
+        self.reseed_calendar_where(self.queue.base_step(), &affected);
     }
 
     pub fn rank(&self) -> u32 {
@@ -749,8 +834,7 @@ impl RankProcess {
             self.ext_buf.clear();
             if ext_target == Some(local) {
                 // the neuron's own area drives it (per-area externals)
-                let stim =
-                    self.stims[self.col_area[self.local_col_pos[local as usize] as usize] as usize];
+                let stim = self.stim_of(local);
                 let mut t = self.cal_buf[ci].time_ms;
                 ci += 1;
                 let rng = &mut self.stim_streams[local as usize];
@@ -761,8 +845,9 @@ impl RankProcess {
                 self.stim_cal.schedule(local, t, inv_dt);
                 self.metrics.external_events += self.ext_buf.len() as u64;
             }
-            let is_exc = self.is_exc_local(local);
-            let params = if is_exc { self.exc_params } else { self.inh_params };
+            // the neuron's own area supplies its integrator constants
+            // (per-area heterogeneous models)
+            let params = *self.lif_params(local);
             let state = &mut self.states[local as usize];
             // two-pointer merge of recurrent + external in time order;
             // recurrent events carry their synapse index for STDP
@@ -826,8 +911,7 @@ impl RankProcess {
         self.cal_buf.clear();
         self.stim_cal.take_step(step, &mut self.cal_buf);
         for entry in &self.cal_buf {
-            let stim = self.stims
-                [self.col_area[self.local_col_pos[entry.local as usize] as usize] as usize];
+            let stim = self.stim_of(entry.local);
             let mut t = entry.time_ms;
             let rng = &mut self.stim_streams[entry.local as usize];
             let mut n = 0u64;
@@ -1079,6 +1163,181 @@ mod tests {
         assert!(!first.is_empty());
         assert_eq!(first, replay, "reset must replay bit-identically");
         assert!(hotter.len() > first.len(), "3x external rate must raise activity");
+    }
+
+    /// Two equally-sized, unconnected areas sharing the tiny test grid.
+    fn two_area_cfg() -> SimConfig {
+        let mut cfg = tiny_cfg();
+        let g = crate::config::GridParams {
+            neurons_per_column: 50,
+            ..crate::config::GridParams::square(4)
+        };
+        cfg.areas = vec![
+            crate::config::AreaParams::new("v1", g),
+            crate::config::AreaParams::new("v2", g),
+        ];
+        cfg
+    }
+
+    fn run_atlas(
+        cfg: &SimConfig,
+        ranks: u32,
+        sweep: Option<(usize, u64, ExternalParams)>,
+    ) -> Vec<(EngineMetrics, Vec<WireSpike>)> {
+        let cfg = cfg.clone();
+        run_cluster(ranks, move |mut comm| {
+            let decomp = Decomposition::for_atlas(&cfg.atlas(), comm.ranks(), Mapping::Block);
+            let opts = RunOptions::default();
+            let mut proc = RankProcess::construct(&cfg, &decomp, &mut comm, &opts);
+            let steps = (cfg.duration_ms / cfg.dt_ms) as u64;
+            let mut spikes = Vec::new();
+            for s in 0..steps {
+                if let Some((area, at, ext)) = sweep {
+                    if s == at {
+                        proc.set_area_external(area, ext);
+                    }
+                }
+                proc.step(&mut comm, s);
+                spikes.extend(proc.latest_spikes());
+            }
+            (proc.finish(&comm), spikes)
+        })
+    }
+
+    fn area_spike_totals(results: &[(EngineMetrics, Vec<WireSpike>)]) -> Vec<u64> {
+        let n = results[0].0.area_spikes.len();
+        let mut totals = vec![0u64; n];
+        for (m, _) in results {
+            for (t, &s) in totals.iter_mut().zip(&m.area_spikes) {
+                *t += s;
+            }
+        }
+        totals
+    }
+
+    #[test]
+    fn per_area_neuron_models_change_only_their_area() {
+        // v2's excitatory population gets strong spike-frequency
+        // adaptation: its rate must drop below v1's, while v1 — whose
+        // model and wiring are untouched — stays bit-identical to the
+        // homogeneous run (areas are unconnected)
+        let homogeneous = two_area_cfg();
+        let mut het = homogeneous.clone();
+        let mut slow = crate::config::NeuronParams::excitatory();
+        slow.g_c_over_cm = 0.5; // strong SFA (cf. lif::adaptation_slows_firing)
+        het.areas[1].exc = Some(slow);
+        let base = run_atlas(&homogeneous, 1, None);
+        let adapted = run_atlas(&het, 1, None);
+        let base_totals = area_spike_totals(&base);
+        let het_totals = area_spike_totals(&adapted);
+        // (the areas are statistically equal but draw from per-gid
+        // streams, so their totals differ — only cross-run comparisons
+        // of the SAME area are exact)
+        assert_eq!(het_totals[0], base_totals[0], "v1 must be untouched by v2's model");
+        assert!(
+            het_totals[1] < base_totals[1],
+            "strong SFA must cut v2's spikes ({} vs {})",
+            het_totals[1],
+            base_totals[1]
+        );
+        assert!(het_totals[1] > 0, "adapted area must still fire");
+        // the heterogeneous composition stays decomposition-invariant
+        let spikes_of = |results: Vec<(EngineMetrics, Vec<WireSpike>)>| {
+            let mut all: Vec<WireSpike> =
+                results.into_iter().flat_map(|(_, s)| s).collect();
+            all.sort_unstable_by_key(|s| (s.t_us, s.gid));
+            all
+        };
+        let one = spikes_of(adapted);
+        let four = spikes_of(run_atlas(&het, 4, None));
+        assert_eq!(one, four, "heterogeneous run differs across rank counts");
+    }
+
+    #[test]
+    fn per_area_sweep_touches_only_the_swept_area() {
+        // sweep v1's drive to zero mid-run: v1 goes (externally) quiet,
+        // while v2's spike train stays bit-identical to the unswept run
+        // — the sweep reseeds only the swept area's calendar entries
+        let cfg = two_area_cfg();
+        let v2_range = cfg.atlas().area(1).gid_range();
+        let off = ExternalParams { synapses_per_neuron: 100, rate_hz: 0.0 };
+        let v2_spikes = |results: Vec<(EngineMetrics, Vec<WireSpike>)>| {
+            let mut v: Vec<WireSpike> = results
+                .into_iter()
+                .flat_map(|(_, s)| s)
+                .filter(|s| v2_range.contains(&(s.gid as u64)))
+                .collect();
+            v.sort_unstable_by_key(|s| (s.t_us, s.gid));
+            v
+        };
+        let baseline = run_atlas(&cfg, 2, None);
+        let baseline_totals = area_spike_totals(&baseline);
+        let swept = run_atlas(&cfg, 2, Some((0, 15, off)));
+        let swept_totals = area_spike_totals(&swept);
+        assert!(
+            swept_totals[0] < baseline_totals[0],
+            "cutting v1's drive mid-run must reduce its spikes"
+        );
+        assert_eq!(
+            v2_spikes(baseline),
+            v2_spikes(swept),
+            "sweeping v1 must leave v2's spike train bit-identical"
+        );
+        // and the swept run itself is decomposition-invariant
+        let all_of = |results: Vec<(EngineMetrics, Vec<WireSpike>)>| {
+            let mut all: Vec<WireSpike> =
+                results.into_iter().flat_map(|(_, s)| s).collect();
+            all.sort_unstable_by_key(|s| (s.t_us, s.gid));
+            all
+        };
+        let two = all_of(run_atlas(&cfg, 2, Some((0, 15, off))));
+        let four = all_of(run_atlas(&cfg, 4, Some((0, 15, off))));
+        assert_eq!(two, four, "per-area sweep differs across rank counts");
+    }
+
+    #[test]
+    fn half_specified_override_follows_global_sweeps() {
+        // v2 overrides only the rate; its synapse count must follow a
+        // later global set_external instead of freezing the load-time
+        // value (the PR-4 snapshot bug detached such areas for good)
+        let mut cfg = two_area_cfg();
+        cfg.areas[1].external = crate::config::ExternalOverride {
+            synapses_per_neuron: None,
+            rate_hz: Some(60.0),
+        };
+        let cfg2 = cfg.clone();
+        let results = run_cluster(1, move |mut comm| {
+            let decomp = Decomposition::for_atlas(&cfg2.atlas(), 1, Mapping::Block);
+            let mut proc =
+                RankProcess::construct(&cfg2, &decomp, &mut comm, &RunOptions::default());
+            let run = |proc: &mut RankProcess, comm: &mut crate::mpi::RankComm, s0: u64| {
+                let mut n = vec![0u64; 2];
+                for s in s0..s0 + 15 {
+                    proc.step(comm, s);
+                    for sp in proc.latest_spikes() {
+                        n[if (sp.gid as u64) < 800 { 0 } else { 1 }] += 1;
+                    }
+                }
+                n
+            };
+            let before = run(&mut proc, &mut comm, 0);
+            // global sweep: zero the global synapse bundle — v2's
+            // resolved drive must drop to zero events too (its rate-only
+            // override inherits the swept synapse count)
+            proc.set_external(ExternalParams { synapses_per_neuron: 0, rate_hz: 30.0 });
+            let after = run(&mut proc, &mut comm, 15);
+            (before, after)
+        });
+        let (before, after) = &results[0];
+        assert!(before[1] > 0, "v2 must fire under its rate override");
+        assert!(
+            after[1] < before[1] / 4,
+            "v2 must follow the global synapse sweep: {} -> {}",
+            before[1],
+            after[1]
+        );
+        // recurrent ringing may linger briefly; external drive is gone
+        assert!(after[0] < before[0]);
     }
 
     #[test]

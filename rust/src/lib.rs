@@ -92,7 +92,7 @@ pub mod perfmodel;
 pub mod bench_harness;
 pub mod repro;
 
-pub use config::{AreaParams, ProjectionParams, SimConfig};
+pub use config::{AreaParams, ExternalOverride, ProjectionParams, SimConfig, Stride};
 pub use connectivity::ConnectivityKernel;
 #[allow(deprecated)]
 pub use coordinator::run_simulation;

@@ -243,6 +243,37 @@ mod tests {
     }
 
     #[test]
+    fn stronger_adaptation_fires_less_under_identical_drive() {
+        // the per-area heterogeneity premise (PR 5): two populations
+        // differing only in SFA strength, driven identically, order
+        // their spike counts by g_c — the engine resolves LifParams per
+        // area, so this is the unit-level contract behind a slow-wave
+        // area firing less than an awake-like one
+        let spikes_with = |g_c: f64| -> u32 {
+            let mut np = NeuronParams::excitatory();
+            np.g_c_over_cm = g_c;
+            let p = LifParams::new(&np);
+            let mut s = LifState::resting(&p);
+            let mut n = 0;
+            let mut t = 0.0;
+            for _ in 0..2000 {
+                t += 0.5;
+                if s.inject(&p, t, 2.0) {
+                    n += 1;
+                }
+            }
+            n
+        };
+        let awake = spikes_with(0.02);
+        let slow_wave = spikes_with(0.08);
+        assert!(awake > 0 && slow_wave > 0);
+        assert!(
+            slow_wave < awake,
+            "4x SFA coupling must cut the rate: {slow_wave} vs {awake}"
+        );
+    }
+
+    #[test]
     fn inhibitory_has_no_adaptation() {
         let p = LifParams::new(&NeuronParams::inhibitory());
         let mut s = LifState::resting(&p);

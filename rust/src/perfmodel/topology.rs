@@ -2,18 +2,27 @@
 //!
 //! Everything here is pure geometry — no network materialization — so it
 //! works at the paper's full scales (96×96 on 1024 ranks). For a given
-//! (grid, stencil, decomposition) it computes, per rank:
+//! (configuration, decomposition) it computes, per rank:
 //!
 //! * the connected-peer subset size (the §II-D "subset of processes to
 //!   be listened to"), which prices the per-step counter exchange and
 //!   the MPI buffer footprint (Fig. 9), and
 //! * the expected axonal-spike traffic crossing rank boundaries, which
 //!   prices the payload exchange.
+//!
+//! **Atlas-aware since PR 5**: multi-area configurations are priced per
+//! area — each area's own grid, kernel and cutoff stencil — plus a
+//! projection traffic term for every inter-areal pathway (topographic
+//! mapping through the rational stride, lateral stencil in the target
+//! area's frame). The PR-4 version silently priced only the legacy
+//! global grid here, reporting wrong peer subsets for every atlas
+//! configuration; a one-area atlas reproduces the legacy numbers
+//! exactly.
 
 use crate::config::SimConfig;
 use crate::connectivity::analytic::mean_offset_prob_kernel;
-use crate::connectivity::rules::Stencil;
-use crate::geometry::{Decomposition, Grid, Mapping};
+use crate::connectivity::builder::AtlasWiring;
+use crate::geometry::{Decomposition, Mapping};
 
 /// Communication topology summary for one (config, ranks) point.
 #[derive(Clone, Debug)]
@@ -24,11 +33,11 @@ pub struct CommTopology {
     /// Mean peers per rank.
     pub mean_peers: f64,
     /// Expected axonal-spike *messages* leaving the busiest rank per
-    /// simulated second: Σ over its exc neurons of (firing rate ×
-    /// distinct remote ranks their stencil reaches).
+    /// simulated second: Σ over its neurons of (firing rate × distinct
+    /// remote ranks their stencil/projections reach).
     pub max_axonal_sends_per_s: f64,
     /// Expected remote synaptic events received by the busiest rank per
-    /// second (payload demux volume).
+    /// second (payload demux volume, intra-areal + projections).
     pub max_remote_events_per_s: f64,
     /// Expected axon *visits* at the busiest rank per second: every
     /// axonal spike received is one visit to that axon's local synapse
@@ -36,78 +45,155 @@ pub struct CommTopology {
     /// multiply visits: each spike is delivered to every rank its
     /// stencil touches. Includes the rank's own spikes (self-delivery).
     pub max_axon_visits_per_s: f64,
+    /// Expected **inter-areal** (projection) synaptic events received by
+    /// the busiest rank per second, same- and cross-rank deliveries
+    /// included — the projection traffic term of multi-area
+    /// configurations. Zero for a single-area world.
+    pub max_projection_events_per_s: f64,
     /// Max columns on a rank (load imbalance enters compute time).
     pub max_columns: usize,
     pub mean_columns: f64,
 }
 
 /// Compute the topology for `ranks` ranks (block mapping unless told
-/// otherwise). `rate_hz` is the expected network firing rate.
+/// otherwise). `rate_hz` is the expected network firing rate, applied
+/// to every area.
 pub fn comm_topology(
     cfg: &SimConfig,
     ranks: u32,
     mapping: Mapping,
     rate_hz: f64,
 ) -> CommTopology {
-    let grid = Grid::new(cfg.grid);
-    let kernel = cfg.kernel_dyn();
-    let stencil = Stencil::for_kernel(&*kernel, cfg.conn.cutoff, &grid);
-    let decomp = Decomposition::new(&grid, ranks, mapping);
-    let exc_pc = cfg.grid.exc_per_column() as f64;
-    let npc = cfg.grid.neurons_per_column as f64;
-
-    // per-offset expected pair probability (cached once)
-    let eps: Vec<f64> = stencil
-        .offsets
-        .iter()
-        .map(|o| mean_offset_prob_kernel(&*kernel, &grid, o.dx, o.dy))
-        .collect();
+    let atlas = cfg.atlas();
+    let wiring = AtlasWiring::build(cfg, &atlas);
+    let decomp = Decomposition::for_atlas(&atlas, ranks, mapping);
 
     let r = ranks as usize;
     let mut peer_sets: Vec<Vec<bool>> = vec![vec![false; r]; r];
     let mut axonal_sends = vec![0.0f64; r];
     let mut remote_events_in = vec![0.0f64; r];
+    let mut proj_events_in = vec![0.0f64; r];
     let mut axon_visits_in = vec![0.0f64; r];
 
-    let mut remote_ranks_scratch: Vec<u32> = Vec::new();
-    for col in 0..grid.columns() {
-        let src_rank = decomp.rank_of_column(col) as usize;
-        remote_ranks_scratch.clear();
-        for (i, (tgt_col, _off)) in grid
-            .targets_of(col, &stencil.offsets.iter().map(|o| (o.dx, o.dy)).collect::<Vec<_>>())
-            .enumerate()
-        {
-            let _ = i;
-            let tgt_rank = decomp.rank_of_column(tgt_col) as usize;
-            if tgt_rank != src_rank {
-                peer_sets[src_rank][tgt_rank] = true;
-                if !remote_ranks_scratch.contains(&(tgt_rank as u32)) {
-                    remote_ranks_scratch.push(tgt_rank as u32);
-                }
-            }
+    // per-offset expected pair probability, cached once per area and
+    // per projection (the projection lateral spread is evaluated in the
+    // TARGET area's frame, exactly like the wiring pass)
+    let area_eps: Vec<Vec<f64>> = wiring
+        .areas
+        .iter()
+        .zip(atlas.areas())
+        .map(|(aw, area)| {
+            aw.stencil
+                .offsets
+                .iter()
+                .map(|o| mean_offset_prob_kernel(&*aw.kernel, &area.grid, o.dx, o.dy))
+                .collect()
+        })
+        .collect();
+    let proj_eps: Vec<Vec<f64>> = wiring
+        .projections
+        .iter()
+        .map(|pw| {
+            let tgrid = &atlas.area(pw.tgt_area).grid;
+            pw.stencil
+                .offsets
+                .iter()
+                .map(|o| mean_offset_prob_kernel(&*pw.kernel, tgrid, o.dx, o.dy))
+                .collect()
+        })
+        .collect();
+
+    fn push_unique(set: &mut Vec<u32>, rank: u32) {
+        if !set.contains(&rank) {
+            set.push(rank);
         }
-        // expected remote events: for each stencil offset landing on a
-        // different rank, events/s = exc_pc·rate · npc·E[p(offset)]
-        for (o, &ep) in stencil.offsets.iter().zip(&eps) {
-            let (cx, cy) = grid.column_coords(col);
+    }
+
+    // remote ranks reached by this column's excitatory / inhibitory
+    // sources (the two populations can differ: intra-areal remotes are
+    // excitatory-only under Fig. 2's rule, projections opt out per
+    // pathway)
+    let mut exc_reach: Vec<u32> = Vec::new();
+    let mut inh_reach: Vec<u32> = Vec::new();
+    for gcol in 0..atlas.columns() {
+        let (ai, acol) = atlas.col_area_local(gcol);
+        let grid = &atlas.area(ai).grid;
+        let aw = &wiring.areas[ai];
+        let exc_pc = grid.p.exc_per_column() as f64;
+        let inh_pc = grid.p.inh_per_column() as f64;
+        let npc = grid.p.neurons_per_column as f64;
+        let src_rank = decomp.rank_of_column(gcol) as usize;
+        let (cx, cy) = grid.column_coords(acol);
+        exc_reach.clear();
+        inh_reach.clear();
+
+        // --- intra-areal stencil (this area's own kernel + cutoff) ---
+        for (o, &ep) in aw.stencil.offsets.iter().zip(&area_eps[ai]) {
             let tx = cx as i64 + o.dx as i64;
             let ty = cy as i64 + o.dy as i64;
             if tx < 0 || ty < 0 || tx >= grid.p.nx as i64 || ty >= grid.p.ny as i64 {
-                continue;
+                continue; // open boundary
             }
-            let tgt_col = grid.column_index(tx as u32, ty as u32);
-            let tgt_rank = decomp.rank_of_column(tgt_col) as usize;
+            let tgt = atlas.global_column(ai, grid.column_index(tx as u32, ty as u32));
+            let tgt_rank = decomp.rank_of_column(tgt) as usize;
             if tgt_rank != src_rank {
+                peer_sets[src_rank][tgt_rank] = true;
+                push_unique(&mut exc_reach, tgt_rank as u32);
                 remote_events_in[tgt_rank] += exc_pc * rate_hz * npc * ep;
+                if !aw.conn.inhibitory_local_only {
+                    push_unique(&mut inh_reach, tgt_rank as u32);
+                    remote_events_in[tgt_rank] += inh_pc * rate_hz * npc * ep;
+                }
             }
         }
-        // axonal messages: every exc spike is sent once to each distinct
-        // remote rank the column's stencil reaches
-        axonal_sends[src_rank] += exc_pc * rate_hz * remote_ranks_scratch.len() as f64;
+
+        // --- projection passes sourced in this area ---
+        for (pi, pw) in wiring.projections.iter().enumerate() {
+            if pw.src_area != ai {
+                continue;
+            }
+            let p = &pw.params;
+            let tgrid = &atlas.area(pw.tgt_area).grid;
+            let npc_t = tgrid.p.neurons_per_column as f64;
+            let mx = p.offset.0 as i64 + p.stride.0.map(cx);
+            let my = p.offset.1 as i64 + p.stride.1.map(cy);
+            if mx < 0 || my < 0 || mx >= tgrid.p.nx as i64 || my >= tgrid.p.ny as i64 {
+                continue; // maps outside the target area
+            }
+            let src_n = if p.excitatory_only { exc_pc } else { npc };
+            for (o, &ep) in pw.stencil.offsets.iter().zip(&proj_eps[pi]) {
+                let tx = mx + o.dx as i64;
+                let ty = my + o.dy as i64;
+                if tx < 0 || ty < 0 || tx >= tgrid.p.nx as i64 || ty >= tgrid.p.ny as i64 {
+                    continue;
+                }
+                let tgt = atlas
+                    .global_column(pw.tgt_area, tgrid.column_index(tx as u32, ty as u32));
+                let tgt_rank = decomp.rank_of_column(tgt) as usize;
+                let ev = src_n * rate_hz * npc_t * ep;
+                proj_events_in[tgt_rank] += ev;
+                if tgt_rank != src_rank {
+                    peer_sets[src_rank][tgt_rank] = true;
+                    push_unique(&mut exc_reach, tgt_rank as u32);
+                    remote_events_in[tgt_rank] += ev;
+                    if !p.excitatory_only {
+                        push_unique(&mut inh_reach, tgt_rank as u32);
+                    }
+                }
+            }
+        }
+
+        // axonal messages: every spike is sent once to each distinct
+        // remote rank its population's stencil/projections reach
+        axonal_sends[src_rank] +=
+            rate_hz * (exc_pc * exc_reach.len() as f64 + inh_pc * inh_reach.len() as f64);
         // axon visits: each delivery is one visit at the receiving rank,
         // plus the self-delivery of every local spike (exc and inh)
-        for &tr in &remote_ranks_scratch {
+        for &tr in &exc_reach {
             axon_visits_in[tr as usize] += exc_pc * rate_hz;
+        }
+        for &tr in &inh_reach {
+            axon_visits_in[tr as usize] += inh_pc * rate_hz;
         }
         axon_visits_in[src_rank] += npc * rate_hz;
     }
@@ -122,6 +208,7 @@ pub fn comm_topology(
         max_axonal_sends_per_s: axonal_sends.iter().cloned().fold(0.0, f64::max),
         max_remote_events_per_s: remote_events_in.iter().cloned().fold(0.0, f64::max),
         max_axon_visits_per_s: axon_visits_in.iter().cloned().fold(0.0, f64::max),
+        max_projection_events_per_s: proj_events_in.iter().cloned().fold(0.0, f64::max),
         max_columns: cols.iter().copied().max().unwrap_or(0),
         mean_columns: cols.iter().sum::<usize>() as f64 / r as f64,
     }
@@ -130,7 +217,7 @@ pub fn comm_topology(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::SimConfig;
+    use crate::config::{AreaParams, GridParams, ProjectionParams, SimConfig};
 
     #[test]
     fn single_rank_has_no_peers() {
@@ -139,6 +226,7 @@ mod tests {
         assert_eq!(t.max_peers, 0);
         assert_eq!(t.max_axonal_sends_per_s, 0.0);
         assert_eq!(t.max_remote_events_per_s, 0.0);
+        assert_eq!(t.max_projection_events_per_s, 0.0);
         assert_eq!(t.max_columns, 64);
     }
 
@@ -182,6 +270,57 @@ mod tests {
         let g = comm_topology(&SimConfig::gaussian(24), 16, Mapping::Block, 7.5);
         let e = comm_topology(&SimConfig::exponential(24), 16, Mapping::Block, 7.5);
         assert!(e.max_remote_events_per_s > g.max_remote_events_per_s * 2.0);
+    }
+
+    #[test]
+    fn one_area_atlas_prices_like_the_legacy_grid() {
+        // the atlas-aware accounting must reproduce the single-grid
+        // numbers exactly when the atlas is the same grid wrapped in
+        // one [[area]] block
+        let legacy = SimConfig::gaussian(24);
+        let mut atlas = legacy.clone();
+        atlas.areas = vec![AreaParams::new("solo", legacy.grid)];
+        for ranks in [4u32, 16] {
+            let a = comm_topology(&legacy, ranks, Mapping::Block, 7.5);
+            let b = comm_topology(&atlas, ranks, Mapping::Block, 7.5);
+            assert_eq!(a.max_peers, b.max_peers);
+            assert_eq!(a.mean_peers, b.mean_peers);
+            assert_eq!(a.max_columns, b.max_columns);
+            assert!((a.max_axonal_sends_per_s - b.max_axonal_sends_per_s).abs() < 1e-9);
+            assert!((a.max_remote_events_per_s - b.max_remote_events_per_s).abs() < 1e-9);
+            assert!((a.max_axon_visits_per_s - b.max_axon_visits_per_s).abs() < 1e-9);
+            assert_eq!(b.max_projection_events_per_s, 0.0);
+        }
+    }
+
+    #[test]
+    fn atlas_topology_accounts_for_projection_traffic() {
+        // regression: PR 4 priced only `cfg.grid` here, so a multi-area
+        // config reported the one-grid peer subsets and zero projection
+        // traffic with no warning
+        let g = GridParams { neurons_per_column: 60, ..GridParams::square(6) };
+        let mut cfg = SimConfig::gaussian(6);
+        cfg.grid = g;
+        cfg.areas = vec![AreaParams::new("v1", g), AreaParams::new("v2", g)];
+        let unwired = comm_topology(&cfg, 4, Mapping::Block, 10.0);
+        assert_eq!(unwired.max_projection_events_per_s, 0.0);
+        // every area spans all ranks, so the atlas has 2× the columns
+        // per rank of the one-grid world
+        assert_eq!(unwired.max_columns, 2 * 9);
+
+        cfg.projections = vec![
+            ProjectionParams::new("v1", "v2"),
+            ProjectionParams::new("v2", "v1").upsample(1, 1),
+        ];
+        let wired = comm_topology(&cfg, 4, Mapping::Block, 10.0);
+        assert!(
+            wired.max_projection_events_per_s > 0.0,
+            "projection traffic term missing"
+        );
+        // projections add demux/send work on top of the intra-areal term
+        assert!(wired.max_remote_events_per_s >= unwired.max_remote_events_per_s);
+        assert!(wired.max_axonal_sends_per_s >= unwired.max_axonal_sends_per_s);
+        assert!(wired.max_axon_visits_per_s > unwired.max_axon_visits_per_s);
     }
 
     #[test]

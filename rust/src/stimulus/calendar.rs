@@ -110,6 +110,20 @@ impl StimCalendar {
         out.sort_unstable_by_key(|e| e.local);
     }
 
+    /// Drain **every** pending entry (ring and heap) into `out`,
+    /// unordered. Mid-run calendar rebuilds — a per-area external-drive
+    /// sweep reseeds only the swept area — use this to carry the other
+    /// neurons' schedules into the new calendar without consuming their
+    /// RNG streams.
+    pub fn drain_pending(&mut self, out: &mut Vec<DueEvent>) {
+        for bucket in &mut self.ring {
+            out.append(bucket);
+        }
+        while let Some(Reverse(e)) = self.far.pop() {
+            out.push(DueEvent { local: e.local, time_ms: f64::from_bits(e.time_bits) });
+        }
+    }
+
     /// Heap bytes held by the calendar (memory accounting).
     pub fn resident_bytes(&self) -> u64 {
         let per = std::mem::size_of::<DueEvent>();
@@ -198,6 +212,33 @@ mod tests {
         assert_eq!(drain(&mut cal, 0).len(), 1);
         assert!(drain(&mut cal, 1).is_empty());
         assert_eq!(drain(&mut cal, 2).len(), 1);
+    }
+
+    #[test]
+    fn drain_pending_surfaces_ring_and_heap_entries() {
+        let mut cal = StimCalendar::new(4);
+        cal.schedule(1, 100.5, 1.0); // far (heap)
+        cal.schedule(2, 2.5, 1.0); // near (ring)
+        cal.schedule(3, 0.25, 1.0); // near (ring)
+        let mut out = Vec::new();
+        cal.drain_pending(&mut out);
+        assert_eq!(cal.pending(), 0);
+        out.sort_unstable_by_key(|e| e.local);
+        assert_eq!(
+            out,
+            vec![
+                DueEvent { local: 1, time_ms: 100.5 },
+                DueEvent { local: 2, time_ms: 2.5 },
+                DueEvent { local: 3, time_ms: 0.25 },
+            ]
+        );
+        // drained entries re-schedule into a fresh calendar losslessly
+        let mut fresh = StimCalendar::new(4);
+        for e in &out {
+            fresh.schedule(e.local, e.time_ms, 1.0);
+        }
+        assert_eq!(fresh.pending(), 3);
+        assert_eq!(drain(&mut fresh, 0), vec![DueEvent { local: 3, time_ms: 0.25 }]);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //!   mappings, and replays bit-identically after `reset()`.
 //! * The `configs/two_areas.toml` exemplar parses, builds and runs.
 
-use dpsnn::config::{AreaParams, ConnParams, ExternalParams, GridParams, SimConfig};
+use dpsnn::config::{AreaParams, ConnParams, GridParams, SimConfig};
 use dpsnn::geometry::Mapping;
 use dpsnn::{ActivityProbe, ProjectionParams, SimulationBuilder};
 
@@ -79,13 +79,7 @@ fn two_area_builder() -> SimulationBuilder {
     SimulationBuilder::gaussian(4)
         .external(100, 100.0)
         .area("v1", g)
-        .area_with(AreaParams {
-            name: "v2".into(),
-            grid: g,
-            conn: ConnParams::gaussian(),
-            kernel: None,
-            external: Some(ExternalParams { synapses_per_neuron: 0, rate_hz: 0.0 }),
-        })
+        .area_with(AreaParams::new("v2", g).external(0, 0.0))
         .project(ProjectionParams::new("v1", "v2").conn(ff).weight_scale(3.0))
         .project(ProjectionParams::new("v2", "v1"))
 }

@@ -1,0 +1,239 @@
+//! Integration: heterogeneous areas (PR 5).
+//!
+//! * A two-area composition with distinct per-area neuron models and
+//!   drives, a downsampling feedforward and an **upsampling** feedback
+//!   projection, swept mid-run with `Network::set_area_external`, is
+//!   decomposition-invariant across 1/2/4 ranks × block/roundrobin.
+//! * `reset()` replays bit-identically **through** a per-area sweep.
+//! * A per-area model override equal to the globals is bit-identical to
+//!   no override (the resolution path itself is exact).
+//! * A fully-overridden area ignores global sweeps; a half-specified
+//!   area follows them for its unspecified field (the PR-4 snapshot bug
+//!   detached it permanently).
+
+use dpsnn::config::{AreaParams, GridParams, NeuronParams};
+use dpsnn::geometry::Mapping;
+use dpsnn::{ActivityProbe, Network, ProjectionParams, SimulationBuilder};
+
+/// A slow-wave-flavored two-area atlas: "wake" (4×4, default model,
+/// global drive) and "sws" (2×2, strong SFA, its own hotter drive),
+/// wired feedforward 2:1 down and feedback 1:2 up.
+fn het_builder() -> SimulationBuilder {
+    let big = GridParams { neurons_per_column: 40, ..GridParams::square(4) };
+    let small = GridParams { neurons_per_column: 40, ..GridParams::square(2) };
+    let mut slow = NeuronParams::excitatory();
+    slow.g_c_over_cm = 0.08; // 4× the default adaptation strength
+    slow.tau_c_ms = 400.0;
+    SimulationBuilder::gaussian(4)
+        .external(100, 60.0)
+        .area("wake", big)
+        .area_with(AreaParams::new("sws", small).exc_model(slow).external(100, 90.0))
+        .project(ProjectionParams::new("wake", "sws").stride(2, 2).delay(2.0, 1000.0))
+        .project(ProjectionParams::new("sws", "wake").upsample(2, 2).weight_scale(2.0))
+}
+
+/// Drive the heterogeneous net 20 ms, sweep the sws drive down, drive
+/// 20 ms more; return the per-step global column activity.
+fn sweep_run(ranks: u32, mapping: Mapping) -> Vec<Vec<u32>> {
+    let mut net = het_builder().ranks(ranks).mapping(mapping).build().expect("construction");
+    let mut probe = ActivityProbe::new();
+    {
+        let mut session = net.session();
+        session.attach(&mut probe);
+        session.advance(20.0);
+    }
+    net.set_area_external("sws", 100, 10.0).expect("sws sweep");
+    {
+        let mut session = net.session();
+        session.attach(&mut probe);
+        session.advance(20.0);
+    }
+    probe.into_rows()
+}
+
+#[test]
+fn heterogeneous_sweep_run_is_decomposition_invariant() {
+    let mut reference: Option<Vec<Vec<u32>>> = None;
+    for (ranks, mapping) in [
+        (1u32, Mapping::Block),
+        (2, Mapping::Block),
+        (4, Mapping::Block),
+        (4, Mapping::RoundRobin),
+    ] {
+        let rows = sweep_run(ranks, mapping);
+        assert_eq!(rows.len(), 40);
+        // wake columns 0..16, sws columns 16..20
+        let wake: u64 = rows.iter().flat_map(|r| r[..16].iter()).map(|&n| n as u64).sum();
+        let sws_before: u64 =
+            rows[..20].iter().flat_map(|r| r[16..20].iter()).map(|&n| n as u64).sum();
+        assert!(wake > 0, "wake silent at ranks={ranks} {mapping:?}");
+        assert!(sws_before > 0, "sws silent before the sweep at ranks={ranks}");
+        match &reference {
+            None => reference = Some(rows),
+            Some(r) => assert_eq!(
+                r, &rows,
+                "heterogeneous sweep run differs at ranks={ranks} mapping={mapping:?}"
+            ),
+        }
+    }
+    // the sweep must actually bite: sws activity drops once its drive
+    // falls from 90 Hz to 10 Hz (recurrence and feedforward remain)
+    let rows = reference.unwrap();
+    let sws_before: u64 =
+        rows[..20].iter().flat_map(|r| r[16..20].iter()).map(|&n| n as u64).sum();
+    let sws_after: u64 =
+        rows[20..].iter().flat_map(|r| r[16..20].iter()).map(|&n| n as u64).sum();
+    assert!(
+        sws_after < sws_before,
+        "cutting the sws drive must reduce its activity ({sws_before} -> {sws_after})"
+    );
+}
+
+#[test]
+fn reset_replays_identically_through_a_per_area_sweep() {
+    let mut net = het_builder().ranks(2).build().expect("construction");
+    let run = |net: &mut Network| -> Vec<Vec<u32>> {
+        let mut probe = ActivityProbe::new();
+        {
+            let mut session = net.session();
+            session.attach(&mut probe);
+            session.advance(15.0);
+        }
+        net.set_area_external("sws", 100, 10.0).expect("sweep");
+        {
+            let mut session = net.session();
+            session.attach(&mut probe);
+            session.advance(15.0);
+        }
+        probe.into_rows()
+    };
+    let first = run(&mut net);
+    // restore the constructed sws drive (100 syn, 90 Hz), then rewind:
+    // the replay must retrace the run — including the mid-run sweep —
+    // bit for bit
+    net.set_area_external("sws", 100, 90.0).expect("restore");
+    net.reset();
+    let replay = run(&mut net);
+    assert!(first.iter().flatten().any(|&n| n > 0));
+    assert_eq!(first, replay, "reset must replay bit-identically through the sweep");
+}
+
+#[test]
+fn model_override_equal_to_globals_is_bit_identical() {
+    // resolving a per-area model must be exact: overriding with the
+    // global parameters changes nothing, on any rank count
+    let g = GridParams { neurons_per_column: 40, ..GridParams::square(3) };
+    let run = |explicit: bool, ranks: u32| -> Vec<Vec<u32>> {
+        let b = SimulationBuilder::gaussian(3).external(100, 60.0).area("a", g);
+        let second = if explicit {
+            AreaParams::new("b", g)
+                .exc_model(NeuronParams::excitatory())
+                .inh_model(NeuronParams::inhibitory())
+        } else {
+            AreaParams::new("b", g)
+        };
+        let mut net = b.area_with(second).ranks(ranks).build().expect("construction");
+        let mut probe = ActivityProbe::new();
+        {
+            let mut session = net.session();
+            session.attach(&mut probe);
+            session.advance(25.0);
+        }
+        probe.into_rows()
+    };
+    for ranks in [1u32, 2] {
+        let implicit = run(false, ranks);
+        let explicit = run(true, ranks);
+        assert!(implicit.iter().flatten().any(|&n| n > 0));
+        assert_eq!(implicit, explicit, "explicit global model diverged at {ranks} ranks");
+    }
+}
+
+#[test]
+fn slow_wave_toml_exemplar_builds_and_runs() {
+    let text =
+        std::fs::read_to_string("configs/slow_wave_two_areas.toml").expect("exemplar config");
+    let builder = SimulationBuilder::from_toml_str(&text)
+        .expect("exemplar parses")
+        // shrink the demo so the test stays quick; the per-area model
+        // keys, partial drive override and rational strides are what's
+        // under test
+        .tune(|c| {
+            for a in &mut c.areas {
+                a.grid.neurons_per_column = 40;
+            }
+        });
+    let cfg = builder.config();
+    assert_eq!(cfg.areas.len(), 2);
+    let sws = &cfg.areas[1];
+    assert_eq!(sws.exc.expect("exc override").g_c_over_cm, 0.08);
+    assert_eq!(sws.exc.expect("exc override").tau_c_ms, 500.0);
+    assert!(sws.inh.is_none(), "no inh_* keys -> inherit the global model");
+    assert_eq!(sws.external.rate_hz, Some(70.0));
+    assert_eq!(sws.external.synapses_per_neuron, None, "rate-only override");
+    assert_eq!(cfg.projections[0].stride.0, dpsnn::Stride::downsample(2));
+    assert_eq!(cfg.projections[1].stride.0, dpsnn::Stride::upsample(2));
+    let mut net = builder.build().expect("exemplar builds");
+    net.session().advance(30.0);
+    let s = net.summary();
+    assert_eq!(s.area_totals.len(), 2);
+    assert!(s.area_totals[0].spikes > 0, "wake silent");
+    assert!(s.area_totals[1].spikes > 0, "sws silent");
+}
+
+#[test]
+fn full_override_ignores_global_sweeps_and_half_override_follows() {
+    // "h" overrides only the rate (follows global synapse count);
+    // "f" overrides both fields (detached from global sweeps)
+    let g = GridParams { neurons_per_column: 40, ..GridParams::square(3) };
+    let run = |sweep: bool| -> Vec<Vec<u32>> {
+        let mut net = SimulationBuilder::gaussian(3)
+            .external(100, 40.0)
+            .area_with(AreaParams::new("h", g).external_rate(40.0))
+            .area_with(AreaParams::new("f", g).external(100, 40.0))
+            .ranks(2)
+            .build()
+            .expect("construction");
+        let mut probe = ActivityProbe::new();
+        {
+            let mut session = net.session();
+            session.attach(&mut probe);
+            session.advance(20.0);
+        }
+        if sweep {
+            // zero the global synapse bundle, same rate
+            net.set_external(0, 40.0);
+        }
+        {
+            let mut session = net.session();
+            session.attach(&mut probe);
+            session.advance(20.0);
+        }
+        probe.into_rows()
+    };
+    let plain = run(false);
+    let swept = run(true);
+    assert_eq!(plain[..20], swept[..20], "identical until the sweep");
+    // h (columns 0..9): its synapse count follows the global sweep to
+    // zero — external drive gone, activity collapses
+    let h_spikes = |rows: &[Vec<u32>]| -> u64 {
+        rows[20..].iter().flat_map(|r| r[..9].iter()).map(|&n| n as u64).sum()
+    };
+    assert!(h_spikes(&plain) > 0);
+    assert!(
+        h_spikes(&swept) < h_spikes(&plain) / 2,
+        "half-specified area must follow the global sweep: {} vs {}",
+        h_spikes(&swept),
+        h_spikes(&plain)
+    );
+    // f (columns 9..18): fully overridden — the global sweep must not
+    // even reseed its calendar; its activity is bit-identical
+    let f_cols = |rows: &[Vec<u32>]| -> Vec<Vec<u32>> {
+        rows[20..].iter().map(|r| r[9..18].to_vec()).collect()
+    };
+    assert_eq!(
+        f_cols(&plain),
+        f_cols(&swept),
+        "fully-overridden area must be untouched by the global sweep"
+    );
+}
