@@ -11,6 +11,12 @@
 //!
 //! Run: `cargo run --release --example connectivity_map`
 
+// Cast clippy lints are package-wide warnings (Cargo.toml [lints]);
+// the boundary modules are enforced by `dpsnn lint` (docs/LINTS.md).
+#![allow(clippy::cast_possible_truncation)]
+#![allow(clippy::cast_sign_loss)]
+#![allow(clippy::cast_possible_wrap)]
+
 use dpsnn::config::{ConnParams, GridParams};
 use dpsnn::connectivity::{builtin_kernel, Stencil, KERNEL_NAMES};
 use dpsnn::geometry::Grid;

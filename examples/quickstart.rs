@@ -9,6 +9,12 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
+// Cast clippy lints are package-wide warnings (Cargo.toml [lints]);
+// the boundary modules are enforced by `dpsnn lint` (docs/LINTS.md).
+#![allow(clippy::cast_possible_truncation)]
+#![allow(clippy::cast_sign_loss)]
+#![allow(clippy::cast_possible_wrap)]
+
 use dpsnn::engine::Phase;
 use dpsnn::{FiringRateProbe, PhaseMetricsProbe, SimulationBuilder};
 

@@ -11,6 +11,12 @@
 //!
 //! Run: `cargo run --release --example scaling_sweep [-- --quick]`
 
+// Cast clippy lints are package-wide warnings (Cargo.toml [lints]);
+// the boundary modules are enforced by `dpsnn lint` (docs/LINTS.md).
+#![allow(clippy::cast_possible_truncation)]
+#![allow(clippy::cast_sign_loss)]
+#![allow(clippy::cast_possible_wrap)]
+
 use dpsnn::bench_harness::Table;
 use dpsnn::config::{ConnRule, SimConfig};
 use dpsnn::engine::Phase;

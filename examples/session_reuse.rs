@@ -9,6 +9,12 @@
 //!
 //! Run: `cargo run --release --example session_reuse`
 
+// Cast clippy lints are package-wide warnings (Cargo.toml [lints]);
+// the boundary modules are enforced by `dpsnn lint` (docs/LINTS.md).
+#![allow(clippy::cast_possible_truncation)]
+#![allow(clippy::cast_sign_loss)]
+#![allow(clippy::cast_possible_wrap)]
+
 use std::time::Instant;
 
 use dpsnn::bench_harness::Table;

@@ -20,6 +20,12 @@
 //!
 //! Run: `cargo run --release --example slow_wave_two_areas`
 
+// Cast clippy lints are package-wide warnings (Cargo.toml [lints]);
+// the boundary modules are enforced by `dpsnn lint` (docs/LINTS.md).
+#![allow(clippy::cast_possible_truncation)]
+#![allow(clippy::cast_sign_loss)]
+#![allow(clippy::cast_possible_wrap)]
+
 use dpsnn::config::{AreaParams, GridParams, NeuronParams};
 use dpsnn::{AreaRateProbe, Probe, ProjectionParams, SimulationBuilder};
 

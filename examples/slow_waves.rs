@@ -10,6 +10,12 @@
 //!
 //! Run: `cargo run --release --example slow_waves [-- --quick]`
 
+// Cast clippy lints are package-wide warnings (Cargo.toml [lints]);
+// the boundary modules are enforced by `dpsnn lint` (docs/LINTS.md).
+#![allow(clippy::cast_possible_truncation)]
+#![allow(clippy::cast_sign_loss)]
+#![allow(clippy::cast_possible_wrap)]
+
 use dpsnn::analysis::{band_fraction, welch_psd, ActivityGrid};
 use dpsnn::config::SimConfig;
 use dpsnn::{ActivityProbe, SimulationBuilder};

@@ -14,6 +14,12 @@
 //!
 //! Run: `cargo run --release --example two_areas`
 
+// Cast clippy lints are package-wide warnings (Cargo.toml [lints]);
+// the boundary modules are enforced by `dpsnn lint` (docs/LINTS.md).
+#![allow(clippy::cast_possible_truncation)]
+#![allow(clippy::cast_sign_loss)]
+#![allow(clippy::cast_possible_wrap)]
+
 use dpsnn::config::{AreaParams, ConnParams, GridParams};
 use dpsnn::{AreaRateProbe, AreaSpikeCountProbe, Probe, ProjectionParams, SimulationBuilder};
 

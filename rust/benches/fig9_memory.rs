@@ -1,4 +1,10 @@
 //! Bench: regenerate Fig. 9 (memory per synapse vs MPI processes).
+// Cast clippy lints are package-wide warnings (Cargo.toml [lints]);
+// the boundary modules are enforced by `dpsnn lint` (docs/LINTS.md).
+#![allow(clippy::cast_possible_truncation)]
+#![allow(clippy::cast_sign_loss)]
+#![allow(clippy::cast_possible_wrap)]
+
 use dpsnn::config::ConnRule;
 use dpsnn::repro::{cached_calibration, fig9_report};
 

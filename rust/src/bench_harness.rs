@@ -5,6 +5,8 @@
 //! `dpsnn bench` standard matrix that records the repo's perf
 //! trajectory into `BENCH.json` (see docs/PERF.md).
 
+// lint: allow-file(nondeterminism-source, "bench harness: wall-clock timing is the product")
+
 use crate::config::{AreaParams, GridParams, NeuronParams, ProjectionParams};
 use crate::coordinator::session::construct_pairs;
 use crate::coordinator::{Network, SimulationBuilder};

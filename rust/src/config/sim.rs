@@ -294,7 +294,19 @@ impl GridParams {
     }
 
     pub fn exc_per_column(&self) -> u32 {
-        (self.neurons_per_column as f64 * self.exc_fraction).round() as u32
+        // `validate` bounds exc_fraction to [0, 1], so the rounded product
+        // can never exceed neurons_per_column; clamp anyway so even an
+        // unvalidated config cannot truncate through the f64 round-trip
+        // (and `inh_per_column`'s subtraction cannot underflow).
+        let exc = (f64::from(self.neurons_per_column) * self.exc_fraction).round();
+        if exc <= 0.0 {
+            0
+        } else if exc >= f64::from(self.neurons_per_column) {
+            self.neurons_per_column
+        } else {
+            // lint: allow(lossy-cast, "clamped to [0, neurons_per_column] just above")
+            exc as u32
+        }
     }
 
     pub fn inh_per_column(&self) -> u32 {
@@ -1469,6 +1481,43 @@ ranks = 2
         let doc = toml::parse("[[area]]\nname = \"v1\"\nside = -4\n").unwrap();
         let err = SimConfig::from_doc(&doc).unwrap_err();
         assert!(err.contains("v1"), "{err}");
+    }
+
+    #[test]
+    fn integer_keys_accept_the_exact_type_boundaries() {
+        // u32 keys: u32::MAX is legal, one past it is rejected by name
+        let doc = toml::parse("[t]\na = 4294967295\nb = 4294967296\n").unwrap();
+        assert_eq!(u32_key(&doc, "t.a", "", 0).unwrap(), u32::MAX);
+        let err = u32_key(&doc, "t.b", "", 0).unwrap_err();
+        assert!(err.contains("'t.b'") && err.contains("4294967296"), "{err}");
+        // i32 keys: both signed extremes are legal, one past each is not
+        let doc = toml::parse("[t]\nlo = -2147483648\nhi = 2147483647\nover = 2147483648\n")
+            .unwrap();
+        assert_eq!(i32_key(&doc, "t.lo", "", 0).unwrap(), i32::MIN);
+        assert_eq!(i32_key(&doc, "t.hi", "", 0).unwrap(), i32::MAX);
+        let err = i32_key(&doc, "t.over", "", 0).unwrap_err();
+        assert!(err.contains("'t.over'") && err.contains("32-bit"), "{err}");
+        // the u64 seed accepts the full TOML (i64) integer range
+        let doc = toml::parse("[simulation]\nseed = 9223372036854775807\n").unwrap();
+        assert_eq!(SimConfig::from_doc(&doc).unwrap().seed, i64::MAX as u64);
+    }
+
+    #[test]
+    fn exc_fraction_extremes_do_not_underflow_inh() {
+        let mut g = GridParams::square(2);
+        g.exc_fraction = 1.0;
+        assert_eq!(g.exc_per_column(), g.neurons_per_column);
+        assert_eq!(g.inh_per_column(), 0);
+        g.exc_fraction = 0.0;
+        assert_eq!(g.exc_per_column(), 0);
+        assert_eq!(g.inh_per_column(), g.neurons_per_column);
+        // even an unvalidated out-of-range fraction must clamp, not
+        // truncate through the f64 round-trip or underflow inh
+        g.exc_fraction = 1.5;
+        assert_eq!(g.exc_per_column(), g.neurons_per_column);
+        assert_eq!(g.inh_per_column(), 0);
+        g.exc_fraction = -0.5;
+        assert_eq!(g.exc_per_column(), 0);
     }
 
     #[test]

@@ -70,7 +70,18 @@ impl<'a> DrawCtx<'a> {
 /// `round(d·1000) ∈ [min·1000, max·1000]`.
 #[inline]
 pub fn delay_ms_to_us(d_ms: f64) -> u32 {
+    // lint: allow(lossy-cast, "callers clamp d_ms into [delay_min, delay_max] first")
     (d_ms * 1000.0).round() as u32
+}
+
+/// Gid → AER wire id. `SimConfig::validate` caps the total neuron
+/// count at the u32 gid space (the AER wire format), so a valid
+/// config can never truncate here; debug builds double-check.
+#[inline]
+fn wire_gid(gid: u64) -> u32 {
+    debug_assert!(gid <= u64::from(u32::MAX), "gid {gid} exceeds the AER u32 wire format");
+    // lint: allow(lossy-cast, "gid space is validated to fit u32 (SimConfig::validate)")
+    gid as u32
 }
 
 /// Deterministic inter-areal delay [µs]: constant tract delay plus the
@@ -215,8 +226,8 @@ pub fn generate_outgoing_atlas(
                 let w = ctx.weight(&mut rng, src_is_exc);
                 let d = ctx.delay_us(&mut rng);
                 out[col_rank].push(WireSynapse {
-                    src_gid: src_gid as u32,
-                    tgt_gid: atlas.neuron_id(col, tgt_local) as u32,
+                    src_gid: wire_gid(src_gid),
+                    tgt_gid: wire_gid(atlas.neuron_id(col, tgt_local)),
                     weight: w,
                     delay_us: d,
                 });
@@ -231,11 +242,13 @@ pub fn generate_outgoing_atlas(
                     if tx < 0 || ty < 0 || tx >= grid.p.nx as i64 || ty >= grid.p.ny as i64 {
                         continue; // open boundary
                     }
+                    // lint: allow(lossy-cast, "bounds-checked against nx/ny (u32) just above")
                     let tgt_col = atlas.global_column(ai, grid.column_index(tx as u32, ty as u32));
                     let tgt_rank = decomp.rank_of_column(tgt_col) as usize;
                     // envelope thinning
                     let candidates = rng.binomial(npc as u64, o.p_max);
                     for _ in 0..candidates {
+                        // lint: allow(lossy-cast, "next_below(npc) < npc, itself a u32")
                         let tgt_local = rng.next_below(npc as u64) as u32;
                         let tgt_gid = atlas.neuron_id(tgt_col, tgt_local);
                         let (txp, typ) = atlas.neuron_position(cfg.seed, tgt_gid);
@@ -245,8 +258,8 @@ pub fn generate_outgoing_atlas(
                             let w = ctx.weight(&mut rng, src_is_exc);
                             let d = ctx.delay_us(&mut rng);
                             out[tgt_rank].push(WireSynapse {
-                                src_gid: src_gid as u32,
-                                tgt_gid: tgt_gid as u32,
+                                src_gid: wire_gid(src_gid),
+                                tgt_gid: wire_gid(tgt_gid),
                                 weight: w,
                                 delay_us: d,
                             });
@@ -296,12 +309,14 @@ pub fn generate_outgoing_atlas(
                     if tx < 0 || ty < 0 || tx >= tgrid.p.nx as i64 || ty >= tgrid.p.ny as i64 {
                         continue; // open boundary of the target area
                     }
-                    let tgt_col = atlas
-                        .global_column(pw.tgt_area, tgrid.column_index(tx as u32, ty as u32));
+                    // lint: allow(lossy-cast, "bounds-checked against nx/ny (u32) just above")
+                    let tcol = tgrid.column_index(tx as u32, ty as u32);
+                    let tgt_col = atlas.global_column(pw.tgt_area, tcol);
                     let tgt_rank = decomp.rank_of_column(tgt_col) as usize;
                     // envelope thinning around the mapped column
                     let candidates = prng.binomial(npc_t as u64, o.p_max);
                     for _ in 0..candidates {
+                        // lint: allow(lossy-cast, "next_below(npc_t) < npc_t, itself a u32")
                         let tgt_local = prng.next_below(npc_t as u64) as u32;
                         let tgt_gid = atlas.neuron_id(tgt_col, tgt_local);
                         if tgt_gid == src_gid {
@@ -315,8 +330,8 @@ pub fn generate_outgoing_atlas(
                                 * p.weight_scale as f32;
                             let d = projection_delay_us(p, r, &cfg.syn);
                             out[tgt_rank].push(WireSynapse {
-                                src_gid: src_gid as u32,
-                                tgt_gid: tgt_gid as u32,
+                                src_gid: wire_gid(src_gid),
+                                tgt_gid: wire_gid(tgt_gid),
                                 weight: w,
                                 delay_us: d,
                             });

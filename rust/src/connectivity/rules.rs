@@ -58,9 +58,9 @@ impl Stencil {
         }
         let bbox = offsets
             .iter()
-            .map(|o| o.dx.abs().max(o.dy.abs()))
+            .map(|o| o.dx.unsigned_abs().max(o.dy.unsigned_abs()))
             .max()
-            .unwrap_or(0) as u32;
+            .unwrap_or(0);
         Stencil { offsets, bbox_side: 2 * bbox + 1 }
     }
 

@@ -316,7 +316,11 @@ impl RankProcess {
         let buckets = generate_outgoing_atlas(cfg, &atlas, decomp, &wiring, &my_columns);
 
         // --- per-neuron spike routing (which ranks host my synapses) ---
-        let col_pos = |col: ColumnId| my_columns.binary_search(&col).unwrap();
+        let col_pos = |col: ColumnId| {
+            my_columns
+                .binary_search(&col)
+                .unwrap_or_else(|_| panic!("spike routing: column {col} not owned by rank {rank}"))
+        };
         let to_local = |gid: u64| -> u32 {
             col_start[col_pos(atlas.neuron_column(gid))] + atlas.neuron_local(gid)
         };

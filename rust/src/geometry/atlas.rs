@@ -65,15 +65,13 @@ impl Atlas {
         let mut gid_base: u64 = 0;
         for (name, p) in areas {
             let grid = Grid::new(p);
-            assert!(
-                col_base + grid.columns() as u64 <= u32::MAX as u64,
-                "atlas column space exceeds u32"
-            );
-            out.push(Area { name, grid, col_base: col_base as u32, gid_base });
+            let base = u32::try_from(col_base).expect("atlas column space exceeds u32");
+            out.push(Area { name, grid, col_base: base, gid_base });
             col_base += grid.columns() as u64;
             gid_base += grid.neurons();
         }
-        Atlas { areas: out, total_cols: col_base as u32, total_neurons: gid_base }
+        let total_cols = u32::try_from(col_base).expect("atlas column space exceeds u32");
+        Atlas { areas: out, total_cols, total_neurons: gid_base }
     }
 
     /// The legacy single-grid world as a one-area atlas.

@@ -92,8 +92,10 @@ fn fill_grid(grid: &Grid, ranks: u32, mapping: Mapping, col_to_rank: &mut [u32],
                     let bx = chunk_bounds(grid.p.nx, tiles_x);
                     let by = chunk_bounds(grid.p.ny, tiles_y);
                     for cy in 0..grid.p.ny {
+                        // lint: allow(lossy-cast, "partition_point is at most tiles+1 <= ranks")
                         let ty = by.partition_point(|&b| b <= cy) as u32 - 1;
                         for cx in 0..grid.p.nx {
+                            // lint: allow(lossy-cast, "partition_point is at most tiles+1 <= ranks")
                             let tx = bx.partition_point(|&b| b <= cx) as u32 - 1;
                             let rank = ty * tiles_x + tx;
                             col_to_rank[base + grid.column_index(cx, cy) as usize] = rank;
@@ -106,6 +108,7 @@ fn fill_grid(grid: &Grid, ranks: u32, mapping: Mapping, col_to_rank: &mut [u32],
                     // (boustrophedon) order, which stays spatially local.
                     let bounds = chunk_bounds(ncols, ranks);
                     for (i, &col) in snake_order(grid).iter().enumerate() {
+                        // lint: allow(lossy-cast, "chunk index i < columns and bound <= ranks")
                         let rank = bounds.partition_point(|&b| b <= i as u32) as u32 - 1;
                         col_to_rank[base + col as usize] = rank;
                     }
@@ -149,7 +152,8 @@ impl Decomposition {
     fn from_col_to_rank(ranks: u32, mapping: Mapping, col_to_rank: Vec<u32>) -> Self {
         let mut rank_cols = vec![Vec::new(); ranks as usize];
         for (c, &r) in col_to_rank.iter().enumerate() {
-            rank_cols[r as usize].push(c as ColumnId);
+            let col = u32::try_from(c).expect("column space exceeds u32");
+            rank_cols[r as usize].push(col);
         }
         Decomposition { ranks, mapping, col_to_rank, rank_cols }
     }
@@ -171,16 +175,16 @@ impl Decomposition {
     /// rank-local indices through the whole step and only become global
     /// ids here, in O(1) per spike, instead of a per-spike binary
     /// search over the rank's columns. Global ids fit `u32` (the AER
-    /// wire format) for every paper-scale grid; asserted here.
+    /// wire format) for every paper-scale grid; checked here at
+    /// construction time, in release builds too.
     pub fn local_gid_table(&self, grid: &Grid, rank: u32) -> Vec<u32> {
         let npc = grid.p.neurons_per_column;
         let cols = self.columns_of_rank(rank);
         let mut out = Vec::with_capacity(cols.len() * npc as usize);
         for &col in cols {
             let base = grid.neuron_id(col, 0);
-            debug_assert!(base + npc as u64 - 1 <= u32::MAX as u64, "gid exceeds AER u32");
             for l in 0..npc as u64 {
-                out.push((base + l) as u32);
+                out.push(u32::try_from(base + l).expect("gid exceeds the AER u32 wire format"));
             }
         }
         out
@@ -200,9 +204,8 @@ impl Decomposition {
             let a = atlas.area(ai);
             let npc = a.grid.p.neurons_per_column;
             let base = a.gid_base + a.grid.neuron_id(acol, 0);
-            debug_assert!(base + npc as u64 - 1 <= u32::MAX as u64, "gid exceeds AER u32");
             for l in 0..npc as u64 {
-                out.push((base + l) as u32);
+                out.push(u32::try_from(base + l).expect("gid exceeds the AER u32 wire format"));
             }
         }
         out

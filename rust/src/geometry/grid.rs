@@ -84,11 +84,13 @@ impl Grid {
 
     #[inline]
     pub fn neuron_column(&self, gid: NeuronId) -> ColumnId {
+        // lint: allow(lossy-cast, "column count is capped to u32 by SimConfig::validate")
         (gid / self.p.neurons_per_column as u64) as ColumnId
     }
 
     #[inline]
     pub fn neuron_local(&self, gid: NeuronId) -> u32 {
+        // lint: allow(lossy-cast, "remainder is < neurons_per_column, itself a u32")
         (gid % self.p.neurons_per_column as u64) as u32
     }
 
@@ -144,10 +146,10 @@ impl Grid {
     ) -> impl Iterator<Item = (ColumnId, (i32, i32))> + 'a {
         let (cx, cy) = self.column_coords(src);
         offsets.iter().filter_map(move |&(dx, dy)| {
-            let tx = cx as i64 + dx as i64;
-            let ty = cy as i64 + dy as i64;
-            if tx >= 0 && ty >= 0 && (tx as u32) < self.p.nx && (ty as u32) < self.p.ny {
-                Some((self.column_index(tx as u32, ty as u32), (dx, dy)))
+            let tx = u32::try_from(i64::from(cx) + i64::from(dx)).ok()?;
+            let ty = u32::try_from(i64::from(cy) + i64::from(dy)).ok()?;
+            if tx < self.p.nx && ty < self.p.ny {
+                Some((self.column_index(tx, ty), (dx, dy)))
             } else {
                 None
             }

@@ -1,0 +1,137 @@
+//! `dpsnn lint` — in-tree determinism & wire-safety static analysis.
+//!
+//! Every guarantee the engine ships (bit-identical decomposition
+//! invariance across 1/2/4 ranks, reset-replay identity, pool ==
+//! direct-stepping identity) rests on source-level disciplines:
+//! counter-PRNG only, no iteration-order-dependent containers, no
+//! wall-clock in sim-visible code, checked narrowing at config/wire
+//! boundaries, audited `unsafe`. This pass makes those disciplines
+//! machine-checked — zero dependencies, a [`tokenizer`] just deep
+//! enough to never fire on literals or comments, and a per-file rule
+//! engine in [`rules`] with annotation escape hatches that require a
+//! written reason. `docs/LINTS.md` catalogues the rules; CI runs
+//! `dpsnn lint --deny` so the tree stays at zero findings.
+//!
+//! The pass is itself deterministic: files are walked in sorted order
+//! and findings are reported sorted by (file, line, rule).
+
+pub mod rules;
+pub mod tokenizer;
+
+pub use rules::{lint_source, Finding, Rule};
+
+use std::path::{Path, PathBuf};
+
+/// Lint every `*.rs` file under `root`. Paths in findings are
+/// reported relative to `root` with `/` separators.
+pub fn lint_tree(root: &Path) -> Result<Vec<Finding>, String> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for path in &files {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        findings.extend(lint_source(&rel, &src));
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(findings)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = std::fs::read_dir(dir).map_err(|e| format!("reading {}: {e}", dir.display()))?;
+    let mut entries = Vec::new();
+    for entry in rd {
+        entries.push(entry.map_err(|e| format!("walking {}: {e}", dir.display()))?.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs_files(&p, out)?;
+        } else if p.extension().and_then(|x| x.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Render findings as a JSON array for `dpsnn lint --json` (the tree
+/// has a JSON reader in `util/json` but no writer; findings are flat
+/// enough to serialize by hand).
+pub fn findings_to_json(findings: &[Finding]) -> String {
+    let mut s = String::from("[\n");
+    for (i, f) in findings.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}{}\n",
+            json_escape(&f.file),
+            f.line,
+            f.rule.name(),
+            json_escape(&f.message),
+            if i + 1 < findings.len() { "," } else { "" }
+        ));
+    }
+    s.push(']');
+    s
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn findings_serialize_to_parseable_json() {
+        let fs = lint_source("config/x.rs", "fn f(v: u64) -> u32 { v as u32 }\n");
+        assert_eq!(fs.len(), 1);
+        let doc = json::parse(&findings_to_json(&fs)).expect("valid json");
+        let arr = doc.arr().expect("array");
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("rule").and_then(json::Json::as_str), Some("lossy-cast"));
+        assert_eq!(arr[0].get("line").and_then(json::Json::num), Some(1.0));
+        assert_eq!(arr[0].get("file").and_then(json::Json::as_str), Some("config/x.rs"));
+    }
+
+    #[test]
+    fn empty_findings_serialize_to_empty_array() {
+        let doc = json::parse(&findings_to_json(&[])).expect("valid json");
+        assert_eq!(doc, json::Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn json_escaping_handles_quotes_and_newlines() {
+        let f = Finding {
+            file: "a\"b.rs".to_string(),
+            line: 3,
+            rule: Rule::Annotation,
+            message: "line1\nline2\tend".to_string(),
+        };
+        let doc = json::parse(&findings_to_json(&[f])).expect("valid json");
+        let arr = doc.arr().expect("array");
+        assert_eq!(arr[0].get("file").and_then(json::Json::as_str), Some("a\"b.rs"));
+        assert_eq!(
+            arr[0].get("message").and_then(json::Json::as_str),
+            Some("line1\nline2\tend")
+        );
+    }
+}

@@ -1,0 +1,576 @@
+//! The lint rules and the per-file engine.
+//!
+//! Each rule guards a discipline the repo's determinism and wire-format
+//! guarantees depend on (see `docs/LINTS.md` for the catalogue):
+//!
+//! * `lossy-cast` — narrowing/sign-changing `as` casts in the
+//!   config/wire/geometry/connectivity boundary modules (the bug class
+//!   behind the negative-TOML-integer wrap fixed in `config/sim.rs`);
+//! * `nondeterminism-source` — iteration-order-dependent containers,
+//!   wall-clock reads and foreign RNG anywhere in the crate;
+//! * `panic-discipline` — bare `.unwrap()` in worker-thread code,
+//!   where a panic must carry a message the poisoning machinery can
+//!   surface to the coordinator;
+//! * `unsafe-audit` — `unsafe` outside the two audited islands, or
+//!   inside them without a `SAFETY:` justification.
+//!
+//! Findings in `#[cfg(test)] mod` blocks are skipped. Legitimate
+//! exceptions are suppressed with an annotation comment (backticks in
+//! prose keep these examples from parsing as real directives):
+//! `lint: allow(<rule>, "<reason>")` covers its own and the next
+//! line; `lint: allow-file(<rule>, "<reason>")` covers the file. A
+//! malformed, reason-less or unused annotation is itself a finding
+//! (`lint-annotation`), so stale suppressions cannot linger.
+
+use super::tokenizer::{lex, Comment, Tok, TokKind};
+
+/// Path prefixes (relative to the lint root) where `lossy-cast` applies:
+/// everything that parses external input or builds the wire/geometry
+/// structures whose ids are capped by the AER u32 format.
+const LOSSY_CAST_SCOPE: [&str; 4] = ["config/", "connectivity/", "geometry/", "mpi/"];
+
+/// Target types whose `as` casts narrow or change sign from the
+/// `u64`/`i64`/`usize` values flowing at the boundaries. Wider casts
+/// (`as u64`, `as usize`, `as f64`) are delegated to clippy's
+/// type-aware cast lints — a tokenizer cannot see the source type.
+const NARROW_TYPES: [&str; 7] = ["ColumnId", "i16", "i32", "i8", "u16", "u32", "u8"];
+
+/// Identifiers that introduce nondeterminism or wall-clock time.
+const NONDET_IDENTS: [&str; 7] = [
+    "HashMap",
+    "HashSet",
+    "Instant",
+    "RandomState",
+    "SystemTime",
+    "getrandom",
+    "thread_rng",
+];
+
+/// Files whose code runs on pool worker threads: a panic here is
+/// recovered by the executor's poisoning machinery, which can only
+/// surface the message the panic carries.
+const WORKER_FILES: [&str; 3] = ["coordinator/executor.rs", "engine/process.rs", "mpi/comm.rs"];
+
+/// The only modules allowed to contain `unsafe` (enforced crate-wide
+/// by `#![deny(unsafe_code)]` + scoped allows; re-checked here so the
+/// island list lives in one greppable place).
+const UNSAFE_ISLANDS: [&str; 2] = ["util/memtrack.rs", "util/timer.rs"];
+
+/// A lint rule (or the meta rule for annotation hygiene).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    LossyCast,
+    Nondeterminism,
+    PanicDiscipline,
+    UnsafeAudit,
+    /// Malformed / reason-less / unused allow annotations.
+    Annotation,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::LossyCast => "lossy-cast",
+            Rule::Nondeterminism => "nondeterminism-source",
+            Rule::PanicDiscipline => "panic-discipline",
+            Rule::UnsafeAudit => "unsafe-audit",
+            Rule::Annotation => "lint-annotation",
+        }
+    }
+
+    /// Rules that may be named in an allow annotation (`lint-annotation`
+    /// itself is not suppressible — fix the annotation instead).
+    fn parse_allowable(s: &str) -> Option<Rule> {
+        match s {
+            "lossy-cast" => Some(Rule::LossyCast),
+            "nondeterminism-source" => Some(Rule::Nondeterminism),
+            "panic-discipline" => Some(Rule::PanicDiscipline),
+            "unsafe-audit" => Some(Rule::UnsafeAudit),
+            _ => None,
+        }
+    }
+}
+
+/// One lint finding, pointing at `file:line`.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Path relative to the lint root, with `/` separators.
+    pub file: String,
+    pub line: u32,
+    pub rule: Rule,
+    pub message: String,
+}
+
+/// A parsed allow annotation.
+struct Allow {
+    rule: Rule,
+    line: u32,
+    file_wide: bool,
+    used: bool,
+}
+
+/// Comment text with the `//`/`/*`/doc markers stripped.
+fn comment_body(text: &str) -> &str {
+    text.trim_start_matches(|c| c == '/' || c == '*' || c == '!').trim_start()
+}
+
+fn annotation(file: &str, line: u32, message: String) -> Finding {
+    Finding { file: file.to_string(), line, rule: Rule::Annotation, message }
+}
+
+/// Lint one file. `file` is the path relative to the lint root (used
+/// for rule scoping); `src` is the full source text.
+pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
+    let lexed = lex(src);
+    let excluded = test_mod_ranges(&lexed.toks);
+    let in_tests = |line: u32| excluded.iter().any(|&(a, b)| line >= a && line <= b);
+
+    let mut findings = Vec::new();
+    let mut allows = Vec::new();
+    for c in &lexed.comments {
+        if !in_tests(c.line) {
+            scan_directive(file, c, &mut allows, &mut findings);
+        }
+    }
+
+    let mut raw = Vec::new();
+    lossy_cast(file, &lexed.toks, &mut raw);
+    nondeterminism(file, &lexed.toks, &mut raw);
+    panic_discipline(file, &lexed.toks, &mut raw);
+    unsafe_audit(file, &lexed.toks, &lexed.comments, &mut raw);
+
+    for f in raw {
+        if in_tests(f.line) {
+            continue; // test modules are out of scope for every rule
+        }
+        let mut suppressed = false;
+        for a in &mut allows {
+            if a.rule == f.rule && (a.file_wide || f.line == a.line || f.line == a.line + 1) {
+                a.used = true;
+                suppressed = true;
+            }
+        }
+        if !suppressed {
+            findings.push(f);
+        }
+    }
+
+    // a suppression that suppresses nothing would hide the next real
+    // finding at that site — flag it so annotations track the code
+    for a in &allows {
+        if !a.used {
+            findings.push(annotation(
+                file,
+                a.line,
+                format!("unused lint allow for '{}': nothing suppressed", a.rule.name()),
+            ));
+        }
+    }
+    findings.sort_by(|x, y| (x.line, x.rule).cmp(&(y.line, y.rule)));
+    findings
+}
+
+/// Parse one comment as a lint directive, if it is one.
+fn scan_directive(
+    file: &str,
+    c: &Comment<'_>,
+    allows: &mut Vec<Allow>,
+    findings: &mut Vec<Finding>,
+) {
+    let Some(rest) = comment_body(c.text).strip_prefix("lint:") else {
+        return;
+    };
+    let rest = rest.trim_start();
+    let (file_wide, inner) = if let Some(r) = rest.strip_prefix("allow-file(") {
+        (true, r)
+    } else if let Some(r) = rest.strip_prefix("allow(") {
+        (false, r)
+    } else {
+        findings.push(annotation(
+            file,
+            c.line,
+            "malformed lint directive: expected allow(<rule>, \"<reason>\") or \
+             allow-file(<rule>, \"<reason>\")"
+                .to_string(),
+        ));
+        return;
+    };
+    let Some(close) = inner.rfind(')') else {
+        findings.push(annotation(file, c.line, "malformed lint directive: missing ')'".to_string()));
+        return;
+    };
+    let Some((rule_s, reason_s)) = inner[..close].split_once(',') else {
+        findings.push(annotation(
+            file,
+            c.line,
+            "lint allow without a reason: allow(<rule>, \"<reason>\")".to_string(),
+        ));
+        return;
+    };
+    let Some(rule) = Rule::parse_allowable(rule_s.trim()) else {
+        findings.push(annotation(
+            file,
+            c.line,
+            format!("unknown lint rule '{}' in allow", rule_s.trim()),
+        ));
+        return;
+    };
+    let reason = reason_s.trim();
+    if reason.len() < 3 || !reason.starts_with('"') || !reason.ends_with('"') {
+        findings.push(annotation(
+            file,
+            c.line,
+            "lint allow reason must be a non-empty quoted string".to_string(),
+        ));
+        return;
+    }
+    allows.push(Allow { rule, line: c.line, file_wide, used: false });
+}
+
+/// Line ranges (inclusive) of `#[cfg(test)] mod … { … }` blocks.
+/// Brace matching over the token stream is reliable because strings
+/// and comments never reach it.
+fn test_mod_ranges(toks: &[Tok<'_>]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let mut k = 0usize;
+    while k + 6 < toks.len() {
+        let is_cfg_test = toks[k].text == "#"
+            && toks[k + 1].text == "["
+            && toks[k + 2].text == "cfg"
+            && toks[k + 3].text == "("
+            && toks[k + 4].text == "test"
+            && toks[k + 5].text == ")"
+            && toks[k + 6].text == "]";
+        if !is_cfg_test {
+            k += 1;
+            continue;
+        }
+        let mut j = k + 7;
+        // skip further attributes (e.g. a following #[allow(…)])
+        while j + 1 < toks.len() && toks[j].text == "#" && toks[j + 1].text == "[" {
+            let mut depth = 0usize;
+            j += 1;
+            while j < toks.len() {
+                match toks[j].text {
+                    "[" => depth += 1,
+                    "]" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            j += 1;
+        }
+        if toks.get(j).map(|t| t.text) != Some("mod") {
+            k += 1; // cfg(test) on a non-mod item: leave it in scope
+            continue;
+        }
+        while j < toks.len() && toks[j].text != "{" {
+            j += 1;
+        }
+        let start_line = toks.get(j).map_or(u32::MAX, |t| t.line);
+        let mut depth = 0usize;
+        while j < toks.len() {
+            match toks[j].text {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let end_line = toks.get(j).map_or(u32::MAX, |t| t.line);
+        out.push((start_line, end_line));
+        k = j + 1;
+    }
+    out
+}
+
+fn lossy_cast(file: &str, toks: &[Tok<'_>], out: &mut Vec<Finding>) {
+    if !LOSSY_CAST_SCOPE.iter().any(|p| file.starts_with(p)) {
+        return;
+    }
+    for w in toks.windows(2) {
+        if w[0].kind == TokKind::Ident
+            && w[0].text == "as"
+            && w[1].kind == TokKind::Ident
+            && NARROW_TYPES.contains(&w[1].text)
+        {
+            out.push(Finding {
+                file: file.to_string(),
+                line: w[1].line,
+                rule: Rule::LossyCast,
+                message: format!(
+                    "narrowing `as {}` cast at a config/wire boundary; use a checked \
+                     conversion (try_from / *_key) or annotate a reason",
+                    w[1].text
+                ),
+            });
+        }
+    }
+}
+
+fn nondeterminism(file: &str, toks: &[Tok<'_>], out: &mut Vec<Finding>) {
+    for t in toks {
+        if t.kind == TokKind::Ident && NONDET_IDENTS.contains(&t.text) {
+            out.push(Finding {
+                file: file.to_string(),
+                line: t.line,
+                rule: Rule::Nondeterminism,
+                message: format!(
+                    "`{}` is a nondeterminism source; use BTreeMap/BTreeSet, util/timer \
+                     clocks, or util/prng counter streams",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+fn panic_discipline(file: &str, toks: &[Tok<'_>], out: &mut Vec<Finding>) {
+    if !WORKER_FILES.contains(&file) {
+        return;
+    }
+    for w in toks.windows(4) {
+        if w[0].text == "."
+            && w[1].kind == TokKind::Ident
+            && w[1].text == "unwrap"
+            && w[2].text == "("
+            && w[3].text == ")"
+        {
+            out.push(Finding {
+                file: file.to_string(),
+                line: w[1].line,
+                rule: Rule::PanicDiscipline,
+                message: "bare .unwrap() in worker-thread code; use expect/unwrap_or_else \
+                          with a message the panic-poisoning machinery can surface"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+fn unsafe_audit(file: &str, toks: &[Tok<'_>], comments: &[Comment<'_>], out: &mut Vec<Finding>) {
+    for t in toks {
+        if t.kind != TokKind::Ident || t.text != "unsafe" {
+            continue;
+        }
+        if UNSAFE_ISLANDS.contains(&file) {
+            let justified = comments.iter().any(|c| {
+                c.line <= t.line
+                    && c.line + 3 >= t.line
+                    && comment_body(c.text).starts_with("SAFETY:")
+            });
+            if !justified {
+                out.push(Finding {
+                    file: file.to_string(),
+                    line: t.line,
+                    rule: Rule::UnsafeAudit,
+                    message: "unsafe without a SAFETY: justification within the preceding \
+                              3 lines"
+                        .to_string(),
+                });
+            }
+        } else {
+            out.push(Finding {
+                file: file.to_string(),
+                line: t.line,
+                rule: Rule::UnsafeAudit,
+                message: "unsafe code outside the audited islands \
+                          (util/memtrack.rs, util/timer.rs)"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- lossy-cast ----
+
+    #[test]
+    fn lossy_cast_fires_in_boundary_modules() {
+        let fs = lint_source("config/sim.rs", "fn f(x: u64) -> u32 { x as u32 }\n");
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, Rule::LossyCast);
+        assert_eq!(fs[0].line, 1);
+        // ColumnId is a wire-width alias, caught like a primitive
+        let fs = lint_source("geometry/grid.rs", "fn g(x: u64) -> ColumnId { x as ColumnId }\n");
+        assert_eq!(fs.len(), 1);
+    }
+
+    #[test]
+    fn lossy_cast_allow_suppresses_with_reason() {
+        let src = "// lint: allow(lossy-cast, \"bounded by validate()\")\n\
+                   fn f(x: u64) -> u32 { x as u32 }\n";
+        assert!(lint_source("config/sim.rs", src).is_empty());
+        // trailing same-line comments work too
+        let src = "fn f(x: u64) -> u32 { x as u32 } // lint: allow(lossy-cast, \"bounded\")\n";
+        assert!(lint_source("config/sim.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lossy_cast_false_positive_guards() {
+        // `as u32` inside a comment or a string literal never fires
+        let src = "// the old `as u32` cast wrapped\n\
+                   fn f() -> &'static str { \"as u32\" }\n";
+        assert!(lint_source("config/sim.rs", src).is_empty(), "literal/comment text fired");
+        // widening casts are clippy's domain, not this rule's
+        assert!(lint_source("config/sim.rs", "fn f(x: u32) -> u64 { x as u64 }\n").is_empty());
+        // non-boundary modules are out of scope
+        assert!(lint_source("engine/foo.rs", "fn f(x: u64) -> u32 { x as u32 }\n").is_empty());
+        // a numeric literal's type suffix is not a cast target
+        assert!(lint_source("config/sim.rs", "fn f() -> u32 { 7u32 }\n").is_empty());
+    }
+
+    // ---- nondeterminism-source ----
+
+    #[test]
+    fn nondeterminism_fires_tree_wide() {
+        let fs = lint_source("engine/foo.rs", "use std::collections::HashMap;\n");
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, Rule::Nondeterminism);
+        let fs = lint_source("stimulus/foo.rs", "fn f() { let t = Instant::now(); }\n");
+        assert_eq!(fs.len(), 1, "{fs:?}");
+    }
+
+    #[test]
+    fn nondeterminism_file_allow_suppresses() {
+        let src = "// lint: allow-file(nondeterminism-source, \"timing island\")\n\
+                   use std::time::Instant;\n\
+                   fn now() -> Instant { Instant::now() }\n";
+        assert!(lint_source("util/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn nondeterminism_false_positive_guards() {
+        // mentions in comments/strings are fine; BTreeMap is the blessed map
+        let src = "// no HashMap here\nuse std::collections::BTreeMap;\n\
+                   fn f() -> &'static str { \"Instant\" }\n";
+        assert!(lint_source("engine/foo.rs", src).is_empty());
+    }
+
+    // ---- panic-discipline ----
+
+    #[test]
+    fn panic_discipline_fires_on_bare_unwrap_in_worker_files() {
+        let src = "fn f(x: Option<u64>) -> u64 { x.unwrap() }\n";
+        let fs = lint_source("mpi/comm.rs", src);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, Rule::PanicDiscipline);
+    }
+
+    #[test]
+    fn panic_discipline_allow_suppresses() {
+        let src = "// lint: allow(panic-discipline, \"infallible: len checked above\")\n\
+                   fn f(x: Option<u64>) -> u64 { x.unwrap() }\n";
+        assert!(lint_source("mpi/comm.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_discipline_false_positive_guards() {
+        // messages and fallbacks are exactly what the rule wants
+        let src = "fn f(x: Option<u64>) -> u64 { x.expect(\"routing table built\") }\n\
+                   fn g(x: Option<u64>) -> u64 { x.unwrap_or_else(|| 0) }\n\
+                   fn h(x: Option<u64>) -> u64 { x.unwrap_or_default() }\n";
+        assert!(lint_source("mpi/comm.rs", src).is_empty());
+        // non-worker files are out of scope
+        assert!(lint_source("analysis/fft.rs", "fn f(x: Option<u64>) -> u64 { x.unwrap() }\n")
+            .is_empty());
+    }
+
+    // ---- unsafe-audit ----
+
+    #[test]
+    fn unsafe_audit_requires_safety_comment_in_islands() {
+        let fs = lint_source("util/memtrack.rs", "unsafe fn f() {}\n");
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, Rule::UnsafeAudit);
+        // a SAFETY: comment within 3 lines justifies the block
+        let src = "// SAFETY: delegates to System\nunsafe fn f() {}\n";
+        assert!(lint_source("util/memtrack.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_audit_fires_outside_islands_and_allow_suppresses() {
+        let fs = lint_source("engine/foo.rs", "fn f() { unsafe { bar() } }\n");
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].message.contains("outside the audited islands"));
+        let src = "// lint: allow(unsafe-audit, \"vetted ffi experiment\")\n\
+                   fn f() { unsafe { bar() } }\n";
+        assert!(lint_source("engine/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_audit_false_positive_guards() {
+        // "unsafe" in prose or strings is not unsafe code
+        let src = "// this avoids unsafe entirely\nfn f() -> &'static str { \"unsafe\" }\n";
+        assert!(lint_source("engine/foo.rs", src).is_empty());
+    }
+
+    // ---- annotation hygiene + test-mod scoping ----
+
+    #[test]
+    fn unused_and_malformed_allows_are_findings() {
+        let cases = [
+            // unused: nothing on the next line to suppress
+            "// lint: allow(lossy-cast, \"nothing here\")\nfn f() {}\n",
+            // unknown rule name
+            "// lint: allow(speed, \"nope\")\nfn f(x: u64) -> u32 { x as u32 }\n",
+            // missing reason entirely
+            "// lint: allow(lossy-cast)\nfn f(x: u64) -> u32 { x as u32 }\n",
+            // reason not a quoted string
+            "// lint: allow(lossy-cast, because)\nfn f(x: u64) -> u32 { x as u32 }\n",
+            // not an allow form at all
+            "// lint: deny(lossy-cast)\nfn f() {}\n",
+        ];
+        for src in cases {
+            let fs = lint_source("config/sim.rs", src);
+            assert!(
+                fs.iter().any(|f| f.rule == Rule::Annotation),
+                "no annotation finding for {src:?}: {fs:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn test_modules_are_exempt() {
+        let src = "fn prod() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   fn t(x: u64) -> u32 { x.unwrap() as u32 }\n\
+                   }\n";
+        assert!(lint_source("mpi/comm.rs", src).is_empty());
+        // an attribute between cfg(test) and mod must not break the scan
+        let src = "fn prod() {}\n\
+                   #[cfg(test)]\n\
+                   #[allow(deprecated)]\n\
+                   mod tests {\n\
+                   fn t(x: u64) -> u32 { x as u32 }\n\
+                   }\n";
+        assert!(lint_source("config/sim.rs", src).is_empty());
+    }
+
+    #[test]
+    fn findings_come_out_sorted_by_line() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f(x: u64) -> u32 { x as u32 }\n\
+                   fn g(x: u64) -> u16 { x as u16 }\n";
+        let fs = lint_source("config/sim.rs", src);
+        let lines: Vec<u32> = fs.iter().map(|f| f.line).collect();
+        let mut sorted = lines.clone();
+        sorted.sort_unstable();
+        assert_eq!(lines, sorted);
+        assert_eq!(fs.len(), 3, "{fs:?}"); // one HashMap token + two casts
+    }
+}

@@ -1,0 +1,291 @@
+//! Minimal Rust tokenizer for the in-tree lint pass.
+//!
+//! Emits identifier and punctuation tokens plus a separate comment
+//! stream. String literals (including raw/byte strings), char
+//! literals and numbers are consumed but *not* emitted, so rules
+//! never fire on text inside a literal, and comments never produce
+//! code tokens. This is deliberately not a full lexer — just enough
+//! structure for the token-pattern rules in `rules.rs`.
+
+/// Token class. Numbers and literals are skipped, so only these two
+/// kinds reach the rules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+}
+
+/// One code token with its 1-based source line.
+#[derive(Clone, Copy, Debug)]
+pub struct Tok<'a> {
+    pub kind: TokKind,
+    pub text: &'a str,
+    pub line: u32,
+}
+
+/// One comment (line or block, raw text including the delimiters).
+#[derive(Clone, Copy, Debug)]
+pub struct Comment<'a> {
+    pub text: &'a str,
+    /// Line the comment *starts* on.
+    pub line: u32,
+}
+
+/// Output of [`lex`]: the code-token stream and the comment stream.
+pub struct Lexed<'a> {
+    pub toks: Vec<Tok<'a>>,
+    pub comments: Vec<Comment<'a>>,
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_continue(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Skip a `"…"` string starting at the opening quote; returns the
+/// index just past the closing quote. Tracks embedded newlines.
+fn skip_string(b: &[u8], mut i: usize, line: &mut u32) -> usize {
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'"' => return i + 1,
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Skip a raw string body starting at the first `#` or `"` after the
+/// `r`/`br` prefix; returns the index just past the closing delimiter.
+fn skip_raw_string(b: &[u8], mut i: usize, line: &mut u32) -> usize {
+    let mut hashes = 0usize;
+    while b.get(i) == Some(&b'#') {
+        hashes += 1;
+        i += 1;
+    }
+    if b.get(i) != Some(&b'"') {
+        return i; // not actually a raw string; resume normal lexing
+    }
+    i += 1;
+    while i < b.len() {
+        if b[i] == b'\n' {
+            *line += 1;
+            i += 1;
+            continue;
+        }
+        if b[i] == b'"' {
+            let mut j = i + 1;
+            let mut seen = 0usize;
+            while seen < hashes && b.get(j) == Some(&b'#') {
+                seen += 1;
+                j += 1;
+            }
+            if seen == hashes {
+                return j;
+            }
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Skip a char/byte-char literal starting at the opening `'`.
+fn skip_char_literal(b: &[u8], mut i: usize) -> usize {
+    i += 2; // past the quote and the first content byte (or backslash)
+    while i < b.len() && b[i] != b'\'' {
+        if b[i] == b'\\' {
+            i += 1;
+        }
+        i += 1;
+    }
+    i + 1
+}
+
+/// Skip a numeric literal (int/float/hex, `_` separators, type
+/// suffixes, exponents). `.` is only part of the number when followed
+/// by a digit, so `0..10` and `1.max(2)` stay intact.
+fn skip_number(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() {
+        let c = b[i];
+        if c.is_ascii_alphanumeric() || c == b'_' {
+            if (c == b'e' || c == b'E')
+                && matches!(b.get(i + 1), Some(b'+') | Some(b'-'))
+                && b.get(i + 2).is_some_and(u8::is_ascii_digit)
+            {
+                i += 2; // consume the exponent sign with its `e`
+            }
+            i += 1;
+        } else if c == b'.' && b.get(i + 1).is_some_and(u8::is_ascii_digit) {
+            i += 1;
+        } else {
+            break;
+        }
+    }
+    i
+}
+
+/// Tokenize `src` into code tokens and comments.
+pub fn lex(src: &str) -> Lexed<'_> {
+    let b = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                let start = i;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                comments.push(Comment { text: &src[start..i], line });
+            }
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                let (start, start_line) = (i, line);
+                i += 2;
+                let mut depth = 1usize;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                comments.push(Comment { text: &src[start..i], line: start_line });
+            }
+            b'"' => i = skip_string(b, i, &mut line),
+            b'\'' => {
+                let nxt = b.get(i + 1).copied();
+                let nxt2 = b.get(i + 2).copied();
+                if nxt.is_some_and(is_ident_start) && nxt2 != Some(b'\'') {
+                    // lifetime like 'a / 'static: drop the quote, lex
+                    // the name as an ordinary identifier
+                    i += 1;
+                } else {
+                    i = skip_char_literal(b, i);
+                }
+            }
+            c if is_ident_start(c) => {
+                let start = i;
+                while i < b.len() && is_ident_continue(b[i]) {
+                    i += 1;
+                }
+                let text = &src[start..i];
+                // string-literal prefixes: r"", r#""#, br"", b"", b''
+                let next = b.get(i).copied();
+                if (text == "r" || text == "br")
+                    && matches!(next, Some(b'"') | Some(b'#'))
+                {
+                    i = skip_raw_string(b, i, &mut line);
+                } else if text == "b" && next == Some(b'"') {
+                    i = skip_string(b, i, &mut line);
+                } else if text == "b" && next == Some(b'\'') {
+                    i = skip_char_literal(b, i);
+                } else {
+                    toks.push(Tok { kind: TokKind::Ident, text, line });
+                }
+            }
+            c if c.is_ascii_digit() => i = skip_number(b, i),
+            c if c.is_ascii() => {
+                toks.push(Tok { kind: TokKind::Punct, text: &src[i..i + 1], line });
+                i += 1;
+            }
+            _ => {
+                // non-ASCII outside literals/comments: skip the whole
+                // UTF-8 character without emitting (slicing mid-char
+                // would panic)
+                i += 1;
+                while i < b.len() && (b[i] & 0xC0) == 0x80 {
+                    i += 1;
+                }
+            }
+        }
+    }
+    Lexed { toks, comments }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<&str> {
+        lex(src)
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_produce_no_code_tokens() {
+        let src = "let x = \"HashMap as u32\"; // unsafe in a comment\n/* as u16 */ let y;";
+        let ids = idents(src);
+        assert_eq!(ids, vec!["let", "x", "let", "y"]);
+        let c = lex(src);
+        assert_eq!(c.comments.len(), 2);
+        assert!(c.comments[0].text.starts_with("//"));
+    }
+
+    #[test]
+    fn raw_and_byte_strings_are_skipped() {
+        let src = "let a = r#\"as u32 \"quoted\" HashMap\"#; let b2 = b\"as u8\"; let c = br\"x\";";
+        assert_eq!(idents(src), vec!["let", "a", "let", "b2", "let", "c"]);
+    }
+
+    #[test]
+    fn lifetimes_and_char_literals_disambiguate() {
+        let src = "fn f<'a>(x: &'a str) -> char { 'x' } let e = '\\n'; let u = '_';";
+        let ids = idents(src);
+        assert!(ids.contains(&"a"), "lifetime name lexes as ident: {ids:?}");
+        // the char literal 'x' must not add a second "x" ident
+        assert_eq!(ids.iter().filter(|s| **s == "x").count(), 1, "{ids:?}");
+        assert!(!ids.contains(&"n"));
+    }
+
+    #[test]
+    fn numbers_are_consumed_with_suffixes_and_exponents() {
+        // the `u32` suffix and exponent must not leak ident tokens
+        let src = "let a = 10u32 + 1_000u64; let b = 2.5e-3; let r = 0..10; let m = 1.max(2);";
+        let ids = idents(src);
+        assert!(!ids.contains(&"u32"));
+        assert!(!ids.contains(&"u64"));
+        assert!(!ids.contains(&"e"));
+        assert!(ids.contains(&"max"));
+    }
+
+    #[test]
+    fn lines_are_tracked_through_multiline_literals() {
+        let src = "let s = \"line\nline\nline\";\nlet after = 1;";
+        let l = lex(src);
+        let after = l.toks.iter().find(|t| t.text == "after").expect("after tok");
+        assert_eq!(after.line, 4);
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let src = "/* outer /* inner */ still */ let z = 1;";
+        assert_eq!(idents(src), vec!["let", "z"]);
+    }
+}

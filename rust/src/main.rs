@@ -3,6 +3,13 @@
 //! Subcommands cover running simulations from TOML configs/flags and
 //! regenerating every table/figure of the paper (DESIGN.md §5).
 
+// same policy as lib.rs: no unsafe in the binary, and the Cargo.toml
+// clippy cast warns are silenced at the crate root (docs/LINTS.md)
+#![deny(unsafe_code)]
+#![allow(clippy::cast_possible_truncation)]
+#![allow(clippy::cast_sign_loss)]
+#![allow(clippy::cast_possible_wrap)]
+
 use dpsnn::config::cli::{Args, Command};
 use dpsnn::config::{toml, ConnRule, SimConfig, Solver};
 use dpsnn::connectivity::{builtin_kernel, resolve_kernel, Stencil, KERNEL_NAMES};
@@ -33,6 +40,10 @@ fn commands() -> Vec<Command> {
             .opt("compare", "baseline BENCH.json: fail on >25% per-phase regression \
                  (a missing baseline file is seeded from this run)")
             .flag("quick", "reduced matrix (CI smoke / trajectory capture)"),
+        Command::new("lint", "determinism & wire-safety static analysis (docs/LINTS.md)")
+            .opt_default("root", "rust/src", "source root to lint")
+            .flag("deny", "exit non-zero on any finding (CI mode)")
+            .flag("json", "machine-readable findings on stdout"),
         Command::new("table1", "regenerate Table I (problem sizes)"),
         Command::new("fig2", "regenerate Fig. 2 (projection stencils)"),
         Command::new("fig5", "regenerate Fig. 5 (strong scaling, gaussian)")
@@ -237,6 +248,29 @@ fn cmd_bench(a: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `dpsnn lint`: run the in-tree static-analysis pass over a source
+/// root (default `rust/src`). Human-readable findings by default,
+/// `--json` for tooling, `--deny` to turn any finding into a non-zero
+/// exit — the mode CI runs to keep the tree at zero findings.
+fn cmd_lint(a: &Args) -> Result<(), String> {
+    let root = a.get("root").unwrap_or("rust/src");
+    let findings = dpsnn::lint::lint_tree(std::path::Path::new(root))?;
+    if a.has_flag("json") {
+        println!("{}", dpsnn::lint::findings_to_json(&findings));
+    } else if findings.is_empty() {
+        eprintln!("lint: {root} is clean");
+    } else {
+        for f in &findings {
+            println!("{}:{}: [{}] {}", f.file, f.line, f.rule.name(), f.message);
+        }
+        eprintln!("lint: {} finding(s) under {root}", findings.len());
+    }
+    if a.has_flag("deny") && !findings.is_empty() {
+        return Err(format!("lint --deny: {} finding(s) under {root}", findings.len()));
+    }
+    Ok(())
+}
+
 fn cmd_kernels() {
     let grid = Grid::new(SimConfig::gaussian(24).grid);
     println!("registered connectivity kernels (paper defaults, 1/1000 cutoff):");
@@ -287,6 +321,7 @@ fn main() {
     let result = match name.as_str() {
         "run" => cmd_run(&args),
         "bench" => cmd_bench(&args),
+        "lint" => cmd_lint(&args),
         "kernels" => {
             cmd_kernels();
             Ok(())

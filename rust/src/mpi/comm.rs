@@ -198,7 +198,8 @@ impl RankComm {
         assert_eq!(sends.len(), self.ranks() as usize);
         self.stats.record_call(class);
         for (dst, buf) in sends.into_iter().enumerate() {
-            self.send_raw(class, dst as u32, buf);
+            let dst = u32::try_from(dst).expect("rank count fits u32");
+            self.send_raw(class, dst, buf);
         }
         (0..self.ranks()).map(|src| self.recv_raw(src)).collect()
     }

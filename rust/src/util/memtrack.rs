@@ -21,6 +21,8 @@ pub struct CountingAlloc;
 
 // SAFETY: delegates all allocation to `System`; only adds counters.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: forwards the caller's layout contract to `System.alloc`;
+    // the relaxed counter updates add no aliasing or validity claims.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         let p = System.alloc(layout);
         if !p.is_null() {
@@ -31,11 +33,15 @@ unsafe impl GlobalAlloc for CountingAlloc {
         p
     }
 
+    // SAFETY: ptr/layout come from this allocator per the GlobalAlloc
+    // contract and are forwarded to `System.dealloc` unchanged.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout);
         LIVE.fetch_sub(layout.size() as u64, Ordering::Relaxed);
     }
 
+    // SAFETY: forwards the caller's ptr/layout/new_size contract to
+    // `System.realloc`; only the byte counters change on success.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         let p = System.realloc(ptr, layout, new_size);
         if !p.is_null() {

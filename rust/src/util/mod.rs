@@ -3,8 +3,13 @@
 //! offline image vendors no rand/criterion/proptest crates).
 
 pub mod json;
+// the two audited `unsafe` islands under crate-wide
+// #![deny(unsafe_code)] — every block carries a SAFETY: comment,
+// enforced by `dpsnn lint` (docs/LINTS.md)
+#[allow(unsafe_code)]
 pub mod memtrack;
 pub mod prng;
 pub mod proptest;
 pub mod stats;
+#[allow(unsafe_code)]
 pub mod timer;

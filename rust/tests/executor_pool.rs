@@ -9,6 +9,12 @@
 //! * Dropping a `Network` without any explicit shutdown terminates the
 //!   worker threads cleanly.
 
+// Cast clippy lints are package-wide warnings (Cargo.toml [lints]);
+// the boundary modules are enforced by `dpsnn lint` (docs/LINTS.md).
+#![allow(clippy::cast_possible_truncation)]
+#![allow(clippy::cast_sign_loss)]
+#![allow(clippy::cast_possible_wrap)]
+
 use std::panic::{catch_unwind, AssertUnwindSafe};
 
 use dpsnn::config::SimConfig;

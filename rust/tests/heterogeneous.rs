@@ -11,6 +11,12 @@
 //!   area follows them for its unspecified field (the PR-4 snapshot bug
 //!   detached it permanently).
 
+// Cast clippy lints are package-wide warnings (Cargo.toml [lints]);
+// the boundary modules are enforced by `dpsnn lint` (docs/LINTS.md).
+#![allow(clippy::cast_possible_truncation)]
+#![allow(clippy::cast_sign_loss)]
+#![allow(clippy::cast_possible_wrap)]
+
 use dpsnn::config::{AreaParams, GridParams, NeuronParams};
 use dpsnn::geometry::Mapping;
 use dpsnn::{ActivityProbe, Network, ProjectionParams, SimulationBuilder};

@@ -1,0 +1,43 @@
+//! The shipped tree must be lint-clean.
+//!
+//! `dpsnn lint --deny` gates CI; this test is the same check wired
+//! into `cargo test`, so a finding fails fast locally with the full
+//! list instead of surfacing one job later. See docs/LINTS.md for the
+//! rules and the allow-annotation syntax.
+
+#![allow(clippy::cast_possible_truncation)]
+#![allow(clippy::cast_sign_loss)]
+#![allow(clippy::cast_possible_wrap)]
+
+use std::path::Path;
+
+#[test]
+fn shipped_tree_has_zero_findings() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let findings = dpsnn::lint::lint_tree(&root).expect("lint walk over rust/src");
+    let rendered: Vec<String> = findings
+        .iter()
+        .map(|f| format!("{}:{}: [{}] {}", f.file, f.line, f.rule.name(), f.message))
+        .collect();
+    assert!(
+        findings.is_empty(),
+        "lint findings on the shipped tree (fix or annotate with a reason):\n{}",
+        rendered.join("\n")
+    );
+}
+
+#[test]
+fn lint_walk_visits_nested_directories() {
+    // a zero-findings result must mean "checked and clean", not
+    // "skipped": plant a finding two directories deep and confirm the
+    // walker reports it with the rule-scoping-relevant relative path
+    let base = std::env::temp_dir().join(format!("dpsnn_lint_walk_{}", std::process::id()));
+    let nested = base.join("config").join("deep");
+    std::fs::create_dir_all(&nested).expect("create temp tree");
+    std::fs::write(nested.join("x.rs"), "fn f(v: u64) -> u32 { v as u32 }\n")
+        .expect("write probe file");
+    let findings = dpsnn::lint::lint_tree(&base).expect("walk temp tree");
+    std::fs::remove_dir_all(&base).ok();
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].file, "config/deep/x.rs");
+}

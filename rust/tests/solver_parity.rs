@@ -6,6 +6,12 @@
 //! two solvers produce *statistically* equivalent — not identical —
 //! spike trains; we compare population firing rates.
 
+// Cast clippy lints are package-wide warnings (Cargo.toml [lints]);
+// the boundary modules are enforced by `dpsnn lint` (docs/LINTS.md).
+#![allow(clippy::cast_possible_truncation)]
+#![allow(clippy::cast_sign_loss)]
+#![allow(clippy::cast_possible_wrap)]
+
 use dpsnn::config::{SimConfig, Solver};
 use dpsnn::coordinator::{RunSummary, SimulationBuilder};
 
