@@ -1,0 +1,274 @@
+//! Little-endian binary primitives for the checkpoint wire format.
+//!
+//! Hand-rolled (the offline image vendors no serde): a [`Writer`] that
+//! appends fixed-width fields to a byte vector, and a [`Reader`] whose
+//! every take returns `Err` on exhaustion instead of panicking — a
+//! truncated or corrupted checkpoint must surface a named
+//! [`CheckpointError`], never a panic (the panic-discipline lint covers
+//! this module; see docs/RELIABILITY.md).
+
+use std::fmt;
+
+/// Why a checkpoint byte stream was rejected.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CheckpointError {
+    /// The stream ended before a field could be read.
+    Truncated { need: usize, have: usize },
+    /// The leading magic is not `DPSNNCKP` — not a checkpoint at all.
+    BadMagic,
+    /// A well-formed envelope of a version this build cannot read.
+    UnsupportedVersion { found: u32, supported: u32 },
+    /// The payload hash does not match the trailer: bytes were altered.
+    HashMismatch { expect: u64, found: u64 },
+    /// Structurally invalid payload (impossible count, unknown tag,
+    /// trailing bytes, ...): the named detail says which field.
+    Malformed(String),
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Truncated { need, have } => {
+                write!(f, "checkpoint truncated: need {need} more bytes, have {have}")
+            }
+            CheckpointError::BadMagic => {
+                write!(f, "not a DPSNN checkpoint (bad magic)")
+            }
+            CheckpointError::UnsupportedVersion { found, supported } => {
+                write!(
+                    f,
+                    "unsupported checkpoint version {found} (this build reads \
+                     version {supported})"
+                )
+            }
+            CheckpointError::HashMismatch { expect, found } => {
+                write!(
+                    f,
+                    "checkpoint payload corrupted: hash {found:#018x} != \
+                     trailer {expect:#018x}"
+                )
+            }
+            CheckpointError::Malformed(detail) => {
+                write!(f, "malformed checkpoint: {detail}")
+            }
+        }
+    }
+}
+
+/// FNV-1a 64-bit over a byte slice. Per byte the update is an xor
+/// followed by a multiply with an odd prime — both bijections on u64 —
+/// so any single-byte change of a same-length payload provably changes
+/// the hash (the corruption property test flips every sampled byte).
+#[must_use]
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Appends little-endian fields to a growing byte vector.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    #[must_use]
+    pub fn new() -> Self {
+        Writer { buf: Vec::new() }
+    }
+
+    #[must_use]
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u128(&mut self, v: u128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    /// Element count prefixing a sequence.
+    pub fn put_len(&mut self, n: usize) {
+        self.put_u64(n as u64);
+    }
+}
+
+/// Sequential little-endian reader; every take checks bounds.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    #[must_use]
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    #[must_use]
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CheckpointError> {
+        if self.remaining() < n {
+            return Err(CheckpointError::Truncated { need: n, have: self.remaining() });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn take_u8(&mut self) -> Result<u8, CheckpointError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn take_u32(&mut self) -> Result<u32, CheckpointError> {
+        let b = self.take(4)?;
+        let mut a = [0u8; 4];
+        a.copy_from_slice(b);
+        Ok(u32::from_le_bytes(a))
+    }
+
+    pub fn take_u64(&mut self) -> Result<u64, CheckpointError> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    pub fn take_u128(&mut self) -> Result<u128, CheckpointError> {
+        let b = self.take(16)?;
+        let mut a = [0u8; 16];
+        a.copy_from_slice(b);
+        Ok(u128::from_le_bytes(a))
+    }
+
+    pub fn take_f32(&mut self) -> Result<f32, CheckpointError> {
+        Ok(f32::from_bits(self.take_u32()?))
+    }
+
+    pub fn take_f64(&mut self) -> Result<f64, CheckpointError> {
+        Ok(f64::from_bits(self.take_u64()?))
+    }
+
+    /// Element count of a sequence whose elements occupy at least
+    /// `min_elem_bytes` each. The bound check makes a corrupted count
+    /// fail here instead of driving a huge allocation downstream.
+    pub fn take_len(&mut self, min_elem_bytes: usize) -> Result<usize, CheckpointError> {
+        let raw = self.take_u64()?;
+        if let Ok(n) = usize::try_from(raw) {
+            if n.checked_mul(min_elem_bytes).is_some_and(|b| b <= self.remaining()) {
+                return Ok(n);
+            }
+        }
+        Err(CheckpointError::Malformed(format!(
+            "sequence count {raw} exceeds the {} remaining payload bytes",
+            self.remaining()
+        )))
+    }
+
+    /// The payload must be fully consumed: trailing bytes mean the
+    /// stream and the decoder disagree about the format.
+    pub fn expect_end(&self) -> Result<(), CheckpointError> {
+        if self.remaining() != 0 {
+            return Err(CheckpointError::Malformed(format!(
+                "{} trailing bytes after the last field",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_every_primitive() {
+        let mut w = Writer::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_u128(u128::MAX / 3);
+        w.put_f32(-1.5);
+        w.put_f64(f64::NEG_INFINITY);
+        w.put_len(42);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.take_u8().unwrap(), 7);
+        assert_eq!(r.take_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.take_u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.take_u128().unwrap(), u128::MAX / 3);
+        assert_eq!(r.take_f32().unwrap(), -1.5);
+        assert_eq!(r.take_f64().unwrap(), f64::NEG_INFINITY);
+        // 42 elements of at least 0 bytes each always fit
+        assert_eq!(r.take_len(0).unwrap(), 42);
+        assert!(r.expect_end().is_ok());
+    }
+
+    #[test]
+    fn exhausted_reader_errors_instead_of_panicking() {
+        let mut r = Reader::new(&[1, 2, 3]);
+        assert!(matches!(r.take_u64(), Err(CheckpointError::Truncated { .. })));
+        // the failed take consumed nothing
+        assert_eq!(r.take_u8().unwrap(), 1);
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_malformed() {
+        let mut w = Writer::new();
+        w.put_len(1 << 40);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert!(matches!(r.take_len(8), Err(CheckpointError::Malformed(_))));
+    }
+
+    #[test]
+    fn trailing_bytes_are_malformed() {
+        let mut w = Writer::new();
+        w.put_u32(1);
+        w.put_u8(0);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        let _ = r.take_u32().unwrap();
+        assert!(matches!(r.expect_end(), Err(CheckpointError::Malformed(_))));
+    }
+
+    #[test]
+    fn fnv_distinguishes_single_byte_changes() {
+        let base = b"the quick brown fox".to_vec();
+        let h = fnv1a64(&base);
+        for i in 0..base.len() {
+            for flip in [1u8, 0x80] {
+                let mut altered = base.clone();
+                altered[i] ^= flip;
+                assert_ne!(fnv1a64(&altered), h, "byte {i} flip {flip:#x} collided");
+            }
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Versioned checkpoint/restore of a running simulation.
+//!
+//! A checkpoint is a self-describing byte envelope:
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic  "DPSNNCKP"
+//!      8     4  format version (u32 LE, currently 1)
+//!     12     8  payload length  (u64 LE)
+//!     20     n  payload — the CheckpointImage (see `state`)
+//!   20+n     8  FNV-1a 64 hash of the payload (u64 LE)
+//! ```
+//!
+//! The magic rejects foreign bytes immediately; the version is checked
+//! *before* the hash so a future-format checkpoint fails with
+//! "unsupported version", not "corrupted"; the trailer catches bit rot
+//! and truncation inside the payload. All decode paths return
+//! [`CheckpointError`] — no input can panic the decoder (property
+//! tests in `codec` and `state` drive truncation and corruption over
+//! the whole envelope). Version policy and the full wire format live
+//! in `docs/RELIABILITY.md`.
+
+pub mod codec;
+pub mod state;
+
+pub use codec::CheckpointError;
+pub use state::{
+    CheckpointImage, CounterState, PlasticityState, RankExpectation, RankState,
+};
+
+/// Leading magic of every checkpoint envelope.
+pub const CHECKPOINT_MAGIC: [u8; 8] = *b"DPSNNCKP";
+
+/// Format version this build writes and reads.
+pub const CHECKPOINT_VERSION: u32 = 1;
+
+/// Byte offset of the version field inside the envelope.
+pub const ENVELOPE_VERSION_OFFSET: usize = 8;
+
+/// Envelope bytes surrounding the payload: magic + version + length
+/// up front, hash trailer at the back.
+const ENVELOPE_OVERHEAD: usize = 8 + 4 + 8 + 8;
+
+/// Wrap a payload in the versioned envelope.
+#[must_use]
+pub fn seal(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + ENVELOPE_OVERHEAD);
+    out.extend_from_slice(&CHECKPOINT_MAGIC);
+    out.extend_from_slice(&CHECKPOINT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&codec::fnv1a64(payload).to_le_bytes());
+    out
+}
+
+/// Open an envelope: verify magic, version, length, and hash, and
+/// return the payload slice. Every failure is a named error.
+pub fn unseal(bytes: &[u8]) -> Result<&[u8], CheckpointError> {
+    if bytes.len() < ENVELOPE_OVERHEAD {
+        return Err(CheckpointError::Truncated {
+            need: ENVELOPE_OVERHEAD,
+            have: bytes.len(),
+        });
+    }
+    if bytes[..8] != CHECKPOINT_MAGIC {
+        return Err(CheckpointError::BadMagic);
+    }
+    let mut v = [0u8; 4];
+    v.copy_from_slice(&bytes[8..12]);
+    let version = u32::from_le_bytes(v);
+    if version != CHECKPOINT_VERSION {
+        return Err(CheckpointError::UnsupportedVersion {
+            found: version,
+            supported: CHECKPOINT_VERSION,
+        });
+    }
+    let mut l = [0u8; 8];
+    l.copy_from_slice(&bytes[12..20]);
+    let payload_len = u64::from_le_bytes(l);
+    let expect_total = (payload_len as u128) + ENVELOPE_OVERHEAD as u128;
+    if expect_total != bytes.len() as u128 {
+        return Err(CheckpointError::Malformed(format!(
+            "envelope declares {payload_len}-byte payload but holds {} bytes total",
+            bytes.len()
+        )));
+    }
+    let payload = &bytes[20..bytes.len() - 8];
+    let mut h = [0u8; 8];
+    h.copy_from_slice(&bytes[bytes.len() - 8..]);
+    let expect = u64::from_le_bytes(h);
+    let found = codec::fnv1a64(payload);
+    if found != expect {
+        return Err(CheckpointError::HashMismatch { expect, found });
+    }
+    Ok(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seal_unseal_roundtrips() {
+        let payload = b"hello dynamic state".to_vec();
+        let sealed = seal(&payload);
+        assert_eq!(unseal(&sealed).unwrap(), &payload[..]);
+    }
+
+    #[test]
+    fn empty_payload_is_valid() {
+        let sealed = seal(&[]);
+        assert_eq!(sealed.len(), ENVELOPE_OVERHEAD);
+        assert_eq!(unseal(&sealed).unwrap(), &[] as &[u8]);
+    }
+
+    #[test]
+    fn foreign_bytes_fail_on_magic() {
+        let sealed = seal(b"x");
+        let mut wrong = sealed;
+        wrong[0] ^= 0xFF;
+        assert_eq!(unseal(&wrong), Err(CheckpointError::BadMagic));
+    }
+
+    #[test]
+    fn version_is_checked_before_hash() {
+        // bump the version AND corrupt the payload: the version error
+        // must win, so old builds report future formats by name.
+        let mut sealed = seal(b"payload");
+        sealed[ENVELOPE_VERSION_OFFSET] = 0xFE;
+        sealed[21] ^= 0x01;
+        assert!(matches!(
+            unseal(&sealed),
+            Err(CheckpointError::UnsupportedVersion { .. })
+        ));
+    }
+
+    #[test]
+    fn payload_corruption_is_a_hash_mismatch() {
+        let mut sealed = seal(b"some payload bytes");
+        sealed[24] ^= 0x10;
+        assert!(matches!(unseal(&sealed), Err(CheckpointError::HashMismatch { .. })));
+    }
+
+    #[test]
+    fn length_mismatch_is_malformed() {
+        let mut sealed = seal(b"abc");
+        sealed.push(0);
+        assert!(matches!(unseal(&sealed), Err(CheckpointError::Malformed(_))));
+        let sealed = seal(b"abc");
+        assert!(matches!(
+            unseal(&sealed[..sealed.len() - 1]),
+            Err(CheckpointError::Malformed(_) | CheckpointError::Truncated { .. })
+        ));
+    }
+}

@@ -1,0 +1,742 @@
+//! The checkpoint image: the complete dynamic state of a run.
+//!
+//! A [`CheckpointImage`] holds one [`RankState`] per rank plus the
+//! coordinator's cursor. Everything a restored run needs to continue
+//! **bit-identically** is here — membrane/adaptation vectors, in-flight
+//! synaptic events with their delay-ring bases, the external-stimulus
+//! calendar (ring and far heap), the exact counter-PRNG stream
+//! positions, the spikes fired in the step being packed, per-area drive
+//! overrides, STDP traces and post-plasticity weights, and the
+//! deterministic event counters. Deliberately absent: CPU timings,
+//! scratch buffers, and fault-injection fire counts (recovery replay
+//! must not re-arm a transient fault; timings restart from zero).
+//!
+//! The byte layout is little-endian, length-prefixed, and wrapped by
+//! the envelope in [`crate::checkpoint`] (magic, version, FNV-1a
+//! trailer). Floats travel as raw IEEE-754 bits, so a decode is exact,
+//! not a parse — the restored trajectory cannot drift by a ULP.
+
+use crate::checkpoint::codec::{CheckpointError, Reader, Writer};
+use crate::checkpoint::{seal, unseal};
+use crate::config::{ExternalOverride, ExternalParams};
+use crate::engine::LocalSpike;
+use crate::geometry::Mapping;
+use crate::neuron::LifState;
+use crate::stimulus::CalendarEntry;
+use crate::synapse::PendingEvent;
+
+/// STDP dynamic state: pair traces plus the plastic weights themselves.
+/// The weights live in the synapse store, but under STDP they have
+/// drifted from their construction-time values, so the checkpoint must
+/// carry them (restore writes them back instead of rebuilding the
+/// store, which would also reset the `w0` clamp anchors).
+#[derive(Clone, Debug)]
+pub struct PlasticityState {
+    /// Last presynaptic spike arrival per synapse [ms].
+    pub last_pre_ms: Vec<f64>,
+    /// Last postsynaptic spike per local neuron [ms].
+    pub last_post_ms: Vec<f64>,
+    /// Accumulated, not-yet-applied weight updates per synapse.
+    pub dw: Vec<f32>,
+    /// Next scheduled bulk-apply time [ms].
+    pub next_apply_ms: f64,
+    /// Current synaptic weights, in store order.
+    pub weights: Vec<f32>,
+}
+
+/// Deterministic event counters (`EngineMetrics` minus timings).
+/// Restoring them keeps `Network::probe` totals identical between an
+/// interrupted-and-resumed run and an uninterrupted one.
+#[derive(Clone, Debug, Default)]
+pub struct CounterState {
+    pub recurrent_events: u64,
+    pub external_events: u64,
+    pub spikes: u64,
+    pub axonal_spikes_in: u64,
+    pub refractory_drops: u64,
+    /// Per-area spike totals.
+    pub area_spikes: Vec<u64>,
+}
+
+/// Dynamic state of one rank's `RankProcess`.
+#[derive(Clone, Debug)]
+pub struct RankState {
+    pub rank: u32,
+    pub n_local: u32,
+    /// LIF+SFA state per local neuron.
+    pub states: Vec<LifState>,
+    /// Delay-ring origin step at snapshot time.
+    pub queue_base: u64,
+    /// In-flight synaptic events as (arrival step, event).
+    pub queue_events: Vec<(u64, PendingEvent)>,
+    /// Stimulus-calendar origin step at snapshot time.
+    pub cal_base: u64,
+    /// Pending external-stimulus events (ring first, then far heap).
+    pub cal_entries: Vec<CalendarEntry>,
+    /// Counter-PRNG `(state, inc)` per local neuron's stimulus stream.
+    pub streams: Vec<(u128, u128)>,
+    /// Spikes emitted in the snapshot step, not yet exchanged.
+    pub fired: Vec<LocalSpike>,
+    /// Global external drive at snapshot time (mid-run sweeps move it).
+    pub external: ExternalParams,
+    /// Per-area drive overrides.
+    pub area_external: Vec<ExternalOverride>,
+    /// STDP traces and weights; `None` when plasticity is off.
+    pub plasticity: Option<PlasticityState>,
+    pub counters: CounterState,
+}
+
+/// What the live process expects of a [`RankState`] about to be
+/// restored into it. Validating against this *before* dispatching to
+/// the worker keeps the worker-side restore infallible: a checkpoint
+/// from a different network shape is rejected coordinator-side with a
+/// named error instead of poisoning the pool.
+#[derive(Clone, Debug)]
+pub struct RankExpectation {
+    pub rank: u32,
+    pub n_local: u32,
+    pub n_areas: usize,
+    /// Delay-ring length (power of two): events must land within it.
+    pub queue_slots: usize,
+    /// `Some(n_synapses)` when STDP is on, `None` when off.
+    pub n_synapses: Option<usize>,
+}
+
+impl RankState {
+    /// Check this state fits the live process described by `exp`.
+    pub fn validate(&self, exp: &RankExpectation) -> Result<(), String> {
+        let r = self.rank;
+        if r != exp.rank {
+            return Err(format!("rank mismatch: state is for rank {r}, slot is rank {}", exp.rank));
+        }
+        if self.n_local != exp.n_local {
+            return Err(format!(
+                "rank {r}: neuron count mismatch: checkpoint has {}, process has {}",
+                self.n_local, exp.n_local
+            ));
+        }
+        let n = exp.n_local as usize;
+        if self.states.len() != n {
+            return Err(format!(
+                "rank {r}: {} LIF states for {n} neurons",
+                self.states.len()
+            ));
+        }
+        if self.streams.len() != n {
+            return Err(format!(
+                "rank {r}: {} stimulus streams for {n} neurons",
+                self.streams.len()
+            ));
+        }
+        for &(step, ev) in &self.queue_events {
+            if step < self.queue_base || step - self.queue_base >= exp.queue_slots as u64 {
+                return Err(format!(
+                    "rank {r}: queued event at step {step} outside ring \
+                     [{}, {})",
+                    self.queue_base,
+                    self.queue_base + exp.queue_slots as u64
+                ));
+            }
+            if (ev.target_local as usize) >= n {
+                return Err(format!(
+                    "rank {r}: queued event targets neuron {} of {n}",
+                    ev.target_local
+                ));
+            }
+        }
+        for e in &self.cal_entries {
+            if e.step < self.cal_base {
+                return Err(format!(
+                    "rank {r}: calendar entry at step {} is before base {}",
+                    e.step, self.cal_base
+                ));
+            }
+            if (e.local as usize) >= n {
+                return Err(format!(
+                    "rank {r}: calendar entry targets neuron {} of {n}",
+                    e.local
+                ));
+            }
+        }
+        for s in &self.fired {
+            if (s.local as usize) >= n {
+                return Err(format!("rank {r}: fired spike from neuron {} of {n}", s.local));
+            }
+        }
+        if self.area_external.len() != exp.n_areas {
+            return Err(format!(
+                "rank {r}: {} area overrides for {} areas",
+                self.area_external.len(),
+                exp.n_areas
+            ));
+        }
+        if self.counters.area_spikes.len() != exp.n_areas {
+            return Err(format!(
+                "rank {r}: {} area counters for {} areas",
+                self.counters.area_spikes.len(),
+                exp.n_areas
+            ));
+        }
+        match (&self.plasticity, exp.n_synapses) {
+            (None, None) => {}
+            (Some(p), Some(n_syn)) => {
+                if p.last_pre_ms.len() != n_syn
+                    || p.dw.len() != n_syn
+                    || p.weights.len() != n_syn
+                {
+                    return Err(format!(
+                        "rank {r}: plasticity arrays sized {}/{}/{} for {n_syn} synapses",
+                        p.last_pre_ms.len(),
+                        p.dw.len(),
+                        p.weights.len()
+                    ));
+                }
+                if p.last_post_ms.len() != n {
+                    return Err(format!(
+                        "rank {r}: {} post traces for {n} neurons",
+                        p.last_post_ms.len()
+                    ));
+                }
+            }
+            (None, Some(_)) => {
+                return Err(format!(
+                    "rank {r}: checkpoint has no STDP state but plasticity is on"
+                ));
+            }
+            (Some(_), None) => {
+                return Err(format!(
+                    "rank {r}: checkpoint carries STDP state but plasticity is off"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn encode_into(&self, w: &mut Writer) {
+        w.put_u32(self.rank);
+        w.put_u32(self.n_local);
+        w.put_len(self.states.len());
+        for s in &self.states {
+            w.put_f64(s.v);
+            w.put_f64(s.c);
+            w.put_f64(s.last_t);
+            w.put_f64(s.refr_until);
+        }
+        w.put_u64(self.queue_base);
+        w.put_len(self.queue_events.len());
+        for &(step, ev) in &self.queue_events {
+            w.put_u64(step);
+            w.put_f32(ev.offset_ms);
+            w.put_u32(ev.target_local);
+            w.put_f32(ev.weight);
+            w.put_u32(ev.syn_idx);
+        }
+        w.put_u64(self.cal_base);
+        w.put_len(self.cal_entries.len());
+        for e in &self.cal_entries {
+            w.put_u64(e.step);
+            w.put_u32(e.local);
+            w.put_f64(e.time_ms);
+        }
+        w.put_len(self.streams.len());
+        for &(state, inc) in &self.streams {
+            w.put_u128(state);
+            w.put_u128(inc);
+        }
+        w.put_len(self.fired.len());
+        for s in &self.fired {
+            w.put_u32(s.local);
+            w.put_u32(s.t_us);
+        }
+        w.put_u32(self.external.synapses_per_neuron);
+        w.put_f64(self.external.rate_hz);
+        w.put_len(self.area_external.len());
+        for o in &self.area_external {
+            match o.synapses_per_neuron {
+                Some(v) => {
+                    w.put_u8(1);
+                    w.put_u32(v);
+                }
+                None => w.put_u8(0),
+            }
+            match o.rate_hz {
+                Some(v) => {
+                    w.put_u8(1);
+                    w.put_f64(v);
+                }
+                None => w.put_u8(0),
+            }
+        }
+        match &self.plasticity {
+            Some(p) => {
+                w.put_u8(1);
+                w.put_len(p.last_pre_ms.len());
+                for &t in &p.last_pre_ms {
+                    w.put_f64(t);
+                }
+                w.put_len(p.last_post_ms.len());
+                for &t in &p.last_post_ms {
+                    w.put_f64(t);
+                }
+                w.put_len(p.dw.len());
+                for &d in &p.dw {
+                    w.put_f32(d);
+                }
+                w.put_f64(p.next_apply_ms);
+                w.put_len(p.weights.len());
+                for &wt in &p.weights {
+                    w.put_f32(wt);
+                }
+            }
+            None => w.put_u8(0),
+        }
+        w.put_u64(self.counters.recurrent_events);
+        w.put_u64(self.counters.external_events);
+        w.put_u64(self.counters.spikes);
+        w.put_u64(self.counters.axonal_spikes_in);
+        w.put_u64(self.counters.refractory_drops);
+        w.put_len(self.counters.area_spikes.len());
+        for &a in &self.counters.area_spikes {
+            w.put_u64(a);
+        }
+    }
+
+    fn decode_from(r: &mut Reader<'_>) -> Result<RankState, CheckpointError> {
+        let rank = r.take_u32()?;
+        let n_local = r.take_u32()?;
+        let n_states = r.take_len(32)?;
+        let mut states = Vec::with_capacity(n_states);
+        for _ in 0..n_states {
+            states.push(LifState {
+                v: r.take_f64()?,
+                c: r.take_f64()?,
+                last_t: r.take_f64()?,
+                refr_until: r.take_f64()?,
+            });
+        }
+        let queue_base = r.take_u64()?;
+        let n_queue = r.take_len(24)?;
+        let mut queue_events = Vec::with_capacity(n_queue);
+        for _ in 0..n_queue {
+            let step = r.take_u64()?;
+            let ev = PendingEvent {
+                offset_ms: r.take_f32()?,
+                target_local: r.take_u32()?,
+                weight: r.take_f32()?,
+                syn_idx: r.take_u32()?,
+            };
+            queue_events.push((step, ev));
+        }
+        let cal_base = r.take_u64()?;
+        let n_cal = r.take_len(20)?;
+        let mut cal_entries = Vec::with_capacity(n_cal);
+        for _ in 0..n_cal {
+            cal_entries.push(CalendarEntry {
+                step: r.take_u64()?,
+                local: r.take_u32()?,
+                time_ms: r.take_f64()?,
+            });
+        }
+        let n_streams = r.take_len(32)?;
+        let mut streams = Vec::with_capacity(n_streams);
+        for _ in 0..n_streams {
+            let state = r.take_u128()?;
+            let inc = r.take_u128()?;
+            streams.push((state, inc));
+        }
+        let n_fired = r.take_len(8)?;
+        let mut fired = Vec::with_capacity(n_fired);
+        for _ in 0..n_fired {
+            fired.push(LocalSpike { local: r.take_u32()?, t_us: r.take_u32()? });
+        }
+        let external = ExternalParams {
+            synapses_per_neuron: r.take_u32()?,
+            rate_hz: r.take_f64()?,
+        };
+        let n_areas = r.take_len(2)?;
+        let mut area_external = Vec::with_capacity(n_areas);
+        for _ in 0..n_areas {
+            let synapses_per_neuron = match r.take_u8()? {
+                0 => None,
+                1 => Some(r.take_u32()?),
+                t => {
+                    return Err(CheckpointError::Malformed(format!(
+                        "override synapse tag {t} (expected 0 or 1)"
+                    )))
+                }
+            };
+            let rate_hz = match r.take_u8()? {
+                0 => None,
+                1 => Some(r.take_f64()?),
+                t => {
+                    return Err(CheckpointError::Malformed(format!(
+                        "override rate tag {t} (expected 0 or 1)"
+                    )))
+                }
+            };
+            area_external.push(ExternalOverride { synapses_per_neuron, rate_hz });
+        }
+        let plasticity = match r.take_u8()? {
+            0 => None,
+            1 => {
+                let n_pre = r.take_len(8)?;
+                let mut last_pre_ms = Vec::with_capacity(n_pre);
+                for _ in 0..n_pre {
+                    last_pre_ms.push(r.take_f64()?);
+                }
+                let n_post = r.take_len(8)?;
+                let mut last_post_ms = Vec::with_capacity(n_post);
+                for _ in 0..n_post {
+                    last_post_ms.push(r.take_f64()?);
+                }
+                let n_dw = r.take_len(4)?;
+                let mut dw = Vec::with_capacity(n_dw);
+                for _ in 0..n_dw {
+                    dw.push(r.take_f32()?);
+                }
+                let next_apply_ms = r.take_f64()?;
+                let n_w = r.take_len(4)?;
+                let mut weights = Vec::with_capacity(n_w);
+                for _ in 0..n_w {
+                    weights.push(r.take_f32()?);
+                }
+                Some(PlasticityState { last_pre_ms, last_post_ms, dw, next_apply_ms, weights })
+            }
+            t => {
+                return Err(CheckpointError::Malformed(format!(
+                    "plasticity tag {t} (expected 0 or 1)"
+                )))
+            }
+        };
+        let recurrent_events = r.take_u64()?;
+        let external_events = r.take_u64()?;
+        let spikes = r.take_u64()?;
+        let axonal_spikes_in = r.take_u64()?;
+        let refractory_drops = r.take_u64()?;
+        let n_area_counts = r.take_len(8)?;
+        let mut area_spikes = Vec::with_capacity(n_area_counts);
+        for _ in 0..n_area_counts {
+            area_spikes.push(r.take_u64()?);
+        }
+        Ok(RankState {
+            rank,
+            n_local,
+            states,
+            queue_base,
+            queue_events,
+            cal_base,
+            cal_entries,
+            streams,
+            fired,
+            external,
+            area_external,
+            plasticity,
+            counters: CounterState {
+                recurrent_events,
+                external_events,
+                spikes,
+                axonal_spikes_in,
+                refractory_drops,
+                area_spikes,
+            },
+        })
+    }
+}
+
+/// A whole-network checkpoint: identity header + one state per rank.
+#[derive(Clone, Debug)]
+pub struct CheckpointImage {
+    /// Master seed — a checkpoint only restores into the same build.
+    pub seed: u64,
+    /// Time-driven step width [ms]; t_us↔step mapping depends on it.
+    pub dt_ms: f64,
+    pub ranks: u32,
+    pub mapping: Mapping,
+    /// Whether STDP was on (every rank then carries trace state).
+    pub stdp: bool,
+    /// Coordinator step cursor at snapshot time.
+    pub step_cursor: u64,
+    /// Cumulative simulated-time target handed to workers so far [ms].
+    pub time_target_ms: f64,
+    /// Per-rank dynamic state, indexed by rank.
+    pub states: Vec<RankState>,
+}
+
+fn mapping_tag(m: Mapping) -> u8 {
+    match m {
+        Mapping::Block => 0,
+        Mapping::RoundRobin => 1,
+    }
+}
+
+impl CheckpointImage {
+    /// Serialize into a sealed envelope (magic, version, hash trailer).
+    #[must_use]
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_u64(self.seed);
+        w.put_f64(self.dt_ms);
+        w.put_u32(self.ranks);
+        w.put_u8(mapping_tag(self.mapping));
+        w.put_u8(u8::from(self.stdp));
+        w.put_u64(self.step_cursor);
+        w.put_f64(self.time_target_ms);
+        w.put_len(self.states.len());
+        for s in &self.states {
+            s.encode_into(&mut w);
+        }
+        seal(&w.into_bytes())
+    }
+
+    /// Parse a sealed envelope back into an image. Every failure mode —
+    /// truncation, bit flips, foreign bytes, future versions — is an
+    /// `Err`; this function cannot panic on any input.
+    pub fn decode(bytes: &[u8]) -> Result<CheckpointImage, CheckpointError> {
+        let payload = unseal(bytes)?;
+        let mut r = Reader::new(payload);
+        let seed = r.take_u64()?;
+        let dt_ms = r.take_f64()?;
+        let ranks = r.take_u32()?;
+        let mapping = match r.take_u8()? {
+            0 => Mapping::Block,
+            1 => Mapping::RoundRobin,
+            t => {
+                return Err(CheckpointError::Malformed(format!(
+                    "mapping tag {t} (expected 0 or 1)"
+                )))
+            }
+        };
+        let stdp = match r.take_u8()? {
+            0 => false,
+            1 => true,
+            t => {
+                return Err(CheckpointError::Malformed(format!(
+                    "stdp tag {t} (expected 0 or 1)"
+                )))
+            }
+        };
+        let step_cursor = r.take_u64()?;
+        let time_target_ms = r.take_f64()?;
+        let n_states = r.take_len(64)?;
+        if n_states != ranks as usize {
+            return Err(CheckpointError::Malformed(format!(
+                "{n_states} rank states in a {ranks}-rank checkpoint"
+            )));
+        }
+        let mut states = Vec::with_capacity(n_states);
+        for _ in 0..n_states {
+            states.push(RankState::decode_from(&mut r)?);
+        }
+        r.expect_end()?;
+        Ok(CheckpointImage {
+            seed,
+            dt_ms,
+            ranks,
+            mapping,
+            stdp,
+            step_cursor,
+            time_target_ms,
+            states,
+        })
+    }
+}
+
+#[cfg(test)]
+// test-data generation narrows random u64s into index-sized fields freely
+#[allow(clippy::cast_possible_truncation)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::{CHECKPOINT_VERSION, ENVELOPE_VERSION_OFFSET};
+    use crate::util::prng::Pcg64;
+    use crate::util::proptest::Cases;
+
+    fn wide_f64(rng: &mut Pcg64) -> f64 {
+        (rng.next_u64() as f64).mul_add(1e-6, -4.0e12)
+    }
+
+    fn wide_u128(rng: &mut Pcg64) -> u128 {
+        ((rng.next_u64() as u128) << 64) | rng.next_u64() as u128
+    }
+
+    fn arbitrary_state(rng: &mut Pcg64, rank: u32, with_stdp: bool) -> RankState {
+        let n_local = 1 + rng.next_below(7) as u32;
+        let n = n_local as usize;
+        let n_areas = 1 + rng.next_below(3) as usize;
+        let n_syn = 1 + rng.next_below(11) as usize;
+        let queue_base = rng.next_below(1_000);
+        let cal_base = rng.next_below(1_000);
+        let states = (0..n)
+            .map(|_| LifState {
+                v: wide_f64(rng),
+                c: wide_f64(rng),
+                last_t: wide_f64(rng),
+                refr_until: if rng.next_below(4) == 0 {
+                    f64::NEG_INFINITY
+                } else {
+                    wide_f64(rng)
+                },
+            })
+            .collect();
+        let queue_events = (0..rng.next_below(5))
+            .map(|_| {
+                (
+                    queue_base + rng.next_below(8),
+                    PendingEvent {
+                        offset_ms: rng.next_f32(),
+                        target_local: rng.next_below(n_local as u64) as u32,
+                        weight: rng.next_f32() - 0.4,
+                        syn_idx: rng.next_u32(),
+                    },
+                )
+            })
+            .collect();
+        let cal_entries = (0..rng.next_below(5))
+            .map(|_| CalendarEntry {
+                step: cal_base + rng.next_below(500),
+                local: rng.next_below(n_local as u64) as u32,
+                time_ms: rng.next_below(1_000_000) as f64 * 1e-3,
+            })
+            .collect();
+        let streams = (0..n).map(|_| (wide_u128(rng), wide_u128(rng) | 1)).collect();
+        let fired = (0..rng.next_below(3))
+            .map(|_| LocalSpike {
+                local: rng.next_below(n_local as u64) as u32,
+                t_us: rng.next_u32(),
+            })
+            .collect();
+        let area_external = (0..n_areas)
+            .map(|_| ExternalOverride {
+                synapses_per_neuron: (rng.next_below(2) == 0)
+                    .then(|| rng.next_below(600) as u32),
+                rate_hz: (rng.next_below(2) == 0).then(|| rng.next_below(120) as f64 * 0.25),
+            })
+            .collect();
+        let plasticity = with_stdp.then(|| PlasticityState {
+            last_pre_ms: (0..n_syn).map(|_| wide_f64(rng)).collect(),
+            last_post_ms: (0..n).map(|_| wide_f64(rng)).collect(),
+            dw: (0..n_syn).map(|_| rng.next_f32() * 1e-2).collect(),
+            next_apply_ms: rng.next_below(10_000) as f64,
+            weights: (0..n_syn).map(|_| rng.next_f32()).collect(),
+        });
+        RankState {
+            rank,
+            n_local,
+            states,
+            queue_base,
+            queue_events,
+            cal_base,
+            cal_entries,
+            streams,
+            fired,
+            external: ExternalParams {
+                synapses_per_neuron: rng.next_below(600) as u32,
+                rate_hz: rng.next_below(120) as f64 * 0.25,
+            },
+            area_external,
+            plasticity,
+            counters: CounterState {
+                recurrent_events: rng.next_u64(),
+                external_events: rng.next_u64(),
+                spikes: rng.next_u64(),
+                axonal_spikes_in: rng.next_u64(),
+                refractory_drops: rng.next_u64(),
+                area_spikes: (0..n_areas).map(|_| rng.next_u64()).collect(),
+            },
+        }
+    }
+
+    fn arbitrary_image(rng: &mut Pcg64) -> CheckpointImage {
+        let ranks = 1 + rng.next_below(4) as u32;
+        let stdp = rng.next_below(2) == 0;
+        CheckpointImage {
+            seed: rng.next_u64(),
+            dt_ms: 0.1 + rng.next_below(10) as f64 * 0.1,
+            ranks,
+            mapping: if rng.next_below(2) == 0 { Mapping::Block } else { Mapping::RoundRobin },
+            stdp,
+            step_cursor: rng.next_below(1_000_000),
+            time_target_ms: rng.next_below(1_000_000) as f64 * 0.1,
+            states: (0..ranks).map(|r| arbitrary_state(rng, r, stdp)).collect(),
+        }
+    }
+
+    #[test]
+    fn encode_decode_encode_is_byte_identical() {
+        Cases::new("ckpt_roundtrip", 40).run(|g| {
+            let img = arbitrary_image(&mut g.rng);
+            let bytes = img.encode();
+            let back = CheckpointImage::decode(&bytes).expect("decode of own encode");
+            g.assert_eq(back.encode(), bytes, "reencoded bytes match");
+        });
+    }
+
+    #[test]
+    fn every_truncation_is_an_error_never_a_panic() {
+        Cases::new("ckpt_truncation", 20).run(|g| {
+            let img = arbitrary_image(&mut g.rng);
+            let bytes = img.encode();
+            let cut = g.rng.next_below(bytes.len() as u64) as usize;
+            g.assert_true(
+                CheckpointImage::decode(&bytes[..cut]).is_err(),
+                &format!("truncation at {cut}/{} is Err", bytes.len()),
+            );
+        });
+    }
+
+    #[test]
+    fn every_corrupted_byte_is_an_error_never_a_panic() {
+        Cases::new("ckpt_corruption", 40).run(|g| {
+            let img = arbitrary_image(&mut g.rng);
+            let mut bytes = img.encode();
+            let at = g.rng.next_below(bytes.len() as u64) as usize;
+            let flip = 1u8 << g.rng.next_below(8);
+            bytes[at] ^= flip;
+            g.assert_true(
+                CheckpointImage::decode(&bytes).is_err(),
+                &format!("flip {flip:#04x} at byte {at} is Err"),
+            );
+        });
+    }
+
+    #[test]
+    fn future_version_is_rejected_by_name() {
+        let mut rng = Pcg64::new(7, 0);
+        let img = arbitrary_image(&mut rng);
+        let mut bytes = img.encode();
+        let v = (CHECKPOINT_VERSION + 1).to_le_bytes();
+        bytes[ENVELOPE_VERSION_OFFSET..ENVELOPE_VERSION_OFFSET + 4].copy_from_slice(&v);
+        match CheckpointImage::decode(&bytes) {
+            Err(CheckpointError::UnsupportedVersion { found, supported }) => {
+                assert_eq!(found, CHECKPOINT_VERSION + 1);
+                assert_eq!(supported, CHECKPOINT_VERSION);
+            }
+            other => panic!("expected UnsupportedVersion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn validation_rejects_shape_mismatches_by_name() {
+        let mut rng = Pcg64::new(11, 0);
+        let st = arbitrary_state(&mut rng, 0, false);
+        let exp = RankExpectation {
+            rank: 0,
+            n_local: st.n_local,
+            n_areas: st.area_external.len(),
+            queue_slots: 16,
+            n_synapses: None,
+        };
+        assert!(st.validate(&exp).is_ok());
+        let mut wrong = exp.clone();
+        wrong.rank = 1;
+        assert!(st.validate(&wrong).unwrap_err().contains("rank mismatch"));
+        let mut wrong = exp.clone();
+        wrong.n_local += 1;
+        assert!(st.validate(&wrong).unwrap_err().contains("neuron count mismatch"));
+        let mut wrong = exp.clone();
+        wrong.n_areas += 1;
+        assert!(st.validate(&wrong).unwrap_err().contains("area"));
+        let mut wrong = exp;
+        wrong.n_synapses = Some(3);
+        assert!(st.validate(&wrong).unwrap_err().contains("plasticity is on"));
+    }
+}

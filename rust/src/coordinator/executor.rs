@@ -14,7 +14,8 @@
 //!             ┌────────────────────────────────────────────┐
 //!             │ Network (coordinator thread)               │
 //!             │   cmd_tx[r]: Run{step0,steps,observe}      │
-//!             │              Probe | Reset | Shutdown      │
+//!             │              Probe | Reset | Snapshot      │
+//!             │              Restore{state} | Shutdown     │
 //!             └──────┬──────────────┬──────────────┬───────┘
 //!                    ▼              ▼              ▼
 //!              worker rank0   worker rank1   worker rankR-1   (threads
@@ -22,7 +23,7 @@
 //!                    │              │              │           Shutdown
 //!                    └── virtual-MPI collectives ──┘           or Drop)
 //!                                   │
-//!                    reply_rx: Done{frames} | Panicked{msg}
+//!                    reply_rx: Done{frames,state} | Panicked{msg}
 //! ```
 //!
 //! Shared state: each rank's `(RankProcess, RankComm)` lives in an
@@ -37,12 +38,26 @@
 //! A panic inside a rank (construction bugs, injected faults) unwinds
 //! into the worker's `catch_unwind`, which [`RankComm::hang_up`]s the
 //! rank's outgoing channels before reporting `Panicked`. Peers blocked
-//! mid-collective on the dead rank wake with "sender rank hung up",
-//! panic in turn, and cascade — every worker reports exactly once, so
-//! the coordinator never deadlocks collecting replies. The executor
-//! then refuses all further commands with the *root* panic payload
-//! (cascade panics are recognized and not allowed to mask it): the
-//! session is poisoned, not wedged.
+//! mid-collective on the dead rank wake with a "hung up" panic, panic
+//! in turn, and cascade — every worker reports exactly once, so the
+//! coordinator never deadlocks collecting replies. The executor then
+//! refuses all further commands with the *root* panic payload (cascade
+//! panics are recognized and not allowed to mask it): the session is
+//! poisoned, not wedged.
+//!
+//! ## Watchdog and recovery
+//!
+//! Poisoning used to be terminal. Two escapes exist now (both driven by
+//! `RunOptions`, see docs/RELIABILITY.md):
+//!
+//! * a **watchdog** deadline on [`Executor::collect`]: a rank that
+//!   never replies (a hang, not a panic) poisons the session with a
+//!   message *naming the stuck rank* instead of blocking the
+//!   coordinator forever. Stuck workers are detached, never joined.
+//! * [`Executor::recover`] rebuilds the pool around the surviving
+//!   simulation state: fresh communicator matrix, fresh channels,
+//!   fresh worker threads. The session layer then replays from its
+//!   last auto-checkpoint.
 //!
 //! ## Phase timings
 //!
@@ -55,15 +70,17 @@
 //! spawn-churn win itself.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
+use crate::checkpoint::{RankExpectation, RankState};
 use crate::config::ExternalParams;
 use crate::engine::metrics::PHASES;
-use crate::engine::process::RankProcess;
+use crate::engine::process::{FaultMode, RankProcess};
 use crate::engine::RankReport;
-use crate::mpi::{panic_message, RankComm};
+use crate::mpi::{panic_message, Cluster, RankComm};
 
 /// One rank's persistent state: the simulation process plus its
 /// communicator, created at build time and reused for every command.
@@ -73,7 +90,7 @@ pub(crate) struct RankSlot {
 }
 
 /// Commands the coordinator sends to a rank worker.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 enum Command {
     /// Drive `steps` time-driven steps starting at `step0`, with
     /// per-step column-spike observation on or off. The reply carries
@@ -93,6 +110,14 @@ enum Command {
     /// reseeding only that area's stimulus calendar). Typed like
     /// `Run`/`Reset` so sweeps ride the same dispatch/reply protocol.
     SetExternal { area: Option<u32>, external: ExternalParams },
+    /// Capture the rank's dynamic state; it rides back on the reply
+    /// (`checkpoint/` serializes the collected records).
+    Snapshot,
+    /// Overwrite the rank's dynamic state from a checkpoint record
+    /// (shape-validated coordinator-side before dispatch, so the
+    /// worker-side restore cannot fail), then optionally re-zero the
+    /// time origin by `rebase_delta` dt-steps (`RankProcess::rebase`).
+    Restore { state: Box<RankState>, rebase_delta: u64 },
     /// Exit the worker thread.
     Shutdown,
 }
@@ -108,8 +133,17 @@ pub(crate) struct ObserveFrame {
 }
 
 enum Reply {
-    Done { rank: u32, frames: Vec<ObserveFrame> },
+    Done { rank: u32, frames: Vec<ObserveFrame>, state: Option<Box<RankState>> },
     Panicked { rank: u32, msg: String },
+}
+
+/// What one command produced on a worker, before the reply is sent.
+/// Split out so reply-time faults act *after* the slot lock drops: a
+/// hung worker must not wedge `summary()`/`with_slots` readers.
+struct CmdOutcome {
+    frames: Vec<ObserveFrame>,
+    state: Option<Box<RankState>>,
+    reply_fault: Option<FaultMode>,
 }
 
 /// The worker pool. Owned by `Network`; dropped ⇒ workers shut down.
@@ -118,6 +152,13 @@ pub(crate) struct Executor {
     cmd_tx: Vec<Sender<Command>>,
     reply_rx: Receiver<Reply>,
     handles: Vec<JoinHandle<()>>,
+    /// Per-reply watchdog deadline [ms]; `None` blocks forever (the
+    /// historical behavior).
+    watchdog_timeout_ms: Option<u64>,
+    /// Ranks whose worker never replied within the watchdog deadline.
+    /// Their threads may be parked or wedged forever: teardown and
+    /// recovery detach them instead of joining.
+    hung: Vec<bool>,
     /// Root panic message once any rank died; all further commands are
     /// refused with it.
     poisoned: Option<String>,
@@ -125,31 +166,27 @@ pub(crate) struct Executor {
 
 impl Executor {
     /// Spawn one persistent worker per rank, seeded with the
-    /// already-constructed rank state.
-    pub fn launch(pairs: Vec<(RankProcess, RankComm)>) -> Executor {
+    /// already-constructed rank state. `watchdog_timeout_ms` bounds
+    /// every per-rank command reply; `None` waits forever.
+    pub fn launch(
+        pairs: Vec<(RankProcess, RankComm)>,
+        watchdog_timeout_ms: Option<u64>,
+    ) -> Executor {
         let slots: Vec<Arc<Mutex<RankSlot>>> = pairs
             .into_iter()
             .map(|(proc, comm)| Arc::new(Mutex::new(RankSlot { proc, comm })))
             .collect();
-        let (reply_tx, reply_rx) = channel();
-        let mut cmd_tx = Vec::with_capacity(slots.len());
-        let mut handles = Vec::with_capacity(slots.len());
-        for (rank, slot) in slots.iter().enumerate() {
-            let (tx, rx) = channel();
-            cmd_tx.push(tx);
-            let slot = Arc::clone(slot);
-            let reply_tx = reply_tx.clone();
-            let h = std::thread::Builder::new()
-                .name(format!("rank{rank}"))
-                .stack_size(8 << 20)
-                .spawn(move || worker(rank as u32, &slot, &rx, &reply_tx))
-                .expect("spawn rank worker thread");
-            handles.push(h);
+        let n = slots.len();
+        let (cmd_tx, reply_rx, handles) = spawn_workers(&slots);
+        Executor {
+            slots,
+            cmd_tx,
+            reply_rx,
+            handles,
+            watchdog_timeout_ms,
+            hung: vec![false; n],
+            poisoned: None,
         }
-        // workers hold the only reply senders: reply_rx disconnects iff
-        // every worker exited, which collect() treats as poisoning
-        drop(reply_tx);
-        Executor { slots, cmd_tx, reply_rx, handles, poisoned: None }
     }
 
     /// The root panic message, if any rank has died.
@@ -168,12 +205,12 @@ impl Executor {
         steps: u64,
         observe: bool,
     ) -> Result<Vec<Vec<ObserveFrame>>, String> {
-        self.dispatch(Command::Run { step0, steps, observe })
+        self.dispatch_each(|_| Command::Run { step0, steps, observe }).map(|(f, _)| f)
     }
 
     /// Snapshot every rank's observation frame without stepping.
     pub fn probe(&mut self) -> Result<Vec<ObserveFrame>, String> {
-        let per_rank = self.dispatch(Command::Probe)?;
+        let (per_rank, _) = self.dispatch_each(|_| Command::Probe)?;
         Ok(per_rank
             .into_iter()
             .map(|mut frames| {
@@ -186,7 +223,7 @@ impl Executor {
     /// Rewind every rank's dynamics to t = 0 (in parallel) and restart
     /// the per-rank comm statistics.
     pub fn reset(&mut self) -> Result<(), String> {
-        self.dispatch(Command::Reset).map(|_| ())
+        self.dispatch_each(|_| Command::Reset).map(|_| ())
     }
 
     /// Swap the external drive on every rank: the global drive
@@ -198,7 +235,77 @@ impl Executor {
         area: Option<u32>,
         external: ExternalParams,
     ) -> Result<(), String> {
-        self.dispatch(Command::SetExternal { area, external }).map(|_| ())
+        self.dispatch_each(|_| Command::SetExternal { area, external }).map(|_| ())
+    }
+
+    /// Capture every rank's dynamic state, in parallel, ordered by
+    /// rank (the building block of `Network::checkpoint`).
+    pub fn snapshot(&mut self) -> Result<Vec<RankState>, String> {
+        let (_, states) = self.dispatch_each(|_| Command::Snapshot)?;
+        states
+            .into_iter()
+            .enumerate()
+            .map(|(r, s)| {
+                s.map(|b| *b).ok_or_else(|| format!("rank {r} returned no snapshot"))
+            })
+            .collect()
+    }
+
+    /// Overwrite every rank's dynamic state from checkpoint records
+    /// (one per rank, in rank order), rebasing the time origin by
+    /// `rebase_delta` dt-steps. The caller MUST have validated every
+    /// record against [`Executor::expectations`] — a shape mismatch
+    /// slipping through panics the worker and poisons the session.
+    pub fn restore(
+        &mut self,
+        states: Vec<RankState>,
+        rebase_delta: u64,
+    ) -> Result<(), String> {
+        assert_eq!(states.len(), self.slots.len(), "one restore record per rank");
+        let mut boxed: Vec<Option<Box<RankState>>> =
+            states.into_iter().map(|s| Some(Box::new(s))).collect();
+        self.dispatch_each(|r| Command::Restore {
+            state: boxed[r].take().expect("restore record already dispatched"),
+            rebase_delta,
+        })
+        .map(|_| ())
+    }
+
+    /// Per-rank shape signatures for coordinator-side checkpoint
+    /// validation (see `RankState::validate`).
+    pub fn expectations(&self) -> Vec<RankExpectation> {
+        self.with_slots(|slot| slot.proc.expectation())
+    }
+
+    /// Rebuild the pool around the surviving simulation state after a
+    /// poisoning: fresh communicator matrix (the old one has hung-up
+    /// channels), fresh command/reply channels, fresh worker threads.
+    /// Hung workers are detached; exited workers are joined. The
+    /// `RankProcess` state in the slots is kept as-is — the session
+    /// layer restores it from its last auto-checkpoint afterwards.
+    pub fn recover(&mut self) {
+        // closing the command channels errors every live worker's recv,
+        // so each exits its loop; then join the joinable ones
+        self.cmd_tx.clear();
+        let hung = std::mem::replace(&mut self.hung, vec![false; self.slots.len()]);
+        for (rank, h) in self.handles.drain(..).enumerate() {
+            if hung.get(rank).copied().unwrap_or(false) {
+                drop(h); // parked or wedged forever: detach
+            } else {
+                let _ = h.join();
+            }
+        }
+        let ranks = u32::try_from(self.slots.len()).expect("rank count fits u32");
+        let cluster = Cluster::new(ranks);
+        for (rank, slot) in (0_u32..).zip(self.slots.iter()) {
+            let mut guard = slot.lock().unwrap_or_else(PoisonError::into_inner);
+            guard.comm = cluster.rank_comm(rank);
+        }
+        let (cmd_tx, reply_rx, handles) = spawn_workers(&self.slots);
+        self.cmd_tx = cmd_tx;
+        self.reply_rx = reply_rx;
+        self.handles = handles;
+        self.poisoned = None;
     }
 
     /// Run `f` over every rank slot (coordinator-side access between
@@ -209,7 +316,7 @@ impl Executor {
         self.slots
             .iter()
             .map(|slot| {
-                let mut guard = slot.lock().unwrap_or_else(|p| p.into_inner());
+                let mut guard = slot.lock().unwrap_or_else(PoisonError::into_inner);
                 f(&mut guard)
             })
             .collect()
@@ -223,12 +330,17 @@ impl Executor {
         })
     }
 
-    fn dispatch(&mut self, cmd: Command) -> Result<Vec<Vec<ObserveFrame>>, String> {
+    /// Send one command per rank (`make(rank)`) and collect the
+    /// replies.
+    fn dispatch_each(
+        &mut self,
+        mut make: impl FnMut(usize) -> Command,
+    ) -> Result<(Vec<Vec<ObserveFrame>>, Vec<Option<Box<RankState>>>), String> {
         if let Some(msg) = &self.poisoned {
             return Err(format!("virtual cluster poisoned: {msg}"));
         }
-        for tx in &self.cmd_tx {
-            if tx.send(cmd).is_err() {
+        for (rank, tx) in self.cmd_tx.iter().enumerate() {
+            if tx.send(make(rank)).is_err() {
                 // only reachable if a worker died outside a command —
                 // poison defensively rather than hang on collect
                 self.poisoned = Some("rank worker exited unexpectedly".to_string());
@@ -242,17 +354,31 @@ impl Executor {
     /// Wait for exactly one reply per rank. Every worker replies once
     /// per command — panicking workers hang up their channels first, so
     /// peers blocked on them cascade-panic and still reply (see the
-    /// module docs) — hence this never deadlocks.
-    fn collect(&mut self) -> Result<Vec<Vec<ObserveFrame>>, String> {
+    /// module docs) — hence this deadlocks only if a worker *hangs*
+    /// without panicking, which the watchdog deadline converts into a
+    /// poisoning that names the stuck rank(s).
+    fn collect(
+        &mut self,
+    ) -> Result<(Vec<Vec<ObserveFrame>>, Vec<Option<Box<RankState>>>), String> {
         let n = self.slots.len();
         let mut frames = vec![Vec::new(); n];
+        let mut states: Vec<Option<Box<RankState>>> = (0..n).map(|_| None).collect();
+        let mut replied = vec![false; n];
         let mut root_panic: Option<String> = None;
+        let deadline = self.watchdog_timeout_ms.map(Duration::from_millis);
         for _ in 0..n {
-            match self.reply_rx.recv() {
-                Ok(Reply::Done { rank, frames: f }) => {
+            let reply = match deadline {
+                Some(d) => self.reply_rx.recv_timeout(d),
+                None => self.reply_rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+            };
+            match reply {
+                Ok(Reply::Done { rank, frames: f, state }) => {
+                    replied[rank as usize] = true;
                     frames[rank as usize] = f;
+                    states[rank as usize] = state;
                 }
                 Ok(Reply::Panicked { rank, msg }) => {
+                    replied[rank as usize] = true;
                     let cascade = msg.contains("hung up");
                     let full = format!("rank {rank} panicked: {msg}");
                     match &mut root_panic {
@@ -262,15 +388,32 @@ impl Executor {
                         Some(_) => {}
                     }
                 }
-                Err(_) => {
+                Err(RecvTimeoutError::Disconnected) => {
                     root_panic
                         .get_or_insert_with(|| "rank workers terminated unexpectedly".into());
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    // name every rank still owing a reply and detach its
+                    // worker: it may be parked forever
+                    let mut stuck = Vec::new();
+                    for (rank, done) in replied.iter().enumerate() {
+                        if !done {
+                            self.hung[rank] = true;
+                            stuck.push(format!("rank {rank}"));
+                        }
+                    }
+                    let ms = self.watchdog_timeout_ms.unwrap_or(0);
+                    root_panic.get_or_insert(format!(
+                        "watchdog: no reply within {ms} ms from {}",
+                        stuck.join(", ")
+                    ));
                     break;
                 }
             }
         }
         match root_panic {
-            None => Ok(frames),
+            None => Ok((frames, states)),
             Some(msg) => {
                 self.poisoned = Some(msg.clone());
                 Err(format!("virtual cluster poisoned: {msg}"))
@@ -282,22 +425,56 @@ impl Executor {
 impl Drop for Executor {
     /// Dropping the executor (Network drop, with or without an explicit
     /// shutdown) terminates the pool cleanly: idle workers get
-    /// `Shutdown`, dead workers' channels error harmlessly, and every
-    /// thread is joined.
+    /// `Shutdown`, dead workers' channels error harmlessly, hung
+    /// workers are detached, and every other thread is joined.
     fn drop(&mut self) {
         for tx in &self.cmd_tx {
             let _ = tx.send(Command::Shutdown);
         }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        for (rank, h) in self.handles.drain(..).enumerate() {
+            if self.hung.get(rank).copied().unwrap_or(false) {
+                drop(h); // watchdog victim: parked forever, never joins
+            } else {
+                let _ = h.join();
+            }
         }
     }
+}
+
+/// Build the per-rank command channels, the shared reply channel, and
+/// one worker thread per slot (used by both `launch` and `recover`).
+/// Workers hold the only reply senders: `reply_rx` disconnects iff
+/// every worker exited, which `collect` treats as poisoning.
+fn spawn_workers(
+    slots: &[Arc<Mutex<RankSlot>>],
+) -> (Vec<Sender<Command>>, Receiver<Reply>, Vec<JoinHandle<()>>) {
+    let (reply_tx, reply_rx) = channel();
+    let mut cmd_tx = Vec::with_capacity(slots.len());
+    let mut handles = Vec::with_capacity(slots.len());
+    for (rank, slot) in (0_u32..).zip(slots.iter()) {
+        let (tx, rx) = channel();
+        cmd_tx.push(tx);
+        let slot = Arc::clone(slot);
+        let reply_tx = reply_tx.clone();
+        let h = std::thread::Builder::new()
+            .name(format!("rank{rank}"))
+            .stack_size(8 << 20)
+            .spawn(move || worker(rank, &slot, &rx, &reply_tx))
+            .expect("spawn rank worker thread");
+        handles.push(h);
+    }
+    drop(reply_tx);
+    (cmd_tx, reply_rx, handles)
 }
 
 /// The rank worker main loop: the paper's "simulation phase" process,
 /// idling between commands. Every command executes under
 /// `catch_unwind`; success replies `Done`, a panic hangs up the rank's
 /// channels (unblocking peers) and replies `Panicked` with the payload.
+/// A recovered pool's worker may find its slot lock poisoned by its
+/// predecessor — the state under it is a consistent pre-command
+/// snapshot (the session replays over it), so the lock is recovered,
+/// not propagated.
 fn worker(
     rank: u32,
     slot: &Arc<Mutex<RankSlot>>,
@@ -310,44 +487,74 @@ fn worker(
             // coordinator gone (executor dropped mid-teardown)
             Err(_) => return,
         };
+        let shutdown = matches!(cmd, Command::Shutdown);
         let result = catch_unwind(AssertUnwindSafe(|| {
-            let mut guard = slot.lock().expect("rank slot poisoned");
+            let mut guard = slot.lock().unwrap_or_else(PoisonError::into_inner);
             let RankSlot { proc, comm } = &mut *guard;
+            let mut out = CmdOutcome { frames: Vec::new(), state: None, reply_fault: None };
             match cmd {
-                Command::Shutdown => Vec::new(),
+                Command::Shutdown => {}
                 Command::Run { step0, steps, observe } => {
                     proc.set_observe(observe);
-                    let mut frames =
-                        Vec::with_capacity(if observe { steps as usize } else { 0 });
+                    // capacity is a hint: a (theoretical) overflow of
+                    // usize just skips the preallocation
+                    let cap = if observe { usize::try_from(steps).unwrap_or(0) } else { 0 };
+                    let mut frames = Vec::with_capacity(cap);
                     for k in 0..steps {
                         proc.step(comm, step0 + k);
                         if observe {
                             frames.push(frame_of(proc));
                         }
                     }
-                    frames
+                    out.frames = frames;
                 }
-                Command::Probe => vec![frame_of(proc)],
+                Command::Probe => out.frames = vec![frame_of(proc)],
                 Command::Reset => {
                     proc.reset();
                     let _ = comm.take_stats();
-                    Vec::new()
                 }
-                Command::SetExternal { area, external } => {
-                    match area {
-                        None => proc.set_external(external),
-                        Some(i) => proc.set_area_external(i as usize, external),
+                Command::SetExternal { area, external } => match area {
+                    None => proc.set_external(external),
+                    Some(i) => proc.set_area_external(i as usize, external),
+                },
+                Command::Snapshot => {
+                    out.state = Some(Box::new(proc.snapshot_state()));
+                }
+                Command::Restore { state, rebase_delta } => {
+                    // validated coordinator-side; a mismatch reaching
+                    // this far is a protocol bug worth poisoning over
+                    if let Err(e) = proc.restore_state(&state) {
+                        panic!("restore failed on rank {rank}: {e}");
                     }
-                    Vec::new()
+                    if rebase_delta > 0 {
+                        proc.rebase(rebase_delta);
+                    }
                 }
             }
+            // injected reply-time faults (Hang / DelayReply) are
+            // consumed here but ACTED ON after the lock drops, so a
+            // hung worker never wedges coordinator-side slot readers
+            out.reply_fault = proc.take_reply_fault();
+            out
         }));
         match result {
-            Ok(frames) => {
-                if matches!(cmd, Command::Shutdown) {
+            Ok(out) => {
+                if shutdown {
                     return;
                 }
-                if reply_tx.send(Reply::Done { rank, frames }).is_err() {
+                match out.reply_fault {
+                    Some(FaultMode::Hang) => loop {
+                        // never reply, never exit: the watchdog must
+                        // diagnose this rank by its silence
+                        std::thread::park();
+                    },
+                    Some(FaultMode::DelayReplyMs(ms)) => {
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                    Some(FaultMode::Panic) | None => {}
+                }
+                let reply = Reply::Done { rank, frames: out.frames, state: out.state };
+                if reply_tx.send(reply).is_err() {
                     return;
                 }
             }
@@ -355,7 +562,7 @@ fn worker(
                 let msg = panic_message(&*payload);
                 // disconnect our outgoing channels FIRST so any peer
                 // blocked on this rank fails over instead of deadlocking
-                let mut guard = slot.lock().unwrap_or_else(|p| p.into_inner());
+                let mut guard = slot.lock().unwrap_or_else(PoisonError::into_inner);
                 guard.comm.hang_up();
                 drop(guard);
                 let _ = reply_tx.send(Reply::Panicked { rank, msg });

@@ -10,4 +10,4 @@ pub mod session;
 pub use leader::{AreaTotals, RunSummary};
 #[allow(deprecated)]
 pub use leader::run_simulation;
-pub use session::{Network, Session, SimulationBuilder};
+pub use session::{Network, RecoveryStats, Session, SimulationBuilder};

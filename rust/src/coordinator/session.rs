@@ -25,7 +25,9 @@
 //! thin wrapper over this pipeline (see `coordinator::leader`).
 
 use std::sync::Arc;
+use std::time::Duration;
 
+use crate::checkpoint::{CheckpointImage, RankState};
 use crate::config::{
     AreaParams, ExternalParams, GridParams, ProjectionParams, SimConfig, Solver,
 };
@@ -269,6 +271,36 @@ pub struct Network {
     /// (construction, Fig. 9) peak intact even when networks coexist.
     construction_peak: u64,
     ncols: usize,
+    /// Last auto-checkpoint (raw per-rank records, not serialized):
+    /// crash recovery replays from here. Armed by
+    /// `RunOptions::checkpoint_every_steps`; invalidated by `reset`
+    /// and stimulus sweeps (a stale drive would replay wrongly).
+    auto_ckpt: Option<AutoCheckpoint>,
+    /// Crash-recovery counters for this network's lifetime.
+    recovery: RecoveryStats,
+}
+
+/// In-memory auto-checkpoint: the per-rank dynamic state as of
+/// `step` (kept raw — serializing every `n` steps would dominate the
+/// run; `Network::checkpoint` is the durable, sealed form).
+struct AutoCheckpoint {
+    step: u64,
+    states: Vec<RankState>,
+}
+
+/// Counters for the crash-recovery machinery
+/// (`RunOptions::checkpoint_every_steps`; see docs/RELIABILITY.md).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// Completed recoveries: pool rebuilt, state replayed from the last
+    /// auto-checkpoint, run resumed.
+    pub recoveries: u64,
+    /// Individual recovery attempts spent (one recovery may take
+    /// several when the fault re-fires during replay).
+    pub retries_spent: u64,
+    /// Abandonments: retry budget exhausted, session left poisoned with
+    /// the original panic payload.
+    pub giveups: u64,
 }
 
 /// Construct the per-rank state for `cfg.ranks` virtual-MPI ranks (the
@@ -325,7 +357,7 @@ impl Network {
         let ncols = atlas.columns() as usize;
         let pairs = construct_pairs(cfg, opts);
         let rank_columns = pairs.iter().map(|(p, _)| p.my_columns().to_vec()).collect();
-        let exec = Executor::launch(pairs);
+        let exec = Executor::launch(pairs, opts.watchdog_timeout_ms);
         let construction_peak = scope.peak_delta();
         Ok(Network {
             cfg: cfg.clone(),
@@ -338,6 +370,8 @@ impl Network {
             scope,
             construction_peak,
             ncols,
+            auto_ckpt: None,
+            recovery: RecoveryStats::default(),
         })
     }
 
@@ -429,6 +463,7 @@ impl Network {
         }
         self.step_cursor = 0;
         self.time_target_ms = 0.0;
+        self.auto_ckpt = None;
     }
 
     /// Reseed the **global** external Poisson drive (stimulus sweeps /
@@ -447,6 +482,8 @@ impl Network {
             panic!("{e}");
         }
         self.cfg.external = external;
+        // a pre-sweep auto-checkpoint would replay the OLD drive
+        self.auto_ckpt = None;
     }
 
     /// Reseed **one area's** external drive mid-run — the per-area
@@ -472,12 +509,15 @@ impl Network {
             return Err(format!("unknown area '{name}' (areas: {known:?})"));
         };
         let external = ExternalParams { synapses_per_neuron, rate_hz };
-        self.exec.set_external(Some(idx as u32), external)?;
+        let area = u32::try_from(idx).expect("area count fits u32");
+        self.exec.set_external(Some(area), external)?;
         // keep the configuration view in sync for atlas configs (the
         // normalized one-area view of legacy configs has no entry)
         if let Some(a) = self.cfg.areas.get_mut(idx) {
             a.external = crate::config::ExternalOverride::full(external);
         }
+        // a pre-sweep auto-checkpoint would replay the OLD drive
+        self.auto_ckpt = None;
         Ok(())
     }
 
@@ -522,16 +562,209 @@ impl Network {
     /// and the network is poisoned (no further stepping) instead of
     /// deadlocking the step collectives.
     fn run_steps(&mut self, n: u64, observe: bool) -> Vec<Vec<ObserveFrame>> {
-        if n == 0 {
-            return Vec::new();
-        }
-        match self.exec.run(self.step_cursor, n, observe) {
-            Ok(frames) => {
-                self.step_cursor += n;
-                frames
-            }
+        match self.try_run_steps(n, observe) {
+            Ok(frames) => frames,
             Err(e) => panic!("{e}"),
         }
+    }
+
+    /// [`run_steps`](Self::run_steps) with crash recovery when
+    /// `RunOptions::checkpoint_every_steps` is armed: the span splits
+    /// at auto-checkpoint boundaries, a rank panic rebuilds the pool
+    /// and replays from the last checkpoint (bounded retries with
+    /// exponential backoff), and only an exhausted retry budget
+    /// surfaces the original panic payload as `Err`.
+    fn try_run_steps(&mut self, n: u64, observe: bool) -> Result<Vec<Vec<ObserveFrame>>, String> {
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let Some(every) = self.opts.checkpoint_every_steps else {
+            // recovery unarmed: single command, poisoning is terminal
+            let frames = self.exec.run(self.step_cursor, n, observe)?;
+            self.step_cursor += n;
+            return Ok(frames);
+        };
+        let every = every.max(1);
+        let end = self.step_cursor + n;
+        let mut out: Vec<Vec<ObserveFrame>> = vec![Vec::new(); self.cfg.ranks as usize];
+        let mut retries_left = self.opts.recovery_retries;
+        let mut original: Option<String> = None;
+        while self.step_cursor < end {
+            // snapshot at the cadence boundary (and before the very
+            // first chunk) so every chunk has a replay anchor at most
+            // `every` steps behind it
+            if self.auto_ckpt.as_ref().map_or(true, |c| self.step_cursor >= c.step + every) {
+                let states = self.exec.snapshot()?;
+                self.auto_ckpt = Some(AutoCheckpoint { step: self.step_cursor, states });
+            }
+            let ckpt_step = self.auto_ckpt.as_ref().map_or(self.step_cursor, |c| c.step);
+            let chunk_end = end.min(ckpt_step + every);
+            let k = chunk_end - self.step_cursor;
+            match self.exec.run(self.step_cursor, k, observe) {
+                Ok(frames) => {
+                    for (acc, f) in out.iter_mut().zip(frames) {
+                        acc.extend(f);
+                    }
+                    self.step_cursor = chunk_end;
+                }
+                Err(e) => {
+                    let root = original.get_or_insert(e).clone();
+                    // recovery loop: each attempt rebuilds the pool,
+                    // restores the last auto-checkpoint, and replays
+                    // the (already-observed) gap up to the chunk start
+                    loop {
+                        if retries_left == 0 {
+                            self.recovery.giveups += 1;
+                            return Err(root);
+                        }
+                        let attempt = self.opts.recovery_retries - retries_left;
+                        retries_left -= 1;
+                        self.recovery.retries_spent += 1;
+                        let backoff = self
+                            .opts
+                            .recovery_backoff_ms
+                            .saturating_mul(1_u64 << attempt.min(16));
+                        if backoff > 0 {
+                            std::thread::sleep(Duration::from_millis(backoff));
+                        }
+                        self.exec.recover();
+                        let ck = self
+                            .auto_ckpt
+                            .as_ref()
+                            .expect("a snapshot precedes every recovered chunk");
+                        if self.exec.restore(ck.states.clone(), 0).is_err() {
+                            continue; // pool died again — next attempt
+                        }
+                        let replay = self.step_cursor - ck.step;
+                        if replay > 0 && self.exec.run(ck.step, replay, false).is_err() {
+                            continue; // fault re-fired in the replay — next attempt
+                        }
+                        self.recovery.recoveries += 1;
+                        break; // back at the chunk start; retry the chunk
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    // ---- checkpoint / restore -------------------------------------
+
+    /// Serialize the full dynamic state of the cluster into a sealed,
+    /// versioned byte envelope (see `checkpoint` module docs and
+    /// docs/RELIABILITY.md for the wire format). Restoring the bytes
+    /// into an identically-configured network resumes the run
+    /// bit-identically — the construction state (synapses, routing) is
+    /// *not* serialized; it is reproduced by building from the same
+    /// `SimConfig`.
+    ///
+    /// Errors under the XLA batch solver (host-side solver state is
+    /// not captured) and on a poisoned session.
+    pub fn checkpoint(&mut self) -> Result<Vec<u8>, String> {
+        if self.cfg.solver == Solver::Xla {
+            return Err(
+                "checkpoint is not supported under the XLA batch solver".to_string()
+            );
+        }
+        if let Some(msg) = self.exec.poison_message() {
+            return Err(format!("cannot checkpoint a poisoned session: {msg}"));
+        }
+        let states = self.exec.snapshot()?;
+        let image = CheckpointImage {
+            seed: self.cfg.seed,
+            dt_ms: self.cfg.dt_ms,
+            ranks: self.cfg.ranks,
+            mapping: self.opts.mapping,
+            stdp: self.cfg.plasticity,
+            step_cursor: self.step_cursor,
+            time_target_ms: self.time_target_ms,
+            states,
+        };
+        Ok(image.encode())
+    }
+
+    /// Restore a [`checkpoint`](Self::checkpoint) taken on an
+    /// identically-configured network (same config, seed, rank count
+    /// and mapping — the identity is validated field by field before
+    /// any rank state is touched). The run resumes exactly where the
+    /// checkpoint was taken: subsequent stepping is bit-identical to a
+    /// never-interrupted run. Restoring onto a poisoned session heals
+    /// it (the pool is rebuilt first).
+    pub fn restore(&mut self, bytes: &[u8]) -> Result<(), String> {
+        self.restore_image(bytes, false)
+    }
+
+    /// [`restore`](Self::restore) that also re-zeroes the simulated-
+    /// time origin to (a margin of one step above) zero. All relative
+    /// dynamics — membrane states, pending events, STDP traces, PRNG
+    /// streams — are preserved under the shift, and the session's
+    /// spike-timestamp budget (the ~71.6 min [`WIRE_TIME_HORIZON_MS`]
+    /// wire horizon) is refilled: checkpoint + rebased restore is how a
+    /// run outlives the horizon. Absolute times reported after a
+    /// rebase are relative to the *new* origin, and resumed dynamics
+    /// may differ from the uninterrupted run in the last f64 bit
+    /// (absolute-time arithmetic rounds differently after the shift).
+    ///
+    /// [`WIRE_TIME_HORIZON_MS`]: crate::engine::WIRE_TIME_HORIZON_MS
+    pub fn restore_rebased(&mut self, bytes: &[u8]) -> Result<(), String> {
+        self.restore_image(bytes, true)
+    }
+
+    fn restore_image(&mut self, bytes: &[u8], rebase: bool) -> Result<(), String> {
+        let img = CheckpointImage::decode(bytes).map_err(|e| e.to_string())?;
+        if img.seed != self.cfg.seed {
+            return Err(format!(
+                "checkpoint incompatible: seed {} vs network seed {}",
+                img.seed, self.cfg.seed
+            ));
+        }
+        if img.dt_ms.to_bits() != self.cfg.dt_ms.to_bits() {
+            return Err(format!(
+                "checkpoint incompatible: dt {} ms vs network dt {} ms",
+                img.dt_ms, self.cfg.dt_ms
+            ));
+        }
+        if img.ranks != self.cfg.ranks {
+            return Err(format!(
+                "checkpoint incompatible: {} ranks vs network {} ranks",
+                img.ranks, self.cfg.ranks
+            ));
+        }
+        if img.mapping != self.opts.mapping {
+            return Err(format!(
+                "checkpoint incompatible: mapping {:?} vs network mapping {:?}",
+                img.mapping, self.opts.mapping
+            ));
+        }
+        if img.stdp != self.cfg.plasticity {
+            return Err(format!(
+                "checkpoint incompatible: plasticity {} vs network plasticity {}",
+                img.stdp, self.cfg.plasticity
+            ));
+        }
+        // a restore heals a poisoned session: rebuild the pool first so
+        // the shape validation below sees live rank state
+        if self.exec.poison_message().is_some() {
+            self.exec.recover();
+        }
+        let expectations = self.exec.expectations();
+        for (st, exp) in img.states.iter().zip(&expectations) {
+            st.validate(exp).map_err(|e| format!("checkpoint incompatible: {e}"))?;
+        }
+        // margin of one step keeps already-fired spike timestamps ≥ 0
+        // after the shift (they were emitted within the last step)
+        let delta = if rebase { img.step_cursor.saturating_sub(1) } else { 0 };
+        self.exec.restore(img.states, delta)?;
+        self.step_cursor = img.step_cursor - delta;
+        self.time_target_ms = img.time_target_ms - delta as f64 * self.cfg.dt_ms;
+        self.auto_ckpt = None;
+        Ok(())
+    }
+
+    /// Crash-recovery counters for this network's lifetime (recoveries
+    /// only happen with `RunOptions::checkpoint_every_steps` armed).
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        self.recovery
     }
 }
 
@@ -540,6 +773,14 @@ impl Network {
 /// dispatch per K steps instead of one per step, while the frame memory
 /// stays bounded at O(K × local columns) per rank.
 const PROBE_BATCH_STEPS: u64 = 32;
+
+/// Whole-step count for a cumulative simulated-time target. The
+/// float→int cast is exact in range: `try_advance` bounds the target by
+/// the wire horizon (< 2^32 µs) and it is never negative.
+#[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
+fn steps_for_target(target_ms: f64, dt_ms: f64) -> u64 {
+    (target_ms / dt_ms).round() as u64
+}
 
 /// A run segment against a constructed [`Network`]: resumable stepping
 /// plus streaming probes. Sessions borrow the network mutably, so state
@@ -651,7 +892,7 @@ impl<'n, 'p> Session<'n, 'p> {
             ));
         }
         self.net.time_target_ms += ms;
-        let target = (self.net.time_target_ms / self.net.cfg.dt_ms).round() as u64;
+        let target = steps_for_target(self.net.time_target_ms, self.net.cfg.dt_ms);
         let mut steps = target.saturating_sub(self.net.step_cursor);
         if self.probes.is_empty() {
             self.net.run_steps(steps, false);
@@ -664,7 +905,8 @@ impl<'n, 'p> Session<'n, 'p> {
                 let first_step = self.net.step_cursor;
                 let frames = self.net.run_steps(k, true);
                 self.steps_run += k;
-                for j in 0..k as usize {
+                let batch = usize::try_from(k).expect("probe batch fits usize");
+                for j in 0..batch {
                     self.feed_step(&frames, j, first_step + j as u64);
                 }
                 steps -= k;
@@ -676,6 +918,14 @@ impl<'n, 'p> Session<'n, 'p> {
     /// Aggregate the network-lifetime run into a [`RunSummary`].
     pub fn summary(&mut self) -> RunSummary {
         self.net.summary()
+    }
+
+    /// Serialize the network's dynamic state mid-session (see
+    /// [`Network::checkpoint`]): the bytes restore to exactly this
+    /// point of the run, attached probes and all future stepping
+    /// unaffected.
+    pub fn checkpoint(&mut self) -> Result<Vec<u8>, String> {
+        self.net.checkpoint()
     }
 
     /// The network being driven.
@@ -845,7 +1095,7 @@ mod tests {
         let mut whole = mk();
         whole.session().advance(100.0);
         assert_eq!(split.steps_run(), whole.steps_run());
-        assert_eq!(split.steps_run(), (100.0f64 / 0.3).round() as u64);
+        assert_eq!(split.steps_run(), steps_for_target(100.0, 0.3));
         assert_eq!(split.summary().spikes(), whole.summary().spikes());
     }
 

@@ -12,4 +12,7 @@ pub use probe::{
     ActivityProbe, AreaRateProbe, AreaSpan, AreaSpikeCountProbe, FiringRateProbe,
     PhaseMetricsProbe, Probe, SpikeCountProbe, StepSample,
 };
-pub use process::{LocalSpike, RankProcess, RunOptions, WireSpike, WIRE_TIME_HORIZON_MS};
+pub use process::{
+    FaultMode, FaultPhase, FaultPlan, LocalSpike, RankProcess, RunOptions, WireSpike,
+    WIRE_TIME_HORIZON_MS,
+};

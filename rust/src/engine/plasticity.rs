@@ -152,6 +152,60 @@ impl Plasticity {
         changed
     }
 
+    /// The dynamic STDP state for checkpointing: `(last_pre_ms,
+    /// last_post_ms, dw, next_apply_ms)`. The derived clamp tables
+    /// (`w0_abs`, afferent CSR) are construction-time constants and are
+    /// rebuilt from the store, never serialized.
+    #[must_use]
+    pub fn trace_state(&self) -> (&[f64], &[f64], &[f32], f64) {
+        (&self.last_pre_ms, &self.last_post_ms, &self.dw, self.next_apply_ms)
+    }
+
+    /// Overwrite the dynamic state from a checkpoint. The instance must
+    /// come from the same construction (`w0_abs`/CSR untouched — rebuilding
+    /// them from post-STDP weights would change the clamp bounds).
+    pub fn restore_traces(
+        &mut self,
+        last_pre_ms: &[f64],
+        last_post_ms: &[f64],
+        dw: &[f32],
+        next_apply_ms: f64,
+    ) -> Result<(), String> {
+        if last_pre_ms.len() != self.last_pre_ms.len()
+            || last_post_ms.len() != self.last_post_ms.len()
+            || dw.len() != self.dw.len()
+        {
+            return Err(format!(
+                "plasticity state mismatch: checkpoint has {}/{}/{} pre/post/dw entries, \
+                 network has {}/{}/{}",
+                last_pre_ms.len(),
+                last_post_ms.len(),
+                dw.len(),
+                self.last_pre_ms.len(),
+                self.last_post_ms.len(),
+                self.dw.len()
+            ));
+        }
+        self.last_pre_ms.copy_from_slice(last_pre_ms);
+        self.last_post_ms.copy_from_slice(last_post_ms);
+        self.dw.copy_from_slice(dw);
+        self.next_apply_ms = next_apply_ms;
+        Ok(())
+    }
+
+    /// Shift every recorded trace time by `-delta_ms` (checkpoint rebase;
+    /// `NEG_INFINITY` "never fired" sentinels are preserved by the
+    /// subtraction).
+    pub fn shift_times(&mut self, delta_ms: f64) {
+        for t in &mut self.last_pre_ms {
+            *t -= delta_ms;
+        }
+        for t in &mut self.last_post_ms {
+            *t -= delta_ms;
+        }
+        self.next_apply_ms -= delta_ms;
+    }
+
     /// Extra heap owned by the plasticity machinery (memory accounting).
     pub fn resident_bytes(&self) -> u64 {
         (self.last_pre_ms.len() * 8

@@ -30,6 +30,7 @@
 //! [`reset`](RankProcess::reset) / [`set_external`](RankProcess::set_external)
 //! service the remaining commands without tearing the state down.
 
+use crate::checkpoint::{CounterState, PlasticityState, RankExpectation, RankState};
 use crate::config::{ExternalOverride, ExternalParams, SimConfig, Solver};
 use crate::connectivity::builder::{generate_outgoing_atlas, AtlasWiring};
 use crate::engine::metrics::{EngineMetrics, Phase, RankReport};
@@ -38,7 +39,7 @@ use crate::geometry::{ColumnId, Decomposition};
 use crate::mpi::{CommClass, RankComm, Wire};
 use crate::neuron::{LifParams, LifState};
 use crate::runtime::batch::BatchSolver;
-use crate::stimulus::{ExternalEvent, ExternalStimulus, StimCalendar};
+use crate::stimulus::{CalendarEntry, ExternalEvent, ExternalStimulus, StimCalendar};
 use crate::synapse::{DelayQueue, PendingEvent, SynapseStore, TargetGrouper};
 use crate::util::timer::thread_cputime_ns;
 
@@ -82,6 +83,68 @@ pub struct LocalSpike {
 /// `stimulus::calendar`).
 const STIM_CAL_HORIZON: usize = 64;
 
+/// Where inside a step an injected fault fires (see [`FaultPlan`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPhase {
+    /// Before any work of the step (the historical `fault_at` point).
+    StepStart,
+    /// After Pack, before the Exchange collectives.
+    AfterPack,
+    /// After Exchange — the rank holds received payloads its peers
+    /// already accounted for.
+    AfterExchange,
+    /// After Demux, before Dynamics.
+    AfterDemux,
+    /// After the step completed (state fully advanced).
+    StepEnd,
+}
+
+/// What an injected fault does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultMode {
+    /// Panic the worker thread: exercises executor poisoning and crash
+    /// recovery.
+    Panic,
+    /// Never reply to the in-flight command: exercises the collect
+    /// watchdog. Fires at the end of the command span — a mid-step hang
+    /// would deadlock every peer inside the next collective, and the
+    /// watchdog could no longer name one culprit rank.
+    Hang,
+    /// Reply after the given delay [ms]: exercises watchdog margins
+    /// without tripping them.
+    DelayReplyMs(u64),
+}
+
+/// A targetable injected fault: which rank misbehaves, at which step,
+/// at which pipeline phase, and how. Drives the chaos test matrix
+/// (`rust/tests/chaos.rs`, docs/RELIABILITY.md); never set outside
+/// tests.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    pub rank: u32,
+    pub step: u64,
+    pub phase: FaultPhase,
+    pub mode: FaultMode,
+    /// How many times the fault fires over the *process lifetime*
+    /// (fires are deliberately not checkpointed: a recovery replay must
+    /// sail past a transient fault instead of re-tripping it forever).
+    pub max_fires: u32,
+}
+
+impl FaultPlan {
+    /// Panic `rank` at the start of `step` — the historical `fault_at`.
+    #[must_use]
+    pub fn panic_at(rank: u32, step: u64) -> Self {
+        FaultPlan { rank, step, phase: FaultPhase::StepStart, mode: FaultMode::Panic, max_fires: 1 }
+    }
+
+    /// Hang `rank`'s reply to the command span covering `step`.
+    #[must_use]
+    pub fn hang_at(rank: u32, step: u64) -> Self {
+        FaultPlan { rank, step, phase: FaultPhase::StepEnd, mode: FaultMode::Hang, max_fires: 1 }
+    }
+}
+
 /// Options beyond `SimConfig` that drive a run.
 #[derive(Clone, Debug)]
 pub struct RunOptions {
@@ -96,10 +159,23 @@ pub struct RunOptions {
     pub naive_delivery: bool,
     /// STDP parameters when `cfg.plasticity` is on.
     pub stdp: StdpParams,
-    /// Fault injection for executor-lifecycle tests: panic at the start
-    /// of `(rank, step)`. Exercises the pool's panic propagation and
-    /// session poisoning; never set outside tests.
-    pub fault_at: Option<(u32, u64)>,
+    /// Fault injection for executor-lifecycle and chaos tests.
+    pub fault: Option<FaultPlan>,
+    /// Auto-checkpoint cadence (steps). `Some(n)` arms crash recovery:
+    /// the session snapshots every `n` steps and a worker panic replays
+    /// from the last snapshot instead of poisoning terminally.
+    pub checkpoint_every_steps: Option<u64>,
+    /// Watchdog deadline for each rank's command reply [ms]. `None`
+    /// blocks forever (the historical behavior); `Some(ms)` poisons the
+    /// session naming the unresponsive rank when the deadline passes.
+    pub watchdog_timeout_ms: Option<u64>,
+    /// Crash-recovery retry budget per run call (with auto-checkpoints
+    /// armed): after this many failed replays the session stays
+    /// poisoned with the original panic payload.
+    pub recovery_retries: u32,
+    /// Base of the exponential recovery backoff [ms]: attempt `k`
+    /// sleeps `recovery_backoff_ms << k` before respawning.
+    pub recovery_backoff_ms: u64,
 }
 
 impl Default for RunOptions {
@@ -109,7 +185,11 @@ impl Default for RunOptions {
             record_activity: false,
             naive_delivery: false,
             stdp: StdpParams::default(),
-            fault_at: None,
+            fault: None,
+            checkpoint_every_steps: None,
+            watchdog_timeout_ms: None,
+            recovery_retries: 3,
+            recovery_backoff_ms: 10,
         }
     }
 }
@@ -125,6 +205,10 @@ impl RunOptions {
     /// mapping         = "block"      # or "roundrobin"
     /// naive_delivery  = false        # ablation: full Alltoallv per step
     /// record_activity = false        # legacy activity matrix
+    /// checkpoint_every_steps = 0     # >0 arms auto-checkpoint + recovery
+    /// watchdog_timeout_ms    = 0     # >0 arms the collect watchdog
+    /// recovery_retries       = 3
+    /// recovery_backoff_ms    = 10
     ///
     /// [stdp]
     /// a_plus            = 0.005
@@ -148,12 +232,21 @@ impl RunOptions {
             w_bound_factor: doc.float_or("stdp.w_bound_factor", s.w_bound_factor as f64)?
                 as f32,
         };
+        let ckpt = doc.int_or("run.checkpoint_every_steps", 0)?;
+        let watchdog = doc.int_or("run.watchdog_timeout_ms", 0)?;
         Ok(RunOptions {
             mapping,
             record_activity: doc.bool_or("run.record_activity", d.record_activity)?,
             naive_delivery: doc.bool_or("run.naive_delivery", d.naive_delivery)?,
             stdp,
-            fault_at: None,
+            fault: None,
+            checkpoint_every_steps: (ckpt > 0).then_some(ckpt as u64),
+            watchdog_timeout_ms: (watchdog > 0).then_some(watchdog as u64),
+            recovery_retries: doc.int_or("run.recovery_retries", d.recovery_retries as i64)?
+                as u32,
+            recovery_backoff_ms: doc
+                .int_or("run.recovery_backoff_ms", d.recovery_backoff_ms as i64)?
+                as u64,
         })
     }
 }
@@ -234,6 +327,14 @@ pub struct RankProcess {
     plasticity: Option<Plasticity>,
     batch: Option<BatchSolver>,
     opts: RunOptions,
+    /// Times the injected fault has fired so far (process lifetime,
+    /// deliberately not checkpointed — see [`FaultPlan::max_fires`]).
+    faults_fired: u32,
+    /// A Hang/DelayReply fault tripped during the current command span;
+    /// the executor worker consumes it *after* its dispatch loop (see
+    /// [`FaultMode::Hang`] on why reply-time faults cannot fire
+    /// mid-step).
+    pending_reply_fault: Option<FaultMode>,
 }
 
 impl RankProcess {
@@ -452,6 +553,8 @@ impl RankProcess {
             plasticity,
             batch,
             opts: opts.clone(),
+            faults_fired: 0,
+            pending_reply_fault: None,
         };
         proc.metrics.area_spikes = vec![0; n_areas];
         proc.reseed_calendar(0);
@@ -644,11 +747,7 @@ impl RankProcess {
 
     /// One time-driven simulation step (paper Fig. 1, steps 2.1–2.6).
     pub fn step(&mut self, comm: &mut RankComm, step: u64) {
-        if let Some((rank, at)) = self.opts.fault_at {
-            if rank == self.rank && at == step {
-                panic!("injected fault: rank {rank} at step {at}");
-            }
-        }
+        self.maybe_fault(step, FaultPhase::StepStart);
         let t_sim0 = thread_cputime_ns();
 
         // ---- Pack (2.1, 2.2): route previous-step spikes per rank ----
@@ -669,6 +768,7 @@ impl RankProcess {
         }
         self.fired.clear();
         self.metrics.stop(Phase::Pack);
+        self.maybe_fault(step, FaultPhase::AfterPack);
 
         // ---- Exchange: two-step subset delivery (§II-E) or naive ----
         self.metrics.start(Phase::Exchange);
@@ -705,6 +805,7 @@ impl RankProcess {
             comm.alltoallv_subset(CommClass::SpikePayload, payload_sends, &expect)
         };
         self.metrics.stop(Phase::Exchange);
+        self.maybe_fault(step, FaultPhase::AfterExchange);
 
         // ---- Demux (2.3): arborize axonal spikes into delay queues ----
         // Delays act on the dt grid: a spike emitted in step s arrives
@@ -739,6 +840,7 @@ impl RankProcess {
         }
         drop(received);
         self.metrics.stop(Phase::Demux);
+        self.maybe_fault(step, FaultPhase::AfterDemux);
 
         // ---- Dynamics (2.4–2.6) ----
         self.metrics.start(Phase::Dynamics);
@@ -798,6 +900,251 @@ impl RankProcess {
         }
 
         self.metrics.sim_cpu_ns += thread_cputime_ns() - t_sim0;
+        self.maybe_fault(step, FaultPhase::StepEnd);
+    }
+
+    /// Fire the injected fault if the plan targets this rank, step, and
+    /// phase (and its fire budget is not exhausted). `Panic` trips here;
+    /// the reply-time modes (`Hang`, `DelayReplyMs`) are deferred to the
+    /// executor worker via [`take_reply_fault`](Self::take_reply_fault).
+    fn maybe_fault(&mut self, step: u64, phase: FaultPhase) {
+        let Some(f) = self.opts.fault else { return };
+        if f.rank != self.rank || f.step != step || f.phase != phase {
+            return;
+        }
+        if self.faults_fired >= f.max_fires {
+            return;
+        }
+        self.faults_fired += 1;
+        match f.mode {
+            FaultMode::Panic => {
+                panic!("injected fault: rank {} at step {} ({phase:?})", f.rank, f.step)
+            }
+            mode @ (FaultMode::Hang | FaultMode::DelayReplyMs(_)) => {
+                self.pending_reply_fault = Some(mode);
+            }
+        }
+    }
+
+    /// Consume a reply-time fault tripped during this command span (the
+    /// executor worker calls this once after its dispatch loop).
+    pub fn take_reply_fault(&mut self) -> Option<FaultMode> {
+        self.pending_reply_fault.take()
+    }
+
+    /// Shape signature the coordinator validates checkpoint records
+    /// against *before* dispatching a restore, so the worker-side
+    /// [`restore_state`](Self::restore_state) cannot fail on a
+    /// validated record (see `RankState::validate`).
+    pub fn expectation(&self) -> RankExpectation {
+        RankExpectation {
+            rank: self.rank,
+            n_local: self.n_local,
+            n_areas: self.stims.len(),
+            queue_slots: self.queue.horizon(),
+            n_synapses: self
+                .plasticity
+                .is_some()
+                .then(|| self.store.synapse_count() as usize),
+        }
+    }
+
+    /// Capture every dynamic field of this rank into a checkpoint
+    /// record. Construction state (synapse CSRs, routing tables,
+    /// send/recv subsets) is deliberately *not* captured: restoring
+    /// requires an identically-constructed process, which the builder
+    /// reproduces deterministically from the same `SimConfig`.
+    pub fn snapshot_state(&self) -> RankState {
+        assert!(
+            self.batch.is_none(),
+            "checkpoint is not supported under the XLA batch solver \
+             (its host-side state is not captured; see docs/RELIABILITY.md)"
+        );
+        let mut queue_events = Vec::new();
+        self.queue.for_each_pending(|step, ev| queue_events.push((step, *ev)));
+        let plasticity = self.plasticity.as_ref().map(|p| {
+            let (pre, post, dw, next_apply_ms) = p.trace_state();
+            PlasticityState {
+                last_pre_ms: pre.to_vec(),
+                last_post_ms: post.to_vec(),
+                dw: dw.to_vec(),
+                next_apply_ms,
+                weights: self.store.weights(),
+            }
+        });
+        RankState {
+            rank: self.rank,
+            n_local: self.n_local,
+            states: self.states.clone(),
+            queue_base: self.queue.base_step(),
+            queue_events,
+            cal_base: self.stim_cal.base_step(),
+            cal_entries: self.stim_cal.snapshot_entries(),
+            streams: self.stim_streams.iter().map(|s| s.state_parts()).collect(),
+            fired: self.fired.clone(),
+            external: self.cfg.external,
+            area_external: self.area_external.clone(),
+            plasticity,
+            counters: CounterState {
+                recurrent_events: self.metrics.recurrent_events,
+                external_events: self.metrics.external_events,
+                spikes: self.metrics.spikes,
+                axonal_spikes_in: self.metrics.axonal_spikes_in,
+                refractory_drops: self.metrics.refractory_drops,
+                area_spikes: self.metrics.area_spikes.clone(),
+            },
+        }
+    }
+
+    /// Overwrite the dynamic state from a checkpoint record taken on an
+    /// identically-constructed rank. The coordinator validates record
+    /// shapes up front ([`expectation`](Self::expectation)); the cheap
+    /// re-checks here guard direct engine-level use. On `Err` the
+    /// process may hold a mix of old and new state — callers treat a
+    /// failed restore as poisoning.
+    pub fn restore_state(&mut self, st: &RankState) -> Result<(), String> {
+        if self.batch.is_some() {
+            return Err("restore is not supported under the XLA batch solver".into());
+        }
+        if st.rank != self.rank {
+            return Err(format!(
+                "rank mismatch: checkpoint rank {} restored onto rank {}",
+                st.rank, self.rank
+            ));
+        }
+        if st.n_local != self.n_local || st.states.len() != self.states.len() {
+            return Err(format!(
+                "neuron count mismatch: checkpoint has {}, process has {}",
+                st.n_local, self.n_local
+            ));
+        }
+        if st.streams.len() != self.stim_streams.len() {
+            return Err(format!(
+                "stream count mismatch: checkpoint has {}, process has {}",
+                st.streams.len(),
+                self.stim_streams.len()
+            ));
+        }
+        if st.area_external.len() != self.area_external.len()
+            || st.counters.area_spikes.len() != self.metrics.area_spikes.len()
+        {
+            return Err(format!(
+                "area count mismatch: checkpoint has {}, process has {}",
+                st.area_external.len(),
+                self.area_external.len()
+            ));
+        }
+        // the fallible pieces first (weight/trace lengths), so the
+        // infallible bulk below never runs after a refusal
+        match (&mut self.plasticity, &st.plasticity) {
+            (Some(p), Some(ps)) => {
+                self.store.restore_weights(&ps.weights)?;
+                p.restore_traces(&ps.last_pre_ms, &ps.last_post_ms, &ps.dw, ps.next_apply_ms)?;
+            }
+            (None, None) => {}
+            (Some(_), None) => {
+                return Err("plasticity is on but the checkpoint has no STDP state".into())
+            }
+            (None, Some(_)) => {
+                return Err("plasticity is off but the checkpoint carries STDP state".into())
+            }
+        }
+        self.states.clone_from(&st.states);
+        let mut queue = DelayQueue::with_base(self.cfg.delay_slots() + 1, st.queue_base);
+        for &(step, ev) in &st.queue_events {
+            queue.push(step, ev);
+        }
+        self.queue = queue;
+        // external drive: restore the resolved global + per-area
+        // overrides, then rebuild the stimulus objects exactly like
+        // set_external does — streams and calendar come from the
+        // checkpoint, not from reseeding
+        self.cfg.external = st.external;
+        self.area_external.clone_from(&st.area_external);
+        self.stims = self
+            .area_external
+            .iter()
+            .map(|o| ExternalStimulus::with_rate(&self.cfg, &o.resolve(&self.cfg.external)))
+            .collect();
+        self.stim_streams = st
+            .streams
+            .iter()
+            .map(|&(state, inc)| crate::util::prng::Pcg64::from_parts(state, inc))
+            .collect();
+        let mut cal = StimCalendar::with_base(STIM_CAL_HORIZON, st.cal_base);
+        for e in &st.cal_entries {
+            cal.restore_entry(e);
+        }
+        self.stim_cal = cal;
+        self.fired.clone_from(&st.fired);
+        for b in &mut self.pack_bufs {
+            b.clear();
+        }
+        self.ext_buf.clear();
+        self.cal_buf.clear();
+        // run counters resume where the checkpoint left them; CPU-time
+        // figures are wall-clock facts of THIS process and stay put
+        self.metrics.recurrent_events = st.counters.recurrent_events;
+        self.metrics.external_events = st.counters.external_events;
+        self.metrics.spikes = st.counters.spikes;
+        self.metrics.axonal_spikes_in = st.counters.axonal_spikes_in;
+        self.metrics.refractory_drops = st.counters.refractory_drops;
+        self.metrics.area_spikes.clone_from(&st.counters.area_spikes);
+        Ok(())
+    }
+
+    /// Re-zero the simulated-time origin: every stored timestamp moves
+    /// `delta_steps · dt` into the past. Restoring a rebased checkpoint
+    /// lets a run cross the [`WIRE_TIME_HORIZON_MS`] u32-µs wire
+    /// horizon — the session resumes stepping from
+    /// `step_cursor - delta_steps` with all relative dynamics intact
+    /// (`NEG_INFINITY` never-fired markers survive the shift
+    /// unchanged).
+    pub fn rebase(&mut self, delta_steps: u64) {
+        if delta_steps == 0 {
+            return;
+        }
+        debug_assert!(
+            self.queue.base_step() >= delta_steps && self.stim_cal.base_step() >= delta_steps,
+            "rebase delta reaches before the origin"
+        );
+        let delta_ms = delta_steps as f64 * self.cfg.dt_ms;
+        let delta_us = (delta_ms * 1000.0).round() as u64;
+        for s in &mut self.states {
+            s.last_t -= delta_ms;
+            s.refr_until -= delta_ms;
+        }
+        // delay queue: same pending events, base and steps shifted
+        let mut events = Vec::new();
+        self.queue.for_each_pending(|step, ev| events.push((step, *ev)));
+        let mut queue = DelayQueue::with_base(
+            self.cfg.delay_slots() + 1,
+            self.queue.base_step() - delta_steps,
+        );
+        for (step, ev) in events {
+            queue.push(step - delta_steps, ev);
+        }
+        self.queue = queue;
+        // stimulus calendar: grid steps and absolute times both shift
+        let entries = self.stim_cal.snapshot_entries();
+        let mut cal = StimCalendar::with_base(
+            STIM_CAL_HORIZON,
+            self.stim_cal.base_step() - delta_steps,
+        );
+        for e in &entries {
+            cal.restore_entry(&CalendarEntry {
+                step: e.step - delta_steps,
+                local: e.local,
+                time_ms: e.time_ms - delta_ms,
+            });
+        }
+        self.stim_cal = cal;
+        if let Some(p) = &mut self.plasticity {
+            p.shift_times(delta_ms);
+        }
+        for sp in &mut self.fired {
+            sp.t_us = (u64::from(sp.t_us).saturating_sub(delta_us)) as u32;
+        }
     }
 
     /// Event-driven dynamics: exact integration at each input event.

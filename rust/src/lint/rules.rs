@@ -46,10 +46,13 @@ const NONDET_IDENTS: [&str; 7] = [
     "thread_rng",
 ];
 
-/// Files whose code runs on pool worker threads: a panic here is
-/// recovered by the executor's poisoning machinery, which can only
-/// surface the message the panic carries.
-const WORKER_FILES: [&str; 3] = ["coordinator/executor.rs", "engine/process.rs", "mpi/comm.rs"];
+/// Files (or directory prefixes, ending in `/`) whose code runs on
+/// pool worker threads: a panic here is recovered by the executor's
+/// poisoning machinery, which can only surface the message the panic
+/// carries. `checkpoint/` is included because restore/rebase runs
+/// inside the worker dispatch closure.
+const WORKER_FILES: [&str; 4] =
+    ["checkpoint/", "coordinator/executor.rs", "engine/process.rs", "mpi/comm.rs"];
 
 /// The only modules allowed to contain `unsafe` (enforced crate-wide
 /// by `#![deny(unsafe_code)]` + scoped allows; re-checked here so the
@@ -336,7 +339,7 @@ fn nondeterminism(file: &str, toks: &[Tok<'_>], out: &mut Vec<Finding>) {
 }
 
 fn panic_discipline(file: &str, toks: &[Tok<'_>], out: &mut Vec<Finding>) {
-    if !WORKER_FILES.contains(&file) {
+    if !WORKER_FILES.iter().any(|w| file == *w || file.starts_with(w)) {
         return;
     }
     for w in toks.windows(4) {
@@ -468,6 +471,21 @@ mod tests {
         let fs = lint_source("mpi/comm.rs", src);
         assert_eq!(fs.len(), 1, "{fs:?}");
         assert_eq!(fs[0].rule, Rule::PanicDiscipline);
+    }
+
+    #[test]
+    fn panic_discipline_covers_checkpoint_directory() {
+        // the `checkpoint/` entry is a directory prefix: every file
+        // under it is worker-thread code (restore runs in dispatch)
+        let src = "fn f(x: Option<u64>) -> u64 { x.unwrap() }\n";
+        let fs = lint_source("checkpoint/codec.rs", src);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, Rule::PanicDiscipline);
+        let fs = lint_source("checkpoint/state.rs", src);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        // a sibling module whose name merely shares the prefix string
+        // stem is NOT in scope (prefix must match path components)
+        assert!(lint_source("checkpointing.rs", src).is_empty());
     }
 
     #[test]

@@ -3,8 +3,9 @@
 //! Subcommands cover running simulations from TOML configs/flags and
 //! regenerating every table/figure of the paper (DESIGN.md §5).
 
-// same policy as lib.rs: no unsafe in the binary, and the Cargo.toml
-// clippy cast warns are silenced at the crate root (docs/LINTS.md)
+// no unsafe in the binary, same as lib.rs. The Cargo.toml clippy cast
+// warns are still silenced at this bin crate root; the library has
+// moved to per-module scoped allows (docs/LINTS.md)
 #![deny(unsafe_code)]
 #![allow(clippy::cast_possible_truncation)]
 #![allow(clippy::cast_sign_loss)]
@@ -31,6 +32,8 @@ fn commands() -> Vec<Command> {
             .opt("seed", "global seed")
             .opt("solver", "neuron solver: event|xla")
             .opt("mapping", "column mapping: block|roundrobin")
+            .opt("checkpoint-every-steps", "auto-checkpoint cadence for crash recovery (0 = off)")
+            .opt("watchdog-timeout-ms", "per-reply deadline before a rank is declared hung (0 = off)")
             .flag("plasticity", "enable STDP")
             .flag("naive-delivery", "ablation: full Alltoallv every step")
             .flag("record-activity", "record per-column activity"),
@@ -114,6 +117,12 @@ fn parts_from_args(a: &Args) -> Result<(SimConfig, RunOptions), String> {
     }
     opts.record_activity = opts.record_activity || a.has_flag("record-activity");
     opts.naive_delivery = opts.naive_delivery || a.has_flag("naive-delivery");
+    if let Some(n) = a.get_parsed::<u64>("checkpoint-every-steps")? {
+        opts.checkpoint_every_steps = (n > 0).then_some(n);
+    }
+    if let Some(ms) = a.get_parsed::<u64>("watchdog-timeout-ms")? {
+        opts.watchdog_timeout_ms = (ms > 0).then_some(ms);
+    }
     Ok((cfg, opts))
 }
 

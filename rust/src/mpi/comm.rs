@@ -164,11 +164,24 @@ impl RankComm {
     }
 
     fn recv_raw<T: Wire>(&self, src: u32) -> Vec<T> {
+        // a poisoned receiver lock can only come from this same rank
+        // panicking mid-recv earlier (each receiver is locked by its
+        // owning rank alone); the executor has already recorded that
+        // root cause, so recover the lock instead of masking it with a
+        // second, nameless panic
         let rx = self.cluster.receivers[self.rank as usize][src as usize]
             .lock()
-            .expect("poisoned receiver");
-        let boxed = rx.recv().expect("sender rank hung up");
-        *boxed.downcast::<Vec<T>>().expect("type confusion on virtual wire")
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        let boxed = rx.recv().unwrap_or_else(|_| {
+            // the "hung up" phrase is load-bearing: the executor's
+            // collect() recognizes cascade panics by it (see
+            // coordinator::executor) and keeps the root cause on top
+            panic!("rank {}: sender rank {src} hung up", self.rank)
+        });
+        boxed.downcast::<Vec<T>>().map_or_else(
+            |_| panic!("rank {}: type confusion on virtual wire from rank {src}", self.rank),
+            |b| *b,
+        )
     }
 
     /// MPI_Alltoall: element `i` of `send` goes to rank `i`; returns the

@@ -29,6 +29,18 @@ pub struct DueEvent {
     pub time_ms: f64,
 }
 
+/// One checkpointed calendar entry: the resolved step slot plus the
+/// event payload (see [`StimCalendar::snapshot_entries`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CalendarEntry {
+    /// Absolute step the entry is bucketed under.
+    pub step: u64,
+    /// Rank-local neuron index.
+    pub local: u32,
+    /// Absolute event time [ms].
+    pub time_ms: f64,
+}
+
 /// Far-future entry (beyond the ring), ordered by (step, time, neuron).
 /// Time is stored as IEEE bits: times are non-negative, so bit order
 /// equals numeric order and the derived `Ord` stays total.
@@ -71,6 +83,23 @@ impl StimCalendar {
         self.base_step
     }
 
+    /// Ring bucket index for an absolute step: the truncating cast is
+    /// exact because the step is masked below the ring length first.
+    #[allow(clippy::cast_possible_truncation)]
+    #[inline]
+    fn slot(&self, step: u64) -> usize {
+        (step & self.mask as u64) as usize
+    }
+
+    /// Step bucket for an event time. The truncating float→int cast is
+    /// the intended floor; callers assert the time non-negative and
+    /// finite before bucketing.
+    #[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
+    #[inline]
+    fn step_of(time_ms: f64, inv_dt_ms: f64) -> u64 {
+        (time_ms * inv_dt_ms) as u64
+    }
+
     /// Entries currently scheduled (= neurons with a pending event).
     pub fn pending(&self) -> usize {
         self.ring.iter().map(Vec::len).sum::<usize>() + self.far.len()
@@ -82,9 +111,10 @@ impl StimCalendar {
     #[inline]
     pub fn schedule(&mut self, local: u32, time_ms: f64, inv_dt_ms: f64) {
         debug_assert!(time_ms >= 0.0 && time_ms.is_finite());
-        let step = ((time_ms * inv_dt_ms) as u64).max(self.base_step);
-        if ((step - self.base_step) as usize) <= self.mask {
-            self.ring[(step as usize) & self.mask].push(DueEvent { local, time_ms });
+        let step = Self::step_of(time_ms, inv_dt_ms).max(self.base_step);
+        if step - self.base_step <= self.mask as u64 {
+            let i = self.slot(step);
+            self.ring[i].push(DueEvent { local, time_ms });
         } else {
             self.far.push(Reverse(FarEntry {
                 step,
@@ -100,7 +130,7 @@ impl StimCalendar {
     /// allocates nothing.
     pub fn take_step(&mut self, step: u64, out: &mut Vec<DueEvent>) {
         debug_assert_eq!(step, self.base_step, "calendar out of sync with the engine");
-        let idx = (self.base_step as usize) & self.mask;
+        let idx = self.slot(self.base_step);
         out.append(&mut self.ring[idx]);
         self.base_step += 1;
         while self.far.peek().is_some_and(|r| r.0.step <= step) {
@@ -121,6 +151,49 @@ impl StimCalendar {
         }
         while let Some(Reverse(e)) = self.far.pop() {
             out.push(DueEvent { local: e.local, time_ms: f64::from_bits(e.time_bits) });
+        }
+    }
+
+    /// Non-destructive snapshot of every pending entry with the exact
+    /// step slot it occupies: ring buckets first (in step order, each in
+    /// its in-bucket push order), then far-heap entries in sorted order.
+    /// A checkpoint restored through [`StimCalendar::restore_entry`]
+    /// reproduces the calendar bit-identically — including entries whose
+    /// computed step was clamped forward when originally scheduled, which
+    /// a re-`schedule` would place in a different slot.
+    pub fn snapshot_entries(&self) -> Vec<CalendarEntry> {
+        let mut out = Vec::with_capacity(self.pending());
+        for ahead in 0..self.ring.len() {
+            let step = self.base_step + ahead as u64;
+            for e in &self.ring[self.slot(step)] {
+                out.push(CalendarEntry { step, local: e.local, time_ms: e.time_ms });
+            }
+        }
+        let mut far: Vec<FarEntry> = self.far.iter().map(|r| r.0).collect();
+        far.sort_unstable();
+        for e in far {
+            out.push(CalendarEntry {
+                step: e.step,
+                local: e.local,
+                time_ms: f64::from_bits(e.time_bits),
+            });
+        }
+        out
+    }
+
+    /// Re-insert a snapshotted entry at its exact slot (restore path; no
+    /// forward clamping — the step was resolved when first scheduled).
+    pub fn restore_entry(&mut self, e: &CalendarEntry) {
+        debug_assert!(e.step >= self.base_step, "restored entry is in the past");
+        if e.step - self.base_step <= self.mask as u64 {
+            let i = self.slot(e.step);
+            self.ring[i].push(DueEvent { local: e.local, time_ms: e.time_ms });
+        } else {
+            self.far.push(Reverse(FarEntry {
+                step: e.step,
+                time_bits: e.time_ms.to_bits(),
+                local: e.local,
+            }));
         }
     }
 
@@ -242,17 +315,43 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_restore_reproduces_the_calendar_exactly() {
+        let mut cal = StimCalendar::new(4);
+        // advance so entries sit mid-ring, then mix ring, far and a
+        // forward-clamped entry (whose slot schedule() would not rebuild)
+        let _ = drain(&mut cal, 0);
+        let _ = drain(&mut cal, 1); // base now 2
+        cal.schedule(7, 0.1, 1.0); // clamped to step 2
+        cal.schedule(3, 4.5, 1.0); // ring
+        cal.schedule(1, 100.5, 1.0); // far heap
+        cal.schedule(9, 200.25, 1.0); // far heap
+        let entries = cal.snapshot_entries();
+        assert_eq!(entries.len(), 4);
+        assert_eq!(entries[0], CalendarEntry { step: 2, local: 7, time_ms: 0.1 });
+
+        let mut restored = StimCalendar::with_base(4, cal.base_step());
+        for e in &entries {
+            restored.restore_entry(e);
+        }
+        for step in 2..201u64 {
+            assert_eq!(drain(&mut cal, step), drain(&mut restored, step), "step {step}");
+        }
+        assert_eq!(cal.pending(), 0);
+        assert_eq!(restored.pending(), 0);
+    }
+
+    #[test]
     fn steady_state_reuses_buffers() {
         let mut cal = StimCalendar::new(8);
         let mut out = Vec::new();
         for step in 0..32u64 {
-            cal.schedule((step % 5) as u32, step as f64 + 1.5, 1.0);
+            cal.schedule(u32::try_from(step % 5).expect("small"), step as f64 + 1.5, 1.0);
             out.clear();
             cal.take_step(step, &mut out);
         }
         let bytes = cal.resident_bytes();
         for step in 32..256u64 {
-            cal.schedule((step % 5) as u32, step as f64 + 1.5, 1.0);
+            cal.schedule(u32::try_from(step % 5).expect("small"), step as f64 + 1.5, 1.0);
             out.clear();
             cal.take_step(step, &mut out);
             assert_eq!(out.len(), 1);

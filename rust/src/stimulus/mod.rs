@@ -4,5 +4,5 @@
 pub mod calendar;
 pub mod poisson;
 
-pub use calendar::{DueEvent, StimCalendar};
+pub use calendar::{CalendarEntry, DueEvent, StimCalendar};
 pub use poisson::{ExternalEvent, ExternalStimulus};

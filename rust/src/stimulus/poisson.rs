@@ -55,6 +55,9 @@ impl ExternalStimulus {
     /// Stimulus with an explicit rate bundle (per-area external
     /// overrides); efficacy, dt and seed still come from `cfg`, so the
     /// per-neuron streams are shared across all of a run's stimuli.
+    // the f64→f32 narrowing is deliberate: efficacies are stored at the
+    // engine's f32 synaptic precision
+    #[allow(clippy::cast_possible_truncation)]
     pub fn with_rate(cfg: &SimConfig, ext: &crate::config::ExternalParams) -> Self {
         ExternalStimulus {
             lambda_per_step: ext.synapses_per_neuron as f64 * ext.rate_hz * cfg.dt_ms / 1000.0,

@@ -138,6 +138,20 @@ impl DelayQueue {
         self.base_step
     }
 
+    /// Visit every queued event with its scheduled step, walking the
+    /// horizon in step order and each bucket in push order — exactly the
+    /// order a checkpoint restore must re-`push` to reproduce the queue
+    /// (per-bucket order feeds the dynamics grouper's stable ordering).
+    pub fn for_each_pending(&self, mut f: impl FnMut(u64, &PendingEvent)) {
+        for ahead in 0..self.slots.len() {
+            let step = self.base_step + ahead as u64;
+            let idx = (step as usize) & (self.slots.len() - 1);
+            for ev in &self.slots[idx] {
+                f(step, ev);
+            }
+        }
+    }
+
     /// Heap bytes held by the queue (for memory accounting).
     pub fn resident_bytes(&self) -> u64 {
         let per = std::mem::size_of::<PendingEvent>();
@@ -231,6 +245,28 @@ mod tests {
             q.recycle(drained);
         }
         assert_eq!(q.pending(), 3 * 2);
+    }
+
+    #[test]
+    fn for_each_pending_roundtrips_through_a_fresh_queue() {
+        let base = 37u64;
+        let mut q = DelayQueue::with_base(4, base);
+        q.push(base + 1, ev(0.5, 2));
+        q.push(base + 1, ev(0.1, 9)); // same bucket, later push — order kept
+        q.push(base + 3, ev(0.7, 4));
+        let mut seen = Vec::new();
+        q.for_each_pending(|step, e| seen.push((step, *e)));
+        assert_eq!(seen.len(), 3);
+        assert_eq!(seen[0], (base + 1, ev(0.5, 2)));
+        assert_eq!(seen[1], (base + 1, ev(0.1, 9)));
+
+        let mut restored = DelayQueue::with_base(4, q.base_step());
+        for (step, e) in &seen {
+            restored.push(*step, *e);
+        }
+        for _ in 0..4 {
+            assert_eq!(q.drain_current(), restored.drain_current());
+        }
     }
 
     #[test]

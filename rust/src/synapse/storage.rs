@@ -288,6 +288,30 @@ impl SynapseStore {
         *w = (*w + dw).clamp(lo, hi);
     }
 
+    /// All synapse weights in flat index order. Only the weights are
+    /// dynamic (STDP mutates them); targets, delays and the axon index
+    /// are construction-time constants, so a checkpoint stores weights
+    /// alone.
+    #[must_use]
+    pub fn weights(&self) -> Vec<f32> {
+        self.syn.iter().map(|s| s.weight).collect()
+    }
+
+    /// Overwrite every weight from a checkpoint (flat index order).
+    pub fn restore_weights(&mut self, weights: &[f32]) -> Result<(), String> {
+        if weights.len() != self.syn.len() {
+            return Err(format!(
+                "weight count mismatch: checkpoint has {}, store has {}",
+                weights.len(),
+                self.syn.len()
+            ));
+        }
+        for (s, &w) in self.syn.iter_mut().zip(weights) {
+            s.weight = w;
+        }
+        Ok(())
+    }
+
     /// Resident bytes of the store: the Fig. 9 "12 B/synapse" payload
     /// plus the 2 B/synapse precomputed delay slot and the axon index.
     pub fn resident_bytes(&self) -> u64 {

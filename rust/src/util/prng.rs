@@ -75,6 +75,21 @@ impl Pcg64 {
         Pcg64::new(seed, entity_id ^ (tag << 32))
     }
 
+    /// The raw `(state, inc)` words — the complete stream position, for
+    /// checkpointing. [`Pcg64::from_parts`] reconstructs a generator that
+    /// continues the sequence bit-identically.
+    #[must_use]
+    pub fn state_parts(&self) -> (u128, u128) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from [`Pcg64::state_parts`] output. The next
+    /// draw equals what the snapshotted generator would have produced.
+    #[must_use]
+    pub fn from_parts(state: u128, inc: u128) -> Self {
+        Pcg64 { state, inc }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);

@@ -1,0 +1,183 @@
+//! Integration: the fault-injection matrix against the crash-recovering
+//! executor.
+//!
+//! * A rank panic at **every** step phase, across 1/2/4 ranks, recovers
+//!   from the auto-checkpoint and finishes bit-identically to the
+//!   unfaulted run.
+//! * A hung rank is diagnosed by the watchdog (poisoning that names the
+//!   stuck rank) — and recovered from when checkpointing is armed.
+//! * An unrecoverable fault exhausts the retry budget and surfaces the
+//!   *original* panic payload, with the give-up counted.
+//! * A delayed reply below the watchdog deadline is benign.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use dpsnn::config::SimConfig;
+use dpsnn::engine::{FaultMode, FaultPhase, FaultPlan, RunOptions};
+use dpsnn::{ActivityProbe, Network, RecoveryStats, SimulationBuilder};
+
+fn cfg(ranks: u32) -> SimConfig {
+    let mut c = SimConfig::test_small();
+    c.external.synapses_per_neuron = 100;
+    c.external.rate_hz = 30.0;
+    c.ranks = ranks;
+    c
+}
+
+/// Options with crash recovery armed: checkpoint every 8 steps, no
+/// backoff sleeps (the matrix re-runs many recoveries).
+fn opts_recovering(fault: Option<FaultPlan>) -> RunOptions {
+    RunOptions {
+        fault,
+        checkpoint_every_steps: Some(8),
+        recovery_backoff_ms: 0,
+        ..Default::default()
+    }
+}
+
+fn build(ranks: u32, opts: RunOptions) -> Network {
+    SimulationBuilder::from_parts(cfg(ranks), opts).build().expect("construction")
+}
+
+/// Advance `ms` recording per-step global column activity.
+fn run_recorded(net: &mut Network, ms: f64) -> Vec<Vec<u32>> {
+    let mut activity = ActivityProbe::new();
+    {
+        let mut session = net.session();
+        session.attach(&mut activity);
+        session.advance(ms);
+    }
+    activity.into_rows()
+}
+
+#[test]
+fn panic_at_every_phase_recovers_bit_identically() {
+    let phases = [
+        FaultPhase::StepStart,
+        FaultPhase::AfterPack,
+        FaultPhase::AfterExchange,
+        FaultPhase::AfterDemux,
+        FaultPhase::StepEnd,
+    ];
+    for ranks in [1u32, 2, 4] {
+        let reference = run_recorded(&mut build(ranks, opts_recovering(None)), 30.0);
+        assert!(
+            reference.iter().flatten().any(|&n| n > 0),
+            "reference must be active at {ranks} ranks"
+        );
+        for phase in phases {
+            let fault = FaultPlan {
+                rank: ranks - 1,
+                step: 5,
+                phase,
+                mode: FaultMode::Panic,
+                max_fires: 1,
+            };
+            let mut net = build(ranks, opts_recovering(Some(fault)));
+            let rows = run_recorded(&mut net, 30.0);
+            assert_eq!(
+                rows, reference,
+                "recovered run diverged ({ranks} ranks, fault at {phase:?})"
+            );
+            let stats = net.recovery_stats();
+            assert!(
+                stats.recoveries >= 1,
+                "no recovery recorded ({ranks} ranks, {phase:?}): {stats:?}"
+            );
+            assert_eq!(stats.giveups, 0, "({ranks} ranks, {phase:?})");
+            assert!(net.poison_message().is_none(), "network left poisoned");
+        }
+    }
+}
+
+#[test]
+fn hung_rank_is_diagnosed_by_the_watchdog() {
+    // recovery NOT armed: the watchdog poisoning is terminal and must
+    // name the silent rank instead of deadlocking the collect
+    let opts = RunOptions {
+        fault: Some(FaultPlan::hang_at(1, 3)),
+        watchdog_timeout_ms: Some(400),
+        ..Default::default()
+    };
+    let mut net = build(2, opts);
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        net.session().advance(10.0);
+    }));
+    let payload = result.expect_err("a hung rank must poison, not deadlock");
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .expect("panic payload should be the executor's message");
+    assert!(msg.contains("watchdog"), "{msg}");
+    assert!(msg.contains("rank 1"), "stuck rank not named: {msg}");
+
+    // poisoned thereafter, with the diagnosis preserved
+    let err = net.session().try_advance(1.0).unwrap_err();
+    assert!(err.contains("watchdog"), "{err}");
+    // dropping the network must not block on the parked worker
+    drop(net);
+}
+
+#[test]
+fn hung_rank_recovers_when_checkpointing_is_armed() {
+    let reference = run_recorded(&mut build(2, opts_recovering(None)), 20.0);
+    let mut opts = opts_recovering(Some(FaultPlan::hang_at(1, 5)));
+    opts.watchdog_timeout_ms = Some(400);
+    let mut net = build(2, opts);
+    let rows = run_recorded(&mut net, 20.0);
+    assert_eq!(rows, reference, "post-recovery run diverged");
+    assert!(net.recovery_stats().recoveries >= 1);
+    assert_eq!(net.recovery_stats().giveups, 0);
+}
+
+#[test]
+fn retry_exhaustion_preserves_the_original_fault_payload() {
+    // a fault that re-fires on every attempt is unrecoverable: the
+    // budget must bound the retries and the FIRST error must surface
+    let fault = FaultPlan {
+        rank: 0,
+        step: 2,
+        phase: FaultPhase::StepStart,
+        mode: FaultMode::Panic,
+        max_fires: u32::MAX,
+    };
+    let mut opts = opts_recovering(Some(fault));
+    opts.recovery_retries = 2;
+    let mut net = build(2, opts);
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        net.session().advance(10.0);
+    }));
+    let payload = result.expect_err("exhausted retries must surface the fault");
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .expect("panic payload should be the executor's message");
+    assert!(msg.contains("injected fault"), "original payload lost: {msg}");
+    assert!(msg.contains("rank 0"), "rank attribution lost: {msg}");
+    let stats = net.recovery_stats();
+    assert_eq!(stats.giveups, 1, "{stats:?}");
+    assert_eq!(stats.retries_spent, 2, "{stats:?}");
+    assert!(net.poison_message().is_some(), "exhaustion must leave the poison visible");
+}
+
+#[test]
+fn delayed_reply_below_the_watchdog_deadline_is_benign() {
+    let reference = run_recorded(&mut build(2, RunOptions::default()), 20.0);
+    let fault = FaultPlan {
+        rank: 1,
+        step: 4,
+        phase: FaultPhase::StepEnd,
+        mode: FaultMode::DelayReplyMs(100),
+        max_fires: 1,
+    };
+    let opts = RunOptions {
+        fault: Some(fault),
+        watchdog_timeout_ms: Some(5_000),
+        ..Default::default()
+    };
+    let mut net = build(2, opts);
+    let rows = run_recorded(&mut net, 20.0);
+    assert_eq!(rows, reference, "a delayed reply must not change the dynamics");
+    assert_eq!(net.recovery_stats(), RecoveryStats::default());
+    assert!(net.poison_message().is_none());
+}

@@ -1,0 +1,190 @@
+//! Integration: checkpoint/restore of a running network.
+//!
+//! * A restored checkpoint resumes **bit-identically**: the activity
+//!   rows after restore equal the rows of the never-interrupted run,
+//!   across 1/2/4 ranks × block/round-robin mappings, into a fresh
+//!   network and as a rewind of the original.
+//! * Restore validates the identity of the target network field by
+//!   field (seed, ranks, mapping) with named errors.
+//! * Corrupted, truncated and future-version bytes are rejected with
+//!   named errors — never a panic.
+//! * A rebased restore re-zeroes the time origin and lets the run
+//!   cross the ~71.6 min u32-µs spike-timestamp horizon.
+
+use dpsnn::checkpoint::ENVELOPE_VERSION_OFFSET;
+use dpsnn::config::SimConfig;
+use dpsnn::engine::plasticity::StdpParams;
+use dpsnn::engine::RunOptions;
+use dpsnn::geometry::Mapping;
+use dpsnn::{ActivityProbe, Network, SimulationBuilder};
+
+fn cfg(ranks: u32) -> SimConfig {
+    let mut c = SimConfig::test_small();
+    c.external.synapses_per_neuron = 100;
+    c.external.rate_hz = 30.0;
+    c.ranks = ranks;
+    c
+}
+
+fn build(ranks: u32, mapping: Mapping) -> Network {
+    let opts = RunOptions { mapping, ..Default::default() };
+    SimulationBuilder::from_parts(cfg(ranks), opts).build().expect("construction")
+}
+
+/// Advance `ms` recording per-step global column activity.
+fn run_recorded(net: &mut Network, ms: f64) -> Vec<Vec<u32>> {
+    let mut activity = ActivityProbe::new();
+    {
+        let mut session = net.session();
+        session.attach(&mut activity);
+        session.advance(ms);
+    }
+    activity.into_rows()
+}
+
+#[test]
+fn restore_resumes_bit_identically_across_ranks_and_mappings() {
+    for mapping in [Mapping::Block, Mapping::RoundRobin] {
+        for ranks in [1u32, 2, 4] {
+            let mut net = build(ranks, mapping);
+            net.session().advance(20.0);
+            let bytes = net.checkpoint().expect("checkpoint");
+            let uninterrupted = run_recorded(&mut net, 25.0);
+            assert!(
+                uninterrupted.iter().flatten().any(|&n| n > 0),
+                "reference must be active ({ranks} ranks, {mapping:?})"
+            );
+
+            // a fresh identically-configured network resumes the bytes
+            let mut resumed = build(ranks, mapping);
+            resumed.restore(&bytes).expect("restore into a fresh network");
+            assert_eq!(
+                run_recorded(&mut resumed, 25.0),
+                uninterrupted,
+                "restored run diverged ({ranks} ranks, {mapping:?})"
+            );
+
+            // and the original network rewinds onto its own checkpoint
+            net.restore(&bytes).expect("rewind");
+            assert_eq!(
+                run_recorded(&mut net, 25.0),
+                uninterrupted,
+                "rewound run diverged ({ranks} ranks, {mapping:?})"
+            );
+        }
+    }
+}
+
+#[test]
+fn restore_resumes_bit_identically_with_stdp() {
+    let mk = || {
+        SimulationBuilder::from_config(cfg(2))
+            .plasticity(StdpParams::default())
+            .build()
+            .expect("construction")
+    };
+    let mut net = mk();
+    net.session().advance(20.0);
+    let bytes = net.checkpoint().expect("checkpoint");
+    let uninterrupted = run_recorded(&mut net, 20.0);
+
+    let mut resumed = mk();
+    resumed.restore(&bytes).expect("restore");
+    assert_eq!(
+        run_recorded(&mut resumed, 20.0),
+        uninterrupted,
+        "STDP run diverged after restore (weights or traces not carried)"
+    );
+}
+
+#[test]
+fn restore_rejects_mismatched_networks_by_name() {
+    let mut net = build(2, Mapping::Block);
+    net.session().advance(10.0);
+    let bytes = net.checkpoint().expect("checkpoint");
+
+    // different seed
+    let mut c = cfg(2);
+    c.seed += 1;
+    let mut other = SimulationBuilder::from_config(c).build().expect("construction");
+    let err = other.restore(&bytes).unwrap_err();
+    assert!(err.contains("seed"), "{err}");
+
+    // different rank count
+    let err = build(4, Mapping::Block).restore(&bytes).unwrap_err();
+    assert!(err.contains("ranks"), "{err}");
+
+    // different mapping
+    let err = build(2, Mapping::RoundRobin).restore(&bytes).unwrap_err();
+    assert!(err.contains("mapping"), "{err}");
+
+    // plasticity on vs off
+    let err = SimulationBuilder::from_config(cfg(2))
+        .plasticity(StdpParams::default())
+        .build()
+        .expect("construction")
+        .restore(&bytes)
+        .unwrap_err();
+    assert!(err.contains("plasticity"), "{err}");
+
+    // the checkpointed network itself is untouched by the rejections
+    net.restore(&bytes).expect("original still restores");
+}
+
+#[test]
+fn damaged_bytes_are_rejected_with_named_errors() {
+    let mut net = build(1, Mapping::Block);
+    net.session().advance(10.0);
+    let bytes = net.checkpoint().expect("checkpoint");
+
+    // flip one payload byte: hash trailer catches it
+    let mut corrupt = bytes.clone();
+    corrupt[bytes.len() / 2] ^= 0x40;
+    let err = net.restore(&corrupt).unwrap_err();
+    assert!(err.contains("corrupted"), "{err}");
+
+    // truncation at every kind of boundary
+    for cut in [0, 4, 19, bytes.len() / 2, bytes.len() - 1] {
+        assert!(net.restore(&bytes[..cut]).is_err(), "truncated at {cut} accepted");
+    }
+
+    // future format version is named, not reported as corruption
+    let mut future = bytes.clone();
+    future[ENVELOPE_VERSION_OFFSET] = 0xFE;
+    let err = net.restore(&future).unwrap_err();
+    assert!(err.contains("version"), "{err}");
+
+    // foreign bytes
+    let err = net.restore(b"not a checkpoint").unwrap_err();
+    assert!(err.contains("magic") || err.contains("truncated"), "{err}");
+
+    // after all the rejections the intact bytes still restore
+    net.restore(&bytes).expect("intact bytes restore");
+}
+
+#[test]
+fn rebased_restore_crosses_the_wire_time_horizon() {
+    // one-minute steps with a silent drive: only the clock matters.
+    // 60 steps put the run at 3.6e6 ms of simulated time, ~84% of the
+    // ~4.295e6 ms u32-µs horizon.
+    let mut c = cfg(2);
+    c.dt_ms = 60_000.0;
+    c.external.rate_hz = 0.0;
+    let mut net = SimulationBuilder::from_config(c).build().expect("construction");
+    net.session().advance(3_600_000.0);
+    assert_eq!(net.steps_run(), 60);
+
+    // without a rebase the session refuses to cross the horizon
+    let err = net.session().try_advance(3_000_000.0).unwrap_err();
+    assert!(err.contains("horizon"), "{err}");
+
+    let bytes = net.checkpoint().expect("checkpoint");
+    net.restore_rebased(&bytes).expect("rebased restore");
+    // the origin moved to one step before the checkpoint: 59 steps of
+    // budget were reclaimed
+    assert_eq!(net.steps_run(), 1);
+    net.session()
+        .try_advance(3_000_000.0)
+        .expect("rebase must refill the horizon budget");
+    assert_eq!(net.steps_run(), 51, "50 more one-minute steps after the rebase");
+}

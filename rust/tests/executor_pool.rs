@@ -18,7 +18,7 @@
 use std::panic::{catch_unwind, AssertUnwindSafe};
 
 use dpsnn::config::SimConfig;
-use dpsnn::engine::{RankProcess, RunOptions};
+use dpsnn::engine::{FaultPlan, RankProcess, RunOptions};
 use dpsnn::geometry::{Decomposition, Grid, Mapping};
 use dpsnn::mpi::run_cluster;
 use dpsnn::{ActivityProbe, SimulationBuilder, SpikeCountProbe};
@@ -139,7 +139,7 @@ fn rank_panic_surfaces_payload_and_poisons_the_session() {
     // fault injection: rank 1 panics at step 5, mid-collectives — the
     // executor must propagate the payload (not deadlock) and refuse
     // further stepping
-    let opts = RunOptions { fault_at: Some((1, 5)), ..Default::default() };
+    let opts = RunOptions { fault: Some(FaultPlan::panic_at(1, 5)), ..Default::default() };
     let mut net =
         SimulationBuilder::from_parts(cfg(2), opts).build().expect("construction");
     let result = catch_unwind(AssertUnwindSafe(|| {
