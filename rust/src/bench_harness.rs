@@ -11,7 +11,8 @@ use crate::config::{AreaParams, GridParams, NeuronParams, ProjectionParams};
 use crate::coordinator::session::construct_pairs;
 use crate::coordinator::{Network, SimulationBuilder};
 use crate::engine::probe::SpikeCountProbe;
-use crate::engine::Phase;
+use crate::engine::{NeuronStateSoA, Phase};
+use crate::neuron::{LifParams, LifState};
 use crate::synapse::{DelayQueue, PendingEvent, SynapseStore, TargetGrouper};
 use crate::util::json::Json;
 use crate::util::stats::Running;
@@ -177,6 +178,9 @@ pub struct BenchParams {
     /// Executor bench: ranks and time-driven steps per measured span.
     pub exec_ranks: u32,
     pub exec_steps: u64,
+    /// SoA dynamics microbench: touched-neuron counts per cell (each
+    /// measured in both the dense and the silent regime).
+    pub soa_touched: [u32; 3],
 }
 
 impl BenchParams {
@@ -198,6 +202,7 @@ impl BenchParams {
             demux_iters: 15,
             exec_ranks: 2,
             exec_steps: 150,
+            soa_touched: [1_000, 10_000, 100_000],
         }
     }
 
@@ -215,6 +220,7 @@ impl BenchParams {
             demux_warmup: 2,
             demux_iters: 6,
             exec_steps: 60,
+            soa_touched: [500, 2_000, 8_000],
             ..Self::standard()
         }
     }
@@ -329,6 +335,36 @@ impl ExecutorBench {
     }
 }
 
+/// SoA dynamics microbench (schema 5): the Scalar (AoS
+/// `Vec<LifState>`) advance-and-threshold loop vs the [`NeuronStateSoA`]
+/// lanes, injecting one event into each of `touched` neurons per step.
+/// `dense` hits every neuron of a population of exactly `touched`
+/// (sequential lanes); `silent` scatters the same `touched` set through
+/// a population 8× larger — the sparse-activity regime the calendar
+/// engine produces, where the AoS layout drags whole 48-byte structs
+/// through the cache for 32 bytes of state.
+#[derive(Clone, Copy, Debug)]
+pub struct SoaCell {
+    pub regime: &'static str,
+    pub touched: u32,
+    pub events_per_step: u64,
+    pub scalar_ns_per_step: f64,
+    pub soa_ns_per_step: f64,
+}
+
+impl SoaCell {
+    /// How much the SoA lanes beat the AoS loop (higher is better).
+    pub fn speedup(&self) -> f64 {
+        self.scalar_ns_per_step / self.soa_ns_per_step.max(1e-9)
+    }
+}
+
+/// The full `dynamics_soa` record: `soa_touched` counts × both regimes.
+#[derive(Clone, Debug)]
+pub struct DynamicsSoaMicro {
+    pub cells: Vec<SoaCell>,
+}
+
 /// Everything `dpsnn bench` measures.
 #[derive(Clone, Debug)]
 pub struct BenchReport {
@@ -338,6 +374,7 @@ pub struct BenchReport {
     pub demux: DemuxMicro,
     pub grouping: GroupingMicro,
     pub executor: ExecutorBench,
+    pub dynamics_soa: DynamicsSoaMicro,
 }
 
 fn phases4() -> [Phase; 4] {
@@ -545,6 +582,62 @@ fn bench_grouping(p: &BenchParams) -> GroupingMicro {
     }
 }
 
+/// `dynamics_soa`: both backends run the exact engine integrator —
+/// `LifState::inject` for the AoS loop, `NeuronStateSoA::inject` for
+/// the lanes — over the same touched-index list with the same
+/// monotonically-advancing event times, so the comparison isolates the
+/// memory layout and the exp memo, not the math. Population parameters
+/// alternate excitatory/inhibitory per lane, matching the engine's
+/// two-entries-per-area table.
+fn bench_dynamics_soa(p: &BenchParams) -> DynamicsSoaMicro {
+    let params = vec![
+        LifParams::new(&NeuronParams::excitatory()),
+        LifParams::new(&NeuronParams::inhibitory()),
+    ];
+    let mut cells = Vec::new();
+    for &touched in &p.soa_touched {
+        for regime in ["dense", "silent"] {
+            let stride: u32 = if regime == "dense" { 1 } else { 8 };
+            let n = touched * stride;
+            let ids: Vec<u8> = (0..n).map(|l| (l % 2) as u8).collect();
+            let idxs: Vec<u32> = (0..touched).map(|k| k * stride).collect();
+
+            let mut states: Vec<LifState> =
+                ids.iter().map(|&id| LifState::resting(&params[id as usize])).collect();
+            let mut t = 0.0f64;
+            let (scalar_mean, _) = time_ns(p.demux_warmup, p.demux_iters, || {
+                t += 1.0;
+                for &l in &idxs {
+                    let li = l as usize;
+                    std::hint::black_box(states[li].inject(
+                        &params[ids[li] as usize],
+                        t,
+                        0.5,
+                    ));
+                }
+            });
+
+            let mut soa = NeuronStateSoA::build(params.clone(), ids);
+            let mut t = 0.0f64;
+            let (soa_mean, _) = time_ns(p.demux_warmup, p.demux_iters, || {
+                t += 1.0;
+                for &l in &idxs {
+                    std::hint::black_box(soa.inject(l, t, 0.5));
+                }
+            });
+
+            cells.push(SoaCell {
+                regime,
+                touched,
+                events_per_step: u64::from(touched),
+                scalar_ns_per_step: scalar_mean,
+                soa_ns_per_step: soa_mean,
+            });
+        }
+    }
+    DynamicsSoaMicro { cells }
+}
+
 /// `executor_spawn_vs_pool`: same configuration, same seed, same spike
 /// work — driven (a) by a scoped thread team spawned per step (the
 /// retired execution model, reconstructed here as the measured
@@ -644,6 +737,7 @@ pub fn run_bench_with(quick: bool, p: &BenchParams) -> BenchReport {
         demux: bench_demux(p),
         grouping: bench_grouping(p),
         executor: bench_executor(p),
+        dynamics_soa: bench_dynamics_soa(p),
     }
 }
 
@@ -703,18 +797,29 @@ impl BenchReport {
             fmt_ns(self.executor.pool_probed_ns_per_step),
             self.executor.probed_over_unprobed(),
         ));
+        for c in &self.dynamics_soa.cells {
+            out.push_str(&format!(
+                "dynamics soa ({} x{}): scalar {} -> soa {} per step ({:.2}x)\n",
+                c.regime,
+                c.touched,
+                fmt_ns(c.scalar_ns_per_step),
+                fmt_ns(c.soa_ns_per_step),
+                c.speedup(),
+            ));
+        }
         out
     }
 
-    /// Machine record (`BENCH.json`): schema 4. Hand-rolled writer —
-    /// the offline image has no serde. Schema 4 adds the heterogeneous
-    /// `two-area-het` matrix entry (per-area neuron models + drives,
-    /// rational-stride topography); schema 3 added the `two-area` entry
-    /// and batched probed advances; schema 2 dropped the retired
-    /// `demux_microbench` legacy fields and added `dynamics_grouping`/
-    /// `executor_spawn_vs_pool`. `--compare` matches records by name,
-    /// so older baselines stay comparable. See docs/PERF.md for how to
-    /// read every schema.
+    /// Machine record (`BENCH.json`): schema 5. Hand-rolled writer —
+    /// the offline image has no serde. Schema 5 adds the `dynamics_soa`
+    /// record (AoS scalar loop vs SoA lanes, dense and silent regimes);
+    /// schema 4 added the heterogeneous `two-area-het` matrix entry
+    /// (per-area neuron models + drives, rational-stride topography);
+    /// schema 3 added the `two-area` entry and batched probed advances;
+    /// schema 2 dropped the retired `demux_microbench` legacy fields
+    /// and added `dynamics_grouping`/`executor_spawn_vs_pool`.
+    /// `--compare` matches records by name, so older baselines stay
+    /// comparable. See docs/PERF.md for how to read every schema.
     pub fn to_json(&self) -> String {
         let unix_s = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
@@ -722,7 +827,7 @@ impl BenchReport {
             .unwrap_or(0);
         let mut s = String::new();
         s.push_str("{\n");
-        s.push_str("  \"schema\": 4,\n");
+        s.push_str("  \"schema\": 5,\n");
         s.push_str(&format!("  \"created_unix_s\": {unix_s},\n"));
         s.push_str(&format!("  \"quick\": {},\n", self.quick));
         s.push_str("  \"matrix\": [\n");
@@ -783,7 +888,7 @@ impl BenchReport {
             "  \"executor_spawn_vs_pool\": {{\"ranks\": {}, \"steps\": {}, \
              \"spawn_ns_per_step\": {:.1}, \"pool_ns_per_step\": {:.1}, \
              \"pool_probed_ns_per_step\": {:.1}, \"spawn_over_pool\": {:.3}, \
-             \"probed_over_unprobed\": {:.3}}}\n",
+             \"probed_over_unprobed\": {:.3}}},\n",
             self.executor.ranks,
             self.executor.steps,
             self.executor.spawn_ns_per_step,
@@ -792,6 +897,22 @@ impl BenchReport {
             self.executor.spawn_over_pool(),
             self.executor.probed_over_unprobed(),
         ));
+        s.push_str("  \"dynamics_soa\": [\n");
+        for (i, c) in self.dynamics_soa.cells.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"regime\": \"{}\", \"touched\": {}, \
+                 \"events_per_step\": {}, \"scalar_ns_per_step\": {:.1}, \
+                 \"soa_ns_per_step\": {:.1}, \"speedup\": {:.3}}}{}\n",
+                c.regime,
+                c.touched,
+                c.events_per_step,
+                c.scalar_ns_per_step,
+                c.soa_ns_per_step,
+                c.speedup(),
+                if i + 1 < self.dynamics_soa.cells.len() { "," } else { "" },
+            ));
+        }
+        s.push_str("  ]\n");
         s.push('}');
         s.push('\n');
         s
@@ -860,6 +981,33 @@ impl BenchReport {
                 }
             }
         }
+        // dynamics_soa cells match on (regime, touched); only the SoA
+        // path is gated — it is what the engine runs by default
+        if let Some(soa_cells) = doc.get("dynamics_soa").and_then(Json::arr) {
+            for cell in &self.dynamics_soa.cells {
+                let base = soa_cells
+                    .iter()
+                    .find(|c| {
+                        c.get("regime").and_then(Json::as_str) == Some(cell.regime)
+                            && c.get("touched").and_then(Json::num)
+                                == Some(f64::from(cell.touched))
+                    })
+                    .and_then(|c| c.get("soa_ns_per_step"))
+                    .and_then(Json::num);
+                if let Some(base) = base {
+                    checked += 1;
+                    if worse(cell.soa_ns_per_step, base) {
+                        regressions.push(format!(
+                            "dynamics_soa {} x{}: {base:.1} -> {:.1} ns/step (+{:.0}%)",
+                            cell.regime,
+                            cell.touched,
+                            cell.soa_ns_per_step,
+                            (cell.soa_ns_per_step / base - 1.0) * 100.0
+                        ));
+                    }
+                }
+            }
+        }
         if checked == 0 {
             return Err("baseline has no comparable records (wrong file?)".to_string());
         }
@@ -912,6 +1060,7 @@ mod tests {
             demux_warmup: 1,
             demux_iters: 2,
             exec_steps: 8,
+            soa_touched: [50, 100, 200],
             ..BenchParams::standard()
         }
     }
@@ -960,10 +1109,17 @@ mod tests {
         assert!(report.executor.pool_ns_per_step > 0.0);
         assert!(report.executor.pool_probed_ns_per_step > 0.0);
         assert!(report.silent.n_large == 4 * report.silent.n_small);
+        // dynamics_soa: 3 touched counts × 2 regimes, all measured
+        assert_eq!(report.dynamics_soa.cells.len(), 6);
+        for c in &report.dynamics_soa.cells {
+            assert!(c.scalar_ns_per_step > 0.0 && c.soa_ns_per_step > 0.0);
+            assert_eq!(c.events_per_step, u64::from(c.touched));
+            assert!(c.regime == "dense" || c.regime == "silent");
+        }
 
         let json = report.to_json();
         for key in [
-            "\"schema\": 4",
+            "\"schema\": 5",
             "\"matrix\"",
             "\"kernel\": \"gaussian\"",
             "\"kernel\": \"exponential\"",
@@ -976,6 +1132,10 @@ mod tests {
             "\"executor_spawn_vs_pool\"",
             "\"spawn_over_pool\"",
             "\"probed_over_unprobed\"",
+            "\"dynamics_soa\"",
+            "\"regime\": \"dense\"",
+            "\"regime\": \"silent\"",
+            "\"soa_ns_per_step\"",
         ] {
             assert!(json.contains(key), "missing {key} in:\n{json}");
         }
@@ -984,12 +1144,13 @@ mod tests {
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());
         let doc = crate::util::json::parse(&json).expect("BENCH.json must parse");
-        assert_eq!(doc.get("schema").and_then(crate::util::json::Json::num), Some(4.0));
+        assert_eq!(doc.get("schema").and_then(crate::util::json::Json::num), Some(5.0));
         // the human rendering mentions every phase of the breakdown
         let table = report.render();
-        for col in
-            ["pack", "exchange", "demux", "dynamics", "silent dynamics", "executor"]
-        {
+        for col in [
+            "pack", "exchange", "demux", "dynamics", "silent dynamics", "executor",
+            "dynamics soa",
+        ] {
             assert!(table.contains(col), "missing {col}");
         }
 
@@ -1013,12 +1174,14 @@ mod tests {
   ],
   "demux_microbench": {"events_per_call": 1, "slot_ns_per_event": 0.0001},
   "dynamics_grouping": {"group_ns_per_event": 0.0001},
-  "executor_spawn_vs_pool": {"pool_ns_per_step": 0.0001}
+  "executor_spawn_vs_pool": {"pool_ns_per_step": 0.0001},
+  "dynamics_soa": [{"regime": "dense", "touched": 50, "soa_ns_per_step": 0.0001}]
 }"#;
         let regs = report.compare_against(baseline, 0.25).unwrap();
-        assert!(regs.len() >= 5, "expected widespread regressions, got {regs:?}");
+        assert!(regs.len() >= 6, "expected widespread regressions, got {regs:?}");
         assert!(regs.iter().any(|r| r.contains("gaussian x1 dynamics")), "{regs:?}");
         assert!(regs.iter().any(|r| r.contains("executor_spawn_vs_pool")), "{regs:?}");
+        assert!(regs.iter().any(|r| r.contains("dynamics_soa dense x50")), "{regs:?}");
         // regenerated numbers within the threshold pass
         let regs = report.compare_against(&report.to_json(), 0.25).unwrap();
         assert!(regs.is_empty());

@@ -7,6 +7,7 @@ pub mod sim;
 pub mod toml;
 
 pub use sim::{
-    AreaParams, ConnParams, ConnRule, DelayDist, ExternalOverride, ExternalParams,
-    GridParams, NeuronParams, ProjectionParams, SimConfig, Solver, Stride, SynParams,
+    AreaParams, ConnParams, ConnRule, DelayDist, DynamicsBackend, ExternalOverride,
+    ExternalParams, GridParams, NeuronParams, ProjectionParams, SimConfig, Solver, Stride,
+    SynParams,
 };

@@ -573,6 +573,36 @@ impl Solver {
     }
 }
 
+/// Which dynamics implementation integrates the neuron lanes each step.
+///
+/// All three consume the same structure-of-arrays state
+/// (`engine::soa::NeuronStateSoA`); `Scalar` and `Soa` are
+/// bit-identical by contract (test-enforced), `Batch` is the XLA/PJRT
+/// f32 path behind its own parity tolerance (see docs/PERF.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DynamicsBackend {
+    /// Reference path: per-neuron AoS `LifState` loads/stores around
+    /// the exact event-driven integrator (the pre-SoA semantics).
+    Scalar,
+    /// Default: gather + advance over the SoA lanes with memoized
+    /// exponentials — same fp operations in the same order as `Scalar`.
+    Soa,
+    /// Batched per-timestep update through the AOT-compiled XLA
+    /// artifact. Selected implicitly by `solver = "xla"`.
+    Batch,
+}
+
+impl DynamicsBackend {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "scalar" => Ok(DynamicsBackend::Scalar),
+            "soa" => Ok(DynamicsBackend::Soa),
+            "batch" => Ok(DynamicsBackend::Batch),
+            other => Err(format!("unknown backend '{other}' (scalar|soa|batch)")),
+        }
+    }
+}
+
 /// Top-level simulation configuration.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -593,6 +623,10 @@ pub struct SimConfig {
     /// STDP plasticity (paper: disabled for all scaling measurements).
     pub plasticity: bool,
     pub solver: Solver,
+    /// CPU dynamics backend (`Soa` default; `Scalar` is the bit-exact
+    /// reference). Ignored under `solver = Xla`, which forces `Batch` —
+    /// see [`dynamics_backend`](Self::dynamics_backend).
+    pub backend: DynamicsBackend,
     /// Custom connectivity kernel; overrides `conn.rule` everywhere
     /// (stencil, synapse generation, analytics) when set. `None` means
     /// "use the preset named by `conn.rule`".
@@ -625,6 +659,7 @@ impl SimConfig {
             seed: 42,
             plasticity: false,
             solver: Solver::EventDriven,
+            backend: DynamicsBackend::Soa,
             kernel: None,
             areas: Vec::new(),
             projections: Vec::new(),
@@ -648,6 +683,20 @@ impl SimConfig {
     /// Number of delay slots of `dt_ms` needed by the delay queues.
     pub fn delay_slots(&self) -> usize {
         (self.syn.delay_max_ms / self.dt_ms).ceil() as usize + 1
+    }
+
+    /// The dynamics backend the engine actually runs: `solver = Xla`
+    /// forces `Batch` (the XLA artifact *is* the batched backend),
+    /// otherwise the configured CPU backend. [`validate`](Self::validate)
+    /// rejects `backend = Batch` without the XLA solver, so the two
+    /// knobs cannot disagree.
+    #[must_use]
+    pub fn dynamics_backend(&self) -> DynamicsBackend {
+        if self.solver == Solver::Xla {
+            DynamicsBackend::Batch
+        } else {
+            self.backend
+        }
     }
 
     /// The connectivity kernel driving construction: the custom kernel
@@ -783,6 +832,7 @@ impl SimConfig {
         })?;
         cfg.plasticity = doc.bool_or("simulation.plasticity", cfg.plasticity)?;
         cfg.solver = Solver::parse(&doc.str_or("simulation.solver", "event")?)?;
+        cfg.backend = DynamicsBackend::parse(&doc.str_or("simulation.backend", "soa")?)?;
 
         // -- multi-area atlas: [[area]] / [[projection]] blocks --------
         // Areas inherit the already-resolved global [network] and
@@ -938,12 +988,6 @@ impl SimConfig {
             if let Some(np) = &a.inh {
                 Self::validate_neuron(np, &format!("{what} inh model"))?;
             }
-            if (a.exc.is_some() || a.inh.is_some()) && self.solver == Solver::Xla {
-                return Err(format!(
-                    "{what}: per-area neuron models require the event-driven solver \
-                     (the XLA batch path compiles one global exc/inh model)"
-                ));
-            }
             if let Some(r) = a.external.rate_hz {
                 if !r.is_finite() || r < 0.0 {
                     return Err(format!(
@@ -960,6 +1004,53 @@ impl SimConfig {
                     a.name
                 ));
             }
+        }
+        // The XLA batch path accepts per-area neuron models as long as
+        // every used parameter set shares the scalars the compiled
+        // artifact treats as globals (E, θ, Vr, τarp): the SoA param_id
+        // table carries per-population τ/g̃/α_c lanes, so only the
+        // shared scalars remain a hard constraint (PR 8 lifted the old
+        // blanket rejection of per-area models under `solver = xla`).
+        if self.solver == Solver::Xla {
+            let shared =
+                |np: &NeuronParams| (np.e_rest_mv, np.v_theta_mv, np.v_reset_mv, np.tau_arp_ms);
+            let want = shared(&self.exc);
+            let check = |np: &NeuronParams, what: &str| -> Result<(), String> {
+                if shared(np) == want {
+                    return Ok(());
+                }
+                Err(format!(
+                    "{what}: the XLA batch solver assumes shared E/θ/Vr/τarp across \
+                     populations (global exc: E={} θ={} Vr={} τarp={}); per-area \
+                     τ/g̃/α_c overrides are supported, the shared scalars are not",
+                    want.0, want.1, want.2, want.3
+                ))
+            };
+            check(&self.inh, "neuron.inh")?;
+            for a in &self.areas {
+                if let Some(np) = &a.exc {
+                    check(np, &format!("area '{}' exc model", a.name))?;
+                }
+                if let Some(np) = &a.inh {
+                    check(np, &format!("area '{}' inh model", a.name))?;
+                }
+            }
+        }
+        if self.backend == DynamicsBackend::Batch && self.solver != Solver::Xla {
+            return Err(
+                "backend = \"batch\" requires solver = \"xla\" (the batched backend IS \
+                 the XLA artifact; use \"soa\" or \"scalar\" for the CPU paths)"
+                    .into(),
+            );
+        }
+        // the SoA state resolves neuron models through a u8 param_id
+        // with 2 populations per area — the atlas caps at 128 areas
+        if self.areas.len() > 128 {
+            return Err(format!(
+                "atlas has {} areas; the per-neuron param_id is a u8 over two \
+                 populations per area, capping the atlas at 128 areas",
+                self.areas.len()
+            ));
         }
         if !self.projections.is_empty() && self.areas.is_empty() {
             return Err("projections require named [[area]] blocks".into());
@@ -1571,12 +1662,53 @@ inh_tau_m_ms = 8.0
         assert!(err.contains("tau_m_ms"), "{err}");
         let err = mk(|np| np.v_reset_mv = np.v_theta_mv).validate().unwrap_err();
         assert!(err.contains("v_theta_mv"), "{err}");
-        // the XLA batch path compiles one global model: per-area
-        // overrides must be a clean build error, not silent misbehavior
+        // the XLA batch path accepts per-area τ/g̃/α_c overrides (the
+        // SoA param table carries them), but a per-area override of the
+        // shared scalars (E, θ, Vr, τarp) must stay a clean build error
         let mut c = mk(|np| np.g_c_over_cm = 0.08);
         c.solver = Solver::Xla;
+        assert!(c.validate().is_ok(), "per-area SFA override must pass under xla");
+        let mut c = mk(|np| np.v_theta_mv += 1.0);
+        c.solver = Solver::Xla;
         let err = c.validate().unwrap_err();
-        assert!(err.contains("event-driven"), "{err}");
+        assert!(err.contains("shared E/θ/Vr/τarp"), "{err}");
+        // differing *global* exc/inh shared scalars are caught too
+        let mut c = SimConfig::test_small();
+        c.solver = Solver::Xla;
+        c.inh.tau_arp_ms = c.exc.tau_arp_ms + 1.0;
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("neuron.inh"), "{err}");
+    }
+
+    #[test]
+    fn backend_solver_consistency_is_validated() {
+        let mut c = SimConfig::test_small();
+        assert_eq!(c.backend, DynamicsBackend::Soa, "Soa must be the default backend");
+        assert_eq!(c.dynamics_backend(), DynamicsBackend::Soa);
+        c.backend = DynamicsBackend::Scalar;
+        assert!(c.validate().is_ok());
+        // xla solver forces the batch backend regardless of the knob
+        c.solver = Solver::Xla;
+        assert_eq!(c.dynamics_backend(), DynamicsBackend::Batch);
+        // batch backend without the xla solver is a config error
+        let mut c = SimConfig::test_small();
+        c.backend = DynamicsBackend::Batch;
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("solver = \"xla\""), "{err}");
+        c.solver = Solver::Xla;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn atlas_is_capped_at_the_u8_param_space() {
+        let mut c = SimConfig::test_small();
+        let g = GridParams { neurons_per_column: 1, ..GridParams::square(1) };
+        c.ranks = 1;
+        c.areas = (0..129).map(|i| AreaParams::new(&format!("a{i}"), g)).collect();
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("128 areas"), "{err}");
+        c.areas.pop();
+        assert!(c.validate().is_ok(), "128 areas must pass");
     }
 
     #[test]
@@ -1617,5 +1749,9 @@ inh_tau_m_ms = 8.0
         assert!(Solver::parse("gpu").is_err());
         assert_eq!(ConnRule::parse("exp").unwrap(), ConnRule::Exponential);
         assert_eq!(Solver::parse("xla").unwrap(), Solver::Xla);
+        assert!(DynamicsBackend::parse("simd").is_err());
+        assert_eq!(DynamicsBackend::parse("scalar").unwrap(), DynamicsBackend::Scalar);
+        assert_eq!(DynamicsBackend::parse("soa").unwrap(), DynamicsBackend::Soa);
+        assert_eq!(DynamicsBackend::parse("batch").unwrap(), DynamicsBackend::Batch);
     }
 }

@@ -202,6 +202,14 @@ impl SimulationBuilder {
         self
     }
 
+    /// Which CPU dynamics implementation steps the neurons (`Soa` is
+    /// the default; `Scalar` is the bit-identical reference). Under
+    /// `solver = Xla` the effective backend is always `Batch`.
+    pub fn backend(mut self, backend: crate::config::DynamicsBackend) -> Self {
+        self.cfg.backend = backend;
+        self
+    }
+
     pub fn plasticity(mut self, stdp: StdpParams) -> Self {
         self.cfg.plasticity = true;
         self.opts.stdp = stdp;

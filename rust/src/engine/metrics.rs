@@ -168,7 +168,7 @@ impl RankReport {
         r.spike_payload_bytes = v[b + 3];
         r.init_payload_msgs = v[b + 4];
         r.init_payload_bytes = v[b + 5];
-        let n_areas = v[b + 6] as usize;
+        let n_areas = usize::try_from(v[b + 6]).expect("area count fits usize");
         r.area_spikes = v[b + 7..b + 7 + n_areas].to_vec();
         r
     }

@@ -6,8 +6,10 @@ pub mod metrics;
 pub mod plasticity;
 pub mod probe;
 pub mod process;
+pub mod soa;
 
 pub use metrics::{EngineMetrics, Phase, RankReport};
+pub use soa::NeuronStateSoA;
 pub use probe::{
     ActivityProbe, AreaRateProbe, AreaSpan, AreaSpikeCountProbe, FiringRateProbe,
     PhaseMetricsProbe, Probe, SpikeCountProbe, StepSample,

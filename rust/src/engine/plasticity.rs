@@ -67,7 +67,8 @@ pub struct Plasticity {
 impl Plasticity {
     /// Build from the rank's synapse store.
     pub fn new(params: StdpParams, store: &SynapseStore, n_local: u32) -> Self {
-        let n_syn = store.synapse_count() as usize;
+        let n_syn =
+            usize::try_from(store.synapse_count()).expect("synapse count fits usize");
         let mut w0_abs = vec![0.0f32; n_syn];
         let mut w_is_exc = vec![false; n_syn];
         // afferent CSR: counting sort of synapse indices by target
@@ -85,7 +86,8 @@ impl Plasticity {
             let (tgt, w, _) = store.synapse_at(k);
             w0_abs[k] = w.abs();
             w_is_exc[k] = w >= 0.0;
-            aff_syn[cursor[tgt as usize] as usize] = k as u32;
+            aff_syn[cursor[tgt as usize] as usize] =
+                u32::try_from(k).expect("synapse index fits u32 (CSR is u32)");
             cursor[tgt as usize] += 1;
         }
         Plasticity {
@@ -102,6 +104,9 @@ impl Plasticity {
     }
 
     /// Pre-synaptic event on synapse `k` arriving at `t_ms` to `target`.
+    // spike-time differences span at most seconds; narrowing the Δt to
+    // f32 (the weight precision) is deliberate
+    #[allow(clippy::cast_possible_truncation)]
     #[inline]
     pub fn on_pre(&mut self, k: u32, target: u32, t_ms: f64) {
         let k = k as usize;
@@ -116,6 +121,8 @@ impl Plasticity {
     }
 
     /// Post-synaptic spike of local neuron `n` at `t_ms`.
+    // same deliberate f64→f32 Δt narrowing as on_pre
+    #[allow(clippy::cast_possible_truncation)]
     #[inline]
     pub fn on_post(&mut self, n: u32, t_ms: f64) {
         self.last_post_ms[n as usize] = t_ms;

@@ -88,7 +88,8 @@ impl Probe for SpikeCountProbe {
 
     fn on_step(&mut self, s: &StepSample<'_>) {
         self.total += s.spikes;
-        self.per_step.push(s.spikes as u32);
+        self.per_step
+            .push(u32::try_from(s.spikes).expect("per-step spike count fits u32"));
     }
 
     fn report(&self) -> String {
@@ -247,9 +248,10 @@ impl Probe for AreaSpikeCountProbe {
 
     fn on_step(&mut self, s: &StepSample<'_>) {
         for (i, span) in self.spans.iter().enumerate() {
-            let n: u64 = s.col_spikes[span.cols.clone()].iter().map(|&c| c as u64).sum();
+            let n: u64 = s.col_spikes[span.cols.clone()].iter().map(|&c| u64::from(c)).sum();
             self.totals[i] += n;
-            self.per_step[i].push(n as u32);
+            self.per_step[i]
+                .push(u32::try_from(n).expect("per-step area spike count fits u32"));
         }
     }
 

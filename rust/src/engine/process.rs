@@ -31,13 +31,14 @@
 //! service the remaining commands without tearing the state down.
 
 use crate::checkpoint::{CounterState, PlasticityState, RankExpectation, RankState};
-use crate::config::{ExternalOverride, ExternalParams, SimConfig, Solver};
+use crate::config::{DynamicsBackend, ExternalOverride, ExternalParams, SimConfig};
 use crate::connectivity::builder::{generate_outgoing_atlas, AtlasWiring};
 use crate::engine::metrics::{EngineMetrics, Phase, RankReport};
 use crate::engine::plasticity::{Plasticity, StdpParams};
+use crate::engine::soa::NeuronStateSoA;
 use crate::geometry::{ColumnId, Decomposition};
 use crate::mpi::{CommClass, RankComm, Wire};
-use crate::neuron::{LifParams, LifState};
+use crate::neuron::LifParams;
 use crate::runtime::batch::BatchSolver;
 use crate::stimulus::{CalendarEntry, ExternalEvent, ExternalStimulus, StimCalendar};
 use crate::synapse::{DelayQueue, PendingEvent, SynapseStore, TargetGrouper};
@@ -218,37 +219,93 @@ impl RunOptions {
     /// apply_interval_ms = 1000.0
     /// w_bound_factor    = 2.0
     /// ```
+    // STDP parameters are stored at f32 (they multiply f32 synapse
+    // weights); the f64 TOML values are narrowed deliberately.
+    #[allow(clippy::cast_possible_truncation)]
     pub fn from_doc(doc: &crate::config::toml::Doc) -> Result<Self, String> {
         let d = RunOptions::default();
         let mapping =
             crate::geometry::Mapping::parse(&doc.str_or("run.mapping", "block")?)?;
         let s = d.stdp;
         let stdp = StdpParams {
-            a_plus: doc.float_or("stdp.a_plus", s.a_plus as f64)? as f32,
-            a_minus: doc.float_or("stdp.a_minus", s.a_minus as f64)? as f32,
-            tau_plus_ms: doc.float_or("stdp.tau_plus_ms", s.tau_plus_ms as f64)? as f32,
-            tau_minus_ms: doc.float_or("stdp.tau_minus_ms", s.tau_minus_ms as f64)? as f32,
+            a_plus: doc.float_or("stdp.a_plus", f64::from(s.a_plus))? as f32,
+            a_minus: doc.float_or("stdp.a_minus", f64::from(s.a_minus))? as f32,
+            tau_plus_ms: doc.float_or("stdp.tau_plus_ms", f64::from(s.tau_plus_ms))? as f32,
+            tau_minus_ms: doc.float_or("stdp.tau_minus_ms", f64::from(s.tau_minus_ms))?
+                as f32,
             apply_interval_ms: doc.float_or("stdp.apply_interval_ms", s.apply_interval_ms)?,
-            w_bound_factor: doc.float_or("stdp.w_bound_factor", s.w_bound_factor as f64)?
+            w_bound_factor: doc
+                .float_or("stdp.w_bound_factor", f64::from(s.w_bound_factor))?
                 as f32,
         };
         let ckpt = doc.int_or("run.checkpoint_every_steps", 0)?;
         let watchdog = doc.int_or("run.watchdog_timeout_ms", 0)?;
+        let retries = doc.int_or("run.recovery_retries", i64::from(d.recovery_retries))?;
+        let backoff = doc.int_or(
+            "run.recovery_backoff_ms",
+            i64::try_from(d.recovery_backoff_ms).expect("default backoff fits i64"),
+        )?;
         Ok(RunOptions {
             mapping,
             record_activity: doc.bool_or("run.record_activity", d.record_activity)?,
             naive_delivery: doc.bool_or("run.naive_delivery", d.naive_delivery)?,
             stdp,
             fault: None,
-            checkpoint_every_steps: (ckpt > 0).then_some(ckpt as u64),
-            watchdog_timeout_ms: (watchdog > 0).then_some(watchdog as u64),
-            recovery_retries: doc.int_or("run.recovery_retries", d.recovery_retries as i64)?
-                as u32,
-            recovery_backoff_ms: doc
-                .int_or("run.recovery_backoff_ms", d.recovery_backoff_ms as i64)?
-                as u64,
+            checkpoint_every_steps: (ckpt > 0).then_some(ckpt.unsigned_abs()),
+            watchdog_timeout_ms: (watchdog > 0).then_some(watchdog.unsigned_abs()),
+            recovery_retries: u32::try_from(retries).map_err(|_| {
+                format!(
+                    "config key 'run.recovery_retries' must be a non-negative \
+                     integer fitting u32, got {retries}"
+                )
+            })?,
+            recovery_backoff_ms: u64::try_from(backoff).map_err(|_| {
+                format!(
+                    "config key 'run.recovery_backoff_ms' must be a non-negative \
+                     integer, got {backoff}"
+                )
+            })?,
         })
     }
+}
+
+/// One touched neuron's work for the SoA advance loop: the gather
+/// stage walks the sorted event bucket and the due calendar entries
+/// once, emitting one segment per neuron with input this step. The
+/// advance-and-threshold loop then runs over this compact list instead
+/// of re-merging cursors per neuron.
+#[derive(Clone, Copy)]
+struct TouchedSeg {
+    local: u32,
+    /// Recurrent slice bounds into the step's sorted event bucket.
+    rec_start: u32,
+    rec_end: u32,
+    /// Index of this neuron's due calendar entry in the drained
+    /// calendar scratch, or [`NO_CAL`] when none is due.
+    cal: u32,
+}
+
+/// Sentinel for "no calendar entry" in [`TouchedSeg::cal`]: `cal_buf`
+/// holds at most one entry per local neuron (< 2^32), so the max value
+/// never indexes it.
+const NO_CAL: u32 = u32::MAX;
+
+/// Wire timestamp of a spike at time `t` [ms]. The session layer
+/// enforces [`WIRE_TIME_HORIZON_MS`], so `t · 1000` is a nonnegative
+/// value below 2^32 and the cast cannot wrap or change sign.
+#[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
+#[inline]
+fn spike_time_us(t: f64) -> u32 {
+    (t * 1000.0) as u32
+}
+
+/// Emission step of a wire timestamp: `t_emit` comes from a u32 µs
+/// count, so `t_emit / dt` is a nonnegative value below 2^32 and the
+/// cast to the wider u64 cannot wrap or change sign.
+#[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
+#[inline]
+fn emit_step_of(t_emit: f64, dt_ms: f64) -> u64 {
+    (t_emit / dt_ms) as u64
 }
 
 /// The per-rank simulation state.
@@ -265,19 +322,18 @@ pub struct RankProcess {
     col_area: Vec<u16>,
     /// Local neuron index → position of its column in `my_columns`.
     local_col_pos: Vec<u32>,
-    /// Local neuron index → excitatory? (per-area `exc_fraction`).
-    local_is_exc: Vec<bool>,
     n_local: u32,
     /// Local neuron index → global id (wire-boundary conversion table).
     local_gid: Vec<u32>,
-    states: Vec<LifState>,
-    /// Per-area excitatory/inhibitory integrator constants (index =
-    /// atlas area): heterogeneous compositions give each area its own
-    /// neuron model, resolved per local neuron through `col_area`/
-    /// `local_col_pos`/`local_is_exc`. A homogeneous atlas holds the
-    /// same constants in every slot.
-    area_exc: Vec<LifParams>,
-    area_inh: Vec<LifParams>,
+    /// Structure-of-arrays neuron state: `v`/`c`/`last_t`/`refr_until`
+    /// lanes plus the resolved per-area `LifParams` table indexed by a
+    /// per-neuron `param_id` (layout `2·area + {0: exc, 1: inh}`) —
+    /// heterogeneous compositions give each area its own neuron model.
+    /// Every dynamics backend reads this one representation.
+    soa: NeuronStateSoA,
+    /// Which dynamics implementation `step` dispatches to (resolved
+    /// from the config at construction: `Batch` iff `solver = xla`).
+    backend: DynamicsBackend,
     store: SynapseStore,
     queue: DelayQueue,
     /// Per-area external stimulus (index = atlas area; a one-area atlas
@@ -312,6 +368,10 @@ pub struct RankProcess {
     stim_cal: StimCalendar,
     /// Reusable calendar-drain scratch.
     cal_buf: Vec<crate::stimulus::DueEvent>,
+    /// Reusable touched-index scratch of the SoA gather stage: one
+    /// segment per neuron with work this step (recurrent slice bounds
+    /// into the sorted event bucket + its calendar entry, if any).
+    touched: Vec<TouchedSeg>,
     /// Bucketed per-target grouping of the drained event bucket
     /// (replaces the per-step comparison sort, see `synapse::grouping`).
     grouper: TargetGrouper,
@@ -338,11 +398,6 @@ pub struct RankProcess {
 }
 
 impl RankProcess {
-    #[inline]
-    fn is_exc_local(&self, local: u32) -> bool {
-        self.local_is_exc[local as usize]
-    }
-
     /// Atlas area index of one local neuron (through the CSR tables).
     #[inline]
     fn area_of_local(&self, local: u32) -> usize {
@@ -350,15 +405,11 @@ impl RankProcess {
     }
 
     /// The LIF integrator constants of one local neuron: its area's
-    /// excitatory or inhibitory model (per-area heterogeneity).
+    /// excitatory or inhibitory model (per-area heterogeneity),
+    /// resolved through the SoA `param_id` table.
     #[inline]
     fn lif_params(&self, local: u32) -> &LifParams {
-        let ai = self.area_of_local(local);
-        if self.is_exc_local(local) {
-            &self.area_exc[ai]
-        } else {
-            &self.area_inh[ai]
-        }
+        self.soa.params_of(local)
     }
 
     /// The external stimulus driving one local neuron (its area's).
@@ -396,7 +447,7 @@ impl RankProcess {
         for &col in &my_columns {
             let (ai, _) = atlas.col_area_local(col);
             col_start.push(acc);
-            col_area.push(ai as u16);
+            col_area.push(u16::try_from(ai).expect("validate caps the atlas at 128 areas"));
             acc += atlas.area(ai).grid.p.neurons_per_column;
         }
         col_start.push(acc);
@@ -407,7 +458,7 @@ impl RankProcess {
             let g = &atlas.area(ai as usize).grid;
             for l in 0..g.p.neurons_per_column {
                 local_is_exc.push(g.is_excitatory_local(l));
-                local_col_pos.push(pos as u32);
+                local_col_pos.push(u32::try_from(pos).expect("column count fits u32"));
             }
         }
 
@@ -427,12 +478,13 @@ impl RankProcess {
         };
         let mut route_sets: Vec<Vec<u32>> = vec![Vec::new(); n_local as usize];
         for (tgt_rank, bucket) in buckets.iter().enumerate() {
+            let tgt_rank = u32::try_from(tgt_rank).expect("rank count fits u32");
             for s in bucket {
                 let local = to_local(s.src_gid as u64) as usize;
                 let set = &mut route_sets[local];
-                if set.last() != Some(&(tgt_rank as u32)) {
+                if set.last() != Some(&tgt_rank) {
                     // buckets are visited in rank order ⇒ sorted inserts
-                    set.push(tgt_rank as u32);
+                    set.push(tgt_rank);
                 }
             }
         }
@@ -441,7 +493,8 @@ impl RankProcess {
         route_start.push(0u32);
         for set in &route_sets {
             route_rank.extend_from_slice(set);
-            route_start.push(route_rank.len() as u32);
+            route_start
+                .push(u32::try_from(route_rank.len()).expect("route table fits u32"));
         }
         drop(route_sets);
 
@@ -474,20 +527,20 @@ impl RankProcess {
 
         // per-area neuron models: unset overrides inherit the globals,
         // so a homogeneous atlas carries identical constants per slot
-        let area_exc: Vec<LifParams> = area_params
-            .iter()
-            .map(|a| LifParams::new(a.exc.as_ref().unwrap_or(&cfg.exc)))
-            .collect();
-        let area_inh: Vec<LifParams> = area_params
-            .iter()
-            .map(|a| LifParams::new(a.inh.as_ref().unwrap_or(&cfg.inh)))
-            .collect();
-        let mut states = Vec::with_capacity(n_local as usize);
+        // (param table layout: `2·area + {0: exc, 1: inh}`)
+        let mut params_table: Vec<LifParams> = Vec::with_capacity(area_params.len() * 2);
+        for a in &area_params {
+            params_table.push(LifParams::new(a.exc.as_ref().unwrap_or(&cfg.exc)));
+            params_table.push(LifParams::new(a.inh.as_ref().unwrap_or(&cfg.inh)));
+        }
+        let mut param_id = Vec::with_capacity(n_local as usize);
         for l in 0..n_local as usize {
             let ai = col_area[local_col_pos[l] as usize] as usize;
-            let p = if local_is_exc[l] { &area_exc[ai] } else { &area_inh[ai] };
-            states.push(LifState::resting(p));
+            let off = usize::from(!local_is_exc[l]);
+            param_id
+                .push(u8::try_from(2 * ai + off).expect("validate caps the atlas at 128 areas"));
         }
+        let soa = NeuronStateSoA::build(params_table, param_id);
         let queue = DelayQueue::new(cfg.delay_slots() + 1);
         debug_assert!(
             (store.max_slot() as usize) < queue.horizon(),
@@ -510,12 +563,13 @@ impl RankProcess {
             .collect();
         let plasticity =
             cfg.plasticity.then(|| Plasticity::new(opts.stdp, &store, n_local));
-        let batch = match cfg.solver {
-            Solver::Xla => Some(
-                BatchSolver::with_populations(cfg, n_local, |l| local_is_exc[l as usize])
+        let backend = cfg.dynamics_backend();
+        let batch = match backend {
+            DynamicsBackend::Batch => Some(
+                BatchSolver::from_soa(cfg, &soa)
                     .expect("XLA solver requested but artifact unavailable"),
             ),
-            Solver::EventDriven => None,
+            DynamicsBackend::Scalar | DynamicsBackend::Soa => None,
         };
 
         let n_areas = atlas.len();
@@ -526,12 +580,10 @@ impl RankProcess {
             col_start,
             col_area,
             local_col_pos,
-            local_is_exc,
             n_local,
             local_gid,
-            states,
-            area_exc,
-            area_inh,
+            soa,
+            backend,
             store,
             queue,
             stims,
@@ -546,6 +598,7 @@ impl RankProcess {
             stim_streams,
             stim_cal: StimCalendar::new(STIM_CAL_HORIZON),
             cal_buf: Vec::new(),
+            touched: Vec::new(),
             grouper: TargetGrouper::new(n_local),
             metrics: EngineMetrics::default(),
             observe: false,
@@ -565,12 +618,15 @@ impl RankProcess {
     }
 
     /// Sum of the heap-resident engine structures (synapse store, delay
-    /// queues, stimulus calendar, event grouper, plasticity traces) —
-    /// the single definition used by construction,
-    /// [`report`](Self::report) and [`finish`](Self::finish).
+    /// queues, SoA neuron lanes + dt-memo, gather scratch, stimulus
+    /// calendar, event grouper, plasticity traces) — the single
+    /// definition used by construction, [`report`](Self::report) and
+    /// [`finish`](Self::finish).
     fn resident_bytes_now(&self) -> u64 {
         self.store.resident_bytes()
             + self.queue.resident_bytes()
+            + self.soa.resident_bytes()
+            + (self.touched.capacity() * std::mem::size_of::<TouchedSeg>()) as u64
             + self.stim_cal.resident_bytes()
             + self.grouper.resident_bytes()
             + self.plasticity.as_ref().map_or(0, |p| p.resident_bytes())
@@ -637,10 +693,7 @@ impl RankProcess {
     /// (With plasticity on, STDP traces restart but weights already
     /// consolidated into the store are kept.)
     pub fn reset(&mut self) {
-        for local in 0..self.n_local {
-            let resting = LifState::resting(self.lif_params(local));
-            self.states[local as usize] = resting;
-        }
+        self.soa.reset_to_resting();
         self.queue = DelayQueue::new(self.cfg.delay_slots() + 1);
         self.fired.clear();
         for b in &mut self.pack_bufs {
@@ -651,7 +704,10 @@ impl RankProcess {
             .local_gid
             .iter()
             .enumerate()
-            .map(|(l, &gid)| self.stim_of(l as u32).neuron_stream(gid as u64))
+            .map(|(l, &gid)| {
+                let l = u32::try_from(l).expect("local neuron count fits u32");
+                self.stim_of(l).neuron_stream(gid as u64)
+            })
             .collect();
         // fresh streams + fresh calendar ⇒ the replay draws the exact
         // same per-neuron event sequence as the original run
@@ -662,12 +718,9 @@ impl RankProcess {
         // the batched solver holds (v, c, refr) host-side between steps;
         // rebuild it so the replay starts from resting state too
         if self.batch.is_some() {
-            let is_exc = &self.local_is_exc;
             self.batch = Some(
-                BatchSolver::with_populations(&self.cfg, self.n_local, |l| {
-                    is_exc[l as usize]
-                })
-                .expect("XLA solver rebuild on reset"),
+                BatchSolver::from_soa(&self.cfg, &self.soa)
+                    .expect("XLA solver rebuild on reset"),
             );
         }
         // keep construction-time figures, restart the run counters
@@ -779,7 +832,7 @@ impl RankProcess {
             comm.alltoallv(CommClass::SpikePayload, sends)
                 .into_iter()
                 .enumerate()
-                .map(|(r, v)| (r as u32, v))
+                .map(|(r, v)| (u32::try_from(r).expect("rank count fits u32"), v))
                 .collect()
         } else {
             // step 1: single-word spike counters to the known subset
@@ -825,7 +878,7 @@ impl RankProcess {
                 // that boundary emissions — e.g. the batch solver stamps
                 // spikes at the step-end boundary — belong to the next
                 // step's grid cell; deriving from t_us handles both.
-                let emit_step = (t_emit / dt_ms) as u64;
+                let emit_step = emit_step_of(t_emit, dt_ms);
                 debug_assert!(emit_step <= step, "spike from the future at step {step}");
                 let delivered = self.store.demux_spike_into(
                     sp.gid,
@@ -867,10 +920,10 @@ impl RankProcess {
         // pass. `dpsnn bench` records both costs (dynamics_grouping) so
         // the trade stays measured.
         self.grouper.sort_events(&mut events);
-        if self.batch.is_some() {
-            self.step_dynamics_batch(step, &events);
-        } else {
-            self.step_dynamics_event(step, &events);
+        match self.backend {
+            DynamicsBackend::Batch => self.step_dynamics_batch(step, &events),
+            DynamicsBackend::Scalar => self.step_dynamics_event(step, &events),
+            DynamicsBackend::Soa => self.step_dynamics_soa(step, &events),
         }
         self.queue.recycle(events);
         self.metrics.stop(Phase::Dynamics);
@@ -942,10 +995,10 @@ impl RankProcess {
             n_local: self.n_local,
             n_areas: self.stims.len(),
             queue_slots: self.queue.horizon(),
-            n_synapses: self
-                .plasticity
-                .is_some()
-                .then(|| self.store.synapse_count() as usize),
+            n_synapses: self.plasticity.is_some().then(|| {
+                usize::try_from(self.store.synapse_count())
+                    .expect("synapse count fits usize")
+            }),
         }
     }
 
@@ -975,7 +1028,7 @@ impl RankProcess {
         RankState {
             rank: self.rank,
             n_local: self.n_local,
-            states: self.states.clone(),
+            states: self.soa.to_states(),
             queue_base: self.queue.base_step(),
             queue_events,
             cal_base: self.stim_cal.base_step(),
@@ -1012,7 +1065,7 @@ impl RankProcess {
                 st.rank, self.rank
             ));
         }
-        if st.n_local != self.n_local || st.states.len() != self.states.len() {
+        if st.n_local != self.n_local || st.states.len() != self.soa.len() {
             return Err(format!(
                 "neuron count mismatch: checkpoint has {}, process has {}",
                 st.n_local, self.n_local
@@ -1049,7 +1102,7 @@ impl RankProcess {
                 return Err("plasticity is off but the checkpoint carries STDP state".into())
             }
         }
-        self.states.clone_from(&st.states);
+        self.soa.restore_from_states(&st.states)?;
         let mut queue = DelayQueue::with_base(self.cfg.delay_slots() + 1, st.queue_base);
         for &(step, ev) in &st.queue_events {
             queue.push(step, ev);
@@ -1109,11 +1162,11 @@ impl RankProcess {
             "rebase delta reaches before the origin"
         );
         let delta_ms = delta_steps as f64 * self.cfg.dt_ms;
+        // delta_ms is a non-negative in-run duration well below the
+        // u32-µs wire horizon, so the rounded µs value fits u64
+        #[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
         let delta_us = (delta_ms * 1000.0).round() as u64;
-        for s in &mut self.states {
-            s.last_t -= delta_ms;
-            s.refr_until -= delta_ms;
-        }
+        self.soa.rebase(delta_ms);
         // delay queue: same pending events, base and steps shifted
         let mut events = Vec::new();
         self.queue.for_each_pending(|step, ev| events.push((step, *ev)));
@@ -1143,7 +1196,8 @@ impl RankProcess {
             p.shift_times(delta_ms);
         }
         for sp in &mut self.fired {
-            sp.t_us = (u64::from(sp.t_us).saturating_sub(delta_us)) as u32;
+            sp.t_us = u32::try_from(u64::from(sp.t_us).saturating_sub(delta_us))
+                .expect("saturating_sub cannot grow a u32");
         }
     }
 
@@ -1199,7 +1253,7 @@ impl RankProcess {
             // the neuron's own area supplies its integrator constants
             // (per-area heterogeneous models)
             let params = *self.lif_params(local);
-            let state = &mut self.states[local as usize];
+            let mut state = self.soa.load(local);
             // two-pointer merge of recurrent + external in time order;
             // recurrent events carry their synapse index for STDP
             let (mut i, mut j) = (0usize, 0usize);
@@ -1229,8 +1283,7 @@ impl RankProcess {
                 }
                 let was_refractory = t < state.refr_until;
                 if state.inject(&params, t, w as f64) {
-                    let t_spike_us = (t * 1000.0) as u32;
-                    self.fired.push(LocalSpike { local, t_us: t_spike_us });
+                    self.fired.push(LocalSpike { local, t_us: spike_time_us(t) });
                     self.metrics.spikes += 1;
                     if let Some(p) = &mut self.plasticity {
                         p.on_post(local, t);
@@ -1242,7 +1295,127 @@ impl RankProcess {
             // f32-quantized recurrent times may sit an ulp past the
             // boundary; tolerance is f32-scale, not f64-scale
             debug_assert!(state.last_t <= t1 + 1e-4 + t1 * 1e-6);
+            self.soa.store(local, state);
         }
+    }
+
+    /// Gather stage of the SoA backend: walk the sorted event bucket and
+    /// the due calendar entries once, emitting one [`TouchedSeg`] per
+    /// neuron with work this step (ascending local order — the same
+    /// visit order as the scalar reference). The advance stage then
+    /// iterates this compact work list instead of re-merging.
+    fn gather_touched(&mut self, events: &[PendingEvent]) {
+        self.touched.clear();
+        let mut cursor = 0usize; // recurrent events, sorted by target
+        let mut ci = 0usize; // calendar entries, sorted by local
+        while cursor < events.len() || ci < self.cal_buf.len() {
+            let rec_target = events.get(cursor).map(|e| e.target_local);
+            let ext_target = self.cal_buf.get(ci).map(|e| e.local);
+            let local = match (rec_target, ext_target) {
+                (Some(r), Some(x)) => r.min(x),
+                (Some(r), None) => r,
+                (None, Some(x)) => x,
+                (None, None) => unreachable!(),
+            };
+            let rec_start = cursor;
+            while cursor < events.len() && events[cursor].target_local == local {
+                cursor += 1;
+            }
+            let cal = if ext_target == Some(local) {
+                let k = ci;
+                ci += 1;
+                u32::try_from(k).expect("calendar entries bounded by n_local (u32)")
+            } else {
+                NO_CAL
+            };
+            self.touched.push(TouchedSeg {
+                local,
+                rec_start: u32::try_from(rec_start).expect("event bucket fits u32"),
+                rec_end: u32::try_from(cursor).expect("event bucket fits u32"),
+                cal,
+            });
+        }
+    }
+
+    /// SoA dynamics: gather stage + tight advance-and-threshold loop
+    /// over the touched-index list, reading and writing the
+    /// structure-of-arrays lanes directly. Exponentials are memoized per
+    /// `(param_id, dt)` in [`NeuronStateSoA`]; degenerate-τ neurons take
+    /// the scalar fallback inside `NeuronStateSoA::advance`. Replays the
+    /// scalar reference's fp ops in the same order — spike trains are
+    /// bit-identical to [`step_dynamics_event`](Self::step_dynamics_event).
+    fn step_dynamics_soa(&mut self, step: u64, events: &[PendingEvent]) {
+        let t0 = step as f64 * self.cfg.dt_ms;
+        let t1 = (step + 1) as f64 * self.cfg.dt_ms;
+        let inv_dt = 1.0 / self.cfg.dt_ms;
+        self.cal_buf.clear();
+        self.stim_cal.take_step(step, &mut self.cal_buf);
+        self.gather_touched(events);
+        // take the work list so the loop can borrow &mut self freely
+        let touched = std::mem::take(&mut self.touched);
+        for seg in &touched {
+            let local = seg.local;
+            let rec = &events[seg.rec_start as usize..seg.rec_end as usize];
+            // external events for this neuron, this step: materialize
+            // the chain of exponential gaps that falls inside the step,
+            // then put the first event beyond it back on the calendar
+            self.ext_buf.clear();
+            if seg.cal != NO_CAL {
+                let stim = self.stim_of(local);
+                let mut t = self.cal_buf[seg.cal as usize].time_ms;
+                let rng = &mut self.stim_streams[local as usize];
+                while t < t1 {
+                    self.ext_buf.push(ExternalEvent { time_ms: t, weight: stim.weight() });
+                    t = stim.next_event_ms(rng, t);
+                }
+                self.stim_cal.schedule(local, t, inv_dt);
+                self.metrics.external_events += self.ext_buf.len() as u64;
+            }
+            // two-pointer merge of recurrent + external in time order —
+            // identical event order (and thus fp-op order) to the
+            // scalar reference
+            let (mut i, mut j) = (0usize, 0usize);
+            loop {
+                let (t, w, syn) = match (rec.get(i), self.ext_buf.get(j)) {
+                    (Some(r), Some(e)) => {
+                        if t0 + r.offset_ms as f64 <= e.time_ms {
+                            i += 1;
+                            (t0 + r.offset_ms as f64, r.weight, Some(r.syn_idx))
+                        } else {
+                            j += 1;
+                            (e.time_ms, e.weight, None)
+                        }
+                    }
+                    (Some(r), None) => {
+                        i += 1;
+                        (t0 + r.offset_ms as f64, r.weight, Some(r.syn_idx))
+                    }
+                    (None, Some(e)) => {
+                        j += 1;
+                        (e.time_ms, e.weight, None)
+                    }
+                    (None, None) => break,
+                };
+                if let (Some(p), Some(k)) = (&mut self.plasticity, syn) {
+                    p.on_pre(k, local, t);
+                }
+                let was_refractory = self.soa.is_refractory(local, t);
+                if self.soa.inject(local, t, w as f64) {
+                    self.fired.push(LocalSpike { local, t_us: spike_time_us(t) });
+                    self.metrics.spikes += 1;
+                    if let Some(p) = &mut self.plasticity {
+                        p.on_post(local, t);
+                    }
+                } else if was_refractory {
+                    self.metrics.refractory_drops += 1;
+                }
+            }
+            // f32-quantized recurrent times may sit an ulp past the
+            // boundary; tolerance is f32-scale, not f64-scale
+            debug_assert!(self.soa.load(local).last_t <= t1 + 1e-4 + t1 * 1e-6);
+        }
+        // hand the scratch (and its capacity) back for the next step
+        self.touched = touched;
     }
 
     /// Batched dynamics through the AOT-compiled XLA artifact: per-step
@@ -1276,7 +1449,7 @@ impl RankProcess {
         }
         let spiked: Vec<u32> = batch.execute(self.cfg.dt_ms).expect("XLA step failed").to_vec();
         self.batch = Some(batch);
-        let t_spike_us = (t1 * 1000.0) as u32;
+        let t_spike_us = spike_time_us(t1);
         for local in spiked {
             self.fired.push(LocalSpike { local, t_us: t_spike_us });
             self.metrics.spikes += 1;
@@ -1307,6 +1480,7 @@ impl RankProcess {
 }
 
 #[cfg(test)]
+#[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
 mod tests {
     use super::*;
     use crate::geometry::{Grid, Mapping};
@@ -1720,5 +1894,163 @@ mod tests {
             before.iter().zip(after).any(|(a, b)| a != b),
             "STDP enabled but no weight changed"
         );
+    }
+
+    /// Run `cfg` under `mapping` on `ranks` ranks, returning the merged
+    /// time-sorted spike train (the backend comes from `cfg.backend`).
+    fn spikes_under(cfg: &SimConfig, ranks: u32, mapping: Mapping) -> Vec<WireSpike> {
+        let cfg = cfg.clone();
+        let results = run_cluster(ranks, move |mut comm| {
+            let decomp = Decomposition::for_atlas(&cfg.atlas(), comm.ranks(), mapping);
+            let opts = RunOptions { mapping, ..Default::default() };
+            let mut proc = RankProcess::construct(&cfg, &decomp, &mut comm, &opts);
+            let steps = (cfg.duration_ms / cfg.dt_ms) as u64;
+            let mut spikes = Vec::new();
+            for s in 0..steps {
+                proc.step(&mut comm, s);
+                spikes.extend(proc.latest_spikes());
+            }
+            spikes
+        });
+        let mut all: Vec<WireSpike> = results.into_iter().flatten().collect();
+        all.sort_unstable_by_key(|s| (s.t_us, s.gid));
+        all
+    }
+
+    #[test]
+    fn soa_backend_is_bit_identical_to_scalar_across_decompositions() {
+        // the tentpole contract: the SoA fast path replays the scalar
+        // reference's fp ops in the same order, so spike trains match
+        // to the bit across every rank count × mapping combination
+        let mut scalar_cfg = tiny_cfg();
+        scalar_cfg.backend = DynamicsBackend::Scalar;
+        let mut soa_cfg = tiny_cfg();
+        soa_cfg.backend = DynamicsBackend::Soa;
+        let reference = spikes_under(&scalar_cfg, 1, Mapping::Block);
+        assert!(!reference.is_empty(), "network must be active");
+        for ranks in [1u32, 2, 4] {
+            for mapping in [Mapping::Block, Mapping::RoundRobin] {
+                assert_eq!(
+                    spikes_under(&scalar_cfg, ranks, mapping),
+                    reference,
+                    "scalar differs at {ranks} ranks / {mapping:?}"
+                );
+                assert_eq!(
+                    spikes_under(&soa_cfg, ranks, mapping),
+                    reference,
+                    "soa differs from scalar at {ranks} ranks / {mapping:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn soa_backend_matches_scalar_under_stdp() {
+        // STDP sees the same (target, time, syn_idx)-ordered on_pre /
+        // on_post call sequence from both backends, so the plastic run
+        // stays bit-identical too
+        let mut cfg = tiny_cfg();
+        cfg.duration_ms = 50.0;
+        cfg.plasticity = true;
+        cfg.backend = DynamicsBackend::Scalar;
+        let reference = spikes_under(&cfg, 1, Mapping::Block);
+        assert!(!reference.is_empty(), "plastic network must be active");
+        cfg.backend = DynamicsBackend::Soa;
+        for ranks in [1u32, 2] {
+            assert_eq!(
+                spikes_under(&cfg, ranks, Mapping::Block),
+                reference,
+                "soa+stdp differs from scalar at {ranks} ranks"
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_tau_area_matches_across_backends() {
+        // τc == τm is the SoA slow path (load/advance/store fallback);
+        // a mixed atlas exercises fast and fallback neurons side by side
+        let mut cfg = two_area_cfg();
+        let mut deg = crate::config::NeuronParams::excitatory();
+        deg.tau_c_ms = deg.tau_m_ms;
+        cfg.areas[1].exc = Some(deg);
+        cfg.backend = DynamicsBackend::Scalar;
+        let reference = spikes_under(&cfg, 1, Mapping::Block);
+        assert!(!reference.is_empty(), "degenerate-τ network must be active");
+        cfg.backend = DynamicsBackend::Soa;
+        for ranks in [1u32, 2] {
+            assert_eq!(
+                spikes_under(&cfg, ranks, Mapping::Block),
+                reference,
+                "degenerate-τ soa differs from scalar at {ranks} ranks"
+            );
+        }
+    }
+
+    /// Run 15 steps under `cfg`, snapshot, then restore the snapshot
+    /// into a freshly-constructed process and run steps 15..30 there.
+    /// Returns the snapshot and the resumed process's spike tail.
+    fn snap_and_resume(cfg: &SimConfig) -> (RankState, Vec<WireSpike>) {
+        let cfg = cfg.clone();
+        let mut results = run_cluster(1, move |mut comm| {
+            let decomp = Decomposition::for_atlas(&cfg.atlas(), 1, Mapping::Block);
+            let opts = RunOptions::default();
+            let mut proc = RankProcess::construct(&cfg, &decomp, &mut comm, &opts);
+            for s in 0..15 {
+                proc.step(&mut comm, s);
+            }
+            let snap = proc.snapshot_state();
+            let mut fresh = RankProcess::construct(&cfg, &decomp, &mut comm, &opts);
+            fresh.restore_state(&snap).expect("restore onto twin process");
+            let mut tail = Vec::new();
+            for s in 15..30 {
+                fresh.step(&mut comm, s);
+                tail.extend(fresh.latest_spikes());
+            }
+            (snap, tail)
+        });
+        results.pop().expect("one rank")
+    }
+
+    #[test]
+    fn soa_checkpoint_cycle_matches_the_scalar_wire_format() {
+        // uninterrupted scalar run: the reference tail (steps 15..30)
+        let cfg0 = tiny_cfg();
+        let mut scalar_cfg = cfg0.clone();
+        scalar_cfg.backend = DynamicsBackend::Scalar;
+        let ref_cfg = scalar_cfg.clone();
+        let mut ref_results = run_cluster(1, move |mut comm| {
+            let decomp = Decomposition::for_atlas(&ref_cfg.atlas(), 1, Mapping::Block);
+            let mut proc =
+                RankProcess::construct(&ref_cfg, &decomp, &mut comm, &RunOptions::default());
+            let mut tail = Vec::new();
+            for s in 0..30 {
+                proc.step(&mut comm, s);
+                if s >= 15 {
+                    tail.extend(proc.latest_spikes());
+                }
+            }
+            tail
+        });
+        let reference_tail = ref_results.pop().expect("one rank");
+        assert!(!reference_tail.is_empty(), "reference tail must be active");
+
+        let mut soa_cfg = cfg0;
+        soa_cfg.backend = DynamicsBackend::Soa;
+        let (scalar_snap, scalar_tail) = snap_and_resume(&scalar_cfg);
+        let (soa_snap, soa_tail) = snap_and_resume(&soa_cfg);
+
+        // the checkpoint wire format is unchanged: the SoA lanes
+        // round-trip through the same Vec<LifState> record, bit for bit
+        assert_eq!(scalar_snap.states.len(), soa_snap.states.len());
+        for (a, b) in scalar_snap.states.iter().zip(&soa_snap.states) {
+            assert_eq!(a.v.to_bits(), b.v.to_bits());
+            assert_eq!(a.c.to_bits(), b.c.to_bits());
+            assert_eq!(a.last_t.to_bits(), b.last_t.to_bits());
+            assert_eq!(a.refr_until.to_bits(), b.refr_until.to_bits());
+        }
+        // both backends resume from their snapshot onto the exact
+        // uninterrupted trajectory
+        assert_eq!(scalar_tail, reference_tail, "scalar resume diverged");
+        assert_eq!(soa_tail, reference_tail, "soa resume diverged");
     }
 }

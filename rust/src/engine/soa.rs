@@ -1,0 +1,505 @@
+//! Structure-of-arrays neuron state — the shared layout behind every
+//! dynamics backend (PR 8, ROADMAP direction 2).
+//!
+//! [`RankProcess`](crate::engine::process::RankProcess) used to hold
+//! `Vec<LifState>` (array-of-structs): every integration chased one
+//! 32-byte struct and re-derived its area's [`LifParams`] through three
+//! indirection tables. [`NeuronStateSoA`] flips that into parallel
+//! `Vec<f64>` lanes (`v` / `c` / `last_t` / `refr_until`) plus a compact
+//! per-neuron `param_id: Vec<u8>` into a resolved [`LifParams`] table —
+//! the layout the CPU fast path, the scalar reference, and the XLA batch
+//! solver (`runtime::batch::BatchSolver::from_soa`) all consume.
+//!
+//! ## Bit-identity contract
+//!
+//! The SoA fast path replays [`LifState::advance`] / [`LifState::inject`]
+//! with the **same floating-point operations in the same order** on the
+//! same operands, so `Scalar` and `Soa` backends produce bit-identical
+//! trajectories (test-enforced here and in `engine::process`). The only
+//! added machinery is [`ExpMemo`]: `exp` terms are memoized per
+//! `(param_id, dt)` pair keyed on the **exact bit pattern** of `dt` — a
+//! memo hit returns the very f64 a fresh `exp` call would (libm `exp`
+//! is deterministic), so memoization cannot perturb a single bit.
+//!
+//! ## Fallback rules (documented, still bit-identical)
+//!
+//! * **Degenerate τ** (`τm == τc`): the limit formula multiplies by `dt`
+//!   itself, so the memoized pair is not enough; the state round-trips
+//!   through [`LifState::advance`] (the AoS reference). Same math, same
+//!   order — identical bits, just slower.
+//! * **`g_tilde == 0`, `c == 0`**: the scalar reference skips the `ec`
+//!   exponential entirely; the memo computes it eagerly on a miss. The
+//!   extra value is never *used* on this path, so the stored lanes stay
+//!   identical — only the memo warms differently.
+
+use crate::neuron::{LifParams, LifState};
+
+/// Direct-mapped slot count of the [`ExpMemo`] (power of two).
+///
+/// Arrivals are delay-slot quantized, so within one step many neurons
+/// see the same `(last event, this event)` gap — a small cache captures
+/// the bulk of the repeats without `HashMap` (banned by the
+/// `nondeterminism-source` lint; a fixed-slot array is deterministic by
+/// construction).
+const MEMO_SLOTS: usize = 256;
+
+/// Sentinel for an empty memo slot: `u64::MAX` is a NaN bit pattern,
+/// and `dt` on the fast path is always a finite positive number, so no
+/// real key ever collides with it.
+const MEMO_EMPTY: u64 = u64::MAX;
+
+#[derive(Clone, Copy)]
+struct MemoSlot {
+    dt_bits: u64,
+    pid: u8,
+    em: f64,
+    ec: f64,
+}
+
+/// Memo of `(e^{−dt/τm}, e^{−dt/τc})` pairs keyed on the exact bit
+/// pattern of `dt` and the parameter id. Direct-mapped, deterministic
+/// replacement (last write wins) — hit or miss, the returned pair is
+/// bit-identical to computing `exp` in place.
+pub struct ExpMemo {
+    slots: Vec<MemoSlot>,
+}
+
+impl ExpMemo {
+    fn new() -> Self {
+        ExpMemo {
+            slots: vec![MemoSlot { dt_bits: MEMO_EMPTY, pid: 0, em: 0.0, ec: 0.0 }; MEMO_SLOTS],
+        }
+    }
+
+    #[inline]
+    fn slot_of(dt_bits: u64, pid: u8) -> usize {
+        // cheap multiplicative mix; only distribution matters, the tag
+        // comparison below keeps correctness independent of the hash
+        let h = (dt_bits ^ (u64::from(pid) << 52)).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        usize::try_from((h >> 56) & (MEMO_SLOTS as u64 - 1))
+            .expect("masked below the memo slot count")
+    }
+
+    /// The pair `(e^{−dt/τm}, e^{−dt/τc})` for parameter set `p` (= the
+    /// table entry of `pid`). Bit-identical to evaluating both `exp`
+    /// calls directly, cached or not.
+    #[inline]
+    fn exp_pair(&mut self, p: &LifParams, pid: u8, dt: f64) -> (f64, f64) {
+        let bits = dt.to_bits();
+        let slot = &mut self.slots[Self::slot_of(bits, pid)];
+        if slot.dt_bits == bits && slot.pid == pid {
+            return (slot.em, slot.ec);
+        }
+        let em = (-dt * p.inv_tau_m).exp();
+        let ec = (-dt * p.inv_tau_c).exp();
+        *slot = MemoSlot { dt_bits: bits, pid, em, ec };
+        (em, ec)
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        (self.slots.len() * std::mem::size_of::<MemoSlot>()) as u64
+    }
+}
+
+/// Structure-of-arrays LIF+SFA state for one rank's local neurons.
+///
+/// Lanes are indexed by the rank-local neuron index; `param_id[l]`
+/// resolves neuron `l`'s integrator constants in `params` (the per-area
+/// excitatory/inhibitory table built at construction). See the module
+/// docs for the bit-identity contract with [`LifState`].
+pub struct NeuronStateSoA {
+    v: Vec<f64>,
+    c: Vec<f64>,
+    last_t: Vec<f64>,
+    refr_until: Vec<f64>,
+    param_id: Vec<u8>,
+    params: Vec<LifParams>,
+    memo: ExpMemo,
+}
+
+impl NeuronStateSoA {
+    /// Build the SoA state at resting potential. `params` is the
+    /// resolved parameter table (≤ 256 entries — the engine lays it out
+    /// as `2·area + {0: exc, 1: inh}`, and config validation caps the
+    /// atlas at 128 areas so the `u8` id always fits); `param_id` maps
+    /// each local neuron to its table entry.
+    #[must_use]
+    pub fn build(params: Vec<LifParams>, param_id: Vec<u8>) -> Self {
+        assert!(params.len() <= 256, "param table exceeds the u8 id space");
+        assert!(
+            param_id.iter().all(|&id| (id as usize) < params.len()),
+            "param_id out of table range"
+        );
+        let n = param_id.len();
+        let mut soa = NeuronStateSoA {
+            v: vec![0.0; n],
+            c: vec![0.0; n],
+            last_t: vec![0.0; n],
+            refr_until: vec![0.0; n],
+            param_id,
+            params,
+            memo: ExpMemo::new(),
+        };
+        soa.reset_to_resting();
+        soa
+    }
+
+    /// Number of neurons in the lanes.
+    #[must_use]
+    pub fn len(&self) -> usize {
+        self.param_id.len()
+    }
+
+    #[must_use]
+    pub fn is_empty(&self) -> bool {
+        self.param_id.is_empty()
+    }
+
+    /// The resolved integrator constants of one local neuron.
+    #[inline]
+    #[must_use]
+    pub fn params_of(&self, local: u32) -> &LifParams {
+        &self.params[self.param_id[local as usize] as usize]
+    }
+
+    /// The resolved parameter table (index = `param_id`).
+    #[must_use]
+    pub fn param_table(&self) -> &[LifParams] {
+        &self.params
+    }
+
+    /// Per-neuron parameter ids into [`param_table`](Self::param_table).
+    #[must_use]
+    pub fn param_ids(&self) -> &[u8] {
+        &self.param_id
+    }
+
+    /// Gather one neuron's lanes into the AoS view (scalar reference
+    /// path, checkpoint conversion, slow-path fallback).
+    #[inline]
+    #[must_use]
+    pub fn load(&self, local: u32) -> LifState {
+        let l = local as usize;
+        LifState {
+            v: self.v[l],
+            c: self.c[l],
+            last_t: self.last_t[l],
+            refr_until: self.refr_until[l],
+        }
+    }
+
+    /// Scatter an AoS state back into the lanes.
+    #[inline]
+    pub fn store(&mut self, local: u32, s: LifState) {
+        let l = local as usize;
+        self.v[l] = s.v;
+        self.c[l] = s.c;
+        self.last_t[l] = s.last_t;
+        self.refr_until[l] = s.refr_until;
+    }
+
+    /// Exact evolution of neuron `local` to time `t` with no input —
+    /// bit-identical to [`LifState::advance`] (module docs: contract and
+    /// fallback rules).
+    #[inline]
+    pub fn advance(&mut self, local: u32, t: f64) {
+        let l = local as usize;
+        let dt = t - self.last_t[l];
+        debug_assert!(dt >= -1e-9, "time went backwards: {} -> {t}", self.last_t[l]);
+        if dt <= 0.0 {
+            return;
+        }
+        let pid = self.param_id[l];
+        let p = self.params[pid as usize];
+        if p.is_degenerate() {
+            // documented fallback: the degenerate-τ limit multiplies by
+            // dt itself, outside the memoized pair — round-trip through
+            // the AoS reference (same ops, same order, same bits)
+            let mut s = self.load(local);
+            s.advance(&p, t);
+            self.store(local, s);
+            return;
+        }
+        let (em, ec) = self.memo.exp_pair(&p, pid, dt);
+        if p.g_tilde == 0.0 {
+            // plain LIF; c stays 0 for inhibitory populations. The
+            // reference computes ec lazily here — our memo may have
+            // computed it eagerly, but the *used* operations match.
+            self.v[l] = p.e_rest + (self.v[l] - p.e_rest) * em;
+            if self.c[l] != 0.0 {
+                self.c[l] *= ec;
+            }
+        } else {
+            let k = -p.g_tilde * self.c[l] * p.k_denom_inv();
+            self.v[l] = p.e_rest + (self.v[l] - p.e_rest - k) * em + k * ec;
+            self.c[l] *= ec;
+        }
+        self.last_t[l] = t;
+    }
+
+    /// Deliver a synaptic event of weight `j` [mV] at time `t` to neuron
+    /// `local`; returns `true` on a spike. Bit-identical to
+    /// [`LifState::inject`].
+    #[inline]
+    pub fn inject(&mut self, local: u32, t: f64, j: f64) -> bool {
+        self.advance(local, t);
+        let l = local as usize;
+        if t < self.refr_until[l] {
+            // absolute refractory: input discarded
+            return false;
+        }
+        self.v[l] += j;
+        let p = &self.params[self.param_id[l] as usize];
+        if self.v[l] >= p.v_theta {
+            self.v[l] = p.v_reset;
+            self.c[l] += p.alpha_c;
+            self.refr_until[l] = t + p.tau_arp;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Is neuron `local` refractory at time `t`? (Metrics bookkeeping —
+    /// mirrors the `t < refr_until` test inside `inject`.)
+    #[inline]
+    #[must_use]
+    pub fn is_refractory(&self, local: u32, t: f64) -> bool {
+        t < self.refr_until[local as usize]
+    }
+
+    /// Rewind every neuron to its parameter set's resting state
+    /// (`reset` support; matches [`LifState::resting`]).
+    pub fn reset_to_resting(&mut self) {
+        for l in 0..self.param_id.len() {
+            let p = &self.params[self.param_id[l] as usize];
+            self.v[l] = p.e_rest;
+            self.c[l] = 0.0;
+            self.last_t[l] = 0.0;
+            self.refr_until[l] = f64::NEG_INFINITY;
+        }
+    }
+
+    /// Shift the time origin `delta_ms` into the past (checkpoint
+    /// rebase): `NEG_INFINITY` never-fired markers survive unchanged.
+    pub fn rebase(&mut self, delta_ms: f64) {
+        for t in &mut self.last_t {
+            *t -= delta_ms;
+        }
+        for t in &mut self.refr_until {
+            *t -= delta_ms;
+        }
+    }
+
+    /// Gather the lanes into the checkpoint wire form (`Vec<LifState>`
+    /// — the `RankState.states` field keeps its PR-7 format, so
+    /// checkpoints round-trip through the SoA layout unchanged on the
+    /// wire).
+    #[must_use]
+    pub fn to_states(&self) -> Vec<LifState> {
+        (0..self.param_id.len())
+            .map(|l| LifState {
+                v: self.v[l],
+                c: self.c[l],
+                last_t: self.last_t[l],
+                refr_until: self.refr_until[l],
+            })
+            .collect()
+    }
+
+    /// Scatter a checkpoint record back into the lanes. Errs on a
+    /// neuron-count mismatch (the coordinator validates shapes first;
+    /// this guards direct engine-level use).
+    pub fn restore_from_states(&mut self, states: &[LifState]) -> Result<(), String> {
+        if states.len() != self.param_id.len() {
+            return Err(format!(
+                "state count mismatch: checkpoint has {}, lanes have {}",
+                states.len(),
+                self.param_id.len()
+            ));
+        }
+        for (l, s) in states.iter().enumerate() {
+            self.v[l] = s.v;
+            self.c[l] = s.c;
+            self.last_t[l] = s.last_t;
+            self.refr_until[l] = s.refr_until;
+        }
+        Ok(())
+    }
+
+    /// Heap bytes held by the lanes, the parameter tables, and the exp
+    /// memo (feeds `RankProcess::resident_bytes_now`).
+    #[must_use]
+    pub fn resident_bytes(&self) -> u64 {
+        let f64_lanes = self.v.len() + self.c.len() + self.last_t.len() + self.refr_until.len();
+        (f64_lanes * std::mem::size_of::<f64>()
+            + self.param_id.len()
+            + self.params.len() * std::mem::size_of::<LifParams>()) as u64
+            + self.memo.resident_bytes()
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
+mod tests {
+    use super::*;
+    use crate::config::NeuronParams;
+    use crate::util::proptest::Cases;
+
+    /// Exc (SFA), inh (plain LIF), and a degenerate-τ set — one table
+    /// covering fast path, g̃ == 0 path, and the slow-path fallback.
+    fn table() -> Vec<LifParams> {
+        let mut degen = NeuronParams::excitatory();
+        degen.tau_c_ms = degen.tau_m_ms;
+        vec![
+            LifParams::new(&NeuronParams::excitatory()),
+            LifParams::new(&NeuronParams::inhibitory()),
+            LifParams::new(&degen),
+        ]
+    }
+
+    fn bits(s: &LifState) -> [u64; 4] {
+        [s.v.to_bits(), s.c.to_bits(), s.last_t.to_bits(), s.refr_until.to_bits()]
+    }
+
+    #[test]
+    fn soa_inject_is_bit_identical_to_lifstate() {
+        // random event sequences over all three parameter classes: the
+        // SoA path (memoized exp, degenerate fallback) must track the
+        // AoS reference bit for bit, spike for spike
+        let params = table();
+        let n = 9u32; // three neurons per parameter class
+        let ids: Vec<u8> = (0..n).map(|l| (l % 3) as u8).collect();
+        Cases::new("soa vs scalar bit-identity", 50).run(|g| {
+            let mut soa = NeuronStateSoA::build(table(), ids.clone());
+            let mut aos: Vec<LifState> =
+                ids.iter().map(|&id| LifState::resting(&params[id as usize])).collect();
+            let mut t = vec![0.0f64; n as usize];
+            for _ in 0..200 {
+                let local = (g.rng.next_f64() * f64::from(n)) as u32 % n;
+                let l = local as usize;
+                t[l] += g.rng.next_f64() * 3.0;
+                let j = (g.rng.next_f64() - 0.3) * 12.0;
+                let fired_soa = soa.inject(local, t[l], j);
+                let fired_aos = aos[l].inject(&params[ids[l] as usize], t[l], j);
+                g.assert_true(fired_soa == fired_aos, "spike decisions must match");
+                g.assert_true(
+                    bits(&soa.load(local)) == bits(&aos[l]),
+                    "state lanes must match the AoS reference bit for bit",
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn memo_hits_return_the_same_bits_as_misses() {
+        // same (pid, dt) twice: the second (cached) pair must equal the
+        // first computed one exactly; a different pid with the same dt
+        // must not alias it
+        let params = table();
+        let mut memo = ExpMemo::new();
+        let dt = 1.734_521_5;
+        let first = memo.exp_pair(&params[0], 0, dt);
+        let cached = memo.exp_pair(&params[0], 0, dt);
+        assert_eq!(first.0.to_bits(), cached.0.to_bits());
+        assert_eq!(first.1.to_bits(), cached.1.to_bits());
+        assert_eq!(first.0.to_bits(), (-dt * params[0].inv_tau_m).exp().to_bits());
+        assert_eq!(first.1.to_bits(), (-dt * params[0].inv_tau_c).exp().to_bits());
+        let other = memo.exp_pair(&params[1], 1, dt);
+        assert_eq!(other.0.to_bits(), (-dt * params[1].inv_tau_m).exp().to_bits());
+    }
+
+    #[test]
+    fn refractory_boundary_matches_the_reference() {
+        // events exactly AT refr_until must pass (the contract is
+        // t < refr_until discards), one ulp before must be discarded —
+        // on both backends identically
+        let params = table();
+        let mut soa = NeuronStateSoA::build(table(), vec![0]);
+        let mut aos = LifState::resting(&params[0]);
+        assert!(soa.inject(0, 1.0, 50.0));
+        assert!(aos.inject(&params[0], 1.0, 50.0));
+        let boundary = soa.load(0).refr_until;
+        assert_eq!(boundary, aos.refr_until);
+        let just_before = f64::from_bits(boundary.to_bits() - 1);
+        assert!(!soa.inject(0, just_before, 50.0), "one ulp inside must discard");
+        assert!(!aos.inject(&params[0], just_before, 50.0));
+        assert_eq!(bits(&soa.load(0)), bits(&aos));
+        assert!(soa.inject(0, boundary, 50.0), "exactly at the boundary must pass");
+        assert!(aos.inject(&params[0], boundary, 50.0));
+        assert_eq!(bits(&soa.load(0)), bits(&aos));
+    }
+
+    #[test]
+    fn degenerate_tau_takes_the_fallback_and_matches() {
+        // param id 2 is τc == τm: advance must route through the AoS
+        // reference and still land on identical bits
+        let params = table();
+        assert!(params[2].is_degenerate());
+        let mut soa = NeuronStateSoA::build(table(), vec![2]);
+        let mut aos = LifState::resting(&params[2]);
+        let mut t = 0.0;
+        for k in 0..40 {
+            t += 0.7 + f64::from(k) * 0.013;
+            let fired_soa = soa.inject(0, t, 2.5);
+            let fired_aos = aos.inject(&params[2], t, 2.5);
+            assert_eq!(fired_soa, fired_aos);
+            assert_eq!(bits(&soa.load(0)), bits(&aos));
+        }
+    }
+
+    #[test]
+    fn checkpoint_states_round_trip_unchanged() {
+        let mut soa = NeuronStateSoA::build(table(), vec![0, 1, 2, 0]);
+        for (l, t) in [(0u32, 1.5), (1, 2.0), (2, 3.25), (3, 0.5)] {
+            soa.inject(l, t, 8.0);
+        }
+        let wire = soa.to_states();
+        let mut fresh = NeuronStateSoA::build(table(), vec![0, 1, 2, 0]);
+        fresh.restore_from_states(&wire).unwrap();
+        for l in 0..4u32 {
+            assert_eq!(bits(&fresh.load(l)), bits(&soa.load(l)));
+        }
+        assert_eq!(fresh.to_states().len(), wire.len());
+        assert!(fresh.restore_from_states(&wire[..2]).is_err(), "length mismatch must err");
+    }
+
+    #[test]
+    fn reset_and_rebase_match_the_aos_semantics() {
+        let params = table();
+        let mut soa = NeuronStateSoA::build(table(), vec![0, 1]);
+        soa.inject(0, 1.0, 50.0);
+        soa.inject(1, 2.0, 3.0);
+        soa.rebase(10.0);
+        let s = soa.load(0);
+        assert_eq!(s.last_t, 1.0 - 10.0);
+        assert_eq!(s.refr_until, 1.0 + params[0].tau_arp - 10.0);
+        // the never-fired marker survives a rebase unchanged
+        let mut quiet = NeuronStateSoA::build(table(), vec![0]);
+        quiet.rebase(10.0);
+        assert_eq!(quiet.load(0).refr_until, f64::NEG_INFINITY);
+        soa.reset_to_resting();
+        for (l, &id) in [0u32, 1].iter().zip(&[0u8, 1]) {
+            assert_eq!(bits(&soa.load(*l)), bits(&LifState::resting(&params[id as usize])));
+        }
+    }
+
+    #[test]
+    fn resident_bytes_pins_the_manual_sizing() {
+        // satellite 2: lanes + id lane + param table + memo, counted
+        // exactly — 4 f64 lanes × n + n ids + table + fixed memo slots
+        let n = 37usize;
+        let soa = NeuronStateSoA::build(table(), vec![0; n]);
+        let expect = (4 * n * 8 + n + 3 * std::mem::size_of::<LifParams>()) as u64
+            + (MEMO_SLOTS * std::mem::size_of::<MemoSlot>()) as u64;
+        assert_eq!(soa.resident_bytes(), expect);
+    }
+
+    #[test]
+    #[should_panic(expected = "param table exceeds the u8 id space")]
+    fn param_table_caps_at_the_u8_space() {
+        let many: Vec<LifParams> =
+            (0..257).map(|_| LifParams::new(&NeuronParams::excitatory())).collect();
+        let _ = NeuronStateSoA::build(many, vec![0]);
+    }
+}

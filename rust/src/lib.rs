@@ -72,12 +72,12 @@
 // The clippy cast lints are set to `warn` in Cargo.toml so every
 // target sees them. They used to be silenced crate-wide here; the
 // blanket allows are gone, replaced by per-`mod` scoped allows on the
-// modules not yet audited (below) — `checkpoint`, `coordinator` and
-// `stimulus` are clippy-cast-clean with at most fn-scoped, justified
-// allows. The narrowing casts that can actually corrupt configs or
-// wire ids are additionally held to `dpsnn lint`'s lossy-cast rule;
-// docs/LINTS.md tracks flipping the remaining modules so the scoped
-// allows below keep shrinking.
+// modules not yet audited (below) — `checkpoint`, `coordinator`,
+// `stimulus`, `engine` and `synapse` are clippy-cast-clean with at
+// most fn-scoped, justified allows. The narrowing casts that can
+// actually corrupt configs or wire ids are additionally held to
+// `dpsnn lint`'s lossy-cast rule; docs/LINTS.md tracks flipping the
+// remaining modules so the scoped allows below keep shrinking.
 #[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::cast_possible_wrap)]
 pub mod config;
 #[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::cast_possible_wrap)]
@@ -99,12 +99,10 @@ pub mod connectivity;
 #[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::cast_possible_wrap)]
 pub mod neuron;
 pub mod stimulus;
-#[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::cast_possible_wrap)]
 pub mod synapse;
 
 pub mod checkpoint;
 pub mod coordinator;
-#[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::cast_possible_wrap)]
 pub mod engine;
 #[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::cast_possible_wrap)]
 pub mod runtime;
@@ -121,7 +119,9 @@ pub mod lint;
 #[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::cast_possible_wrap)]
 pub mod repro;
 
-pub use config::{AreaParams, ExternalOverride, ProjectionParams, SimConfig, Stride};
+pub use config::{
+    AreaParams, DynamicsBackend, ExternalOverride, ProjectionParams, SimConfig, Stride,
+};
 pub use connectivity::ConnectivityKernel;
 #[allow(deprecated)]
 pub use coordinator::run_simulation;

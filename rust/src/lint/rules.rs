@@ -26,8 +26,12 @@ use super::tokenizer::{lex, Comment, Tok, TokKind};
 
 /// Path prefixes (relative to the lint root) where `lossy-cast` applies:
 /// everything that parses external input or builds the wire/geometry
-/// structures whose ids are capped by the AER u32 format.
-const LOSSY_CAST_SCOPE: [&str; 4] = ["config/", "connectivity/", "geometry/", "mpi/"];
+/// structures whose ids are capped by the AER u32 format, plus the SoA
+/// neuron-state lanes (`engine/soa.rs`), whose `param_id` bytes index
+/// the per-area parameter table — a wrapped id silently reads the wrong
+/// neuron model.
+const LOSSY_CAST_SCOPE: [&str; 5] =
+    ["config/", "connectivity/", "geometry/", "mpi/", "engine/soa.rs"];
 
 /// Target types whose `as` casts narrow or change sign from the
 /// `u64`/`i64`/`usize` values flowing at the boundaries. Wider casts
@@ -432,6 +436,11 @@ mod tests {
         assert!(lint_source("config/sim.rs", "fn f(x: u32) -> u64 { x as u64 }\n").is_empty());
         // non-boundary modules are out of scope
         assert!(lint_source("engine/foo.rs", "fn f(x: u64) -> u32 { x as u32 }\n").is_empty());
+        // … but the SoA state module is a named exception: its param-id
+        // bytes index the neuron-model table, so narrowings are guarded
+        let fs = lint_source("engine/soa.rs", "fn f(x: u64) -> u8 { x as u8 }\n");
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, Rule::LossyCast);
         // a numeric literal's type suffix is not a cast target
         assert!(lint_source("config/sim.rs", "fn f() -> u32 { 7u32 }\n").is_empty());
     }

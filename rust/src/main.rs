@@ -31,6 +31,7 @@ fn commands() -> Vec<Command> {
             .opt("duration-ms", "simulated time [ms]")
             .opt("seed", "global seed")
             .opt("solver", "neuron solver: event|xla")
+            .opt("backend", "dynamics backend: scalar|soa|batch (default soa)")
             .opt("mapping", "column mapping: block|roundrobin")
             .opt("checkpoint-every-steps", "auto-checkpoint cadence for crash recovery (0 = off)")
             .opt("watchdog-timeout-ms", "per-reply deadline before a rank is declared hung (0 = off)")
@@ -109,6 +110,9 @@ fn parts_from_args(a: &Args) -> Result<(SimConfig, RunOptions), String> {
     cfg.seed = a.get_or("seed", cfg.seed)?;
     if let Some(sv) = a.get("solver") {
         cfg.solver = Solver::parse(sv)?;
+    }
+    if let Some(b) = a.get("backend") {
+        cfg.backend = dpsnn::config::DynamicsBackend::parse(b)?;
     }
     cfg.plasticity = cfg.plasticity || a.has_flag("plasticity");
     cfg.validate()?;

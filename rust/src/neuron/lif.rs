@@ -56,6 +56,24 @@ impl LifParams {
             degenerate,
         }
     }
+
+    /// 1/(1/τm − 1/τc); 0.0 in the degenerate τm == τc case (where the
+    /// limit formula applies instead). Exposed read-only so the SoA
+    /// dynamics backend (`engine::soa`) can replay [`LifState::advance`]
+    /// with the exact same operands.
+    #[inline]
+    #[must_use]
+    pub fn k_denom_inv(&self) -> f64 {
+        self.k_denom_inv
+    }
+
+    /// τm == τc within 1e-12 of the inverse rates: the K-term formula
+    /// degenerates and `advance` switches to the limit expression.
+    #[inline]
+    #[must_use]
+    pub fn is_degenerate(&self) -> bool {
+        self.degenerate
+    }
 }
 
 /// Dynamic state of one neuron.

@@ -74,6 +74,78 @@ impl BatchSolver {
         })
     }
 
+    /// Build from the engine's SoA neuron state: per-neuron integration
+    /// constants come from each neuron's resolved per-area [`LifParams`]
+    /// (heterogeneous τ/g̃/α_c overrides), the shared scalars from the
+    /// global excitatory set. `SimConfig::validate` already requires
+    /// every parameter set to share E/θ/Vr/τarp under the XLA solver;
+    /// the check is repeated here to guard direct engine-level
+    /// construction with an unvalidated config.
+    pub fn from_soa(
+        cfg: &SimConfig,
+        soa: &crate::engine::NeuronStateSoA,
+    ) -> Result<Self, String> {
+        let n = soa.len();
+        let batch = batch_size_for(n);
+        if n > batch {
+            return Err(format!(
+                "rank has {n} neurons > largest artifact batch {batch}; \
+                 split ranks or add a larger batch size in aot.py"
+            ));
+        }
+        let table = soa.param_table();
+        let exc = LifParams::new(&cfg.exc);
+        for p in table {
+            if !((p.e_rest - exc.e_rest).abs() < 1e-9
+                && (p.v_theta - exc.v_theta).abs() < 1e-9
+                && (p.v_reset - exc.v_reset).abs() < 1e-9
+                && (p.tau_arp - exc.tau_arp).abs() < 1e-9)
+            {
+                return Err(
+                    "batched solver assumes shared E/θ/Vr/τarp across populations \
+                     (per-population arrays for these are a straightforward extension)"
+                        .to_string(),
+                );
+            }
+        }
+        let rt = Runtime::cpu()?;
+        let exe = rt
+            .load_artifact(&format!("lif_step_{batch}"))
+            .map_err(|e| format!("loading LIF step artifact: {e}"))?;
+        let dt = cfg.dt_ms;
+        let mut em = vec![1.0f32; batch];
+        let mut ec = vec![1.0f32; batch];
+        let mut kf = vec![0.0f32; batch];
+        let mut alpha = vec![0.0f32; batch];
+        for (local, &pid) in soa.param_ids().iter().enumerate() {
+            let p = &table[pid as usize];
+            em[local] = (-dt * p.inv_tau_m).exp() as f32;
+            ec[local] = (-dt * p.inv_tau_c).exp() as f32;
+            // K = −g̃·c / (1/τm − 1/τc) ⇒ store kf = g̃ / (1/τm − 1/τc)
+            let denom = p.inv_tau_m - p.inv_tau_c;
+            kf[local] = if denom.abs() < 1e-12 { 0.0 } else { (p.g_tilde / denom) as f32 };
+            alpha[local] = p.alpha_c as f32;
+        }
+        Ok(BatchSolver {
+            exe,
+            n_local: n,
+            batch,
+            v: vec![cfg.exc.e_rest_mv as f32; batch],
+            c: vec![0.0; batch],
+            refr: vec![0.0; batch],
+            j: vec![0.0; batch],
+            em,
+            ec,
+            kf,
+            alpha,
+            e_rest: cfg.exc.e_rest_mv as f32,
+            v_theta: cfg.exc.v_theta_mv as f32,
+            v_reset: cfg.exc.v_reset_mv as f32,
+            tau_arp: cfg.exc.tau_arp_ms as f32,
+            spiked_buf: Vec::new(),
+        })
+    }
+
     pub fn with_populations(
         cfg: &SimConfig,
         n_local: u32,
@@ -213,6 +285,13 @@ impl BatchSolver {
         Err("XLA batched solver not compiled in: build with `--features xla` \
              (requires the vendored `xla` crate) or use `--solver event`"
             .to_string())
+    }
+
+    pub fn from_soa(
+        cfg: &SimConfig,
+        _soa: &crate::engine::NeuronStateSoA,
+    ) -> Result<Self, String> {
+        Self::new(cfg, 0)
     }
 
     pub fn with_populations(

@@ -99,21 +99,29 @@ impl DelayQueue {
             "bucket in the past: step {step} < base {}",
             self.base_step
         );
-        let ahead = (step - self.base_step) as usize;
+        let ahead = step - self.base_step;
         assert!(
-            ahead < self.slots.len(),
+            ahead < self.slots.len() as u64,
             "event beyond delay horizon: {ahead} slots ahead (horizon {})",
             self.slots.len()
         );
-        let idx = (step as usize) & (self.slots.len() - 1);
+        let idx = Self::slot_index(step, self.slots.len());
         &mut self.slots[idx]
+    }
+
+    /// Bucket index of `step`: a mask, since the slot count is a power
+    /// of two. Masking before the u64→usize conversion bounds the value
+    /// below the slot count, so the conversion is always exact.
+    #[inline]
+    fn slot_index(step: u64, n_slots: usize) -> usize {
+        usize::try_from(step & (n_slots as u64 - 1)).expect("masked below the slot count")
     }
 
     /// Take the bucket for the current base step and advance the queue.
     /// The returned buffer must be handed back via [`recycle`] to keep
     /// the steady state allocation-free.
     pub fn drain_current(&mut self) -> Vec<PendingEvent> {
-        let idx = (self.base_step as usize) & (self.slots.len() - 1);
+        let idx = Self::slot_index(self.base_step, self.slots.len());
         let mut out = std::mem::take(&mut self.spare);
         out.clear();
         std::mem::swap(&mut out, &mut self.slots[idx]);
@@ -145,7 +153,7 @@ impl DelayQueue {
     pub fn for_each_pending(&self, mut f: impl FnMut(u64, &PendingEvent)) {
         for ahead in 0..self.slots.len() {
             let step = self.base_step + ahead as u64;
-            let idx = (step as usize) & (self.slots.len() - 1);
+            let idx = Self::slot_index(step, self.slots.len());
             for ev in &self.slots[idx] {
                 f(step, ev);
             }
@@ -161,6 +169,7 @@ impl DelayQueue {
 }
 
 #[cfg(test)]
+#[allow(clippy::cast_possible_truncation)]
 mod tests {
     use super::*;
 

@@ -122,6 +122,7 @@ impl TargetGrouper {
 }
 
 #[cfg(test)]
+#[allow(clippy::cast_possible_truncation)]
 mod tests {
     use super::*;
     use crate::util::prng::Pcg64;

@@ -81,10 +81,15 @@ impl SynapseStore {
     /// dt grid, at least one step (a spike emitted in step t is
     /// exchanged in step t+1 — enforced by `SimConfig::validate`'s
     /// `delay_min_ms >= dt_ms`).
+    // `validate` guarantees dt_ms > 0, so the rounded ratio is a
+    // non-negative finite float; the clamp below bounds it into
+    // [1, u16::MAX] before the final narrowing.
+    #[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
     #[inline]
     pub fn delay_slot_of(delay_us: u32, dt_ms: f64) -> u16 {
-        let s = (delay_us as f64 * 1e-3 / dt_ms).round() as u64;
-        s.clamp(1, u16::MAX as u64) as u16
+        let s = (f64::from(delay_us) * 1e-3 / dt_ms).round() as u64;
+        u16::try_from(s.clamp(1, u64::from(u16::MAX)))
+            .expect("clamped into the u16 range")
     }
 
     /// Build from wire synapses. `dt_ms` is the time-driven step used to
@@ -115,7 +120,9 @@ impl SynapseStore {
         for s in &syns {
             if cur_src != Some(s.src_gid) {
                 store.axon_src.push(s.src_gid);
-                store.axon_start.push(store.syn.len() as u32);
+                store
+                    .axon_start
+                    .push(u32::try_from(store.syn.len()).expect("synapse count fits u32"));
                 cur_src = Some(s.src_gid);
             }
             store.syn.push(StoredSynapse {
@@ -125,7 +132,9 @@ impl SynapseStore {
             });
             store.slot.push(Self::delay_slot_of(s.delay_us, dt_ms));
         }
-        store.axon_start.push(store.syn.len() as u32);
+        store
+            .axon_start
+            .push(u32::try_from(store.syn.len()).expect("synapse count fits u32"));
         store
     }
 
@@ -178,7 +187,8 @@ impl SynapseStore {
     #[inline]
     pub fn axon_demux(&self, src_gid: u32) -> (u32, &[StoredSynapse], &[u16]) {
         let r = self.axon_range(src_gid);
-        (r.start as u32, &self.syn[r.clone()], &self.slot[r])
+        let base = u32::try_from(r.start).expect("synapse count fits u32");
+        (base, &self.syn[r.clone()], &self.slot[r])
     }
 
     /// Deliver one arriving axonal spike into the delay queue — THE
@@ -206,6 +216,12 @@ impl SynapseStore {
     /// are ≥ 1 and spikes are exchanged one step after emission, so
     /// `emit_step + slot ≥ now_step` always. Returns the number of
     /// events delivered.
+    // Sub-step event offsets are stored at f32 wire precision
+    // (`PendingEvent::offset_ms`); the one deliberate f64→f32 rounding
+    // per spike happens here. The `(k + off) as u32` synapse-index
+    // narrowing is bounded by `axon_demux`'s checked `base` conversion:
+    // every flat synapse index fits u32.
+    #[allow(clippy::cast_possible_truncation)]
     #[inline]
     pub fn demux_spike_into(
         &self,
@@ -333,6 +349,7 @@ impl SynapseStore {
 }
 
 #[cfg(test)]
+#[allow(clippy::cast_possible_truncation)]
 mod tests {
     use super::*;
     use crate::util::prng::Pcg64;

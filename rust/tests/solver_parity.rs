@@ -12,8 +12,9 @@
 #![allow(clippy::cast_sign_loss)]
 #![allow(clippy::cast_possible_wrap)]
 
-use dpsnn::config::{SimConfig, Solver};
+use dpsnn::config::{NeuronParams, SimConfig, Solver};
 use dpsnn::coordinator::{RunSummary, SimulationBuilder};
+use dpsnn::{AreaParams, ProjectionParams};
 
 fn cfg(solver: Solver) -> SimConfig {
     let mut c = SimConfig::test_small();
@@ -70,6 +71,47 @@ fn xla_and_event_driven_rates_agree() {
     // external drive is identical by construction (same seeded streams)
     assert_eq!(ev.reports.iter().map(|r| r.external_events).sum::<u64>(),
                xla.reports.iter().map(|r| r.external_events).sum::<u64>());
+}
+
+/// Schema-5 SoA rewiring lifted the "no per-area neuron models under
+/// XLA" validation: `BatchSolver::from_soa` builds its per-neuron f32
+/// constant lanes straight from the SoA parameter table, so per-area
+/// τ_m/τ_c/g̃/α_c overrides now compile into the batched path (shared
+/// E/θ/Vr/τ_arp still required). Both solvers must accept the same
+/// heterogeneous atlas and agree on rates.
+#[test]
+fn per_area_models_run_under_the_batch_solver() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let run_het = |solver: Solver| -> RunSummary {
+        let mut slow_exc = NeuronParams::excitatory();
+        slow_exc.g_c_over_cm = 0.08; // 4× adaptation, batch-compatible
+        slow_exc.tau_c_ms = 500.0;
+        let base = cfg(solver);
+        // halve the per-area neuron count so the two-area total (2048)
+        // matches the single-area runs and their compiled batch shape
+        let mut g = base.grid;
+        g.neurons_per_column = 64;
+        let mut net = SimulationBuilder::from_config(base)
+            .area("wake", g)
+            .area_with(AreaParams::new("sws", g).exc_model(slow_exc))
+            .project(ProjectionParams::new("wake", "sws"))
+            .build()
+            .expect("heterogeneous atlas must be accepted by both solvers");
+        net.session().advance(60.0);
+        net.summary()
+    };
+    let ev = run_het(Solver::EventDriven);
+    let xla = run_het(Solver::Xla);
+    let (r_ev, r_xla) = (ev.firing_rate_hz(), xla.firing_rate_hz());
+    assert!(r_ev > 0.0 && r_xla > 0.0, "both heterogeneous runs must be active");
+    let ratio = r_xla / r_ev;
+    assert!(
+        (0.5..2.0).contains(&ratio),
+        "heterogeneous rates diverge: event {r_ev:.2} Hz vs xla {r_xla:.2} Hz"
+    );
 }
 
 #[test]
