@@ -7,9 +7,10 @@
 
 // lint: allow-file(nondeterminism-source, "bench harness: wall-clock timing is the product")
 
-use crate::config::{AreaParams, GridParams, NeuronParams, ProjectionParams};
+use crate::config::{AreaParams, GridParams, NeuronParams, ProjectionParams, TransportKind};
 use crate::coordinator::session::construct_pairs;
 use crate::coordinator::{Network, SimulationBuilder};
+use crate::geometry::Mapping;
 use crate::engine::probe::SpikeCountProbe;
 use crate::engine::{NeuronStateSoA, Phase};
 use crate::neuron::{LifParams, LifState};
@@ -335,6 +336,49 @@ impl ExecutorBench {
     }
 }
 
+/// `transport_exchange` (schema 6): the Exchange phase of the SAME
+/// configuration driven over both rank transports — threads on the
+/// in-process channel matrix vs forked worker processes on
+/// shared-memory rings (docs/TRANSPORT.md) — plus the
+/// [`comm_topology`](crate::perfmodel::comm_topology) prediction
+/// checked against the measured spike traffic. Both backends carry
+/// identical packed wire bytes (bit-identity is test-enforced in
+/// `tests/transport.rs`), so the ns/step difference is pure transport
+/// cost.
+#[derive(Clone, Copy, Debug)]
+pub struct TransportExchange {
+    pub ranks: u32,
+    /// Measured steps per span (the exchange figures are deltas over
+    /// the second of two equal spans; the first is warmup).
+    pub steps: u64,
+    pub channel_exchange_ns_per_step: f64,
+    pub shm_exchange_ns_per_step: f64,
+    /// Measured axonal spike records demuxed per step on the busiest
+    /// rank (self-deliveries included, as in the model).
+    pub measured_axon_visits_per_step: f64,
+    /// `perfmodel::comm_topology`'s `max_axon_visits_per_s` prediction
+    /// at the measured firing rate, scaled to one step.
+    pub predicted_axon_visits_per_step: f64,
+    /// Packed spike payload bytes crossing rank boundaries per step
+    /// (remote sends, summed over ranks).
+    pub payload_bytes_per_step: f64,
+}
+
+impl TransportExchange {
+    /// Shm vs channel exchange cost (1.0 = parity; the shm backend
+    /// pays ring-buffer copies + process scheduling instead of mpsc
+    /// wakeups).
+    pub fn shm_over_channel(&self) -> f64 {
+        self.shm_exchange_ns_per_step / self.channel_exchange_ns_per_step.max(1e-9)
+    }
+
+    /// Model-over-measurement ratio for the exchange traffic the
+    /// topology model prices (1.0 = the model is exact).
+    pub fn predicted_over_measured(&self) -> f64 {
+        self.predicted_axon_visits_per_step / self.measured_axon_visits_per_step.max(1e-9)
+    }
+}
+
 /// SoA dynamics microbench (schema 5): the Scalar (AoS
 /// `Vec<LifState>`) advance-and-threshold loop vs the [`NeuronStateSoA`]
 /// lanes, injecting one event into each of `touched` neurons per step.
@@ -375,6 +419,7 @@ pub struct BenchReport {
     pub grouping: GroupingMicro,
     pub executor: ExecutorBench,
     pub dynamics_soa: DynamicsSoaMicro,
+    pub transport: TransportExchange,
 }
 
 fn phases4() -> [Phase; 4] {
@@ -708,6 +753,54 @@ fn bench_executor(p: &BenchParams) -> ExecutorBench {
     }
 }
 
+/// `transport_exchange`: the same network driven over the channel
+/// transport and the shm transport, exchange-phase ns/step measured on
+/// the second of two equal spans (the first is warmup), and the
+/// perfmodel topology prediction evaluated at the *measured* firing
+/// rate so the model check is independent of rate calibration.
+fn bench_transport(p: &BenchParams) -> TransportExchange {
+    let ranks = p.exec_ranks;
+    let steps = p.exec_steps;
+    let span_ms = steps as f64; // dt = 1 ms in the bench presets
+    let builder = || {
+        SimulationBuilder::gaussian(p.side)
+            .neurons_per_column(p.npc)
+            .ranks(ranks)
+            .external(p.ext_syn, p.ext_hz)
+    };
+    let cfg = builder().config().clone();
+    let run = |kind: TransportKind| {
+        let mut net =
+            builder().transport(kind).build().expect("transport bench construction");
+        net.session().advance(span_ms); // warmup span
+        let pre_ns = net.summary().phase_cpu_ns(Phase::Exchange);
+        net.session().advance(span_ms);
+        let s = net.summary();
+        let ns = (s.phase_cpu_ns(Phase::Exchange) - pre_ns) as f64 / steps as f64;
+        (ns, s)
+    };
+    let (channel_ns, s) = run(TransportKind::Channel);
+    let (shm_ns, _) = run(TransportKind::Shm);
+    // traffic figures are cumulative over both spans of the channel run
+    let total_steps = (steps * 2).max(1);
+    let measured = s.reports.iter().map(|r| r.axonal_spikes_in).max().unwrap_or(0) as f64
+        / total_steps as f64;
+    let payload = s.reports.iter().map(|r| r.spike_payload_bytes).sum::<u64>() as f64
+        / total_steps as f64;
+    let topo =
+        crate::perfmodel::comm_topology(&cfg, ranks, Mapping::Block, s.firing_rate_hz());
+    let predicted = topo.max_axon_visits_per_s * cfg.dt_ms / 1_000.0;
+    TransportExchange {
+        ranks,
+        steps,
+        channel_exchange_ns_per_step: channel_ns,
+        shm_exchange_ns_per_step: shm_ns,
+        measured_axon_visits_per_step: measured,
+        predicted_axon_visits_per_step: predicted,
+        payload_bytes_per_step: payload,
+    }
+}
+
 /// Run the full bench suite: (gaussian, exponential) × rank counts,
 /// plus the silent-dynamics scaling probe and the demux / grouping /
 /// executor microbenches.
@@ -738,6 +831,7 @@ pub fn run_bench_with(quick: bool, p: &BenchParams) -> BenchReport {
         grouping: bench_grouping(p),
         executor: bench_executor(p),
         dynamics_soa: bench_dynamics_soa(p),
+        transport: bench_transport(p),
     }
 }
 
@@ -807,11 +901,26 @@ impl BenchReport {
                 c.speedup(),
             ));
         }
+        out.push_str(&format!(
+            "transport exchange: channel {} -> shm {} per step ({:.2}x, {} ranks); \
+             topology model {:.1} predicted vs {:.1} measured axon visits/step \
+             ({:.2}x)\n",
+            fmt_ns(self.transport.channel_exchange_ns_per_step),
+            fmt_ns(self.transport.shm_exchange_ns_per_step),
+            self.transport.shm_over_channel(),
+            self.transport.ranks,
+            self.transport.predicted_axon_visits_per_step,
+            self.transport.measured_axon_visits_per_step,
+            self.transport.predicted_over_measured(),
+        ));
         out
     }
 
-    /// Machine record (`BENCH.json`): schema 5. Hand-rolled writer —
-    /// the offline image has no serde. Schema 5 adds the `dynamics_soa`
+    /// Machine record (`BENCH.json`): schema 6. Hand-rolled writer —
+    /// the offline image has no serde. Schema 6 adds the
+    /// `transport_exchange` record (channel vs shm exchange cost, and
+    /// the perfmodel topology prediction vs measured spike traffic);
+    /// schema 5 added the `dynamics_soa`
     /// record (AoS scalar loop vs SoA lanes, dense and silent regimes);
     /// schema 4 added the heterogeneous `two-area-het` matrix entry
     /// (per-area neuron models + drives, rational-stride topography);
@@ -827,7 +936,7 @@ impl BenchReport {
             .unwrap_or(0);
         let mut s = String::new();
         s.push_str("{\n");
-        s.push_str("  \"schema\": 5,\n");
+        s.push_str("  \"schema\": 6,\n");
         s.push_str(&format!("  \"created_unix_s\": {unix_s},\n"));
         s.push_str(&format!("  \"quick\": {},\n", self.quick));
         s.push_str("  \"matrix\": [\n");
@@ -897,6 +1006,24 @@ impl BenchReport {
             self.executor.spawn_over_pool(),
             self.executor.probed_over_unprobed(),
         ));
+        s.push_str(&format!(
+            "  \"transport_exchange\": {{\"ranks\": {}, \"steps\": {}, \
+             \"channel_exchange_ns_per_step\": {:.1}, \
+             \"shm_exchange_ns_per_step\": {:.1}, \"shm_over_channel\": {:.3}, \
+             \"measured_axon_visits_per_step\": {:.2}, \
+             \"predicted_axon_visits_per_step\": {:.2}, \
+             \"predicted_over_measured\": {:.3}, \
+             \"payload_bytes_per_step\": {:.1}}},\n",
+            self.transport.ranks,
+            self.transport.steps,
+            self.transport.channel_exchange_ns_per_step,
+            self.transport.shm_exchange_ns_per_step,
+            self.transport.shm_over_channel(),
+            self.transport.measured_axon_visits_per_step,
+            self.transport.predicted_axon_visits_per_step,
+            self.transport.predicted_over_measured(),
+            self.transport.payload_bytes_per_step,
+        ));
         s.push_str("  \"dynamics_soa\": [\n");
         for (i, c) in self.dynamics_soa.cells.iter().enumerate() {
             s.push_str(&format!(
@@ -964,10 +1091,20 @@ impl BenchReport {
                 }
             }
         }
-        let micro: [(&str, &str, f64); 3] = [
+        let micro: [(&str, &str, f64); 5] = [
             ("demux_microbench", "slot_ns_per_event", self.demux.slot_ns_per_event),
             ("dynamics_grouping", "group_ns_per_event", self.grouping.group_ns_per_event),
             ("executor_spawn_vs_pool", "pool_ns_per_step", self.executor.pool_ns_per_step),
+            (
+                "transport_exchange",
+                "channel_exchange_ns_per_step",
+                self.transport.channel_exchange_ns_per_step,
+            ),
+            (
+                "transport_exchange",
+                "shm_exchange_ns_per_step",
+                self.transport.shm_exchange_ns_per_step,
+            ),
         ];
         for (record, field, cur) in micro {
             if let Some(base) = doc.get(record).and_then(|r| r.get(field)).and_then(Json::num)
@@ -1116,10 +1253,24 @@ mod tests {
             assert_eq!(c.events_per_step, u64::from(c.touched));
             assert!(c.regime == "dense" || c.regime == "silent");
         }
+        // transport_exchange: both backends measured on the same
+        // configuration, and the topology model produced a prediction
+        assert_eq!(report.transport.ranks, 2);
+        assert_eq!(report.transport.steps, 8);
+        assert!(report.transport.channel_exchange_ns_per_step > 0.0);
+        assert!(report.transport.shm_exchange_ns_per_step > 0.0);
+        assert!(report.transport.measured_axon_visits_per_step > 0.0);
+        assert!(report.transport.predicted_axon_visits_per_step > 0.0);
+        assert!(report.transport.payload_bytes_per_step > 0.0);
+        // the model and the measurement must agree on the order of
+        // magnitude (it is an expectation over Bernoulli wiring and a
+        // short measured span, not an exact count)
+        let ratio = report.transport.predicted_over_measured();
+        assert!((0.1..10.0).contains(&ratio), "model/measured ratio {ratio}");
 
         let json = report.to_json();
         for key in [
-            "\"schema\": 5",
+            "\"schema\": 6",
             "\"matrix\"",
             "\"kernel\": \"gaussian\"",
             "\"kernel\": \"exponential\"",
@@ -1136,6 +1287,10 @@ mod tests {
             "\"regime\": \"dense\"",
             "\"regime\": \"silent\"",
             "\"soa_ns_per_step\"",
+            "\"transport_exchange\"",
+            "\"channel_exchange_ns_per_step\"",
+            "\"shm_exchange_ns_per_step\"",
+            "\"predicted_over_measured\"",
         ] {
             assert!(json.contains(key), "missing {key} in:\n{json}");
         }
@@ -1144,12 +1299,12 @@ mod tests {
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());
         let doc = crate::util::json::parse(&json).expect("BENCH.json must parse");
-        assert_eq!(doc.get("schema").and_then(crate::util::json::Json::num), Some(5.0));
+        assert_eq!(doc.get("schema").and_then(crate::util::json::Json::num), Some(6.0));
         // the human rendering mentions every phase of the breakdown
         let table = report.render();
         for col in [
             "pack", "exchange", "demux", "dynamics", "silent dynamics", "executor",
-            "dynamics soa",
+            "dynamics soa", "transport exchange",
         ] {
             assert!(table.contains(col), "missing {col}");
         }

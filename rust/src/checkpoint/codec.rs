@@ -114,6 +114,11 @@ impl Writer {
     pub fn put_len(&mut self, n: usize) {
         self.put_u64(n as u64);
     }
+
+    /// Raw byte run (length conveyed out of band — pair with `put_len`).
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
 }
 
 /// Sequential little-endian reader; every take checks bounds.
@@ -144,6 +149,11 @@ impl<'a> Reader<'a> {
 
     pub fn take_u8(&mut self) -> Result<u8, CheckpointError> {
         Ok(self.take(1)?[0])
+    }
+
+    /// Raw byte run written by `put_bytes`.
+    pub fn take_bytes(&mut self, n: usize) -> Result<&'a [u8], CheckpointError> {
+        self.take(n)
     }
 
     pub fn take_u32(&mut self) -> Result<u32, CheckpointError> {

@@ -212,7 +212,7 @@ impl RankState {
         Ok(())
     }
 
-    fn encode_into(&self, w: &mut Writer) {
+    pub(crate) fn encode_into(&self, w: &mut Writer) {
         w.put_u32(self.rank);
         w.put_u32(self.n_local);
         w.put_len(self.states.len());
@@ -301,7 +301,7 @@ impl RankState {
         }
     }
 
-    fn decode_from(r: &mut Reader<'_>) -> Result<RankState, CheckpointError> {
+    pub(crate) fn decode_from(r: &mut Reader<'_>) -> Result<RankState, CheckpointError> {
         let rank = r.take_u32()?;
         let n_local = r.take_u32()?;
         let n_states = r.take_len(32)?;

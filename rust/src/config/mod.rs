@@ -9,5 +9,5 @@ pub mod toml;
 pub use sim::{
     AreaParams, ConnParams, ConnRule, DelayDist, DynamicsBackend, ExternalOverride,
     ExternalParams, GridParams, NeuronParams, ProjectionParams, SimConfig, Solver, Stride,
-    SynParams,
+    SynParams, TransportKind,
 };

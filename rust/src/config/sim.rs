@@ -293,6 +293,8 @@ impl GridParams {
         self.columns() * self.neurons_per_column as u64
     }
 
+    // the cast is guarded by the explicit clamp below
+    #[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
     pub fn exc_per_column(&self) -> u32 {
         // `validate` bounds exc_fraction to [0, 1], so the rounded product
         // can never exceed neurons_per_column; clamp anyway so even an
@@ -603,6 +605,35 @@ impl DynamicsBackend {
     }
 }
 
+/// Which rank transport carries the virtual-MPI collectives (see
+/// `mpi::comm::Transport` and docs/TRANSPORT.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Ranks as threads over the in-process channel matrix — the
+    /// reference backend, and the default.
+    Channel,
+    /// Ranks as forked worker processes over mmap'd shared-memory
+    /// rings — the paper's processes-exchanging-messages shape.
+    Shm,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "channel" => Ok(TransportKind::Channel),
+            "shm" => Ok(TransportKind::Shm),
+            other => Err(format!("unknown transport '{other}' (channel|shm)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Channel => "channel",
+            TransportKind::Shm => "shm",
+        }
+    }
+}
+
 /// Top-level simulation configuration.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -618,6 +649,17 @@ pub struct SimConfig {
     pub duration_ms: f64,
     /// Number of (virtual MPI) ranks.
     pub ranks: u32,
+    /// Rank transport. `None` defers to the `DPSNN_TRANSPORT`
+    /// environment variable (CI forces whole suites onto one backend
+    /// that way), falling back to [`TransportKind::Channel`]; an
+    /// explicit value always wins — which is what lets a cross-backend
+    /// test compare both even under a forced environment.
+    pub transport: Option<TransportKind>,
+    /// Ranks per (virtual) node for the construction-phase hierarchical
+    /// Alltoallv (paper §II-D: intra-node gather, inter-node exchange,
+    /// intra-node scatter). 1 — the default — means flat exchange; the
+    /// result is bit-identical either way (test-enforced).
+    pub ranks_per_node: u32,
     /// Global RNG seed — network is a pure function of this (any ranks).
     pub seed: u64,
     /// STDP plasticity (paper: disabled for all scaling measurements).
@@ -656,6 +698,8 @@ impl SimConfig {
             dt_ms: 1.0,
             duration_ms: 1000.0,
             ranks: 1,
+            transport: None,
+            ranks_per_node: 1,
             seed: 42,
             plasticity: false,
             solver: Solver::EventDriven,
@@ -681,6 +725,9 @@ impl SimConfig {
     }
 
     /// Number of delay slots of `dt_ms` needed by the delay queues.
+    // `validate` bounds delay_max_ms/dt_ms to (0, u16::MAX], so the
+    // float→int cast can neither truncate nor go negative
+    #[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
     pub fn delay_slots(&self) -> usize {
         (self.syn.delay_max_ms / self.dt_ms).ceil() as usize + 1
     }
@@ -696,6 +743,23 @@ impl SimConfig {
             DynamicsBackend::Batch
         } else {
             self.backend
+        }
+    }
+
+    /// The rank transport the engine actually uses: the explicit
+    /// config value when set, else the `DPSNN_TRANSPORT` environment
+    /// variable ("channel"|"shm", unknown values ignored), else the
+    /// channel backend. Resolved once at `Network::build`; the built
+    /// network records the resolved choice, so a mid-run environment
+    /// change cannot flip backends.
+    #[must_use]
+    pub fn effective_transport(&self) -> TransportKind {
+        if let Some(t) = self.transport {
+            return t;
+        }
+        match std::env::var("DPSNN_TRANSPORT") {
+            Ok(v) => TransportKind::parse(&v).unwrap_or(TransportKind::Channel),
+            Err(_) => TransportKind::Channel,
         }
     }
 
@@ -826,13 +890,21 @@ impl SimConfig {
         cfg.dt_ms = doc.float_or("simulation.dt_ms", cfg.dt_ms)?;
         cfg.duration_ms = doc.float_or("simulation.duration_ms", cfg.duration_ms)?;
         cfg.ranks = u32_key(doc, "simulation.ranks", "", cfg.ranks)?;
-        let seed = doc.int_or("simulation.seed", cfg.seed as i64)?;
+        // preset default seeds all fit i64; saturate rather than wrap if
+        // a future preset somehow does not
+        let seed = doc.int_or("simulation.seed", i64::try_from(cfg.seed).unwrap_or(i64::MAX))?;
         cfg.seed = u64::try_from(seed).map_err(|_| {
             format!("config key 'simulation.seed' must be a non-negative integer, got {seed}")
         })?;
         cfg.plasticity = doc.bool_or("simulation.plasticity", cfg.plasticity)?;
         cfg.solver = Solver::parse(&doc.str_or("simulation.solver", "event")?)?;
         cfg.backend = DynamicsBackend::parse(&doc.str_or("simulation.backend", "soa")?)?;
+        let transport = doc.str_or("simulation.transport", "")?;
+        if !transport.is_empty() {
+            cfg.transport = Some(TransportKind::parse(&transport)?);
+        }
+        cfg.ranks_per_node =
+            u32_key(doc, "simulation.ranks_per_node", "", cfg.ranks_per_node)?;
 
         // -- multi-area atlas: [[area]] / [[projection]] blocks --------
         // Areas inherit the already-resolved global [network] and
@@ -1035,6 +1107,17 @@ impl SimConfig {
                     check(np, &format!("area '{}' inh model", a.name))?;
                 }
             }
+        }
+        if self.ranks_per_node == 0 {
+            return Err("simulation.ranks_per_node must be >= 1".into());
+        }
+        if self.transport == Some(TransportKind::Shm) && self.solver == Solver::Xla {
+            return Err(
+                "transport = \"shm\" is incompatible with solver = \"xla\": the PJRT \
+                 client does not survive fork(); run the XLA solver on the channel \
+                 transport"
+                    .into(),
+            );
         }
         if self.backend == DynamicsBackend::Batch && self.solver != Solver::Xla {
             return Err(
@@ -1590,7 +1673,7 @@ ranks = 2
         assert!(err.contains("'t.over'") && err.contains("32-bit"), "{err}");
         // the u64 seed accepts the full TOML (i64) integer range
         let doc = toml::parse("[simulation]\nseed = 9223372036854775807\n").unwrap();
-        assert_eq!(SimConfig::from_doc(&doc).unwrap().seed, i64::MAX as u64);
+        assert_eq!(SimConfig::from_doc(&doc).unwrap().seed, u64::try_from(i64::MAX).unwrap());
     }
 
     #[test]

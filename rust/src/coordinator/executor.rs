@@ -1,4 +1,4 @@
-//! Persistent rank executor: one long-lived OS thread per rank.
+//! Persistent rank executor: the coordinator-facing command fabric.
 //!
 //! The paper's DPSNN is a set of *long-lived* MPI processes that pace
 //! each other once per time-driven step (§II-E). Earlier versions of
@@ -7,31 +7,46 @@
 //! polluted exactly the per-phase timings the bench harness records.
 //! The executor removes the churn: `Network::build` constructs the
 //! per-rank state once, hands each `(RankProcess, RankComm)` pair to a
-//! worker thread, and every subsequent `step()`/`advance()`/`reset()`
-//! is a typed command on a per-rank channel:
+//! worker, and every subsequent `step()`/`advance()`/`reset()` is a
+//! typed command on a per-rank channel.
+//!
+//! Since the transport became pluggable (see `mpi::comm::Transport`)
+//! the executor is a facade over two pools sharing one command
+//! dispatcher ([`execute_command`]):
+//!
+//! * [`ThreadPool`] — ranks as threads, commands on mpsc channels,
+//!   collectives over the in-process channel matrix. The reference
+//!   backend, and the default.
+//! * [`ProcPool`](super::procpool::ProcPool) — ranks as forked worker
+//!   *processes*, commands as length-prefixed frames on mmap'd
+//!   shared-memory rings, collectives over `mpi::shm` data rings
+//!   (`--transport shm`).
 //!
 //! ```text
 //!             ┌────────────────────────────────────────────┐
 //!             │ Network (coordinator thread)               │
-//!             │   cmd_tx[r]: Run{step0,steps,observe}      │
-//!             │              Probe | Reset | Snapshot      │
-//!             │              Restore{state} | Shutdown     │
+//!             │   cmd[r]: Run{step0,steps,observe}         │
+//!             │           Probe | Reset | Snapshot         │
+//!             │           Restore{state} | Report          │
 //!             └──────┬──────────────┬──────────────┬───────┘
 //!                    ▼              ▼              ▼
-//!              worker rank0   worker rank1   worker rankR-1   (threads
-//!              loop{recv cmd; lock slot; dispatch; reply}     live until
-//!                    │              │              │           Shutdown
-//!                    └── virtual-MPI collectives ──┘           or Drop)
+//!              worker rank0   worker rank1   worker rankR-1  (threads or
+//!              loop{recv cmd; execute_command; reply}         processes)
+//!                    │              │              │
+//!                    └── virtual-MPI collectives ──┘
 //!                                   │
-//!                    reply_rx: Done{frames,state} | Panicked{msg}
+//!                 reply: Done{frames,state,report} | Panicked{msg}
 //! ```
 //!
-//! Shared state: each rank's `(RankProcess, RankComm)` lives in an
-//! `Arc<Mutex<RankSlot>>`. A worker locks its slot only while executing
-//! a command; the coordinator locks slots only *between* commands
-//! (every dispatch waits for all replies before returning), so the
-//! locks never contend — they exist to let `summary()`/`synapses()`/
-//! `set_external()` read rank state without a serialization protocol.
+//! Thread-pool shared state: each rank's `(RankProcess, RankComm)`
+//! lives in an `Arc<Mutex<RankSlot>>`. A worker locks its slot only
+//! while executing a command; the coordinator locks slots only
+//! *between* commands (every dispatch waits for all replies before
+//! returning), so the locks never contend — they exist to let
+//! `summary()`/`synapses()` read rank state without a serialization
+//! protocol. The process pool has no shared slots: the parent keeps
+//! its pristine construction-time copy (fork gave each child its own)
+//! and anything dynamic rides back on replies.
 //!
 //! ## Panic propagation
 //!
@@ -50,14 +65,15 @@
 //! Poisoning used to be terminal. Two escapes exist now (both driven by
 //! `RunOptions`, see docs/RELIABILITY.md):
 //!
-//! * a **watchdog** deadline on [`Executor::collect`]: a rank that
-//!   never replies (a hang, not a panic) poisons the session with a
-//!   message *naming the stuck rank* instead of blocking the
-//!   coordinator forever. Stuck workers are detached, never joined.
-//! * [`Executor::recover`] rebuilds the pool around the surviving
-//!   simulation state: fresh communicator matrix, fresh channels,
-//!   fresh worker threads. The session layer then replays from its
-//!   last auto-checkpoint.
+//! * a **watchdog** deadline on collect: a rank that never replies (a
+//!   hang or a silent worker death, not a panic) poisons the session
+//!   with a message *naming the stuck rank* instead of blocking the
+//!   coordinator forever. Stuck worker threads are detached, never
+//!   joined; a dead worker *process* is additionally diagnosed through
+//!   `waitpid` before any watchdog fires (see `procpool`).
+//! * `recover` rebuilds the pool around the surviving simulation
+//!   state: fresh communicators, fresh channels/rings, fresh workers.
+//!   The session layer then replays from its last auto-checkpoint.
 //!
 //! ## Phase timings
 //!
@@ -78,9 +94,11 @@ use std::time::Duration;
 use crate::checkpoint::{RankExpectation, RankState};
 use crate::config::ExternalParams;
 use crate::engine::metrics::PHASES;
-use crate::engine::process::{FaultMode, RankProcess};
+use crate::engine::process::{FaultMode, RankProcess, DIE_MARKER};
 use crate::engine::RankReport;
 use crate::mpi::{panic_message, Cluster, RankComm};
+
+use super::procpool::ProcPool;
 
 /// One rank's persistent state: the simulation process plus its
 /// communicator, created at build time and reused for every command.
@@ -89,9 +107,11 @@ pub(crate) struct RankSlot {
     pub comm: RankComm,
 }
 
-/// Commands the coordinator sends to a rank worker.
+/// Commands the coordinator sends to a rank worker. The process
+/// backend serializes these onto command rings (`procpool::codec`);
+/// the thread backend sends them as-is.
 #[derive(Clone, Debug)]
-enum Command {
+pub(crate) enum Command {
     /// Drive `steps` time-driven steps starting at `step0`, with
     /// per-step column-spike observation on or off. The reply carries
     /// **one [`ObserveFrame`] per step** when `observe` is set: probed
@@ -118,7 +138,12 @@ enum Command {
     /// worker-side restore cannot fail), then optionally re-zero the
     /// time origin by `rebase_delta` dt-steps (`RankProcess::rebase`).
     Restore { state: Box<RankState>, rebase_delta: u64 },
-    /// Exit the worker thread.
+    /// Ship the rank's metrics report back in `u64` wire form. The
+    /// thread pool reads reports directly through its shared slots;
+    /// the process pool has no shared memory view of a child's
+    /// metrics, so reporting is a command like any other.
+    Report,
+    /// Exit the worker.
     Shutdown,
 }
 
@@ -132,66 +157,168 @@ pub(crate) struct ObserveFrame {
     pub phase_ns: [u64; PHASES.len()],
 }
 
-enum Reply {
-    Done { rank: u32, frames: Vec<ObserveFrame>, state: Option<Box<RankState>> },
-    Panicked { rank: u32, msg: String },
+pub(crate) enum Reply {
+    Done {
+        rank: u32,
+        frames: Vec<ObserveFrame>,
+        state: Option<Box<RankState>>,
+        report: Option<Vec<u64>>,
+    },
+    Panicked {
+        rank: u32,
+        msg: String,
+    },
 }
 
 /// What one command produced on a worker, before the reply is sent.
 /// Split out so reply-time faults act *after* the slot lock drops: a
-/// hung worker must not wedge `summary()`/`with_slots` readers.
-struct CmdOutcome {
-    frames: Vec<ObserveFrame>,
-    state: Option<Box<RankState>>,
-    reply_fault: Option<FaultMode>,
+/// hung worker must not wedge `summary()`/`with_procs` readers.
+pub(crate) struct CmdOutcome {
+    pub frames: Vec<ObserveFrame>,
+    pub state: Option<Box<RankState>>,
+    pub report: Option<Vec<u64>>,
+    pub reply_fault: Option<FaultMode>,
 }
 
-/// The worker pool. Owned by `Network`; dropped ⇒ workers shut down.
-pub(crate) struct Executor {
-    slots: Vec<Arc<Mutex<RankSlot>>>,
-    cmd_tx: Vec<Sender<Command>>,
-    reply_rx: Receiver<Reply>,
-    handles: Vec<JoinHandle<()>>,
-    /// Per-reply watchdog deadline [ms]; `None` blocks forever (the
-    /// historical behavior).
-    watchdog_timeout_ms: Option<u64>,
-    /// Ranks whose worker never replied within the watchdog deadline.
-    /// Their threads may be parked or wedged forever: teardown and
-    /// recovery detach them instead of joining.
-    hung: Vec<bool>,
-    /// Root panic message once any rank died; all further commands are
-    /// refused with it.
-    poisoned: Option<String>,
+/// One dispatch round's collected replies, indexed by rank.
+pub(crate) struct CollectOut {
+    pub frames: Vec<Vec<ObserveFrame>>,
+    pub states: Vec<Option<Box<RankState>>>,
+    pub reports: Vec<Option<Vec<u64>>>,
+}
+
+impl CollectOut {
+    pub(crate) fn empty(n: usize) -> CollectOut {
+        CollectOut {
+            frames: vec![Vec::new(); n],
+            states: (0..n).map(|_| None).collect(),
+            reports: (0..n).map(|_| None).collect(),
+        }
+    }
+}
+
+/// Execute one command against one rank's state. This is THE dispatch
+/// table, shared verbatim by the thread worker and the forked process
+/// worker — backend bit-identity starts with both backends running
+/// literally the same code here.
+pub(crate) fn execute_command(
+    cmd: Command,
+    rank: u32,
+    proc: &mut RankProcess,
+    comm: &mut RankComm,
+) -> CmdOutcome {
+    let mut out =
+        CmdOutcome { frames: Vec::new(), state: None, report: None, reply_fault: None };
+    match cmd {
+        Command::Shutdown => {}
+        Command::Run { step0, steps, observe } => {
+            proc.set_observe(observe);
+            // capacity is a hint: a (theoretical) overflow of usize
+            // just skips the preallocation
+            let cap = if observe { usize::try_from(steps).unwrap_or(0) } else { 0 };
+            let mut frames = Vec::with_capacity(cap);
+            for k in 0..steps {
+                proc.step(comm, step0 + k);
+                if observe {
+                    frames.push(frame_of(proc));
+                }
+            }
+            out.frames = frames;
+        }
+        Command::Probe => out.frames = vec![frame_of(proc)],
+        Command::Reset => {
+            proc.reset();
+            let _ = comm.take_stats();
+        }
+        Command::SetExternal { area, external } => match area {
+            None => proc.set_external(external),
+            Some(i) => proc.set_area_external(i as usize, external),
+        },
+        Command::Snapshot => {
+            out.state = Some(Box::new(proc.snapshot_state()));
+        }
+        Command::Restore { state, rebase_delta } => {
+            // validated coordinator-side; a mismatch reaching this far
+            // is a protocol bug worth poisoning over
+            if let Err(e) = proc.restore_state(&state) {
+                panic!("restore failed on rank {rank}: {e}");
+            }
+            if rebase_delta > 0 {
+                proc.rebase(rebase_delta);
+            }
+        }
+        Command::Report => {
+            out.report = Some(proc.report_wire(comm.stats()));
+        }
+    }
+    // injected reply-time faults (Hang / DelayReply) are consumed here
+    // but ACTED ON after the slot lock drops / before the reply frame,
+    // so a hung worker never wedges coordinator-side readers
+    out.reply_fault = proc.take_reply_fault();
+    out
+}
+
+/// Merge a reply's panic message into the running root-cause slot.
+/// Cascade panics ("hung up": a peer died first) and watchdog verdicts
+/// must not mask a real root; a real root must overwrite a cascade
+/// that happened to arrive earlier.
+pub(crate) fn merge_root_panic(root: &mut Option<String>, msg: String) {
+    let cascade = msg.contains("hung up");
+    match root {
+        None => *root = Some(msg),
+        Some(cur) if cur.contains("hung up") && !cascade => *cur = msg,
+        Some(_) => {}
+    }
+}
+
+/// The executor: the worker pool behind `Network`, over one of the two
+/// transport backends. Owned by `Network`; dropped ⇒ workers shut
+/// down (threads joined, worker processes killed and reaped).
+pub(crate) enum Executor {
+    Threads(ThreadPool),
+    Procs(ProcPool),
 }
 
 impl Executor {
-    /// Spawn one persistent worker per rank, seeded with the
-    /// already-constructed rank state. `watchdog_timeout_ms` bounds
-    /// every per-rank command reply; `None` waits forever.
+    /// Spawn the reference backend: one persistent worker thread per
+    /// rank, seeded with the already-constructed rank state.
+    /// `watchdog_timeout_ms` bounds every per-rank command reply;
+    /// `None` waits forever.
     pub fn launch(
         pairs: Vec<(RankProcess, RankComm)>,
         watchdog_timeout_ms: Option<u64>,
     ) -> Executor {
-        let slots: Vec<Arc<Mutex<RankSlot>>> = pairs
-            .into_iter()
-            .map(|(proc, comm)| Arc::new(Mutex::new(RankSlot { proc, comm })))
-            .collect();
-        let n = slots.len();
-        let (cmd_tx, reply_rx, handles) = spawn_workers(&slots);
-        Executor {
-            slots,
-            cmd_tx,
-            reply_rx,
-            handles,
-            watchdog_timeout_ms,
-            hung: vec![false; n],
-            poisoned: None,
-        }
+        Executor::Threads(ThreadPool::launch(pairs, watchdog_timeout_ms))
+    }
+
+    /// Fork the shared-memory backend: one worker *process* per rank.
+    /// Construction already happened in this process (over the channel
+    /// transport); each child inherits its rank's state through fork
+    /// and re-homes its communicator onto the shm rings, carrying the
+    /// construction-phase comm statistics over.
+    pub fn launch_procs(
+        pairs: Vec<(RankProcess, RankComm)>,
+        watchdog_timeout_ms: Option<u64>,
+    ) -> Executor {
+        Executor::Procs(ProcPool::launch(pairs, watchdog_timeout_ms))
     }
 
     /// The root panic message, if any rank has died.
     pub fn poison_message(&self) -> Option<&str> {
-        self.poisoned.as_deref()
+        match self {
+            Executor::Threads(p) => p.poisoned.as_deref(),
+            Executor::Procs(p) => p.poison_message(),
+        }
+    }
+
+    fn dispatch_each(
+        &mut self,
+        make: impl FnMut(usize) -> Command,
+    ) -> Result<CollectOut, String> {
+        match self {
+            Executor::Threads(p) => p.dispatch_each(make),
+            Executor::Procs(p) => p.dispatch_each(make),
+        }
     }
 
     /// Drive every rank through `steps` steps starting at `step0`.
@@ -205,13 +332,14 @@ impl Executor {
         steps: u64,
         observe: bool,
     ) -> Result<Vec<Vec<ObserveFrame>>, String> {
-        self.dispatch_each(|_| Command::Run { step0, steps, observe }).map(|(f, _)| f)
+        self.dispatch_each(|_| Command::Run { step0, steps, observe }).map(|o| o.frames)
     }
 
     /// Snapshot every rank's observation frame without stepping.
     pub fn probe(&mut self) -> Result<Vec<ObserveFrame>, String> {
-        let (per_rank, _) = self.dispatch_each(|_| Command::Probe)?;
-        Ok(per_rank
+        let out = self.dispatch_each(|_| Command::Probe)?;
+        Ok(out
+            .frames
             .into_iter()
             .map(|mut frames| {
                 debug_assert_eq!(frames.len(), 1);
@@ -241,8 +369,8 @@ impl Executor {
     /// Capture every rank's dynamic state, in parallel, ordered by
     /// rank (the building block of `Network::checkpoint`).
     pub fn snapshot(&mut self) -> Result<Vec<RankState>, String> {
-        let (_, states) = self.dispatch_each(|_| Command::Snapshot)?;
-        states
+        let out = self.dispatch_each(|_| Command::Snapshot)?;
+        out.states
             .into_iter()
             .enumerate()
             .map(|(r, s)| {
@@ -261,7 +389,7 @@ impl Executor {
         states: Vec<RankState>,
         rebase_delta: u64,
     ) -> Result<(), String> {
-        assert_eq!(states.len(), self.slots.len(), "one restore record per rank");
+        assert_eq!(states.len(), self.ranks(), "one restore record per rank");
         let mut boxed: Vec<Option<Box<RankState>>> =
             states.into_iter().map(|s| Some(Box::new(s))).collect();
         self.dispatch_each(|r| Command::Restore {
@@ -271,19 +399,109 @@ impl Executor {
         .map(|_| ())
     }
 
+    fn ranks(&self) -> usize {
+        match self {
+            Executor::Threads(p) => p.slots.len(),
+            Executor::Procs(p) => p.ranks(),
+        }
+    }
+
     /// Per-rank shape signatures for coordinator-side checkpoint
-    /// validation (see `RankState::validate`).
+    /// validation (see `RankState::validate`). Shapes are fixed at
+    /// construction, so the process pool answers from its pristine
+    /// parent-side copy without a round-trip.
     pub fn expectations(&self) -> Vec<RankExpectation> {
-        self.with_slots(|slot| slot.proc.expectation())
+        self.with_procs(|proc| proc.expectation())
     }
 
     /// Rebuild the pool around the surviving simulation state after a
-    /// poisoning: fresh communicator matrix (the old one has hung-up
-    /// channels), fresh command/reply channels, fresh worker threads.
-    /// Hung workers are detached; exited workers are joined. The
-    /// `RankProcess` state in the slots is kept as-is — the session
-    /// layer restores it from its last auto-checkpoint afterwards.
+    /// poisoning: fresh communicators (the old ones have hung-up
+    /// channels or rings), fresh workers. Hung worker threads are
+    /// detached and dead worker processes reaped. The session layer
+    /// restores simulation state from its last auto-checkpoint
+    /// afterwards — which is what makes the two backends converge
+    /// bit-identically even though the thread pool keeps the
+    /// advanced (pre-fault) state and the process pool re-forks from
+    /// the pristine construction state.
     pub fn recover(&mut self) {
+        match self {
+            Executor::Threads(p) => p.recover(),
+            Executor::Procs(p) => p.recover(),
+        }
+    }
+
+    /// Run `f` over every rank's *coordinator-visible* process state,
+    /// in rank order. Threads: the live shared slots (between
+    /// commands). Processes: the parent's construction-time copy —
+    /// static topology (synapse counts, shapes) is exact; dynamic
+    /// fields are whatever construction left (callers needing dynamic
+    /// state use commands, not this).
+    pub fn with_procs<R>(&self, f: impl FnMut(&RankProcess) -> R) -> Vec<R> {
+        match self {
+            Executor::Threads(p) => {
+                let mut f = f;
+                p.with_slots(|slot| f(&slot.proc))
+            }
+            Executor::Procs(p) => p.with_procs(f),
+        }
+    }
+
+    /// Per-rank reports with comm statistics folded in. The thread
+    /// pool reads its shared slots directly (works even poisoned); the
+    /// process pool round-trips a `Report` command, degrading to the
+    /// parent's construction-time view if the pool is poisoned.
+    pub fn reports(&mut self) -> Vec<RankReport> {
+        match self {
+            Executor::Threads(p) => p.with_slots(|slot| {
+                let RankSlot { proc, comm } = slot;
+                proc.report(comm.stats())
+            }),
+            Executor::Procs(p) => p.reports(),
+        }
+    }
+}
+
+/// The reference backend: one long-lived OS thread per rank.
+pub(crate) struct ThreadPool {
+    slots: Vec<Arc<Mutex<RankSlot>>>,
+    cmd_tx: Vec<Sender<Command>>,
+    reply_rx: Receiver<Reply>,
+    handles: Vec<JoinHandle<()>>,
+    /// Per-reply watchdog deadline [ms]; `None` blocks forever (the
+    /// historical behavior).
+    watchdog_timeout_ms: Option<u64>,
+    /// Ranks whose worker never replied within the watchdog deadline.
+    /// Their threads may be parked or wedged forever: teardown and
+    /// recovery detach them instead of joining.
+    hung: Vec<bool>,
+    /// Root panic message once any rank died; all further commands are
+    /// refused with it.
+    poisoned: Option<String>,
+}
+
+impl ThreadPool {
+    fn launch(
+        pairs: Vec<(RankProcess, RankComm)>,
+        watchdog_timeout_ms: Option<u64>,
+    ) -> ThreadPool {
+        let slots: Vec<Arc<Mutex<RankSlot>>> = pairs
+            .into_iter()
+            .map(|(proc, comm)| Arc::new(Mutex::new(RankSlot { proc, comm })))
+            .collect();
+        let n = slots.len();
+        let (cmd_tx, reply_rx, handles) = spawn_workers(&slots);
+        ThreadPool {
+            slots,
+            cmd_tx,
+            reply_rx,
+            handles,
+            watchdog_timeout_ms,
+            hung: vec![false; n],
+            poisoned: None,
+        }
+    }
+
+    fn recover(&mut self) {
         // closing the command channels errors every live worker's recv,
         // so each exits its loop; then join the joinable ones
         self.cmd_tx.clear();
@@ -312,7 +530,7 @@ impl Executor {
     /// commands: summaries, stimulus swaps, static topology reads).
     /// Recovers poisoned slot locks — after a rank panic the state is
     /// still readable for reporting.
-    pub fn with_slots<R>(&self, mut f: impl FnMut(&mut RankSlot) -> R) -> Vec<R> {
+    fn with_slots<R>(&self, mut f: impl FnMut(&mut RankSlot) -> R) -> Vec<R> {
         self.slots
             .iter()
             .map(|slot| {
@@ -322,20 +540,12 @@ impl Executor {
             .collect()
     }
 
-    /// Per-rank reports with comm statistics folded in.
-    pub fn reports(&self) -> Vec<RankReport> {
-        self.with_slots(|slot| {
-            let RankSlot { proc, comm } = slot;
-            proc.report(comm.stats())
-        })
-    }
-
     /// Send one command per rank (`make(rank)`) and collect the
     /// replies.
     fn dispatch_each(
         &mut self,
         mut make: impl FnMut(usize) -> Command,
-    ) -> Result<(Vec<Vec<ObserveFrame>>, Vec<Option<Box<RankState>>>), String> {
+    ) -> Result<CollectOut, String> {
         if let Some(msg) = &self.poisoned {
             return Err(format!("virtual cluster poisoned: {msg}"));
         }
@@ -354,15 +564,12 @@ impl Executor {
     /// Wait for exactly one reply per rank. Every worker replies once
     /// per command — panicking workers hang up their channels first, so
     /// peers blocked on them cascade-panic and still reply (see the
-    /// module docs) — hence this deadlocks only if a worker *hangs*
-    /// without panicking, which the watchdog deadline converts into a
-    /// poisoning that names the stuck rank(s).
-    fn collect(
-        &mut self,
-    ) -> Result<(Vec<Vec<ObserveFrame>>, Vec<Option<Box<RankState>>>), String> {
+    /// module docs) — hence this deadlocks only if a worker *hangs* (or
+    /// dies, `FaultMode::Die`) without panicking, which the watchdog
+    /// deadline converts into a poisoning that names the stuck rank(s).
+    fn collect(&mut self) -> Result<CollectOut, String> {
         let n = self.slots.len();
-        let mut frames = vec![Vec::new(); n];
-        let mut states: Vec<Option<Box<RankState>>> = (0..n).map(|_| None).collect();
+        let mut out = CollectOut::empty(n);
         let mut replied = vec![false; n];
         let mut root_panic: Option<String> = None;
         let deadline = self.watchdog_timeout_ms.map(Duration::from_millis);
@@ -372,21 +579,15 @@ impl Executor {
                 None => self.reply_rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
             };
             match reply {
-                Ok(Reply::Done { rank, frames: f, state }) => {
+                Ok(Reply::Done { rank, frames, state, report }) => {
                     replied[rank as usize] = true;
-                    frames[rank as usize] = f;
-                    states[rank as usize] = state;
+                    out.frames[rank as usize] = frames;
+                    out.states[rank as usize] = state;
+                    out.reports[rank as usize] = report;
                 }
                 Ok(Reply::Panicked { rank, msg }) => {
                     replied[rank as usize] = true;
-                    let cascade = msg.contains("hung up");
-                    let full = format!("rank {rank} panicked: {msg}");
-                    match &mut root_panic {
-                        None => root_panic = Some(full),
-                        // a cascade panic must not mask the root cause
-                        Some(cur) if cur.contains("hung up") && !cascade => *cur = full,
-                        Some(_) => {}
-                    }
+                    merge_root_panic(&mut root_panic, format!("rank {rank} panicked: {msg}"));
                 }
                 Err(RecvTimeoutError::Disconnected) => {
                     root_panic
@@ -395,7 +596,10 @@ impl Executor {
                 }
                 Err(RecvTimeoutError::Timeout) => {
                     // name every rank still owing a reply and detach its
-                    // worker: it may be parked forever
+                    // worker: it may be parked forever. The verdict
+                    // OVERWRITES a cascade-only root — when a worker
+                    // died silently, its peers' "hung up" cascades
+                    // arrive first and must not mask the diagnosis.
                     let mut stuck = Vec::new();
                     for (rank, done) in replied.iter().enumerate() {
                         if !done {
@@ -404,16 +608,19 @@ impl Executor {
                         }
                     }
                     let ms = self.watchdog_timeout_ms.unwrap_or(0);
-                    root_panic.get_or_insert(format!(
-                        "watchdog: no reply within {ms} ms from {}",
-                        stuck.join(", ")
-                    ));
+                    merge_root_panic(
+                        &mut root_panic,
+                        format!(
+                            "watchdog: no reply within {ms} ms from {}",
+                            stuck.join(", ")
+                        ),
+                    );
                     break;
                 }
             }
         }
         match root_panic {
-            None => Ok((frames, states)),
+            None => Ok(out),
             Some(msg) => {
                 self.poisoned = Some(msg.clone());
                 Err(format!("virtual cluster poisoned: {msg}"))
@@ -422,11 +629,11 @@ impl Executor {
     }
 }
 
-impl Drop for Executor {
-    /// Dropping the executor (Network drop, with or without an explicit
-    /// shutdown) terminates the pool cleanly: idle workers get
-    /// `Shutdown`, dead workers' channels error harmlessly, hung
-    /// workers are detached, and every other thread is joined.
+impl Drop for ThreadPool {
+    /// Dropping the pool (Network drop, with or without an explicit
+    /// shutdown) terminates it cleanly: idle workers get `Shutdown`,
+    /// dead workers' channels error harmlessly, hung workers are
+    /// detached, and every other thread is joined.
     fn drop(&mut self) {
         for tx in &self.cmd_tx {
             let _ = tx.send(Command::Shutdown);
@@ -491,51 +698,7 @@ fn worker(
         let result = catch_unwind(AssertUnwindSafe(|| {
             let mut guard = slot.lock().unwrap_or_else(PoisonError::into_inner);
             let RankSlot { proc, comm } = &mut *guard;
-            let mut out = CmdOutcome { frames: Vec::new(), state: None, reply_fault: None };
-            match cmd {
-                Command::Shutdown => {}
-                Command::Run { step0, steps, observe } => {
-                    proc.set_observe(observe);
-                    // capacity is a hint: a (theoretical) overflow of
-                    // usize just skips the preallocation
-                    let cap = if observe { usize::try_from(steps).unwrap_or(0) } else { 0 };
-                    let mut frames = Vec::with_capacity(cap);
-                    for k in 0..steps {
-                        proc.step(comm, step0 + k);
-                        if observe {
-                            frames.push(frame_of(proc));
-                        }
-                    }
-                    out.frames = frames;
-                }
-                Command::Probe => out.frames = vec![frame_of(proc)],
-                Command::Reset => {
-                    proc.reset();
-                    let _ = comm.take_stats();
-                }
-                Command::SetExternal { area, external } => match area {
-                    None => proc.set_external(external),
-                    Some(i) => proc.set_area_external(i as usize, external),
-                },
-                Command::Snapshot => {
-                    out.state = Some(Box::new(proc.snapshot_state()));
-                }
-                Command::Restore { state, rebase_delta } => {
-                    // validated coordinator-side; a mismatch reaching
-                    // this far is a protocol bug worth poisoning over
-                    if let Err(e) = proc.restore_state(&state) {
-                        panic!("restore failed on rank {rank}: {e}");
-                    }
-                    if rebase_delta > 0 {
-                        proc.rebase(rebase_delta);
-                    }
-                }
-            }
-            // injected reply-time faults (Hang / DelayReply) are
-            // consumed here but ACTED ON after the lock drops, so a
-            // hung worker never wedges coordinator-side slot readers
-            out.reply_fault = proc.take_reply_fault();
-            out
+            execute_command(cmd, rank, proc, comm)
         }));
         match result {
             Ok(out) => {
@@ -551,9 +714,14 @@ fn worker(
                     Some(FaultMode::DelayReplyMs(ms)) => {
                         std::thread::sleep(Duration::from_millis(ms));
                     }
-                    Some(FaultMode::Panic) | None => {}
+                    Some(FaultMode::Panic | FaultMode::Die) | None => {}
                 }
-                let reply = Reply::Done { rank, frames: out.frames, state: out.state };
+                let reply = Reply::Done {
+                    rank,
+                    frames: out.frames,
+                    state: out.state,
+                    report: out.report,
+                };
                 if reply_tx.send(reply).is_err() {
                     return;
                 }
@@ -565,6 +733,12 @@ fn worker(
                 let mut guard = slot.lock().unwrap_or_else(PoisonError::into_inner);
                 guard.comm.hang_up();
                 drop(guard);
+                if msg.contains(DIE_MARKER) {
+                    // a worker "death" on the thread backend: vanish
+                    // without replying — peers cascade and the watchdog
+                    // names this rank by its silence
+                    return;
+                }
                 let _ = reply_tx.send(Reply::Panicked { rank, msg });
                 return;
             }
@@ -572,7 +746,7 @@ fn worker(
     }
 }
 
-fn frame_of(proc: &RankProcess) -> ObserveFrame {
+pub(crate) fn frame_of(proc: &RankProcess) -> ObserveFrame {
     let mut phase_ns = [0u64; PHASES.len()];
     for p in PHASES {
         phase_ns[p.index()] = proc.metrics.phase_ns(p);

@@ -5,6 +5,7 @@
 
 pub(crate) mod executor;
 pub mod leader;
+pub(crate) mod procpool;
 pub mod session;
 
 pub use leader::{AreaTotals, RunSummary};

@@ -1,0 +1,691 @@
+//! Process-backed rank pool: the shared-memory transport's executor.
+//!
+//! The paper's DPSNN ranks are OS *processes* exchanging spikes over
+//! MPI. [`ProcPool`] reproduces that shape locally: `Network::build`
+//! constructs every rank in the coordinator process (over the channel
+//! transport, so construction collectives need no fork juggling), then
+//! the pool forks one worker per rank. Each child inherits its rank's
+//! [`RankProcess`] through copy-on-write fork, re-homes its
+//! communicator onto the `mpi::shm` data rings (carrying the
+//! construction-phase comm statistics over), and serves the same
+//! [`Command`] protocol as the thread pool — commands arrive as
+//! length-prefixed frames on a per-rank command ring, replies return
+//! on a reply ring, and both sides run the shared
+//! [`execute_command`] dispatcher.
+//!
+//! ## Parent-side state
+//!
+//! The parent keeps its (now pristine, construction-time) copy of
+//! every `RankProcess`. Static topology queries (`expectations`,
+//! synapse counts) answer from that copy without a round-trip; dynamic
+//! state always rides on replies (`Snapshot`, `Report`). After
+//! `recover` the pool re-forks from the pristine copy and the session
+//! layer restores dynamic state from its last auto-checkpoint — the
+//! same replay contract as the thread pool, hence bit-identical
+//! recovery across backends (the chaos suite enforces this).
+//!
+//! ## Death detection
+//!
+//! A worker process can die without a word (`FaultMode::Die`, a real
+//! crash, the OOM killer). The coordinator never blocks on a silent
+//! ring: every blocking edge (command writes, reply collection)
+//! interleaves `waitpid(WNOHANG)` checks. On a detected death the
+//! coordinator drains any fully-buffered reply, then closes the dead
+//! rank's outgoing data rings itself so peers blocked mid-collective
+//! cascade out with the ordinary "hung up" panic — the root cause
+//! reported upward names the dead rank and its wait status, never the
+//! cascade.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Duration;
+
+use crate::engine::process::{FaultMode, RankProcess, DIE_MARKER};
+use crate::engine::RankReport;
+use crate::mpi::shm::{
+    self, Backoff, FrameAcc, ShmCluster,
+};
+use crate::mpi::{panic_message, CommStats, RankComm};
+use crate::util::timer::WallStopwatch;
+
+use super::executor::{
+    execute_command, merge_root_panic, CollectOut, Command, Reply,
+};
+
+/// The worker-process pool (see the module docs).
+pub(crate) struct ProcPool {
+    /// Parent-side rank state: pristine at construction time. Children
+    /// own their forked copies; this copy answers static queries and
+    /// seeds re-forks after `recover`.
+    procs: Vec<RankProcess>,
+    /// Construction-phase comm statistics, taken from the channel
+    /// communicators the ranks were built over; every (re)forked child
+    /// seeds its shm communicator with its rank's clone so
+    /// `Report`/`finish` totals span both phases, as on one MPI rank.
+    init_stats: Vec<CommStats>,
+    shm: ShmCluster,
+    /// Child pid per rank; 0 once reaped.
+    pids: Vec<i32>,
+    /// Incremental per-rank reply-frame readers (frames can exceed the
+    /// ring capacity; reads must make progress across collect rounds).
+    accs: Vec<FrameAcc>,
+    /// Death verdicts noticed via `waitpid`, kept until `collect`
+    /// folds them into a poisoning.
+    dead_msgs: Vec<Option<String>>,
+    watchdog_timeout_ms: Option<u64>,
+    poisoned: Option<String>,
+}
+
+impl ProcPool {
+    /// Take over already-constructed ranks and fork one worker process
+    /// per rank. The channel communicators are drained of their
+    /// construction statistics and dropped — the shm rings replace
+    /// them.
+    pub fn launch(
+        pairs: Vec<(RankProcess, RankComm)>,
+        watchdog_timeout_ms: Option<u64>,
+    ) -> ProcPool {
+        let mut procs = Vec::with_capacity(pairs.len());
+        let mut init_stats = Vec::with_capacity(pairs.len());
+        for (proc, mut comm) in pairs {
+            init_stats.push(comm.take_stats());
+            procs.push(proc);
+        }
+        let ranks = u32::try_from(procs.len()).expect("rank count fits u32");
+        let mut pool = ProcPool {
+            procs,
+            init_stats,
+            shm: ShmCluster::new(ranks),
+            pids: Vec::new(),
+            accs: Vec::new(),
+            dead_msgs: Vec::new(),
+            watchdog_timeout_ms,
+            poisoned: None,
+        };
+        pool.fork_all();
+        pool
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.procs.len()
+    }
+
+    pub fn poison_message(&self) -> Option<&str> {
+        self.poisoned.as_deref()
+    }
+
+    /// Fork one worker per rank from the parent-side state. Children
+    /// seed their fault-fire counters from the shared cells so a
+    /// `max_fires`-exhausted fault stays spent across re-forks.
+    fn fork_all(&mut self) {
+        let n = self.procs.len();
+        self.accs = (0..n).map(|_| FrameAcc::new()).collect();
+        self.dead_msgs = (0..n).map(|_| None).collect();
+        self.pids = Vec::with_capacity(n);
+        let mut pids = Vec::with_capacity(n);
+        for (rank, proc) in (0_u32..).zip(self.procs.iter_mut()) {
+            let cluster = self.shm.clone();
+            let stats = self.init_stats[rank as usize].clone();
+            let pid = shm::spawn_worker(move || worker_process(rank, proc, &cluster, stats));
+            pids.push(pid);
+        }
+        self.pids = pids;
+    }
+
+    /// Run `f` over the parent-side copy of every rank (static
+    /// topology only — see the module docs).
+    pub fn with_procs<R>(&self, mut f: impl FnMut(&RankProcess) -> R) -> Vec<R> {
+        self.procs.iter().map(|p| f(p)).collect()
+    }
+
+    /// Per-rank reports. Healthy pool: a `Report` round-trip, so the
+    /// numbers are the children's live metrics. Poisoned pool: degrade
+    /// to the parent's construction-time view rather than fail — the
+    /// session still wants a summary after a crash.
+    pub fn reports(&mut self) -> Vec<RankReport> {
+        if self.poisoned.is_none() {
+            if let Ok(out) = self.dispatch_each(|_| Command::Report) {
+                if out.reports.iter().all(Option::is_some) {
+                    return out
+                        .reports
+                        .into_iter()
+                        .map(|w| RankReport::from_wire(&w.expect("report present")))
+                        .collect();
+                }
+            }
+        }
+        self.procs
+            .iter_mut()
+            .zip(self.init_stats.iter())
+            .map(|(p, s)| p.report(s))
+            .collect()
+    }
+
+    /// Send one command per rank (`make(rank)`) and collect the
+    /// replies.
+    pub fn dispatch_each(
+        &mut self,
+        mut make: impl FnMut(usize) -> Command,
+    ) -> Result<CollectOut, String> {
+        if let Some(msg) = &self.poisoned {
+            return Err(format!("virtual cluster poisoned: {msg}"));
+        }
+        // dispatch to every rank even if one is already dead: its live
+        // peers received commands and will block mid-collective on it,
+        // and collect() owns the diagnosis/cascade machinery
+        for rank in 0..self.procs.len() {
+            let frame = codec::encode_command(&make(rank));
+            self.write_cmd(rank, &frame);
+        }
+        self.collect()
+    }
+
+    /// Write one command frame, streaming through the ring capacity.
+    /// Interleaves death checks: never blocks on a ring whose consumer
+    /// is gone (the death itself is folded in by `collect`).
+    fn write_cmd(&mut self, rank: usize, payload: &[u8]) {
+        let ring = self.shm.cmd_ring(u32::try_from(rank).expect("rank fits u32"));
+        let hdr = (u64::try_from(payload.len()).expect("frame length fits u64")).to_le_bytes();
+        let mut buf = Vec::with_capacity(8 + payload.len());
+        buf.extend_from_slice(&hdr);
+        buf.extend_from_slice(payload);
+        let mut off = 0usize;
+        let mut backoff = Backoff::new();
+        while off < buf.len() {
+            let n = ring.write_some(&buf[off..]);
+            if n > 0 {
+                off += n;
+                backoff.reset();
+                continue;
+            }
+            self.check_death(rank);
+            if self.dead_msgs[rank].is_some() {
+                return; // collect() reports it; the partial frame is moot
+            }
+            backoff.snooze();
+        }
+    }
+
+    /// One `waitpid(WNOHANG)` probe for `rank`, recording a death
+    /// verdict (and reaping the zombie) at most once.
+    fn check_death(&mut self, rank: usize) {
+        if self.dead_msgs[rank].is_some() || self.pids[rank] == 0 {
+            return;
+        }
+        if let Some(status) = shm::try_wait(self.pids[rank]) {
+            self.pids[rank] = 0;
+            self.dead_msgs[rank] = Some(death_message(rank, status));
+        }
+    }
+
+    /// Wait for exactly one reply per rank, diagnosing silent worker
+    /// deaths via `waitpid` and hangs via the watchdog deadline.
+    fn collect(&mut self) -> Result<CollectOut, String> {
+        let n = self.procs.len();
+        let mut out = CollectOut::empty(n);
+        let mut done = vec![false; n];
+        let mut root: Option<String> = None;
+        let mut sw = WallStopwatch::new();
+        sw.start();
+        let mut backoff = Backoff::new();
+        while !done.iter().all(|d| *d) {
+            let mut progressed = false;
+            for rank in 0..n {
+                if done[rank] {
+                    continue;
+                }
+                let ring = self.shm.reply_ring(u32::try_from(rank).expect("rank fits u32"));
+                let (nread, frame) = self.accs[rank].poll(&ring);
+                progressed |= nread > 0;
+                if let Some(bytes) = frame {
+                    done[rank] = true;
+                    progressed = true;
+                    match codec::decode_reply(&bytes) {
+                        Ok(Reply::Done { frames, state, report, .. }) => {
+                            out.frames[rank] = frames;
+                            out.states[rank] = state;
+                            out.reports[rank] = report;
+                        }
+                        Ok(Reply::Panicked { msg, .. }) => {
+                            merge_root_panic(&mut root, format!("rank {rank} panicked: {msg}"));
+                        }
+                        Err(e) => {
+                            merge_root_panic(
+                                &mut root,
+                                format!("rank {rank} sent a malformed reply: {e}"),
+                            );
+                        }
+                    }
+                    continue;
+                }
+                self.check_death(rank);
+                if nread == 0 {
+                    if let Some(msg) = &self.dead_msgs[rank] {
+                        // reply ring fully drained and the worker is
+                        // gone: it died without replying. Close its
+                        // outgoing data rings so peers blocked on it
+                        // cascade out instead of spinning forever.
+                        done[rank] = true;
+                        progressed = true;
+                        merge_root_panic(&mut root, msg.clone());
+                        self.shm
+                            .close_outgoing(u32::try_from(rank).expect("rank fits u32"));
+                    }
+                }
+            }
+            if done.iter().all(|d| *d) {
+                break;
+            }
+            if let Some(ms) = self.watchdog_timeout_ms {
+                // WallStopwatch only accumulates across stop(): tick it
+                sw.stop();
+                sw.start();
+                if sw.ns() / 1_000_000 >= ms {
+                    let stuck: Vec<String> = done
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, d)| !**d)
+                        .map(|(r, _)| format!("rank {r}"))
+                        .collect();
+                    merge_root_panic(
+                        &mut root,
+                        format!("watchdog: no reply within {ms} ms from {}", stuck.join(", ")),
+                    );
+                    break;
+                }
+            }
+            if progressed {
+                backoff.reset();
+            } else {
+                backoff.snooze();
+            }
+        }
+        match root {
+            None => Ok(out),
+            Some(msg) => {
+                self.poisoned = Some(msg.clone());
+                Err(format!("virtual cluster poisoned: {msg}"))
+            }
+        }
+    }
+
+    /// Kill and reap every worker, reset the rings (fault cells
+    /// survive), and fork a fresh generation from the parent-side
+    /// state. The session layer restores dynamic state from its last
+    /// auto-checkpoint afterwards.
+    pub fn recover(&mut self) {
+        for pid in &mut self.pids {
+            if *pid != 0 {
+                shm::kill_worker(*pid);
+                shm::wait_reap(*pid);
+                *pid = 0;
+            }
+        }
+        self.shm.reset_rings();
+        self.fork_all();
+        self.poisoned = None;
+    }
+}
+
+impl Drop for ProcPool {
+    /// Unconditional SIGKILL + reap: worker processes idle in their
+    /// command loops and carry nothing worth flushing (all durable
+    /// state lives in checkpoints on the coordinator side).
+    fn drop(&mut self) {
+        for pid in &mut self.pids {
+            if *pid != 0 {
+                shm::kill_worker(*pid);
+                shm::wait_reap(*pid);
+                *pid = 0;
+            }
+        }
+    }
+}
+
+/// Render a `waitpid` status into the root-cause message. Neither form
+/// contains "hung up", so a real death always overrides cascade panics
+/// in [`merge_root_panic`].
+fn death_message(rank: usize, status: i32) -> String {
+    let sig = status & 0x7f;
+    if sig != 0 {
+        format!("rank {rank} worker process killed by signal {sig}")
+    } else {
+        format!("rank {rank} worker process died (exit status {})", (status >> 8) & 0xff)
+    }
+}
+
+/// The forked worker's main loop: the process-backed sibling of the
+/// thread pool's `worker`. Never returns — every exit path goes
+/// through `exit_now` (a forked child must not unwind into the
+/// parent's stack frames or run the parent's destructors).
+///
+/// Exit codes: 0 clean (closed command ring / `Shutdown`), 101 injected
+/// hard death (`FaultMode::Die` — no hang-up, no reply: the parent
+/// must prove it can diagnose silence), 102 after a panic reply, 103
+/// malformed command frame (protocol bug).
+fn worker_process(rank: u32, proc: &mut RankProcess, shm: &ShmCluster, init_stats: CommStats) -> ! {
+    // the coordinator reports panics from the reply frame; the default
+    // hook would interleave every child's backtrace on shared stderr
+    std::panic::set_hook(Box::new(|_| {}));
+    proc.set_faults_fired(shm.fault_fired(rank));
+    let mut comm =
+        RankComm::from_transport_with_stats(Box::new(shm.transport(rank)), init_stats);
+    let cmd_ring = shm.cmd_ring(rank);
+    let reply_ring = shm.reply_ring(rank);
+    let mut acc = FrameAcc::new();
+    loop {
+        // blocking read of the next command frame
+        let frame = {
+            let mut backoff = Backoff::new();
+            loop {
+                let (n, frame) = acc.poll(&cmd_ring);
+                if let Some(f) = frame {
+                    break f;
+                }
+                if n > 0 {
+                    backoff.reset();
+                    continue;
+                }
+                if cmd_ring.is_closed() && !acc.mid_frame() {
+                    shm::exit_now(0);
+                }
+                backoff.snooze();
+            }
+        };
+        let cmd = match codec::decode_command(&frame) {
+            Ok(cmd) => cmd,
+            Err(_) => shm::exit_now(103),
+        };
+        let shutdown = matches!(cmd, Command::Shutdown);
+        let result =
+            catch_unwind(AssertUnwindSafe(|| execute_command(cmd, rank, &mut *proc, &mut comm)));
+        match result {
+            Ok(out) => {
+                // publish the fault-fire count after EVERY command so a
+                // later re-fork (recovery) seeds the spent budget
+                shm.set_fault_fired(rank, proc.faults_fired());
+                if shutdown {
+                    shm::exit_now(0);
+                }
+                match out.reply_fault {
+                    Some(FaultMode::Hang) => loop {
+                        // never reply, never exit: the watchdog must
+                        // diagnose this rank by its silence
+                        std::thread::sleep(Duration::from_secs(3600));
+                    },
+                    Some(FaultMode::DelayReplyMs(ms)) => {
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                    Some(FaultMode::Panic | FaultMode::Die) | None => {}
+                }
+                shm::write_frame(&reply_ring, &codec::encode_done(rank, &out));
+            }
+            Err(payload) => {
+                shm.set_fault_fired(rank, proc.faults_fired());
+                let msg = panic_message(&*payload);
+                if msg.contains(DIE_MARKER) {
+                    // hard death: no hang-up, no reply — the parent
+                    // must diagnose this through waitpid alone
+                    shm::exit_now(101);
+                }
+                // close outgoing rings FIRST so peers blocked on this
+                // rank cascade instead of deadlocking, then report
+                comm.hang_up();
+                shm::write_frame(&reply_ring, &codec::encode_panicked(rank, &msg));
+                shm::exit_now(102);
+            }
+        }
+    }
+}
+
+/// Frame payload codecs for the command/reply protocol, over the
+/// checkpoint wire primitives (little-endian, like everything else
+/// that crosses a rank boundary here).
+mod codec {
+    use crate::checkpoint::codec::{CheckpointError, Reader, Writer};
+    use crate::checkpoint::RankState;
+    use crate::config::ExternalParams;
+    use crate::engine::metrics::PHASES;
+
+    use super::super::executor::{CmdOutcome, Command, ObserveFrame, Reply};
+
+    pub(super) fn encode_command(cmd: &Command) -> Vec<u8> {
+        let mut w = Writer::new();
+        match cmd {
+            Command::Run { step0, steps, observe } => {
+                w.put_u8(0);
+                w.put_u64(*step0);
+                w.put_u64(*steps);
+                w.put_u8(u8::from(*observe));
+            }
+            Command::Probe => w.put_u8(1),
+            Command::Reset => w.put_u8(2),
+            Command::SetExternal { area, external } => {
+                w.put_u8(3);
+                w.put_u8(u8::from(area.is_some()));
+                w.put_u32(area.unwrap_or(0));
+                w.put_u32(external.synapses_per_neuron);
+                w.put_f64(external.rate_hz);
+            }
+            Command::Snapshot => w.put_u8(4),
+            Command::Restore { state, rebase_delta } => {
+                w.put_u8(5);
+                w.put_u64(*rebase_delta);
+                state.encode_into(&mut w);
+            }
+            Command::Shutdown => w.put_u8(6),
+            Command::Report => w.put_u8(7),
+        }
+        w.into_bytes()
+    }
+
+    pub(super) fn decode_command(bytes: &[u8]) -> Result<Command, CheckpointError> {
+        let mut r = Reader::new(bytes);
+        let cmd = match r.take_u8()? {
+            0 => Command::Run {
+                step0: r.take_u64()?,
+                steps: r.take_u64()?,
+                observe: r.take_u8()? != 0,
+            },
+            1 => Command::Probe,
+            2 => Command::Reset,
+            3 => {
+                let has_area = r.take_u8()? != 0;
+                let area_idx = r.take_u32()?;
+                let external = ExternalParams {
+                    synapses_per_neuron: r.take_u32()?,
+                    rate_hz: r.take_f64()?,
+                };
+                Command::SetExternal { area: has_area.then_some(area_idx), external }
+            }
+            4 => Command::Snapshot,
+            5 => {
+                let rebase_delta = r.take_u64()?;
+                let state = Box::new(RankState::decode_from(&mut r)?);
+                Command::Restore { state, rebase_delta }
+            }
+            6 => Command::Shutdown,
+            7 => Command::Report,
+            t => {
+                return Err(CheckpointError::Malformed(format!("unknown command tag {t}")));
+            }
+        };
+        r.expect_end()?;
+        Ok(cmd)
+    }
+
+    fn put_frame(w: &mut Writer, f: &ObserveFrame) {
+        w.put_u32(u32::try_from(f.col_spikes.len()).expect("column count fits u32"));
+        for &c in &f.col_spikes {
+            w.put_u32(c);
+        }
+        for &ns in &f.phase_ns {
+            w.put_u64(ns);
+        }
+    }
+
+    fn take_frame(r: &mut Reader<'_>) -> Result<ObserveFrame, CheckpointError> {
+        let n = r.take_u32()?;
+        let mut col_spikes = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            col_spikes.push(r.take_u32()?);
+        }
+        let mut phase_ns = [0u64; PHASES.len()];
+        for slot in &mut phase_ns {
+            *slot = r.take_u64()?;
+        }
+        Ok(ObserveFrame { col_spikes, phase_ns })
+    }
+
+    pub(super) fn encode_done(rank: u32, out: &CmdOutcome) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_u8(0);
+        w.put_u32(rank);
+        w.put_u32(u32::try_from(out.frames.len()).expect("frame count fits u32"));
+        for f in &out.frames {
+            put_frame(&mut w, f);
+        }
+        match &out.state {
+            None => w.put_u8(0),
+            Some(s) => {
+                w.put_u8(1);
+                s.encode_into(&mut w);
+            }
+        }
+        match &out.report {
+            None => w.put_u8(0),
+            Some(v) => {
+                w.put_u8(1);
+                w.put_u32(u32::try_from(v.len()).expect("report length fits u32"));
+                for &x in v {
+                    w.put_u64(x);
+                }
+            }
+        }
+        w.into_bytes()
+    }
+
+    pub(super) fn encode_panicked(rank: u32, msg: &str) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_u8(1);
+        w.put_u32(rank);
+        w.put_u32(u32::try_from(msg.len()).expect("panic message fits u32"));
+        w.put_bytes(msg.as_bytes());
+        w.into_bytes()
+    }
+
+    pub(super) fn decode_reply(bytes: &[u8]) -> Result<Reply, CheckpointError> {
+        let mut r = Reader::new(bytes);
+        let reply = match r.take_u8()? {
+            0 => {
+                let rank = r.take_u32()?;
+                let n_frames = r.take_u32()?;
+                let mut frames = Vec::with_capacity(n_frames as usize);
+                for _ in 0..n_frames {
+                    frames.push(take_frame(&mut r)?);
+                }
+                let state = if r.take_u8()? != 0 {
+                    Some(Box::new(RankState::decode_from(&mut r)?))
+                } else {
+                    None
+                };
+                let report = if r.take_u8()? != 0 {
+                    let len = r.take_u32()?;
+                    let mut v = Vec::with_capacity(len as usize);
+                    for _ in 0..len {
+                        v.push(r.take_u64()?);
+                    }
+                    Some(v)
+                } else {
+                    None
+                };
+                Reply::Done { rank, frames, state, report }
+            }
+            1 => {
+                let rank = r.take_u32()?;
+                let len = r.take_u32()?;
+                let msg = String::from_utf8_lossy(r.take_bytes(len as usize)?).into_owned();
+                Reply::Panicked { rank, msg }
+            }
+            t => {
+                return Err(CheckpointError::Malformed(format!("unknown reply tag {t}")));
+            }
+        };
+        r.expect_end()?;
+        Ok(reply)
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn command_frames_roundtrip() {
+            let cases = [
+                Command::Run { step0: 7, steps: 40, observe: true },
+                Command::Probe,
+                Command::Reset,
+                Command::SetExternal {
+                    area: Some(3),
+                    external: ExternalParams { synapses_per_neuron: 10, rate_hz: 2.5 },
+                },
+                Command::SetExternal {
+                    area: None,
+                    external: ExternalParams { synapses_per_neuron: 420, rate_hz: 3.0 },
+                },
+                Command::Snapshot,
+                Command::Shutdown,
+                Command::Report,
+            ];
+            for cmd in cases {
+                let bytes = encode_command(&cmd);
+                let back = decode_command(&bytes).expect("roundtrip decodes");
+                assert_eq!(format!("{cmd:?}"), format!("{back:?}"));
+            }
+        }
+
+        #[test]
+        fn reply_frames_roundtrip() {
+            let out = CmdOutcome {
+                frames: vec![
+                    ObserveFrame { col_spikes: vec![1, 0, 4], phase_ns: [9; PHASES.len()] },
+                    ObserveFrame { col_spikes: vec![2, 2, 2], phase_ns: [1; PHASES.len()] },
+                ],
+                state: None,
+                report: Some(vec![5, 6, 7]),
+                reply_fault: None,
+            };
+            let bytes = encode_done(3, &out);
+            match decode_reply(&bytes).expect("decodes") {
+                Reply::Done { rank, frames, state, report } => {
+                    assert_eq!(rank, 3);
+                    assert_eq!(frames.len(), 2);
+                    assert_eq!(frames[0].col_spikes, vec![1, 0, 4]);
+                    assert_eq!(frames[1].phase_ns, [1; PHASES.len()]);
+                    assert!(state.is_none());
+                    assert_eq!(report, Some(vec![5, 6, 7]));
+                }
+                Reply::Panicked { .. } => panic!("wrong reply variant"),
+            }
+
+            let bytes = encode_panicked(1, "rank 1 panicked: boom");
+            match decode_reply(&bytes).expect("decodes") {
+                Reply::Panicked { rank, msg } => {
+                    assert_eq!(rank, 1);
+                    assert_eq!(msg, "rank 1 panicked: boom");
+                }
+                Reply::Done { .. } => panic!("wrong reply variant"),
+            }
+        }
+
+        #[test]
+        fn malformed_frames_error_instead_of_panicking() {
+            assert!(decode_command(&[99]).is_err());
+            assert!(decode_reply(&[42]).is_err());
+            assert!(decode_command(&[]).is_err());
+            // trailing garbage is a protocol error, not silently ignored
+            let mut bytes = encode_command(&Command::Probe);
+            bytes.push(0);
+            assert!(decode_command(&bytes).is_err());
+        }
+    }
+}

@@ -30,6 +30,7 @@ use std::time::Duration;
 use crate::checkpoint::{CheckpointImage, RankState};
 use crate::config::{
     AreaParams, ExternalParams, GridParams, ProjectionParams, SimConfig, Solver,
+    TransportKind,
 };
 use crate::connectivity::kernel::ConnectivityKernel;
 use crate::coordinator::executor::{Executor, ObserveFrame};
@@ -210,6 +211,23 @@ impl SimulationBuilder {
         self
     }
 
+    /// Which rank transport carries the collectives: threads over the
+    /// in-process channel matrix (default) or forked worker processes
+    /// over shared-memory rings (see docs/TRANSPORT.md). An explicit
+    /// choice here overrides the `DPSNN_TRANSPORT` environment
+    /// variable.
+    pub fn transport(mut self, transport: crate::config::TransportKind) -> Self {
+        self.cfg.transport = Some(transport);
+        self
+    }
+
+    /// Ranks per virtual node for the construction-phase hierarchical
+    /// Alltoallv (1 = flat exchange; results are bit-identical).
+    pub fn ranks_per_node(mut self, ranks_per_node: u32) -> Self {
+        self.cfg.ranks_per_node = ranks_per_node;
+        self
+    }
+
     pub fn plasticity(mut self, stdp: StdpParams) -> Self {
         self.cfg.plasticity = true;
         self.opts.stdp = stdp;
@@ -360,12 +378,24 @@ impl Network {
                  (requires the vendored `xla` crate) or use the event-driven solver"
                 .to_string());
         }
+        let transport = cfg.effective_transport();
+        if transport == TransportKind::Shm && cfg.solver == Solver::Xla {
+            // validate() rejects the explicit combination; this catches
+            // the DPSNN_TRANSPORT environment default as well
+            return Err("transport \"shm\" is incompatible with solver \"xla\": the \
+                 PJRT client does not survive fork(); run the XLA solver on the \
+                 channel transport"
+                .to_string());
+        }
         let scope = PeakScope::begin();
         let atlas = cfg.atlas();
         let ncols = atlas.columns() as usize;
         let pairs = construct_pairs(cfg, opts);
         let rank_columns = pairs.iter().map(|(p, _)| p.my_columns().to_vec()).collect();
-        let exec = Executor::launch(pairs, opts.watchdog_timeout_ms);
+        let exec = match transport {
+            TransportKind::Channel => Executor::launch(pairs, opts.watchdog_timeout_ms),
+            TransportKind::Shm => Executor::launch_procs(pairs, opts.watchdog_timeout_ms),
+        };
         let construction_peak = scope.peak_delta();
         Ok(Network {
             cfg: cfg.clone(),
@@ -431,7 +461,7 @@ impl Network {
 
     /// Synapses resident across all ranks after construction.
     pub fn synapses(&self) -> u64 {
-        self.exec.with_slots(|slot| slot.proc.store().synapse_count()).iter().sum()
+        self.exec.with_procs(|proc| proc.store().synapse_count()).iter().sum()
     }
 
     /// When a rank has panicked, the root panic message; the network

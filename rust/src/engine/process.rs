@@ -65,6 +65,28 @@ pub struct WireSpike {
 impl Wire for WireSpike {
     /// AER record: id + timestamp.
     const WIRE_SIZE: usize = 8;
+    fn write_le(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.gid.to_le_bytes());
+        out.extend_from_slice(&self.t_us.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        WireSpike {
+            gid: u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]),
+            t_us: u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]),
+        }
+    }
+}
+
+impl crate::mpi::SpikeRecord for WireSpike {
+    fn gid(&self) -> u32 {
+        self.gid
+    }
+    fn t_us(&self) -> u32 {
+        self.t_us
+    }
+    fn from_parts(gid: u32, t_us: u32) -> Self {
+        WireSpike { gid, t_us }
+    }
 }
 
 /// A spike emitted by a local neuron, kept in rank-local index form.
@@ -100,12 +122,23 @@ pub enum FaultPhase {
     StepEnd,
 }
 
+/// Panic-message marker for [`FaultMode::Die`]: both executor backends
+/// recognise it and turn the panic into a worker death instead of a
+/// normal panic reply.
+pub(crate) const DIE_MARKER: &str = "injected fault: worker dies";
+
 /// What an injected fault does when it fires.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FaultMode {
     /// Panic the worker thread: exercises executor poisoning and crash
     /// recovery.
     Panic,
+    /// Kill the worker outright. On the thread backend the worker
+    /// vanishes without replying (peers cascade, the watchdog names
+    /// the dead rank); on the process backend the child `_exit`s
+    /// without closing its rings — a hard death the parent detects
+    /// through `waitpid`, not through a panic message.
+    Die,
     /// Never reply to the in-flight command: exercises the collect
     /// watchdog. Fires at the end of the command span — a mid-step hang
     /// would deadlock every peer inside the next collective, and the
@@ -507,7 +540,11 @@ impl RankProcess {
             (0..ranks).filter(|&r| incoming_counts[r as usize] > 0).collect();
 
         // --- construction step 2: synapse payloads (MPI_Alltoallv) ---
-        let received = comm.alltoallv(CommClass::InitPayload, buckets);
+        // with ranks_per_node > 1 this is the paper's two-step
+        // hierarchical exchange (gather to node leaders, leader-to-
+        // leader transfer, scatter); bit-identical to the flat path
+        let received =
+            comm.alltoallv_hier(CommClass::InitPayload, buckets, cfg.ranks_per_node);
         let total_in: usize = received.iter().map(Vec::len).sum();
         let mut all_in = Vec::with_capacity(total_in);
         for r in received {
@@ -825,14 +862,32 @@ impl RankProcess {
 
         // ---- Exchange: two-step subset delivery (§II-E) or naive ----
         self.metrics.start(Phase::Exchange);
+        // Payloads ride the packed wire format (mpi::wire): sorted
+        // per-destination runs with delta-encoded gids and a per-step
+        // timestamp base replace the fixed 8-byte AER records. Sorting
+        // is bit-identity-safe — see the grouper total-order note in
+        // Dynamics below. CommStats therefore records real packed
+        // bytes, which is what the perfmodel validation measures.
+        let unpack = |(src, bytes): (u32, Vec<u8>)| {
+            let mut v: Vec<WireSpike> = Vec::new();
+            crate::mpi::unpack_spikes(&bytes, &mut v);
+            (src, v)
+        };
         let received: Vec<(u32, Vec<WireSpike>)> = if self.opts.naive_delivery {
             // ablation: full Alltoallv every step, no counters
-            let sends: Vec<Vec<WireSpike>> =
-                self.pack_bufs.iter_mut().map(std::mem::take).collect();
-            comm.alltoallv(CommClass::SpikePayload, sends)
+            let sends: Vec<Vec<u8>> = self
+                .pack_bufs
+                .iter_mut()
+                .map(|b| {
+                    let bytes = crate::mpi::pack_spikes(b);
+                    b.clear();
+                    bytes
+                })
+                .collect();
+            comm.alltoallv_bytes(CommClass::SpikePayload, sends)
                 .into_iter()
                 .enumerate()
-                .map(|(r, v)| (u32::try_from(r).expect("rank count fits u32"), v))
+                .map(|(r, bytes)| unpack((u32::try_from(r).expect("rank count fits u32"), bytes)))
                 .collect()
         } else {
             // step 1: single-word spike counters to the known subset
@@ -844,10 +899,13 @@ impl RankProcess {
             let recv_counts =
                 comm.alltoallv_subset(CommClass::SpikeCounts, count_sends, &self.recv_from);
             // step 2: payloads only where counters are non-zero
-            let mut payload_sends: Vec<(u32, Vec<WireSpike>)> = Vec::new();
+            let mut payload_sends: Vec<(u32, Vec<u8>)> = Vec::new();
             for &r in &self.send_to {
-                if !self.pack_bufs[r as usize].is_empty() {
-                    payload_sends.push((r, std::mem::take(&mut self.pack_bufs[r as usize])));
+                let buf = &mut self.pack_bufs[r as usize];
+                if !buf.is_empty() {
+                    let bytes = crate::mpi::pack_spikes(buf);
+                    buf.clear();
+                    payload_sends.push((r, bytes));
                 }
             }
             let expect: Vec<u32> = recv_counts
@@ -855,7 +913,10 @@ impl RankProcess {
                 .filter(|(_, c)| c[0] > 0)
                 .map(|(src, _)| *src)
                 .collect();
-            comm.alltoallv_subset(CommClass::SpikePayload, payload_sends, &expect)
+            comm.alltoallv_subset_bytes(CommClass::SpikePayload, payload_sends, &expect)
+                .into_iter()
+                .map(unpack)
+                .collect()
         };
         self.metrics.stop(Phase::Exchange);
         self.maybe_fault(step, FaultPhase::AfterExchange);
@@ -973,10 +1034,28 @@ impl RankProcess {
             FaultMode::Panic => {
                 panic!("injected fault: rank {} at step {} ({phase:?})", f.rank, f.step)
             }
+            FaultMode::Die => {
+                panic!("{DIE_MARKER}: rank {} at step {} ({phase:?})", f.rank, f.step)
+            }
             mode @ (FaultMode::Hang | FaultMode::DelayReplyMs(_)) => {
                 self.pending_reply_fault = Some(mode);
             }
         }
+    }
+
+    /// How many times the injected fault has fired so far. The process
+    /// backend mirrors this counter through a shared-memory fault cell
+    /// so a re-forked worker does not re-fire a `max_fires`-exhausted
+    /// fault (thread workers keep it implicitly — they share the
+    /// coordinator's address space).
+    pub fn faults_fired(&self) -> u32 {
+        self.faults_fired
+    }
+
+    /// Seed the fault-fire counter (a freshly forked worker restores it
+    /// from its shared-memory fault cell before serving commands).
+    pub fn set_faults_fired(&mut self, fires: u32) {
+        self.faults_fired = fires;
     }
 
     /// Consume a reply-time fault tripped during this command span (the
@@ -1459,8 +1538,15 @@ impl RankProcess {
     /// Snapshot this rank's report (non-consuming: sessions call this
     /// after any number of steps and keep stepping afterwards).
     pub fn report(&mut self, stats: &crate::mpi::CommStats) -> RankReport {
+        RankReport::from_wire(&self.report_wire(stats))
+    }
+
+    /// The report in its `u64` wire form — what the process backend
+    /// ships over the reply ring (the coordinator rebuilds the
+    /// [`RankReport`] with `from_wire` on its side).
+    pub fn report_wire(&mut self, stats: &crate::mpi::CommStats) -> Vec<u64> {
         self.metrics.resident_bytes = self.resident_bytes_now();
-        RankReport::from_wire(&self.metrics.to_wire(stats))
+        self.metrics.to_wire(stats)
     }
 
     /// Wrap up: final metrics with comm stats folded in.

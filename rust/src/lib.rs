@@ -65,20 +65,21 @@
 //! See `DESIGN.md` for the system inventory and the experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 
-// The crate is `unsafe`-free except two audited islands
-// (util/memtrack.rs, util/timer.rs — see docs/LINTS.md); scoped
-// allows on exactly those `mod` items open them up.
+// The crate is `unsafe`-free except three audited islands
+// (util/memtrack.rs, util/timer.rs, mpi/shm.rs — see docs/LINTS.md
+// and docs/TRANSPORT.md); scoped allows on exactly those `mod` items
+// open them up.
 #![deny(unsafe_code)]
 // The clippy cast lints are set to `warn` in Cargo.toml so every
 // target sees them. They used to be silenced crate-wide here; the
 // blanket allows are gone, replaced by per-`mod` scoped allows on the
-// modules not yet audited (below) — `checkpoint`, `coordinator`,
-// `stimulus`, `engine` and `synapse` are clippy-cast-clean with at
-// most fn-scoped, justified allows. The narrowing casts that can
-// actually corrupt configs or wire ids are additionally held to
-// `dpsnn lint`'s lossy-cast rule; docs/LINTS.md tracks flipping the
-// remaining modules so the scoped allows below keep shrinking.
-#[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::cast_possible_wrap)]
+// modules not yet audited (below) — `checkpoint`, `config`,
+// `coordinator`, `lint`, `neuron`, `repro`, `stimulus`, `engine` and
+// `synapse` are clippy-cast-clean with at most fn-scoped, justified
+// allows. The narrowing casts that can actually corrupt configs or
+// wire ids are additionally held to `dpsnn lint`'s lossy-cast rule;
+// docs/LINTS.md tracks flipping the remaining modules so the scoped
+// allows below keep shrinking.
 pub mod config;
 #[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::cast_possible_wrap)]
 pub mod geometry;
@@ -96,7 +97,6 @@ pub mod mpi;
 
 #[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::cast_possible_wrap)]
 pub mod connectivity;
-#[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::cast_possible_wrap)]
 pub mod neuron;
 pub mod stimulus;
 pub mod synapse;
@@ -114,13 +114,12 @@ pub mod perfmodel;
 
 #[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::cast_possible_wrap)]
 pub mod bench_harness;
-#[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::cast_possible_wrap)]
 pub mod lint;
-#[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::cast_possible_wrap)]
 pub mod repro;
 
 pub use config::{
     AreaParams, DynamicsBackend, ExternalOverride, ProjectionParams, SimConfig, Stride,
+    TransportKind,
 };
 pub use connectivity::ConnectivityKernel;
 #[allow(deprecated)]

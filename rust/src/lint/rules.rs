@@ -11,7 +11,7 @@
 //! * `panic-discipline` — bare `.unwrap()` in worker-thread code,
 //!   where a panic must carry a message the poisoning machinery can
 //!   surface to the coordinator;
-//! * `unsafe-audit` — `unsafe` outside the two audited islands, or
+//! * `unsafe-audit` — `unsafe` outside the three audited islands, or
 //!   inside them without a `SAFETY:` justification.
 //!
 //! Findings in `#[cfg(test)] mod` blocks are skipped. Legitimate
@@ -51,17 +51,25 @@ const NONDET_IDENTS: [&str; 7] = [
 ];
 
 /// Files (or directory prefixes, ending in `/`) whose code runs on
-/// pool worker threads: a panic here is recovered by the executor's
-/// poisoning machinery, which can only surface the message the panic
-/// carries. `checkpoint/` is included because restore/rebase runs
-/// inside the worker dispatch closure.
-const WORKER_FILES: [&str; 4] =
-    ["checkpoint/", "coordinator/executor.rs", "engine/process.rs", "mpi/comm.rs"];
+/// pool worker threads or forked worker processes: a panic here is
+/// recovered by the executor's poisoning machinery, which can only
+/// surface the message the panic carries. `checkpoint/` is included
+/// because restore/rebase runs inside the worker dispatch closure;
+/// `mpi/` because the whole substrate (collectives, shm rings, spike
+/// packing) executes on the rank side of the command dispatch.
+const WORKER_FILES: [&str; 5] = [
+    "checkpoint/",
+    "coordinator/executor.rs",
+    "coordinator/procpool.rs",
+    "engine/process.rs",
+    "mpi/",
+];
 
 /// The only modules allowed to contain `unsafe` (enforced crate-wide
 /// by `#![deny(unsafe_code)]` + scoped allows; re-checked here so the
-/// island list lives in one greppable place).
-const UNSAFE_ISLANDS: [&str; 2] = ["util/memtrack.rs", "util/timer.rs"];
+/// island list lives in one greppable place). `mpi/shm.rs` joined when
+/// the shared-memory transport brought mmap/fork into the tree.
+const UNSAFE_ISLANDS: [&str; 3] = ["mpi/shm.rs", "util/memtrack.rs", "util/timer.rs"];
 
 /// A lint rule (or the meta rule for annotation hygiene).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -392,7 +400,7 @@ fn unsafe_audit(file: &str, toks: &[Tok<'_>], comments: &[Comment<'_>], out: &mu
                 line: t.line,
                 rule: Rule::UnsafeAudit,
                 message: "unsafe code outside the audited islands \
-                          (util/memtrack.rs, util/timer.rs)"
+                          (mpi/shm.rs, util/memtrack.rs, util/timer.rs)"
                     .to_string(),
             });
         }
@@ -495,6 +503,13 @@ mod tests {
         // a sibling module whose name merely shares the prefix string
         // stem is NOT in scope (prefix must match path components)
         assert!(lint_source("checkpointing.rs", src).is_empty());
+        // the whole mpi/ substrate and the process pool run on the
+        // worker side of the command dispatch
+        for file in ["mpi/shm.rs", "mpi/wire.rs", "coordinator/procpool.rs"] {
+            let fs = lint_source(file, src);
+            assert_eq!(fs.len(), 1, "no panic-discipline finding for {file}: {fs:?}");
+            assert_eq!(fs[0].rule, Rule::PanicDiscipline);
+        }
     }
 
     #[test]
@@ -526,6 +541,12 @@ mod tests {
         // a SAFETY: comment within 3 lines justifies the block
         let src = "// SAFETY: delegates to System\nunsafe fn f() {}\n";
         assert!(lint_source("util/memtrack.rs", src).is_empty());
+        // the shm transport is the third island: same contract
+        let fs = lint_source("mpi/shm.rs", "unsafe fn f() {}\n");
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, Rule::UnsafeAudit);
+        let src = "// SAFETY: fork() checked for the child branch\nunsafe fn f() {}\n";
+        assert!(lint_source("mpi/shm.rs", src).is_empty());
     }
 
     #[test]

@@ -33,6 +33,10 @@ fn commands() -> Vec<Command> {
             .opt("solver", "neuron solver: event|xla")
             .opt("backend", "dynamics backend: scalar|soa|batch (default soa)")
             .opt("mapping", "column mapping: block|roundrobin")
+            .opt("transport", "rank transport: channel|shm (default channel; \
+                 the DPSNN_TRANSPORT env var sets the default, the flag wins)")
+            .opt("ranks-per-node", "ranks per virtual node for the hierarchical \
+                 construction exchange (default 1 = flat)")
             .opt("checkpoint-every-steps", "auto-checkpoint cadence for crash recovery (0 = off)")
             .opt("watchdog-timeout-ms", "per-reply deadline before a rank is declared hung (0 = off)")
             .flag("plasticity", "enable STDP")
@@ -43,6 +47,8 @@ fn commands() -> Vec<Command> {
             .opt_default("out", "BENCH.json", "output path for the JSON record")
             .opt("compare", "baseline BENCH.json: fail on >25% per-phase regression \
                  (a missing baseline file is seeded from this run)")
+            .flag("require-baseline", "with --compare: a missing baseline is an \
+                 error instead of being seeded from this run (CI mode)")
             .flag("quick", "reduced matrix (CI smoke / trajectory capture)"),
         Command::new("lint", "determinism & wire-safety static analysis (docs/LINTS.md)")
             .opt_default("root", "rust/src", "source root to lint")
@@ -115,6 +121,12 @@ fn parts_from_args(a: &Args) -> Result<(SimConfig, RunOptions), String> {
         cfg.backend = dpsnn::config::DynamicsBackend::parse(b)?;
     }
     cfg.plasticity = cfg.plasticity || a.has_flag("plasticity");
+    if let Some(t) = a.get("transport") {
+        cfg.transport = Some(dpsnn::config::TransportKind::parse(t)?);
+    }
+    if let Some(rpn) = a.get_parsed::<u32>("ranks-per-node")? {
+        cfg.ranks_per_node = rpn;
+    }
     cfg.validate()?;
     if let Some(m) = a.get("mapping") {
         opts.mapping = Mapping::parse(m)?;
@@ -234,6 +246,15 @@ fn cmd_bench(a: &Args) -> Result<(), String> {
             // loudly — overwriting a committed-but-unreadable baseline
             // would silently disarm the gate.
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                if a.has_flag("require-baseline") {
+                    // CI mode: a vanished baseline must fail loudly, not
+                    // quietly re-seed itself and report green
+                    return Err(format!(
+                        "baseline still unseeded: {base_path} does not exist. \
+                         Run `dpsnn bench --quick --out {base_path}` locally and \
+                         commit the result to arm the regression gate."
+                    ));
+                }
                 std::fs::write(base_path, report.to_json())
                     .map_err(|e| format!("seeding baseline {base_path}: {e}"))?;
                 eprintln!(

@@ -1,77 +1,158 @@
-//! In-process message-passing substrate ("virtual MPI").
+//! Message-passing substrate ("virtual MPI") with pluggable transports.
 //!
-//! The paper's DPSNN is a network of C++ processes over MPI; here each
-//! rank is an OS thread and the collectives move `Vec<T>` buffers through
-//! an R×R channel matrix. The semantics mirror the MPI calls the paper
-//! names:
+//! The paper's DPSNN is a network of C++ processes over MPI. Here the
+//! collectives are implemented once, generically, on top of a byte-level
+//! [`Transport`] trait with two backends:
+//!
+//! * **channel** ([`ChannelTransport`], the reference): each rank is an
+//!   OS thread and payloads move through an R×R `mpsc` channel matrix
+//!   inside one address space;
+//! * **shm** (`mpi::shm::ShmTransport`): each rank is a forked OS
+//!   process and payloads move through mmap'd fixed-capacity SPSC ring
+//!   buffers — the first backend that leaves the single address space.
+//!
+//! The collectives mirror the MPI calls the paper names:
 //!
 //! * [`RankComm::alltoall`]    — MPI_Alltoall, one fixed-size item/pair
 //! * [`RankComm::alltoallv`]   — MPI_Alltoallv, variable payloads
 //! * [`RankComm::alltoallv_subset`] — the paper's two-step refinement:
 //!   payloads only flow between pairs that actually communicate; each
 //!   rank knows (from step 1 counters) exactly whom to expect.
+//! * [`RankComm::alltoallv_hier`] — the paper's two-step *hierarchical*
+//!   Alltoallv for the construction exchange: intra-node gather to a
+//!   leader, inter-node exchange between leaders, intra-node scatter.
 //! * [`RankComm::barrier`], [`RankComm::gather_to_root`]
 //!
-//! Every send is recorded in [`CommStats`] (messages + bytes per protocol
-//! class) — those exact counts feed the virtual-cluster performance
-//! model. Buffers move by ownership, so the substrate itself adds no
-//! copies to the hot path.
+//! Every payload is serialized to little-endian bytes via [`Wire`]
+//! before it crosses a transport, so both backends ship the identical
+//! byte stream and [`CommStats`] records what a real wire would carry
+//! (messages + bytes per protocol class) — those exact counts feed the
+//! virtual-cluster performance model.
 //!
 //! ## Lifecycle (persistent executor)
 //!
 //! A [`RankComm`] is created once per rank (at `Network` build time) and
-//! lives for the whole cluster lifetime — it is *not* tied to any thread:
-//! the coordinator's persistent executor moves it into a long-lived
-//! worker thread and reuses it across every `Run`/`Reset` command. Each
-//! communicator *owns* the sender endpoints of its outgoing channels, so
-//! dropping it (or calling [`RankComm::hang_up`]) disconnects every
-//! channel it feeds: peers blocked in `recv` on a dead rank wake with a
-//! "sender rank hung up" panic instead of deadlocking the per-step
-//! collectives. The executor relies on exactly that cascade to drain a
-//! cluster where one rank panicked mid-step (see
-//! `coordinator::executor`).
+//! lives for the whole cluster lifetime — it is *not* tied to any
+//! thread: the coordinator's persistent executor moves it into a
+//! long-lived worker and reuses it across every `Run`/`Reset` command.
+//! Each communicator *owns* the send side of its outgoing links, so
+//! calling [`RankComm::hang_up`] disconnects every link it feeds: peers
+//! blocked receiving from a dead rank wake with a "sender rank hung up"
+//! panic instead of deadlocking the per-step collectives. The executor
+//! relies on exactly that cascade to drain a cluster where one rank
+//! panicked mid-step (see `coordinator::executor`).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier, Mutex};
 
 use crate::mpi::stats::{CommClass, CommStats};
 
-/// Type-erased buffer moving through a virtual-wire channel.
-type Mailbox = Box<dyn std::any::Any + Send>;
-
-/// Anything that can cross the virtual wire. In-process we move typed
-/// buffers directly; `WIRE_SIZE` is the serialized size MPI would ship,
-/// used for byte accounting.
+/// Anything that can cross the wire. `WIRE_SIZE` is the serialized
+/// size; `write_le`/`read_le` define the little-endian byte form that
+/// both transports ship (and that `CommStats` counts).
 pub trait Wire: Send + 'static {
     const WIRE_SIZE: usize;
+    /// Append exactly `WIRE_SIZE` little-endian bytes.
+    fn write_le(&self, out: &mut Vec<u8>);
+    /// Decode from exactly `WIRE_SIZE` little-endian bytes.
+    fn read_le(bytes: &[u8]) -> Self;
 }
 
 impl Wire for u8 {
     const WIRE_SIZE: usize = 1;
+    fn write_le(&self, out: &mut Vec<u8>) {
+        out.push(*self);
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        bytes[0]
+    }
 }
 impl Wire for u32 {
     const WIRE_SIZE: usize = 4;
+    fn write_le(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
 }
 impl Wire for u64 {
     const WIRE_SIZE: usize = 8;
+    fn write_le(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        u64::from_le_bytes([
+            bytes[0], bytes[1], bytes[2], bytes[3], bytes[4], bytes[5], bytes[6], bytes[7],
+        ])
+    }
 }
 impl Wire for f64 {
     const WIRE_SIZE: usize = 8;
+    fn write_le(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_bits().to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        f64::from_bits(u64::read_le(bytes))
+    }
 }
 
-/// Communicator factory: builds the channel matrix for `ranks` ranks.
+/// Serialize a typed buffer to its little-endian wire form.
+pub(crate) fn encode_buf<T: Wire>(buf: &[T]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(buf.len() * T::WIRE_SIZE);
+    for x in buf {
+        x.write_le(&mut out);
+    }
+    out
+}
+
+/// Decode a wire buffer back into typed elements.
+pub(crate) fn decode_buf<T: Wire>(bytes: &[u8]) -> Vec<T> {
+    assert!(
+        bytes.len() % T::WIRE_SIZE == 0,
+        "wire buffer of {} bytes is not a whole number of {}-byte records",
+        bytes.len(),
+        T::WIRE_SIZE
+    );
+    bytes.chunks_exact(T::WIRE_SIZE).map(T::read_le).collect()
+}
+
+/// Byte-level rank endpoint: the one surface a transport backend must
+/// implement. Collectives, serialization, and stats all live above it
+/// (in [`RankComm`]), so a backend only moves opaque byte buffers.
 ///
-/// Type-erased mailboxes: each (src, dst) pair has one channel carrying
-/// boxed buffers; `RankComm` downcasts on receive. One matrix serves all
-/// message types. The cluster holds the *receiver* side of every
+/// `exchange` is the single data-plane primitive: deliver one buffer to
+/// each listed destination and return one buffer from each listed
+/// source (in `recv_from` order). Implementations MUST be deadlock-free
+/// for any payload size even when every rank sends simultaneously —
+/// the channel backend gets this from unbounded channels; the shm
+/// backend runs a write-what-fits / drain-what-arrives progress loop
+/// over its fixed-capacity rings.
+pub trait Transport: Send {
+    fn rank(&self) -> u32;
+    fn ranks(&self) -> u32;
+    /// Combined scatter/gather of raw payloads. Self-sends are allowed
+    /// (and common). Panics with the load-bearing "sender rank {src}
+    /// hung up" message if a source hangs up before delivering.
+    fn exchange(&mut self, sends: Vec<(u32, Vec<u8>)>, recv_from: &[u32]) -> Vec<(u32, Vec<u8>)>;
+    /// Synchronize all ranks.
+    fn barrier(&mut self);
+    /// Close this rank's outgoing links. Peers blocked receiving from
+    /// this rank wake with a "sender rank hung up" panic — the
+    /// executor's panic-cascade mechanism.
+    fn hang_up(&mut self);
+}
+
+/// Communicator factory for the in-process channel backend: builds the
+/// R×R channel matrix. The cluster holds the *receiver* side of every
 /// channel; the sender side of row `r` is handed to rank `r`'s
-/// communicator exactly once, so the channels from a rank disconnect
-/// when its communicator dies (the executor's panic-cascade mechanism).
+/// endpoint exactly once, so the channels from a rank disconnect when
+/// its endpoint hangs up (the executor's panic-cascade mechanism).
 pub struct Cluster {
     ranks: u32,
     /// Sender rows, taken (once each) by [`Cluster::rank_comm`].
-    senders: Vec<Mutex<Option<Vec<Sender<Mailbox>>>>>,
-    receivers: Vec<Vec<Mutex<Receiver<Mailbox>>>>,
+    senders: Vec<Mutex<Option<Vec<Sender<Vec<u8>>>>>>,
+    receivers: Vec<Vec<Mutex<Receiver<Vec<u8>>>>>,
     barrier: Arc<Barrier>,
 }
 
@@ -99,8 +180,8 @@ impl Cluster {
         self.ranks
     }
 
-    /// Handle for one rank. Call exactly once per rank: the handle takes
-    /// ownership of the rank's sender endpoints.
+    /// Communicator for one rank. Call exactly once per rank: the
+    /// endpoint takes ownership of the rank's sender row.
     pub fn rank_comm(self: &Arc<Self>, rank: u32) -> RankComm {
         assert!(rank < self.ranks);
         let senders = self.senders[rank as usize]
@@ -108,27 +189,100 @@ impl Cluster {
             .expect("sender-row lock")
             .take()
             .expect("rank_comm called twice for the same rank");
-        RankComm { cluster: Arc::clone(self), rank, senders, stats: CommStats::default() }
+        let endpoint = ChannelTransport { cluster: Arc::clone(self), rank, senders };
+        RankComm::from_transport(Box::new(endpoint))
+    }
+}
+
+/// The in-process reference backend: rank = thread, link = unbounded
+/// mpsc channel. Buffers move by ownership, so beyond serialization the
+/// substrate adds no copies.
+pub struct ChannelTransport {
+    cluster: Arc<Cluster>,
+    rank: u32,
+    /// Outgoing channel per destination; emptied by `hang_up`.
+    senders: Vec<Sender<Vec<u8>>>,
+}
+
+impl ChannelTransport {
+    fn recv_one(&self, src: u32) -> Vec<u8> {
+        // a poisoned receiver lock can only come from this same rank
+        // panicking mid-recv earlier (each receiver is locked by its
+        // owning rank alone); the executor has already recorded that
+        // root cause, so recover the lock instead of masking it with a
+        // second, nameless panic
+        let rx = self.cluster.receivers[self.rank as usize][src as usize]
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        rx.recv().unwrap_or_else(|_| {
+            // the "hung up" phrase is load-bearing: the executor's
+            // collect() recognizes cascade panics by it (see
+            // coordinator::executor) and keeps the root cause on top
+            panic!("rank {}: sender rank {src} hung up", self.rank)
+        })
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    fn ranks(&self) -> u32 {
+        self.cluster.ranks
+    }
+
+    fn exchange(&mut self, sends: Vec<(u32, Vec<u8>)>, recv_from: &[u32]) -> Vec<(u32, Vec<u8>)> {
+        // channels are unbounded: all sends complete without blocking,
+        // then the receives drain in expect order — no deadlock window
+        for (dst, buf) in sends {
+            let tx = self
+                .senders
+                .get(dst as usize)
+                .expect("send after hang_up: this rank's communicator is closed");
+            tx.send(buf).expect("receiver rank hung up");
+        }
+        recv_from.iter().map(|&src| (src, self.recv_one(src))).collect()
+    }
+
+    fn barrier(&mut self) {
+        self.cluster.barrier.wait();
+    }
+
+    fn hang_up(&mut self) {
+        self.senders.clear();
     }
 }
 
 /// Per-rank communicator handle (not Clone: owns the rank's stats and
-/// the sender endpoints of all its outgoing channels).
+/// the send side of all its outgoing links). All collectives serialize
+/// through [`Wire`] and run on the byte-level [`Transport`] beneath.
 pub struct RankComm {
-    cluster: Arc<Cluster>,
-    rank: u32,
-    /// Outgoing channel per destination; emptied by [`hang_up`](Self::hang_up).
-    senders: Vec<Sender<Mailbox>>,
+    transport: Box<dyn Transport>,
     stats: CommStats,
 }
 
 impl RankComm {
+    /// Wrap a transport endpoint. Used by `Cluster::rank_comm` (channel
+    /// backend) and by the shm process pool when it hands forked
+    /// workers their ring endpoints.
+    pub fn from_transport(transport: Box<dyn Transport>) -> Self {
+        RankComm { transport, stats: CommStats::default() }
+    }
+
+    /// Wrap a transport endpoint, seeding previously accumulated stats
+    /// (the shm pool constructs over channels pre-fork, then carries
+    /// the construction-phase counts into the per-process comms).
+    pub fn from_transport_with_stats(transport: Box<dyn Transport>, stats: CommStats) -> Self {
+        RankComm { transport, stats }
+    }
+
     pub fn rank(&self) -> u32 {
-        self.rank
+        self.transport.rank()
     }
 
     pub fn ranks(&self) -> u32 {
-        self.cluster.ranks
+        self.transport.ranks()
     }
 
     pub fn stats(&self) -> &CommStats {
@@ -140,48 +294,28 @@ impl RankComm {
     }
 
     /// Synchronize all ranks.
-    pub fn barrier(&self) {
-        self.cluster.barrier.wait();
+    pub fn barrier(&mut self) {
+        self.transport.barrier();
     }
 
-    /// Drop this rank's sender endpoints, disconnecting every channel it
-    /// feeds. Peers blocked in `recv` on this rank wake with a "sender
-    /// rank hung up" panic instead of waiting forever — the executor
-    /// calls this from a panicking worker so the failure cascades
-    /// through the step collectives rather than deadlocking them.
+    /// Close this rank's outgoing links, waking peers blocked on it
+    /// with a "sender rank hung up" panic (see module docs).
     pub fn hang_up(&mut self) {
-        self.senders.clear();
+        self.transport.hang_up();
     }
 
-    fn send_raw<T: Wire>(&mut self, class: CommClass, dst: u32, buf: Vec<T>) {
-        let bytes = (buf.len() * T::WIRE_SIZE) as u64;
-        self.stats.record_send(class, dst == self.rank, bytes);
-        let tx = self
-            .senders
-            .get(dst as usize)
-            .expect("send after hang_up: this rank's communicator is closed");
-        tx.send(Box::new(buf)).expect("receiver rank hung up");
-    }
-
-    fn recv_raw<T: Wire>(&self, src: u32) -> Vec<T> {
-        // a poisoned receiver lock can only come from this same rank
-        // panicking mid-recv earlier (each receiver is locked by its
-        // owning rank alone); the executor has already recorded that
-        // root cause, so recover the lock instead of masking it with a
-        // second, nameless panic
-        let rx = self.cluster.receivers[self.rank as usize][src as usize]
-            .lock()
-            .unwrap_or_else(std::sync::PoisonError::into_inner);
-        let boxed = rx.recv().unwrap_or_else(|_| {
-            // the "hung up" phrase is load-bearing: the executor's
-            // collect() recognizes cascade panics by it (see
-            // coordinator::executor) and keeps the root cause on top
-            panic!("rank {}: sender rank {src} hung up", self.rank)
-        });
-        boxed.downcast::<Vec<T>>().map_or_else(
-            |_| panic!("rank {}: type confusion on virtual wire from rank {src}", self.rank),
-            |b| *b,
-        )
+    /// Record per-destination stats, then run the byte exchange.
+    fn exchange_recorded(
+        &mut self,
+        class: CommClass,
+        sends: Vec<(u32, Vec<u8>)>,
+        recv_from: &[u32],
+    ) -> Vec<(u32, Vec<u8>)> {
+        let me = self.rank();
+        for (dst, buf) in &sends {
+            self.stats.record_send(class, *dst == me, buf.len() as u64);
+        }
+        self.transport.exchange(sends, recv_from)
     }
 
     /// MPI_Alltoall: element `i` of `send` goes to rank `i`; returns the
@@ -189,32 +323,41 @@ impl RankComm {
     pub fn alltoall<T: Wire + Copy>(&mut self, class: CommClass, send: &[T]) -> Vec<T> {
         assert_eq!(send.len(), self.ranks() as usize, "alltoall needs one item per rank");
         self.stats.record_call(class);
-        for dst in 0..self.ranks() {
-            self.send_raw(class, dst, vec![send[dst as usize]]);
-        }
-        (0..self.ranks())
-            .map(|src| {
-                let v: Vec<T> = self.recv_raw(src);
-                debug_assert_eq!(v.len(), 1);
+        let sends = send
+            .iter()
+            .enumerate()
+            // lint: allow(lossy-cast, "enumerate index bounded by ranks: u32")
+            .map(|(dst, item)| (dst as u32, encode_buf(std::slice::from_ref(item))))
+            .collect();
+        let all: Vec<u32> = (0..self.ranks()).collect();
+        self.exchange_recorded(class, sends, &all)
+            .into_iter()
+            .map(|(src, bytes)| {
+                let v: Vec<T> = decode_buf(&bytes);
+                assert_eq!(v.len(), 1, "alltoall item from rank {src} is not one record");
                 v[0]
             })
             .collect()
     }
 
-    /// MPI_Alltoallv: buffer `i` goes to rank `i`; returns one buffer per
-    /// source rank. Buffers move by ownership (no serialization cost).
-    pub fn alltoallv<T: Wire>(
-        &mut self,
-        class: CommClass,
-        sends: Vec<Vec<T>>,
-    ) -> Vec<Vec<T>> {
+    /// MPI_Alltoallv: buffer `i` goes to rank `i`; returns one buffer
+    /// per source rank.
+    pub fn alltoallv<T: Wire>(&mut self, class: CommClass, sends: Vec<Vec<T>>) -> Vec<Vec<T>> {
+        self.alltoallv_bytes(class, sends.iter().map(|b| encode_buf(b)).collect())
+            .into_iter()
+            .map(|bytes| decode_buf(&bytes))
+            .collect()
+    }
+
+    /// MPI_Alltoallv over pre-serialized byte payloads (the spike path
+    /// packs its own wire format; this avoids a re-encode copy).
+    pub fn alltoallv_bytes(&mut self, class: CommClass, sends: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
         assert_eq!(sends.len(), self.ranks() as usize);
         self.stats.record_call(class);
-        for (dst, buf) in sends.into_iter().enumerate() {
-            let dst = u32::try_from(dst).expect("rank count fits u32");
-            self.send_raw(class, dst, buf);
-        }
-        (0..self.ranks()).map(|src| self.recv_raw(src)).collect()
+        // lint: allow(lossy-cast, "enumerate index bounded by ranks: u32")
+        let sends = sends.into_iter().enumerate().map(|(dst, b)| (dst as u32, b)).collect();
+        let all: Vec<u32> = (0..self.ranks()).collect();
+        self.exchange_recorded(class, sends, &all).into_iter().map(|(_, b)| b).collect()
     }
 
     /// The paper's simulation-phase refinement (§II-E): payloads flow only
@@ -227,24 +370,204 @@ impl RankComm {
         sends: Vec<(u32, Vec<T>)>,
         expect_from: &[u32],
     ) -> Vec<(u32, Vec<T>)> {
+        let raw = sends.into_iter().map(|(dst, b)| (dst, encode_buf(&b))).collect();
+        self.alltoallv_subset_bytes(class, raw, expect_from)
+            .into_iter()
+            .map(|(src, bytes)| (src, decode_buf(&bytes)))
+            .collect()
+    }
+
+    /// Subset exchange over pre-serialized byte payloads.
+    pub fn alltoallv_subset_bytes(
+        &mut self,
+        class: CommClass,
+        sends: Vec<(u32, Vec<u8>)>,
+        expect_from: &[u32],
+    ) -> Vec<(u32, Vec<u8>)> {
         self.stats.record_call(class);
-        for (dst, buf) in sends {
-            debug_assert!(dst < self.ranks());
-            self.send_raw(class, dst, buf);
+        if cfg!(debug_assertions) {
+            for (dst, _) in &sends {
+                debug_assert!(*dst < self.ranks());
+            }
         }
-        expect_from.iter().map(|&src| (src, self.recv_raw(src))).collect()
+        self.exchange_recorded(class, sends, expect_from)
     }
 
     /// Gather each rank's buffer on root (rank 0). Non-roots get `None`.
     pub fn gather_to_root<T: Wire>(&mut self, send: Vec<T>) -> Option<Vec<Vec<T>>> {
         self.stats.record_call(CommClass::Other);
-        self.send_raw(CommClass::Other, 0, send);
-        if self.rank == 0 {
-            Some((0..self.ranks()).map(|src| self.recv_raw(src)).collect())
+        let sends = vec![(0u32, encode_buf(&send))];
+        let expect: Vec<u32> = if self.rank() == 0 { (0..self.ranks()).collect() } else { vec![] };
+        let got = self.exchange_recorded(CommClass::Other, sends, &expect);
+        if self.rank() == 0 {
+            Some(got.into_iter().map(|(_, bytes)| decode_buf(&bytes)).collect())
         } else {
             None
         }
     }
+
+    /// The paper's two-step hierarchical Alltoallv (construction
+    /// exchange). Ranks are grouped into "nodes" of `ranks_per_node`
+    /// consecutive ranks (the last node may be smaller); rank
+    /// `node*ranks_per_node` is that node's leader. Three phases:
+    ///
+    /// 1. **intra-node gather** — each non-leader ships its full
+    ///    per-destination send table to its leader;
+    /// 2. **inter-node exchange** — leaders exchange per-node blobs
+    ///    (every segment for every (src in my node, dst in your node)
+    ///    pair, in fixed nested order, so no per-segment addressing is
+    ///    needed);
+    /// 3. **intra-node scatter** — each leader reassembles, per member,
+    ///    the R per-source segments and ships them down.
+    ///
+    /// The result is bit-identical to [`RankComm::alltoallv`] — every
+    /// rank ends with the exact byte buffer each source sent it, in
+    /// source order — but inter-node traffic scales with node count
+    /// rather than rank count. With `ranks_per_node <= 1` this *is*
+    /// the flat exchange.
+    pub fn alltoallv_hier<T: Wire>(
+        &mut self,
+        class: CommClass,
+        sends: Vec<Vec<T>>,
+        ranks_per_node: u32,
+    ) -> Vec<Vec<T>> {
+        assert_eq!(sends.len(), self.ranks() as usize);
+        if ranks_per_node <= 1 || self.ranks() == 1 {
+            return self.alltoallv(class, sends);
+        }
+        let bufs: Vec<Vec<u8>> = sends.iter().map(|b| encode_buf(b)).collect();
+        self.stats.record_call(class);
+        let raw = self.hier_exchange(class, bufs, ranks_per_node);
+        raw.into_iter().map(|bytes| decode_buf(&bytes)).collect()
+    }
+
+    fn hier_exchange(
+        &mut self,
+        class: CommClass,
+        bufs: Vec<Vec<u8>>,
+        g: u32,
+    ) -> Vec<Vec<u8>> {
+        let r = self.ranks();
+        let me = self.rank();
+        let g = g.min(r);
+        let my_node = me / g;
+        let leader = my_node * g;
+        let n_nodes = r.div_ceil(g);
+        let members = |n: u32| (n * g)..((n * g + g).min(r));
+        let is_leader = me == leader;
+
+        // Phase 1: non-leaders ship their whole send table (R segments,
+        // u32-length-prefixed, dst order) to the node leader.
+        let (p1_sends, p1_expect): (Vec<(u32, Vec<u8>)>, Vec<u32>) = if is_leader {
+            (vec![], members(my_node).filter(|&m| m != me).collect())
+        } else {
+            (vec![(leader, frame_segments(&bufs))], vec![])
+        };
+        let p1_got = self.exchange_recorded(class, p1_sends, &p1_expect);
+
+        let mut scatter_blob = None;
+        if is_leader {
+            // seg[src][dst] for src in my node — the leader's own table
+            // plus one parsed table per gathered member.
+            let mut node_tables: Vec<(u32, Vec<Vec<u8>>)> = vec![(me, bufs)];
+            for (src, blob) in p1_got {
+                node_tables.push((src, parse_segments(&blob, r as usize)));
+            }
+            node_tables.sort_unstable_by_key(|(src, _)| *src);
+
+            // Phase 2: one blob per remote node, nested fixed order
+            // (src in my node asc) × (dst in that node asc).
+            let mut p2_sends = Vec::new();
+            let mut p2_expect = Vec::new();
+            for n in 0..n_nodes {
+                if n == my_node {
+                    continue;
+                }
+                let mut blob = Vec::new();
+                for (_, table) in &node_tables {
+                    for dst in members(n) {
+                        push_segment(&mut blob, &table[dst as usize]);
+                    }
+                }
+                p2_sends.push((n * g, blob));
+                p2_expect.push(n * g);
+            }
+            let p2_got = self.exchange_recorded(class, p2_sends, &p2_expect);
+
+            // Collate seg[src][dst_local] for all sources 0..R.
+            let my_members: Vec<u32> = members(my_node).collect();
+            let mut incoming: Vec<Vec<Vec<u8>>> =
+                (0..r).map(|_| vec![Vec::new(); my_members.len()]).collect();
+            for (src, table) in node_tables {
+                for (di, &dst) in my_members.iter().enumerate() {
+                    incoming[src as usize][di] = table[dst as usize].clone();
+                }
+            }
+            for (from_leader, blob) in p2_got {
+                let their_node = from_leader / g;
+                let srcs: Vec<u32> = members(their_node).collect();
+                let segs = parse_segments(&blob, srcs.len() * my_members.len());
+                let mut it = segs.into_iter();
+                for &src in &srcs {
+                    for di in 0..my_members.len() {
+                        incoming[src as usize][di] =
+                            it.next().expect("hierarchical blob segment count");
+                    }
+                }
+            }
+
+            // Phase 3 payloads: per member, R segments in src order.
+            let mut p3 = Vec::new();
+            for (di, &dst) in my_members.iter().enumerate() {
+                let mut blob = Vec::new();
+                for src in 0..r {
+                    push_segment(&mut blob, &incoming[src as usize][di]);
+                }
+                p3.push((dst, blob));
+            }
+            scatter_blob = Some(p3);
+        }
+
+        // Phase 3: leaders scatter (including a self-send for their own
+        // result); every rank receives its final table from its leader.
+        let p3_sends = scatter_blob.unwrap_or_default();
+        let got = self.exchange_recorded(class, p3_sends, &[leader]);
+        let (_, blob) = got.into_iter().next().expect("scatter delivers one blob");
+        parse_segments(&blob, r as usize)
+    }
+}
+
+/// Frame a table of buffers as u32-length-prefixed segments in order.
+fn frame_segments(bufs: &[Vec<u8>]) -> Vec<u8> {
+    let total: usize = bufs.iter().map(|b| 4 + b.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    for b in bufs {
+        push_segment(&mut out, b);
+    }
+    out
+}
+
+fn push_segment(out: &mut Vec<u8>, seg: &[u8]) {
+    let len = u32::try_from(seg.len()).expect("segment fits u32");
+    out.extend_from_slice(&len.to_le_bytes());
+    out.extend_from_slice(seg);
+}
+
+/// Parse exactly `count` u32-length-prefixed segments.
+fn parse_segments(blob: &[u8], count: usize) -> Vec<Vec<u8>> {
+    let mut segs = Vec::with_capacity(count);
+    let mut pos = 0usize;
+    for _ in 0..count {
+        assert!(pos + 4 <= blob.len(), "hierarchical blob truncated at segment header");
+        let len = u32::from_le_bytes([blob[pos], blob[pos + 1], blob[pos + 2], blob[pos + 3]])
+            as usize;
+        pos += 4;
+        assert!(pos + len <= blob.len(), "hierarchical blob truncated inside a segment");
+        segs.push(blob[pos..pos + len].to_vec());
+        pos += len;
+    }
+    assert_eq!(pos, blob.len(), "trailing bytes after the last hierarchical segment");
+    segs
 }
 
 /// Extract a human-readable message from a caught panic payload.
@@ -462,5 +785,63 @@ mod tests {
         let msg = payload.downcast_ref::<String>().expect("string payload");
         assert!(msg.contains("rank 1 panicked"), "{msg}");
         assert!(msg.contains("literal-payload-sentinel"), "{msg}");
+    }
+
+    #[test]
+    fn wire_roundtrips_are_exact() {
+        let u = vec![0u64, 1, u64::MAX, 0x0123_4567_89ab_cdef];
+        assert_eq!(decode_buf::<u64>(&encode_buf(&u)), u);
+        let f = vec![0.0f64, -0.0, f64::MAX, f64::MIN_POSITIVE, 1.5e-300];
+        let back = decode_buf::<f64>(&encode_buf(&f));
+        assert!(f.iter().zip(&back).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    /// Hierarchical alltoallv must be bit-identical to the flat one for
+    /// every grouping, including uneven last nodes (R=4, g=3) and the
+    /// one-node degenerate case (g >= R).
+    #[test]
+    fn hierarchical_alltoallv_matches_flat() {
+        for g in [1u32, 2, 3, 4, 8] {
+            let results = run_cluster(4, move |mut comm| {
+                let me = comm.rank();
+                // distinct variable-size payloads per (src, dst) pair
+                let sends: Vec<Vec<u64>> = (0..4)
+                    .map(|dst| {
+                        (0..(me + dst) % 3 + 1)
+                            .map(|i| u64::from(me) * 1000 + u64::from(dst) * 10 + u64::from(i))
+                            .collect()
+                    })
+                    .collect();
+                comm.alltoallv_hier(CommClass::InitPayload, sends, g)
+            });
+            for (r, recv) in results.iter().enumerate() {
+                let r = r as u32;
+                for src in 0..4u32 {
+                    let expect: Vec<u64> = (0..(src + r) % 3 + 1)
+                        .map(|i| u64::from(src) * 1000 + u64::from(r) * 10 + u64::from(i))
+                        .collect();
+                    assert_eq!(recv[src as usize], expect, "g={g} rank={r} src={src}");
+                }
+            }
+        }
+    }
+
+    /// With 2 ranks per node the inter-node payload class traffic must
+    /// flow leader-to-leader only: non-leaders talk to their leader.
+    #[test]
+    fn hierarchical_exchange_routes_through_leaders() {
+        let results = run_cluster(4, |mut comm| {
+            let sends: Vec<Vec<u64>> = (0..4).map(|d| vec![u64::from(comm.rank()) * 4 + d]).collect();
+            let _ = comm.alltoallv_hier(CommClass::InitPayload, sends, 2);
+            comm.take_stats()
+        });
+        // non-leader (rank 1): exactly 2 sends — gather blob to leader 0,
+        // nothing else (its scatter result arrives FROM the leader)
+        let c1 = results[1].class(CommClass::InitPayload);
+        assert_eq!(c1.remote_msgs + c1.local_msgs, 1, "non-leader sends only its gather blob");
+        // leader (rank 0): 1 inter-node blob to leader 2 + 2 scatter
+        // blobs (self + rank 1)
+        let c0 = results[0].class(CommClass::InitPayload);
+        assert_eq!(c0.remote_msgs + c0.local_msgs, 3);
     }
 }

@@ -1,8 +1,17 @@
-//! Virtual-MPI substrate: ranks-as-threads with MPI-like collectives and
-//! exact message/byte accounting (consumed by `perfmodel`).
+//! Virtual-MPI substrate: MPI-like collectives with exact message/byte
+//! accounting (consumed by `perfmodel`), over pluggable transports —
+//! ranks-as-threads (channel matrix) or ranks-as-processes (mmap'd
+//! shared-memory rings).
 
 pub mod comm;
+// the shm backend wraps mmap/fork syscalls; every unsafe block carries
+// a mandatory `// SAFETY:` comment enforced by `dpsnn lint` (the same
+// audited-island contract as util/memtrack.rs and util/timer.rs)
+#[allow(unsafe_code)]
+pub mod shm;
 pub mod stats;
+pub mod wire;
 
-pub use comm::{panic_message, run_cluster, Cluster, RankComm, Wire};
+pub use comm::{panic_message, run_cluster, Cluster, RankComm, Transport, Wire};
 pub use stats::{CommClass, CommStats};
+pub use wire::{pack_spikes, unpack_spikes, SpikeRecord};

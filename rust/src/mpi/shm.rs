@@ -1,0 +1,814 @@
+//! Shared-memory inter-process transport: mmap'd SPSC byte rings
+//! between forked worker processes.
+//!
+//! This is the first backend that leaves the single address space: each
+//! rank becomes a forked child process (one address space per rank, as
+//! in the paper's MPI processes) and every rank pair communicates
+//! through a fixed-capacity single-producer/single-consumer ring buffer
+//! living in one `MAP_SHARED | MAP_ANONYMOUS` mapping created before
+//! the fork. On top of the same region sit the coordinator's
+//! command/reply rings (parent ↔ child), a sense-reversing barrier, and
+//! per-rank fault-injection counters that survive worker death (so
+//! `max_fires` faults do not re-fire after a recovery re-fork).
+//!
+//! ## Region layout
+//!
+//! ```text
+//! [ barrier header        ]  64 B (count + generation atomics)
+//! [ fault cells           ]  R × 8 B, rounded to 64 B
+//! [ data rings            ]  R×R × (64 B header + DATA_RING_CAP)
+//! [ command rings         ]  R   × (64 B header + CTRL_RING_CAP)
+//! [ reply rings           ]  R   × (64 B header + CTRL_RING_CAP)
+//! ```
+//!
+//! Data ring `src*R + dst` carries bytes from rank `src` to rank `dst`.
+//! Each ring header holds a producer cursor (`tail`), a consumer cursor
+//! (`head`) — free-running u64 byte counts, wrapped into the capacity
+//! on access — and a `closed` flag. Only the producer writes `tail`,
+//! only the consumer writes `head`; `closed` may additionally be set by
+//! the coordinator parent when it reaps a dead worker, which is what
+//! turns a silent process death into the executor's ordinary "sender
+//! rank hung up" panic cascade on the peers.
+//!
+//! ## Deadlock freedom
+//!
+//! Rings are much smaller than a worst-case payload. The transport's
+//! `exchange` therefore runs a single progress loop that interleaves
+//! "write what fits" on every outgoing buffer with "drain what arrived"
+//! on every expected source, so two ranks exchanging payloads larger
+//! than the ring capacity stream past each other instead of mutually
+//! blocking — and a peer's death is always noticed by the receive half
+//! of the same loop.
+//!
+//! Every `unsafe` block carries a `// SAFETY:` comment; `dpsnn lint`
+//! enforces that contract for this file (the same audited-island rule
+//! as `util/memtrack.rs` and `util/timer.rs`).
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::mpi::comm::Transport;
+
+/// Minimal bindings for the handful of syscalls the backend needs; the
+/// crate is dependency-free, so these mirror `util/timer.rs`'s shim.
+#[allow(non_camel_case_types)]
+mod libc {
+    pub const PROT_READ: i32 = 0x1;
+    pub const PROT_WRITE: i32 = 0x2;
+    pub const MAP_SHARED: i32 = 0x01;
+    pub const MAP_ANONYMOUS: i32 = 0x20;
+    pub const SIGKILL: i32 = 9;
+    pub const WNOHANG: i32 = 1;
+    pub const PR_SET_PDEATHSIG: i32 = 1;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+        pub fn fork() -> i32;
+        pub fn kill(pid: i32, sig: i32) -> i32;
+        pub fn waitpid(pid: i32, status: *mut i32, options: i32) -> i32;
+        pub fn prctl(option: i32, arg2: u64, arg3: u64, arg4: u64, arg5: u64) -> i32;
+        pub fn _exit(code: i32) -> !;
+    }
+}
+
+/// Per-rank-pair data ring capacity. Spike payloads are typically a few
+/// hundred packed bytes per step; larger payloads stream through the
+/// progress loop in chunks.
+pub const DATA_RING_CAP: usize = 64 * 1024;
+/// Command/reply ring capacity. Checkpoint restore ships a full
+/// `RankState` through here; anything larger streams in chunks.
+pub const CTRL_RING_CAP: usize = 256 * 1024;
+
+const HDR_BYTES: usize = 64;
+
+/// One `MAP_SHARED | MAP_ANONYMOUS` mapping, inherited across `fork`.
+struct SharedRegion {
+    base: *mut u8,
+    len: usize,
+}
+
+// SAFETY: the region is plain shared memory; all mutation goes through
+// atomics or SPSC-disciplined cursors (see Ring). Handles are shared
+// across threads (parent) and processes (children).
+unsafe impl Send for SharedRegion {}
+// SAFETY: as above — interior mutation is atomic-only at this level.
+unsafe impl Sync for SharedRegion {}
+
+impl SharedRegion {
+    fn new(len: usize) -> SharedRegion {
+        // SAFETY: anonymous shared mapping, no address hint; checked
+        // against MAP_FAILED (-1) before use. The kernel zero-fills
+        // it — the valid initial state for every header in the layout.
+        let base = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED | libc::MAP_ANONYMOUS,
+                -1,
+                0,
+            )
+        };
+        assert!(
+            !std::ptr::eq(base, usize::MAX as *mut u8) && !base.is_null(),
+            "mmap of {len}-byte shm transport region failed"
+        );
+        SharedRegion { base, len }
+    }
+}
+
+impl Drop for SharedRegion {
+    fn drop(&mut self) {
+        // SAFETY: base/len come from the successful mmap above and the
+        // mapping is unmapped exactly once (Drop). Forked children
+        // never run this drop — they leave via exit_now().
+        unsafe {
+            libc::munmap(self.base, self.len);
+        }
+    }
+}
+
+/// Ring header: free-running byte cursors plus a closed flag.
+#[repr(C, align(64))]
+struct RingHdr {
+    /// Producer cursor: total bytes ever written.
+    tail: AtomicU64,
+    /// Consumer cursor: total bytes ever read.
+    head: AtomicU64,
+    /// Nonzero once the producer side hung up (or the coordinator
+    /// declared the producer dead).
+    closed: AtomicU32,
+    _pad: [u8; 44],
+}
+
+/// A view of one SPSC ring inside the shared region. Copyable: parent
+/// and child each hold their own view of the same physical pages. The
+/// SPSC discipline (one producing process, one consuming process) is
+/// upheld by the cluster's ownership rules, not by this type.
+#[derive(Clone, Copy)]
+pub struct Ring {
+    hdr: *mut RingHdr,
+    data: *mut u8,
+    cap: usize,
+}
+
+// SAFETY: the pointers target the shared mapping, which outlives every
+// Ring via the Arc<SharedRegion> held by the owning ShmCluster; all
+// cursor traffic is atomic.
+unsafe impl Send for Ring {}
+
+impl Ring {
+    fn hdr(&self) -> &RingHdr {
+        // SAFETY: hdr points at a 64-byte-aligned, zero-initialized
+        // RingHdr inside the live shared mapping (layout computed in
+        // ShmCluster::new); the atomics are valid for any bit pattern.
+        unsafe { &*self.hdr }
+    }
+
+    /// Bytes available to read.
+    pub fn available(&self) -> usize {
+        let h = self.hdr();
+        let tail = h.tail.load(Ordering::Acquire);
+        let head = h.head.load(Ordering::Acquire);
+        usize::try_from(tail - head).expect("ring cursors diverged past usize")
+    }
+
+    /// Copy as much of `src` into the ring as fits; returns bytes moved.
+    /// Must only be called by the ring's unique producer.
+    pub fn write_some(&self, src: &[u8]) -> usize {
+        let h = self.hdr();
+        let tail = h.tail.load(Ordering::Relaxed); // producer owns tail
+        let head = h.head.load(Ordering::Acquire);
+        let used = usize::try_from(tail - head).expect("ring cursors diverged past usize");
+        let n = src.len().min(self.cap - used);
+        if n == 0 {
+            return 0;
+        }
+        let pos = usize::try_from(tail % self.cap as u64).expect("ring position fits usize");
+        let first = n.min(self.cap - pos);
+        // SAFETY: pos + first <= cap and the producer is the only
+        // writer of [tail, tail+n) — the consumer never reads past
+        // tail (checked via the Acquire load of tail on its side).
+        unsafe {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), self.data.add(pos), first);
+        }
+        if n > first {
+            // SAFETY: wraps to the ring start; n - first <= pos holds
+            // because n <= cap - used <= cap.
+            unsafe {
+                std::ptr::copy_nonoverlapping(src.as_ptr().add(first), self.data, n - first);
+            }
+        }
+        h.tail.store(tail + n as u64, Ordering::Release);
+        n
+    }
+
+    /// Append up to `max` available bytes to `out`; returns bytes
+    /// moved. Must only be called by the ring's unique consumer.
+    pub fn read_some(&self, out: &mut Vec<u8>, max: usize) -> usize {
+        let h = self.hdr();
+        let head = h.head.load(Ordering::Relaxed); // consumer owns head
+        let tail = h.tail.load(Ordering::Acquire);
+        let avail = usize::try_from(tail - head).expect("ring cursors diverged past usize");
+        let n = max.min(avail);
+        if n == 0 {
+            return 0;
+        }
+        let pos = usize::try_from(head % self.cap as u64).expect("ring position fits usize");
+        let first = n.min(self.cap - pos);
+        let start = out.len();
+        out.resize(start + n, 0);
+        // SAFETY: the producer published [head, head+n) with a Release
+        // store of tail (Acquire-loaded above); pos + first <= cap.
+        unsafe {
+            std::ptr::copy_nonoverlapping(self.data.add(pos), out.as_mut_ptr().add(start), first);
+        }
+        if n > first {
+            // SAFETY: wrapped remainder starts at the ring base;
+            // n - first bytes were published by the same tail store.
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    self.data,
+                    out.as_mut_ptr().add(start + first),
+                    n - first,
+                );
+            }
+        }
+        h.head.store(head + n as u64, Ordering::Release);
+        n
+    }
+
+    /// Mark the producer side gone. Idempotent; may be called by the
+    /// producer (hang_up) or by the coordinator on a reaped worker.
+    pub fn close(&self) {
+        self.hdr().closed.store(1, Ordering::Release);
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.hdr().closed.load(Ordering::Acquire) != 0
+    }
+
+    /// Reset cursors and the closed flag. Only valid while no producer
+    /// or consumer process is alive (executor recovery, post-reap).
+    pub fn reset(&self) {
+        let h = self.hdr();
+        h.tail.store(0, Ordering::Relaxed);
+        h.head.store(0, Ordering::Relaxed);
+        h.closed.store(0, Ordering::Release);
+    }
+}
+
+/// Incremental reader for u64-length-prefixed frames on a ring.
+#[derive(Default)]
+pub struct FrameAcc {
+    buf: Vec<u8>,
+}
+
+impl FrameAcc {
+    pub fn new() -> FrameAcc {
+        FrameAcc::default()
+    }
+
+    /// Drain whatever the ring holds toward the current frame. Returns
+    /// (bytes moved, completed frame payload if any).
+    pub fn poll(&mut self, ring: &Ring) -> (usize, Option<Vec<u8>>) {
+        let mut moved = 0usize;
+        if self.buf.len() < 8 {
+            moved += ring.read_some(&mut self.buf, 8 - self.buf.len());
+            if self.buf.len() < 8 {
+                return (moved, None);
+            }
+        }
+        let need = usize::try_from(u64::from_le_bytes(
+            self.buf[..8].try_into().expect("8-byte frame header"),
+        ))
+        .expect("frame length fits usize");
+        let have = self.buf.len() - 8;
+        if have < need {
+            moved += ring.read_some(&mut self.buf, need - have);
+        }
+        if self.buf.len() - 8 == need {
+            let payload = self.buf.split_off(8);
+            self.buf.clear();
+            (moved, Some(payload))
+        } else {
+            (moved, None)
+        }
+    }
+
+    pub fn mid_frame(&self) -> bool {
+        !self.buf.is_empty()
+    }
+}
+
+/// Write one length-prefixed frame, streaming through the ring's
+/// capacity. Blocks (with backoff) until fully written; panics if the
+/// ring closes underneath — the consumer died and the coordinator is
+/// about to reap us anyway.
+pub fn write_frame(ring: &Ring, payload: &[u8]) {
+    let hdr = (payload.len() as u64).to_le_bytes();
+    let mut backoff = Backoff::new();
+    let mut part: &[u8] = &hdr;
+    let mut rest = payload;
+    loop {
+        let n = ring.write_some(part);
+        if n == part.len() {
+            if rest.is_empty() {
+                return;
+            }
+            part = rest;
+            rest = &[];
+            backoff.reset();
+            continue;
+        }
+        part = &part[n..];
+        if n > 0 {
+            backoff.reset();
+        } else {
+            assert!(!ring.is_closed(), "frame write on a closed ring");
+            backoff.snooze();
+        }
+    }
+}
+
+/// Adaptive wait for the progress loops: spin briefly, then yield, then
+/// sleep — idle forked workers must not burn a full core.
+pub struct Backoff {
+    stalls: u32,
+}
+
+impl Backoff {
+    pub fn new() -> Backoff {
+        Backoff { stalls: 0 }
+    }
+
+    pub fn reset(&mut self) {
+        self.stalls = 0;
+    }
+
+    pub fn snooze(&mut self) {
+        self.stalls = self.stalls.saturating_add(1);
+        if self.stalls < 64 {
+            std::hint::spin_loop();
+        } else if self.stalls < 256 {
+            std::thread::yield_now();
+        } else {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Backoff::new()
+    }
+}
+
+/// Sense-reversing barrier header (zero-initialized by mmap).
+#[repr(C, align(64))]
+struct BarrierHdr {
+    count: AtomicU64,
+    generation: AtomicU64,
+    _pad: [u8; 48],
+}
+
+/// The shared-memory cluster: one region holding every ring, barrier,
+/// and fault cell for `ranks` worker processes. Clones share the
+/// region; the mapping is released when the last clone drops (children
+/// exit via `exit_now` and never unmap).
+#[derive(Clone)]
+pub struct ShmCluster {
+    ranks: u32,
+    region: Arc<SharedRegion>,
+    data_off: usize,
+    cmd_off: usize,
+    reply_off: usize,
+    fault_off: usize,
+}
+
+impl ShmCluster {
+    pub fn new(ranks: u32) -> ShmCluster {
+        assert!(ranks >= 1);
+        let r = ranks as usize;
+        let barrier_bytes = HDR_BYTES;
+        let fault_bytes = (r * 8).div_ceil(HDR_BYTES) * HDR_BYTES;
+        let data_ring_bytes = HDR_BYTES + DATA_RING_CAP;
+        let ctrl_ring_bytes = HDR_BYTES + CTRL_RING_CAP;
+        let fault_off = barrier_bytes;
+        let data_off = fault_off + fault_bytes;
+        let cmd_off = data_off + r * r * data_ring_bytes;
+        let reply_off = cmd_off + r * ctrl_ring_bytes;
+        let total = reply_off + r * ctrl_ring_bytes;
+        let region = Arc::new(SharedRegion::new(total));
+        ShmCluster { ranks, region, data_off, cmd_off, reply_off, fault_off }
+    }
+
+    pub fn ranks(&self) -> u32 {
+        self.ranks
+    }
+
+    fn ring_at(&self, offset: usize, cap: usize) -> Ring {
+        assert!(offset + HDR_BYTES + cap <= self.region.len, "ring outside the shm region");
+        // SAFETY: offset is 64-byte aligned within the live mapping
+        // (all layout terms are multiples of 64); hdr and data do not
+        // overlap any other ring.
+        let hdr = unsafe { self.region.base.add(offset).cast::<RingHdr>() };
+        // SAFETY: data begins immediately after the 64-byte header,
+        // still inside the mapping per the assert above.
+        let data = unsafe { self.region.base.add(offset + HDR_BYTES) };
+        Ring { hdr, data, cap }
+    }
+
+    /// Data ring carrying bytes from `src` to `dst`.
+    pub fn data_ring(&self, src: u32, dst: u32) -> Ring {
+        assert!(src < self.ranks && dst < self.ranks);
+        let idx = src as usize * self.ranks as usize + dst as usize;
+        self.ring_at(self.data_off + idx * (HDR_BYTES + DATA_RING_CAP), DATA_RING_CAP)
+    }
+
+    /// Coordinator → worker command ring for `rank`.
+    pub fn cmd_ring(&self, rank: u32) -> Ring {
+        assert!(rank < self.ranks);
+        self.ring_at(self.cmd_off + rank as usize * (HDR_BYTES + CTRL_RING_CAP), CTRL_RING_CAP)
+    }
+
+    /// Worker → coordinator reply ring for `rank`.
+    pub fn reply_ring(&self, rank: u32) -> Ring {
+        assert!(rank < self.ranks);
+        self.ring_at(self.reply_off + rank as usize * (HDR_BYTES + CTRL_RING_CAP), CTRL_RING_CAP)
+    }
+
+    fn fault_cell(&self, rank: u32) -> &AtomicU32 {
+        assert!(rank < self.ranks);
+        // SAFETY: the fault array lives at fault_off inside the
+        // mapping, one u64-aligned slot per rank (u32 used, u32 pad);
+        // AtomicU32 is valid for any bit pattern.
+        unsafe { &*self.region.base.add(self.fault_off + rank as usize * 8).cast::<AtomicU32>() }
+    }
+
+    /// Times the rank's injected fault has fired (survives re-forks so
+    /// `max_fires` faults stay spent across recoveries).
+    pub fn fault_fired(&self, rank: u32) -> u32 {
+        self.fault_cell(rank).load(Ordering::Acquire)
+    }
+
+    pub fn set_fault_fired(&self, rank: u32, fires: u32) {
+        self.fault_cell(rank).store(fires, Ordering::Release);
+    }
+
+    fn barrier_hdr(&self) -> &BarrierHdr {
+        // SAFETY: offset 0 of the mapping is the 64-byte-aligned,
+        // zero-initialized barrier header.
+        unsafe { &*self.region.base.cast::<BarrierHdr>() }
+    }
+
+    /// Sense-reversing barrier across all rank processes.
+    pub fn barrier_wait(&self) {
+        let b = self.barrier_hdr();
+        let gen = b.generation.load(Ordering::Acquire);
+        let arrived = b.count.fetch_add(1, Ordering::AcqRel) + 1;
+        if arrived == u64::from(self.ranks) {
+            b.count.store(0, Ordering::Relaxed);
+            b.generation.fetch_add(1, Ordering::Release);
+        } else {
+            let mut backoff = Backoff::new();
+            while b.generation.load(Ordering::Acquire) == gen {
+                backoff.snooze();
+            }
+        }
+    }
+
+    /// Close every data ring `rank` produces. Called by the worker's
+    /// own panic path (hang_up) or by the coordinator after reaping a
+    /// dead worker — either way, peers blocked on this rank wake with
+    /// the ordinary "sender rank hung up" cascade.
+    pub fn close_outgoing(&self, rank: u32) {
+        for dst in 0..self.ranks {
+            self.data_ring(rank, dst).close();
+        }
+    }
+
+    /// Reset every ring and the barrier for a fresh worker generation.
+    /// Fault cells are deliberately preserved (see [`fault_fired`]).
+    /// Only valid after every worker process has been reaped.
+    ///
+    /// [`fault_fired`]: ShmCluster::fault_fired
+    pub fn reset_rings(&self) {
+        for src in 0..self.ranks {
+            for dst in 0..self.ranks {
+                self.data_ring(src, dst).reset();
+            }
+            self.cmd_ring(src).reset();
+            self.reply_ring(src).reset();
+        }
+        let b = self.barrier_hdr();
+        b.count.store(0, Ordering::Relaxed);
+        b.generation.store(0, Ordering::Release);
+    }
+
+    /// The byte-level transport endpoint for one rank. Must only be
+    /// driven by that rank's process (SPSC discipline).
+    pub fn transport(&self, rank: u32) -> ShmTransport {
+        assert!(rank < self.ranks);
+        ShmTransport { cluster: self.clone(), rank, hung_up: false }
+    }
+}
+
+/// Per-rank endpoint over the shm rings; the process-backed sibling of
+/// `ChannelTransport`.
+pub struct ShmTransport {
+    cluster: ShmCluster,
+    rank: u32,
+    hung_up: bool,
+}
+
+impl Transport for ShmTransport {
+    fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    fn ranks(&self) -> u32 {
+        self.cluster.ranks
+    }
+
+    fn exchange(&mut self, sends: Vec<(u32, Vec<u8>)>, recv_from: &[u32]) -> Vec<(u32, Vec<u8>)> {
+        assert!(!self.hung_up, "send after hang_up: this rank's communicator is closed");
+        let me = self.rank;
+        // frame each outgoing payload once: u64 length + bytes
+        struct SendSt {
+            ring: Ring,
+            buf: Vec<u8>,
+            off: usize,
+        }
+        let mut outs: Vec<SendSt> = sends
+            .into_iter()
+            .map(|(dst, payload)| {
+                let mut buf = Vec::with_capacity(8 + payload.len());
+                buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+                buf.extend_from_slice(&payload);
+                SendSt { ring: self.cluster.data_ring(me, dst), buf, off: 0 }
+            })
+            .collect();
+        struct RecvSt {
+            src: u32,
+            ring: Ring,
+            acc: FrameAcc,
+            done: Option<Vec<u8>>,
+        }
+        let mut ins: Vec<RecvSt> = recv_from
+            .iter()
+            .map(|&src| RecvSt {
+                src,
+                ring: self.cluster.data_ring(src, me),
+                acc: FrameAcc::new(),
+                done: None,
+            })
+            .collect();
+        // single progress loop: interleaving sends and receives keeps
+        // payloads larger than the ring capacity streaming (no mutual
+        // blocking) and notices peer death while mid-send
+        let mut backoff = Backoff::new();
+        loop {
+            let mut progress = false;
+            let mut pending = false;
+            for s in &mut outs {
+                if s.off < s.buf.len() {
+                    let n = s.ring.write_some(&s.buf[s.off..]);
+                    s.off += n;
+                    progress |= n > 0;
+                    pending |= s.off < s.buf.len();
+                }
+            }
+            for r in &mut ins {
+                if r.done.is_none() {
+                    let (n, frame) = r.acc.poll(&r.ring);
+                    progress |= n > 0;
+                    if let Some(payload) = frame {
+                        r.done = Some(payload);
+                    } else if r.ring.is_closed() && r.ring.available() == 0 {
+                        // the "hung up" phrase is load-bearing: the
+                        // executor's collect() recognizes cascades by it
+                        panic!("rank {me}: sender rank {} hung up", r.src);
+                    } else {
+                        pending = true;
+                    }
+                }
+            }
+            if !pending {
+                break;
+            }
+            if progress {
+                backoff.reset();
+            } else {
+                backoff.snooze();
+            }
+        }
+        ins.into_iter()
+            .map(|r| (r.src, r.done.expect("completed receive state")))
+            .collect()
+    }
+
+    fn barrier(&mut self) {
+        self.cluster.barrier_wait();
+    }
+
+    fn hang_up(&mut self) {
+        self.hung_up = true;
+        self.cluster.close_outgoing(self.rank);
+    }
+}
+
+/// Fork one worker process. `child_body` runs only in the child, which
+/// then exits without unwinding back into the caller's stack; the
+/// parent gets the child's pid.
+///
+/// The child is marked to die with its parent (PDEATHSIG=SIGKILL) so a
+/// crashed coordinator never leaks orphan workers. Forking from a
+/// multithreaded test harness is safe on the glibc targets this crate
+/// supports: the child re-enters Rust only through `child_body`, and
+/// glibc's atfork handlers reinitialize the allocator locks.
+pub fn spawn_worker(child_body: impl FnOnce()) -> i32 {
+    // SAFETY: plain fork(); the child continues with a CoW copy of the
+    // address space and is checked for the 0 return before running the
+    // child-only path.
+    let pid = unsafe { libc::fork() };
+    assert!(pid >= 0, "fork failed for shm transport worker");
+    if pid == 0 {
+        // SAFETY: prctl(PR_SET_PDEATHSIG) only arms a signal on parent
+        // death; arguments beyond the signal are unused zeros.
+        unsafe {
+            libc::prctl(libc::PR_SET_PDEATHSIG, libc::SIGKILL as u64, 0, 0, 0);
+        }
+        child_body();
+        exit_now(0);
+    }
+    pid
+}
+
+/// Immediate process exit without running destructors or flushing
+/// stdio — the only safe way out of a forked worker (the parent owns
+/// the shared state a normal exit would tear down).
+pub fn exit_now(code: i32) -> ! {
+    // SAFETY: _exit terminates the calling process without touching
+    // process-shared resources; it never returns.
+    unsafe { libc::_exit(code) }
+}
+
+/// Non-blocking reap: `Some(raw wait status)` once the child exited.
+pub fn try_wait(pid: i32) -> Option<i32> {
+    let mut status: i32 = 0;
+    // SAFETY: waitpid with WNOHANG writes the status word only when it
+    // returns the pid; `status` is a valid out-pointer either way.
+    let r = unsafe { libc::waitpid(pid, &mut status, libc::WNOHANG) };
+    if r == pid {
+        Some(status)
+    } else {
+        None
+    }
+}
+
+/// Blocking reap (after SIGKILL during recovery/shutdown).
+pub fn wait_reap(pid: i32) {
+    let mut status: i32 = 0;
+    // SAFETY: blocking waitpid on a child this process forked; the
+    // status out-pointer is valid for the call.
+    let r = unsafe { libc::waitpid(pid, &mut status, 0) };
+    assert!(r == pid || r == -1, "waitpid returned unexpected pid {r}");
+}
+
+/// SIGKILL a worker (recovery and shutdown paths).
+pub fn kill_worker(pid: i32) {
+    // SAFETY: sends SIGKILL to a specific child pid owned by this
+    // executor; no memory is touched.
+    unsafe {
+        libc::kill(pid, libc::SIGKILL);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_streams_bytes_across_wraparound() {
+        let cluster = ShmCluster::new(2);
+        let ring = cluster.data_ring(0, 1);
+        // write/read far more than the capacity in interleaved chunks
+        let payload: Vec<u8> = (0..3 * DATA_RING_CAP).map(|i| (i % 251) as u8).collect();
+        let mut got = Vec::new();
+        let mut off = 0;
+        while got.len() < payload.len() {
+            off += ring.write_some(&payload[off..]);
+            ring.read_some(&mut got, payload.len() - got.len());
+        }
+        assert_eq!(got, payload);
+        assert_eq!(ring.available(), 0);
+    }
+
+    #[test]
+    fn frames_roundtrip_including_empty_and_oversized() {
+        let cluster = ShmCluster::new(2);
+        let ring = cluster.data_ring(1, 0);
+        let mut acc = FrameAcc::new();
+        for len in [0usize, 1, 8, DATA_RING_CAP / 2] {
+            let payload: Vec<u8> = (0..len).map(|i| (i % 127) as u8).collect();
+            write_frame(&ring, &payload);
+            let mut frame = None;
+            while frame.is_none() {
+                frame = acc.poll(&ring).1;
+            }
+            assert_eq!(frame.unwrap(), payload);
+        }
+        // oversized frame requires interleaved producer/consumer
+        let payload: Vec<u8> = (0..2 * DATA_RING_CAP).map(|i| (i % 13) as u8).collect();
+        let hdr = (payload.len() as u64).to_le_bytes();
+        let mut sent = 0usize;
+        let framed: Vec<u8> = hdr.iter().copied().chain(payload.iter().copied()).collect();
+        let mut frame = None;
+        while frame.is_none() {
+            if sent < framed.len() {
+                sent += ring.write_some(&framed[sent..]);
+            }
+            frame = acc.poll(&ring).1;
+        }
+        assert_eq!(frame.unwrap(), payload);
+    }
+
+    #[test]
+    fn closed_empty_ring_is_distinguishable_from_idle() {
+        let cluster = ShmCluster::new(2);
+        let ring = cluster.data_ring(0, 1);
+        assert!(!ring.is_closed());
+        ring.write_some(b"tail");
+        ring.close();
+        assert!(ring.is_closed());
+        // data written before the close still drains
+        let mut out = Vec::new();
+        ring.read_some(&mut out, 16);
+        assert_eq!(out, b"tail");
+        assert_eq!(ring.available(), 0);
+        ring.reset();
+        assert!(!ring.is_closed());
+    }
+
+    #[test]
+    fn fault_cells_survive_ring_resets() {
+        let cluster = ShmCluster::new(3);
+        cluster.set_fault_fired(2, 7);
+        cluster.reset_rings();
+        assert_eq!(cluster.fault_fired(2), 7);
+        assert_eq!(cluster.fault_fired(0), 0);
+    }
+
+    /// Real fork: the child echoes a payload back through the rings,
+    /// exercising mmap inheritance, the progress loop, and reaping.
+    #[test]
+    fn forked_child_exchanges_through_the_rings() {
+        let cluster = ShmCluster::new(2);
+        let child_cluster = cluster.clone();
+        let pid = spawn_worker(move || {
+            let mut t = child_cluster.transport(1);
+            let got = t.exchange(vec![], &[0]);
+            let mut reply = got[0].1.clone();
+            reply.reverse();
+            let _ = t.exchange(vec![(0, reply)], &[]);
+        });
+        let mut t = cluster.transport(0);
+        let payload: Vec<u8> = (0..100_000u32).map(|i| (i % 255) as u8).collect();
+        let sent = payload.clone();
+        let _ = t.exchange(vec![(1, payload)], &[]);
+        let got = t.exchange(vec![], &[1]);
+        let mut expect = sent;
+        expect.reverse();
+        assert_eq!(got[0].1, expect);
+        // the child exits on its own; reap it
+        let mut status = None;
+        while status.is_none() {
+            status = try_wait(pid);
+            std::thread::yield_now();
+        }
+    }
+
+    /// A dead producer (rings closed by the coordinator) must wake a
+    /// blocked consumer with the cascade panic, not hang.
+    #[test]
+    fn closed_ring_turns_into_hung_up_panic() {
+        let cluster = ShmCluster::new(2);
+        cluster.close_outgoing(1);
+        let mut t = cluster.transport(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            t.exchange(vec![], &[1])
+        }));
+        let payload = result.expect_err("must panic, not hang");
+        let msg = crate::mpi::panic_message(&*payload);
+        assert!(msg.contains("sender rank 1 hung up"), "{msg}");
+    }
+}

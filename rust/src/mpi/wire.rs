@@ -1,0 +1,208 @@
+//! Packed little-endian spike wire format.
+//!
+//! The historical payload exchange shipped one fixed 8-byte AER record
+//! per spike (`WireSpike { gid: u32, t_us: u32 }`). At the paper's
+//! firing rates most spikes in one per-destination payload share the
+//! step's time window and cluster in gid space (a rank's neurons are
+//! contiguous columns), so the payload compresses well with two classic
+//! tricks:
+//!
+//! * **sorted runs + delta-encoded gids** — the payload is sorted by
+//!   `(gid, t_us)`, so consecutive gid deltas are small non-negative
+//!   integers that fit one LEB128 byte almost always;
+//! * **per-payload timestamp base** — `t_us` values within one step
+//!   span at most a few ms; each spike stores `t_us - base` as a
+//!   varint against the payload-wide minimum.
+//!
+//! Sorting the payload is safe for bit-identity: the dynamics phase
+//! imposes a TOTAL order on delivered events — `(target, time-in-step,
+//! syn_idx)`, see `RankProcess::step` — so the arrival order of spikes
+//! *within one payload* never reaches the integrator. The
+//! decomposition-invariance suite enforces exactly that.
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//! offset 0: u32 count          — number of spikes
+//! offset 4: u32 base_t_us      — minimum t_us of the payload (0 if empty)
+//! offset 8: count × ( varint gid_delta, varint t_us - base_t_us )
+//! ```
+//!
+//! `gid_delta` is the difference from the previous spike's gid (from 0
+//! for the first). Round-trips are exact for every `u32` value; the
+//! format is shared verbatim by the channel and shm transports, so
+//! `CommStats` byte counts report what a real wire would carry.
+
+/// A spike record the packer can (de)serialize: an AER `(gid, t_us)`
+/// pair. Implemented by `engine::process::WireSpike`; the trait keeps
+/// the transport layer free of engine types.
+pub trait SpikeRecord: Copy {
+    fn gid(&self) -> u32;
+    fn t_us(&self) -> u32;
+    fn from_parts(gid: u32, t_us: u32) -> Self;
+}
+
+/// Append `v` as a LEB128 varint (1–5 bytes for u32).
+#[inline]
+fn put_varint(out: &mut Vec<u8>, mut v: u32) {
+    loop {
+        // lint: allow(lossy-cast, "masked to 7 bits above")
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Read a LEB128 varint; advances `pos`. Panics on truncation or
+/// overflow — payloads come from this same build's packer, so a
+/// malformed stream is a transport bug worth surfacing loudly (the
+/// executor's panic machinery attributes it to the rank).
+#[inline]
+fn take_varint(bytes: &[u8], pos: &mut usize) -> u32 {
+    let mut v: u32 = 0;
+    let mut shift = 0u32;
+    loop {
+        let b = *bytes
+            .get(*pos)
+            .unwrap_or_else(|| panic!("packed spike payload truncated at byte {}", *pos));
+        *pos += 1;
+        assert!(shift < 35, "packed spike varint overflows u32");
+        v |= u32::from(b & 0x7f) << shift;
+        if b & 0x80 == 0 {
+            return v;
+        }
+        shift += 7;
+    }
+}
+
+/// Pack one per-destination spike payload. Sorts `spikes` by
+/// `(gid, t_us)` in place (see the module docs on why reordering is
+/// safe), then emits the delta-encoded byte form.
+pub fn pack_spikes<S: SpikeRecord>(spikes: &mut [S]) -> Vec<u8> {
+    spikes.sort_unstable_by_key(|s| (s.gid(), s.t_us()));
+    let base_t = spikes.iter().map(SpikeRecord::t_us).min().unwrap_or(0);
+    let mut out = Vec::with_capacity(8 + spikes.len() * 3);
+    out.extend_from_slice(&u32::try_from(spikes.len()).expect("payload fits u32").to_le_bytes());
+    out.extend_from_slice(&base_t.to_le_bytes());
+    let mut prev_gid = 0u32;
+    for s in spikes.iter() {
+        put_varint(&mut out, s.gid() - prev_gid);
+        put_varint(&mut out, s.t_us() - base_t);
+        prev_gid = s.gid();
+    }
+    out
+}
+
+/// Unpack a payload produced by [`pack_spikes`], appending to `out`.
+/// Returns the number of spikes decoded.
+pub fn unpack_spikes<S: SpikeRecord>(bytes: &[u8], out: &mut Vec<S>) -> usize {
+    assert!(bytes.len() >= 8, "packed spike payload shorter than its header");
+    let count = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as usize;
+    let base_t = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+    let mut pos = 8usize;
+    out.reserve(count);
+    let mut gid = 0u32;
+    for _ in 0..count {
+        gid += take_varint(bytes, &mut pos);
+        let t_us = base_t + take_varint(bytes, &mut pos);
+        out.push(S::from_parts(gid, t_us));
+    }
+    assert_eq!(pos, bytes.len(), "trailing bytes after the last packed spike");
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+    struct Sp {
+        gid: u32,
+        t_us: u32,
+    }
+
+    impl SpikeRecord for Sp {
+        fn gid(&self) -> u32 {
+            self.gid
+        }
+        fn t_us(&self) -> u32 {
+            self.t_us
+        }
+        fn from_parts(gid: u32, t_us: u32) -> Self {
+            Sp { gid, t_us }
+        }
+    }
+
+    fn roundtrip(mut spikes: Vec<Sp>) -> Vec<Sp> {
+        let bytes = pack_spikes(&mut spikes);
+        let mut out = Vec::new();
+        let n = unpack_spikes::<Sp>(&bytes, &mut out);
+        assert_eq!(n, spikes.len());
+        out
+    }
+
+    #[test]
+    fn empty_payload_roundtrips() {
+        assert!(roundtrip(Vec::new()).is_empty());
+        let bytes = pack_spikes::<Sp>(&mut []);
+        assert_eq!(bytes.len(), 8);
+    }
+
+    #[test]
+    fn roundtrip_preserves_the_sorted_multiset() {
+        let spikes = vec![
+            Sp { gid: 900, t_us: 5_000 },
+            Sp { gid: 3, t_us: 5_200 },
+            Sp { gid: 3, t_us: 5_100 },
+            Sp { gid: 3, t_us: 5_100 }, // duplicate record survives
+            Sp { gid: 901, t_us: 4_999 },
+        ];
+        let mut expect = spikes.clone();
+        expect.sort();
+        assert_eq!(roundtrip(spikes), expect);
+    }
+
+    #[test]
+    fn extreme_u32_values_roundtrip_exactly() {
+        let spikes = vec![
+            Sp { gid: 0, t_us: u32::MAX },
+            Sp { gid: u32::MAX, t_us: 0 },
+            Sp { gid: u32::MAX, t_us: u32::MAX },
+        ];
+        let mut expect = spikes.clone();
+        expect.sort();
+        assert_eq!(roundtrip(spikes), expect);
+    }
+
+    #[test]
+    fn random_payloads_roundtrip() {
+        let mut rng = Pcg64::new(0x5eed, 7);
+        for trial in 0..50u64 {
+            let n = (rng.next_u64() % 200) as usize;
+            let spikes: Vec<Sp> = (0..n)
+                .map(|_| Sp {
+                    gid: (rng.next_u64() % 50_000) as u32,
+                    t_us: (rng.next_u64() % 2_000_000) as u32,
+                })
+                .collect();
+            let mut expect = spikes.clone();
+            expect.sort();
+            assert_eq!(roundtrip(spikes), expect, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn clustered_gids_pack_small() {
+        // 100 consecutive gids in a 1 ms window: ~2 bytes/spike vs the
+        // historical 8-byte AER record
+        let mut spikes: Vec<Sp> =
+            (0..100).map(|i| Sp { gid: 10_000 + i, t_us: 42_000 + i }).collect();
+        let bytes = pack_spikes(&mut spikes);
+        assert!(bytes.len() < 100 * 4, "packed {} bytes for 100 spikes", bytes.len());
+    }
+}

@@ -105,7 +105,7 @@ pub fn fig2_report() -> String {
         let cfg = cfg_for(24, rule);
         let grid = Grid::new(cfg.grid);
         let stencil = Stencil::remote(&cfg.conn, &grid);
-        let m = (stencil.bbox_side as i32 - 1) / 2;
+        let m = i32::try_from((stencil.bbox_side - 1) / 2).expect("stencil half-side fits i32");
         let exc = cfg.grid.exc_per_column() as f64;
         let npc = cfg.grid.neurons_per_column as f64;
         out.push_str(&format!(

@@ -44,6 +44,20 @@ pub struct WireSynapse {
 impl crate::mpi::Wire for WireSynapse {
     /// What MPI would ship per synapse in the construction Alltoallv.
     const WIRE_SIZE: usize = 16;
+    fn write_le(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.src_gid.to_le_bytes());
+        out.extend_from_slice(&self.tgt_gid.to_le_bytes());
+        out.extend_from_slice(&self.weight.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.delay_us.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        WireSynapse {
+            src_gid: u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]),
+            tgt_gid: u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]),
+            weight: f32::from_bits(u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]])),
+            delay_us: u32::from_le_bytes([bytes[12], bytes[13], bytes[14], bytes[15]]),
+        }
+    }
 }
 
 /// One stored synapse: exactly 12 bytes (repr(C), align 4) — the

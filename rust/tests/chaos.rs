@@ -9,12 +9,16 @@
 //! * An unrecoverable fault exhausts the retry budget and surfaces the
 //!   *original* panic payload, with the give-up counted.
 //! * A delayed reply below the watchdog deadline is benign.
+//! * The same matrix holds on the **shm transport** (forked worker
+//!   processes): a worker process that panics, hangs, or plain *dies*
+//!   (`FaultMode::Die` — `_exit` mid-step, no reply, no ring close) is
+//!   diagnosed by name and recovered from bit-identically.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 
 use dpsnn::config::SimConfig;
 use dpsnn::engine::{FaultMode, FaultPhase, FaultPlan, RunOptions};
-use dpsnn::{ActivityProbe, Network, RecoveryStats, SimulationBuilder};
+use dpsnn::{ActivityProbe, Network, RecoveryStats, SimulationBuilder, TransportKind};
 
 fn cfg(ranks: u32) -> SimConfig {
     let mut c = SimConfig::test_small();
@@ -36,7 +40,16 @@ fn opts_recovering(fault: Option<FaultPlan>) -> RunOptions {
 }
 
 fn build(ranks: u32, opts: RunOptions) -> Network {
-    SimulationBuilder::from_parts(cfg(ranks), opts).build().expect("construction")
+    build_t(ranks, opts, TransportKind::Channel)
+}
+
+/// [`build`] with an explicit transport (explicit config wins over a
+/// CI-forced `DPSNN_TRANSPORT`, so the channel tests stay meaningful).
+fn build_t(ranks: u32, opts: RunOptions, transport: TransportKind) -> Network {
+    SimulationBuilder::from_parts(cfg(ranks), opts)
+        .transport(transport)
+        .build()
+        .expect("construction")
 }
 
 /// Advance `ms` recording per-step global column activity.
@@ -158,6 +171,105 @@ fn retry_exhaustion_preserves_the_original_fault_payload() {
     assert_eq!(stats.giveups, 1, "{stats:?}");
     assert_eq!(stats.retries_spent, 2, "{stats:?}");
     assert!(net.poison_message().is_some(), "exhaustion must leave the poison visible");
+}
+
+#[test]
+fn die_fault_recovers_bit_identically_on_both_backends() {
+    // a worker that VANISHES mid-step (no panic reply, no clean ring
+    // close) on either backend: the pool diagnoses it (watchdog on
+    // threads, waitpid on processes), rebuilds, and replays from the
+    // auto-checkpoint to the exact unfaulted spike train
+    let reference = run_recorded(&mut build(2, opts_recovering(None)), 30.0);
+    assert!(reference.iter().flatten().any(|&n| n > 0), "reference must be active");
+    for transport in [TransportKind::Channel, TransportKind::Shm] {
+        let fault = FaultPlan {
+            rank: 1,
+            step: 5,
+            phase: FaultPhase::AfterPack,
+            mode: FaultMode::Die,
+            max_fires: 1,
+        };
+        let mut opts = opts_recovering(Some(fault));
+        // the thread backend can only notice a silent worker through
+        // the watchdog; the proc backend reaps it via waitpid first
+        opts.watchdog_timeout_ms = Some(400);
+        let mut net = build_t(2, opts, transport);
+        let rows = run_recorded(&mut net, 30.0);
+        assert_eq!(rows, reference, "post-death recovery diverged over {transport:?}");
+        assert!(
+            net.recovery_stats().recoveries >= 1,
+            "no recovery recorded over {transport:?}"
+        );
+        assert_eq!(net.recovery_stats().giveups, 0, "over {transport:?}");
+        assert!(net.poison_message().is_none(), "left poisoned over {transport:?}");
+    }
+}
+
+#[test]
+fn died_shm_worker_is_named_by_the_parent() {
+    // recovery NOT armed: the waitpid diagnosis is terminal and must
+    // name the dead rank — not the "hung up" cascade its peers raise
+    let fault = FaultPlan {
+        rank: 1,
+        step: 3,
+        phase: FaultPhase::AfterPack,
+        mode: FaultMode::Die,
+        max_fires: 1,
+    };
+    let opts = RunOptions { fault: Some(fault), ..Default::default() };
+    let mut net = build_t(2, opts, TransportKind::Shm);
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        net.session().advance(10.0);
+    }));
+    let payload = result.expect_err("a dead worker process must poison the session");
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .expect("panic payload should be the executor's message");
+    assert!(msg.contains("rank 1 worker process"), "dead rank not named: {msg}");
+    assert!(!msg.contains("hung up"), "cascade masked the real diagnosis: {msg}");
+    drop(net);
+}
+
+#[test]
+fn panic_at_every_phase_recovers_bit_identically_over_shm() {
+    // the thread-backend matrix above, on forked worker processes: the
+    // panic travels back through the reply ring, recovery re-forks from
+    // pristine construction state and restores the auto-checkpoint
+    let reference = run_recorded(
+        &mut build_t(2, opts_recovering(None), TransportKind::Shm),
+        30.0,
+    );
+    for phase in [FaultPhase::StepStart, FaultPhase::AfterExchange, FaultPhase::StepEnd] {
+        let fault = FaultPlan { rank: 1, step: 5, phase, mode: FaultMode::Panic, max_fires: 1 };
+        let mut net = build_t(2, opts_recovering(Some(fault)), TransportKind::Shm);
+        let rows = run_recorded(&mut net, 30.0);
+        assert_eq!(rows, reference, "shm recovery diverged (fault at {phase:?})");
+        assert!(net.recovery_stats().recoveries >= 1, "no shm recovery at {phase:?}");
+        assert!(net.poison_message().is_none());
+    }
+}
+
+#[test]
+fn hung_shm_rank_is_diagnosed_by_the_watchdog() {
+    let opts = RunOptions {
+        fault: Some(FaultPlan::hang_at(1, 3)),
+        watchdog_timeout_ms: Some(400),
+        ..Default::default()
+    };
+    let mut net = build_t(2, opts, TransportKind::Shm);
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        net.session().advance(10.0);
+    }));
+    let payload = result.expect_err("a hung shm worker must poison, not deadlock");
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .expect("panic payload should be the executor's message");
+    assert!(msg.contains("watchdog"), "{msg}");
+    assert!(msg.contains("rank 1"), "stuck rank not named: {msg}");
+    // dropping the poisoned network must kill + reap the stuck child
+    drop(net);
 }
 
 #[test]

@@ -1,0 +1,189 @@
+//! Integration: the cross-backend transport contract.
+//!
+//! The channel (threads + in-process channels) and shm (forked worker
+//! processes + shared-memory rings) transports must be observationally
+//! indistinguishable: identical spike trains across rank counts and
+//! mappings, through reset-replay, and through a checkpoint/restore
+//! cycle that crosses backends. The transport is selected explicitly
+//! per network here, so a CI run that forces `DPSNN_TRANSPORT=shm`
+//! does not vacuate the comparison — explicit config wins over the
+//! environment default.
+
+use dpsnn::config::SimConfig;
+use dpsnn::engine::RunOptions;
+use dpsnn::geometry::Mapping;
+use dpsnn::{ActivityProbe, Network, SimulationBuilder, TransportKind};
+
+fn cfg(ranks: u32) -> SimConfig {
+    let mut c = SimConfig::test_small();
+    c.external.synapses_per_neuron = 100;
+    c.external.rate_hz = 30.0;
+    c.ranks = ranks;
+    c
+}
+
+fn build(ranks: u32, mapping: Mapping, transport: TransportKind) -> Network {
+    SimulationBuilder::from_config(cfg(ranks))
+        .mapping(mapping)
+        .transport(transport)
+        .build()
+        .expect("construction")
+}
+
+/// Advance `ms` recording per-step global column activity.
+fn run_recorded(net: &mut Network, ms: f64) -> Vec<Vec<u32>> {
+    let mut activity = ActivityProbe::new();
+    {
+        let mut session = net.session();
+        session.attach(&mut activity);
+        session.advance(ms);
+    }
+    activity.into_rows()
+}
+
+#[test]
+fn shm_backend_is_bit_identical_to_channel_across_ranks_and_mappings() {
+    // the decomposition-invariance contract, extended across backends:
+    // ONE reference spike train, reproduced by every (ranks, mapping,
+    // transport) combination
+    let reference = run_recorded(&mut build(1, Mapping::Block, TransportKind::Channel), 30.0);
+    assert!(
+        reference.iter().flatten().any(|&n| n > 0),
+        "reference run must be active"
+    );
+    for (ranks, mapping) in [
+        (1, Mapping::Block),
+        (2, Mapping::Block),
+        (4, Mapping::Block),
+        (2, Mapping::RoundRobin),
+        (4, Mapping::RoundRobin),
+    ] {
+        let mut net = build(ranks, mapping, TransportKind::Shm);
+        let rows = run_recorded(&mut net, 30.0);
+        assert_eq!(
+            rows, reference,
+            "shm diverged from channel at ranks={ranks} mapping={mapping:?}"
+        );
+    }
+}
+
+#[test]
+fn shm_reset_replay_is_bit_identical() {
+    let mut net = build(2, Mapping::Block, TransportKind::Shm);
+    let synapses = net.synapses();
+    let first = run_recorded(&mut net, 30.0);
+    net.reset();
+    let replay = run_recorded(&mut net, 30.0);
+    assert_eq!(first, replay, "shm reset-replay diverged");
+    assert_eq!(net.synapses(), synapses, "reset must not touch connectivity");
+}
+
+#[test]
+fn checkpoint_restore_cycle_crosses_backends_bit_identically() {
+    // run the channel network to t=20ms, checkpoint, restore the bytes
+    // into a freshly-built shm network, and continue BOTH for another
+    // 20ms: the two continuations must be bit-identical
+    let mut channel = build(2, Mapping::Block, TransportKind::Channel);
+    let _ = run_recorded(&mut channel, 20.0);
+    let bytes = channel.checkpoint().expect("checkpoint");
+    let tail_channel = run_recorded(&mut channel, 20.0);
+
+    let mut shm = build(2, Mapping::Block, TransportKind::Shm);
+    shm.restore(&bytes).expect("restore channel checkpoint into shm network");
+    let tail_shm = run_recorded(&mut shm, 20.0);
+    assert_eq!(tail_channel, tail_shm, "cross-backend restore diverged");
+
+    // and the reverse direction: shm checkpoint into a channel network
+    let bytes = shm.checkpoint().expect("shm checkpoint");
+    let mut channel2 = build(2, Mapping::Block, TransportKind::Channel);
+    channel2.restore(&bytes).expect("restore shm checkpoint into channel network");
+    let tail2_shm = run_recorded(&mut shm, 10.0);
+    let tail2_channel = run_recorded(&mut channel2, 10.0);
+    assert_eq!(tail2_shm, tail2_channel, "reverse cross-backend restore diverged");
+}
+
+#[test]
+fn hierarchical_construction_exchange_is_decomposition_invariant() {
+    // the paper's two-step hierarchical Alltoallv reorders the
+    // construction-phase payload exchange through per-node leaders; the
+    // built network must be identical for every ranks_per_node grouping
+    // (including one that does not divide the rank count)
+    let reference = {
+        let mut net = SimulationBuilder::from_config(cfg(4))
+            .transport(TransportKind::Channel)
+            .build()
+            .expect("construction");
+        (net.synapses(), run_recorded(&mut net, 30.0))
+    };
+    for rpn in [2u32, 3, 4] {
+        let mut net = SimulationBuilder::from_config(cfg(4))
+            .transport(TransportKind::Channel)
+            .ranks_per_node(rpn)
+            .build()
+            .expect("construction");
+        assert_eq!(net.synapses(), reference.0, "synapse totals differ at rpn={rpn}");
+        let rows = run_recorded(&mut net, 30.0);
+        assert_eq!(rows, reference.1, "dynamics diverged at ranks_per_node={rpn}");
+    }
+}
+
+#[test]
+fn shm_summary_and_metrics_match_channel() {
+    // the Report round-trip through the shm command rings must carry
+    // the same counters the thread backend reads directly
+    let mut a = build(2, Mapping::Block, TransportKind::Channel);
+    let mut b = build(2, Mapping::Block, TransportKind::Shm);
+    let _ = run_recorded(&mut a, 25.0);
+    let _ = run_recorded(&mut b, 25.0);
+    let (sa, sb) = (a.summary(), b.summary());
+    assert_eq!(sa.spikes(), sb.spikes());
+    assert_eq!(sa.equivalent_events(), sb.equivalent_events());
+    assert_eq!(sa.neurons, sb.neurons);
+    assert_eq!(sa.synapses(), sb.synapses());
+    let spikes_a: Vec<u64> = sa.reports.iter().map(|r| r.spikes).collect();
+    let spikes_b: Vec<u64> = sb.reports.iter().map(|r| r.spikes).collect();
+    assert_eq!(spikes_a, spikes_b, "per-rank spike counts differ across backends");
+}
+
+#[test]
+fn explicit_shm_with_xla_solver_is_rejected() {
+    let mut c = cfg(2);
+    c.transport = Some(TransportKind::Shm);
+    c.solver = dpsnn::config::Solver::Xla;
+    let err = c.validate().expect_err("shm + xla must be rejected");
+    assert!(err.contains("shm"), "{err}");
+    assert!(err.contains("fork"), "{err}");
+}
+
+#[test]
+fn set_external_sweeps_work_over_shm() {
+    // stimulus sweeps route SetExternal commands through the cmd rings;
+    // the swept shm run must match the swept channel run exactly
+    let sweep = |transport: TransportKind| -> Vec<Vec<u32>> {
+        let mut net = build(2, Mapping::Block, transport);
+        let mut rows = run_recorded(&mut net, 15.0);
+        net.set_external(100, 45.0);
+        rows.extend(run_recorded(&mut net, 15.0));
+        rows
+    };
+    assert_eq!(
+        sweep(TransportKind::Channel),
+        sweep(TransportKind::Shm),
+        "swept runs diverged across backends"
+    );
+}
+
+#[test]
+fn run_options_still_apply_over_shm() {
+    // naive delivery (full Alltoallv each step) must stay bit-identical
+    // to the two-step subset protocol on the shm backend too
+    let run = |naive: bool| -> Vec<Vec<u32>> {
+        let opts = RunOptions { naive_delivery: naive, ..Default::default() };
+        let mut net = SimulationBuilder::from_parts(cfg(3), opts)
+            .transport(TransportKind::Shm)
+            .build()
+            .expect("construction");
+        run_recorded(&mut net, 20.0)
+    };
+    assert_eq!(run(false), run(true), "naive vs two-step diverged over shm");
+}
