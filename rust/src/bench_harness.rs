@@ -7,13 +7,15 @@
 
 // lint: allow-file(nondeterminism-source, "bench harness: wall-clock timing is the product")
 
-use crate::config::{AreaParams, GridParams, NeuronParams, ProjectionParams, TransportKind};
+use crate::config::{
+    AreaParams, GridParams, ModelKind, NeuronParams, ProjectionParams, TransportKind,
+};
 use crate::coordinator::session::construct_pairs;
 use crate::coordinator::{Network, SimulationBuilder};
 use crate::geometry::Mapping;
 use crate::engine::probe::SpikeCountProbe;
 use crate::engine::{NeuronStateSoA, Phase};
-use crate::neuron::{LifParams, LifState};
+use crate::neuron::{LifParams, LifState, ModelParams};
 use crate::synapse::{DelayQueue, PendingEvent, SynapseStore, TargetGrouper};
 use crate::util::json::Json;
 use crate::util::stats::Running;
@@ -409,6 +411,25 @@ pub struct DynamicsSoaMicro {
     pub cells: Vec<SoaCell>,
 }
 
+/// One `dynamics_models` cell (schema 7): the registry's generic
+/// gather/scatter path ([`NeuronStateSoA::inject_model`]) measured per
+/// built-in neuron model — the loop the engine runs for time-driven
+/// (Izhikevich/AdEx) and per-neuron-sampled populations. The LIF entry
+/// doubles as the cost of routing LIF through the generic path instead
+/// of the ExpMemo fast path.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelCell {
+    pub model: &'static str,
+    pub touched: u32,
+    pub ns_per_step: f64,
+}
+
+/// The full `dynamics_models` record: one cell per registered model.
+#[derive(Clone, Debug)]
+pub struct DynamicsModelsMicro {
+    pub cells: Vec<ModelCell>,
+}
+
 /// Everything `dpsnn bench` measures.
 #[derive(Clone, Debug)]
 pub struct BenchReport {
@@ -419,6 +440,7 @@ pub struct BenchReport {
     pub grouping: GroupingMicro,
     pub executor: ExecutorBench,
     pub dynamics_soa: DynamicsSoaMicro,
+    pub dynamics_models: DynamicsModelsMicro,
     pub transport: TransportExchange,
 }
 
@@ -639,6 +661,10 @@ fn bench_dynamics_soa(p: &BenchParams) -> DynamicsSoaMicro {
         LifParams::new(&NeuronParams::excitatory()),
         LifParams::new(&NeuronParams::inhibitory()),
     ];
+    let table = vec![
+        ModelParams::new(&NeuronParams::excitatory()),
+        ModelParams::new(&NeuronParams::inhibitory()),
+    ];
     let mut cells = Vec::new();
     for &touched in &p.soa_touched {
         for regime in ["dense", "silent"] {
@@ -662,7 +688,7 @@ fn bench_dynamics_soa(p: &BenchParams) -> DynamicsSoaMicro {
                 }
             });
 
-            let mut soa = NeuronStateSoA::build(params.clone(), ids);
+            let mut soa = NeuronStateSoA::build(table.clone(), ids, None);
             let mut t = 0.0f64;
             let (soa_mean, _) = time_ns(p.demux_warmup, p.demux_iters, || {
                 t += 1.0;
@@ -681,6 +707,37 @@ fn bench_dynamics_soa(p: &BenchParams) -> DynamicsSoaMicro {
         }
     }
     DynamicsSoaMicro { cells }
+}
+
+/// `dynamics_models`: each registered model driven through the generic
+/// registry path over the smallest touched count of the SoA matrix —
+/// one event per neuron per step, population parameters alternating
+/// excitatory/inhibitory like the engine's per-area table. Time-driven
+/// models (Izhikevich, AdEx) pay their fixed-step substepping inside
+/// each call, so the per-model figures are not expected to match; the
+/// record tracks each one against its own history.
+fn bench_dynamics_models(p: &BenchParams) -> DynamicsModelsMicro {
+    let touched = p.soa_touched[0];
+    let mut cells = Vec::new();
+    for kind in ModelKind::ALL {
+        let mut exc = NeuronParams::excitatory();
+        let mut inh = NeuronParams::inhibitory();
+        exc.model = kind;
+        inh.model = kind;
+        let table = vec![ModelParams::new(&exc), ModelParams::new(&inh)];
+        let ids: Vec<u8> = (0..touched).map(|l| (l % 2) as u8).collect();
+        let mut soa = NeuronStateSoA::build(table, ids, None);
+        let mut sink = |_ts: f64| {};
+        let mut t = 0.0f64;
+        let (mean, _) = time_ns(p.demux_warmup, p.demux_iters, || {
+            t += 1.0;
+            for l in 0..touched {
+                std::hint::black_box(soa.inject_model(l, t, 0.5, &mut sink));
+            }
+        });
+        cells.push(ModelCell { model: kind.name(), touched, ns_per_step: mean });
+    }
+    DynamicsModelsMicro { cells }
 }
 
 /// `executor_spawn_vs_pool`: same configuration, same seed, same spike
@@ -831,6 +888,7 @@ pub fn run_bench_with(quick: bool, p: &BenchParams) -> BenchReport {
         grouping: bench_grouping(p),
         executor: bench_executor(p),
         dynamics_soa: bench_dynamics_soa(p),
+        dynamics_models: bench_dynamics_models(p),
         transport: bench_transport(p),
     }
 }
@@ -901,6 +959,14 @@ impl BenchReport {
                 c.speedup(),
             ));
         }
+        for c in &self.dynamics_models.cells {
+            out.push_str(&format!(
+                "dynamics models ({} x{}): {} per step via the registry path\n",
+                c.model,
+                c.touched,
+                fmt_ns(c.ns_per_step),
+            ));
+        }
         out.push_str(&format!(
             "transport exchange: channel {} -> shm {} per step ({:.2}x, {} ranks); \
              topology model {:.1} predicted vs {:.1} measured axon visits/step \
@@ -916,8 +982,10 @@ impl BenchReport {
         out
     }
 
-    /// Machine record (`BENCH.json`): schema 6. Hand-rolled writer —
-    /// the offline image has no serde. Schema 6 adds the
+    /// Machine record (`BENCH.json`): schema 7. Hand-rolled writer —
+    /// the offline image has no serde. Schema 7 adds the
+    /// `dynamics_models` record (per-model ns/step of the neuron-model
+    /// registry's generic path); schema 6 added the
     /// `transport_exchange` record (channel vs shm exchange cost, and
     /// the perfmodel topology prediction vs measured spike traffic);
     /// schema 5 added the `dynamics_soa`
@@ -936,7 +1004,7 @@ impl BenchReport {
             .unwrap_or(0);
         let mut s = String::new();
         s.push_str("{\n");
-        s.push_str("  \"schema\": 6,\n");
+        s.push_str("  \"schema\": 7,\n");
         s.push_str(&format!("  \"created_unix_s\": {unix_s},\n"));
         s.push_str(&format!("  \"quick\": {},\n", self.quick));
         s.push_str("  \"matrix\": [\n");
@@ -1037,6 +1105,18 @@ impl BenchReport {
                 c.soa_ns_per_step,
                 c.speedup(),
                 if i + 1 < self.dynamics_soa.cells.len() { "," } else { "" },
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"dynamics_models\": [\n");
+        for (i, c) in self.dynamics_models.cells.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"model\": \"{}\", \"touched\": {}, \
+                 \"ns_per_step\": {:.1}}}{}\n",
+                c.model,
+                c.touched,
+                c.ns_per_step,
+                if i + 1 < self.dynamics_models.cells.len() { "," } else { "" },
             ));
         }
         s.push_str("  ]\n");
@@ -1140,6 +1220,33 @@ impl BenchReport {
                             cell.touched,
                             cell.soa_ns_per_step,
                             (cell.soa_ns_per_step / base - 1.0) * 100.0
+                        ));
+                    }
+                }
+            }
+        }
+        // dynamics_models cells match on (model, touched): every
+        // registered model's registry-path cost is gated independently
+        if let Some(model_cells) = doc.get("dynamics_models").and_then(Json::arr) {
+            for cell in &self.dynamics_models.cells {
+                let base = model_cells
+                    .iter()
+                    .find(|c| {
+                        c.get("model").and_then(Json::as_str) == Some(cell.model)
+                            && c.get("touched").and_then(Json::num)
+                                == Some(f64::from(cell.touched))
+                    })
+                    .and_then(|c| c.get("ns_per_step"))
+                    .and_then(Json::num);
+                if let Some(base) = base {
+                    checked += 1;
+                    if worse(cell.ns_per_step, base) {
+                        regressions.push(format!(
+                            "dynamics_models {} x{}: {base:.1} -> {:.1} ns/step (+{:.0}%)",
+                            cell.model,
+                            cell.touched,
+                            cell.ns_per_step,
+                            (cell.ns_per_step / base - 1.0) * 100.0
                         ));
                     }
                 }
@@ -1253,6 +1360,12 @@ mod tests {
             assert_eq!(c.events_per_step, u64::from(c.touched));
             assert!(c.regime == "dense" || c.regime == "silent");
         }
+        // dynamics_models: one measured cell per registered model
+        assert_eq!(report.dynamics_models.cells.len(), ModelKind::ALL.len());
+        for c in &report.dynamics_models.cells {
+            assert!(c.ns_per_step > 0.0, "model {} not measured", c.model);
+            assert_eq!(c.touched, p.soa_touched[0]);
+        }
         // transport_exchange: both backends measured on the same
         // configuration, and the topology model produced a prediction
         assert_eq!(report.transport.ranks, 2);
@@ -1270,7 +1383,7 @@ mod tests {
 
         let json = report.to_json();
         for key in [
-            "\"schema\": 6",
+            "\"schema\": 7",
             "\"matrix\"",
             "\"kernel\": \"gaussian\"",
             "\"kernel\": \"exponential\"",
@@ -1287,6 +1400,10 @@ mod tests {
             "\"regime\": \"dense\"",
             "\"regime\": \"silent\"",
             "\"soa_ns_per_step\"",
+            "\"dynamics_models\"",
+            "\"model\": \"lif\"",
+            "\"model\": \"izhikevich\"",
+            "\"model\": \"adex\"",
             "\"transport_exchange\"",
             "\"channel_exchange_ns_per_step\"",
             "\"shm_exchange_ns_per_step\"",
@@ -1299,12 +1416,12 @@ mod tests {
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());
         let doc = crate::util::json::parse(&json).expect("BENCH.json must parse");
-        assert_eq!(doc.get("schema").and_then(crate::util::json::Json::num), Some(6.0));
+        assert_eq!(doc.get("schema").and_then(crate::util::json::Json::num), Some(7.0));
         // the human rendering mentions every phase of the breakdown
         let table = report.render();
         for col in [
             "pack", "exchange", "demux", "dynamics", "silent dynamics", "executor",
-            "dynamics soa", "transport exchange",
+            "dynamics soa", "dynamics models", "transport exchange",
         ] {
             assert!(table.contains(col), "missing {col}");
         }
@@ -1330,13 +1447,18 @@ mod tests {
   "demux_microbench": {"events_per_call": 1, "slot_ns_per_event": 0.0001},
   "dynamics_grouping": {"group_ns_per_event": 0.0001},
   "executor_spawn_vs_pool": {"pool_ns_per_step": 0.0001},
-  "dynamics_soa": [{"regime": "dense", "touched": 50, "soa_ns_per_step": 0.0001}]
+  "dynamics_soa": [{"regime": "dense", "touched": 50, "soa_ns_per_step": 0.0001}],
+  "dynamics_models": [{"model": "izhikevich", "touched": 50, "ns_per_step": 0.0001}]
 }"#;
         let regs = report.compare_against(baseline, 0.25).unwrap();
-        assert!(regs.len() >= 6, "expected widespread regressions, got {regs:?}");
+        assert!(regs.len() >= 7, "expected widespread regressions, got {regs:?}");
         assert!(regs.iter().any(|r| r.contains("gaussian x1 dynamics")), "{regs:?}");
         assert!(regs.iter().any(|r| r.contains("executor_spawn_vs_pool")), "{regs:?}");
         assert!(regs.iter().any(|r| r.contains("dynamics_soa dense x50")), "{regs:?}");
+        assert!(
+            regs.iter().any(|r| r.contains("dynamics_models izhikevich x50")),
+            "{regs:?}"
+        );
         // regenerated numbers within the threshold pass
         let regs = report.compare_against(&report.to_json(), 0.25).unwrap();
         assert!(regs.is_empty());

@@ -20,6 +20,9 @@ pub enum CheckpointError {
     UnsupportedVersion { found: u32, supported: u32 },
     /// The payload hash does not match the trailer: bytes were altered.
     HashMismatch { expect: u64, found: u64 },
+    /// A neuron-model wire tag this build does not know — a checkpoint
+    /// from a build with more registered models than this one.
+    UnknownModelTag { tag: u8 },
     /// Structurally invalid payload (impossible count, unknown tag,
     /// trailing bytes, ...): the named detail says which field.
     Malformed(String),
@@ -46,6 +49,13 @@ impl fmt::Display for CheckpointError {
                     f,
                     "checkpoint payload corrupted: hash {found:#018x} != \
                      trailer {expect:#018x}"
+                )
+            }
+            CheckpointError::UnknownModelTag { tag } => {
+                write!(
+                    f,
+                    "checkpoint carries neuron-model tag {tag}, which this \
+                     build does not register"
                 )
             }
             CheckpointError::Malformed(detail) => {

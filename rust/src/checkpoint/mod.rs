@@ -5,7 +5,7 @@
 //! ```text
 //! offset  size  field
 //!      0     8  magic  "DPSNNCKP"
-//!      8     4  format version (u32 LE, currently 1)
+//!      8     4  format version (u32 LE, currently 2)
 //!     12     8  payload length  (u64 LE)
 //!     20     n  payload — the CheckpointImage (see `state`)
 //!   20+n     8  FNV-1a 64 hash of the payload (u64 LE)
@@ -31,8 +31,11 @@ pub use state::{
 /// Leading magic of every checkpoint envelope.
 pub const CHECKPOINT_MAGIC: [u8; 8] = *b"DPSNNCKP";
 
-/// Format version this build writes and reads.
-pub const CHECKPOINT_VERSION: u32 = 1;
+/// Format version this build writes and reads. Version 2 replaced the
+/// fixed `Vec<LifState>` neuron record with the model-generic lane
+/// payload (lane count + flattened lane-major data + model-tag
+/// signature); version-1 checkpoints are rejected by the version check.
+pub const CHECKPOINT_VERSION: u32 = 2;
 
 /// Byte offset of the version field inside the envelope.
 pub const ENVELOPE_VERSION_OFFSET: usize = 8;

@@ -18,10 +18,9 @@
 
 use crate::checkpoint::codec::{CheckpointError, Reader, Writer};
 use crate::checkpoint::{seal, unseal};
-use crate::config::{ExternalOverride, ExternalParams};
+use crate::config::{ExternalOverride, ExternalParams, ModelKind};
 use crate::engine::LocalSpike;
 use crate::geometry::Mapping;
-use crate::neuron::LifState;
 use crate::stimulus::CalendarEntry;
 use crate::synapse::PendingEvent;
 
@@ -63,8 +62,18 @@ pub struct CounterState {
 pub struct RankState {
     pub rank: u32,
     pub n_local: u32,
-    /// LIF+SFA state per local neuron.
-    pub states: Vec<LifState>,
+    /// State lanes per neuron (the SoA lane count — a function of the
+    /// models in the parameter table, format version 2).
+    pub n_lanes: u32,
+    /// Flattened lane-major neuron state: `n_lanes × n_local` values,
+    /// lane 0 of every neuron first, then lane 1, and so on. Generic
+    /// over the neuron model — a LIF network carries `v`/`c`/`last_t`/
+    /// `refr_until`, an Izhikevich network `v`/`u`/`last_t`.
+    pub lane_data: Vec<f64>,
+    /// Stable wire tag ([`ModelKind::tag`]) of every parameter-table
+    /// entry, in table order — the model signature a restore must
+    /// match (and the field that makes the payload self-describing).
+    pub model_tags: Vec<u8>,
     /// Delay-ring origin step at snapshot time.
     pub queue_base: u64,
     /// In-flight synaptic events as (arrival step, event).
@@ -116,10 +125,11 @@ impl RankState {
             ));
         }
         let n = exp.n_local as usize;
-        if self.states.len() != n {
+        if self.lane_data.len() != n * self.n_lanes as usize {
             return Err(format!(
-                "rank {r}: {} LIF states for {n} neurons",
-                self.states.len()
+                "rank {r}: {} lane values for {n} neurons x {} lanes",
+                self.lane_data.len(),
+                self.n_lanes
             ));
         }
         if self.streams.len() != n {
@@ -215,12 +225,14 @@ impl RankState {
     pub(crate) fn encode_into(&self, w: &mut Writer) {
         w.put_u32(self.rank);
         w.put_u32(self.n_local);
-        w.put_len(self.states.len());
-        for s in &self.states {
-            w.put_f64(s.v);
-            w.put_f64(s.c);
-            w.put_f64(s.last_t);
-            w.put_f64(s.refr_until);
+        w.put_u32(self.n_lanes);
+        w.put_len(self.lane_data.len());
+        for &x in &self.lane_data {
+            w.put_f64(x);
+        }
+        w.put_len(self.model_tags.len());
+        for &t in &self.model_tags {
+            w.put_u8(t);
         }
         w.put_u64(self.queue_base);
         w.put_len(self.queue_events.len());
@@ -304,15 +316,23 @@ impl RankState {
     pub(crate) fn decode_from(r: &mut Reader<'_>) -> Result<RankState, CheckpointError> {
         let rank = r.take_u32()?;
         let n_local = r.take_u32()?;
-        let n_states = r.take_len(32)?;
-        let mut states = Vec::with_capacity(n_states);
-        for _ in 0..n_states {
-            states.push(LifState {
-                v: r.take_f64()?,
-                c: r.take_f64()?,
-                last_t: r.take_f64()?,
-                refr_until: r.take_f64()?,
-            });
+        let n_lanes = r.take_u32()?;
+        let n_vals = r.take_len(8)?;
+        let mut lane_data = Vec::with_capacity(n_vals);
+        for _ in 0..n_vals {
+            lane_data.push(r.take_f64()?);
+        }
+        let n_tags = r.take_len(1)?;
+        let mut model_tags = Vec::with_capacity(n_tags);
+        for _ in 0..n_tags {
+            let tag = r.take_u8()?;
+            // reject unknown neuron-model tags by name: a checkpoint
+            // from a build with models this one does not know must not
+            // decode into lanes that would silently misinterpret
+            if ModelKind::from_tag(tag).is_none() {
+                return Err(CheckpointError::UnknownModelTag { tag });
+            }
+            model_tags.push(tag);
         }
         let queue_base = r.take_u64()?;
         let n_queue = r.take_len(24)?;
@@ -421,7 +441,9 @@ impl RankState {
         Ok(RankState {
             rank,
             n_local,
-            states,
+            n_lanes,
+            lane_data,
+            model_tags,
             queue_base,
             queue_events,
             cal_base,
@@ -565,17 +587,18 @@ mod tests {
         let n_syn = 1 + rng.next_below(11) as usize;
         let queue_base = rng.next_below(1_000);
         let cal_base = rng.next_below(1_000);
-        let states = (0..n)
-            .map(|_| LifState {
-                v: wide_f64(rng),
-                c: wide_f64(rng),
-                last_t: wide_f64(rng),
-                refr_until: if rng.next_below(4) == 0 {
-                    f64::NEG_INFINITY
+        let n_lanes = 3 + rng.next_below(2) as u32; // 3- and 4-lane layouts
+        let lane_data = (0..n * n_lanes as usize)
+            .map(|_| {
+                if rng.next_below(16) == 0 {
+                    f64::NEG_INFINITY // never-fired refractory markers
                 } else {
                     wide_f64(rng)
-                },
+                }
             })
+            .collect();
+        let model_tags = (0..1 + rng.next_below(5))
+            .map(|_| rng.next_below(ModelKind::ALL.len() as u64) as u8)
             .collect();
         let queue_events = (0..rng.next_below(5))
             .map(|_| {
@@ -621,7 +644,9 @@ mod tests {
         RankState {
             rank,
             n_local,
-            states,
+            n_lanes,
+            lane_data,
+            model_tags,
             queue_base,
             queue_events,
             cal_base,
@@ -711,6 +736,20 @@ mod tests {
                 assert_eq!(supported, CHECKPOINT_VERSION);
             }
             other => panic!("expected UnsupportedVersion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_model_tag_is_rejected_by_name() {
+        // a well-formed, correctly-hashed checkpoint whose model
+        // signature names a tag this build does not register must fail
+        // with the typed error, not decode into misread lanes
+        let mut rng = Pcg64::new(13, 0);
+        let mut img = arbitrary_image(&mut rng);
+        img.states[0].model_tags[0] = 200;
+        match CheckpointImage::decode(&img.encode()) {
+            Err(CheckpointError::UnknownModelTag { tag }) => assert_eq!(tag, 200),
+            other => panic!("expected UnknownModelTag, got {other:?}"),
         }
     }
 

@@ -61,7 +61,226 @@ pub enum DelayDist {
     Uniform,
 }
 
-/// Parameters of the LIF+SFA neuron (paper eq. 1–2).
+/// Which registered neuron model a population runs (the dynamics-side
+/// counterpart of the connectivity-kernel registry; integrators live in
+/// `neuron::model` and docs/MODELS.md spells out the contract).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// LIF with spike-frequency adaptation (paper eqs. 1–2): exact
+    /// event-driven integration, the bit-identical reference.
+    Lif,
+    /// Izhikevich (dimensional 2007 form): quadratic membrane +
+    /// recovery variable, time-driven on the fixed Euler sub-grid.
+    Izhikevich,
+    /// Adaptive exponential integrate-and-fire (Brette–Gerstner):
+    /// exponential spike initiation + adaptation current, time-driven.
+    Adex,
+}
+
+impl ModelKind {
+    /// Every registered model, in registry order (`dpsnn models`).
+    pub const ALL: [ModelKind; 3] = [ModelKind::Lif, ModelKind::Izhikevich, ModelKind::Adex];
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "lif" => Ok(ModelKind::Lif),
+            "izhikevich" | "izh" => Ok(ModelKind::Izhikevich),
+            "adex" => Ok(ModelKind::Adex),
+            other => Err(format!("unknown neuron model '{other}' (lif|izhikevich|adex)")),
+        }
+    }
+
+    #[must_use]
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::Lif => "lif",
+            ModelKind::Izhikevich => "izhikevich",
+            ModelKind::Adex => "adex",
+        }
+    }
+
+    /// The model's state-lane layout, in lane order (see
+    /// `neuron::model` for the fixed lane positions).
+    #[must_use]
+    pub fn lane_names(self) -> &'static [&'static str] {
+        match self {
+            ModelKind::Lif => &["v", "c", "last_t", "refr_until"],
+            ModelKind::Izhikevich => &["v", "u", "last_t"],
+            ModelKind::Adex => &["v", "w", "last_t", "refr_until"],
+        }
+    }
+
+    #[must_use]
+    pub fn n_lanes(self) -> usize {
+        self.lane_names().len()
+    }
+
+    /// Stable checkpoint wire tag (never reorder — serialized state
+    /// depends on it; see docs/RELIABILITY.md).
+    #[must_use]
+    pub fn tag(self) -> u8 {
+        match self {
+            ModelKind::Lif => 0,
+            ModelKind::Izhikevich => 1,
+            ModelKind::Adex => 2,
+        }
+    }
+
+    /// Inverse of [`tag`](Self::tag); `None` for tags written by a
+    /// build with models this one does not know.
+    #[must_use]
+    pub fn from_tag(tag: u8) -> Option<Self> {
+        match tag {
+            0 => Some(ModelKind::Lif),
+            1 => Some(ModelKind::Izhikevich),
+            2 => Some(ModelKind::Adex),
+            _ => None,
+        }
+    }
+
+    /// Time-driven models fire intrinsically between events and are
+    /// polled to every step boundary; event-driven LIF is visited only
+    /// when input arrives.
+    #[must_use]
+    pub fn time_driven(self) -> bool {
+        !matches!(self, ModelKind::Lif)
+    }
+
+    /// One-line registry description (`dpsnn models`).
+    #[must_use]
+    pub fn summary(self) -> &'static str {
+        match self {
+            ModelKind::Lif => {
+                "LIF + spike-frequency adaptation — exact event-driven integration \
+                 (paper eqs. 1-2); the bit-identical reference"
+            }
+            ModelKind::Izhikevich => {
+                "Izhikevich quadratic + recovery (2007 dimensional form) — \
+                 time-driven Euler sub-grid; bias-driven intrinsic firing"
+            }
+            ModelKind::Adex => {
+                "adaptive exponential IF (Brette-Gerstner) — time-driven Euler \
+                 sub-grid; exponential spike initiation + adaptation current"
+            }
+        }
+    }
+}
+
+/// Shape of a per-neuron parameter distribution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistKind {
+    /// Every neuron uses the population mean (no sampling).
+    None,
+    /// Gaussian around the mean with s.d. `width`.
+    Gaussian,
+    /// Lorentzian (Cauchy) around the mean with half-width `width` —
+    /// the heavy-tailed heterogeneity of the mean-field exemplars.
+    Lorentzian,
+}
+
+impl DistKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "" | "none" => Ok(DistKind::None),
+            "gaussian" => Ok(DistKind::Gaussian),
+            "lorentzian" | "cauchy" => Ok(DistKind::Lorentzian),
+            other => Err(format!(
+                "unknown parameter distribution '{other}' (none|gaussian|lorentzian)"
+            )),
+        }
+    }
+
+    #[must_use]
+    pub fn name(self) -> &'static str {
+        match self {
+            DistKind::None => "none",
+            DistKind::Gaussian => "gaussian",
+            DistKind::Lorentzian => "lorentzian",
+        }
+    }
+}
+
+/// Per-neuron distribution of one scalar model parameter, sampled at
+/// construction from the dedicated counter-PRNG stream keyed on the
+/// neuron's *global* id — so the draw is a pure function of
+/// `(seed, gid)` and decomposition-invariant across rank counts and
+/// mappings. Samples are truncated by rejection to a symmetric window
+/// around the mean (threshold: `(v_reset, 2·mean − v_reset)`, time
+/// constants: `(0, 2·mean)`), falling back to the mean after a bounded
+/// number of rejections.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ParamDist {
+    pub kind: DistKind,
+    /// Scale of the draw: s.d. for Gaussian, half-width γ for
+    /// Lorentzian. `0.0` degenerates to the mean exactly.
+    pub width: f64,
+}
+
+impl ParamDist {
+    /// No sampling: every neuron gets the population mean.
+    pub const NONE: ParamDist = ParamDist { kind: DistKind::None, width: 0.0 };
+
+    /// Sampling actually perturbs values (a `width = 0` distribution is
+    /// normalized away so σ=0 configs stay bit-identical to unsampled).
+    #[must_use]
+    pub fn is_active(&self) -> bool {
+        self.kind != DistKind::None && self.width > 0.0
+    }
+}
+
+/// Izhikevich-specific constants (`izh_*` keys; used only when
+/// `model = "izhikevich"`). Defaults follow the regular-spiking set of
+/// the FRE-oscillation exemplar (C=100, k=0.7, a=0.03, b=−2, d=80).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IzhCfg {
+    /// Membrane capacitance C [pF].
+    pub cap: f64,
+    /// Quadratic gain k.
+    pub k: f64,
+    /// Recovery rate a [1/ms].
+    pub a: f64,
+    /// Recovery coupling b.
+    pub b: f64,
+    /// Spike-triggered recovery increment d.
+    pub d: f64,
+    /// Spike cut-off v_peak [mV].
+    pub v_peak_mv: f64,
+}
+
+impl Default for IzhCfg {
+    fn default() -> Self {
+        IzhCfg { cap: 100.0, k: 0.7, a: 0.03, b: -2.0, d: 80.0, v_peak_mv: 35.0 }
+    }
+}
+
+/// AdEx-specific constants (`adex_*` keys; used only when
+/// `model = "adex"`). Defaults are the Brette–Gerstner regular-spiking
+/// set in gL-normalized mV units (a = a/gL, b = b/gL).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdexCfg {
+    /// Slope factor ΔT [mV].
+    pub delta_t_mv: f64,
+    /// Adaptation time constant τw [ms].
+    pub tau_w_ms: f64,
+    /// Subthreshold adaptation coupling a/gL (dimensionless).
+    pub a: f64,
+    /// Spike-triggered adaptation increment b/gL [mV].
+    pub b_mv: f64,
+    /// Spike cut-off v_peak [mV].
+    pub v_peak_mv: f64,
+}
+
+impl Default for AdexCfg {
+    fn default() -> Self {
+        AdexCfg { delta_t_mv: 2.0, tau_w_ms: 144.0, a: 0.133, b_mv: 2.68, v_peak_mv: 0.0 }
+    }
+}
+
+/// Parameters of one neuron population. The shared scalars (τ, E, Vθ,
+/// Vr, τarp, SFA) are the paper's LIF+SFA set (eq. 1–2); `model`
+/// selects the integrator that consumes them (see [`ModelKind`] for the
+/// per-model mapping), `izh`/`adex` carry the model-specific extras,
+/// and `v_theta_dist`/`tau_m_dist` optionally spread Vθ/τm per neuron.
 #[derive(Clone, Copy, Debug)]
 pub struct NeuronParams {
     /// Membrane time constant τm [ms].
@@ -80,6 +299,20 @@ pub struct NeuronParams {
     pub g_c_over_cm: f64,
     /// Fatigue increment per emitted spike α_c.
     pub alpha_c: f64,
+    /// Which registered integrator runs this population.
+    pub model: ModelKind,
+    /// Constant background drive I_bias of the time-driven models
+    /// (Izhikevich: current units consistent with C·k; AdEx: mV).
+    /// Ignored by LIF, whose drive is purely event-based.
+    pub bias: f64,
+    /// Izhikevich extras (`izh_*` keys).
+    pub izh: IzhCfg,
+    /// AdEx extras (`adex_*` keys).
+    pub adex: AdexCfg,
+    /// Per-neuron spread of the threshold Vθ (Izhikevich: v_t).
+    pub v_theta_dist: ParamDist,
+    /// Per-neuron spread of the membrane time constant τm.
+    pub tau_m_dist: ParamDist,
 }
 
 impl NeuronParams {
@@ -94,6 +327,12 @@ impl NeuronParams {
             tau_arp_ms: 2.0,
             g_c_over_cm: 0.02,
             alpha_c: 1.0,
+            model: ModelKind::Lif,
+            bias: 0.0,
+            izh: IzhCfg::default(),
+            adex: AdexCfg::default(),
+            v_theta_dist: ParamDist::NONE,
+            tau_m_dist: ParamDist::NONE,
         }
     }
 
@@ -101,6 +340,13 @@ impl NeuronParams {
     /// term is set to zero"), faster membrane.
     pub fn inhibitory() -> Self {
         NeuronParams { g_c_over_cm: 0.0, alpha_c: 0.0, tau_m_ms: 10.0, ..Self::excitatory() }
+    }
+
+    /// Some configured per-neuron distribution actually perturbs values
+    /// (σ=0 / `none` distributions are normalized away).
+    #[must_use]
+    pub fn has_active_dist(&self) -> bool {
+        self.v_theta_dist.is_active() || self.tau_m_dist.is_active()
     }
 }
 
@@ -476,6 +722,14 @@ pub struct ProjectionParams {
     /// synapses are routinely modeled stronger (or weaker) than the
     /// local plexus without touching the global `SynParams`.
     pub weight_scale: f64,
+    /// Per-synapse multiplicative efficacy spread (relative s.d., ≥ 0):
+    /// each accepted synapse's weight is further scaled by
+    /// `max(0, 1 + weight_jitter·z)` with a Gaussian `z` drawn from the
+    /// same per-source counter-PRNG stream as the synapse itself, so
+    /// the spread is decomposition-invariant. `0` (the default) draws
+    /// nothing and is bit-identical to the pre-jitter wiring
+    /// (arXiv:1512.05264 sweeps per-pathway efficacy this way).
+    pub weight_jitter: f64,
 }
 
 impl ProjectionParams {
@@ -493,11 +747,17 @@ impl ProjectionParams {
             delay_base_ms: 2.0,
             velocity_um_per_ms: 1000.0,
             weight_scale: 1.0,
+            weight_jitter: 0.0,
         }
     }
 
     pub fn weight_scale(mut self, scale: f64) -> Self {
         self.weight_scale = scale;
+        self
+    }
+
+    pub fn weight_jitter(mut self, jitter: f64) -> Self {
+        self.weight_jitter = jitter;
         self
     }
 
@@ -868,6 +1128,9 @@ impl SimConfig {
             other => return Err(format!("unknown delay_dist '{other}'")),
         }
 
+        // global `model` key: both populations at once (the common
+        // case); the per-section `model` key below still overrides
+        let global_model = doc.str_or("neuron.model", "")?;
         for (np, sect) in [(&mut cfg.exc, "neuron.exc"), (&mut cfg.inh, "neuron.inh")] {
             np.tau_m_ms = doc.float_or(&format!("{sect}.tau_m_ms"), np.tau_m_ms)?;
             np.tau_c_ms = doc.float_or(&format!("{sect}.tau_c_ms"), np.tau_c_ms)?;
@@ -877,6 +1140,42 @@ impl SimConfig {
             np.tau_arp_ms = doc.float_or(&format!("{sect}.tau_arp_ms"), np.tau_arp_ms)?;
             np.g_c_over_cm = doc.float_or(&format!("{sect}.g_c_over_cm"), np.g_c_over_cm)?;
             np.alpha_c = doc.float_or(&format!("{sect}.alpha_c"), np.alpha_c)?;
+            if !global_model.is_empty() {
+                np.model = ModelKind::parse(&global_model)?;
+            }
+            let model = doc.str_or(&format!("{sect}.model"), "")?;
+            if !model.is_empty() {
+                np.model = ModelKind::parse(&model)?;
+            }
+            np.bias = doc.float_or(&format!("{sect}.bias"), np.bias)?;
+            np.izh.cap = doc.float_or(&format!("{sect}.izh_cap"), np.izh.cap)?;
+            np.izh.k = doc.float_or(&format!("{sect}.izh_k"), np.izh.k)?;
+            np.izh.a = doc.float_or(&format!("{sect}.izh_a"), np.izh.a)?;
+            np.izh.b = doc.float_or(&format!("{sect}.izh_b"), np.izh.b)?;
+            np.izh.d = doc.float_or(&format!("{sect}.izh_d"), np.izh.d)?;
+            np.izh.v_peak_mv = doc.float_or(&format!("{sect}.izh_v_peak_mv"), np.izh.v_peak_mv)?;
+            np.adex.delta_t_mv =
+                doc.float_or(&format!("{sect}.adex_delta_t_mv"), np.adex.delta_t_mv)?;
+            np.adex.tau_w_ms = doc.float_or(&format!("{sect}.adex_tau_w_ms"), np.adex.tau_w_ms)?;
+            np.adex.a = doc.float_or(&format!("{sect}.adex_a"), np.adex.a)?;
+            np.adex.b_mv = doc.float_or(&format!("{sect}.adex_b_mv"), np.adex.b_mv)?;
+            np.adex.v_peak_mv =
+                doc.float_or(&format!("{sect}.adex_v_peak_mv"), np.adex.v_peak_mv)?;
+            np.v_theta_dist = ParamDist {
+                kind: DistKind::parse(&doc.str_or(
+                    &format!("{sect}.v_theta_dist"),
+                    np.v_theta_dist.kind.name(),
+                )?)?,
+                width: doc
+                    .float_or(&format!("{sect}.v_theta_dist_width"), np.v_theta_dist.width)?,
+            };
+            np.tau_m_dist = ParamDist {
+                kind: DistKind::parse(&doc.str_or(
+                    &format!("{sect}.tau_m_dist"),
+                    np.tau_m_dist.kind.name(),
+                )?)?,
+                width: doc.float_or(&format!("{sect}.tau_m_dist_width"), np.tau_m_dist.width)?,
+            };
         }
 
         cfg.external.synapses_per_neuron = u32_key(
@@ -982,6 +1281,7 @@ impl SimConfig {
                 velocity_um_per_ms: proj
                     .float_or("velocity_um_per_ms", d.velocity_um_per_ms)?,
                 weight_scale: proj.float_or("weight_scale", d.weight_scale)?,
+                weight_jitter: proj.float_or("weight_jitter", d.weight_jitter)?,
             });
         }
 
@@ -1018,6 +1318,51 @@ impl SimConfig {
                 "{what}: v_theta_mv must be finite and exceed v_reset_mv (a reset at \
                  or above threshold would re-fire on every event)"
             ));
+        }
+        if !np.bias.is_finite() {
+            return Err(format!("{what}: bias must be finite"));
+        }
+        match np.model {
+            ModelKind::Lif => {}
+            ModelKind::Izhikevich => {
+                let i = &np.izh;
+                if !(i.cap.is_finite() && i.cap > 0.0) || !(i.k.is_finite() && i.k > 0.0) {
+                    return Err(format!("{what}: izh_cap/izh_k must be finite and > 0"));
+                }
+                if !(i.a.is_finite() && i.b.is_finite() && i.d.is_finite()) {
+                    return Err(format!("{what}: izh_a/izh_b/izh_d must be finite"));
+                }
+                if !i.v_peak_mv.is_finite() || i.v_peak_mv <= np.v_theta_mv {
+                    return Err(format!(
+                        "{what}: izh_v_peak_mv must be finite and exceed v_theta_mv \
+                         (the quadratic crosses v_t on its way to the peak)"
+                    ));
+                }
+            }
+            ModelKind::Adex => {
+                let a = &np.adex;
+                if !(a.delta_t_mv.is_finite() && a.delta_t_mv > 0.0)
+                    || !(a.tau_w_ms.is_finite() && a.tau_w_ms > 0.0)
+                {
+                    return Err(format!(
+                        "{what}: adex_delta_t_mv/adex_tau_w_ms must be finite and > 0"
+                    ));
+                }
+                if !(a.a.is_finite() && a.b_mv.is_finite()) {
+                    return Err(format!("{what}: adex_a/adex_b_mv must be finite"));
+                }
+                if !a.v_peak_mv.is_finite() || a.v_peak_mv <= np.v_reset_mv {
+                    return Err(format!(
+                        "{what}: adex_v_peak_mv must be finite and exceed v_reset_mv"
+                    ));
+                }
+            }
+        }
+        for (dist, key) in [(&np.v_theta_dist, "v_theta_dist"), (&np.tau_m_dist, "tau_m_dist")]
+        {
+            if !dist.width.is_finite() || dist.width < 0.0 {
+                return Err(format!("{what}: {key}_width must be finite and >= 0"));
+            }
         }
         Ok(())
     }
@@ -1088,6 +1433,25 @@ impl SimConfig {
                 |np: &NeuronParams| (np.e_rest_mv, np.v_theta_mv, np.v_reset_mv, np.tau_arp_ms);
             let want = shared(&self.exc);
             let check = |np: &NeuronParams, what: &str| -> Result<(), String> {
+                // the compiled artifact implements exactly the LIF+SFA
+                // step with population-mean constants: other registered
+                // models and per-neuron sampling are rejected by name
+                // here (no silent fallback to the CPU paths)
+                if np.model != ModelKind::Lif {
+                    return Err(format!(
+                        "{what}: solver = \"xla\" supports only model = \"lif\" (got \
+                         \"{}\"); run the time-driven models on the event-driven \
+                         solver",
+                        np.model.name()
+                    ));
+                }
+                if np.has_active_dist() {
+                    return Err(format!(
+                        "{what}: solver = \"xla\" does not support per-neuron \
+                         parameter distributions (v_theta_dist/tau_m_dist); use the \
+                         event-driven solver"
+                    ));
+                }
                 if shared(np) == want {
                     return Ok(());
                 }
@@ -1098,6 +1462,7 @@ impl SimConfig {
                     want.0, want.1, want.2, want.3
                 ))
             };
+            check(&self.exc, "neuron.exc")?;
             check(&self.inh, "neuron.inh")?;
             for a in &self.areas {
                 if let Some(np) = &a.exc {
@@ -1159,6 +1524,9 @@ impl SimConfig {
             }
             if !p.weight_scale.is_finite() || p.weight_scale <= 0.0 {
                 return Err(format!("{what}: weight_scale must be finite and > 0"));
+            }
+            if !p.weight_jitter.is_finite() || p.weight_jitter < 0.0 {
+                return Err(format!("{what}: weight_jitter must be finite and >= 0"));
             }
         }
         // AER wire spikes and synapse endpoints carry gids as u32
@@ -1244,7 +1612,7 @@ fn neuron_from_sub(
     prefix: &str,
     base: &NeuronParams,
 ) -> Result<Option<NeuronParams>, String> {
-    const KEYS: [&str; 8] = [
+    const KEYS: [&str; 25] = [
         "tau_m_ms",
         "tau_c_ms",
         "e_rest_mv",
@@ -1253,6 +1621,23 @@ fn neuron_from_sub(
         "tau_arp_ms",
         "g_c_over_cm",
         "alpha_c",
+        "model",
+        "bias",
+        "izh_cap",
+        "izh_k",
+        "izh_a",
+        "izh_b",
+        "izh_d",
+        "izh_v_peak_mv",
+        "adex_delta_t_mv",
+        "adex_tau_w_ms",
+        "adex_a",
+        "adex_b_mv",
+        "adex_v_peak_mv",
+        "v_theta_dist",
+        "v_theta_dist_width",
+        "tau_m_dist",
+        "tau_m_dist_width",
     ];
     if !KEYS.iter().any(|k| sub.get(&format!("{prefix}_{k}")).is_some()) {
         return Ok(None);
@@ -1266,6 +1651,29 @@ fn neuron_from_sub(
     np.tau_arp_ms = sub.float_or(&format!("{prefix}_tau_arp_ms"), np.tau_arp_ms)?;
     np.g_c_over_cm = sub.float_or(&format!("{prefix}_g_c_over_cm"), np.g_c_over_cm)?;
     np.alpha_c = sub.float_or(&format!("{prefix}_alpha_c"), np.alpha_c)?;
+    let model = sub.str_or(&format!("{prefix}_model"), np.model.name())?;
+    np.model = ModelKind::parse(&model)?;
+    np.bias = sub.float_or(&format!("{prefix}_bias"), np.bias)?;
+    np.izh.cap = sub.float_or(&format!("{prefix}_izh_cap"), np.izh.cap)?;
+    np.izh.k = sub.float_or(&format!("{prefix}_izh_k"), np.izh.k)?;
+    np.izh.a = sub.float_or(&format!("{prefix}_izh_a"), np.izh.a)?;
+    np.izh.b = sub.float_or(&format!("{prefix}_izh_b"), np.izh.b)?;
+    np.izh.d = sub.float_or(&format!("{prefix}_izh_d"), np.izh.d)?;
+    np.izh.v_peak_mv = sub.float_or(&format!("{prefix}_izh_v_peak_mv"), np.izh.v_peak_mv)?;
+    np.adex.delta_t_mv =
+        sub.float_or(&format!("{prefix}_adex_delta_t_mv"), np.adex.delta_t_mv)?;
+    np.adex.tau_w_ms = sub.float_or(&format!("{prefix}_adex_tau_w_ms"), np.adex.tau_w_ms)?;
+    np.adex.a = sub.float_or(&format!("{prefix}_adex_a"), np.adex.a)?;
+    np.adex.b_mv = sub.float_or(&format!("{prefix}_adex_b_mv"), np.adex.b_mv)?;
+    np.adex.v_peak_mv = sub.float_or(&format!("{prefix}_adex_v_peak_mv"), np.adex.v_peak_mv)?;
+    let vdist = sub.str_or(&format!("{prefix}_v_theta_dist"), np.v_theta_dist.kind.name())?;
+    np.v_theta_dist.kind = DistKind::parse(&vdist)?;
+    np.v_theta_dist.width =
+        sub.float_or(&format!("{prefix}_v_theta_dist_width"), np.v_theta_dist.width)?;
+    let tdist = sub.str_or(&format!("{prefix}_tau_m_dist"), np.tau_m_dist.kind.name())?;
+    np.tau_m_dist.kind = DistKind::parse(&tdist)?;
+    np.tau_m_dist.width =
+        sub.float_or(&format!("{prefix}_tau_m_dist_width"), np.tau_m_dist.width)?;
     Ok(Some(np))
 }
 
@@ -1836,5 +2244,98 @@ inh_tau_m_ms = 8.0
         assert_eq!(DynamicsBackend::parse("scalar").unwrap(), DynamicsBackend::Scalar);
         assert_eq!(DynamicsBackend::parse("soa").unwrap(), DynamicsBackend::Soa);
         assert_eq!(DynamicsBackend::parse("batch").unwrap(), DynamicsBackend::Batch);
+    }
+
+    #[test]
+    fn xla_rejects_time_driven_models_and_sampled_params() {
+        // the batched artifact compiles exactly the LIF closed form:
+        // registry models and per-neuron sampling must fail validation
+        // by name, never silently fall back to the CPU paths
+        let mut c = SimConfig::test_small();
+        c.solver = Solver::Xla;
+        c.exc.model = ModelKind::Izhikevich;
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("supports only model = \"lif\""), "{err}");
+        assert!(err.contains("izhikevich"), "{err}");
+
+        let mut c = SimConfig::test_small();
+        c.solver = Solver::Xla;
+        c.inh.model = ModelKind::Adex;
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("supports only model = \"lif\""), "{err}");
+        assert!(err.contains("adex"), "{err}");
+
+        let mut c = SimConfig::test_small();
+        c.solver = Solver::Xla;
+        c.exc.v_theta_dist = ParamDist { kind: DistKind::Gaussian, width: 1.0 };
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("parameter distributions"), "{err}");
+        // every one of these runs untouched on the event-driven solver
+        let mut c = SimConfig::test_small();
+        c.exc.model = ModelKind::Izhikevich;
+        c.inh.model = ModelKind::Adex;
+        c.exc.v_theta_dist = ParamDist { kind: DistKind::Gaussian, width: 1.0 };
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn model_and_dist_keys_parse_from_toml() {
+        let doc = toml::parse(
+            "[neuron]\nmodel = \"izhikevich\"\n\
+             [neuron.exc]\nizh_d = 10.0\nbias = 80.0\n\
+             v_theta_dist = \"lorentzian\"\nv_theta_dist_width = 1.5\n\
+             [neuron.inh]\nmodel = \"lif\"\n\
+             tau_m_dist = \"gaussian\"\ntau_m_dist_width = 2.0\n",
+        )
+        .unwrap();
+        let cfg = SimConfig::from_doc(&doc).unwrap();
+        // the global [neuron] model applies to both populations; the
+        // per-population key overrides it
+        assert_eq!(cfg.exc.model, ModelKind::Izhikevich);
+        assert_eq!(cfg.inh.model, ModelKind::Lif);
+        assert_eq!(cfg.exc.izh.d, 10.0);
+        assert_eq!(cfg.exc.bias, 80.0);
+        assert_eq!(cfg.exc.v_theta_dist.kind, DistKind::Lorentzian);
+        assert_eq!(cfg.exc.v_theta_dist.width, 1.5);
+        assert_eq!(cfg.inh.tau_m_dist.kind, DistKind::Gaussian);
+        assert_eq!(cfg.inh.tau_m_dist.width, 2.0);
+
+        // per-area overrides and the projection weight_jitter knob
+        let doc = toml::parse(
+            "[[area]]\nname = \"a\"\nside = 4\nneurons_per_column = 20\n\
+             exc_model = \"adex\"\nexc_adex_tau_w_ms = 100.0\n\
+             exc_tau_m_dist = \"gaussian\"\nexc_tau_m_dist_width = 1.0\n\
+             [[area]]\nname = \"b\"\nside = 4\nneurons_per_column = 20\n\
+             [[projection]]\nsource = \"a\"\ntarget = \"b\"\nweight_jitter = 0.25\n",
+        )
+        .unwrap();
+        let cfg = SimConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.areas[0].exc.model, ModelKind::Adex);
+        assert_eq!(cfg.areas[0].exc.adex.tau_w_ms, 100.0);
+        assert_eq!(cfg.areas[0].exc.tau_m_dist.kind, DistKind::Gaussian);
+        assert_eq!(cfg.areas[1].exc.model, ModelKind::Lif, "area b keeps the default");
+        assert_eq!(cfg.projections[0].weight_jitter, 0.25);
+    }
+
+    #[test]
+    fn weight_jitter_is_validated() {
+        // from_doc validates, so the bad knob dies at load time
+        let doc = toml::parse(
+            "[[area]]\nname = \"a\"\nside = 4\nneurons_per_column = 20\n\
+             [[area]]\nname = \"b\"\nside = 4\nneurons_per_column = 20\n\
+             [[projection]]\nsource = \"a\"\ntarget = \"b\"\nweight_jitter = -0.5\n",
+        )
+        .unwrap();
+        let err = SimConfig::from_doc(&doc).unwrap_err();
+        assert!(err.contains("weight_jitter must be finite and >= 0"), "{err}");
+
+        let doc = toml::parse(
+            "[[area]]\nname = \"a\"\nside = 4\nneurons_per_column = 20\n\
+             [[area]]\nname = \"b\"\nside = 4\nneurons_per_column = 20\n\
+             [[projection]]\nsource = \"a\"\ntarget = \"b\"\nweight_jitter = 0.5\n",
+        )
+        .unwrap();
+        let cfg = SimConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.projections[0].weight_jitter, 0.5);
     }
 }

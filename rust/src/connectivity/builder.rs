@@ -326,8 +326,16 @@ pub fn generate_outgoing_atlas(
                         let r = ((vx - txp).powi(2) + (vy - typ).powi(2)).sqrt();
                         let accept = pw.kernel.prob_at(r) / o.p_max;
                         if prng.next_f64() < accept {
-                            let w = ctx.weight(&mut prng, src_is_exc)
+                            let mut w = ctx.weight(&mut prng, src_is_exc)
                                 * p.weight_scale as f32;
+                            // per-synapse efficacy spread, drawn from the
+                            // same per-source stream ONLY when armed so a
+                            // jitter-free config consumes the exact same
+                            // stream positions as before the knob existed
+                            if p.weight_jitter > 0.0 {
+                                let z = prng.normal();
+                                w *= (1.0 + p.weight_jitter * z).max(0.0) as f32;
+                            }
                             let d = projection_delay_us(p, r, &cfg.syn);
                             out[tgt_rank].push(WireSynapse {
                                 src_gid: wire_gid(src_gid),
@@ -801,6 +809,75 @@ mod tests {
             assert_eq!(
                 reference, got,
                 "upsampled atlas differs at ranks={ranks} mapping={mapping:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn weight_jitter_spreads_projection_weights_only() {
+        // the same projection with and without jitter: the efficacy
+        // spread must widen the crossing-weight distribution while the
+        // within-area wiring — drawn from different per-source streams —
+        // stays bit-identical
+        let mut plain = two_area_cfg();
+        plain.projections = vec![crate::config::ProjectionParams::new("v1", "v2")];
+        let mut jittered = plain.clone();
+        jittered.projections[0].weight_jitter = 0.5;
+        jittered.validate().expect("jittered config validates");
+        let atlas = plain.atlas();
+        let a = generate_atlas_all(&plain, 1, Mapping::Block);
+        let b = generate_atlas_all(&jittered, 1, Mapping::Block);
+        let split = |syns: &[WireSynapse]| {
+            let mut local = Vec::new();
+            let mut cross = Vec::new();
+            for s in syns {
+                if atlas.area_of_gid(s.src_gid as u64) == atlas.area_of_gid(s.tgt_gid as u64)
+                {
+                    local.push(*s);
+                } else {
+                    cross.push(*s);
+                }
+            }
+            (local, cross)
+        };
+        let (local_a, cross_a) = split(&a);
+        let (local_b, cross_b) = split(&b);
+        assert_eq!(local_a, local_b, "jitter must not touch within-area streams");
+        assert!(!cross_a.is_empty() && !cross_b.is_empty());
+        // excitatory-only projection: the truncated scale keeps signs
+        assert!(cross_b.iter().all(|s| s.weight >= 0.0));
+        // the multiplicative spread widens the relative variation
+        let cv = |syns: &[WireSynapse]| {
+            let mut r = crate::util::stats::Running::new();
+            for s in syns {
+                r.push(f64::from(s.weight));
+            }
+            r.std() / r.mean().abs().max(1e-12)
+        };
+        assert!(
+            cv(&cross_b) > cv(&cross_a) * 1.1,
+            "jittered CV {} not wider than plain {}",
+            cv(&cross_b),
+            cv(&cross_a)
+        );
+    }
+
+    #[test]
+    fn jittered_generation_is_decomposition_invariant() {
+        // the jitter draw rides the same per-source counter stream as
+        // the synapse it scales, so the sampled network stays a pure
+        // function of the seed under any decomposition
+        let mut cfg = two_area_cfg();
+        cfg.projections =
+            vec![crate::config::ProjectionParams::new("v1", "v2").weight_jitter(0.3)];
+        cfg.validate().expect("jittered config validates");
+        let reference = generate_atlas_all(&cfg, 1, Mapping::Block);
+        assert!(!reference.is_empty());
+        for (ranks, mapping) in [(2u32, Mapping::Block), (4, Mapping::RoundRobin)] {
+            let got = generate_atlas_all(&cfg, ranks, mapping);
+            assert_eq!(
+                reference, got,
+                "jittered atlas differs at ranks={ranks} mapping={mapping:?}"
             );
         }
     }

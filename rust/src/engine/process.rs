@@ -31,14 +31,17 @@
 //! service the remaining commands without tearing the state down.
 
 use crate::checkpoint::{CounterState, PlasticityState, RankExpectation, RankState};
-use crate::config::{DynamicsBackend, ExternalOverride, ExternalParams, SimConfig};
+use crate::config::{
+    DynamicsBackend, ExternalOverride, ExternalParams, NeuronParams, SimConfig,
+};
 use crate::connectivity::builder::{generate_outgoing_atlas, AtlasWiring};
 use crate::engine::metrics::{EngineMetrics, Phase, RankReport};
 use crate::engine::plasticity::{Plasticity, StdpParams};
 use crate::engine::soa::NeuronStateSoA;
 use crate::geometry::{ColumnId, Decomposition};
 use crate::mpi::{CommClass, RankComm, Wire};
-use crate::neuron::LifParams;
+use crate::neuron::model::{sample_param, Injected};
+use crate::neuron::{LifParams, ModelParams};
 use crate::runtime::batch::BatchSolver;
 use crate::stimulus::{CalendarEntry, ExternalEvent, ExternalStimulus, StimCalendar};
 use crate::synapse::{DelayQueue, PendingEvent, SynapseStore, TargetGrouper};
@@ -341,6 +344,29 @@ fn emit_step_of(t_emit: f64, dt_ms: f64) -> u64 {
     (t_emit / dt_ms) as u64
 }
 
+/// Per-neuron parameter draw for the population constants `np`:
+/// `v_theta` first, then `tau_m`, from the neuron's dedicated
+/// `PARAM_DIST` counter-PRNG stream. The draw order is part of the
+/// determinism contract — the sampled values are a pure function of
+/// `(seed, gid, config)`, so every rank decomposition sees the same
+/// constants for the same neuron. Truncation windows keep the physics
+/// sane under heavy-tailed widths: thresholds stay strictly above reset
+/// (mirrored about the mean), time constants strictly positive.
+fn sampled_params(np: &NeuronParams, seed: u64, gid: u64) -> NeuronParams {
+    let mut rng =
+        crate::util::prng::Pcg64::for_entity(seed, gid, crate::geometry::grid::stream::PARAM_DIST);
+    let mut out = *np;
+    out.v_theta_mv = sample_param(
+        &mut rng,
+        &np.v_theta_dist,
+        np.v_theta_mv,
+        np.v_reset_mv,
+        2.0 * np.v_theta_mv - np.v_reset_mv,
+    );
+    out.tau_m_ms = sample_param(&mut rng, &np.tau_m_dist, np.tau_m_ms, 0.0, 2.0 * np.tau_m_ms);
+    out
+}
+
 /// The per-rank simulation state.
 pub struct RankProcess {
     cfg: SimConfig,
@@ -439,10 +465,15 @@ impl RankProcess {
 
     /// The LIF integrator constants of one local neuron: its area's
     /// excitatory or inhibitory model (per-area heterogeneity),
-    /// resolved through the SoA `param_id` table.
+    /// resolved through the SoA `param_id` table. The scalar fast path
+    /// that calls this never runs on non-LIF populations (the step
+    /// dispatcher routes those through the registry loop).
     #[inline]
     fn lif_params(&self, local: u32) -> &LifParams {
-        self.soa.params_of(local)
+        self.soa
+            .model_of(local)
+            .as_lif()
+            .expect("the scalar LIF path never runs on non-LIF populations")
     }
 
     /// The external stimulus driving one local neuron (its area's).
@@ -564,12 +595,15 @@ impl RankProcess {
 
         // per-area neuron models: unset overrides inherit the globals,
         // so a homogeneous atlas carries identical constants per slot
-        // (param table layout: `2·area + {0: exc, 1: inh}`)
-        let mut params_table: Vec<LifParams> = Vec::with_capacity(area_params.len() * 2);
+        // (param table layout: `2·area + {0: exc, 1: inh}`). The raw
+        // NeuronParams stay around to drive per-neuron sampling below.
+        let mut raw_params: Vec<NeuronParams> = Vec::with_capacity(area_params.len() * 2);
         for a in &area_params {
-            params_table.push(LifParams::new(a.exc.as_ref().unwrap_or(&cfg.exc)));
-            params_table.push(LifParams::new(a.inh.as_ref().unwrap_or(&cfg.inh)));
+            raw_params.push(*a.exc.as_ref().unwrap_or(&cfg.exc));
+            raw_params.push(*a.inh.as_ref().unwrap_or(&cfg.inh));
         }
+        let params_table: Vec<ModelParams> =
+            raw_params.iter().map(ModelParams::new).collect();
         let mut param_id = Vec::with_capacity(n_local as usize);
         for l in 0..n_local as usize {
             let ai = col_area[local_col_pos[l] as usize] as usize;
@@ -577,7 +611,26 @@ impl RankProcess {
             param_id
                 .push(u8::try_from(2 * ai + off).expect("validate caps the atlas at 128 areas"));
         }
-        let soa = NeuronStateSoA::build(params_table, param_id);
+        let local_gid = decomp.local_gid_table_atlas(&atlas, rank);
+        debug_assert_eq!(local_gid.len(), n_local as usize);
+        // per-neuron parameter distributions: one sampled ModelParams
+        // per neuron, drawn from its own PARAM_DIST stream — a pure
+        // function of (seed, gid, config), so decomposition-invariant,
+        // and rebuilt here (never checkpointed) on restore
+        let hetero = raw_params.iter().any(NeuronParams::has_active_dist).then(|| {
+            param_id
+                .iter()
+                .zip(&local_gid)
+                .map(|(&id, &gid)| {
+                    ModelParams::new(&sampled_params(
+                        &raw_params[id as usize],
+                        cfg.seed,
+                        u64::from(gid),
+                    ))
+                })
+                .collect::<Vec<_>>()
+        });
+        let soa = NeuronStateSoA::build(params_table, param_id, hetero);
         let queue = DelayQueue::new(cfg.delay_slots() + 1);
         debug_assert!(
             (store.max_slot() as usize) < queue.horizon(),
@@ -589,8 +642,6 @@ impl RankProcess {
             .collect();
         let area_external: Vec<ExternalOverride> =
             area_params.iter().map(|a| a.external).collect();
-        let local_gid = decomp.local_gid_table_atlas(&atlas, rank);
-        debug_assert_eq!(local_gid.len(), n_local as usize);
         let stim_streams: Vec<crate::util::prng::Pcg64> = local_gid
             .iter()
             .enumerate()
@@ -981,8 +1032,16 @@ impl RankProcess {
         // pass. `dpsnn bench` records both costs (dynamics_grouping) so
         // the trade stays measured.
         self.grouper.sort_events(&mut events);
+        // time-driven models (polled to every step boundary) and
+        // per-neuron sampled parameters cannot take the LIF fast paths:
+        // both CPU backends share the registry-dispatched loop instead
+        // (config validation rejects them under the XLA batch solver)
+        let generic = self.soa.time_driven() || self.soa.has_hetero();
         match self.backend {
             DynamicsBackend::Batch => self.step_dynamics_batch(step, &events),
+            DynamicsBackend::Scalar | DynamicsBackend::Soa if generic => {
+                self.step_dynamics_polled(step, &events);
+            }
             DynamicsBackend::Scalar => self.step_dynamics_event(step, &events),
             DynamicsBackend::Soa => self.step_dynamics_soa(step, &events),
         }
@@ -1107,7 +1166,10 @@ impl RankProcess {
         RankState {
             rank: self.rank,
             n_local: self.n_local,
-            states: self.soa.to_states(),
+            n_lanes: u32::try_from(self.soa.n_lanes())
+                .expect("lane count is bounded by MAX_LANES"),
+            lane_data: self.soa.lane_data(),
+            model_tags: self.soa.model_tags(),
             queue_base: self.queue.base_step(),
             queue_events,
             cal_base: self.stim_cal.base_step(),
@@ -1144,10 +1206,24 @@ impl RankProcess {
                 st.rank, self.rank
             ));
         }
-        if st.n_local != self.n_local || st.states.len() != self.soa.len() {
+        if st.n_local != self.n_local {
             return Err(format!(
                 "neuron count mismatch: checkpoint has {}, process has {}",
                 st.n_local, self.n_local
+            ));
+        }
+        if st.n_lanes as usize != self.soa.n_lanes() {
+            return Err(format!(
+                "lane count mismatch: checkpoint has {}, process has {}",
+                st.n_lanes,
+                self.soa.n_lanes()
+            ));
+        }
+        if st.model_tags != self.soa.model_tags() {
+            return Err(format!(
+                "neuron-model mismatch: checkpoint signature {:?}, process {:?}",
+                st.model_tags,
+                self.soa.model_tags()
             ));
         }
         if st.streams.len() != self.stim_streams.len() {
@@ -1181,7 +1257,7 @@ impl RankProcess {
                 return Err("plasticity is off but the checkpoint carries STDP state".into())
             }
         }
-        self.soa.restore_from_states(&st.states)?;
+        self.soa.restore_lane_data(&st.lane_data)?;
         let mut queue = DelayQueue::with_base(self.cfg.delay_slots() + 1, st.queue_base);
         for &(step, ev) in &st.queue_events {
             queue.push(step, ev);
@@ -1495,6 +1571,116 @@ impl RankProcess {
         }
         // hand the scratch (and its capacity) back for the next step
         self.touched = touched;
+    }
+
+    /// Record one spike of `local` at time `t` [ms]: the fired list
+    /// (exchanged next step), the spike counter, and the STDP
+    /// post-trace.
+    fn record_spike(&mut self, local: u32, t: f64) {
+        self.fired.push(LocalSpike { local, t_us: spike_time_us(t) });
+        self.metrics.spikes += 1;
+        if let Some(p) = &mut self.plasticity {
+            p.on_post(local, t);
+        }
+    }
+
+    /// Registry-dispatched dynamics: the shared CPU loop for networks
+    /// with time-driven models (Izhikevich/AdEx) or per-neuron sampled
+    /// parameters. Same gather stage and two-pointer merge as the SoA
+    /// fast path — identical event order — but every delivery routes
+    /// through [`ModelParams`] dispatch, and after the event merge all
+    /// neurons of time-driven models are polled to the step boundary so
+    /// intrinsic threshold crossings in event-free intervals still fire
+    /// in their emission step. Both `Scalar` and `Soa` backends land
+    /// here when the network needs it (see the `step` dispatcher), so
+    /// the backends stay bit-identical to each other by construction.
+    fn step_dynamics_polled(&mut self, step: u64, events: &[PendingEvent]) {
+        let t0 = step as f64 * self.cfg.dt_ms;
+        let t1 = (step + 1) as f64 * self.cfg.dt_ms;
+        let inv_dt = 1.0 / self.cfg.dt_ms;
+        self.cal_buf.clear();
+        self.stim_cal.take_step(step, &mut self.cal_buf);
+        self.gather_touched(events);
+        // take the work list so the loop can borrow &mut self freely
+        let touched = std::mem::take(&mut self.touched);
+        // intrinsic crossings reported by the model mid-advance; drained
+        // into `fired` after each call (the reporting closure cannot
+        // reach `self` while the SoA is mutably borrowed)
+        let mut intrinsic: Vec<f64> = Vec::new();
+        for seg in &touched {
+            let local = seg.local;
+            let rec = &events[seg.rec_start as usize..seg.rec_end as usize];
+            // external events for this neuron, this step (same calendar
+            // materialization as the fast paths)
+            self.ext_buf.clear();
+            if seg.cal != NO_CAL {
+                let stim = self.stim_of(local);
+                let mut t = self.cal_buf[seg.cal as usize].time_ms;
+                let rng = &mut self.stim_streams[local as usize];
+                while t < t1 {
+                    self.ext_buf.push(ExternalEvent { time_ms: t, weight: stim.weight() });
+                    t = stim.next_event_ms(rng, t);
+                }
+                self.stim_cal.schedule(local, t, inv_dt);
+                self.metrics.external_events += self.ext_buf.len() as u64;
+            }
+            // two-pointer merge of recurrent + external in time order —
+            // the same order as the LIF fast paths
+            let (mut i, mut j) = (0usize, 0usize);
+            loop {
+                let (t, w, syn) = match (rec.get(i), self.ext_buf.get(j)) {
+                    (Some(r), Some(e)) => {
+                        if t0 + r.offset_ms as f64 <= e.time_ms {
+                            i += 1;
+                            (t0 + r.offset_ms as f64, r.weight, Some(r.syn_idx))
+                        } else {
+                            j += 1;
+                            (e.time_ms, e.weight, None)
+                        }
+                    }
+                    (Some(r), None) => {
+                        i += 1;
+                        (t0 + r.offset_ms as f64, r.weight, Some(r.syn_idx))
+                    }
+                    (None, Some(e)) => {
+                        j += 1;
+                        (e.time_ms, e.weight, None)
+                    }
+                    (None, None) => break,
+                };
+                if let (Some(p), Some(k)) = (&mut self.plasticity, syn) {
+                    p.on_pre(k, local, t);
+                }
+                intrinsic.clear();
+                let out =
+                    self.soa.inject_model(local, t, w as f64, &mut |ts| intrinsic.push(ts));
+                for &ts in &intrinsic {
+                    self.record_spike(local, ts);
+                }
+                match out {
+                    Injected::Spike => self.record_spike(local, t),
+                    Injected::Refractory => self.metrics.refractory_drops += 1,
+                    Injected::Subthreshold => {}
+                }
+            }
+        }
+        self.touched = touched;
+        // end-of-step poll: time-driven models can cross threshold
+        // between events, so every such neuron advances to the boundary
+        // now — its spikes are produced in their emission step, exactly
+        // when Pack needs them on the wire
+        if self.soa.time_driven() {
+            for local in 0..self.n_local {
+                if !self.soa.model_of(local).kind().time_driven() {
+                    continue;
+                }
+                intrinsic.clear();
+                self.soa.advance_model(local, t1, &mut |ts| intrinsic.push(ts));
+                for &ts in &intrinsic {
+                    self.record_spike(local, ts);
+                }
+            }
+        }
     }
 
     /// Batched dynamics through the AOT-compiled XLA artifact: per-step
@@ -2125,18 +2311,222 @@ mod tests {
         let (scalar_snap, scalar_tail) = snap_and_resume(&scalar_cfg);
         let (soa_snap, soa_tail) = snap_and_resume(&soa_cfg);
 
-        // the checkpoint wire format is unchanged: the SoA lanes
-        // round-trip through the same Vec<LifState> record, bit for bit
-        assert_eq!(scalar_snap.states.len(), soa_snap.states.len());
-        for (a, b) in scalar_snap.states.iter().zip(&soa_snap.states) {
-            assert_eq!(a.v.to_bits(), b.v.to_bits());
-            assert_eq!(a.c.to_bits(), b.c.to_bits());
-            assert_eq!(a.last_t.to_bits(), b.last_t.to_bits());
-            assert_eq!(a.refr_until.to_bits(), b.refr_until.to_bits());
+        // the checkpoint payload is model-generic (format version 2):
+        // both backends write the same lane-major record, bit for bit,
+        // under the same model signature
+        assert_eq!(scalar_snap.n_lanes, soa_snap.n_lanes);
+        assert_eq!(scalar_snap.model_tags, soa_snap.model_tags);
+        assert_eq!(scalar_snap.lane_data.len(), soa_snap.lane_data.len());
+        for (a, b) in scalar_snap.lane_data.iter().zip(&soa_snap.lane_data) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
         // both backends resume from their snapshot onto the exact
         // uninterrupted trajectory
         assert_eq!(scalar_tail, reference_tail, "scalar resume diverged");
         assert_eq!(soa_tail, reference_tail, "soa resume diverged");
+    }
+
+    /// Gaussian/Lorentzian per-neuron parameter distributions over the
+    /// tiny grid (active dists route every neuron through the generic
+    /// registry path).
+    fn sampled_cfg() -> SimConfig {
+        let mut cfg = tiny_cfg();
+        cfg.exc.v_theta_dist = crate::config::ParamDist {
+            kind: crate::config::DistKind::Gaussian,
+            width: 1.0,
+        };
+        cfg.exc.tau_m_dist = crate::config::ParamDist {
+            kind: crate::config::DistKind::Gaussian,
+            width: 2.0,
+        };
+        cfg.inh.v_theta_dist = crate::config::ParamDist {
+            kind: crate::config::DistKind::Lorentzian,
+            width: 0.5,
+        };
+        cfg
+    }
+
+    /// All-Izhikevich tiny network (both populations time-driven, with
+    /// a bias current so neurons also fire intrinsically between
+    /// events) — a three-lane SoA layout end to end.
+    fn izh_cfg() -> SimConfig {
+        let mut cfg = tiny_cfg();
+        for np in [&mut cfg.exc, &mut cfg.inh] {
+            np.model = crate::config::ModelKind::Izhikevich;
+            np.e_rest_mv = -60.0;
+            np.v_theta_mv = -40.0;
+            np.v_reset_mv = -55.0;
+            np.bias = 60.0;
+        }
+        cfg
+    }
+
+    #[test]
+    fn sampled_distributions_are_decomposition_invariant() {
+        // per-neuron thresholds/time constants come from per-gid
+        // streams, so the sampled network replays bit-identically for
+        // every rank count × mapping — and on both CPU backends (the
+        // dispatcher routes Scalar and Soa through the same registry
+        // loop when distributions are active)
+        let mut cfg = sampled_cfg();
+        cfg.backend = DynamicsBackend::Scalar;
+        let reference = spikes_under(&cfg, 1, Mapping::Block);
+        assert!(!reference.is_empty(), "sampled network must be active");
+        cfg.backend = DynamicsBackend::Soa;
+        for ranks in [1u32, 2, 4] {
+            for mapping in [Mapping::Block, Mapping::RoundRobin] {
+                assert_eq!(
+                    spikes_under(&cfg, ranks, mapping),
+                    reference,
+                    "sampled run differs at {ranks} ranks / {mapping:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_width_distributions_match_the_unsampled_run() {
+        // σ = 0 normalizes to "no distribution": the run must be
+        // bit-identical to a config that never mentions dists (the
+        // generic path is not even engaged — is_active() gates it)
+        let plain = tiny_cfg();
+        let mut zeroed = tiny_cfg();
+        zeroed.exc.v_theta_dist = crate::config::ParamDist {
+            kind: crate::config::DistKind::Gaussian,
+            width: 0.0,
+        };
+        zeroed.inh.tau_m_dist = crate::config::ParamDist {
+            kind: crate::config::DistKind::Lorentzian,
+            width: 0.0,
+        };
+        let a = spikes_under(&plain, 2, Mapping::Block);
+        let b = spikes_under(&zeroed, 2, Mapping::Block);
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "width-0 dists must not perturb the trajectory");
+    }
+
+    #[test]
+    fn sampled_run_resets_and_replays_identically() {
+        let cfg = sampled_cfg();
+        let results = run_cluster(1, move |mut comm| {
+            let decomp = Decomposition::for_atlas(&cfg.atlas(), 1, Mapping::Block);
+            let mut proc =
+                RankProcess::construct(&cfg, &decomp, &mut comm, &RunOptions::default());
+            let run = |proc: &mut RankProcess, comm: &mut crate::mpi::RankComm| {
+                let mut spikes = Vec::new();
+                for s in 0..20 {
+                    proc.step(comm, s);
+                    spikes.extend(proc.latest_spikes());
+                }
+                spikes
+            };
+            let first = run(&mut proc, &mut comm);
+            proc.reset();
+            let replay = run(&mut proc, &mut comm);
+            (first, replay)
+        });
+        let (first, replay) = &results[0];
+        assert!(!first.is_empty(), "sampled network must be active");
+        assert_eq!(first, replay, "reset must replay the sampled run bit-identically");
+    }
+
+    #[test]
+    fn sampled_checkpoint_restore_is_bit_identical() {
+        // the sampled constants are NOT in the checkpoint — restore
+        // rebuilds them from (seed, gid, config) and must land on the
+        // exact uninterrupted trajectory anyway
+        let cfg = sampled_cfg();
+        let ref_cfg = cfg.clone();
+        let mut ref_results = run_cluster(1, move |mut comm| {
+            let decomp = Decomposition::for_atlas(&ref_cfg.atlas(), 1, Mapping::Block);
+            let mut proc =
+                RankProcess::construct(&ref_cfg, &decomp, &mut comm, &RunOptions::default());
+            let mut tail = Vec::new();
+            for s in 0..30 {
+                proc.step(&mut comm, s);
+                if s >= 15 {
+                    tail.extend(proc.latest_spikes());
+                }
+            }
+            tail
+        });
+        let reference_tail = ref_results.pop().expect("one rank");
+        assert!(!reference_tail.is_empty());
+        let (snap, tail) = snap_and_resume(&cfg);
+        assert_eq!(tail, reference_tail, "sampled resume diverged");
+        // four f64 lanes per neuron on the wire, LIF signature
+        assert_eq!(snap.n_lanes, 4);
+        assert_eq!(snap.lane_data.len(), 4 * snap.n_local as usize);
+    }
+
+    #[test]
+    fn izhikevich_network_is_decomposition_invariant() {
+        let mut cfg = izh_cfg();
+        cfg.backend = DynamicsBackend::Scalar;
+        let reference = spikes_under(&cfg, 1, Mapping::Block);
+        assert!(!reference.is_empty(), "biased Izhikevich network must fire");
+        cfg.backend = DynamicsBackend::Soa;
+        for ranks in [1u32, 2, 4] {
+            for mapping in [Mapping::Block, Mapping::RoundRobin] {
+                assert_eq!(
+                    spikes_under(&cfg, ranks, mapping),
+                    reference,
+                    "izhikevich run differs at {ranks} ranks / {mapping:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn izhikevich_checkpoint_restores_three_lane_state() {
+        let cfg = izh_cfg();
+        let ref_cfg = cfg.clone();
+        let mut ref_results = run_cluster(1, move |mut comm| {
+            let decomp = Decomposition::for_atlas(&ref_cfg.atlas(), 1, Mapping::Block);
+            let mut proc =
+                RankProcess::construct(&ref_cfg, &decomp, &mut comm, &RunOptions::default());
+            let mut tail = Vec::new();
+            for s in 0..30 {
+                proc.step(&mut comm, s);
+                if s >= 15 {
+                    tail.extend(proc.latest_spikes());
+                }
+            }
+            tail
+        });
+        let reference_tail = ref_results.pop().expect("one rank");
+        let (snap, tail) = snap_and_resume(&cfg);
+        // an all-Izhikevich table carries exactly three lanes and the
+        // Izhikevich model signature on the wire
+        assert_eq!(snap.n_lanes, 3);
+        assert_eq!(snap.lane_data.len(), 3 * snap.n_local as usize);
+        assert!(snap
+            .model_tags
+            .iter()
+            .all(|&t| t == crate::config::ModelKind::Izhikevich.tag()));
+        assert_eq!(tail, reference_tail, "izhikevich resume diverged");
+    }
+
+    #[test]
+    fn mixed_adex_area_is_decomposition_invariant() {
+        // one LIF area + one area whose excitatory population is AdEx:
+        // mixed tables share a four-lane set, and the polled loop only
+        // advances the time-driven population every step
+        let mut cfg = two_area_cfg();
+        let mut adex = crate::config::NeuronParams::excitatory();
+        adex.model = crate::config::ModelKind::Adex;
+        adex.bias = 20.0;
+        cfg.areas[1].exc = Some(adex);
+        let reference = spikes_under(&cfg, 1, Mapping::Block);
+        assert!(!reference.is_empty(), "mixed AdEx network must be active");
+        for ranks in [2u32, 4] {
+            for mapping in [Mapping::Block, Mapping::RoundRobin] {
+                assert_eq!(
+                    spikes_under(&cfg, ranks, mapping),
+                    reference,
+                    "mixed AdEx run differs at {ranks} ranks / {mapping:?}"
+                );
+            }
+        }
     }
 }

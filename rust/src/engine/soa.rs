@@ -1,25 +1,39 @@
 //! Structure-of-arrays neuron state — the shared layout behind every
-//! dynamics backend (PR 8, ROADMAP direction 2).
+//! dynamics backend (PR 8, ROADMAP direction 2), generalized to the
+//! neuron-model registry (`neuron::model`).
 //!
 //! [`RankProcess`](crate::engine::process::RankProcess) used to hold
 //! `Vec<LifState>` (array-of-structs): every integration chased one
 //! 32-byte struct and re-derived its area's [`LifParams`] through three
 //! indirection tables. [`NeuronStateSoA`] flips that into parallel
-//! `Vec<f64>` lanes (`v` / `c` / `last_t` / `refr_until`) plus a compact
-//! per-neuron `param_id: Vec<u8>` into a resolved [`LifParams`] table —
-//! the layout the CPU fast path, the scalar reference, and the XLA batch
+//! `Vec<f64>` lanes plus a compact per-neuron `param_id: Vec<u8>` into a
+//! resolved [`ModelParams`] table — the layout the CPU fast path, the
+//! scalar reference, the polled time-driven loop, and the XLA batch
 //! solver (`runtime::batch::BatchSolver::from_soa`) all consume.
 //!
-//! ## Bit-identity contract
+//! The lane count is the maximum [`n_lanes`](crate::config::ModelKind::n_lanes)
+//! over the parameter table (lane positions are fixed across models, see
+//! `neuron::model`): a pure-Izhikevich network carries three lanes, any
+//! composition with LIF or AdEx carries four. When per-neuron parameter
+//! distributions are active the optional `hetero` table holds one
+//! sampled [`ModelParams`] per neuron and **every** neuron routes
+//! through the generic [`inject_model`](NeuronStateSoA::inject_model)
+//! path (the `u8` table id space cannot hold per-neuron constants).
 //!
-//! The SoA fast path replays [`LifState::advance`] / [`LifState::inject`]
-//! with the **same floating-point operations in the same order** on the
-//! same operands, so `Scalar` and `Soa` backends produce bit-identical
-//! trajectories (test-enforced here and in `engine::process`). The only
-//! added machinery is [`ExpMemo`]: `exp` terms are memoized per
+//! ## Bit-identity contract (LIF fast path)
+//!
+//! [`advance`](NeuronStateSoA::advance) / [`inject`](NeuronStateSoA::inject)
+//! replay [`LifState::advance`] / [`LifState::inject`] with the **same
+//! floating-point operations in the same order** on the same operands,
+//! so `Scalar` and `Soa` backends produce bit-identical trajectories
+//! (test-enforced here and in `engine::process`). The only added
+//! machinery is [`ExpMemo`]: `exp` terms are memoized per
 //! `(param_id, dt)` pair keyed on the **exact bit pattern** of `dt` — a
 //! memo hit returns the very f64 a fresh `exp` call would (libm `exp`
-//! is deterministic), so memoization cannot perturb a single bit.
+//! is deterministic), so memoization cannot perturb a single bit. The
+//! hetero path skips the memo and round-trips through [`LifState`]
+//! directly — fresh `exp` calls, which the memo contract makes
+//! bit-equal by construction.
 //!
 //! ## Fallback rules (documented, still bit-identical)
 //!
@@ -32,7 +46,8 @@
 //!   extra value is never *used* on this path, so the stored lanes stay
 //!   identical — only the memo warms differently.
 
-use crate::neuron::{LifParams, LifState};
+use crate::neuron::model::{Injected, LANE_AUX, LANE_LAST_T, LANE_REFR, LANE_V};
+use crate::neuron::{LifParams, LifState, ModelParams, MAX_LANES};
 
 /// Direct-mapped slot count of the [`ExpMemo`] (power of two).
 ///
@@ -101,19 +116,25 @@ impl ExpMemo {
     }
 }
 
-/// Structure-of-arrays LIF+SFA state for one rank's local neurons.
+/// Structure-of-arrays neuron state for one rank's local neurons.
 ///
 /// Lanes are indexed by the rank-local neuron index; `param_id[l]`
 /// resolves neuron `l`'s integrator constants in `params` (the per-area
-/// excitatory/inhibitory table built at construction). See the module
-/// docs for the bit-identity contract with [`LifState`].
+/// excitatory/inhibitory table built at construction), unless the
+/// `hetero` table overrides them per neuron. See the module docs for
+/// the bit-identity contract with [`LifState`].
 pub struct NeuronStateSoA {
-    v: Vec<f64>,
-    c: Vec<f64>,
-    last_t: Vec<f64>,
-    refr_until: Vec<f64>,
+    /// Lane-major state: `lanes[k][local]` (lane positions fixed in
+    /// `neuron::model`; count = max `n_lanes` over the table).
+    lanes: Vec<Vec<f64>>,
     param_id: Vec<u8>,
-    params: Vec<LifParams>,
+    params: Vec<ModelParams>,
+    /// Per-neuron sampled constants when parameter distributions are
+    /// active; `None` for the homogeneous (table-resolved) case.
+    hetero: Option<Vec<ModelParams>>,
+    /// Any population runs a time-driven model (polled to every step
+    /// boundary by the engine).
+    time_driven: bool,
     memo: ExpMemo,
 }
 
@@ -122,22 +143,32 @@ impl NeuronStateSoA {
     /// resolved parameter table (≤ 256 entries — the engine lays it out
     /// as `2·area + {0: exc, 1: inh}`, and config validation caps the
     /// atlas at 128 areas so the `u8` id always fits); `param_id` maps
-    /// each local neuron to its table entry.
+    /// each local neuron to its table entry; `hetero`, when present,
+    /// carries one sampled [`ModelParams`] per neuron (same kinds as
+    /// the table — distributions perturb values, never the model).
     #[must_use]
-    pub fn build(params: Vec<LifParams>, param_id: Vec<u8>) -> Self {
+    pub fn build(
+        params: Vec<ModelParams>,
+        param_id: Vec<u8>,
+        hetero: Option<Vec<ModelParams>>,
+    ) -> Self {
         assert!(params.len() <= 256, "param table exceeds the u8 id space");
         assert!(
             param_id.iter().all(|&id| (id as usize) < params.len()),
             "param_id out of table range"
         );
+        if let Some(h) = &hetero {
+            assert_eq!(h.len(), param_id.len(), "hetero table length != neuron count");
+        }
         let n = param_id.len();
+        let n_lanes = params.iter().map(|p| p.kind().n_lanes()).max().unwrap_or(MAX_LANES);
+        let time_driven = params.iter().any(|p| p.kind().time_driven());
         let mut soa = NeuronStateSoA {
-            v: vec![0.0; n],
-            c: vec![0.0; n],
-            last_t: vec![0.0; n],
-            refr_until: vec![0.0; n],
+            lanes: vec![vec![0.0; n]; n_lanes],
             param_id,
             params,
+            hetero,
+            time_driven,
             memo: ExpMemo::new(),
         };
         soa.reset_to_resting();
@@ -155,16 +186,22 @@ impl NeuronStateSoA {
         self.param_id.is_empty()
     }
 
-    /// The resolved integrator constants of one local neuron.
+    /// The resolved integrator constants of one local neuron: its
+    /// per-neuron sampled set when distributions are active, its
+    /// area/population table entry otherwise.
     #[inline]
     #[must_use]
-    pub fn params_of(&self, local: u32) -> &LifParams {
-        &self.params[self.param_id[local as usize] as usize]
+    pub fn model_of(&self, local: u32) -> &ModelParams {
+        let l = local as usize;
+        match &self.hetero {
+            Some(h) => &h[l],
+            None => &self.params[self.param_id[l] as usize],
+        }
     }
 
     /// The resolved parameter table (index = `param_id`).
     #[must_use]
-    pub fn param_table(&self) -> &[LifParams] {
+    pub fn param_table(&self) -> &[ModelParams] {
         &self.params
     }
 
@@ -174,43 +211,73 @@ impl NeuronStateSoA {
         &self.param_id
     }
 
-    /// Gather one neuron's lanes into the AoS view (scalar reference
-    /// path, checkpoint conversion, slow-path fallback).
+    /// Per-neuron sampled constants are active (parameter
+    /// distributions): every neuron takes the generic model path.
+    #[must_use]
+    pub fn has_hetero(&self) -> bool {
+        self.hetero.is_some()
+    }
+
+    /// Some population runs a time-driven model — the engine polls
+    /// those neurons to every step boundary.
+    #[must_use]
+    pub fn time_driven(&self) -> bool {
+        self.time_driven
+    }
+
+    /// Number of state lanes (max over the table's models).
+    #[must_use]
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Gather one neuron's lanes into the AoS view (scalar LIF
+    /// reference path and the degenerate-τ fallback). Valid only on
+    /// four-lane sets — i.e. whenever a LIF or AdEx population exists;
+    /// the LIF-only call sites guarantee it.
     #[inline]
     #[must_use]
     pub fn load(&self, local: u32) -> LifState {
         let l = local as usize;
         LifState {
-            v: self.v[l],
-            c: self.c[l],
-            last_t: self.last_t[l],
-            refr_until: self.refr_until[l],
+            v: self.lanes[LANE_V][l],
+            c: self.lanes[LANE_AUX][l],
+            last_t: self.lanes[LANE_LAST_T][l],
+            refr_until: self.lanes[LANE_REFR][l],
         }
     }
 
-    /// Scatter an AoS state back into the lanes.
+    /// Scatter an AoS state back into the lanes (see [`load`](Self::load)).
     #[inline]
     pub fn store(&mut self, local: u32, s: LifState) {
         let l = local as usize;
-        self.v[l] = s.v;
-        self.c[l] = s.c;
-        self.last_t[l] = s.last_t;
-        self.refr_until[l] = s.refr_until;
+        self.lanes[LANE_V][l] = s.v;
+        self.lanes[LANE_AUX][l] = s.c;
+        self.lanes[LANE_LAST_T][l] = s.last_t;
+        self.lanes[LANE_REFR][l] = s.refr_until;
     }
 
     /// Exact evolution of neuron `local` to time `t` with no input —
-    /// bit-identical to [`LifState::advance`] (module docs: contract and
-    /// fallback rules).
+    /// the LIF ExpMemo fast path, bit-identical to [`LifState::advance`]
+    /// (module docs: contract and fallback rules). Callers dispatch
+    /// non-LIF or hetero populations through
+    /// [`advance_model`](Self::advance_model) instead.
     #[inline]
     pub fn advance(&mut self, local: u32, t: f64) {
         let l = local as usize;
-        let dt = t - self.last_t[l];
-        debug_assert!(dt >= -1e-9, "time went backwards: {} -> {t}", self.last_t[l]);
+        let dt = t - self.lanes[LANE_LAST_T][l];
+        debug_assert!(
+            dt >= -1e-9,
+            "time went backwards: {} -> {t}",
+            self.lanes[LANE_LAST_T][l]
+        );
         if dt <= 0.0 {
             return;
         }
         let pid = self.param_id[l];
-        let p = self.params[pid as usize];
+        let p = *self.params[pid as usize]
+            .as_lif()
+            .expect("the ExpMemo fast path runs only on LIF populations");
         if p.is_degenerate() {
             // documented fallback: the degenerate-τ limit multiplies by
             // dt itself, outside the memoized pair — round-trip through
@@ -221,108 +288,183 @@ impl NeuronStateSoA {
             return;
         }
         let (em, ec) = self.memo.exp_pair(&p, pid, dt);
+        let v = self.lanes[LANE_V][l];
+        let c = self.lanes[LANE_AUX][l];
         if p.g_tilde == 0.0 {
             // plain LIF; c stays 0 for inhibitory populations. The
             // reference computes ec lazily here — our memo may have
             // computed it eagerly, but the *used* operations match.
-            self.v[l] = p.e_rest + (self.v[l] - p.e_rest) * em;
-            if self.c[l] != 0.0 {
-                self.c[l] *= ec;
+            self.lanes[LANE_V][l] = p.e_rest + (v - p.e_rest) * em;
+            if c != 0.0 {
+                self.lanes[LANE_AUX][l] = c * ec;
             }
         } else {
-            let k = -p.g_tilde * self.c[l] * p.k_denom_inv();
-            self.v[l] = p.e_rest + (self.v[l] - p.e_rest - k) * em + k * ec;
-            self.c[l] *= ec;
+            let k = -p.g_tilde * c * p.k_denom_inv();
+            self.lanes[LANE_V][l] = p.e_rest + (v - p.e_rest - k) * em + k * ec;
+            self.lanes[LANE_AUX][l] = c * ec;
         }
-        self.last_t[l] = t;
+        self.lanes[LANE_LAST_T][l] = t;
     }
 
     /// Deliver a synaptic event of weight `j` [mV] at time `t` to neuron
     /// `local`; returns `true` on a spike. Bit-identical to
-    /// [`LifState::inject`].
+    /// [`LifState::inject`]. LIF fast path only — see
+    /// [`inject_model`](Self::inject_model) for the generic route.
     #[inline]
     pub fn inject(&mut self, local: u32, t: f64, j: f64) -> bool {
         self.advance(local, t);
         let l = local as usize;
-        if t < self.refr_until[l] {
+        if t < self.lanes[LANE_REFR][l] {
             // absolute refractory: input discarded
             return false;
         }
-        self.v[l] += j;
-        let p = &self.params[self.param_id[l] as usize];
-        if self.v[l] >= p.v_theta {
-            self.v[l] = p.v_reset;
-            self.c[l] += p.alpha_c;
-            self.refr_until[l] = t + p.tau_arp;
+        self.lanes[LANE_V][l] += j;
+        let p = self.params[self.param_id[l] as usize]
+            .as_lif()
+            .expect("the ExpMemo fast path runs only on LIF populations");
+        if self.lanes[LANE_V][l] >= p.v_theta {
+            self.lanes[LANE_V][l] = p.v_reset;
+            self.lanes[LANE_AUX][l] += p.alpha_c;
+            self.lanes[LANE_REFR][l] = t + p.tau_arp;
             true
         } else {
             false
         }
     }
 
+    /// Deliver a synaptic event through the model registry: any kind,
+    /// hetero-aware. Intrinsic crossings during the advance (time-driven
+    /// models) report through `on_spike` with their substep-boundary
+    /// times; the returned [`Injected`] classifies the event itself.
+    /// For LIF populations this is bit-identical to
+    /// [`inject`](Self::inject) (same `LifState` op sequence; the memo
+    /// contract makes fresh `exp` calls bit-equal to memoized ones).
+    #[inline]
+    pub fn inject_model(
+        &mut self,
+        local: u32,
+        t: f64,
+        j: f64,
+        on_spike: &mut dyn FnMut(f64),
+    ) -> Injected {
+        let l = local as usize;
+        let m = match &self.hetero {
+            Some(h) => h[l],
+            None => self.params[self.param_id[l] as usize],
+        };
+        let mut scratch = [0.0f64; MAX_LANES];
+        for (k, lane) in self.lanes.iter().enumerate() {
+            scratch[k] = lane[l];
+        }
+        let out = m.inject(&mut scratch, t, j, on_spike);
+        for (k, lane) in self.lanes.iter_mut().enumerate() {
+            lane[l] = scratch[k];
+        }
+        out
+    }
+
+    /// Advance one neuron to `t` through the model registry (the
+    /// end-of-step poll of time-driven models); intrinsic crossings
+    /// report through `on_spike`.
+    #[inline]
+    pub fn advance_model(&mut self, local: u32, t: f64, on_spike: &mut dyn FnMut(f64)) {
+        let l = local as usize;
+        let m = match &self.hetero {
+            Some(h) => h[l],
+            None => self.params[self.param_id[l] as usize],
+        };
+        let mut scratch = [0.0f64; MAX_LANES];
+        for (k, lane) in self.lanes.iter().enumerate() {
+            scratch[k] = lane[l];
+        }
+        m.advance_to(&mut scratch, t, on_spike);
+        for (k, lane) in self.lanes.iter_mut().enumerate() {
+            lane[l] = scratch[k];
+        }
+    }
+
     /// Is neuron `local` refractory at time `t`? (Metrics bookkeeping —
-    /// mirrors the `t < refr_until` test inside `inject`.)
+    /// mirrors the `t < refr_until` test inside `inject`. Models without
+    /// a refractory lane are never refractory.)
     #[inline]
     #[must_use]
     pub fn is_refractory(&self, local: u32, t: f64) -> bool {
-        t < self.refr_until[local as usize]
+        match self.lanes.get(LANE_REFR) {
+            Some(lane) => t < lane[local as usize],
+            None => false,
+        }
     }
 
-    /// Rewind every neuron to its parameter set's resting state
-    /// (`reset` support; matches [`LifState::resting`]).
+    /// Rewind every neuron to its model's resting state (`reset`
+    /// support; matches [`LifState::resting`] for LIF). Lanes beyond a
+    /// model's own layout are zeroed, so the full lane set is a
+    /// deterministic function of the parameter tables.
     pub fn reset_to_resting(&mut self) {
         for l in 0..self.param_id.len() {
-            let p = &self.params[self.param_id[l] as usize];
-            self.v[l] = p.e_rest;
-            self.c[l] = 0.0;
-            self.last_t[l] = 0.0;
-            self.refr_until[l] = f64::NEG_INFINITY;
+            let m = match &self.hetero {
+                Some(h) => h[l],
+                None => self.params[self.param_id[l] as usize],
+            };
+            let mut scratch = [0.0f64; MAX_LANES];
+            m.resting(&mut scratch);
+            for (k, lane) in self.lanes.iter_mut().enumerate() {
+                lane[l] = scratch[k];
+            }
         }
     }
 
     /// Shift the time origin `delta_ms` into the past (checkpoint
     /// rebase): `NEG_INFINITY` never-fired markers survive unchanged.
     pub fn rebase(&mut self, delta_ms: f64) {
-        for t in &mut self.last_t {
+        for t in &mut self.lanes[LANE_LAST_T] {
             *t -= delta_ms;
         }
-        for t in &mut self.refr_until {
-            *t -= delta_ms;
+        if let Some(refr) = self.lanes.get_mut(LANE_REFR) {
+            for t in refr.iter_mut() {
+                *t -= delta_ms;
+            }
         }
     }
 
-    /// Gather the lanes into the checkpoint wire form (`Vec<LifState>`
-    /// — the `RankState.states` field keeps its PR-7 format, so
-    /// checkpoints round-trip through the SoA layout unchanged on the
-    /// wire).
+    /// Flattened lane data in lane-major order (lane 0 of every neuron,
+    /// then lane 1, ...) — the checkpoint wire payload. Sampled hetero
+    /// constants are **not** part of it: they are a pure function of
+    /// `(seed, gid, config)` and are rebuilt at construction.
     #[must_use]
-    pub fn to_states(&self) -> Vec<LifState> {
-        (0..self.param_id.len())
-            .map(|l| LifState {
-                v: self.v[l],
-                c: self.c[l],
-                last_t: self.last_t[l],
-                refr_until: self.refr_until[l],
-            })
-            .collect()
+    pub fn lane_data(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.lanes.len() * self.param_id.len());
+        for lane in &self.lanes {
+            out.extend_from_slice(lane);
+        }
+        out
     }
 
-    /// Scatter a checkpoint record back into the lanes. Errs on a
-    /// neuron-count mismatch (the coordinator validates shapes first;
-    /// this guards direct engine-level use).
-    pub fn restore_from_states(&mut self, states: &[LifState]) -> Result<(), String> {
-        if states.len() != self.param_id.len() {
+    /// Checkpoint model signature: the stable wire tag
+    /// ([`ModelKind::tag`](crate::config::ModelKind::tag)) of every
+    /// parameter-table entry, in table order.
+    #[must_use]
+    pub fn model_tags(&self) -> Vec<u8> {
+        self.params.iter().map(|p| p.kind().tag()).collect()
+    }
+
+    /// Scatter a checkpoint lane payload back into the lanes. Errs on a
+    /// size mismatch (the coordinator validates shapes first; this
+    /// guards direct engine-level use).
+    pub fn restore_lane_data(&mut self, data: &[f64]) -> Result<(), String> {
+        let n = self.param_id.len();
+        let want = n * self.lanes.len();
+        if data.len() != want {
             return Err(format!(
-                "state count mismatch: checkpoint has {}, lanes have {}",
-                states.len(),
-                self.param_id.len()
+                "lane data mismatch: checkpoint has {} values, lanes hold {} \
+                 ({} lanes x {} neurons)",
+                data.len(),
+                want,
+                self.lanes.len(),
+                n
             ));
         }
-        for (l, s) in states.iter().enumerate() {
-            self.v[l] = s.v;
-            self.c[l] = s.c;
-            self.last_t[l] = s.last_t;
-            self.refr_until[l] = s.refr_until;
+        for (k, lane) in self.lanes.iter_mut().enumerate() {
+            lane.copy_from_slice(&data[k * n..(k + 1) * n]);
         }
         Ok(())
     }
@@ -331,10 +473,15 @@ impl NeuronStateSoA {
     /// memo (feeds `RankProcess::resident_bytes_now`).
     #[must_use]
     pub fn resident_bytes(&self) -> u64 {
-        let f64_lanes = self.v.len() + self.c.len() + self.last_t.len() + self.refr_until.len();
+        let f64_lanes: usize = self.lanes.iter().map(Vec::len).sum();
+        let hetero_bytes = self
+            .hetero
+            .as_ref()
+            .map_or(0, |h| h.len() * std::mem::size_of::<ModelParams>());
         (f64_lanes * std::mem::size_of::<f64>()
             + self.param_id.len()
-            + self.params.len() * std::mem::size_of::<LifParams>()) as u64
+            + self.params.len() * std::mem::size_of::<ModelParams>()
+            + hetero_bytes) as u64
             + self.memo.resident_bytes()
     }
 }
@@ -343,12 +490,12 @@ impl NeuronStateSoA {
 #[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
 mod tests {
     use super::*;
-    use crate::config::NeuronParams;
+    use crate::config::{ModelKind, NeuronParams};
     use crate::util::proptest::Cases;
 
     /// Exc (SFA), inh (plain LIF), and a degenerate-τ set — one table
     /// covering fast path, g̃ == 0 path, and the slow-path fallback.
-    fn table() -> Vec<LifParams> {
+    fn lif_table() -> Vec<LifParams> {
         let mut degen = NeuronParams::excitatory();
         degen.tau_c_ms = degen.tau_m_ms;
         vec![
@@ -356,6 +503,10 @@ mod tests {
             LifParams::new(&NeuronParams::inhibitory()),
             LifParams::new(&degen),
         ]
+    }
+
+    fn table() -> Vec<ModelParams> {
+        lif_table().into_iter().map(ModelParams::Lif).collect()
     }
 
     fn bits(s: &LifState) -> [u64; 4] {
@@ -367,11 +518,11 @@ mod tests {
         // random event sequences over all three parameter classes: the
         // SoA path (memoized exp, degenerate fallback) must track the
         // AoS reference bit for bit, spike for spike
-        let params = table();
+        let params = lif_table();
         let n = 9u32; // three neurons per parameter class
         let ids: Vec<u8> = (0..n).map(|l| (l % 3) as u8).collect();
         Cases::new("soa vs scalar bit-identity", 50).run(|g| {
-            let mut soa = NeuronStateSoA::build(table(), ids.clone());
+            let mut soa = NeuronStateSoA::build(table(), ids.clone(), None);
             let mut aos: Vec<LifState> =
                 ids.iter().map(|&id| LifState::resting(&params[id as usize])).collect();
             let mut t = vec![0.0f64; n as usize];
@@ -392,11 +543,76 @@ mod tests {
     }
 
     #[test]
+    fn generic_model_path_matches_the_lif_fast_path_bitwise() {
+        // inject_model (the hetero/time-driven route) on a LIF table
+        // must land on exactly the bits of the ExpMemo fast path
+        let params = lif_table();
+        let ids: Vec<u8> = vec![0, 1, 2];
+        let mut fast = NeuronStateSoA::build(table(), ids.clone(), None);
+        let hetero: Vec<ModelParams> =
+            ids.iter().map(|&id| ModelParams::Lif(params[id as usize])).collect();
+        let mut generic = NeuronStateSoA::build(table(), ids, Some(hetero));
+        assert!(generic.has_hetero() && !generic.time_driven());
+        let mut t = 0.0;
+        for k in 0..120u32 {
+            t += 0.31 + f64::from(k % 5) * 0.07;
+            let local = k % 3;
+            let j = if k % 4 == 0 { 11.0 } else { 0.8 };
+            let fired_fast = fast.inject(local, t, j);
+            let out = generic.inject_model(local, t, j, &mut |_| {
+                panic!("LIF never spikes during advance")
+            });
+            assert_eq!(out == Injected::Spike, fired_fast, "event {k}");
+            assert_eq!(bits(&generic.load(local)), bits(&fast.load(local)));
+        }
+    }
+
+    #[test]
+    fn mixed_model_tables_drive_each_kind() {
+        // one LIF population + one Izhikevich population sharing a
+        // four-lane set: the Izhikevich neuron fires intrinsically
+        // under bias, the LIF neuron only at jumps
+        let mut izh = NeuronParams::excitatory();
+        izh.model = ModelKind::Izhikevich;
+        izh.e_rest_mv = -60.0;
+        izh.v_theta_mv = -40.0;
+        izh.v_reset_mv = -55.0;
+        izh.bias = 120.0;
+        let params =
+            vec![ModelParams::new(&NeuronParams::excitatory()), ModelParams::new(&izh)];
+        let mut soa = NeuronStateSoA::build(params, vec![0, 1], None);
+        assert_eq!(soa.n_lanes(), 4);
+        assert!(soa.time_driven());
+        let mut izh_spikes = Vec::new();
+        soa.advance_model(1, 500.0, &mut |ts| izh_spikes.push(ts));
+        assert!(izh_spikes.len() >= 2, "biased Izhikevich must fire: {izh_spikes:?}");
+        let mut lif_spikes = Vec::new();
+        soa.advance_model(0, 500.0, &mut |ts| lif_spikes.push(ts));
+        assert!(lif_spikes.is_empty(), "LIF never fires without input");
+        let out = soa.inject_model(0, 501.0, 50.0, &mut |_| {});
+        assert_eq!(out, Injected::Spike);
+    }
+
+    #[test]
+    fn pure_izhikevich_tables_carry_three_lanes() {
+        let mut izh = NeuronParams::excitatory();
+        izh.model = ModelKind::Izhikevich;
+        izh.e_rest_mv = -60.0;
+        izh.v_theta_mv = -40.0;
+        izh.v_reset_mv = -55.0;
+        let soa = NeuronStateSoA::build(vec![ModelParams::new(&izh)], vec![0, 0], None);
+        assert_eq!(soa.n_lanes(), 3);
+        assert_eq!(soa.lane_data().len(), 6);
+        assert!(!soa.is_refractory(0, 1e9), "no refractory lane, never refractory");
+        assert_eq!(soa.model_tags(), vec![ModelKind::Izhikevich.tag()]);
+    }
+
+    #[test]
     fn memo_hits_return_the_same_bits_as_misses() {
         // same (pid, dt) twice: the second (cached) pair must equal the
         // first computed one exactly; a different pid with the same dt
         // must not alias it
-        let params = table();
+        let params = lif_table();
         let mut memo = ExpMemo::new();
         let dt = 1.734_521_5;
         let first = memo.exp_pair(&params[0], 0, dt);
@@ -414,8 +630,8 @@ mod tests {
         // events exactly AT refr_until must pass (the contract is
         // t < refr_until discards), one ulp before must be discarded —
         // on both backends identically
-        let params = table();
-        let mut soa = NeuronStateSoA::build(table(), vec![0]);
+        let params = lif_table();
+        let mut soa = NeuronStateSoA::build(table(), vec![0], None);
         let mut aos = LifState::resting(&params[0]);
         assert!(soa.inject(0, 1.0, 50.0));
         assert!(aos.inject(&params[0], 1.0, 50.0));
@@ -434,9 +650,9 @@ mod tests {
     fn degenerate_tau_takes_the_fallback_and_matches() {
         // param id 2 is τc == τm: advance must route through the AoS
         // reference and still land on identical bits
-        let params = table();
+        let params = lif_table();
         assert!(params[2].is_degenerate());
-        let mut soa = NeuronStateSoA::build(table(), vec![2]);
+        let mut soa = NeuronStateSoA::build(table(), vec![2], None);
         let mut aos = LifState::resting(&params[2]);
         let mut t = 0.0;
         for k in 0..40 {
@@ -449,25 +665,27 @@ mod tests {
     }
 
     #[test]
-    fn checkpoint_states_round_trip_unchanged() {
-        let mut soa = NeuronStateSoA::build(table(), vec![0, 1, 2, 0]);
+    fn checkpoint_lane_data_round_trips_unchanged() {
+        let mut soa = NeuronStateSoA::build(table(), vec![0, 1, 2, 0], None);
         for (l, t) in [(0u32, 1.5), (1, 2.0), (2, 3.25), (3, 0.5)] {
             soa.inject(l, t, 8.0);
         }
-        let wire = soa.to_states();
-        let mut fresh = NeuronStateSoA::build(table(), vec![0, 1, 2, 0]);
-        fresh.restore_from_states(&wire).unwrap();
+        let wire = soa.lane_data();
+        assert_eq!(wire.len(), 4 * soa.n_lanes());
+        let mut fresh = NeuronStateSoA::build(table(), vec![0, 1, 2, 0], None);
+        fresh.restore_lane_data(&wire).unwrap();
         for l in 0..4u32 {
             assert_eq!(bits(&fresh.load(l)), bits(&soa.load(l)));
         }
-        assert_eq!(fresh.to_states().len(), wire.len());
-        assert!(fresh.restore_from_states(&wire[..2]).is_err(), "length mismatch must err");
+        assert_eq!(fresh.lane_data().len(), wire.len());
+        assert!(fresh.restore_lane_data(&wire[..2]).is_err(), "size mismatch must err");
+        assert_eq!(soa.model_tags(), vec![0, 0, 0], "pure-LIF table tags");
     }
 
     #[test]
     fn reset_and_rebase_match_the_aos_semantics() {
-        let params = table();
-        let mut soa = NeuronStateSoA::build(table(), vec![0, 1]);
+        let params = lif_table();
+        let mut soa = NeuronStateSoA::build(table(), vec![0, 1], None);
         soa.inject(0, 1.0, 50.0);
         soa.inject(1, 2.0, 3.0);
         soa.rebase(10.0);
@@ -475,7 +693,7 @@ mod tests {
         assert_eq!(s.last_t, 1.0 - 10.0);
         assert_eq!(s.refr_until, 1.0 + params[0].tau_arp - 10.0);
         // the never-fired marker survives a rebase unchanged
-        let mut quiet = NeuronStateSoA::build(table(), vec![0]);
+        let mut quiet = NeuronStateSoA::build(table(), vec![0], None);
         quiet.rebase(10.0);
         assert_eq!(quiet.load(0).refr_until, f64::NEG_INFINITY);
         soa.reset_to_resting();
@@ -489,17 +707,25 @@ mod tests {
         // satellite 2: lanes + id lane + param table + memo, counted
         // exactly — 4 f64 lanes × n + n ids + table + fixed memo slots
         let n = 37usize;
-        let soa = NeuronStateSoA::build(table(), vec![0; n]);
-        let expect = (4 * n * 8 + n + 3 * std::mem::size_of::<LifParams>()) as u64
+        let soa = NeuronStateSoA::build(table(), vec![0; n], None);
+        let expect = (4 * n * 8 + n + 3 * std::mem::size_of::<ModelParams>()) as u64
             + (MEMO_SLOTS * std::mem::size_of::<MemoSlot>()) as u64;
         assert_eq!(soa.resident_bytes(), expect);
+        // a hetero table adds its own per-neuron constants
+        let hetero: Vec<ModelParams> = vec![table()[0]; n];
+        let soa = NeuronStateSoA::build(table(), vec![0; n], Some(hetero));
+        assert_eq!(
+            soa.resident_bytes(),
+            expect + (n * std::mem::size_of::<ModelParams>()) as u64
+        );
     }
 
     #[test]
     #[should_panic(expected = "param table exceeds the u8 id space")]
     fn param_table_caps_at_the_u8_space() {
-        let many: Vec<LifParams> =
-            (0..257).map(|_| LifParams::new(&NeuronParams::excitatory())).collect();
-        let _ = NeuronStateSoA::build(many, vec![0]);
+        let many: Vec<ModelParams> = (0..257)
+            .map(|_| ModelParams::Lif(LifParams::new(&NeuronParams::excitatory())))
+            .collect();
+        let _ = NeuronStateSoA::build(many, vec![0], None);
     }
 }

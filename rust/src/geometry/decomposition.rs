@@ -71,6 +71,10 @@ fn chunk_bounds(n: u32, parts: u32) -> Vec<u32> {
 /// column→rank assignment (indices within the slice are in-grid column
 /// ids). This is the legacy single-grid logic, reused per area by
 /// [`Decomposition::for_atlas`].
+// every partition_point result is bounded by tiles (or chunk count),
+// both of which are <= ranks: the narrowing back to the u32 rank id
+// cannot truncate
+#[allow(clippy::cast_possible_truncation)]
 fn fill_grid(grid: &Grid, ranks: u32, mapping: Mapping, col_to_rank: &mut [u32], base: usize) {
     let ncols = grid.columns();
     match mapping {
@@ -262,6 +266,8 @@ fn snake_order(grid: &Grid) -> Vec<ColumnId> {
 }
 
 #[cfg(test)]
+// test-data generation narrows random draws into small grid/rank counts
+#[allow(clippy::cast_possible_truncation)]
 mod tests {
     use super::*;
     use crate::config::GridParams;

@@ -29,6 +29,11 @@ pub mod stream {
     /// untouched, which is what keeps a one-area atlas bit-identical to
     /// the single-grid path.
     pub const PROJECTION: u64 = 0x05;
+    /// Per-neuron parameter distributions (`v_theta_dist`/`tau_m_dist`):
+    /// one stream per neuron gid, so sampled thresholds and time
+    /// constants are a pure function of (seed, gid) — invariant under
+    /// rank decomposition, like every other stream here.
+    pub const PARAM_DIST: u64 = 0x06;
 
     /// Stream tag of projection `index` (tags below 0x100 are reserved
     /// for the base namespaces above).
@@ -83,12 +88,16 @@ impl Grid {
     }
 
     #[inline]
+    // column count is capped to u32 by SimConfig::validate
+    #[allow(clippy::cast_possible_truncation)]
     pub fn neuron_column(&self, gid: NeuronId) -> ColumnId {
         // lint: allow(lossy-cast, "column count is capped to u32 by SimConfig::validate")
         (gid / self.p.neurons_per_column as u64) as ColumnId
     }
 
     #[inline]
+    // the remainder is < neurons_per_column, itself a u32
+    #[allow(clippy::cast_possible_truncation)]
     pub fn neuron_local(&self, gid: NeuronId) -> u32 {
         // lint: allow(lossy-cast, "remainder is < neurons_per_column, itself a u32")
         (gid % self.p.neurons_per_column as u64) as u32
@@ -158,6 +167,8 @@ impl Grid {
 }
 
 #[cfg(test)]
+// test-data generation narrows random draws into small grid coordinates
+#[allow(clippy::cast_possible_truncation, clippy::cast_possible_wrap)]
 mod tests {
     use super::*;
     use crate::config::GridParams;

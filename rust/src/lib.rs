@@ -74,16 +74,14 @@
 // target sees them. They used to be silenced crate-wide here; the
 // blanket allows are gone, replaced by per-`mod` scoped allows on the
 // modules not yet audited (below) — `checkpoint`, `config`,
-// `coordinator`, `lint`, `neuron`, `repro`, `stimulus`, `engine` and
-// `synapse` are clippy-cast-clean with at most fn-scoped, justified
-// allows. The narrowing casts that can actually corrupt configs or
-// wire ids are additionally held to `dpsnn lint`'s lossy-cast rule;
-// docs/LINTS.md tracks flipping the remaining modules so the scoped
-// allows below keep shrinking.
+// `coordinator`, `engine`, `geometry`, `lint`, `neuron`, `repro`,
+// `runtime`, `stimulus`, `synapse` and `util` are clippy-cast-clean
+// with at most fn-scoped, justified allows. The narrowing casts that
+// can actually corrupt configs or wire ids are additionally held to
+// `dpsnn lint`'s lossy-cast rule; docs/LINTS.md tracks flipping the
+// remaining modules so the scoped allows below keep shrinking.
 pub mod config;
-#[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::cast_possible_wrap)]
 pub mod geometry;
-#[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::cast_possible_wrap)]
 pub mod util;
 
 use util::memtrack::CountingAlloc;
@@ -104,7 +102,6 @@ pub mod synapse;
 pub mod checkpoint;
 pub mod coordinator;
 pub mod engine;
-#[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::cast_possible_wrap)]
 pub mod runtime;
 
 #[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::cast_possible_wrap)]

@@ -29,9 +29,11 @@ use super::tokenizer::{lex, Comment, Tok, TokKind};
 /// structures whose ids are capped by the AER u32 format, plus the SoA
 /// neuron-state lanes (`engine/soa.rs`), whose `param_id` bytes index
 /// the per-area parameter table — a wrapped id silently reads the wrong
-/// neuron model.
-const LOSSY_CAST_SCOPE: [&str; 5] =
-    ["config/", "connectivity/", "geometry/", "mpi/", "engine/soa.rs"];
+/// neuron model — and the neuron-model registry (`neuron/`), whose
+/// checkpoint model tags and lane indices ride the same byte-width
+/// contracts.
+const LOSSY_CAST_SCOPE: [&str; 6] =
+    ["config/", "connectivity/", "geometry/", "mpi/", "engine/soa.rs", "neuron/"];
 
 /// Target types whose `as` casts narrow or change sign from the
 /// `u64`/`i64`/`usize` values flowing at the boundaries. Wider casts
@@ -447,6 +449,11 @@ mod tests {
         // … but the SoA state module is a named exception: its param-id
         // bytes index the neuron-model table, so narrowings are guarded
         let fs = lint_source("engine/soa.rs", "fn f(x: u64) -> u8 { x as u8 }\n");
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, Rule::LossyCast);
+        // the neuron-model registry is in scope: its checkpoint tags
+        // and lane indices are byte-width wire contracts
+        let fs = lint_source("neuron/model.rs", "fn f(x: u64) -> u8 { x as u8 }\n");
         assert_eq!(fs.len(), 1, "{fs:?}");
         assert_eq!(fs[0].rule, Rule::LossyCast);
         // a numeric literal's type suffix is not a cast target

@@ -43,6 +43,7 @@ fn commands() -> Vec<Command> {
             .flag("naive-delivery", "ablation: full Alltoallv every step")
             .flag("record-activity", "record per-column activity"),
         Command::new("kernels", "list registered connectivity kernels and their stencils"),
+        Command::new("models", "list registered neuron models and their state lanes"),
         Command::new("bench", "run the standard per-phase benchmark matrix, write BENCH.json")
             .opt_default("out", "BENCH.json", "output path for the JSON record")
             .opt("compare", "baseline BENCH.json: fail on >25% per-phase regression \
@@ -328,6 +329,24 @@ fn cmd_kernels() {
     }
 }
 
+fn cmd_models() {
+    println!("registered neuron models (config key `model`, global or per-area):");
+    for kind in dpsnn::config::ModelKind::ALL {
+        let driven = if kind.time_driven() { "time-driven" } else { "event-driven" };
+        println!(
+            "  {:<12} {driven:<12} lanes [{}]",
+            kind.name(),
+            kind.lane_names().join(", ")
+        );
+        println!("      {}", kind.summary());
+    }
+    println!(
+        "per-neuron distributions: v_theta_dist / tau_m_dist = \
+         none|gaussian|lorentzian with v_theta_dist_width / tau_m_dist_width \
+         (see docs/MODELS.md)"
+    );
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmds = commands();
@@ -358,6 +377,10 @@ fn main() {
         "lint" => cmd_lint(&args),
         "kernels" => {
             cmd_kernels();
+            Ok(())
+        }
+        "models" => {
+            cmd_models();
             Ok(())
         }
         "table1" => {

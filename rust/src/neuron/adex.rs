@@ -1,0 +1,206 @@
+//! Adaptive exponential integrate-and-fire (AdEx; Brette & Gerstner
+//! 2005), in the gL-normalized millivolt form:
+//!
+//!   τm·dV/dt = −(V − E_L) + ΔT·e^{(V − V_T)/ΔT} − w + I_bias + jumps
+//!   τw·dw/dt = a·(V − E_L) − w
+//!
+//! Spike: V ≥ v_peak ⇒ V ← Vr, w ← w + b, absolute refractory for τarp
+//! (V is clamped at Vr while w keeps evolving; synaptic arrivals are
+//! discarded). The exponential term fires intrinsically, so the model
+//! is time-driven on the fixed Euler sub-grid like Izhikevich — see
+//! `neuron::model` for the determinism contract. The exponential's
+//! argument is clamped at [`EXP_ARG_CLAMP`](crate::neuron::model::EXP_ARG_CLAMP)
+//! so a super-threshold excursion produces a crossing on the next
+//! substep instead of an overflow.
+//!
+//! Configuration mapping ([`NeuronParams`]): `tau_m_ms` → τm,
+//! `e_rest_mv` → E_L, `v_theta_mv` → V_T, `v_reset_mv` → Vr,
+//! `tau_arp_ms` → τarp, `bias` → I_bias [mV], and the `adex_*` block
+//! carries ΔT/τw/a/b/v_peak.
+
+use crate::config::NeuronParams;
+use crate::neuron::model::{
+    Injected, EXP_ARG_CLAMP, LANE_AUX, LANE_LAST_T, LANE_REFR, LANE_V, SUBSTEP_MS,
+};
+
+/// Precomputed per-population AdEx constants.
+#[derive(Clone, Copy, Debug)]
+pub struct AdexParams {
+    /// Leak reversal E_L [mV].
+    pub e_rest: f64,
+    /// Exponential rheobase V_T [mV].
+    pub v_theta: f64,
+    /// Post-spike reset Vr [mV].
+    pub v_reset: f64,
+    /// Spike cut-off v_peak [mV].
+    pub v_peak: f64,
+    /// Absolute refractory period τarp [ms].
+    pub tau_arp: f64,
+    /// 1/τm [1/ms].
+    pub inv_tau_m: f64,
+    /// Slope factor ΔT [mV].
+    pub delta_t: f64,
+    /// 1/τw [1/ms].
+    pub inv_tau_w: f64,
+    /// Subthreshold adaptation coupling a (dimensionless, a/gL).
+    pub a: f64,
+    /// Spike-triggered adaptation increment b [mV].
+    pub b: f64,
+    /// Constant drive I_bias [mV].
+    pub bias: f64,
+}
+
+impl AdexParams {
+    pub fn new(p: &NeuronParams) -> Self {
+        AdexParams {
+            e_rest: p.e_rest_mv,
+            v_theta: p.v_theta_mv,
+            v_reset: p.v_reset_mv,
+            v_peak: p.adex.v_peak_mv,
+            tau_arp: p.tau_arp_ms,
+            inv_tau_m: 1.0 / p.tau_m_ms,
+            delta_t: p.adex.delta_t_mv,
+            inv_tau_w: 1.0 / p.adex.tau_w_ms,
+            a: p.adex.a,
+            b: p.adex.b_mv,
+            bias: p.bias,
+        }
+    }
+
+    /// Advance `(V, w)` from the stored `last_t` to `t` on the Euler
+    /// sub-grid, reporting each peak crossing through `on_spike` with
+    /// its substep-boundary time (reset + refractory applied there).
+    pub fn advance_to(&self, lanes: &mut [f64], t: f64, on_spike: &mut dyn FnMut(f64)) {
+        let mut v = lanes[LANE_V];
+        let mut w = lanes[LANE_AUX];
+        let mut last = lanes[LANE_LAST_T];
+        let mut refr = lanes[LANE_REFR];
+        if t <= last {
+            return;
+        }
+        while t - last > 0.0 {
+            let remaining = t - last;
+            let h = remaining.min(SUBSTEP_MS);
+            let dw = (self.a * (v - self.e_rest) - w) * self.inv_tau_w;
+            if last < refr {
+                // clamped at reset for τarp; adaptation keeps evolving
+                w += h * dw;
+            } else {
+                let ex = self.delta_t
+                    * ((v - self.v_theta) / self.delta_t).min(EXP_ARG_CLAMP).exp();
+                let dv = (-(v - self.e_rest) + ex - w + self.bias) * self.inv_tau_m;
+                v += h * dv;
+                w += h * dw;
+            }
+            last = if remaining <= SUBSTEP_MS { t } else { last + h };
+            if v >= self.v_peak {
+                v = self.v_reset;
+                w += self.b;
+                refr = last + self.tau_arp;
+                on_spike(last);
+            }
+        }
+        lanes[LANE_V] = v;
+        lanes[LANE_AUX] = w;
+        lanes[LANE_LAST_T] = t;
+        lanes[LANE_REFR] = refr;
+    }
+
+    /// Deliver a synaptic jump of `j` [mV] at time `t`.
+    pub fn inject(
+        &self,
+        lanes: &mut [f64],
+        t: f64,
+        j: f64,
+        on_spike: &mut dyn FnMut(f64),
+    ) -> Injected {
+        self.advance_to(lanes, t, on_spike);
+        if t < lanes[LANE_REFR] {
+            return Injected::Refractory;
+        }
+        lanes[LANE_V] += j;
+        if lanes[LANE_V] >= self.v_peak {
+            lanes[LANE_V] = self.v_reset;
+            lanes[LANE_AUX] += self.b;
+            lanes[LANE_REFR] = t + self.tau_arp;
+            Injected::Spike
+        } else {
+            Injected::Subthreshold
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelKind, NeuronParams};
+    use crate::neuron::model::MAX_LANES;
+
+    fn np(bias: f64) -> NeuronParams {
+        let mut np = NeuronParams::excitatory();
+        np.model = ModelKind::Adex;
+        np.bias = bias;
+        np
+    }
+
+    fn resting(p: &AdexParams) -> [f64; MAX_LANES] {
+        let mut lanes = [0.0; MAX_LANES];
+        lanes[LANE_V] = p.e_rest;
+        lanes[LANE_REFR] = f64::NEG_INFINITY;
+        lanes
+    }
+
+    #[test]
+    fn quiescent_without_bias_and_input() {
+        let p = AdexParams::new(&np(0.0));
+        let mut lanes = resting(&p);
+        p.advance_to(&mut lanes, 200.0, &mut |_| panic!("no intrinsic spikes at rest"));
+        // rest + tiny exponential tail: stays near E_L, well below V_T
+        assert!((lanes[LANE_V] - p.e_rest).abs() < 1.0);
+    }
+
+    #[test]
+    fn tonic_firing_under_bias_and_adaptation_slows_it() {
+        let p = AdexParams::new(&np(25.0));
+        let mut lanes = resting(&p);
+        let mut spikes = Vec::new();
+        p.advance_to(&mut lanes, 1000.0, &mut |ts| spikes.push(ts));
+        assert!(spikes.len() >= 4, "supra-rheobase bias must fire: {}", spikes.len());
+        let first = spikes[1] - spikes[0];
+        let last = spikes[spikes.len() - 1] - spikes[spikes.len() - 2];
+        assert!(
+            last >= first,
+            "w accumulation must not shorten ISIs: first {first} last {last}"
+        );
+        // every ISI respects the absolute refractory period
+        assert!(spikes.windows(2).all(|s| s[1] - s[0] >= p.tau_arp));
+    }
+
+    #[test]
+    fn refractory_clamps_the_membrane() {
+        let p = AdexParams::new(&np(0.0));
+        let mut lanes = resting(&p);
+        assert_eq!(p.inject(&mut lanes, 1.0, 100.0, &mut |_| {}), Injected::Spike);
+        // just inside τarp: event discarded, V still at reset
+        assert_eq!(p.inject(&mut lanes, 1.0 + p.tau_arp * 0.5, 100.0, &mut |_| {}),
+            Injected::Refractory);
+        assert_eq!(lanes[LANE_V], p.v_reset);
+    }
+
+    #[test]
+    fn stronger_spike_adaptation_fires_less() {
+        let count = |b_mv: f64| {
+            let mut n = np(25.0);
+            n.adex.b_mv = b_mv;
+            let p = AdexParams::new(&n);
+            let mut lanes = resting(&p);
+            let mut c = 0u32;
+            p.advance_to(&mut lanes, 1000.0, &mut |_| c += 1);
+            c
+        };
+        let weak = count(0.5);
+        let strong = count(8.0);
+        assert!(weak > 0 && strong > 0);
+        assert!(strong < weak, "16x b must cut the rate: {strong} vs {weak}");
+    }
+}

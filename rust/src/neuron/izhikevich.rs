@@ -1,0 +1,198 @@
+//! Izhikevich neuron (dimensional form; Izhikevich 2007, eq. 8.5):
+//!
+//!   C·dv/dt = k·(v − v_r)·(v − v_t) − u + I_bias + Σᵢ Jᵢ·δ(t − tᵢ)
+//!     du/dt = a·(b·(v − v_r) − u)
+//!
+//! Spike: v ≥ v_peak ⇒ v ← v_reset, u ← u + d. Synaptic arrivals are
+//! instantaneous jumps v += J (same AER event semantics as LIF).
+//!
+//! Unlike LIF, the quadratic term fires *intrinsically* — threshold
+//! crossings happen between synaptic events — so the engine integrates
+//! this model time-driven on the fixed Euler sub-grid
+//! ([`SUBSTEP_MS`](crate::neuron::model::SUBSTEP_MS)): both derivatives
+//! are evaluated from the pre-step state, crossings are detected after
+//! each substep and stamped with the substep-boundary time. The sub-grid
+//! is anchored at each advance's start time, which makes trajectories a
+//! pure function of the (decomposition-invariant) event sequence.
+//!
+//! Configuration mapping ([`NeuronParams`]): `e_rest_mv` → v_r,
+//! `v_theta_mv` → v_t, `v_reset_mv` → the post-spike reset, `bias` →
+//! I_bias, and the `izh_*` block carries C/k/a/b/d/v_peak.
+
+use crate::config::NeuronParams;
+use crate::neuron::model::{LANE_AUX, LANE_LAST_T, LANE_V, SUBSTEP_MS};
+
+/// Precomputed per-population Izhikevich constants.
+#[derive(Clone, Copy, Debug)]
+pub struct IzhParams {
+    /// Resting potential v_r [mV].
+    pub v_r: f64,
+    /// Instantaneous threshold v_t [mV].
+    pub v_t: f64,
+    /// Post-spike reset [mV].
+    pub v_reset: f64,
+    /// Spike cut-off v_peak [mV].
+    pub v_peak: f64,
+    /// 1/C [1/pF].
+    pub inv_cap: f64,
+    /// Quadratic gain k.
+    pub k: f64,
+    /// Recovery rate a [1/ms].
+    pub a: f64,
+    /// Recovery coupling b.
+    pub b: f64,
+    /// Spike-triggered recovery increment d.
+    pub d: f64,
+    /// Constant background current I_bias.
+    pub bias: f64,
+}
+
+impl IzhParams {
+    pub fn new(p: &NeuronParams) -> Self {
+        IzhParams {
+            v_r: p.e_rest_mv,
+            v_t: p.v_theta_mv,
+            v_reset: p.v_reset_mv,
+            v_peak: p.izh.v_peak_mv,
+            inv_cap: 1.0 / p.izh.cap,
+            k: p.izh.k,
+            a: p.izh.a,
+            b: p.izh.b,
+            d: p.izh.d,
+            bias: p.bias,
+        }
+    }
+
+    /// Advance `(v, u)` from the stored `last_t` to `t` on the Euler
+    /// sub-grid, reporting each peak crossing through `on_spike` with
+    /// its substep-boundary time (and applying the reset there).
+    pub fn advance_to(&self, lanes: &mut [f64], t: f64, on_spike: &mut dyn FnMut(f64)) {
+        let mut v = lanes[LANE_V];
+        let mut u = lanes[LANE_AUX];
+        let mut last = lanes[LANE_LAST_T];
+        if t <= last {
+            return;
+        }
+        while t - last > 0.0 {
+            let remaining = t - last;
+            let h = remaining.min(SUBSTEP_MS);
+            // both derivatives from the pre-step state
+            let dv = (self.k * (v - self.v_r) * (v - self.v_t) - u + self.bias) * self.inv_cap;
+            let du = self.a * (self.b * (v - self.v_r) - u);
+            v += h * dv;
+            u += h * du;
+            last = if remaining <= SUBSTEP_MS { t } else { last + h };
+            if v >= self.v_peak {
+                v = self.v_reset;
+                u += self.d;
+                on_spike(last);
+            }
+        }
+        lanes[LANE_V] = v;
+        lanes[LANE_AUX] = u;
+        lanes[LANE_LAST_T] = t;
+    }
+
+    /// Deliver a synaptic jump of `j` [mV] at time `t`. Returns `true`
+    /// when the jump itself crosses the peak (the reset is applied).
+    pub fn inject(
+        &self,
+        lanes: &mut [f64],
+        t: f64,
+        j: f64,
+        on_spike: &mut dyn FnMut(f64),
+    ) -> crate::neuron::model::Injected {
+        self.advance_to(lanes, t, on_spike);
+        lanes[LANE_V] += j;
+        if lanes[LANE_V] >= self.v_peak {
+            lanes[LANE_V] = self.v_reset;
+            lanes[LANE_AUX] += self.d;
+            crate::neuron::model::Injected::Spike
+        } else {
+            crate::neuron::model::Injected::Subthreshold
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelKind, NeuronParams};
+    use crate::neuron::model::{Injected, MAX_LANES};
+
+    fn np(bias: f64) -> NeuronParams {
+        let mut np = NeuronParams::excitatory();
+        np.model = ModelKind::Izhikevich;
+        np.e_rest_mv = -60.0;
+        np.v_theta_mv = -40.0;
+        np.v_reset_mv = -55.0;
+        np.bias = bias;
+        np
+    }
+
+    fn resting(p: &IzhParams) -> [f64; MAX_LANES] {
+        let mut lanes = [0.0; MAX_LANES];
+        lanes[LANE_V] = p.v_r;
+        lanes
+    }
+
+    #[test]
+    fn quiescent_without_bias_and_input() {
+        let p = IzhParams::new(&np(0.0));
+        let mut lanes = resting(&p);
+        let mut spikes = Vec::new();
+        p.advance_to(&mut lanes, 200.0, &mut |ts| spikes.push(ts));
+        assert!(spikes.is_empty(), "resting state is a fixed point");
+        assert!((lanes[LANE_V] - p.v_r).abs() < 1e-9);
+        assert!(lanes[LANE_AUX].abs() < 1e-9);
+    }
+
+    #[test]
+    fn firing_rate_grows_with_bias() {
+        let count = |bias: f64| {
+            let p = IzhParams::new(&np(bias));
+            let mut lanes = resting(&p);
+            let mut n = 0u32;
+            p.advance_to(&mut lanes, 1000.0, &mut |_| n += 1);
+            n
+        };
+        let low = count(80.0);
+        let high = count(160.0);
+        assert!(low > 0, "80 pA must be supra-rheobase here");
+        assert!(high > low, "doubling the bias must raise the rate: {low} vs {high}");
+    }
+
+    #[test]
+    fn subthreshold_jump_then_decay_back() {
+        let p = IzhParams::new(&np(0.0));
+        let mut lanes = resting(&p);
+        let out = p.inject(&mut lanes, 1.0, 3.0, &mut |_| {});
+        assert_eq!(out, Injected::Subthreshold);
+        assert!((lanes[LANE_V] - (p.v_r + 3.0)).abs() < 1e-9);
+        // below v_t the quadratic pulls back toward rest
+        p.advance_to(&mut lanes, 400.0, &mut |_| panic!("must stay subthreshold"));
+        assert!(lanes[LANE_V] < p.v_r + 1.0);
+    }
+
+    #[test]
+    fn suprathreshold_jump_spikes_and_resets() {
+        let p = IzhParams::new(&np(0.0));
+        let mut lanes = resting(&p);
+        let out = p.inject(&mut lanes, 1.0, p.v_peak - p.v_r + 1.0, &mut |_| {});
+        assert_eq!(out, Injected::Spike);
+        assert_eq!(lanes[LANE_V], p.v_reset);
+        assert_eq!(lanes[LANE_AUX], p.d);
+    }
+
+    #[test]
+    fn spike_times_land_on_the_sub_grid_within_the_advance() {
+        let p = IzhParams::new(&np(120.0));
+        let mut lanes = resting(&p);
+        let mut spikes = Vec::new();
+        p.advance_to(&mut lanes, 300.0, &mut |ts| spikes.push(ts));
+        assert!(!spikes.is_empty());
+        for &ts in &spikes {
+            assert!(ts > 0.0 && ts <= 300.0, "spike time {ts} outside the advance");
+        }
+    }
+}

@@ -1,5 +1,14 @@
-//! Neuron models: LIF with spike-frequency adaptation (paper eqs. 1–2).
+//! Neuron models behind the [`model`] registry: LIF with
+//! spike-frequency adaptation (paper eqs. 1–2, the bit-identical
+//! event-driven reference), Izhikevich and AdEx (time-driven built-ins).
+//! See docs/MODELS.md for the contract a new model must satisfy.
 
+pub mod adex;
+pub mod izhikevich;
 pub mod lif;
+pub mod model;
 
+pub use adex::AdexParams;
+pub use izhikevich::IzhParams;
 pub use lif::{LifParams, LifState};
+pub use model::{Injected, ModelParams, MAX_LANES};

@@ -1,0 +1,412 @@
+//! The neuron-model registry: every dynamics integrator the engine can
+//! run, behind one dispatch enum.
+//!
+//! The engine stores neuron state as N named f64 lanes per neuron (see
+//! `engine::soa`); each [`ModelKind`] declares its lane layout through
+//! [`lane_names`](ModelKind::lane_names). Lane positions are fixed
+//! across models so mixed-model atlases share one lane set:
+//!
+//! | lane | meaning                                   |
+//! |------|-------------------------------------------|
+//! | 0    | membrane potential `v` [mV]               |
+//! | 1    | auxiliary variable (`c`, `u` or `w`)      |
+//! | 2    | last-advance timestamp `last_t` [ms]      |
+//! | 3    | refractory-until timestamp [ms] (LIF/AdEx)|
+//!
+//! [`ModelParams`] is the per-population parameter record — the static
+//! (enum, not trait-object) dispatch point of the per-event hot loop.
+//! LIF is the event-driven reference: exact integration, threshold
+//! checks only at synaptic jumps, and the `engine::soa` ExpMemo fast
+//! path, bit-identical to the pre-registry engine (test-enforced).
+//! Izhikevich and AdEx are *time-driven*: their intrinsic nonlinearity
+//! can cross threshold between events, so they advance on the fixed
+//! Euler sub-grid ([`SUBSTEP_MS`]) and are polled to the step boundary
+//! every step (see `RankProcess::step_dynamics_polled` and
+//! docs/MODELS.md for the fp-ordering rules a new model must follow).
+
+use crate::config::{DistKind, ModelKind, NeuronParams, ParamDist};
+use crate::neuron::adex::AdexParams;
+use crate::neuron::izhikevich::IzhParams;
+use crate::neuron::lif::{LifParams, LifState};
+use crate::util::prng::Pcg64;
+
+/// Upper bound on per-model state lanes (LIF and AdEx use all four).
+pub const MAX_LANES: usize = 4;
+
+/// Lane index of the membrane potential (all models).
+pub const LANE_V: usize = 0;
+/// Lane index of the auxiliary variable — SFA fatigue `c` (LIF),
+/// recovery `u` (Izhikevich) or adaptation `w` (AdEx).
+pub const LANE_AUX: usize = 1;
+/// Lane index of the last-advance timestamp (all models).
+pub const LANE_LAST_T: usize = 2;
+/// Lane index of the refractory-until timestamp (LIF and AdEx; absent
+/// from Izhikevich, which has no absolute refractory period).
+pub const LANE_REFR: usize = 3;
+
+/// Fixed Euler substep [ms] of the time-driven models. A pure function
+/// of the constant — never of wall clock or rank count — so time-driven
+/// trajectories are deterministic and decomposition-invariant.
+pub const SUBSTEP_MS: f64 = 0.05;
+
+/// Clamp on the AdEx exponential argument: `exp(20)` is large enough to
+/// guarantee a peak crossing on the next substep without overflowing.
+pub const EXP_ARG_CLAMP: f64 = 20.0;
+
+/// Outcome of delivering one synaptic event through
+/// [`ModelParams::inject`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Injected {
+    /// The jump crossed threshold: the caller records a spike at the
+    /// event time and the state has been reset.
+    Spike,
+    /// Absorbed below threshold.
+    Subthreshold,
+    /// Discarded: the neuron was absolutely refractory at the event.
+    Refractory,
+}
+
+/// Per-population integrator constants of one registered model —
+/// the static dispatch point of the dynamics hot loop.
+#[derive(Clone, Copy, Debug)]
+pub enum ModelParams {
+    Lif(LifParams),
+    Izhikevich(IzhParams),
+    Adex(AdexParams),
+}
+
+impl ModelParams {
+    /// Resolve the configured model of `np` into its integrator
+    /// constants.
+    pub fn new(np: &NeuronParams) -> Self {
+        match np.model {
+            ModelKind::Lif => ModelParams::Lif(LifParams::new(np)),
+            ModelKind::Izhikevich => ModelParams::Izhikevich(IzhParams::new(np)),
+            ModelKind::Adex => ModelParams::Adex(AdexParams::new(np)),
+        }
+    }
+
+    #[must_use]
+    pub fn kind(&self) -> ModelKind {
+        match self {
+            ModelParams::Lif(_) => ModelKind::Lif,
+            ModelParams::Izhikevich(_) => ModelKind::Izhikevich,
+            ModelParams::Adex(_) => ModelKind::Adex,
+        }
+    }
+
+    /// The LIF constants when this population is LIF — the SoA ExpMemo
+    /// fast path and the XLA batch solver accept only these.
+    #[must_use]
+    pub fn as_lif(&self) -> Option<&LifParams> {
+        match self {
+            ModelParams::Lif(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// Write the resting state into the first
+    /// [`n_lanes`](ModelKind::n_lanes) entries of `lanes`.
+    pub fn resting(&self, lanes: &mut [f64]) {
+        match self {
+            ModelParams::Lif(p) => {
+                let s = LifState::resting(p);
+                lanes[LANE_V] = s.v;
+                lanes[LANE_AUX] = s.c;
+                lanes[LANE_LAST_T] = s.last_t;
+                lanes[LANE_REFR] = s.refr_until;
+            }
+            ModelParams::Izhikevich(p) => {
+                lanes[LANE_V] = p.v_r;
+                lanes[LANE_AUX] = 0.0;
+                lanes[LANE_LAST_T] = 0.0;
+            }
+            ModelParams::Adex(p) => {
+                lanes[LANE_V] = p.e_rest;
+                lanes[LANE_AUX] = 0.0;
+                lanes[LANE_LAST_T] = 0.0;
+                lanes[LANE_REFR] = f64::NEG_INFINITY;
+            }
+        }
+    }
+
+    /// End of the current absolute refractory period
+    /// (`f64::NEG_INFINITY` for models without one).
+    #[must_use]
+    pub fn refr_until(&self, lanes: &[f64]) -> f64 {
+        match self {
+            ModelParams::Lif(_) | ModelParams::Adex(_) => lanes[LANE_REFR],
+            ModelParams::Izhikevich(_) => f64::NEG_INFINITY,
+        }
+    }
+
+    /// Advance the state to time `t` with no synaptic input. Time-driven
+    /// models may cross threshold intrinsically along the way; each
+    /// crossing invokes `on_spike` with the substep-boundary time and
+    /// applies the model's reset. LIF never spikes here (its membrane
+    /// decays between events, so crossings happen only at jumps).
+    pub fn advance_to(&self, lanes: &mut [f64], t: f64, on_spike: &mut dyn FnMut(f64)) {
+        match self {
+            ModelParams::Lif(p) => {
+                let mut s = load_lif(lanes);
+                s.advance(p, t);
+                store_lif(lanes, &s);
+            }
+            ModelParams::Izhikevich(p) => p.advance_to(lanes, t, on_spike),
+            ModelParams::Adex(p) => p.advance_to(lanes, t, on_spike),
+        }
+    }
+
+    /// Deliver one synaptic event of weight `j` [mV] at time `t`:
+    /// advance to `t` (reporting intrinsic crossings through
+    /// `on_spike`), then apply the jump and check the threshold.
+    pub fn inject(
+        &self,
+        lanes: &mut [f64],
+        t: f64,
+        j: f64,
+        on_spike: &mut dyn FnMut(f64),
+    ) -> Injected {
+        match self {
+            ModelParams::Lif(p) => {
+                // exactly the scalar reference's op sequence: advance,
+                // refractory check, jump, threshold (LifState::inject)
+                let mut s = load_lif(lanes);
+                let was_refractory = t < s.refr_until;
+                let fired = s.inject(p, t, j);
+                store_lif(lanes, &s);
+                if fired {
+                    Injected::Spike
+                } else if was_refractory {
+                    Injected::Refractory
+                } else {
+                    Injected::Subthreshold
+                }
+            }
+            ModelParams::Izhikevich(p) => p.inject(lanes, t, j, on_spike),
+            ModelParams::Adex(p) => p.inject(lanes, t, j, on_spike),
+        }
+    }
+}
+
+/// Draw one physical parameter from `dist` around `mean`, truncated by
+/// rejection to the open interval `(lo, hi)` — the Lorentzian's heavy
+/// tails (and the Gaussian's, eventually) would otherwise produce
+/// thresholds below reset or non-positive time constants. Bounded at 64
+/// attempts, then falls back to `mean` (for physically sane widths the
+/// acceptance probability is near 1, so the fallback is astronomically
+/// rare but keeps the draw total-function). The caller owns the stream
+/// discipline: one dedicated counter-PRNG stream per neuron
+/// (`geometry::grid::stream::PARAM_DIST`), so the sampled value is a
+/// pure function of `(seed, gid, config)` — decomposition-invariant.
+pub fn sample_param(rng: &mut Pcg64, dist: &ParamDist, mean: f64, lo: f64, hi: f64) -> f64 {
+    if !dist.is_active() {
+        return mean;
+    }
+    for _ in 0..64 {
+        let x = match dist.kind {
+            DistKind::None => return mean,
+            DistKind::Gaussian => rng.normal_ms(mean, dist.width),
+            DistKind::Lorentzian => rng.lorentzian(mean, dist.width),
+        };
+        if x > lo && x < hi {
+            return x;
+        }
+    }
+    mean
+}
+
+fn load_lif(lanes: &[f64]) -> LifState {
+    LifState {
+        v: lanes[LANE_V],
+        c: lanes[LANE_AUX],
+        last_t: lanes[LANE_LAST_T],
+        refr_until: lanes[LANE_REFR],
+    }
+}
+
+fn store_lif(lanes: &mut [f64], s: &LifState) {
+    lanes[LANE_V] = s.v;
+    lanes[LANE_AUX] = s.c;
+    lanes[LANE_LAST_T] = s.last_t;
+    lanes[LANE_REFR] = s.refr_until;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NeuronParams;
+
+    fn lif_np() -> NeuronParams {
+        NeuronParams::excitatory()
+    }
+
+    fn izh_np() -> NeuronParams {
+        let mut np = NeuronParams::excitatory();
+        np.model = ModelKind::Izhikevich;
+        np.e_rest_mv = -60.0; // v_r
+        np.v_theta_mv = -40.0; // v_t
+        np.v_reset_mv = -60.0 + 0.1; // keep v_theta > v_reset invariant
+        np.bias = 100.0;
+        np
+    }
+
+    fn adex_np() -> NeuronParams {
+        let mut np = NeuronParams::excitatory();
+        np.model = ModelKind::Adex;
+        np.bias = 25.0;
+        np
+    }
+
+    #[test]
+    fn lif_through_the_registry_matches_lifstate_bitwise() {
+        let np = lif_np();
+        let mp = ModelParams::new(&np);
+        let p = crate::neuron::LifParams::new(&np);
+        let mut reference = crate::neuron::LifState::resting(&p);
+        let mut lanes = [0.0f64; MAX_LANES];
+        mp.resting(&mut lanes);
+        let mut t = 0.0;
+        let mut polled = 0u32;
+        for i in 0..200 {
+            t += 0.37;
+            let j = if i % 3 == 0 { 8.0 } else { 0.6 };
+            let ref_fired = reference.inject(&p, t, j);
+            let mut spikes = Vec::new();
+            let out = mp.inject(&mut lanes, t, j, &mut |ts| spikes.push(ts));
+            assert!(spikes.is_empty(), "LIF never spikes during advance");
+            assert_eq!(out == Injected::Spike, ref_fired, "event {i}");
+            assert_eq!(lanes[LANE_V].to_bits(), reference.v.to_bits());
+            assert_eq!(lanes[LANE_AUX].to_bits(), reference.c.to_bits());
+            assert_eq!(lanes[LANE_REFR].to_bits(), reference.refr_until.to_bits());
+            if ref_fired {
+                polled += 1;
+            }
+        }
+        assert!(polled > 0, "drive must produce spikes");
+    }
+
+    #[test]
+    fn izhikevich_fires_intrinsically_under_bias() {
+        let mp = ModelParams::new(&izh_np());
+        let mut lanes = [0.0f64; MAX_LANES];
+        mp.resting(&mut lanes);
+        let mut spikes = Vec::new();
+        mp.advance_to(&mut lanes, 500.0, &mut |ts| spikes.push(ts));
+        assert!(spikes.len() >= 2, "bias drive must fire repeatedly: {spikes:?}");
+        assert!(spikes.windows(2).all(|w| w[0] < w[1]), "spike times ascend");
+        assert!(spikes.iter().all(|&ts| ts > 0.0 && ts <= 500.0));
+        assert_eq!(lanes[LANE_LAST_T], 500.0);
+    }
+
+    #[test]
+    fn izhikevich_advance_is_deterministic_across_split_points() {
+        // the sub-grid is anchored per advance call, so the SAME call
+        // sequence replays identically (reset/replay + decomposition
+        // invariance rest on this; different split points may differ)
+        let mp = ModelParams::new(&izh_np());
+        let run = || {
+            let mut lanes = [0.0f64; MAX_LANES];
+            mp.resting(&mut lanes);
+            let mut spikes = Vec::new();
+            for k in 1..=40 {
+                mp.advance_to(&mut lanes, f64::from(k) * 2.5, &mut |ts| spikes.push(ts));
+            }
+            (lanes, spikes)
+        };
+        let (a_lanes, a_spikes) = run();
+        let (b_lanes, b_spikes) = run();
+        assert_eq!(a_spikes, b_spikes);
+        for (x, y) in a_lanes.iter().zip(&b_lanes) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn adex_spikes_reset_and_respect_refractory() {
+        let np = adex_np();
+        let mp = ModelParams::new(&np);
+        let mut lanes = [0.0f64; MAX_LANES];
+        mp.resting(&mut lanes);
+        // a huge jump crosses the peak immediately
+        let out = mp.inject(&mut lanes, 1.0, 80.0, &mut |_| {});
+        assert_eq!(out, Injected::Spike);
+        assert_eq!(lanes[LANE_V], np.v_reset_mv);
+        assert!(lanes[LANE_AUX] > 0.0, "spike-triggered adaptation increments w");
+        assert_eq!(lanes[LANE_REFR], 1.0 + np.tau_arp_ms);
+        // within τarp the next event is discarded
+        let out = mp.inject(&mut lanes, 1.5, 80.0, &mut |_| {});
+        assert_eq!(out, Injected::Refractory);
+        // past τarp it works again
+        let out = mp.inject(&mut lanes, 4.0, 80.0, &mut |_| {});
+        assert_eq!(out, Injected::Spike);
+    }
+
+    #[test]
+    fn adex_exponential_blowup_is_clamped() {
+        // drive v far past VT: the clamped exponential must stay finite
+        // and produce a crossing instead of NaN/inf lanes
+        let mp = ModelParams::new(&adex_np());
+        let mut lanes = [0.0f64; MAX_LANES];
+        mp.resting(&mut lanes);
+        lanes[LANE_V] = 500.0;
+        let mut spikes = Vec::new();
+        mp.advance_to(&mut lanes, 10.0, &mut |ts| spikes.push(ts));
+        assert!(!spikes.is_empty(), "super-threshold start must cross the peak");
+        assert!(lanes[LANE_V].is_finite() && lanes[LANE_AUX].is_finite());
+    }
+
+    #[test]
+    fn adaptation_slows_izhikevich_firing() {
+        // d > 0 accumulates u across spikes: inter-spike intervals grow
+        let mp = ModelParams::new(&izh_np());
+        let mut lanes = [0.0f64; MAX_LANES];
+        mp.resting(&mut lanes);
+        let mut spikes = Vec::new();
+        mp.advance_to(&mut lanes, 2000.0, &mut |ts| spikes.push(ts));
+        assert!(spikes.len() >= 4, "need several ISIs: {}", spikes.len());
+        let first = spikes[1] - spikes[0];
+        let last = spikes[spikes.len() - 1] - spikes[spikes.len() - 2];
+        assert!(
+            last >= first,
+            "u accumulation must not shorten ISIs: first {first} last {last}"
+        );
+    }
+
+    #[test]
+    fn sample_param_bounds_determinism_and_degenerate_widths() {
+        let lor = crate::config::ParamDist { kind: DistKind::Lorentzian, width: 1.5 };
+        for gid in 0..2000u64 {
+            let mut rng = Pcg64::for_entity(7, gid, crate::geometry::grid::stream::PARAM_DIST);
+            let x = sample_param(&mut rng, &lor, -50.0, -60.0, -40.0);
+            assert!(x > -60.0 && x < -40.0, "truncation window violated: {x}");
+            let mut rng2 =
+                Pcg64::for_entity(7, gid, crate::geometry::grid::stream::PARAM_DIST);
+            let y = sample_param(&mut rng2, &lor, -50.0, -60.0, -40.0);
+            assert_eq!(x.to_bits(), y.to_bits(), "pure function of (seed, gid)");
+        }
+        // inactive and width-0 distributions return the mean untouched
+        let mut rng = Pcg64::for_entity(7, 1, crate::geometry::grid::stream::PARAM_DIST);
+        assert_eq!(sample_param(&mut rng, &crate::config::ParamDist::NONE, 20.0, 0.0, 40.0), 20.0);
+        let flat = crate::config::ParamDist { kind: DistKind::Gaussian, width: 0.0 };
+        assert_eq!(sample_param(&mut rng, &flat, 20.0, 0.0, 40.0), 20.0);
+    }
+
+    #[test]
+    fn resting_states_match_the_kind() {
+        for (np, v0) in [
+            (lif_np(), -65.0),
+            (izh_np(), -60.0),
+            (adex_np(), -65.0),
+        ] {
+            let mp = ModelParams::new(&np);
+            let mut lanes = [f64::NAN; MAX_LANES];
+            lanes[LANE_REFR] = f64::NEG_INFINITY;
+            mp.resting(&mut lanes);
+            assert_eq!(lanes[LANE_V], v0, "{:?}", np.model);
+            assert_eq!(lanes[LANE_AUX], 0.0);
+            assert_eq!(lanes[LANE_LAST_T], 0.0);
+            assert_eq!(mp.refr_until(&lanes), f64::NEG_INFINITY);
+        }
+    }
+}

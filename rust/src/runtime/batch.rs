@@ -81,6 +81,9 @@ impl BatchSolver {
     /// every parameter set to share E/θ/Vr/τarp under the XLA solver;
     /// the check is repeated here to guard direct engine-level
     /// construction with an unvalidated config.
+    // the artifact computes at f32: narrowing the f64 integration
+    // constants is the solver's working precision, not an accident
+    #[allow(clippy::cast_possible_truncation)]
     pub fn from_soa(
         cfg: &SimConfig,
         soa: &crate::engine::NeuronStateSoA,
@@ -93,9 +96,31 @@ impl BatchSolver {
                  split ranks or add a larger batch size in aot.py"
             ));
         }
-        let table = soa.param_table();
+        // the artifact compiles the LIF closed form only: reject any
+        // other registered model, and per-neuron sampled parameters
+        // (which replace the shared table with per-neuron constants the
+        // artifact does not take). `SimConfig::validate` names both
+        // rejections earlier for loaded configs.
+        let mut table = Vec::with_capacity(soa.param_table().len());
+        for m in soa.param_table() {
+            match m.as_lif() {
+                Some(p) => table.push(*p),
+                None => {
+                    return Err(format!(
+                        "batched solver only compiles the LIF model; the rank's \
+                         parameter table registers `{}` — use `--solver event`",
+                        m.kind().name()
+                    ));
+                }
+            }
+        }
+        if soa.has_hetero() {
+            return Err("batched solver has no per-neuron sampled parameters; \
+                 remove the v_theta/tau_m distributions or use `--solver event`"
+                .to_string());
+        }
         let exc = LifParams::new(&cfg.exc);
-        for p in table {
+        for p in &table {
             if !((p.e_rest - exc.e_rest).abs() < 1e-9
                 && (p.v_theta - exc.v_theta).abs() < 1e-9
                 && (p.v_reset - exc.v_reset).abs() < 1e-9
@@ -146,6 +171,9 @@ impl BatchSolver {
         })
     }
 
+    // f64→f32 narrowing is the solver's working precision; the local
+    // index fits u32 because n ≤ batch, an artifact-compiled u32 size
+    #[allow(clippy::cast_possible_truncation)]
     pub fn with_populations(
         cfg: &SimConfig,
         n_local: u32,
@@ -225,6 +253,9 @@ impl BatchSolver {
     }
 
     /// Execute one dt step; returns the locals that spiked.
+    // dt narrows to the artifact's f32 input; spiking locals are
+    // indices below n_local ≤ batch, which fits u32
+    #[allow(clippy::cast_possible_truncation)]
     pub fn execute(&mut self, dt_ms: f64) -> Result<&[u32], String> {
         let inputs = vec![
             xla::Literal::vec1(&self.v),

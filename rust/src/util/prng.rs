@@ -91,6 +91,9 @@ impl Pcg64 {
     }
 
     #[inline]
+    // the PCG output function slices the 128-bit state into word halves
+    // and a 6-bit rotation; the truncating casts ARE the algorithm
+    #[allow(clippy::cast_possible_truncation)]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
         let rot = (self.state >> 122) as u32;
@@ -99,6 +102,8 @@ impl Pcg64 {
     }
 
     #[inline]
+    // deliberate: keep the 32 high (best-mixed) bits
+    #[allow(clippy::cast_possible_truncation)]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
     }
@@ -118,6 +123,9 @@ impl Pcg64 {
 
     /// Uniform integer in [0, bound) without modulo bias (Lemire's method).
     #[inline]
+    // Lemire's reduction works on the (low, high) halves of the 128-bit
+    // product; the truncating casts select those halves
+    #[allow(clippy::cast_possible_truncation)]
     pub fn next_below(&mut self, bound: u64) -> u64 {
         debug_assert!(bound > 0);
         let mut x = self.next_u64();
@@ -159,6 +167,15 @@ impl Pcg64 {
         mean + sd * self.normal()
     }
 
+    /// Lorentzian (Cauchy) with location `loc` and half-width `gamma`,
+    /// via inversion: `loc + γ·tan(π·(u − ½))`. Heavy-tailed — callers
+    /// sampling physical parameters should truncate by rejection.
+    #[inline]
+    pub fn lorentzian(&mut self, loc: f64, gamma: f64) -> f64 {
+        let u = self.next_f64();
+        loc + gamma * (std::f64::consts::PI * (u - 0.5)).tan()
+    }
+
     /// Exponential with the given mean (inversion method).
     #[inline]
     pub fn exponential(&mut self, mean: f64) -> f64 {
@@ -172,6 +189,9 @@ impl Pcg64 {
     /// approximation with continuity correction above 30 (adequate for
     /// stimulus event counts; exactness is not required there and the
     /// approximation error is well below the Poisson noise itself).
+    // the normal-approximation branch clamps x to be non-negative, and
+    // event counts sit far below 2^53: the float→count cast is exact
+    #[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
     pub fn poisson(&mut self, lambda: f64) -> u64 {
         if lambda <= 0.0 {
             return 0;
@@ -203,6 +223,9 @@ impl Pcg64 {
     /// approximation otherwise. Used by the distributed synapse builder
     /// to draw the number of connections a source population projects
     /// into one target column (n up to ~1000).
+    // the normal-approximation branch clamps x into [0, n] before the
+    // float→count cast
+    #[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
     pub fn binomial(&mut self, n: u64, p: f64) -> u64 {
         if p <= 0.0 || n == 0 {
             return 0;
@@ -237,6 +260,9 @@ impl Pcg64 {
     /// Used for drawing distinct target neurons inside a column. O(k)
     /// memory via partial shuffle on a scratch vec when k is a large
     /// fraction of n, rejection sampling otherwise.
+    // callers sample in-column indices (n fits u32, checked by config
+    // validation); draws below n therefore fit the u32 result vector
+    #[allow(clippy::cast_possible_truncation)]
     pub fn sample_distinct(&mut self, n: u64, k: u64) -> Vec<u32> {
         debug_assert!(k <= n, "cannot sample {k} distinct out of {n}");
         if k * 3 > n {
@@ -364,6 +390,22 @@ mod tests {
         }
         let mean = s / n as f64;
         assert!((mean - mean_in).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn lorentzian_median_and_quartiles() {
+        // The Cauchy mean diverges; check the order statistics instead:
+        // median = loc, quartiles = loc ± gamma.
+        let mut g = Pcg64::new(21, 0);
+        let n = 50_000;
+        let mut v: Vec<f64> = (0..n).map(|_| g.lorentzian(-40.0, 1.5)).collect();
+        v.sort_unstable_by(f64::total_cmp);
+        let med = v[n / 2];
+        let q1 = v[n / 4];
+        let q3 = v[3 * n / 4];
+        assert!((med - -40.0).abs() < 0.05, "median={med}");
+        assert!((q1 - -41.5).abs() < 0.1, "q1={q1}");
+        assert!((q3 - -38.5).abs() < 0.1, "q3={q3}");
     }
 
     #[test]

@@ -85,6 +85,9 @@ impl Running {
 }
 
 /// Percentile of a sorted slice (linear interpolation, p in [0,100]).
+// `rank` is clamped into [0, len-1] by construction, so flooring it
+// into an index can neither truncate nor go negative
+#[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return f64::NAN;

@@ -36,6 +36,8 @@ mod libc {
 }
 
 /// Nanoseconds of CPU time consumed by the *calling thread* so far.
+// CPU-time clocks count up from zero: tv_sec/tv_nsec are non-negative
+#[allow(clippy::cast_sign_loss)]
 pub fn thread_cputime_ns() -> u64 {
     let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
     // SAFETY: clock_gettime with a valid clock id and out-pointer.
@@ -45,6 +47,8 @@ pub fn thread_cputime_ns() -> u64 {
 }
 
 /// Nanoseconds of CPU time consumed by the whole process so far.
+// CPU-time clocks count up from zero: tv_sec/tv_nsec are non-negative
+#[allow(clippy::cast_sign_loss)]
 pub fn process_cputime_ns() -> u64 {
     let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
     // SAFETY: as above.
@@ -116,6 +120,8 @@ impl WallStopwatch {
     }
 
     #[inline]
+    // an in-process elapsed interval is centuries short of u64 ns
+    #[allow(clippy::cast_possible_truncation)]
     pub fn stop(&mut self) {
         if let Some(t0) = self.started_at.take() {
             self.accum_ns += t0.elapsed().as_nanos() as u64;
